@@ -1,0 +1,43 @@
+//! Theory walkthrough (paper §3.1): reproduce Figure 2 and probe Theorem 1
+//! interactively — no artifacts needed, pure rust-native simulation.
+//!
+//! ```bash
+//! cargo run --release --offline --example lsq_theory [-- steps]
+//! ```
+
+use bf16_train::qsim::lsq::{self, LsqConfig, LsqData, Placement};
+
+fn main() {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000);
+    let cfg = LsqConfig { steps, ..LsqConfig::default() };
+    let data = LsqData::generate(&cfg);
+    println!(
+        "10-dim least squares, w* ~ U[0,100), lr {}, batch 1, bf16 — {} steps",
+        cfg.lr, cfg.steps
+    );
+    println!(
+        "Theorem 1 halting radius: {:.4e}\n",
+        lsq::halting_radius(&cfg, &data)
+    );
+    println!(
+        "{:<22} {:>12} {:>14} {:>10}",
+        "rounding placement", "final loss", "final ||w-w*||", "halted %"
+    );
+    for p in Placement::ALL {
+        let run = lsq::run(&cfg, &data, p);
+        println!(
+            "{:<22} {:>12.4e} {:>14.4e} {:>9.1}%",
+            p.name(),
+            run.losses.last().copied().unwrap_or(f32::NAN),
+            run.final_dist,
+            run.halt_frac * 100.0
+        );
+    }
+    println!(
+        "\nReading: 'weight-update' halts orders of magnitude above 'exact';\n\
+         'fwd-bwd' barely matters; SR and Kahan rescue convergence (paper Fig. 2)."
+    );
+}

@@ -1,0 +1,247 @@
+"""AOT compiler: lower every (application × precision-mode) step to HLO text.
+
+Emits, per artifact:    artifacts/<name>.train.hlo.txt
+                        artifacts/<name>.eval.hlo.txt
+                        artifacts/<name>.init.hlo.txt
+plus a single           artifacts/manifest.json
+and shared test vectors artifacts/golden_formats.json  (rust↔python parity).
+
+HLO **text** is the interchange format — the image's xla_extension 0.5.1
+rejects jax>=0.5 serialized HloModuleProtos (64-bit instruction ids); the
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts \
+            [--filter REGEX] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import artifacts_spec as spec
+from . import formats, models, optim
+from .train_step import StepBuilder
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _entry_param_count(hlo_text: str) -> int:
+    """Number of parameters of the ENTRY computation in HLO text."""
+    entry = hlo_text[hlo_text.index("ENTRY ") :]
+    return entry.count(" parameter(")
+
+
+def lower_app(app: spec.App, mode_name: str, fmt_name: str, use_pallas: bool):
+    """Build (train_hlo, eval_hlo, init_hlo, manifest_entry) for one variant."""
+    mode = optim.make_mode(mode_name, fmt_name)
+    model = models.get(app.family, app.hparams)
+    builder = StepBuilder(model, mode, app.optimizer, app.opt_cfg, use_pallas)
+
+    train_hlo = to_hlo_text(
+        jax.jit(builder.train_fn()).lower(*builder.example_args())
+    )
+    eval_hlo = to_hlo_text(
+        jax.jit(builder.eval_fn()).lower(*builder.eval_example_args())
+    )
+    init_hlo = to_hlo_text(
+        jax.jit(builder.init_fn()).lower(jax.ShapeDtypeStruct((), jnp.int32))
+    )
+    ins, outs, eval_ins = builder.signature()
+    # Guard: jax prunes unused arguments during lowering; the manifest and
+    # the executable signature must agree or the rust runtime mis-binds.
+    got_train = _entry_param_count(train_hlo)
+    assert got_train == len(ins), (
+        f"{app.name} {mode_name}-{fmt_name}: train HLO has {got_train} "
+        f"params, manifest expects {len(ins)} — an input was pruned"
+    )
+    got_eval = _entry_param_count(eval_hlo)
+    assert got_eval == len(eval_ins), (
+        f"{app.name}: eval HLO has {got_eval} params, expected {len(eval_ins)}"
+    )
+    xs, _ = model.x_spec
+    entry = {
+        "app": app.name,
+        "mode": mode_name,
+        "fmt": fmt_name,
+        "family": app.family,
+        "optimizer": app.optimizer,
+        "metric_name": model.metric_name,
+        "paper_ref": app.paper_ref,
+        "batch": int(xs[0]),
+        "hparams": {
+            k: v for k, v in app.hparams.items() if isinstance(v, (int, str))
+        },
+        "train_inputs": ins,
+        "train_outputs": outs,
+        "eval_inputs": eval_ins,
+        "eval_outputs": [
+            {"role": "loss", "key": "", "shape": [], "dtype": "f32"},
+            {"role": "metric", "key": "", "shape": [], "dtype": "f32"},
+            {
+                "role": "preds",
+                "key": "",
+                "shape": [int(xs[0])],
+                "dtype": "f32",
+            },
+        ],
+        "num_params": len(builder.param_keys),
+        "num_opt_state": len(builder.state_keys),
+        "param_elements": int(
+            sum(
+                int(np.prod(s)) if s else 1
+                for s in builder.param_shapes.values()
+            )
+        ),
+    }
+    return train_hlo, eval_hlo, init_hlo, entry
+
+
+def golden_vectors() -> dict:
+    """Shared rounding test vectors for bit-exact rust↔python parity."""
+    rng = np.random.RandomState(0)
+    xs = np.concatenate(
+        [
+            (rng.randn(64) * 10.0 ** rng.randint(-20, 20, 64)).astype(
+                np.float32
+            ),
+            np.array(
+                [0.0, -0.0, 1.0, -1.0, 0.1, 1e-30, 1e30, 65504.0, 3.14159],
+                dtype=np.float32,
+            ),
+        ]
+    )
+    rbits = rng.randint(0, 2**32, size=xs.shape, dtype=np.uint64).astype(
+        np.uint32
+    )
+    out = {"inputs_bits": [int(b) for b in xs.view(np.uint32)], "formats": {}}
+    for name, fmt in formats.FORMATS.items():
+        if fmt.is_fp32:
+            continue
+        nearest = np.asarray(formats.round_nearest(jnp.asarray(xs), fmt))
+        stoch = np.asarray(
+            formats.round_stochastic(jnp.asarray(xs), fmt, jnp.asarray(rbits))
+        )
+        out["formats"][name] = {
+            "rbits": [int(b) for b in rbits],
+            "nearest_bits": [int(b) for b in nearest.view(np.uint32)],
+            "stochastic_bits": [int(b) for b in stoch.view(np.uint32)],
+        }
+    return out
+
+
+def _hash_inputs() -> str:
+    """Hash of the compile-path sources; changes force a rebuild."""
+    h = hashlib.sha256()
+    root = pathlib.Path(__file__).parent
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--filter",
+        default="",
+        help="regex on artifact names; default = spec.DEFAULT_APPS set",
+    )
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--pallas",
+        action="store_true",
+        help="route matmuls through the Pallas L1 kernel (slower lowering)",
+    )
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    wanted = []
+    for app_name in spec.APPS:
+        if not args.filter and app_name not in spec.DEFAULT_APPS:
+            continue
+        for mode_name, fmt_name in spec.variants(app_name):
+            name = spec.artifact_name(app_name, mode_name, fmt_name)
+            if args.filter and not re.search(args.filter, name):
+                continue
+            wanted.append((name, app_name, mode_name, fmt_name))
+
+    stamp = _hash_inputs() + ("+pallas" if args.pallas else "")
+    stamp_file = out / "inputs.hash"
+    manifest_file = out / "manifest.json"
+    if (
+        not args.force
+        and stamp_file.exists()
+        and stamp_file.read_text() == stamp
+        and manifest_file.exists()
+    ):
+        have = {
+            e["name"]
+            for e in json.loads(manifest_file.read_text())["artifacts"]
+        }
+        if {n for n, *_ in wanted} <= have:
+            print(f"artifacts up to date ({len(have)} entries)")
+            return
+
+    # merge with any existing manifest so filtered rebuilds don't clobber
+    # previously-built entries (their HLO files are still on disk).
+    existing = []
+    if manifest_file.exists():
+        try:
+            old = json.loads(manifest_file.read_text())["artifacts"]
+            rebuilt = {n for n, *_ in wanted}
+            existing = [
+                e
+                for e in old
+                if e["name"] not in rebuilt
+                and (out / e["files"]["train"]).exists()
+            ]
+        except (KeyError, ValueError):
+            existing = []
+    manifest = {"artifacts": existing, "stamp": stamp}
+    for i, (name, app_name, mode_name, fmt_name) in enumerate(wanted):
+        print(
+            f"[{i + 1}/{len(wanted)}] lowering {name}",
+            file=sys.stderr,
+            flush=True,
+        )
+        train_hlo, eval_hlo, init_hlo, entry = lower_app(
+            spec.APPS[app_name], mode_name, fmt_name, args.pallas
+        )
+        (out / f"{name}.train.hlo.txt").write_text(train_hlo)
+        (out / f"{name}.eval.hlo.txt").write_text(eval_hlo)
+        (out / f"{name}.init.hlo.txt").write_text(init_hlo)
+        entry["name"] = name
+        entry["files"] = {
+            "train": f"{name}.train.hlo.txt",
+            "eval": f"{name}.eval.hlo.txt",
+            "init": f"{name}.init.hlo.txt",
+        }
+        manifest["artifacts"].append(entry)
+
+    (out / "golden_formats.json").write_text(json.dumps(golden_vectors()))
+    manifest_file.write_text(json.dumps(manifest, indent=1))
+    stamp_file.write_text(stamp)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,243 @@
+"""Application registry: the paper's seven workloads (scaled) + theory model.
+
+Each application pins a model family, its hyperparameters, the optimizer and
+its config — mirroring Appendix C.1 of the paper, scaled so that the full
+pipeline runs on a CPU PJRT backend (the paper itself ran a *simulator* on
+V100s; our substitution table is DESIGN.md §4).
+
+``modes_for(app)`` lists the precision modes lowered for that app.  The
+sub-16-bit and fp16 format sweeps (Figures 10 & 12) are attached to the
+DLRM-Kaggle application, exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from . import optim
+
+
+@dataclasses.dataclass(frozen=True)
+class App:
+    name: str
+    family: str
+    hparams: dict
+    optimizer: str
+    opt_cfg: object
+    paper_ref: str
+
+
+def _sgd(momentum=0.9, wd=0.0):
+    return optim.SgdConfig(momentum=momentum, weight_decay=wd)
+
+
+def _adamw(b1=0.9, b2=0.999, wd=0.01):
+    return optim.AdamWConfig(beta1=b1, beta2=b2, weight_decay=wd)
+
+
+APPS: Dict[str, App] = {}
+
+
+def _app(name, family, hparams, optimizer, opt_cfg, paper_ref):
+    APPS[name] = App(name, family, hparams, optimizer, opt_cfg, paper_ref)
+
+
+# -- Theory validation (Section 3.1, Figure 2) ------------------------------
+_app(
+    "lsq",
+    "mlp",
+    {"task": "regression", "in_dim": 10, "hidden": [], "batch": 1},
+    "sgd",
+    _sgd(momentum=0.0, wd=0.0),
+    "Fig 2 / Thm 1: 10-dim least squares, batch 1, lr 0.01",
+)
+
+# -- ResNet-18 / CIFAR10  →  cnn-small on synthetic 3x32x32 ------------------
+_app(
+    "cifar-cnn",
+    "cnn",
+    {
+        "channels": [16, 32, 64],
+        "num_classes": 10,
+        "batch": 32,
+        "image": 32,
+        "blocks": 1,
+    },
+    "sgd",
+    _sgd(momentum=0.9, wd=5e-4),
+    "Table 3/4 row ResNet-18/CIFAR10",
+)
+
+# -- ResNet-50 / ImageNet  →  cnn-large -------------------------------------
+_app(
+    "imagenet-cnn",
+    "cnn",
+    {
+        "channels": [32, 64, 128],
+        "num_classes": 100,
+        "batch": 32,
+        "image": 32,
+        "blocks": 2,
+    },
+    "sgd",
+    _sgd(momentum=0.9, wd=1e-4),
+    "Table 4 row ResNet-50/ImageNet",
+)
+
+# -- DLRM / Criteo Kaggle ----------------------------------------------------
+_app(
+    "dlrm-small",
+    "dlrm",
+    {
+        "num_tables": 8,
+        "table_size": 1000,
+        "embed_dim": 16,
+        "dense_dim": 13,
+        "bottom_mlp": [64, 16],
+        "top_mlp": [64, 32],
+        "batch": 128,
+    },
+    "sgd",
+    _sgd(momentum=0.0, wd=0.0),
+    "Table 3/4 row DLRM/Kaggle; Figs 5, 9, 10, 11, 12",
+)
+
+# -- DLRM / Criteo Terabyte ---------------------------------------------------
+_app(
+    "dlrm-large",
+    "dlrm",
+    {
+        "num_tables": 16,
+        "table_size": 4000,
+        "embed_dim": 32,
+        "dense_dim": 13,
+        "bottom_mlp": [128, 64, 32],
+        "top_mlp": [128, 64],
+        "batch": 256,
+    },
+    "sgd",
+    _sgd(momentum=0.0, wd=0.0),
+    "Table 4 row DLRM/Terabyte",
+)
+
+# -- BERT-Base / MNLI  →  tiny encoder classifier -----------------------------
+_app(
+    "bert-cls",
+    "transformer",
+    {
+        "task": "classification",
+        "vocab": 512,
+        "dim": 64,
+        "heads": 4,
+        "layers": 2,
+        "seq": 32,
+        "num_classes": 3,
+        "batch": 32,
+    },
+    "adamw",
+    _adamw(b1=0.9, b2=0.999, wd=0.01),
+    "Fig 1 / Table 3/4 row BERT/MNLI",
+)
+
+# -- BERT / Wiki103  →  tiny causal LM ----------------------------------------
+_app(
+    "bert-lm",
+    "transformer",
+    {
+        "task": "lm",
+        "vocab": 512,
+        "dim": 64,
+        "heads": 4,
+        "layers": 2,
+        "seq": 64,
+        "batch": 16,
+    },
+    "adamw",
+    _adamw(b1=0.9, b2=0.98, wd=0.01),
+    "Table 4 row BERT/Wiki103 (PPL)",
+)
+
+# -- DeepSpeech2 / LibriSpeech  →  BiLSTM tagger ------------------------------
+_app(
+    "lstm-seq",
+    "lstm",
+    {
+        "in_dim": 32,
+        "hidden": 64,
+        "num_classes": 16,
+        "seq": 32,
+        "batch": 16,
+        "bidirectional": True,
+    },
+    "sgd",
+    _sgd(momentum=0.9, wd=1e-5),
+    "Table 4 row DeepSpeech2/LibriSpeech (WER proxy = 1-token-acc)",
+)
+
+# -- End-to-end example: transformer LM, size configurable -------------------
+for size, (dim, layers, heads, seq, vocab, batch) in {
+    "tiny": (128, 4, 4, 64, 1024, 16),
+    "small": (256, 6, 8, 128, 2048, 8),
+    "100m": (768, 12, 12, 128, 32768, 8),
+}.items():
+    _app(
+        f"gpt-{size}",
+        "transformer",
+        {
+            "task": "lm",
+            "vocab": vocab,
+            "dim": dim,
+            "heads": heads,
+            "layers": layers,
+            "seq": seq,
+            "batch": batch,
+        },
+        "adamw",
+        _adamw(b1=0.9, b2=0.98, wd=0.01),
+        "End-to-end driver (examples/train_transformer.rs)",
+    )
+
+
+BASE_MODES = ["fp32", "standard16", "mixed16", "sr16", "kahan16"]
+EXTRA_MODES = {
+    # Figure 11 (combined) lowered where the paper shows it.
+    "dlrm-small": ["srkahan16"],
+    "cifar-cnn": ["srkahan16"],
+    "bert-cls": ["srkahan16"],
+}
+# Figure 10 & 12 format sweeps, attached to DLRM-Kaggle.
+FMT_SWEEP_APP = "dlrm-small"
+FMT_SWEEP = [
+    ("fp16", ["standard16", "sr16", "kahan16"]),
+    ("e8m5", ["standard16", "sr16", "kahan16"]),
+    ("e8m3", ["standard16", "sr16", "kahan16"]),
+    ("e8m1", ["standard16", "sr16", "kahan16"]),
+]
+
+# Default artifact set (the big gpt sizes are opt-in via --filter).
+DEFAULT_APPS = [
+    "lsq",
+    "cifar-cnn",
+    "imagenet-cnn",
+    "dlrm-small",
+    "dlrm-large",
+    "bert-cls",
+    "bert-lm",
+    "lstm-seq",
+    "gpt-tiny",
+]
+
+
+def variants(app_name: str) -> List[Tuple[str, str]]:
+    """All (mode, fmt) pairs lowered for an app."""
+    out = [(m, "bf16") for m in BASE_MODES]
+    out += [(m, "bf16") for m in EXTRA_MODES.get(app_name, [])]
+    if app_name == FMT_SWEEP_APP:
+        for fmt, modes in FMT_SWEEP:
+            out += [(m, fmt) for m in modes]
+    return out
+
+
+def artifact_name(app: str, mode: str, fmt: str) -> str:
+    return f"{app}__{mode}" if fmt == "bf16" else f"{app}__{mode}-{fmt}"

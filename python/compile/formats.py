@@ -1,0 +1,222 @@
+"""Numeric-format emulation library (L2).
+
+This module implements the paper's FMAC-output rounding semantics as pure
+jnp bit manipulation on float32 storage:
+
+  * every emulated format is a *value subset of float32* — a sign bit, the
+    full 8-bit f32 exponent range clamped to the format's exponent range,
+    and ``mant_bits`` of the f32 mantissa.  Keeping storage in f32 lets the
+    AOT-lowered HLO be executed by any PJRT backend and keeps the rust side
+    format-agnostic.
+  * ``round_nearest``   — round-to-nearest-even on the mantissa boundary
+    (the standard FMAC output mode, Section 2 of the paper).
+  * ``round_stochastic``— the hardware algorithm from Appendix B.1: add
+    uniform random bits to the dropped mantissa positions, then truncate.
+  * formats with fewer exponent bits than f32 (fp16 = e5m10) additionally
+    model overflow→±inf and underflow→0 (flush-to-zero).  The paper's
+    Figure 12 degradation for Float16 is driven exactly by this reduced
+    dynamic range.
+
+The rust crate mirrors these bit-level semantics in ``rust/src/precision``;
+``aot.py`` emits shared golden vectors so the two implementations are tested
+for bit-exact parity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Format:
+    """A binary floating-point format emulated inside float32 storage."""
+
+    name: str
+    exp_bits: int
+    mant_bits: int
+
+    @property
+    def is_fp32(self) -> bool:
+        return self.exp_bits == 8 and self.mant_bits == 23
+
+    @property
+    def drop_bits(self) -> int:
+        """Number of f32 mantissa bits dropped by this format."""
+        return 23 - self.mant_bits
+
+    @property
+    def max_exp(self) -> int:
+        """Maximum unbiased exponent of a finite value."""
+        return 2 ** (self.exp_bits - 1) - 1
+
+    @property
+    def min_exp(self) -> int:
+        """Minimum unbiased exponent of a *normal* value."""
+        return -(2 ** (self.exp_bits - 1) - 2)
+
+    @property
+    def machine_eps(self) -> float:
+        """Machine epsilon (distance from 1.0 to the next value) / 2.
+
+        Matches the paper's epsilon convention: |Q(u) - u| <= eps * |u|.
+        """
+        return 2.0 ** (-self.mant_bits - 1)
+
+    @property
+    def max_value(self) -> float:
+        return float((2.0 - 2.0 ** (-self.mant_bits)) * 2.0**self.max_exp)
+
+    @property
+    def min_normal(self) -> float:
+        return float(2.0**self.min_exp)
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.exp_bits + self.mant_bits
+
+
+FP32 = Format("fp32", 8, 23)
+BF16 = Format("bf16", 8, 7)
+FP16 = Format("fp16", 5, 10)
+# Sub-16-bit formats from Figure 10: BFloat-style 8 exponent bits, reduced
+# mantissa.  e8m5 = "14-bit", e8m3 = "12-bit", e8m1 = "10-bit".
+E8M5 = Format("e8m5", 8, 5)
+E8M3 = Format("e8m3", 8, 3)
+E8M1 = Format("e8m1", 8, 1)
+
+FORMATS = {f.name: f for f in (FP32, BF16, FP16, E8M5, E8M3, E8M1)}
+
+
+def _bitcast_u32(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+
+
+def _bitcast_f32(u: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(u.astype(jnp.uint32), jnp.float32)
+
+
+def _clamp_range(y: jnp.ndarray, x: jnp.ndarray, fmt: Format) -> jnp.ndarray:
+    """Apply the format's dynamic range to rounded values ``y``.
+
+    ``x`` is the pre-rounding input (used to preserve NaN/inf signs).
+    Overflow rounds to ±inf (IEEE round-to-nearest overflow rule);
+    magnitudes below the smallest normal flush to zero (FTZ — documented
+    substitution for subnormal support; see DESIGN.md §4).
+    """
+    if fmt.exp_bits >= 8:
+        return y
+    absy = jnp.abs(y)
+    inf = jnp.asarray(jnp.inf, jnp.float32)
+    y = jnp.where(absy > fmt.max_value, jnp.copysign(inf, y), y)
+    # FTZ preserves the sign (IEEE signed zero)
+    y = jnp.where(absy < fmt.min_normal, jnp.copysign(jnp.zeros_like(y), y), y)
+    return y
+
+
+def round_nearest(x: jnp.ndarray, fmt: Format) -> jnp.ndarray:
+    """Round-to-nearest-even onto ``fmt``'s value set (f32 storage).
+
+    Bit algorithm: add ``half - 1 + lsb`` to the f32 pattern, then clear the
+    dropped mantissa bits.  The carry correctly propagates into the exponent
+    when the mantissa rolls over (e.g. 1.9999 -> 2.0).  NaN/inf pass through.
+    """
+    x = x.astype(jnp.float32)
+    if fmt.is_fp32:
+        return x
+    if fmt.exp_bits == 8 and fmt.mant_bits == 7:
+        # bf16: XLA's native convert IS round-to-nearest-even and is
+        # bit-identical to the integer algorithm below (verified over 100k
+        # random + special values).  Using the native op keeps the lowered
+        # graphs small — the bitcast chains blow up XLA CPU compile time on
+        # transformer-scale models (EXPERIMENTS.md §Perf L2).
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    drop = fmt.drop_bits
+    u = _bitcast_u32(x)
+    half = jnp.uint32(1 << (drop - 1))
+    one = jnp.uint32(1)
+    lsb = (u >> drop) & one
+    rounded = (u + (half - one + lsb)) & jnp.uint32((0xFFFFFFFF << drop) & 0xFFFFFFFF)
+    y = _bitcast_f32(rounded)
+    y = jnp.where(jnp.isfinite(x), y, x)
+    return _clamp_range(y, x, fmt)
+
+
+def round_stochastic(
+    x: jnp.ndarray, fmt: Format, rbits: jnp.ndarray
+) -> jnp.ndarray:
+    """Stochastic rounding onto ``fmt`` using pre-drawn random bits.
+
+    ``rbits`` must be uint32 of the same shape as ``x``; only the low
+    ``drop_bits`` bits are used.  This is the shift-register hardware scheme
+    of Appendix B.1: add random bits below the kept mantissa, truncate.
+    P(round up) == fraction of the dropped tail — exactly the paper's
+    (a - a_l)/(a_u - a_l).
+    """
+    x = x.astype(jnp.float32)
+    if fmt.is_fp32:
+        return x
+    drop = fmt.drop_bits
+    u = _bitcast_u32(x)
+    noise = rbits.astype(jnp.uint32) & jnp.uint32((1 << drop) - 1)
+    rounded = (u + noise) & jnp.uint32((0xFFFFFFFF << drop) & 0xFFFFFFFF)
+    y = _bitcast_f32(rounded)
+    y = jnp.where(jnp.isfinite(x), y, x)
+    return _clamp_range(y, x, fmt)
+
+
+def quantize(
+    x: jnp.ndarray,
+    fmt: Format,
+    mode: str = "nearest",
+    rbits: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Round ``x`` onto ``fmt``'s value set with the given rounding mode."""
+    if mode == "nearest":
+        return round_nearest(x, fmt)
+    if mode == "stochastic":
+        if rbits is None:
+            raise ValueError("stochastic rounding requires rbits")
+        return round_stochastic(x, fmt, rbits)
+    raise ValueError(f"unknown rounding mode {mode!r}")
+
+
+def random_bits_like(key: jax.Array, x: jnp.ndarray) -> jnp.ndarray:
+    """Draw uint32 dithering bits shaped like ``x`` (threefry)."""
+    return jax.random.bits(key, shape=x.shape, dtype=jnp.uint32)
+
+
+def round_nearest_py(x: float, fmt: Format) -> float:
+    """Pure-python round-to-nearest-even (for *static* hyperparameters).
+
+    Bit-identical to :func:`round_nearest`; used where tracing must not
+    occur (e.g. computing the bf16-representable β₂ in optim.py).
+    """
+    import struct
+
+    if fmt.is_fp32:
+        return float(np_f32(x))
+    u = struct.unpack("<I", struct.pack("<f", np_f32(x)))[0]
+    drop = fmt.drop_bits
+    half = 1 << (drop - 1)
+    lsb = (u >> drop) & 1
+    rounded = (u + half - 1 + lsb) & ((0xFFFFFFFF << drop) & 0xFFFFFFFF)
+    y = struct.unpack("<f", struct.pack("<I", rounded & 0xFFFFFFFF))[0]
+    if fmt.exp_bits < 8:
+        if abs(y) > fmt.max_value:
+            y = float("inf") if y > 0 else float("-inf")
+        elif abs(y) < fmt.min_normal:
+            import math
+
+            y = math.copysign(0.0, y)
+    return y
+
+
+def np_f32(x: float) -> float:
+    """Round a python float to f32 precision (via struct round-trip)."""
+    import struct
+
+    return struct.unpack("<f", struct.pack("<f", x))[0]

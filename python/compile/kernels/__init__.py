@@ -1,0 +1,17 @@
+"""L1 — Pallas kernels (interpret=True).
+
+The paper's compute hot-spots written as explicit TPU-style kernels:
+
+* ``qmatmul``  — tiled matmul with a VMEM accumulator tile: 16-bit-valued
+  inputs, fp32 FMAC accumulation over K tiles, one output rounding on tile
+  writeback.  This is the hardware-adaptation of the paper's 16-bit FMAC
+  unit (DESIGN.md §3).
+* ``optim_kernels`` — fused element-wise optimizer updates (SGD/AdamW ×
+  nearest / stochastic-rounding / Kahan): the operation the paper's whole
+  contribution concentrates on.
+* ``ref`` — pure-jnp oracles; pytest asserts bit-identical results.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls; real-TPU performance is *estimated*
+from the BlockSpec VMEM footprint in DESIGN.md §Perf.
+"""

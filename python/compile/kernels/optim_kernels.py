@@ -1,0 +1,261 @@
+"""Fused optimizer-update Pallas kernels (the paper's hot-spot, L1).
+
+One grid step processes one 1-D tile of the flattened weight tensor; all
+optimizer state for the tile stays resident in VMEM for the whole fused
+chain (momentum update → update magnitude → weight-update rounding), so the
+HBM traffic is exactly one read + one write per state tensor — the schedule
+a BF16-only accelerator would use.
+
+Three weight-update flavours, matching Algorithms 2-5:
+  * nearest   — the standard (failing) mode.
+  * stochastic— ⊖ with pre-drawn dither bits (hardware scheme of App. B.1).
+  * kahan     — compensation buffer update fused in the same tile pass.
+
+Bit-exact against ``ref.py`` (asserted by pytest across shapes/formats via
+hypothesis).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import formats
+from ..formats import Format
+
+
+def _pick_tile(n: int, preferred: int = 512) -> int:
+    if n <= preferred:
+        return n
+    for t in range(preferred, 0, -1):
+        if n % t == 0:
+            return t
+    return n
+
+
+# --------------------------------------------------------------------------
+# SGD kernels.
+# --------------------------------------------------------------------------
+
+
+def _sgd_nearest_kernel(
+    w_ref, m_ref, g_ref, lr_ref, w_out, m_out, *, mu, wd, eb, mb
+):
+    fmt = Format("q", eb, mb)
+    r = lambda x: formats.round_nearest(x, fmt)  # noqa: E731
+    w, m, g, lr = w_ref[...], m_ref[...], g_ref[...], lr_ref[0]
+    if wd != 0.0:
+        g = r(g + r(wd * w))
+    m_new = r(r(mu * m) + g)
+    u = r(lr * m_new)
+    w_out[...] = r(w - u)
+    m_out[...] = m_new
+
+
+def _sgd_stochastic_kernel(
+    w_ref, m_ref, g_ref, rb_ref, lr_ref, w_out, m_out, *, mu, wd, eb, mb
+):
+    fmt = Format("q", eb, mb)
+    r = lambda x: formats.round_nearest(x, fmt)  # noqa: E731
+    w, m, g, lr = w_ref[...], m_ref[...], g_ref[...], lr_ref[0]
+    if wd != 0.0:
+        g = r(g + r(wd * w))
+    m_new = r(r(mu * m) + g)
+    u = r(lr * m_new)
+    w_out[...] = formats.round_stochastic(w - u, fmt, rb_ref[...])
+    m_out[...] = m_new
+
+
+def _sgd_kahan_kernel(
+    w_ref, m_ref, c_ref, g_ref, lr_ref, w_out, m_out, c_out, *, mu, wd, eb, mb
+):
+    fmt = Format("q", eb, mb)
+    r = lambda x: formats.round_nearest(x, fmt)  # noqa: E731
+    w, m, c, g, lr = (
+        w_ref[...],
+        m_ref[...],
+        c_ref[...],
+        g_ref[...],
+        lr_ref[0],
+    )
+    if wd != 0.0:
+        g = r(g + r(wd * w))
+    m_new = r(r(mu * m) + g)
+    u = -r(lr * m_new)
+    y = r(u - c)
+    s = r(w + y)
+    c_out[...] = r(r(s - w) - y)
+    w_out[...] = s
+    m_out[...] = m_new
+
+
+def _elemwise_call(kernel, n_in, n_out, n, args, tile=512):
+    t = _pick_tile(n, tile)
+    spec = pl.BlockSpec((t,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    in_specs = [spec] * (n_in - 1) + [scalar_spec]  # last input is lr
+    return pl.pallas_call(
+        kernel,
+        grid=(n // t,),
+        in_specs=in_specs,
+        out_specs=[spec] * n_out,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * n_out,
+        interpret=True,
+    )(*args)
+
+
+def sgd_update_pallas(w, m, g, lr, mu, wd, fmt: Format, rbits=None):
+    """Fused Algorithm-2 step (nearest or stochastic ⊖).  Flat tensors."""
+    (n,) = w.shape
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1)
+    if rbits is None:
+        kern = functools.partial(
+            _sgd_nearest_kernel,
+            mu=mu,
+            wd=wd,
+            eb=fmt.exp_bits,
+            mb=fmt.mant_bits,
+        )
+        w2, m2 = _elemwise_call(kern, 4, 2, n, (w, m, g, lr_arr))
+    else:
+        kern = functools.partial(
+            _sgd_stochastic_kernel,
+            mu=mu,
+            wd=wd,
+            eb=fmt.exp_bits,
+            mb=fmt.mant_bits,
+        )
+        w2, m2 = _elemwise_call(kern, 5, 2, n, (w, m, g, rbits, lr_arr))
+    return w2, m2
+
+
+def sgd_kahan_update_pallas(w, m, c, g, lr, mu, wd, fmt: Format):
+    """Fused Algorithm-3 step.  Returns (w', m', c')."""
+    (n,) = w.shape
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1)
+    kern = functools.partial(
+        _sgd_kahan_kernel, mu=mu, wd=wd, eb=fmt.exp_bits, mb=fmt.mant_bits
+    )
+    return _elemwise_call(kern, 5, 3, n, (w, m, c, g, lr_arr))
+
+
+# --------------------------------------------------------------------------
+# AdamW kernels.
+# --------------------------------------------------------------------------
+
+
+def _adamw_kernel(
+    w_ref,
+    m_ref,
+    v_ref,
+    g_ref,
+    scal_ref,
+    w_out,
+    m_out,
+    v_out,
+    *,
+    b1,
+    b2,
+    eps,
+    wd,
+    eb,
+    mb,
+):
+    fmt = Format("q", eb, mb)
+    r = lambda x: formats.round_nearest(x, fmt)  # noqa: E731
+    w, m, v, g = w_ref[...], m_ref[...], v_ref[...], g_ref[...]
+    lr, denom1, denom2 = scal_ref[0], scal_ref[1], scal_ref[2]
+    m_new = r(r(b1 * m) + r((1.0 - b1) * g))
+    v_new = r(r(b2 * v) + r((1.0 - b2) * r(g * g)))
+    mhat = r(m_new / denom1)
+    vhat = r(jnp.sqrt(r(v_new / denom2)))
+    t = r(mhat / r(vhat + eps))
+    u = r(r(lr * t) + r(r(lr * wd) * w))
+    w_out[...] = r(w - u)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def _adamw_sr_kernel(
+    w_ref,
+    m_ref,
+    v_ref,
+    g_ref,
+    rb_ref,
+    scal_ref,
+    w_out,
+    m_out,
+    v_out,
+    *,
+    b1,
+    b2,
+    eps,
+    wd,
+    eb,
+    mb,
+):
+    fmt = Format("q", eb, mb)
+    r = lambda x: formats.round_nearest(x, fmt)  # noqa: E731
+    w, m, v, g = w_ref[...], m_ref[...], v_ref[...], g_ref[...]
+    lr, denom1, denom2 = scal_ref[0], scal_ref[1], scal_ref[2]
+    m_new = r(r(b1 * m) + r((1.0 - b1) * g))
+    v_new = r(r(b2 * v) + r((1.0 - b2) * r(g * g)))
+    mhat = r(m_new / denom1)
+    vhat = r(jnp.sqrt(r(v_new / denom2)))
+    t = r(mhat / r(vhat + eps))
+    u = r(r(lr * t) + r(r(lr * wd) * w))
+    w_out[...] = formats.round_stochastic(w - u, fmt, rb_ref[...])
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def adamw_update_pallas(
+    w, m, v, g, lr, b1, b2, eps, wd, denom1, denom2, fmt: Format, rbits=None
+):
+    """Fused Algorithm-4 tensor ops.  Returns (w', m', v')."""
+    (n,) = w.shape
+    scal = jnp.stack(
+        [
+            jnp.asarray(lr, jnp.float32),
+            jnp.asarray(denom1, jnp.float32),
+            jnp.asarray(denom2, jnp.float32),
+        ]
+    )
+    t = _pick_tile(n)
+    spec = pl.BlockSpec((t,), lambda i: (i,))
+    scal_spec = pl.BlockSpec((3,), lambda i: (0,))
+    if rbits is None:
+        kern = functools.partial(
+            _adamw_kernel,
+            b1=b1,
+            b2=b2,
+            eps=eps,
+            wd=wd,
+            eb=fmt.exp_bits,
+            mb=fmt.mant_bits,
+        )
+        ins = (w, m, v, g, scal)
+        in_specs = [spec] * 4 + [scal_spec]
+    else:
+        kern = functools.partial(
+            _adamw_sr_kernel,
+            b1=b1,
+            b2=b2,
+            eps=eps,
+            wd=wd,
+            eb=fmt.exp_bits,
+            mb=fmt.mant_bits,
+        )
+        ins = (w, m, v, g, rbits, scal)
+        in_specs = [spec] * 5 + [scal_spec]
+    return pl.pallas_call(
+        kern,
+        grid=(n // t,),
+        in_specs=in_specs,
+        out_specs=[spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        interpret=True,
+    )(*ins)

@@ -1,0 +1,125 @@
+"""Quantised matmul Pallas kernel: the 16-bit FMAC unit as a TPU kernel.
+
+Semantics (paper §2): inputs are 16-bit values, the multiply-accumulate
+chain runs in a 32-bit accumulator, and exactly **one** nearest rounding is
+applied to the operator output.  The kernel realises this with the canonical
+TPU schedule:
+
+  grid = (M/bm, N/bn, K/bk); the (i, j) output tile lives in VMEM as an
+  fp32 accumulator across the K-tile loop (`o_ref` is revisited for each k
+  because its index_map ignores the k axis), and the rounding happens once,
+  on the final K tile — the "write back to 16-bit memory" step.
+
+Block sizes default to MXU-friendly 128 and shrink to the actual dims for
+the small models; shapes must divide the chosen blocks (aot-time shapes are
+static, so this is checked eagerly).
+
+A `jax.custom_vjp` gives the backward pass the same treatment: both
+gradient matmuls are themselves quantised FMAC ops, matching `qops.qout`'s
+rounded-cotangent rule on the jnp path bit for bit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import formats
+from ..formats import Format
+
+
+def _pick_block(dim: int, preferred: int = 128) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (MXU tile target)."""
+    if dim <= preferred:
+        return dim
+    for b in range(preferred, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, *, nk: int, exp_bits: int, mant_bits: int):
+    """One (i, j, k) grid step: accumulate a K tile into the output tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # fp32 FMAC accumulation (the wide accumulator of the 16-bit unit).
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _writeback():
+        # single rounding on operator output (nearest, RNE)
+        fmt = Format("q", exp_bits, mant_bits)
+        o_ref[...] = formats.round_nearest(o_ref[...], fmt)
+
+
+def _qmatmul_raw(a: jnp.ndarray, b: jnp.ndarray, fmt: Format) -> jnp.ndarray:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul shape mismatch {a.shape} @ {b.shape}"
+    bm, bn, bk = _pick_block(m), _pick_block(n), _pick_block(k)
+    nk = k // bk
+    kernel = functools.partial(
+        _mm_kernel, nk=nk, exp_bits=fmt.exp_bits, mant_bits=fmt.mant_bits
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _qmatmul(a, b, exp_bits: int, mant_bits: int):
+    return _qmatmul_raw(a, b, Format("q", exp_bits, mant_bits))
+
+
+def _fwd(a, b, exp_bits, mant_bits):
+    return _qmatmul(a, b, exp_bits, mant_bits), (a, b)
+
+
+def _bwd(exp_bits, mant_bits, res, g):
+    a, b = res
+    fmt = Format("q", exp_bits, mant_bits)
+    # Both backward matmuls are 16-bit FMAC ops with rounded outputs, and the
+    # incoming cotangent is rounded at this operator boundary (same rule as
+    # qops._qcast_bwd).
+    g = formats.round_nearest(g, fmt)
+    da = _qmatmul_raw(g, b.T, fmt)
+    db = _qmatmul_raw(a.T, g, fmt)
+    return da, db
+
+
+_qmatmul.defvjp(_fwd, _bwd)
+
+
+def qmatmul_pallas(a: jnp.ndarray, b: jnp.ndarray, fmt: Format) -> jnp.ndarray:
+    """Quantised 2-D matmul via the Pallas kernel (differentiable)."""
+    return _qmatmul(a, b, fmt.exp_bits, fmt.mant_bits)
+
+
+def vmem_bytes(m: int, n: int, k: int, preferred: int = 128) -> int:
+    """Estimated VMEM footprint of one grid step (perf model, DESIGN.md §8).
+
+    Three resident fp32 tiles: x (bm×bk), y (bk×bn), accumulator (bm×bn).
+    """
+    bm, bn, bk = (
+        _pick_block(m, preferred),
+        _pick_block(n, preferred),
+        _pick_block(k, preferred),
+    )
+    return 4 * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,94 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel must match its oracle **bit-exactly**: both sides use fp32
+accumulation and the same single-rounding-on-output rule, so there is no
+tolerance window — `pytest` asserts equality of bit patterns.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import formats
+from ..formats import Format
+
+
+def ref_qmatmul(a: jnp.ndarray, b: jnp.ndarray, fmt: Format) -> jnp.ndarray:
+    """fp32-accumulated matmul with one nearest rounding on the output."""
+    return formats.round_nearest(
+        jnp.matmul(a, b, preferred_element_type=jnp.float32), fmt
+    )
+
+
+def ref_qmatmul_tiled(
+    a: jnp.ndarray, b: jnp.ndarray, fmt: Format, bk: int
+) -> jnp.ndarray:
+    """Oracle matching the kernel's K-tile accumulation order exactly.
+
+    When K > the kernel's K block, partial tile products are accumulated
+    sequentially in fp32; fp32 addition is non-associative, so the oracle
+    must follow the same association to stay bit-exact.
+    """
+    k = a.shape[1]
+    acc = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+    for kk in range(0, k, bk):
+        acc = acc + jnp.matmul(
+            a[:, kk : kk + bk],
+            b[kk : kk + bk, :],
+            preferred_element_type=jnp.float32,
+        )
+    return formats.round_nearest(acc, fmt)
+
+
+def ref_sgd_update(w, m, g, lr, mu, wd, fmt: Format, rbits=None):
+    """Algorithm 2 inner ops (momentum SGD, nearest-rounded ops).
+
+    Returns (w', m').  If ``rbits`` is given the weight-update subtraction is
+    stochastically rounded (the ⊖ operator); otherwise nearest.
+    """
+    r = lambda x: formats.round_nearest(x, fmt)  # noqa: E731
+    if wd != 0.0:
+        g = r(g + r(wd * w))
+    m_new = r(r(mu * m) + g)
+    u = r(lr * m_new)
+    pre = w - u
+    if rbits is not None:
+        w_new = formats.round_stochastic(pre, fmt, rbits)
+    else:
+        w_new = r(pre)
+    return w_new, m_new
+
+
+def ref_sgd_kahan_update(w, m, c, g, lr, mu, wd, fmt: Format):
+    """Algorithm 3: Kahan-compensated SGD update.  Returns (w', m', c')."""
+    r = lambda x: formats.round_nearest(x, fmt)  # noqa: E731
+    if wd != 0.0:
+        g = r(g + r(wd * w))
+    m_new = r(r(mu * m) + g)
+    u = -r(lr * m_new)
+    y = r(u - c)
+    s = r(w + y)
+    c_new = r(r(s - w) - y)
+    return s, m_new, c_new
+
+
+def ref_adamw_update(
+    w, m, v, g, lr, b1, b2, eps, wd, denom1, denom2, fmt: Format, rbits=None
+):
+    """Algorithm 4 tensor ops (bias-correction scalars precomputed).
+
+    Returns (w', m', v').
+    """
+    r = lambda x: formats.round_nearest(x, fmt)  # noqa: E731
+    m_new = r(r(b1 * m) + r((1.0 - b1) * g))
+    v_new = r(r(b2 * v) + r((1.0 - b2) * r(g * g)))
+    mhat = r(m_new / denom1)
+    vhat = r(jnp.sqrt(r(v_new / denom2)))
+    t = r(mhat / r(vhat + eps))
+    u = r(r(lr * t) + r(r(lr * wd) * w))
+    pre = w - u
+    if rbits is not None:
+        w_new = formats.round_stochastic(pre, fmt, rbits)
+    else:
+        w_new = r(pre)
+    return w_new, m_new, v_new

@@ -1,0 +1,49 @@
+"""Model zoo (L2).
+
+Each model module exposes ``make(hparams: dict) -> Model``.  ``Model`` is a
+uniform facade consumed by ``train_step.py``/``aot.py``:
+
+  * ``init(key) -> params``                 (dict[str, f32 array])
+  * ``loss_and_metric(params, x, y, qcfg)`` -> (scalar loss, scalar metric)
+  * ``predict(params, x, qcfg)``            -> per-example outputs for eval
+  * ``x_spec`` / ``y_spec``                 (shape, dtype) of one batch
+
+Parameters are plain flat dicts so the AOT manifest can record a stable,
+sorted ordering that the rust runtime reproduces exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+Spec = Tuple[Tuple[int, ...], str]  # (shape, dtype-name)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    name: str
+    init: Callable
+    loss_and_metric: Callable  # (params, x, y, qcfg) -> (loss, metric)
+    predict: Callable  # (params, x, qcfg) -> outputs
+    x_spec: Spec
+    y_spec: Spec
+    metric_name: str = "accuracy"
+
+
+def get(family: str, hparams: dict) -> Model:
+    from . import cnn, dlrm, lstm, mlp, transformer
+
+    registry = {
+        "mlp": mlp.make,
+        "cnn": cnn.make,
+        "transformer": transformer.make,
+        "dlrm": dlrm.make,
+        "lstm": lstm.make,
+    }
+    if family not in registry:
+        raise ValueError(f"unknown model family {family!r}")
+    return registry[family](hparams)

@@ -1,0 +1,93 @@
+"""Small residual CNN family (ResNet-18/CIFAR10 and ResNet-50/ImageNet
+stand-ins; DESIGN.md §4).
+
+VGG-style stem + residual blocks with stride-2 downsampling between stages,
+global average pool, linear classifier.  Every conv/linear/add routes through
+the quantised operator set, so the 16-bit FMAC semantics cover the full
+forward and backward graphs.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .. import qops
+from . import Model
+
+
+def _conv_init(key, out_c, in_c, k):
+    scale = math.sqrt(2.0 / (in_c * k * k))
+    return jax.random.normal(key, (out_c, in_c, k, k), jnp.float32) * scale
+
+
+def make(hp: dict) -> Model:
+    channels = list(hp.get("channels", [16, 32, 64]))
+    blocks = int(hp.get("blocks", 1))  # residual blocks per stage
+    num_classes = int(hp.get("num_classes", 10))
+    batch = int(hp.get("batch", 32))
+    image = int(hp.get("image", 32))
+
+    def init(key):
+        params = {}
+        key, k = jax.random.split(key)
+        params["stem.w"] = _conv_init(k, channels[0], 3, 3)
+        in_c = channels[0]
+        for s, c in enumerate(channels):
+            for b in range(blocks):
+                key, k1, k2 = jax.random.split(key, 3)
+                params[f"s{s}b{b}.c1.w"] = _conv_init(k1, c, in_c, 3)
+                params[f"s{s}b{b}.c2.w"] = _conv_init(k2, c, c, 3)
+                if in_c != c:
+                    key, k3 = jax.random.split(key)
+                    params[f"s{s}b{b}.proj.w"] = _conv_init(k3, c, in_c, 1)
+                in_c = c
+        key, k = jax.random.split(key)
+        scale = 1.0 / math.sqrt(in_c)
+        params["head.w"] = jax.random.uniform(
+            k, (in_c, num_classes), jnp.float32, -scale, scale
+        )
+        params["head.b"] = jnp.zeros((num_classes,), jnp.float32)
+        return params
+
+    def forward(params, x, qcfg):
+        h = qops.qdata(x, qcfg)
+        h = qops.qconv2d(h, params["stem.w"], qcfg)
+        h = qops.qrelu(h, qcfg)
+        for s, c in enumerate(channels):
+            for b in range(blocks):
+                stride = 2 if (b == 0 and s > 0) else 1
+                r = h
+                h = qops.qconv2d(h, params[f"s{s}b{b}.c1.w"], qcfg, stride=stride)
+                h = qops.qrelu(h, qcfg)
+                h = qops.qconv2d(h, params[f"s{s}b{b}.c2.w"], qcfg)
+                if f"s{s}b{b}.proj.w" in params:
+                    r = qops.qconv2d(
+                        r, params[f"s{s}b{b}.proj.w"], qcfg, stride=stride
+                    )
+                elif stride != 1:
+                    r = r[:, :, ::stride, ::stride]
+                h = qops.qrelu(qops.qadd(h, r, qcfg), qcfg)
+        h = qops.qmean(h, qcfg, axis=(2, 3))  # global average pool
+        return qops.qlinear(h, params["head.w"], params["head.b"], qcfg)
+
+    def loss_and_metric(params, x, y, qcfg):
+        logits = forward(params, x, qcfg)
+        loss = qops.softmax_xent(logits, y, qcfg)
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return loss, acc
+
+    def predict(params, x, qcfg):
+        return jnp.argmax(forward(params, x, qcfg), -1)
+
+    return Model(
+        name="cnn",
+        init=init,
+        loss_and_metric=loss_and_metric,
+        predict=predict,
+        x_spec=((batch, 3, image, image), "f32"),
+        y_spec=((batch,), "i32"),
+        metric_name="accuracy",
+    )

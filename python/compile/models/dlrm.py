@@ -1,0 +1,111 @@
+"""DLRM family (Criteo Kaggle / Terabyte stand-ins; Naumov et al. 2019).
+
+Bottom MLP over dense features, embedding lookups for categorical features,
+pairwise dot-product feature interaction, top MLP, BCE loss.  Embedding
+tables dominate the weight count — which is why the paper's Figure 9 shows
+the highest update-cancellation rates here — and the x batch packs dense
+features and categorical indices side by side:
+
+    x = [dense (B, dense_dim) floats | indices (B, num_tables) as floats]
+
+Indices travel as f32 (values are exact integers < 2^24) so the batch stays
+a single tensor; the graph casts them back to i32 for the gather.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .. import qops
+from . import Model
+
+
+def _mlp_init(key, dims, prefix, params):
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, kk = jax.random.split(key)
+        scale = math.sqrt(2.0 / a)
+        params[f"{prefix}{i}.w"] = (
+            jax.random.normal(kk, (a, b), jnp.float32) * scale
+        )
+        params[f"{prefix}{i}.b"] = jnp.zeros((b,), jnp.float32)
+    return key
+
+
+def _mlp_apply(params, prefix, n, h, qcfg, final_relu=True):
+    for i in range(n):
+        h = qops.qlinear(h, params[f"{prefix}{i}.w"], params[f"{prefix}{i}.b"], qcfg)
+        if i + 1 < n or final_relu:
+            h = qops.qrelu(h, qcfg)
+    return h
+
+
+def make(hp: dict) -> Model:
+    num_tables = int(hp.get("num_tables", 8))
+    table_size = int(hp.get("table_size", 1000))
+    embed_dim = int(hp.get("embed_dim", 16))
+    dense_dim = int(hp.get("dense_dim", 13))
+    bottom = list(hp.get("bottom_mlp", [64, 16]))
+    top = list(hp.get("top_mlp", [64, 32]))
+    batch = int(hp.get("batch", 128))
+    assert bottom[-1] == embed_dim, "bottom MLP must end at embed_dim"
+
+    bot_dims = [dense_dim] + bottom
+    n_feat = num_tables + 1  # embeddings + bottom-MLP output
+    n_pairs = n_feat * (n_feat - 1) // 2
+    top_dims = [n_pairs + embed_dim] + top + [1]
+
+    def init(key):
+        params = {}
+        for t in range(num_tables):
+            key, kk = jax.random.split(key)
+            params[f"emb{t}"] = jax.random.uniform(
+                kk,
+                (table_size, embed_dim),
+                jnp.float32,
+                -1.0 / math.sqrt(table_size),
+                1.0 / math.sqrt(table_size),
+            )
+        key = _mlp_init(key, bot_dims, "bot", params)
+        _mlp_init(key, top_dims, "top", params)
+        return params
+
+    def forward(params, x, qcfg):
+        dense = qops.qdata(x[:, :dense_dim], qcfg)
+        idx = x[:, dense_dim:].astype(jnp.int32)  # exact small ints
+        z = _mlp_apply(params, "bot", len(bot_dims) - 1, dense, qcfg)
+        feats = [z]
+        for t in range(num_tables):
+            feats.append(qops.qembed(params[f"emb{t}"], idx[:, t], qcfg))
+        f = jnp.stack(feats, axis=1)  # (B, n_feat, embed_dim)
+        # pairwise dot-product interaction (one FMAC op, rounded output)
+        inter = qops.qout(jnp.einsum("bne,bme->bnm", f, f), qcfg)
+        iu, ju = jnp.triu_indices(n_feat, k=1)
+        pairs = inter[:, iu, ju]  # (B, n_pairs)
+        h = jnp.concatenate([z, pairs], axis=1)
+        logit = _mlp_apply(
+            params, "top", len(top_dims) - 1, h, qcfg, final_relu=False
+        )
+        return logit[:, 0]
+
+    def loss_and_metric(params, x, y, qcfg):
+        logit = forward(params, x, qcfg)
+        loss = qops.bce_with_logits(logit, y, qcfg)
+        acc = jnp.mean(((logit > 0.0) == (y > 0.5)).astype(jnp.float32))
+        return loss, acc
+
+    def predict(params, x, qcfg):
+        # probabilities, so the rust side can compute AUC (paper's metric)
+        return jax.nn.sigmoid(forward(params, x, qcfg))
+
+    return Model(
+        name="dlrm",
+        init=init,
+        loss_and_metric=loss_and_metric,
+        predict=predict,
+        x_spec=((batch, dense_dim + num_tables), "f32"),
+        y_spec=((batch,), "f32"),
+        metric_name="auc",
+    )

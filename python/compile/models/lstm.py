@@ -1,0 +1,108 @@
+"""(Bi)LSTM sequence tagger (DeepSpeech2/LibriSpeech stand-in).
+
+A feature-frame encoder + (bi)directional LSTM + per-frame classifier.  The
+paper's WER metric is proxied by per-frame token error rate (1 - accuracy);
+the recurrence is the interesting part numerically — state carried across
+time steps accumulates rounding error exactly like DeepSpeech2's RNN stack.
+
+The recurrence uses ``jax.lax.scan`` so the lowered HLO stays compact (a
+While loop) regardless of sequence length.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .. import qops
+from . import Model
+
+
+def _dense_init(key, a, b):
+    scale = 1.0 / math.sqrt(a)
+    return jax.random.uniform(key, (a, b), jnp.float32, -scale, scale)
+
+
+def make(hp: dict) -> Model:
+    in_dim = int(hp.get("in_dim", 32))
+    hidden = int(hp.get("hidden", 64))
+    num_classes = int(hp.get("num_classes", 16))
+    seq = int(hp.get("seq", 32))
+    batch = int(hp.get("batch", 16))
+    bidir = bool(hp.get("bidirectional", True))
+
+    dirs = ["fwd", "bwd"] if bidir else ["fwd"]
+
+    def init(key):
+        params = {}
+        for d in dirs:
+            key, k1, k2 = jax.random.split(key, 3)
+            params[f"{d}.wx"] = _dense_init(k1, in_dim, 4 * hidden)
+            params[f"{d}.wh"] = _dense_init(k2, hidden, 4 * hidden)
+            params[f"{d}.b"] = jnp.zeros((4 * hidden,), jnp.float32)
+        key, kk = jax.random.split(key)
+        params["head.w"] = _dense_init(kk, hidden * len(dirs), num_classes)
+        params["head.b"] = jnp.zeros((num_classes,), jnp.float32)
+        return params
+
+    def _lstm_dir(params, d, x, qcfg):
+        """x: (S, B, in_dim) -> outputs (S, B, hidden)."""
+        wx = qops.qparam(params[f"{d}.wx"], qcfg)
+        wh = qops.qparam(params[f"{d}.wh"], qcfg)
+        b = qops.qparam(params[f"{d}.b"], qcfg)
+        bsz = x.shape[1]
+        h0 = jnp.zeros((bsz, hidden), jnp.float32)
+        c0 = jnp.zeros((bsz, hidden), jnp.float32)
+
+        def cell(carry, xt):
+            h, c = carry
+            gates = qops.qout(
+                jnp.matmul(xt, wx) + jnp.matmul(h, wh) + b, qcfg
+            )
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            i = qops.qsigmoid(i, qcfg)
+            f = qops.qsigmoid(f, qcfg)
+            g = qops.qtanh(g, qcfg)
+            o = qops.qsigmoid(o, qcfg)
+            c_new = qops.qout(f * c + i * g, qcfg)
+            h_new = qops.qmul(o, qops.qtanh(c_new, qcfg), qcfg)
+            return (h_new, c_new), h_new
+
+        _, hs = jax.lax.scan(cell, (h0, c0), x)
+        return hs
+
+    def forward(params, x, qcfg):
+        xt = qops.qdata(jnp.transpose(x, (1, 0, 2)), qcfg)  # (S,B,F)
+        outs = [_lstm_dir(params, "fwd", xt, qcfg)]
+        if bidir:
+            rev = _lstm_dir(params, "bwd", xt[::-1], qcfg)[::-1]
+            outs.append(rev)
+        h = jnp.concatenate(outs, axis=-1)  # (S, B, H*dirs)
+        s, b, hd = h.shape
+        logits = qops.qlinear(
+            h.reshape(s * b, hd), params["head.w"], params["head.b"], qcfg
+        ).reshape(s, b, num_classes)
+        return jnp.transpose(logits, (1, 0, 2))  # (B, S, C)
+
+    def loss_and_metric(params, x, y, qcfg):
+        logits = forward(params, x, qcfg)
+        loss = qops.softmax_xent(logits, y, qcfg)
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return loss, acc  # WER proxy = 1 - acc, computed by the coordinator
+
+    def predict(params, x, qcfg):
+        logits = forward(params, x, qcfg)
+        # predicted class of the first frame, as the per-example eval vector
+        return jnp.argmax(logits[:, 0, :], -1).astype(jnp.float32)
+
+    return Model(
+        name="lstm",
+        init=init,
+        loss_and_metric=loss_and_metric,
+        predict=predict,
+        x_spec=((batch, seq, in_dim), "f32"),
+        y_spec=((batch, seq), "i32"),
+        metric_name="wer",  # coordinator reports 1 - accuracy
+    )

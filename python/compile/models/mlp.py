@@ -1,0 +1,71 @@
+"""MLP model family: least-squares regression and small classifiers.
+
+``task="regression"`` with ``hidden=[]`` is exactly the paper's Section 3.1
+theory-validation model (Figure 2): linear least squares, loss
+0.5/n Σ ||x_i^T w - y_i||², trained with per-operator rounding.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .. import qops
+from . import Model
+
+
+def make(hp: dict) -> Model:
+    in_dim = int(hp.get("in_dim", 10))
+    hidden = list(hp.get("hidden", []))
+    task = hp.get("task", "regression")
+    num_classes = int(hp.get("num_classes", 10))
+    batch = int(hp.get("batch", 32))
+    out_dim = 1 if task == "regression" else num_classes
+    dims = [in_dim] + hidden + [out_dim]
+
+    def init(key):
+        params = {}
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            key, k1 = jax.random.split(key)
+            scale = 1.0 / math.sqrt(a)
+            params[f"l{i}.w"] = (
+                jax.random.uniform(k1, (a, b), jnp.float32, -scale, scale)
+            )
+            params[f"l{i}.b"] = jnp.zeros((b,), jnp.float32)
+        return params
+
+    def forward(params, x, qcfg):
+        h = qops.qdata(x, qcfg)
+        n = len(dims) - 1
+        for i in range(n):
+            h = qops.qlinear(h, params[f"l{i}.w"], params[f"l{i}.b"], qcfg)
+            if i + 1 < n:
+                h = qops.qrelu(h, qcfg)
+        return h
+
+    def loss_and_metric(params, x, y, qcfg):
+        out = forward(params, x, qcfg)
+        if task == "regression":
+            pred = out[:, 0]
+            loss = qops.mse_loss(pred, y, qcfg)
+            return loss, loss  # metric = training loss for the theory exp
+        loss = qops.softmax_xent(out, y, qcfg)
+        acc = jnp.mean((jnp.argmax(out, axis=-1) == y).astype(jnp.float32))
+        return loss, acc
+
+    def predict(params, x, qcfg):
+        out = forward(params, x, qcfg)
+        return out[:, 0] if task == "regression" else jnp.argmax(out, -1)
+
+    y_dtype = "f32" if task == "regression" else "i32"
+    return Model(
+        name=f"mlp-{task}",
+        init=init,
+        loss_and_metric=loss_and_metric,
+        predict=predict,
+        x_spec=((batch, in_dim), "f32"),
+        y_spec=((batch,), y_dtype),
+        metric_name="loss" if task == "regression" else "accuracy",
+    )

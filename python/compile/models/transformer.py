@@ -1,0 +1,181 @@
+"""Transformer encoder family (BERT-MNLI / BERT-Wiki103 / GPT stand-ins).
+
+Pre-norm transformer with learned positional embeddings.  Two task heads:
+
+  * ``classification`` — mean-pool + linear head, 3-way entailment labels
+    (the BERT-MNLI stand-in; Figure 1 / Table 3).
+  * ``lm``             — causal language modelling with weight-tied output
+    projection (the BERT-Wiki103 / end-to-end-GPT stand-in; PPL metric).
+
+Attention, projections, MLP, layernorm and residual adds all route through
+the quantised operator set.  AdamW with the paper's β₂ handling (Appendix
+C.1) is applied by ``optim.py``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .. import qops
+from . import Model
+
+
+def _dense_init(key, a, b):
+    scale = 1.0 / math.sqrt(a)
+    return jax.random.uniform(key, (a, b), jnp.float32, -scale, scale)
+
+
+def make(hp: dict) -> Model:
+    task = hp.get("task", "classification")
+    vocab = int(hp.get("vocab", 512))
+    dim = int(hp.get("dim", 64))
+    heads = int(hp.get("heads", 4))
+    layers = int(hp.get("layers", 2))
+    seq = int(hp.get("seq", 32))
+    num_classes = int(hp.get("num_classes", 3))
+    batch = int(hp.get("batch", 32))
+    hdim = dim // heads
+    assert hdim * heads == dim, "dim must divide heads"
+
+    def init(key):
+        params = {}
+        key, k1, k2 = jax.random.split(key, 3)
+        params["tok.emb"] = (
+            jax.random.normal(k1, (vocab, dim), jnp.float32) * 0.02
+        )
+        params["pos.emb"] = (
+            jax.random.normal(k2, (seq, dim), jnp.float32) * 0.02
+        )
+        for l in range(layers):
+            for name, (a, b) in {
+                "q": (dim, dim),
+                "k": (dim, dim),
+                "v": (dim, dim),
+                "o": (dim, dim),
+                "fc1": (dim, 4 * dim),
+                "fc2": (4 * dim, dim),
+            }.items():
+                key, kk = jax.random.split(key)
+                params[f"l{l}.{name}.w"] = _dense_init(kk, a, b)
+                params[f"l{l}.{name}.b"] = jnp.zeros((b,), jnp.float32)
+            params[f"l{l}.ln1.g"] = jnp.ones((dim,), jnp.float32)
+            params[f"l{l}.ln1.b"] = jnp.zeros((dim,), jnp.float32)
+            params[f"l{l}.ln2.g"] = jnp.ones((dim,), jnp.float32)
+            params[f"l{l}.ln2.b"] = jnp.zeros((dim,), jnp.float32)
+        params["lnf.g"] = jnp.ones((dim,), jnp.float32)
+        params["lnf.b"] = jnp.zeros((dim,), jnp.float32)
+        if task == "classification":
+            key, kk = jax.random.split(key)
+            params["head.w"] = _dense_init(kk, dim, num_classes)
+            params["head.b"] = jnp.zeros((num_classes,), jnp.float32)
+        return params
+
+    def _proj(h, params, l, name, qcfg):
+        """(B,S,D) @ (D,E) + b — flattened to a 2-D FMAC matmul."""
+        b, s, d = h.shape
+        w = params[f"l{l}.{name}.w"]
+        bias = params[f"l{l}.{name}.b"]
+        flat = h.reshape(b * s, d)
+        out = qops.qlinear(flat, w, bias, qcfg)
+        return out.reshape(b, s, -1)
+
+    def _attention(h, params, l, qcfg, causal):
+        b, s, d = h.shape
+        q = _proj(h, params, l, "q", qcfg).reshape(b, s, heads, hdim)
+        k = _proj(h, params, l, "k", qcfg).reshape(b, s, heads, hdim)
+        v = _proj(h, params, l, "v", qcfg).reshape(b, s, heads, hdim)
+        # scores: (B,H,S,S), FMAC matmul + rounded output
+        scores = qops.qout(
+            jnp.einsum("bshd,bthd->bhst", q, k) / math.sqrt(hdim), qcfg
+        )
+        if causal:
+            mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+            scores = jnp.where(mask[None, None] > 0, scores, -1e9)
+        attn = qops.qsoftmax(scores, qcfg, axis=-1)
+        ctx = qops.qout(jnp.einsum("bhst,bthd->bshd", attn, v), qcfg)
+        ctx = ctx.reshape(b, s, d)
+        return _proj(ctx, params, l, "o", qcfg)
+
+    def trunk(params, tokens, qcfg, causal):
+        h = qops.qembed(params["tok.emb"], tokens, qcfg)
+        h = qops.qadd(h, qops.qparam(params["pos.emb"], qcfg)[None], qcfg)
+        for l in range(layers):
+            n = qops.qlayernorm(
+                h, params[f"l{l}.ln1.g"], params[f"l{l}.ln1.b"], qcfg
+            )
+            h = qops.qadd(h, _attention(n, params, l, qcfg, causal), qcfg)
+            n = qops.qlayernorm(
+                h, params[f"l{l}.ln2.g"], params[f"l{l}.ln2.b"], qcfg
+            )
+            m = _proj(n, params, l, "fc1", qcfg)
+            m = qops.qgelu(m, qcfg)
+            b_, s_, _ = m.shape
+            w2 = params[f"l{l}.fc2.w"]
+            m = qops.qlinear(
+                m.reshape(b_ * s_, -1), w2, params[f"l{l}.fc2.b"], qcfg
+            ).reshape(b_, s_, dim)
+            h = qops.qadd(h, m, qcfg)
+        return qops.qlayernorm(h, params["lnf.g"], params["lnf.b"], qcfg)
+
+    if task == "classification":
+
+        def loss_and_metric(params, x, y, qcfg):
+            h = trunk(params, x, qcfg, causal=False)
+            pooled = qops.qmean(h, qcfg, axis=1)
+            logits = qops.qlinear(
+                pooled, params["head.w"], params["head.b"], qcfg
+            )
+            loss = qops.softmax_xent(logits, y, qcfg)
+            acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+            return loss, acc
+
+        def predict(params, x, qcfg):
+            h = trunk(params, x, qcfg, causal=False)
+            pooled = qops.qmean(h, qcfg, axis=1)
+            logits = qops.qlinear(
+                pooled, params["head.w"], params["head.b"], qcfg
+            )
+            return jnp.argmax(logits, -1)
+
+        y_spec = ((batch,), "i32")
+        metric_name = "accuracy"
+    else:  # causal LM
+
+        def loss_and_metric(params, x, y, qcfg):
+            h = trunk(params, x, qcfg, causal=True)
+            b, s, d = h.shape
+            emb = qops.qparam(params["tok.emb"], qcfg)
+            logits = qops.qout(
+                jnp.matmul(h.reshape(b * s, d), emb.T), qcfg
+            ).reshape(b, s, vocab)
+            loss = qops.softmax_xent(logits, y, qcfg)
+            acc = jnp.mean(
+                (jnp.argmax(logits, -1) == y).astype(jnp.float32)
+            )
+            return loss, acc
+
+        def predict(params, x, qcfg):
+            h = trunk(params, x, qcfg, causal=True)
+            b, s, d = h.shape
+            emb = qops.qparam(params["tok.emb"], qcfg)
+            logits = jnp.matmul(h.reshape(b * s, d), emb.T).reshape(
+                b, s, vocab
+            )
+            # next-token prediction at the last position
+            return jnp.argmax(logits[:, -1, :], -1)
+
+        y_spec = ((batch, seq), "i32")
+        metric_name = "ppl"  # rust reports exp(loss)
+
+    return Model(
+        name=f"transformer-{task}",
+        init=init,
+        loss_and_metric=loss_and_metric,
+        predict=predict,
+        x_spec=((batch, seq), "i32"),
+        y_spec=y_spec,
+        metric_name=metric_name,
+    )

@@ -1,0 +1,310 @@
+"""Optimizers with precision-mode-aware weight updates (L2).
+
+Implements the paper's Algorithms 2-5 (SGD / AdamW × stochastic-rounding /
+Kahan-summation) plus the baselines used across the evaluation:
+
+  fp32        — exact 32-bit training (paper's baseline column).
+  standard16  — every optimizer op consumes in-format values and nearest-
+                rounds its output; the weight-update subtraction is nearest-
+                rounded (the *failing* standard algorithm, Table 3/4 rightmost).
+  mixed16     — the Table 3 ablation: fwd/bwd compute is 16-bit, but weights
+                and optimizer state are fp32 with an *exact* update (this is
+                what closes the gap and isolates the bottleneck).
+  sr16        — Algorithm 2/4: the weight-update subtraction output is
+                stochastically rounded; everything else nearest (⊖ operator).
+  kahan16     — Algorithm 3/5: nearest rounding everywhere, but the update is
+                accumulated through a 16-bit Kahan compensation buffer.
+  srkahan16   — both techniques simultaneously (Figure 11).
+
+Every tensor of optimizer state (momentum, second moment, Kahan buffer, bias
+correction scalars) lives in the emulated 16-bit format in the *16 modes —
+the whole point of the paper is that no fp32 storage or FPU is needed.
+
+The per-mode cancellation fraction (share of weight coordinates whose
+non-zero update was cancelled by rounding — Figure 9's metric) is returned
+as an auxiliary output of ``update`` so the rust coordinator can log it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import formats
+from .formats import Format
+
+Params = Dict[str, jnp.ndarray]
+State = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionMode:
+    """Full precision policy for one training run."""
+
+    name: str  # fp32 | standard16 | mixed16 | sr16 | kahan16 | srkahan16
+    fmt: Format = formats.BF16
+
+    @property
+    def is_fp32(self) -> bool:
+        return self.name == "fp32"
+
+    @property
+    def fp32_weights(self) -> bool:
+        return self.name in ("fp32", "mixed16")
+
+    @property
+    def exact_update(self) -> bool:
+        return self.name in ("fp32", "mixed16")
+
+    @property
+    def stochastic(self) -> bool:
+        return self.name in ("sr16", "srkahan16")
+
+    @property
+    def kahan(self) -> bool:
+        return self.name in ("kahan16", "srkahan16")
+
+    @property
+    def compute_fmt(self) -> Format:
+        """Format for forward/backward activations+gradients."""
+        return formats.FP32 if self.name == "fp32" else self.fmt
+
+
+MODE_NAMES = ("fp32", "standard16", "mixed16", "sr16", "kahan16", "srkahan16")
+
+
+def make_mode(name: str, fmt_name: str = "bf16") -> PrecisionMode:
+    if name not in MODE_NAMES:
+        raise ValueError(f"unknown precision mode {name!r}")
+    return PrecisionMode(name, formats.FORMATS[fmt_name])
+
+
+# --------------------------------------------------------------------------
+# Rounding helpers bound to a mode.
+# --------------------------------------------------------------------------
+
+
+def _rn(mode: PrecisionMode):
+    """Nearest-rounding for optimizer-internal ops under ``mode``."""
+    if mode.exact_update:
+        return lambda x: x
+    return lambda x: formats.round_nearest(x, mode.fmt)
+
+
+def _weight_round(mode: PrecisionMode, x, key):
+    """Round the weight-update subtraction output per the mode's policy."""
+    if mode.exact_update:
+        return x
+    if mode.stochastic:
+        rbits = formats.random_bits_like(key, x)
+        return formats.round_stochastic(x, mode.fmt, rbits)
+    return formats.round_nearest(x, mode.fmt)
+
+
+def _kahan_step(r, w, u, c, mode=None, key=None):
+    """Algorithm 1 / lines 7-10 of Algorithms 3&5.
+
+    u is the (negative) model update; c the compensation buffer.  All four
+    ops nearest-round their outputs — only 16-bit FPUs required.  In the
+    combined srkahan16 mode (Figure 11) the weight-accumulate output
+    ``s = w + y`` is stochastically rounded instead, so both techniques act
+    on the same update.
+    """
+    y = r(u - c)
+    if mode is not None and mode.stochastic:
+        rbits = formats.random_bits_like(key, w)
+        s = formats.round_stochastic(w + y, mode.fmt, rbits)
+    else:
+        s = r(w + y)
+    c_new = r(r(s - w) - y)
+    return s, c_new
+
+
+def _cancel_frac(w_old, w_new, update):
+    """Fraction of coordinates with non-zero update cancelled by rounding."""
+    nz = update != 0.0
+    cancelled = jnp.logical_and(nz, w_new == w_old)
+    return jnp.sum(cancelled).astype(jnp.float32), jnp.sum(nz).astype(
+        jnp.float32
+    )
+
+
+# --------------------------------------------------------------------------
+# SGD with momentum (Algorithms 2 & 3).
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SgdConfig:
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+
+
+def sgd_init(params: Params, mode: PrecisionMode, cfg: SgdConfig) -> State:
+    state: State = {}
+    if cfg.momentum != 0.0:
+        for k, v in params.items():
+            state[f"m.{k}"] = jnp.zeros_like(v)
+    if mode.kahan:
+        for k, v in params.items():
+            state[f"c.{k}"] = jnp.zeros_like(v)
+    return state
+
+
+def sgd_update(
+    params: Params,
+    state: State,
+    grads: Params,
+    lr: jnp.ndarray,
+    key: jax.Array,
+    mode: PrecisionMode,
+    cfg: SgdConfig,
+) -> Tuple[Params, State, jnp.ndarray]:
+    """One SGD step.  Returns (params', state', cancel_fraction)."""
+    r = _rn(mode)
+    new_p: Params = {}
+    new_s: State = {}
+    cancelled = jnp.zeros((), jnp.float32)
+    total = jnp.zeros((), jnp.float32)
+    keys = jax.random.split(key, len(params))
+    for (k, w), kk in zip(sorted(params.items()), keys):
+        g = grads[k]
+        if cfg.weight_decay != 0.0:
+            g = r(g + r(cfg.weight_decay * w))
+        if cfg.momentum != 0.0:
+            m = r(r(cfg.momentum * state[f"m.{k}"]) + g)
+            new_s[f"m.{k}"] = m
+        else:
+            m = g
+        u = r(lr * m)  # the model update magnitude
+        if mode.kahan:
+            w_new, c_new = _kahan_step(
+                r, w, -u, state[f"c.{k}"], mode=mode, key=kk
+            )
+            new_s[f"c.{k}"] = c_new
+        else:
+            w_new = _weight_round(mode, w - u, kk)
+        c, t = _cancel_frac(w, w_new, u)
+        cancelled += c
+        total += t
+        new_p[k] = w_new
+    frac = cancelled / jnp.maximum(total, 1.0)
+    return new_p, new_s, frac
+
+
+# --------------------------------------------------------------------------
+# AdamW (Algorithms 4 & 5).
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    beta1: float = 0.9
+    # The paper uses beta2 = 0.997 for the 16-bit modes because 0.999 rounds
+    # to 1.0 in bf16 (Appendix C.1).  Callers pick the value per mode via
+    # ``beta2_for_mode``.
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+    def beta2_for_mode(self, mode: PrecisionMode) -> float:
+        if mode.is_fp32 or mode.name == "mixed16":
+            return self.beta2
+        # largest representable value < beta2 in the mode's format
+        b = formats.round_nearest_py(self.beta2, mode.fmt)
+        if b >= 1.0:
+            # e.g. 0.999 rounds to 1.0 in bf16 → back off to the largest
+            # representable value below 1.0 (0.99609375 for bf16 — the
+            # paper's "0.997", Appendix C.1).
+            b = 1.0 - 2.0 ** -(mode.fmt.mant_bits + 1)
+        return b
+
+
+def adamw_init(params: Params, mode: PrecisionMode, cfg: AdamWConfig) -> State:
+    state: State = {}
+    for k, v in params.items():
+        state[f"m.{k}"] = jnp.zeros_like(v)
+        state[f"v.{k}"] = jnp.zeros_like(v)
+    if mode.kahan:
+        for k, v in params.items():
+            state[f"c.{k}"] = jnp.zeros_like(v)
+    # bias-correction product accumulators (Algorithm 4 lines 7-8), stored
+    # in-format like everything else.
+    state["bc1"] = jnp.ones((), jnp.float32)
+    state["bc2"] = jnp.ones((), jnp.float32)
+    return state
+
+
+def adamw_update(
+    params: Params,
+    state: State,
+    grads: Params,
+    lr: jnp.ndarray,
+    key: jax.Array,
+    mode: PrecisionMode,
+    cfg: AdamWConfig,
+) -> Tuple[Params, State, jnp.ndarray]:
+    r = _rn(mode)
+    b1 = cfg.beta1
+    b2 = cfg.beta2_for_mode(mode)
+    new_p: Params = {}
+    new_s: State = {}
+    bc1 = r(state["bc1"] * b1)
+    bc2 = r(state["bc2"] * b2)
+    new_s["bc1"] = bc1
+    new_s["bc2"] = bc2
+    denom1 = r(1.0 - bc1)
+    denom2 = r(1.0 - bc2)
+    cancelled = jnp.zeros((), jnp.float32)
+    total = jnp.zeros((), jnp.float32)
+    keys = jax.random.split(key, len(params))
+    for (k, w), kk in zip(sorted(params.items()), keys):
+        g = grads[k]
+        m = r(r(b1 * state[f"m.{k}"]) + r((1.0 - b1) * g))
+        v = r(r(b2 * state[f"v.{k}"]) + r((1.0 - b2) * r(g * g)))
+        new_s[f"m.{k}"] = m
+        new_s[f"v.{k}"] = v
+        mhat = r(m / denom1)
+        vhat = r(jnp.sqrt(r(v / denom2)))
+        t = r(mhat / r(vhat + cfg.eps))
+        u = r(r(lr * t) + r(r(lr * cfg.weight_decay) * w))
+        if mode.kahan:
+            w_new, c_new = _kahan_step(
+                r, w, -u, state[f"c.{k}"], mode=mode, key=kk
+            )
+            new_s[f"c.{k}"] = c_new
+        else:
+            w_new = _weight_round(mode, w - u, kk)
+        c, t2 = _cancel_frac(w, w_new, u)
+        cancelled += c
+        total += t2
+        new_p[k] = w_new
+    frac = cancelled / jnp.maximum(total, 1.0)
+    return new_p, new_s, frac
+
+
+# --------------------------------------------------------------------------
+# Uniform facade used by train_step.py.
+# --------------------------------------------------------------------------
+
+
+OPTIMIZERS = ("sgd", "adamw")
+
+
+def opt_init(name, params, mode, cfg) -> State:
+    if name == "sgd":
+        return sgd_init(params, mode, cfg)
+    if name == "adamw":
+        return adamw_init(params, mode, cfg)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def opt_update(name, params, state, grads, lr, key, mode, cfg):
+    if name == "sgd":
+        return sgd_update(params, state, grads, lr, key, mode, cfg)
+    if name == "adamw":
+        return adamw_update(params, state, grads, lr, key, mode, cfg)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,212 @@
+"""Quantised compute-graph operators (L2).
+
+The paper models training on a hypothetical 16-bit-FPU accelerator: every
+compute-graph operator reads 16-bit inputs, accumulates in a 32-bit FMAC
+accumulator, and rounds its output back to 16 bits (nearest rounding).  We
+reproduce those semantics in JAX:
+
+  * the *values* flow as float32 (so fp32 hardware does the accumulation —
+    exactly the FMAC's wide accumulator), and
+  * ``qout`` rounds each operator's output onto the emulated format.
+
+``qout`` is a ``jax.custom_vjp`` so that the *backward* pass obeys the same
+rule: every cotangent crossing an operator boundary is rounded too.  Weights
+are wrapped with ``qparam`` at their point of use, which (a) models the FMAC
+reading the weight through a 16-bit port and (b) makes the weight gradient
+pass through a rounding boundary before reaching the optimizer.
+
+When ``QConfig.use_pallas`` is set, 2-D matmuls route through the Pallas
+kernel in ``kernels/qmatmul.py`` (interpret=True), which implements the same
+tile-accumulate-round schedule explicitly; it is numerically identical to the
+jnp path and is validated against ``kernels/ref.py`` in pytest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import formats
+from .formats import Format
+
+
+@dataclasses.dataclass(frozen=True)
+class QConfig:
+    """Precision configuration for forward/backward compute.
+
+    compute    — format that operator outputs are rounded to.
+    use_pallas — route 2-D matmuls through the L1 Pallas kernel.
+    """
+
+    compute: Format
+    use_pallas: bool = False
+
+    @property
+    def exact(self) -> bool:
+        return self.compute.is_fp32
+
+
+FP32_CFG = QConfig(formats.FP32)
+BF16_CFG = QConfig(formats.BF16)
+
+
+# --------------------------------------------------------------------------
+# Rounding boundary with rounded backward pass.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _qcast(x, exp_bits: int, mant_bits: int):
+    fmt = Format("q", exp_bits, mant_bits)
+    return formats.round_nearest(x, fmt)
+
+
+def _qcast_fwd(x, exp_bits, mant_bits):
+    return _qcast(x, exp_bits, mant_bits), None
+
+
+def _qcast_bwd(exp_bits, mant_bits, _res, g):
+    fmt = Format("q", exp_bits, mant_bits)
+    return (formats.round_nearest(g, fmt),)
+
+
+_qcast.defvjp(_qcast_fwd, _qcast_bwd)
+
+
+def qout(x: jnp.ndarray, cfg: QConfig) -> jnp.ndarray:
+    """Round an operator output onto the compute format (rounded VJP)."""
+    if cfg.exact:
+        return x
+    return _qcast(x, cfg.compute.exp_bits, cfg.compute.mant_bits)
+
+
+def qparam(w: jnp.ndarray, cfg: QConfig) -> jnp.ndarray:
+    """Read a parameter through a 16-bit FMAC input port.
+
+    Identity-valued when the parameter is already in-format (the 16-bit-FPU
+    modes), a true cast in the 32-bit-weights ablation / mixed mode.  Either
+    way the weight *gradient* is rounded on its way back.
+    """
+    return qout(w, cfg)
+
+
+def qdata(x: jnp.ndarray, cfg: QConfig) -> jnp.ndarray:
+    """Ingest input data into the compute format (no gradient path)."""
+    if cfg.exact:
+        return x
+    return formats.round_nearest(x, cfg.compute)
+
+
+# --------------------------------------------------------------------------
+# Operators.  Each accumulates in fp32 and rounds its own output.
+# --------------------------------------------------------------------------
+
+
+def qmatmul(a: jnp.ndarray, b: jnp.ndarray, cfg: QConfig) -> jnp.ndarray:
+    """Quantised matmul: bf16-valued inputs, fp32 accumulate, rounded out."""
+    if cfg.use_pallas and a.ndim == 2 and b.ndim == 2 and not cfg.exact:
+        from .kernels import qmatmul as qk
+
+        return qk.qmatmul_pallas(a, b, cfg.compute)
+    return qout(jnp.matmul(a, b), cfg)
+
+
+def qlinear(x, w, b, cfg: QConfig):
+    """x @ w + b with per-operator rounding (two FMAC ops)."""
+    y = qmatmul(x, qparam(w, cfg), cfg)
+    if b is not None:
+        y = qout(y + qparam(b, cfg), cfg)
+    return y
+
+
+def qadd(a, b, cfg: QConfig):
+    return qout(a + b, cfg)
+
+
+def qmul(a, b, cfg: QConfig):
+    return qout(a * b, cfg)
+
+
+def qrelu(x, cfg: QConfig):
+    # Sign selection introduces no rounding error; kept rounded for uniform
+    # operator semantics.
+    return qout(jax.nn.relu(x), cfg)
+
+
+def qgelu(x, cfg: QConfig):
+    return qout(jax.nn.gelu(x), cfg)
+
+
+def qsigmoid(x, cfg: QConfig):
+    return qout(jax.nn.sigmoid(x), cfg)
+
+
+def qtanh(x, cfg: QConfig):
+    return qout(jnp.tanh(x), cfg)
+
+
+def qsoftmax(x, cfg: QConfig, axis: int = -1):
+    # Fused softmax: one operator, one output rounding — mirrors the fused
+    # activation/normalisation convention of the paper's simulator (§4 fn 4).
+    return qout(jax.nn.softmax(x, axis=axis), cfg)
+
+
+def qlayernorm(x, gamma, beta, cfg: QConfig, eps: float = 1e-5):
+    """Fused layer norm (single output rounding, per simulator convention)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * qparam(gamma, cfg) + qparam(beta, cfg)
+    return qout(y, cfg)
+
+
+def qconv2d(x, w, cfg: QConfig, stride: int = 1, padding: str = "SAME"):
+    """NCHW conv with fp32 FMAC accumulate and a single output rounding."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        qparam(w, cfg),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return qout(y, cfg)
+
+
+def qembed(table, idx, cfg: QConfig):
+    """Embedding lookup: a gather is a memory op; values are already
+    in-format but the gradient scatter output is rounded (via qparam)."""
+    return jnp.take(qparam(table, cfg), idx, axis=0)
+
+
+def qmean(x, cfg: QConfig, axis=None):
+    return qout(jnp.mean(x, axis=axis), cfg)
+
+
+def qsum(x, cfg: QConfig, axis=None):
+    return qout(jnp.sum(x, axis=axis), cfg)
+
+
+# --------------------------------------------------------------------------
+# Losses (fused: one rounding at the scalar output).
+# --------------------------------------------------------------------------
+
+
+def mse_loss(pred, target, cfg: QConfig):
+    d = qout(pred - target, cfg)
+    return qmean(d * d, cfg) * 0.5
+
+
+def bce_with_logits(logits, labels, cfg: QConfig):
+    z = qout(jax.nn.log_sigmoid(logits), cfg)
+    nz = qout(jax.nn.log_sigmoid(-logits), cfg)
+    return qmean(-(labels * z + (1.0 - labels) * nz), cfg)
+
+
+def softmax_xent(logits, labels, cfg: QConfig):
+    """Cross entropy with integer labels; fused log-softmax."""
+    logp = qout(jax.nn.log_softmax(logits, axis=-1), cfg)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return qmean(nll, cfg)

@@ -1,0 +1,219 @@
+"""Assemble full training/eval step functions for AOT lowering (L2).
+
+A *step artifact* is one jitted function per (application × precision mode):
+
+  train:  step(params…, opt_state…, x, y, seed, lr)
+              -> (params'…, opt_state'…, loss, metric, cancel_frac)
+  eval:   eval(params…, x, y) -> (loss, metric, preds)
+  init:   init(seed) -> (params…,)
+
+All tensors cross the boundary as f32/i32 (emulated formats are value
+subsets of f32 — see formats.py).  The argument order is deterministic:
+sorted parameter keys, then sorted optimizer-state keys, then batch inputs,
+then scalars; ``signature()`` reports it for the manifest so the rust
+runtime can bind buffers without ever importing python.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import formats, optim, qops
+from .models import Model
+
+
+def _sorted_keys(d: Dict[str, jnp.ndarray]) -> List[str]:
+    return sorted(d.keys())
+
+
+class StepBuilder:
+    """Builds the three artifact functions for one application × mode."""
+
+    def __init__(
+        self,
+        model: Model,
+        mode: optim.PrecisionMode,
+        opt_name: str,
+        opt_cfg,
+        use_pallas: bool = False,
+    ):
+        self.model = model
+        self.mode = mode
+        self.opt_name = opt_name
+        self.opt_cfg = opt_cfg
+        self.qcfg = qops.QConfig(mode.compute_fmt, use_pallas=use_pallas)
+        # The RNG seed input exists only when the update actually consumes
+        # random bits; otherwise jax prunes the unused argument during
+        # lowering and the executable's signature would not match the
+        # manifest (aot.py asserts the final parameter count).
+        self.uses_seed = mode.stochastic
+        # Probe shapes once with concrete zeros to fix the state layout.
+        probe = model.init(jax.random.PRNGKey(0))
+        self.param_keys = _sorted_keys(probe)
+        self.param_shapes = {k: tuple(probe[k].shape) for k in self.param_keys}
+        state = optim.opt_init(opt_name, probe, mode, opt_cfg)
+        self.state_keys = _sorted_keys(state)
+        self.state_shapes = {k: tuple(state[k].shape) for k in self.state_keys}
+
+    # -- pytree <-> flat helpers ------------------------------------------
+
+    def _pack(self, params, state):
+        return [params[k] for k in self.param_keys] + [
+            state[k] for k in self.state_keys
+        ]
+
+    def _unpack(self, flat):
+        np_ = len(self.param_keys)
+        params = dict(zip(self.param_keys, flat[:np_]))
+        state = dict(zip(self.state_keys, flat[np_:]))
+        return params, state
+
+    # -- artifact functions ------------------------------------------------
+
+    def init_fn(self):
+        """init(seed:i32) -> (params…, opt_state…) with in-format weights."""
+
+        def f(seed):
+            key = jax.random.PRNGKey(seed)
+            params = self.model.init(key)
+            if not self.mode.fp32_weights:
+                params = {
+                    k: formats.round_nearest(v, self.mode.fmt)
+                    for k, v in params.items()
+                }
+            state = optim.opt_init(
+                self.opt_name, params, self.mode, self.opt_cfg
+            )
+            return tuple(self._pack(params, state))
+
+        return f
+
+    def train_fn(self):
+        model, mode, qcfg = self.model, self.mode, self.qcfg
+
+        def f(*args):
+            n = len(self.param_keys) + len(self.state_keys)
+            if self.uses_seed:
+                flat, (x, y, seed, lr) = list(args[:n]), args[n:]
+            else:
+                flat, (x, y, lr) = list(args[:n]), args[n:]
+                seed = 0
+            params, state = self._unpack(flat)
+            key = jax.random.PRNGKey(seed)
+
+            def loss_fn(p):
+                loss, metric = model.loss_and_metric(p, x, y, qcfg)
+                return loss, metric
+
+            (loss, metric), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params)
+            new_p, new_s, cancel = optim.opt_update(
+                self.opt_name,
+                params,
+                state,
+                grads,
+                lr,
+                key,
+                mode,
+                self.opt_cfg,
+            )
+            out = self._pack(new_p, new_s)
+            return tuple(out) + (loss, metric, cancel)
+
+        return f
+
+    def eval_fn(self):
+        model, qcfg = self.model, self.qcfg
+
+        def f(*args):
+            n = len(self.param_keys)
+            params = dict(zip(self.param_keys, args[:n]))
+            x, y = args[n], args[n + 1]
+            loss, metric = model.loss_and_metric(params, x, y, qcfg)
+            preds = model.predict(params, x, qcfg).astype(jnp.float32)
+            return loss, metric, preds
+
+        return f
+
+    # -- manifest metadata ---------------------------------------------------
+
+    def _spec(self, shape, dtype="f32", role="param", key=""):
+        return {
+            "role": role,
+            "key": key,
+            "shape": list(shape),
+            "dtype": dtype,
+        }
+
+    def signature(self) -> Tuple[list, list, list]:
+        """(train_inputs, train_outputs, eval_inputs) manifest entries."""
+        ins = [
+            self._spec(self.param_shapes[k], role="param", key=k)
+            for k in self.param_keys
+        ]
+        ins += [
+            self._spec(self.state_shapes[k], role="opt_state", key=k)
+            for k in self.state_keys
+        ]
+        xs, xd = self.model.x_spec
+        ys, yd = self.model.y_spec
+        ins.append(self._spec(xs, xd, role="x"))
+        ins.append(self._spec(ys, yd, role="y"))
+        if self.uses_seed:
+            ins.append(self._spec((), "i32", role="seed"))
+        ins.append(self._spec((), "f32", role="lr"))
+        outs = [
+            self._spec(self.param_shapes[k], role="param", key=k)
+            for k in self.param_keys
+        ]
+        outs += [
+            self._spec(self.state_shapes[k], role="opt_state", key=k)
+            for k in self.state_keys
+        ]
+        outs.append(self._spec((), "f32", role="loss"))
+        outs.append(self._spec((), "f32", role="metric"))
+        outs.append(self._spec((), "f32", role="cancel_frac"))
+        eval_ins = [
+            self._spec(self.param_shapes[k], role="param", key=k)
+            for k in self.param_keys
+        ]
+        eval_ins.append(self._spec(xs, xd, role="x"))
+        eval_ins.append(self._spec(ys, yd, role="y"))
+        return ins, outs, eval_ins
+
+    def example_args(self):
+        """ShapeDtypeStructs for jax.jit(...).lower of the train step."""
+        structs = []
+        for k in self.param_keys:
+            structs.append(
+                jax.ShapeDtypeStruct(self.param_shapes[k], jnp.float32)
+            )
+        for k in self.state_keys:
+            structs.append(
+                jax.ShapeDtypeStruct(self.state_shapes[k], jnp.float32)
+            )
+        xs, xd = self.model.x_spec
+        ys, yd = self.model.y_spec
+        jdt = {"f32": jnp.float32, "i32": jnp.int32}
+        structs.append(jax.ShapeDtypeStruct(xs, jdt[xd]))
+        structs.append(jax.ShapeDtypeStruct(ys, jdt[yd]))
+        if self.uses_seed:
+            structs.append(jax.ShapeDtypeStruct((), jnp.int32))  # seed
+        structs.append(jax.ShapeDtypeStruct((), jnp.float32))  # lr
+        return structs
+
+    def eval_example_args(self):
+        structs = [
+            jax.ShapeDtypeStruct(self.param_shapes[k], jnp.float32)
+            for k in self.param_keys
+        ]
+        xs, xd = self.model.x_spec
+        ys, yd = self.model.y_spec
+        jdt = {"f32": jnp.float32, "i32": jnp.int32}
+        structs.append(jax.ShapeDtypeStruct(xs, jdt[xd]))
+        structs.append(jax.ShapeDtypeStruct(ys, jdt[yd]))
+        return structs

@@ -1,0 +1,163 @@
+"""Properties of the numeric-format emulation (L2 formats.py).
+
+Hypothesis sweeps value ranges and formats; independent oracles:
+  * jnp's own bfloat16/float16 conversions for the IEEE formats,
+  * the paper's analytical bounds (|Q(u)-u| <= eps|u|, SR unbiasedness).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats
+
+NON_FP32 = [f for f in formats.FORMATS.values() if not f.is_fp32]
+E8_FORMATS = [f for f in NON_FP32 if f.exp_bits == 8]
+
+finite_f32 = st.floats(
+    allow_nan=False,
+    allow_infinity=False,
+    allow_subnormal=False,
+    width=32,
+)
+
+
+@st.composite
+def arrays_f32(draw, max_len=64):
+    n = draw(st.integers(1, max_len))
+    return np.asarray(
+        draw(st.lists(finite_f32, min_size=n, max_size=n)), np.float32
+    )
+
+
+@pytest.mark.parametrize("fmt", NON_FP32, ids=lambda f: f.name)
+@given(xs=arrays_f32())
+@settings(max_examples=30, deadline=None)
+def test_nearest_is_projection(fmt, xs):
+    once = formats.round_nearest(jnp.asarray(xs), fmt)
+    twice = formats.round_nearest(once, fmt)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@pytest.mark.parametrize("fmt", E8_FORMATS, ids=lambda f: f.name)
+@given(xs=arrays_f32())
+@settings(max_examples=30, deadline=None)
+def test_nearest_error_bound(fmt, xs):
+    """Paper's |Q(u) - u| <= eps * |u| for in-range values.
+
+    Values between the format's max finite value and f32 max overflow to
+    inf (IEEE RNE overflow rule) — the paper's analysis explicitly ignores
+    overflow, so the bound is asserted for |x| <= max_value only.
+    """
+    in_range = np.abs(xs) <= fmt.max_value
+    xs = xs[in_range]
+    q = np.asarray(formats.round_nearest(jnp.asarray(xs), fmt))
+    eps = fmt.machine_eps
+    assert np.all(np.abs(q - xs) <= eps * np.abs(xs) + 1e-45)
+
+
+def test_bf16_matches_jnp_cast():
+    """Independent oracle: jnp bfloat16 conversion is RNE."""
+    rng = np.random.RandomState(0)
+    xs = (rng.randn(4096) * 10.0 ** rng.randint(-30, 30, 4096)).astype(
+        np.float32
+    )
+    ours = np.asarray(formats.round_nearest(jnp.asarray(xs), formats.BF16))
+    theirs = np.asarray(
+        jnp.asarray(xs).astype(jnp.bfloat16).astype(jnp.float32)
+    )
+    np.testing.assert_array_equal(ours, theirs)
+
+
+def test_fp16_matches_jnp_cast_for_normals():
+    """fp16 oracle restricted to the normal range (we document FTZ)."""
+    rng = np.random.RandomState(1)
+    xs = (rng.randn(4096) * 10.0 ** rng.uniform(-4, 4, 4096)).astype(
+        np.float32
+    )
+    xs = xs[np.abs(xs) >= 6.2e-5]  # above fp16 min normal (with margin)
+    xs = xs[np.abs(xs) < 60000.0]
+    ours = np.asarray(formats.round_nearest(jnp.asarray(xs), formats.FP16))
+    theirs = np.asarray(
+        jnp.asarray(xs).astype(jnp.float16).astype(jnp.float32)
+    )
+    np.testing.assert_array_equal(ours, theirs)
+
+
+def test_fp16_overflow_and_ftz():
+    xs = jnp.asarray([1e6, -1e6, 70000.0, 1e-8, -1e-8, 0.0], jnp.float32)
+    q = np.asarray(formats.round_nearest(xs, formats.FP16))
+    assert q[0] == np.inf and q[1] == -np.inf and q[2] == np.inf
+    assert q[3] == 0.0 and q[4] == 0.0 and q[5] == 0.0
+
+
+@pytest.mark.parametrize("fmt", NON_FP32, ids=lambda f: f.name)
+def test_stochastic_rounds_to_neighbours(fmt):
+    """SR output is always one of the two neighbouring representables."""
+    rng = np.random.RandomState(2)
+    xs = (rng.randn(2048) * 10.0 ** rng.randint(-8, 8, 2048)).astype(
+        np.float32
+    )
+    key = jax.random.PRNGKey(0)
+    rbits = jax.random.bits(key, xs.shape, jnp.uint32)
+    q = np.asarray(formats.round_stochastic(jnp.asarray(xs), fmt, rbits))
+    down = np.asarray(
+        formats.round_stochastic(
+            jnp.asarray(xs), fmt, jnp.zeros(xs.shape, jnp.uint32)
+        )
+    )  # rbits=0 == truncation toward -|mantissa| (round down in magnitude)
+    if fmt.exp_bits == 8:
+        up_candidates = np.asarray(
+            formats.round_stochastic(
+                jnp.asarray(xs),
+                fmt,
+                jnp.full(xs.shape, (1 << fmt.drop_bits) - 1, jnp.uint32),
+            )
+        )
+        ok = (q == down) | (q == up_candidates)
+        assert np.all(ok)
+
+
+def test_stochastic_is_unbiased():
+    """Mean over many dither draws converges to the exact value."""
+    x = jnp.full((20000,), 1.0 + 1.0 / 512.0, jnp.float32)  # mid-interval
+    key = jax.random.PRNGKey(3)
+    rbits = jax.random.bits(key, x.shape, jnp.uint32)
+    q = np.asarray(formats.round_stochastic(x, formats.BF16, rbits))
+    # bf16 neighbours of 1.001953125 are 1.0 and 1.0078125; expect 1/4 up.
+    mean = q.mean()
+    assert abs(mean - (1.0 + 1.0 / 512.0)) < 2e-4, mean
+    frac_up = (q > 1.0).mean()
+    assert abs(frac_up - 0.25) < 0.02, frac_up
+
+
+def test_round_nearest_py_matches_jnp():
+    rng = np.random.RandomState(4)
+    xs = (rng.randn(512) * 10.0 ** rng.randint(-20, 20, 512)).astype(
+        np.float32
+    )
+    for fmt in NON_FP32:
+        ours = np.asarray([formats.round_nearest_py(float(x), fmt) for x in xs], np.float32)
+        theirs = np.asarray(formats.round_nearest(jnp.asarray(xs), fmt))
+        np.testing.assert_array_equal(ours, theirs, err_msg=fmt.name)
+
+
+def test_machine_eps_convention():
+    """eps = 2^-(m+1): 1 + eps must round back to 1, 1 + 2 eps must not."""
+    for fmt in E8_FORMATS:
+        eps = fmt.machine_eps
+        one_plus = jnp.asarray(1.0 + eps * 0.99, jnp.float32)
+        q = float(formats.round_nearest(one_plus, fmt))
+        assert q == 1.0, fmt.name
+        q2 = float(
+            formats.round_nearest(jnp.asarray(1.0 + 2.5 * eps, jnp.float32), fmt)
+        )
+        assert q2 > 1.0, fmt.name
+
+
+def test_nan_inf_pass_through():
+    xs = jnp.asarray([np.nan, np.inf, -np.inf], jnp.float32)
+    q = np.asarray(formats.round_nearest(xs, formats.BF16))
+    assert np.isnan(q[0]) and q[1] == np.inf and q[2] == -np.inf

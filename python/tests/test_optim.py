@@ -1,0 +1,142 @@
+"""Optimizer semantics per precision mode (Algorithms 2-5 + baselines).
+
+Includes the paper's key qualitative behaviours as unit tests:
+  * nearest rounding cancels small updates (the halting effect, Thm 1),
+  * stochastic rounding makes progress in expectation,
+  * Kahan summation accumulates sub-epsilon updates until they land,
+  * mixed16/fp32 updates are exact,
+  * bf16 AdamW uses β₂ = 0.99609375 (the paper's "0.997" fix).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import formats, optim
+
+
+def _mode(name, fmt="bf16"):
+    return optim.make_mode(name, fmt)
+
+
+def _sgd_cfg(momentum=0.0, wd=0.0):
+    return optim.SgdConfig(momentum=momentum, weight_decay=wd)
+
+
+def _run_sgd_steps(mode, w0, grad_value, lr, steps, seed=0):
+    cfg = _sgd_cfg()
+    params = {"w": jnp.asarray([w0], jnp.float32)}
+    state = optim.opt_init("sgd", params, mode, cfg)
+    grads = {"w": jnp.asarray([grad_value], jnp.float32)}
+    key = jax.random.PRNGKey(seed)
+    fracs = []
+    for t in range(steps):
+        key, kk = jax.random.split(key)
+        params, state, frac = optim.sgd_update(
+            params, state, grads, jnp.float32(lr), kk, mode, cfg
+        )
+        fracs.append(float(frac))
+    return float(params["w"][0]), fracs
+
+
+def test_nearest_rounding_halts_small_updates():
+    """bf16 spacing at 1.0 is 2^-8; an update of 2^-11 must be cancelled."""
+    w, fracs = _run_sgd_steps(_mode("standard16"), 1.0, 2.0**-11, 1.0, 50)
+    assert w == 1.0
+    assert all(f == 1.0 for f in fracs), fracs
+
+
+def test_kahan_accumulates_small_updates():
+    """Same tiny update: Kahan must land it after ~2^3 steps."""
+    w, _ = _run_sgd_steps(_mode("kahan16"), 1.0, 2.0**-11, 1.0, 50)
+    # exact descent would give 1 - 50/2048 ≈ 0.9756
+    assert w < 1.0
+    assert abs(w - (1.0 - 50 * 2.0**-11)) < 2.0**-8
+
+
+def test_stochastic_progresses_in_expectation():
+    vals = []
+    for seed in range(20):
+        w, _ = _run_sgd_steps(_mode("sr16"), 1.0, 2.0**-11, 1.0, 64, seed)
+        vals.append(w)
+    mean = np.mean(vals)
+    target = 1.0 - 64 * 2.0**-11
+    assert mean < 1.0
+    assert abs(mean - target) < 0.01, (mean, target)
+
+
+def test_fp32_and_mixed_updates_are_exact():
+    for name in ("fp32", "mixed16"):
+        w, fracs = _run_sgd_steps(_mode(name), 1.0, 2.0**-11, 1.0, 10)
+        np.testing.assert_allclose(w, 1.0 - 10 * 2.0**-11, rtol=1e-6)
+        assert all(f == 0.0 for f in fracs)
+
+
+def test_srkahan_combined_progresses():
+    w, _ = _run_sgd_steps(_mode("srkahan16"), 1.0, 2.0**-11, 1.0, 64)
+    assert w < 1.0
+
+
+def test_momentum_state_created_and_in_format():
+    mode = _mode("standard16")
+    cfg = _sgd_cfg(momentum=0.9)
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    state = optim.opt_init("sgd", params, mode, cfg)
+    assert "m.w" in state
+    mode_k = _mode("kahan16")
+    state_k = optim.opt_init("sgd", params, mode_k, _sgd_cfg(momentum=0.9))
+    assert "c.w" in state_k and "m.w" in state_k
+
+
+def test_beta2_bf16_substitution():
+    cfg = optim.AdamWConfig(beta2=0.999)
+    assert cfg.beta2_for_mode(_mode("fp32")) == 0.999
+    assert cfg.beta2_for_mode(_mode("mixed16")) == 0.999
+    b = cfg.beta2_for_mode(_mode("standard16"))
+    assert b == 0.99609375, b  # largest bf16 below 1
+    # 0.98 is bf16-representable-ish: check it stays below 1 and close
+    cfg2 = optim.AdamWConfig(beta2=0.98)
+    b2 = cfg2.beta2_for_mode(_mode("sr16"))
+    assert 0.97 < b2 < 1.0
+
+
+def test_adamw_step_moves_weights():
+    mode = _mode("sr16")
+    cfg = optim.AdamWConfig()
+    params = {"w": jnp.ones((8,), jnp.float32)}
+    state = optim.opt_init("adamw", params, mode, cfg)
+    grads = {"w": jnp.full((8,), 0.1, jnp.float32)}
+    params2, state2, _ = optim.adamw_update(
+        params, state, grads, jnp.float32(1e-2), jax.random.PRNGKey(0), mode, cfg
+    )
+    assert float(jnp.max(jnp.abs(params2["w"] - params["w"]))) > 0.0
+    assert float(state2["bc1"]) < 1.0
+
+
+def test_cancel_frac_counts_only_nonzero_updates():
+    """Zero gradients produce zero updates — not 'cancelled' ones."""
+    mode = _mode("standard16")
+    cfg = _sgd_cfg()
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    state = optim.opt_init("sgd", params, mode, cfg)
+    grads = {"w": jnp.zeros((4,), jnp.float32)}
+    _, _, frac = optim.sgd_update(
+        params, state, grads, jnp.float32(1.0), jax.random.PRNGKey(0), mode, cfg
+    )
+    assert float(frac) == 0.0
+
+
+def test_kahan_residual_tracks_lost_mass():
+    """After cancelled updates, |c| holds the lost update mass."""
+    mode = _mode("kahan16")
+    cfg = _sgd_cfg()
+    params = {"w": jnp.asarray([1.0], jnp.float32)}
+    state = optim.opt_init("sgd", params, mode, cfg)
+    grads = {"w": jnp.asarray([2.0**-12], jnp.float32)}
+    key = jax.random.PRNGKey(0)
+    params, state, _ = optim.sgd_update(
+        params, state, grads, jnp.float32(1.0), key, mode, cfg
+    )
+    # weight unchanged but compensation buffer remembers -u
+    assert float(params["w"][0]) == 1.0
+    assert abs(float(state["c.w"][0]) - 2.0**-12) < 1e-9

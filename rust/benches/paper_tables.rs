@@ -1,0 +1,44 @@
+//! Miniature end-to-end versions of every paper table/figure — one bench
+//! entry per experiment, so `cargo bench` demonstrates each regeneration
+//! path compiles and runs.  Full-scale runs: `repro exp all`.
+
+use bf16_train::coordinator::{run_experiment, ExpOptions};
+use bf16_train::runtime::{Engine, Manifest};
+use bf16_train::util::bench::bench;
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let runtime = Manifest::load(dir)
+        .ok()
+        .map(|m| (Engine::cpu().expect("pjrt cpu"), m));
+    let rt_ref = runtime.as_ref().map(|(e, m)| (e, m));
+
+    let tmp = std::env::temp_dir().join("bf16_bench_results");
+    let opts = ExpOptions {
+        steps: Some(60),
+        seeds: 1,
+        out_dir: tmp.to_string_lossy().into_owned(),
+        artifacts_dir: dir.to_string(),
+        smooth: 0.15,
+    };
+
+    // native-only experiments
+    for id in ["table1", "table2", "fig2", "thm1", "fig5", "fig9"] {
+        bench(&format!("exp {id} (mini)"), || {
+            run_experiment(id, None, &opts, None).unwrap();
+        });
+    }
+    // PJRT-backed experiments (skip when artifacts missing)
+    if rt_ref.is_some() {
+        for id in ["fig1", "table3", "fig10", "fig11", "fig12"] {
+            bench(&format!("exp {id} (mini)"), || {
+                run_experiment(id, rt_ref, &opts, None).unwrap();
+            });
+        }
+        bench("exp table4 (mini, dlrm-small only)", || {
+            run_experiment("table4", rt_ref, &opts, Some("dlrm-small")).unwrap();
+        });
+    } else {
+        println!("SKIP PJRT experiments: no artifacts (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,48 @@
+//! Native simulator benches: quantised matmul + full DLRM train steps per
+//! precision mode.  These are the L3 hot path for the theory/telemetry
+//! experiments (Figures 2, 5, 9, 10).
+
+use bf16_train::qsim::dlrm::{DlrmConfig, DlrmTrainer};
+use bf16_train::qsim::{Mode, QPolicy, Tape, Tensor};
+use bf16_train::util::bench::{bench, black_box, throughput};
+use bf16_train::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1, 0);
+    let a = Tensor::randn(128, 256, 1.0, &mut rng);
+    let b = Tensor::randn(256, 64, 1.0, &mut rng);
+
+    let r = bench("qsim matmul 128x256x64 fp32", || {
+        black_box(a.matmul(&b));
+    });
+    throughput(&r, 128 * 256 * 64);
+
+    let r = bench("qsim fwd+bwd matmul-mse bf16", || {
+        let mut t = Tape::new(QPolicy::new(bf16_train::precision::BF16));
+        let av = t.input(a.clone());
+        let bv = t.param(b.clone());
+        let y = t.matmul(av, bv);
+        let tgt = t.input(Tensor::zeros(128, 64));
+        let l = t.mse_loss(y, tgt);
+        t.backward(l);
+        black_box(t.grad(bv).is_some());
+    });
+    throughput(&r, 2 * 128 * 256 * 64);
+
+    for mode in [Mode::Fp32, Mode::Standard16, Mode::Sr16, Mode::Kahan16] {
+        let cfg = DlrmConfig::default();
+        let mut tr = DlrmTrainer::new(cfg, mode);
+        tr.step(0.05); // warm the allocator
+        bench(&format!("dlrm train step {}", mode.name()), || {
+            black_box(tr.step(0.05));
+        });
+    }
+
+    // LSQ theory experiment throughput (Figure 2's inner loop)
+    use bf16_train::qsim::lsq::{self, LsqConfig, LsqData, Placement};
+    let cfg = LsqConfig { steps: 1000, n_samples: 256, ..LsqConfig::default() };
+    let data = LsqData::generate(&cfg);
+    bench("lsq 1000 sgd steps (weight-update rounding)", || {
+        black_box(lsq::run(&cfg, &data, Placement::WeightUpdate));
+    });
+}

@@ -1,0 +1,75 @@
+//! L3 micro-benches: the precision substrate's hot loops (rounding,
+//! Kahan accumulation, RNG).  These bound the rust-native simulator's
+//! optimizer throughput (EXPERIMENTS.md §Perf).
+
+use bf16_train::precision::{
+    kahan_add, round_nearest, round_stochastic, RoundMode, Rounder, BF16, E8M3, FP16,
+};
+use bf16_train::util::bench::{bench, black_box, throughput};
+use bf16_train::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7, 0);
+    let xs: Vec<f32> = (0..65_536).map(|_| rng.normal()).collect();
+    let bits: Vec<u32> = (0..65_536).map(|_| rng.next_u32()).collect();
+    let n = xs.len();
+
+    let r = bench("round_nearest/bf16 64k", || {
+        let mut acc = 0f32;
+        for &x in &xs {
+            acc += round_nearest(black_box(x), BF16);
+        }
+        black_box(acc);
+    });
+    throughput(&r, n);
+
+    for (name, fmt) in [("fp16", FP16), ("e8m3", E8M3)] {
+        let r = bench(&format!("round_nearest/{name} 64k"), || {
+            let mut acc = 0f32;
+            for &x in &xs {
+                acc += round_nearest(black_box(x), fmt);
+            }
+            black_box(acc);
+        });
+        throughput(&r, n);
+    }
+
+    let r = bench("round_stochastic/bf16 64k", || {
+        let mut acc = 0f32;
+        for (&x, &b) in xs.iter().zip(&bits) {
+            acc += round_stochastic(black_box(x), BF16, b);
+        }
+        black_box(acc);
+    });
+    throughput(&r, n);
+
+    let r = bench("rounder_slice/bf16-stochastic 64k", || {
+        let mut r = Rounder::new(BF16, RoundMode::Stochastic, 1);
+        let mut v = xs.clone();
+        r.round_slice(&mut v);
+        black_box(v);
+    });
+    throughput(&r, n);
+
+    let r = bench("kahan_add/bf16 64k", || {
+        let mut s = 0f32;
+        let mut c = 0f32;
+        for &x in &xs {
+            let (ns, nc) = kahan_add(s, c, black_box(x) * 1e-4, BF16);
+            s = ns;
+            c = nc;
+        }
+        black_box((s, c));
+    });
+    throughput(&r, n);
+
+    let r = bench("rng/xoshiro u32 64k", || {
+        let mut g = Rng::new(3, 0);
+        let mut acc = 0u32;
+        for _ in 0..n {
+            acc = acc.wrapping_add(g.next_u32());
+        }
+        black_box(acc);
+    });
+    throughput(&r, n);
+}

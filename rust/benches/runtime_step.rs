@@ -1,0 +1,46 @@
+//! PJRT runtime benches: raw train-step latency per application and
+//! precision mode — the end-to-end hot path the coordinator drives.
+//!
+//! Needs `make artifacts`; skips apps whose artifacts are missing.
+
+use bf16_train::config::RunConfig;
+use bf16_train::coordinator::Trainer;
+use bf16_train::runtime::{Engine, Manifest};
+use bf16_train::util::bench::bench;
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let manifest = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(_) => {
+            println!("SKIP runtime_step: no artifacts (run `make artifacts`)");
+            return;
+        }
+    };
+    let engine = Engine::cpu().expect("pjrt cpu");
+
+    for (app, mode) in [
+        ("lsq", "fp32"),
+        ("lsq", "sr16"),
+        ("lsq", "kahan16"),
+        ("dlrm-small", "fp32"),
+        ("dlrm-small", "sr16"),
+        ("cifar-cnn", "sr16"),
+        ("bert-cls", "sr16"),
+        ("lstm-seq", "sr16"),
+        ("gpt-tiny", "kahan16"),
+    ] {
+        let mut cfg = RunConfig::defaults_for(app);
+        cfg.mode = mode.to_string();
+        cfg.artifacts_dir = dir.to_string();
+        cfg.steps = u64::MAX; // schedule factor stays ~1
+        let Ok(mut tr) = Trainer::new(&engine, &manifest, cfg) else {
+            println!("SKIP {app}__{mode}: artifact missing");
+            continue;
+        };
+        tr.run_steps(3).unwrap(); // warmup
+        bench(&format!("pjrt step {app}__{mode}"), || {
+            tr.run_steps(1).unwrap();
+        });
+    }
+}

@@ -1,0 +1,245 @@
+//! Run configuration system: TOML files (`configs/*.toml`) + CLI overrides.
+//!
+//! A `RunConfig` fully determines one training run: the application, the
+//! precision mode/format (which select the AOT artifact), step budget,
+//! learning-rate schedule, seeds, and eval cadence.  Per-application
+//! defaults mirror the paper's Appendix C hyperparameters (scaled).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::util::tomlmini::TomlDoc;
+
+/// Learning-rate schedule kinds (the paper's Appendix C set).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Schedule {
+    /// Fixed learning rate (DLRM-Kaggle).
+    Constant,
+    /// Divide by 10 at given fractions of training (ResNets).
+    StepDecay { boundaries: Vec<f64>, factor: f64 },
+    /// Linear decay to zero, with a warmup fraction (BERTs, DLRM-Terabyte).
+    WarmupLinear { warmup_frac: f64 },
+}
+
+impl Schedule {
+    /// LR multiplier at `step` of `total`.
+    pub fn factor(&self, step: u64, total: u64) -> f64 {
+        let t = step as f64 / total.max(1) as f64;
+        match self {
+            Schedule::Constant => 1.0,
+            Schedule::StepDecay { boundaries, factor } => {
+                let crossed = boundaries.iter().filter(|&&b| t >= b).count();
+                factor.powi(crossed as i32)
+            }
+            Schedule::WarmupLinear { warmup_frac } => {
+                if *warmup_frac > 0.0 && t < *warmup_frac {
+                    t / warmup_frac
+                } else if *warmup_frac >= 1.0 {
+                    1.0
+                } else {
+                    ((1.0 - t) / (1.0 - warmup_frac)).max(0.0)
+                }
+            }
+        }
+    }
+
+    fn parse(kind: &str, warmup: f64, boundaries: &[f64]) -> Result<Schedule> {
+        Ok(match kind {
+            "constant" => Schedule::Constant,
+            "step" => Schedule::StepDecay {
+                boundaries: if boundaries.is_empty() {
+                    vec![0.45, 0.75]
+                } else {
+                    boundaries.to_vec()
+                },
+                factor: 0.1,
+            },
+            "warmup-linear" | "linear" => Schedule::WarmupLinear { warmup_frac: warmup },
+            other => bail!("unknown schedule kind {other:?}"),
+        })
+    }
+}
+
+/// Everything needed to launch one training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub app: String,
+    pub mode: String,
+    pub fmt: String,
+    pub steps: u64,
+    pub base_lr: f64,
+    pub schedule: Schedule,
+    pub seed: u64,
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    pub log_every: u64,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+}
+
+impl RunConfig {
+    /// Artifact name in the manifest.
+    pub fn artifact_name(&self) -> String {
+        if self.fmt == "bf16" {
+            format!("{}__{}", self.app, self.mode)
+        } else {
+            format!("{}__{}-{}", self.app, self.mode, self.fmt)
+        }
+    }
+
+    /// Per-application defaults (paper Appendix C, scaled to the synthetic
+    /// substrate; see DESIGN.md §4-5).
+    pub fn defaults_for(app: &str) -> RunConfig {
+        let (steps, lr, schedule) = match app {
+            "lsq" => (20_000, 0.01, Schedule::Constant),
+            // CNN step budgets are scaled for the single-core testbed
+            // (~0.14 s and ~0.7 s per step respectively; DESIGN.md §9).
+            // lr scaled down vs the paper's 0.1: our CNNs have no batch
+            // norm (paper's ResNets do), and bf16 compute at lr 0.1
+            // destabilises the un-normalised net.
+            "cifar-cnn" => (
+                600,
+                0.02,
+                Schedule::StepDecay { boundaries: vec![0.45, 0.75], factor: 0.1 },
+            ),
+            "imagenet-cnn" => (
+                150,
+                0.02,
+                Schedule::StepDecay { boundaries: vec![0.33, 0.66], factor: 0.1 },
+            ),
+            "dlrm-small" => (1_500, 0.1, Schedule::Constant),
+            "dlrm-large" => (
+                800,
+                0.5,
+                Schedule::WarmupLinear { warmup_frac: 0.05 },
+            ),
+            "bert-cls" => (1_200, 2e-3, Schedule::WarmupLinear { warmup_frac: 0.0 }),
+            "bert-lm" => (1_200, 1e-3, Schedule::WarmupLinear { warmup_frac: 0.08 }),
+            "lstm-seq" => (1_200, 3e-2, Schedule::Constant),
+            name if name.starts_with("gpt-") => {
+                (300, 1e-3, Schedule::WarmupLinear { warmup_frac: 0.05 })
+            }
+            _ => (1_000, 0.01, Schedule::Constant),
+        };
+        RunConfig {
+            app: app.to_string(),
+            mode: "fp32".to_string(),
+            fmt: "bf16".to_string(),
+            steps,
+            base_lr: lr,
+            schedule,
+            seed: 0,
+            eval_every: (steps / 10).max(1),
+            eval_batches: 8,
+            log_every: (steps / 200).max(1),
+            artifacts_dir: "artifacts".to_string(),
+            out_dir: "results".to_string(),
+        }
+    }
+
+    /// Load from a TOML file, starting from the app defaults.
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_toml_text(&text)
+    }
+
+    pub fn from_toml_text(text: &str) -> Result<RunConfig> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let app = doc
+            .get("app")
+            .and_then(|v| v.as_str())
+            .context("config must set `app`")?
+            .to_string();
+        let mut cfg = Self::defaults_for(&app);
+        cfg.mode = doc.str_or("mode", &cfg.mode).to_string();
+        cfg.fmt = doc.str_or("fmt", &cfg.fmt).to_string();
+        cfg.steps = doc.i64_or("train.steps", cfg.steps as i64) as u64;
+        cfg.base_lr = doc.f64_or("train.lr", cfg.base_lr);
+        cfg.seed = doc.i64_or("train.seed", cfg.seed as i64) as u64;
+        cfg.eval_every = doc.i64_or("eval.every", cfg.eval_every as i64) as u64;
+        cfg.eval_batches = doc.i64_or("eval.batches", cfg.eval_batches as i64) as u64;
+        cfg.log_every = doc.i64_or("train.log_every", cfg.log_every as i64) as u64;
+        cfg.artifacts_dir = doc.str_or("paths.artifacts", &cfg.artifacts_dir).to_string();
+        cfg.out_dir = doc.str_or("paths.out", &cfg.out_dir).to_string();
+        if let Some(kind) = doc.get("schedule.kind").and_then(|v| v.as_str()) {
+            let warmup = doc.f64_or("schedule.warmup_frac", 0.0);
+            let boundaries: Vec<f64> = doc
+                .get("schedule.boundaries")
+                .and_then(|v| match v {
+                    crate::util::tomlmini::TomlValue::Array(a) => {
+                        Some(a.iter().filter_map(|x| x.as_f64()).collect())
+                    }
+                    _ => None,
+                })
+                .unwrap_or_default();
+            cfg.schedule = Schedule::parse(kind, warmup, &boundaries)?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_shape() {
+        let c = Schedule::Constant;
+        assert_eq!(c.factor(500, 1000), 1.0);
+        let s = Schedule::StepDecay { boundaries: vec![0.5, 0.75], factor: 0.1 };
+        assert_eq!(s.factor(0, 1000), 1.0);
+        assert!((s.factor(500, 1000) - 0.1).abs() < 1e-12);
+        assert!((s.factor(900, 1000) - 0.01).abs() < 1e-12);
+        let w = Schedule::WarmupLinear { warmup_frac: 0.1 };
+        assert!(w.factor(50, 1000) < 1.0); // warming up
+        assert!((w.factor(100, 1000) - 1.0).abs() < 1e-9);
+        assert!(w.factor(999, 1000) < 0.01);
+    }
+
+    #[test]
+    fn schedule_is_monotone_after_warmup() {
+        let w = Schedule::WarmupLinear { warmup_frac: 0.08 };
+        let mut prev = f64::INFINITY;
+        for step in (80..1000).step_by(10) {
+            let f = w.factor(step, 1000);
+            assert!(f <= prev + 1e-12);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn toml_overrides_defaults() {
+        let cfg = RunConfig::from_toml_text(
+            r#"
+app = "dlrm-small"
+mode = "sr16"
+fmt = "e8m5"
+[train]
+steps = 50
+lr = 0.2
+seed = 3
+[schedule]
+kind = "warmup-linear"
+warmup_frac = 0.1
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.artifact_name(), "dlrm-small__sr16-e8m5");
+        assert_eq!(cfg.steps, 50);
+        assert_eq!(cfg.base_lr, 0.2);
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.schedule, Schedule::WarmupLinear { warmup_frac: 0.1 });
+    }
+
+    #[test]
+    fn bf16_artifact_name_has_no_suffix() {
+        let cfg = RunConfig::defaults_for("lsq");
+        assert_eq!(cfg.artifact_name(), "lsq__fp32");
+    }
+
+    #[test]
+    fn missing_app_is_error() {
+        assert!(RunConfig::from_toml_text("mode = \"fp32\"").is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! L3 coordinator: the training loop, run configs, checkpointing, and the
+//! experiment harness that regenerates every paper table and figure.
+
+pub mod experiments;
+mod trainer;
+
+pub use experiments::{run_experiment, ExpOptions, ALL_EXPERIMENTS, TABLE4_APPS};
+pub use trainer::{RunSummary, Trainer};

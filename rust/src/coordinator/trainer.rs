@@ -1,0 +1,222 @@
+//! The training coordinator: binds an artifact, a data pipeline and a
+//! schedule into a run; logs history; evaluates; checkpoints.
+//!
+//! Python never runs here — the train step is a compiled PJRT executable
+//! and batches come from the rust synthetic data pipeline.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::data::{self, Split};
+use crate::metrics::{auc, History, HistoryPoint};
+use crate::runtime::{BatchData, Engine, Manifest, TrainSession};
+
+/// Final summary of one run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub app: String,
+    pub mode: String,
+    pub fmt: String,
+    pub seed: u64,
+    pub steps: u64,
+    /// paper-convention validation metric (Acc% / AUC% / PPL / WER)
+    pub val_metric: f64,
+    pub metric_name: String,
+    pub final_train_loss: f64,
+    pub mean_cancel_frac: f64,
+    pub history: History,
+    pub wallclock_s: f64,
+}
+
+/// A live run: owns the session + generators.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub cfg: RunConfig,
+    session: TrainSession,
+    train_data: Box<dyn data::Dataset>,
+    valid_data: Box<dyn data::Dataset>,
+    pub history: History,
+    cancel_acc: f64,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, manifest: &Manifest, cfg: RunConfig) -> Result<Self> {
+        let name = cfg.artifact_name();
+        let mut session = TrainSession::new(engine, manifest, &name)?;
+        session.init(engine, cfg.seed as i32)?;
+        let artifact = session.artifact.clone();
+        let train_data = data::for_artifact(&artifact, cfg.seed, Split::Train)?;
+        let valid_data = data::for_artifact(&artifact, cfg.seed, Split::Valid)?;
+        Ok(Self {
+            engine,
+            cfg,
+            session,
+            train_data,
+            valid_data,
+            history: History::default(),
+            cancel_acc: 0.0,
+        })
+    }
+
+    pub fn artifact_metric_name(&self) -> &str {
+        &self.session.artifact.metric_name
+    }
+
+    /// Run `n` steps (continuing from the current step counter).
+    pub fn run_steps(&mut self, n: u64) -> Result<()> {
+        let total = self.cfg.steps;
+        for _ in 0..n {
+            let step = self.session.steps_done;
+            let lr = (self.cfg.base_lr * self.cfg.schedule.factor(step, total)) as f32;
+            let (x, y) = self.train_data.next_batch();
+            // per-step RNG seed: decorrelates SR dither across steps/seeds
+            let seed = (self.cfg.seed as i32)
+                .wrapping_mul(1_000_003)
+                .wrapping_add(step as i32);
+            let stats = self.session.step(self.engine, &x, &y, seed, lr)?;
+            if !stats.loss.is_finite() {
+                bail!(
+                    "loss diverged to {} at step {step} ({})",
+                    stats.loss,
+                    self.cfg.artifact_name()
+                );
+            }
+            self.cancel_acc += stats.cancel_frac as f64;
+            if step % self.cfg.log_every == 0 {
+                self.history.push(HistoryPoint {
+                    step,
+                    loss: stats.loss,
+                    metric: stats.metric,
+                    cancel_frac: stats.cancel_frac,
+                    lr,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate on `n` validation batches; returns (loss, paper metric).
+    ///
+    /// Metric conventions follow the paper's Table 4: Acc% for classifiers,
+    /// AUC% for DLRM, PPL = exp(loss) for LMs, WER ≈ 100·(1-acc) for speech.
+    pub fn evaluate(&mut self, n: u64) -> Result<(f64, f64)> {
+        let mut loss_acc = 0f64;
+        let mut metric_acc = 0f64;
+        let mut scored: Vec<(f32, bool)> = Vec::new();
+        for _ in 0..n {
+            let (x, y) = self.valid_data.next_batch();
+            let ev = self.session.eval(self.engine, &x, &y)?;
+            loss_acc += ev.loss as f64;
+            metric_acc += ev.metric as f64;
+            if self.session.artifact.metric_name == "auc" {
+                if let BatchData::F32(labels) = &y {
+                    for (p, &l) in ev.preds.iter().zip(labels) {
+                        scored.push((*p, l > 0.5));
+                    }
+                }
+            }
+        }
+        let mean_loss = loss_acc / n as f64;
+        let mean_metric = metric_acc / n as f64;
+        let paper_metric = match self.session.artifact.metric_name.as_str() {
+            "auc" => auc(&scored) as f64 * 100.0,
+            "ppl" => mean_loss.exp(),
+            "wer" => 100.0 * (1.0 - mean_metric),
+            _ => mean_metric * 100.0, // accuracy-like
+        };
+        Ok((mean_loss, paper_metric))
+    }
+
+    /// Full run: train with periodic eval, return the summary.
+    pub fn run(&mut self) -> Result<RunSummary> {
+        let t0 = std::time::Instant::now();
+        let mut remaining = self.cfg.steps;
+        while remaining > 0 {
+            let chunk = remaining.min(self.cfg.eval_every);
+            self.run_steps(chunk)?;
+            remaining -= chunk;
+        }
+        let (_, val_metric) = self.evaluate(self.cfg.eval_batches)?;
+        Ok(RunSummary {
+            app: self.cfg.app.clone(),
+            mode: self.cfg.mode.clone(),
+            fmt: self.cfg.fmt.clone(),
+            seed: self.cfg.seed,
+            steps: self.cfg.steps,
+            val_metric,
+            metric_name: self.session.artifact.metric_name.clone(),
+            final_train_loss: self.history.tail_loss(5) as f64,
+            mean_cancel_frac: self.cancel_acc / self.cfg.steps.max(1) as f64,
+            history: std::mem::take(&mut self.history),
+            wallclock_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    // -- checkpointing -------------------------------------------------------
+
+    /// Save all state tensors to a binary checkpoint.
+    ///
+    /// Format: magic, step counter, tensor count, then per tensor
+    /// `len:u64, f32-LE data`.  Layout order is the manifest state order.
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"BF16CKPT");
+        buf.extend_from_slice(&self.session.steps_done.to_le_bytes());
+        let n = self.session.state_len();
+        buf.extend_from_slice(&(n as u64).to_le_bytes());
+        for i in 0..n {
+            let vals = self.session.state_host(i)?;
+            buf.extend_from_slice(&(vals.len() as u64).to_le_bytes());
+            for v in vals {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(path.as_ref(), buf)
+            .with_context(|| format!("writing checkpoint {:?}", path.as_ref()))?;
+        Ok(())
+    }
+
+    /// Restore state tensors from a checkpoint written by `save_checkpoint`.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let buf = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading checkpoint {:?}", path.as_ref()))?;
+        if buf.len() < 24 || &buf[..8] != b"BF16CKPT" {
+            bail!("not a bf16-train checkpoint");
+        }
+        let mut off = 8;
+        let rd_u64 = |buf: &[u8], off: &mut usize| {
+            let v = u64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
+            *off += 8;
+            v
+        };
+        let steps = rd_u64(&buf, &mut off);
+        let n = rd_u64(&buf, &mut off) as usize;
+        if n != self.session.state_len() {
+            bail!("checkpoint has {n} tensors, artifact needs {}", self.session.state_len());
+        }
+        for i in 0..n {
+            let len = rd_u64(&buf, &mut off) as usize;
+            if off + len * 4 > buf.len() {
+                bail!("truncated checkpoint");
+            }
+            let mut vals = Vec::with_capacity(len);
+            for k in 0..len {
+                vals.push(f32::from_le_bytes(
+                    buf[off + k * 4..off + k * 4 + 4].try_into().unwrap(),
+                ));
+            }
+            off += len * 4;
+            self.session.set_state(i, &vals)?;
+        }
+        self.session.steps_done = steps;
+        // Reposition the training stream: generators are sequential, so a
+        // resumed run must consume the same prefix the original run did to
+        // replay the remaining batches exactly.
+        for _ in 0..steps {
+            let _ = self.train_data.next_batch();
+        }
+        Ok(())
+    }
+}

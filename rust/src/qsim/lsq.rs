@@ -1,0 +1,321 @@
+//! The paper's Section-3.1 theory experiment: least-squares regression with
+//! selectively-placed rounding (Figure 2) and the Theorem-1 halting radius.
+//!
+//! Setup (paper, "Theory Validation"): 10-dimensional least squares; inputs
+//! x ~ N(0, I); true weights w* ~ U[0, 100); labels y = x·w* + N(0, 0.5²);
+//! SGD with batch size 1, lr 0.01.  Four rounding placements:
+//!
+//!   * `Exact`          — no rounding anywhere (the fp32 curve),
+//!   * `WeightUpdate`   — nearest rounding ONLY on the weight-update
+//!                        subtraction (the provably-halting case, Thm 1),
+//!   * `ForwardBackward`— nearest rounding only on activations/gradients
+//!                        (the benign case, Thm 2),
+//!   * `Everywhere`     — both (the standard 16-bit-FPU algorithm).
+//!
+//! Plus `WeightUpdateSr` / `WeightUpdateKahan` for the Section-3.2 fixes.
+
+use crate::precision::{round_nearest, round_stochastic, Format};
+use crate::util::rng::Rng;
+
+/// Where rounding is applied in the SGD loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    Exact,
+    WeightUpdate,
+    ForwardBackward,
+    Everywhere,
+    WeightUpdateSr,
+    WeightUpdateKahan,
+}
+
+impl Placement {
+    pub const ALL: [Placement; 6] = [
+        Placement::Exact,
+        Placement::WeightUpdate,
+        Placement::ForwardBackward,
+        Placement::Everywhere,
+        Placement::WeightUpdateSr,
+        Placement::WeightUpdateKahan,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::Exact => "exact",
+            Placement::WeightUpdate => "weight-update",
+            Placement::ForwardBackward => "fwd-bwd",
+            Placement::Everywhere => "everywhere",
+            Placement::WeightUpdateSr => "weight-update-sr",
+            Placement::WeightUpdateKahan => "weight-update-kahan",
+        }
+    }
+
+    fn rounds_fwd_bwd(&self) -> bool {
+        matches!(self, Placement::ForwardBackward | Placement::Everywhere)
+    }
+
+    fn rounds_update(&self) -> bool {
+        !matches!(self, Placement::Exact | Placement::ForwardBackward)
+    }
+}
+
+/// Experiment configuration (defaults = the paper's).
+#[derive(Debug, Clone)]
+pub struct LsqConfig {
+    pub dim: usize,
+    pub n_samples: usize,
+    pub lr: f32,
+    pub steps: usize,
+    pub noise_std: f32,
+    pub w_star_hi: f32,
+    pub fmt: Format,
+    pub seed: u64,
+}
+
+impl Default for LsqConfig {
+    fn default() -> Self {
+        Self {
+            dim: 10,
+            n_samples: 1024,
+            lr: 0.01,
+            steps: 20_000,
+            noise_std: 0.5,
+            w_star_hi: 100.0,
+            fmt: crate::precision::BF16,
+            seed: 0,
+        }
+    }
+}
+
+/// Result series of one run.
+#[derive(Debug, Clone)]
+pub struct LsqRun {
+    pub placement: Placement,
+    /// training loss sampled every `sample_every` steps
+    pub losses: Vec<f32>,
+    pub sample_every: usize,
+    /// final ||w - w*||
+    pub final_dist: f32,
+    /// fraction of steps whose update was entirely cancelled
+    pub halt_frac: f32,
+}
+
+/// The synthetic least-squares dataset.
+pub struct LsqData {
+    pub xs: Vec<f32>, // n × d, row-major
+    pub ys: Vec<f32>,
+    pub w_star: Vec<f32>,
+    pub dim: usize,
+}
+
+impl LsqData {
+    pub fn generate(cfg: &LsqConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed, 0x15);
+        let w_star: Vec<f32> =
+            (0..cfg.dim).map(|_| rng.uniform_in(0.0, cfg.w_star_hi)).collect();
+        let mut xs = Vec::with_capacity(cfg.n_samples * cfg.dim);
+        let mut ys = Vec::with_capacity(cfg.n_samples);
+        for _ in 0..cfg.n_samples {
+            let mut dot = 0f32;
+            for &w in &w_star {
+                let x = rng.normal();
+                xs.push(x);
+                dot += x * w;
+            }
+            ys.push(dot + rng.normal() * cfg.noise_std);
+        }
+        Self { xs, ys, w_star, dim: cfg.dim }
+    }
+
+    fn sample(&self, i: usize) -> (&[f32], f32) {
+        (&self.xs[i * self.dim..(i + 1) * self.dim], self.ys[i])
+    }
+
+    /// Mean squared loss of `w` over the dataset (exact arithmetic).
+    pub fn full_loss(&self, w: &[f32]) -> f32 {
+        let n = self.ys.len();
+        let mut acc = 0f64;
+        for i in 0..n {
+            let (x, y) = self.sample(i);
+            let r = x.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() - y;
+            acc += (r as f64) * (r as f64);
+        }
+        (acc / (2.0 * n as f64)) as f32
+    }
+}
+
+/// Run SGD with the given rounding placement.
+pub fn run(cfg: &LsqConfig, data: &LsqData, placement: Placement) -> LsqRun {
+    let fmt = cfg.fmt;
+    let rf = |x: f32| {
+        if placement.rounds_fwd_bwd() {
+            round_nearest(x, fmt)
+        } else {
+            x
+        }
+    };
+    let mut rng = Rng::new(cfg.seed, 0x51D);
+    let mut w = vec![0f32; cfg.dim];
+    let mut kahan = vec![0f32; cfg.dim];
+    let sample_every = (cfg.steps / 200).max(1);
+    let mut losses = Vec::new();
+    let mut halted_steps = 0usize;
+    let n = data.ys.len();
+    for t in 0..cfg.steps {
+        let (x, y) = data.sample(rng.below(n));
+        // forward: activation a = Q(x·w - y) (dot product in the FMAC's
+        // wide accumulator — no intra-dot rounding, paper §3.1)
+        let mut dot = 0f32;
+        for (xi, wi) in x.iter().zip(&w) {
+            dot += xi * wi;
+        }
+        let a = rf(dot - y);
+        // backward: activation grad Q(a), weight grad Q(g_a * x_j)
+        let ga = rf(a);
+        let mut any_moved = false;
+        let mut any_update = false;
+        for j in 0..cfg.dim {
+            let gj = rf(ga * x[j]);
+            let u = cfg.lr * gj; // update magnitude (exact scalar mult;
+                                 // rounding of the subtraction output is
+                                 // what Theorem 1 is about)
+            let wj = w[j];
+            let new = if placement.rounds_update() {
+                match placement {
+                    Placement::WeightUpdateSr => {
+                        round_stochastic(wj - u, fmt, rng.next_u32())
+                    }
+                    Placement::WeightUpdateKahan => {
+                        let yv = round_nearest(-u - kahan[j], fmt);
+                        let s = round_nearest(wj + yv, fmt);
+                        kahan[j] =
+                            round_nearest(round_nearest(s - wj, fmt) - yv, fmt);
+                        s
+                    }
+                    _ => round_nearest(wj - u, fmt),
+                }
+            } else {
+                wj - u
+            };
+            if u != 0.0 {
+                any_update = true;
+                if new != wj {
+                    any_moved = true;
+                }
+            }
+            w[j] = new;
+        }
+        if any_update && !any_moved {
+            halted_steps += 1;
+        }
+        if t % sample_every == 0 {
+            losses.push(data.full_loss(&w));
+        }
+    }
+    let final_dist = w
+        .iter()
+        .zip(&data.w_star)
+        .map(|(a, b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt() as f32;
+    LsqRun {
+        placement,
+        losses,
+        sample_every,
+        final_dist,
+        halt_frac: halted_steps as f32 / cfg.steps as f32,
+    }
+}
+
+/// Theorem 1's halting radius:  eps/(alpha L + eps) * min_j |w*_j|.
+///
+/// For least squares with batch size 1, L = max_i ||x_i||².
+pub fn halting_radius(cfg: &LsqConfig, data: &LsqData) -> f32 {
+    let eps = cfg.fmt.machine_eps() as f32;
+    let n = data.ys.len();
+    let mut l_max = 0f32;
+    for i in 0..n {
+        let (x, _) = data.sample(i);
+        let norm2 = x.iter().map(|v| v * v).sum::<f32>();
+        l_max = l_max.max(norm2);
+    }
+    let min_w = data.w_star.iter().fold(f32::INFINITY, |m, &v| m.min(v.abs()));
+    eps / (cfg.lr * l_max + eps) * min_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> LsqConfig {
+        LsqConfig { steps: 4000, n_samples: 256, ..LsqConfig::default() }
+    }
+
+    #[test]
+    fn exact_converges_weight_update_halts() {
+        let cfg = small_cfg();
+        let data = LsqData::generate(&cfg);
+        let exact = run(&cfg, &data, Placement::Exact);
+        let halted = run(&cfg, &data, Placement::WeightUpdate);
+        // Figure 2's shape: weight-update rounding saturates orders of
+        // magnitude above exact training.
+        let e = *exact.losses.last().unwrap();
+        let h = *halted.losses.last().unwrap();
+        assert!(h > 10.0 * e.max(1e-6), "exact={e} halted={h}");
+        assert!(halted.halt_frac > 0.2, "halt_frac={}", halted.halt_frac);
+    }
+
+    #[test]
+    fn fwd_bwd_rounding_is_benign() {
+        let cfg = small_cfg();
+        let data = LsqData::generate(&cfg);
+        let exact = run(&cfg, &data, Placement::Exact);
+        let fb = run(&cfg, &data, Placement::ForwardBackward);
+        let halted = run(&cfg, &data, Placement::WeightUpdate);
+        let e = *exact.losses.last().unwrap();
+        let f = *fb.losses.last().unwrap();
+        let h = *halted.losses.last().unwrap();
+        // fwd/bwd rounding lands within a small factor of exact, far below
+        // the weight-update-rounded plateau (Thm 2 vs Thm 1).
+        assert!(f < h / 3.0, "fb={f} halted={h}");
+        assert!(f < 100.0 * e.max(1e-6), "fb={f} exact={e}");
+    }
+
+    #[test]
+    fn sr_and_kahan_restore_convergence() {
+        let cfg = small_cfg();
+        let data = LsqData::generate(&cfg);
+        let halted = run(&cfg, &data, Placement::WeightUpdate);
+        let sr = run(&cfg, &data, Placement::WeightUpdateSr);
+        let kahan = run(&cfg, &data, Placement::WeightUpdateKahan);
+        let h = *halted.losses.last().unwrap();
+        assert!(*sr.losses.last().unwrap() < h / 2.0);
+        assert!(*kahan.losses.last().unwrap() < h / 2.0);
+    }
+
+    #[test]
+    fn final_distance_respects_thm1_lower_bound_region() {
+        let cfg = small_cfg();
+        let data = LsqData::generate(&cfg);
+        let halted = run(&cfg, &data, Placement::WeightUpdate);
+        let radius = halting_radius(&cfg, &data);
+        // the iterate cannot end *inside* a shrunk version of the ball;
+        // allow slack for the (1 - αL) factor in the theorem.
+        assert!(
+            halted.final_dist >= radius * 0.1,
+            "dist={} radius={radius}",
+            halted.final_dist
+        );
+    }
+
+    #[test]
+    fn dataset_is_deterministic() {
+        let cfg = small_cfg();
+        let a = LsqData::generate(&cfg);
+        let b = LsqData::generate(&cfg);
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.w_star, b.w_star);
+    }
+}

@@ -1,0 +1,19 @@
+//! Quantised-training simulator — the rust-native analogue of QPyTorch.
+//!
+//! A small dense tensor library + reverse-mode autograd where **every
+//! operator accumulates in fp32 and rounds its output** onto a configured
+//! format, plus optimizers implementing the paper's weight-update policies.
+//! Powers the theory experiments (Figure 2 / Theorem 1), the per-layer
+//! cancellation telemetry (Figure 9), the sub-16-bit sweeps (Figure 10) and
+//! the native criterion benches; the seven deep-learning applications run
+//! through the PJRT runtime instead.
+
+pub mod dlrm;
+pub mod lsq;
+pub mod optim;
+pub mod tape;
+pub mod tensor;
+
+pub use optim::{Mode, Sgd, SgdState, UpdateStats};
+pub use tape::{QPolicy, Tape, Var};
+pub use tensor::Tensor;

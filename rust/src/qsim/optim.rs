@@ -1,0 +1,262 @@
+//! Rust-native optimizer with the paper's weight-update policies
+//! (mirror of `python/compile/optim.py` over `qsim` tensors).
+//!
+//! Used by the native theory experiments (Figure 2, Theorem 1, Figure 9/10
+//! fast paths) and by the property-test suite; the PJRT path runs the same
+//! algorithms inside lowered HLO instead.
+
+use crate::precision::{round_nearest, round_stochastic, Format, BF16};
+use crate::util::rng::Rng;
+
+use super::tensor::Tensor;
+
+/// Full precision policy for one training run (mirror of PrecisionMode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Fp32,
+    Standard16,
+    Mixed16,
+    Sr16,
+    Kahan16,
+    SrKahan16,
+}
+
+impl Mode {
+    pub const ALL: [Mode; 6] = [
+        Mode::Fp32,
+        Mode::Standard16,
+        Mode::Mixed16,
+        Mode::Sr16,
+        Mode::Kahan16,
+        Mode::SrKahan16,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Fp32 => "fp32",
+            Mode::Standard16 => "standard16",
+            Mode::Mixed16 => "mixed16",
+            Mode::Sr16 => "sr16",
+            Mode::Kahan16 => "kahan16",
+            Mode::SrKahan16 => "srkahan16",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Mode> {
+        Mode::ALL.into_iter().find(|m| m.name() == name)
+    }
+
+    pub fn exact_update(&self) -> bool {
+        matches!(self, Mode::Fp32 | Mode::Mixed16)
+    }
+
+    pub fn stochastic(&self) -> bool {
+        matches!(self, Mode::Sr16 | Mode::SrKahan16)
+    }
+
+    pub fn kahan(&self) -> bool {
+        matches!(self, Mode::Kahan16 | Mode::SrKahan16)
+    }
+
+    /// Format for forward/backward compute under this mode.
+    pub fn compute_fmt(&self, fmt: Format) -> Format {
+        match self {
+            Mode::Fp32 => crate::precision::FP32,
+            _ => fmt,
+        }
+    }
+}
+
+/// Per-step statistics (Figure 9's cancellation telemetry).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct UpdateStats {
+    /// Non-zero updates cancelled by rounding.
+    pub cancelled: u64,
+    /// Non-zero updates total.
+    pub nonzero: u64,
+}
+
+impl UpdateStats {
+    pub fn frac(&self) -> f64 {
+        if self.nonzero == 0 {
+            0.0
+        } else {
+            self.cancelled as f64 / self.nonzero as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: UpdateStats) {
+        self.cancelled += other.cancelled;
+        self.nonzero += other.nonzero;
+    }
+}
+
+/// SGD(-momentum) optimizer state for one parameter tensor.
+#[derive(Debug, Clone)]
+pub struct SgdState {
+    pub momentum: Option<Tensor>,
+    pub kahan: Option<Tensor>,
+}
+
+/// SGD with the paper's weight-update policies.
+#[derive(Debug)]
+pub struct Sgd {
+    pub mode: Mode,
+    pub fmt: Format,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    rng: Rng,
+}
+
+impl Sgd {
+    pub fn new(mode: Mode, fmt: Format, momentum: f32, weight_decay: f32, seed: u64) -> Self {
+        Self { mode, fmt, momentum, weight_decay, rng: Rng::new(seed, 0x0907) }
+    }
+
+    pub fn bf16(mode: Mode, momentum: f32, weight_decay: f32, seed: u64) -> Self {
+        Self::new(mode, BF16, momentum, weight_decay, seed)
+    }
+
+    pub fn init_state(&self, w: &Tensor) -> SgdState {
+        SgdState {
+            momentum: (self.momentum != 0.0).then(|| Tensor::zeros(w.rows, w.cols)),
+            kahan: self.mode.kahan().then(|| Tensor::zeros(w.rows, w.cols)),
+        }
+    }
+
+    /// One update of `w` from gradient `g`.  All optimizer-internal ops are
+    /// nearest-rounded in the 16-bit modes (Algorithms 2 & 3).
+    pub fn step(
+        &mut self,
+        w: &mut Tensor,
+        state: &mut SgdState,
+        g: &Tensor,
+        lr: f32,
+    ) -> UpdateStats {
+        let exact = self.mode.exact_update();
+        let fmt = self.fmt;
+        let r = |x: f32| if exact { x } else { round_nearest(x, fmt) };
+        let mut stats = UpdateStats::default();
+        for i in 0..w.data.len() {
+            let mut gi = g.data[i];
+            if self.weight_decay != 0.0 {
+                gi = r(gi + r(self.weight_decay * w.data[i]));
+            }
+            let m = if let Some(mom) = &mut state.momentum {
+                let m_new = r(r(self.momentum * mom.data[i]) + gi);
+                mom.data[i] = m_new;
+                m_new
+            } else {
+                gi
+            };
+            let u = r(lr * m);
+            let wi = w.data[i];
+            let w_new = if self.mode.kahan() {
+                // srkahan16 (Fig 11): the accumulate output is SR'd
+                let c = state.kahan.as_mut().unwrap();
+                let y = r(-u - c.data[i]);
+                let s = if self.mode.stochastic() {
+                    round_stochastic(wi + y, fmt, self.rng.next_u32())
+                } else {
+                    r(wi + y)
+                };
+                c.data[i] = r(r(s - wi) - y);
+                s
+            } else if exact {
+                wi - u
+            } else if self.mode.stochastic() {
+                round_stochastic(wi - u, fmt, self.rng.next_u32())
+            } else {
+                r(wi - u)
+            };
+            if u != 0.0 {
+                stats.nonzero += 1;
+                if w_new == wi {
+                    stats.cancelled += 1;
+                }
+            }
+            w.data[i] = w_new;
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(mode: Mode, grad: f32, lr: f32, steps: usize) -> (f32, f64) {
+        let mut opt = Sgd::bf16(mode, 0.0, 0.0, 1);
+        let mut w = Tensor::scalar(1.0);
+        let mut st = opt.init_state(&w);
+        let g = Tensor::scalar(grad);
+        let mut total = UpdateStats::default();
+        for _ in 0..steps {
+            total.merge(opt.step(&mut w, &mut st, &g, lr));
+        }
+        (w.item(), total.frac())
+    }
+
+    #[test]
+    fn nearest_halts_small_updates() {
+        let (w, frac) = run(Mode::Standard16, 2f32.powi(-11), 1.0, 50);
+        assert_eq!(w, 1.0);
+        assert_eq!(frac, 1.0);
+    }
+
+    #[test]
+    fn kahan_lands_small_updates() {
+        let (w, _) = run(Mode::Kahan16, 2f32.powi(-11), 1.0, 64);
+        let exact = 1.0 - 64.0 * 2f32.powi(-11);
+        assert!((w - exact).abs() <= 2f32.powi(-8), "{w}");
+    }
+
+    #[test]
+    fn sr_progresses_in_expectation() {
+        let mut acc = 0f64;
+        let n = 50;
+        for seed in 0..n {
+            let mut opt = Sgd::bf16(Mode::Sr16, 0.0, 0.0, seed);
+            let mut w = Tensor::scalar(1.0);
+            let mut st = opt.init_state(&w);
+            let g = Tensor::scalar(2f32.powi(-11));
+            for _ in 0..64 {
+                opt.step(&mut w, &mut st, &g, 1.0);
+            }
+            acc += w.item() as f64;
+        }
+        let mean = acc / n as f64;
+        let target = 1.0 - 64.0 * 2f64.powi(-11);
+        assert!((mean - target).abs() < 0.01, "{mean} vs {target}");
+    }
+
+    #[test]
+    fn exact_modes_track_exact_descent() {
+        for mode in [Mode::Fp32, Mode::Mixed16] {
+            let (w, frac) = run(mode, 2f32.powi(-11), 1.0, 10);
+            assert!((w - (1.0 - 10.0 * 2f32.powi(-11))).abs() < 1e-6);
+            assert_eq!(frac, 0.0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let mut opt = Sgd::bf16(Mode::Fp32, 0.9, 0.0, 1);
+        let mut w = Tensor::scalar(1.0);
+        let mut st = opt.init_state(&w);
+        let g = Tensor::scalar(0.01);
+        for _ in 0..10 {
+            opt.step(&mut w, &mut st, &g, 0.1);
+        }
+        // with momentum the total displacement exceeds 10 * lr * g
+        assert!(1.0 - w.item() > 10.0 * 0.1 * 0.01);
+    }
+
+    #[test]
+    fn mode_round_trip_by_name() {
+        for m in Mode::ALL {
+            assert_eq!(Mode::by_name(m.name()), Some(m));
+        }
+        assert_eq!(Mode::by_name("bogus"), None);
+    }
+}

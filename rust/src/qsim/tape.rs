@@ -1,0 +1,486 @@
+//! Reverse-mode autograd with per-operator output rounding.
+//!
+//! This is the rust-native equivalent of the paper's QPyTorch simulator
+//! (and of our L2 `qops.py`): every forward operator accumulates in fp32
+//! and rounds its output onto the compute format; every backward cotangent
+//! is rounded at each operator boundary.  The quantisation *policy* is
+//! per-graph, so the theory experiments can independently toggle rounding
+//! for forward/backward compute versus weight updates (Figure 2).
+
+use crate::precision::{round_nearest, Format, FP32};
+
+use super::tensor::Tensor;
+
+/// Rounding policy for forward/backward compute.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QPolicy {
+    pub fmt: Format,
+}
+
+impl QPolicy {
+    pub fn exact() -> Self {
+        Self { fmt: FP32 }
+    }
+
+    pub fn new(fmt: Format) -> Self {
+        Self { fmt }
+    }
+
+    #[inline]
+    fn q(&self, t: Tensor) -> Tensor {
+        if self.fmt.is_fp32() {
+            return t;
+        }
+        let mut t = t;
+        for x in &mut t.data {
+            *x = round_nearest(*x, self.fmt);
+        }
+        t
+    }
+}
+
+/// Index of a node in the tape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Var(pub usize);
+
+enum Op {
+    /// Leaf (input or parameter).
+    Leaf,
+    MatMul(Var, Var),
+    Add(Var, Var),
+    Sub(Var, Var),
+    Mul(Var, Var),
+    Relu(Var),
+    Sigmoid(Var),
+    Tanh(Var),
+    /// Row gather: out[r] = table[idx[r]].
+    Embed { table: Var, idx: Vec<usize> },
+    /// Mean over all elements -> scalar.
+    MeanAll(Var),
+    /// 0.5 * mean(d^2) fused loss over a difference node -> scalar.
+    MseLoss(Var),
+    /// BCE-with-logits fused loss vs labels tensor -> scalar.
+    BceLoss { logits: Var, labels: Tensor },
+    /// Broadcast a (1, n) bias over rows of a (m, n) input.
+    AddRow(Var, Var),
+    /// Column-wise concatenation of same-row-count tensors (memory op).
+    ConcatCols(Vec<Var>),
+}
+
+struct Node {
+    op: Op,
+    value: Tensor,
+    grad: Option<Tensor>,
+}
+
+/// The autograd tape: build forward ops, then `backward` from a scalar.
+pub struct Tape {
+    nodes: Vec<Node>,
+    pub policy: QPolicy,
+}
+
+impl Tape {
+    pub fn new(policy: QPolicy) -> Self {
+        Self { nodes: Vec::new(), policy }
+    }
+
+    fn push(&mut self, op: Op, value: Tensor) -> Var {
+        self.nodes.push(Node { op, value, grad: None });
+        Var(self.nodes.len() - 1)
+    }
+
+    /// Register an input (no gradient collected).
+    pub fn input(&mut self, t: Tensor) -> Var {
+        self.push(Op::Leaf, t)
+    }
+
+    /// Register a parameter (gradient collected).  The value is used as
+    /// stored — callers keep parameters in-format themselves.
+    pub fn param(&mut self, t: Tensor) -> Var {
+        self.push(Op::Leaf, t)
+    }
+
+    pub fn value(&self, v: Var) -> &Tensor {
+        &self.nodes[v.0].value
+    }
+
+    pub fn grad(&self, v: Var) -> Option<&Tensor> {
+        self.nodes[v.0].grad.as_ref()
+    }
+
+    // -- forward ops (each rounds its output once) -------------------------
+
+    pub fn matmul(&mut self, a: Var, b: Var) -> Var {
+        let out = self.policy.q(self.nodes[a.0].value.matmul(&self.nodes[b.0].value));
+        self.push(Op::MatMul(a, b), out)
+    }
+
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        let out = self
+            .policy
+            .q(self.nodes[a.0].value.zip(&self.nodes[b.0].value, |x, y| x + y));
+        self.push(Op::Add(a, b), out)
+    }
+
+    /// Broadcast-add a (1, n) bias to an (m, n) activation.
+    pub fn add_row(&mut self, a: Var, bias: Var) -> Var {
+        let av = &self.nodes[a.0].value;
+        let bv = &self.nodes[bias.0].value;
+        assert_eq!(bv.rows, 1);
+        assert_eq!(bv.cols, av.cols);
+        let mut out = av.clone();
+        for r in 0..out.rows {
+            for c in 0..out.cols {
+                *out.at_mut(r, c) += bv.at(0, c);
+            }
+        }
+        let out = self.policy.q(out);
+        self.push(Op::AddRow(a, bias), out)
+    }
+
+    pub fn sub(&mut self, a: Var, b: Var) -> Var {
+        let out = self
+            .policy
+            .q(self.nodes[a.0].value.zip(&self.nodes[b.0].value, |x, y| x - y));
+        self.push(Op::Sub(a, b), out)
+    }
+
+    pub fn mul(&mut self, a: Var, b: Var) -> Var {
+        let out = self
+            .policy
+            .q(self.nodes[a.0].value.zip(&self.nodes[b.0].value, |x, y| x * y));
+        self.push(Op::Mul(a, b), out)
+    }
+
+    pub fn relu(&mut self, a: Var) -> Var {
+        let out = self.policy.q(self.nodes[a.0].value.map(|x| x.max(0.0)));
+        self.push(Op::Relu(a), out)
+    }
+
+    pub fn sigmoid(&mut self, a: Var) -> Var {
+        let out = self.policy.q(self.nodes[a.0].value.map(|x| 1.0 / (1.0 + (-x).exp())));
+        self.push(Op::Sigmoid(a), out)
+    }
+
+    pub fn tanh(&mut self, a: Var) -> Var {
+        let out = self.policy.q(self.nodes[a.0].value.map(f32::tanh));
+        self.push(Op::Tanh(a), out)
+    }
+
+    /// Embedding lookup: rows of `table` selected by `idx`.
+    pub fn embed(&mut self, table: Var, idx: Vec<usize>) -> Var {
+        let tv = &self.nodes[table.0].value;
+        let mut out = Tensor::zeros(idx.len(), tv.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            let row = &tv.data[i * tv.cols..(i + 1) * tv.cols];
+            out.data[r * tv.cols..(r + 1) * tv.cols].copy_from_slice(row);
+        }
+        // gather is a memory op: values already in-format, no rounding
+        self.push(Op::Embed { table, idx }, out)
+    }
+
+    /// Column-wise concat (a memory op: values pass through unrounded).
+    pub fn concat_cols(&mut self, parts: Vec<Var>) -> Var {
+        assert!(!parts.is_empty());
+        let rows = self.nodes[parts[0].0].value.rows;
+        let total: usize = parts.iter().map(|v| self.nodes[v.0].value.cols).collect::<Vec<_>>().iter().sum();
+        let mut out = Tensor::zeros(rows, total);
+        let mut off = 0;
+        for &p in &parts {
+            let pv = &self.nodes[p.0].value;
+            assert_eq!(pv.rows, rows, "concat row mismatch");
+            for r in 0..rows {
+                out.data[r * total + off..r * total + off + pv.cols]
+                    .copy_from_slice(&pv.data[r * pv.cols..(r + 1) * pv.cols]);
+            }
+            off += pv.cols;
+        }
+        self.push(Op::ConcatCols(parts), out)
+    }
+
+    pub fn mean_all(&mut self, a: Var) -> Var {
+        let v = &self.nodes[a.0].value;
+        let m = v.data.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        let out = self.policy.q(Tensor::scalar(m as f32));
+        self.push(Op::MeanAll(a), out)
+    }
+
+    /// Fused 0.5·mean((a-b)²) — one output rounding, like qops.mse_loss.
+    pub fn mse_loss(&mut self, a: Var, b: Var) -> Var {
+        let d = self.sub(a, b);
+        let dv = &self.nodes[d.0].value;
+        let m = dv.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+            / dv.len() as f64;
+        let out = self.policy.q(Tensor::scalar(0.5 * m as f32));
+        self.push(Op::MseLoss(d), out)
+    }
+
+    /// Fused BCE-with-logits against constant labels.
+    pub fn bce_loss(&mut self, logits: Var, labels: Tensor) -> Var {
+        let lv = &self.nodes[logits.0].value;
+        assert_eq!(lv.len(), labels.len());
+        let mut acc = 0f64;
+        for (&z, &y) in lv.data.iter().zip(&labels.data) {
+            // -(y log σ(z) + (1-y) log σ(-z)) = max(z,0) - zy + log(1+e^-|z|)
+            let l = z.max(0.0) - z * y + (1.0 + (-z.abs()).exp()).ln();
+            acc += l as f64;
+        }
+        let out = self.policy.q(Tensor::scalar((acc / lv.len() as f64) as f32));
+        self.push(Op::BceLoss { logits, labels }, out)
+    }
+
+    // -- backward -----------------------------------------------------------
+
+    fn accumulate(&mut self, v: Var, g: Tensor) {
+        // Cotangents are rounded at every operator boundary (same rule as
+        // qops._qcast_bwd); accumulation of fan-in happens in fp32 then is
+        // rounded once.
+        let g = self.policy.q(g);
+        match &mut self.nodes[v.0].grad {
+            Some(existing) => {
+                let summed = existing.zip(&g, |a, b| a + b);
+                *existing = self.policy.q(summed);
+            }
+            None => self.nodes[v.0].grad = Some(g),
+        }
+    }
+
+    /// Run reverse-mode from scalar `root` (seed gradient 1.0).
+    pub fn backward(&mut self, root: Var) {
+        assert_eq!(self.nodes[root.0].value.len(), 1, "backward from non-scalar");
+        self.nodes[root.0].grad = Some(Tensor::scalar(1.0));
+        for i in (0..=root.0).rev() {
+            let Some(g) = self.nodes[i].grad.clone() else { continue };
+            // Split borrows: read values, then push grads.
+            match &self.nodes[i].op {
+                Op::Leaf => {}
+                Op::MatMul(a, b) => {
+                    let (a, b) = (*a, *b);
+                    let av = self.nodes[a.0].value.clone();
+                    let bv = self.nodes[b.0].value.clone();
+                    let da = g.matmul(&bv.transpose());
+                    let db = av.transpose().matmul(&g);
+                    self.accumulate(a, da);
+                    self.accumulate(b, db);
+                }
+                Op::Add(a, b) => {
+                    let (a, b) = (*a, *b);
+                    self.accumulate(a, g.clone());
+                    self.accumulate(b, g);
+                }
+                Op::AddRow(a, bias) => {
+                    let (a, bias) = (*a, *bias);
+                    let mut db = Tensor::zeros(1, g.cols);
+                    for r in 0..g.rows {
+                        for c in 0..g.cols {
+                            *db.at_mut(0, c) += g.at(r, c);
+                        }
+                    }
+                    self.accumulate(a, g);
+                    self.accumulate(bias, db);
+                }
+                Op::Sub(a, b) => {
+                    let (a, b) = (*a, *b);
+                    self.accumulate(a, g.clone());
+                    self.accumulate(b, g.map(|x| -x));
+                }
+                Op::Mul(a, b) => {
+                    let (a, b) = (*a, *b);
+                    let av = self.nodes[a.0].value.clone();
+                    let bv = self.nodes[b.0].value.clone();
+                    self.accumulate(a, g.zip(&bv, |gg, y| gg * y));
+                    self.accumulate(b, g.zip(&av, |gg, x| gg * x));
+                }
+                Op::Relu(a) => {
+                    let a = *a;
+                    let av = self.nodes[a.0].value.clone();
+                    self.accumulate(a, g.zip(&av, |gg, x| if x > 0.0 { gg } else { 0.0 }));
+                }
+                Op::Sigmoid(a) => {
+                    let a = *a;
+                    let yv = self.nodes[i].value.clone();
+                    self.accumulate(a, g.zip(&yv, |gg, y| gg * y * (1.0 - y)));
+                }
+                Op::Tanh(a) => {
+                    let a = *a;
+                    let yv = self.nodes[i].value.clone();
+                    self.accumulate(a, g.zip(&yv, |gg, y| gg * (1.0 - y * y)));
+                }
+                Op::Embed { table, idx } => {
+                    let table = *table;
+                    let idx = idx.clone();
+                    let tv = &self.nodes[table.0].value;
+                    let mut dt = Tensor::zeros(tv.rows, tv.cols);
+                    for (r, &row_i) in idx.iter().enumerate() {
+                        for c in 0..g.cols {
+                            *dt.at_mut(row_i, c) += g.at(r, c);
+                        }
+                    }
+                    self.accumulate(table, dt);
+                }
+                Op::MeanAll(a) => {
+                    let a = *a;
+                    let n = self.nodes[a.0].value.len() as f32;
+                    let seed = g.item() / n;
+                    let av = &self.nodes[a.0].value;
+                    let da = Tensor {
+                        rows: av.rows,
+                        cols: av.cols,
+                        data: vec![seed; av.len()],
+                    };
+                    self.accumulate(a, da);
+                }
+                Op::MseLoss(d) => {
+                    let d = *d;
+                    let dv = self.nodes[d.0].value.clone();
+                    let n = dv.len() as f32;
+                    let seed = g.item();
+                    self.accumulate(d, dv.map(|x| seed * x / n));
+                }
+                Op::ConcatCols(parts) => {
+                    let parts = parts.clone();
+                    let mut off = 0;
+                    for p in parts {
+                        let pv_cols = self.nodes[p.0].value.cols;
+                        let pv_rows = self.nodes[p.0].value.rows;
+                        let mut dp = Tensor::zeros(pv_rows, pv_cols);
+                        for r in 0..pv_rows {
+                            dp.data[r * pv_cols..(r + 1) * pv_cols].copy_from_slice(
+                                &g.data[r * g.cols + off..r * g.cols + off + pv_cols],
+                            );
+                        }
+                        self.accumulate(p, dp);
+                        off += pv_cols;
+                    }
+                }
+                Op::BceLoss { logits, labels } => {
+                    let logits = *logits;
+                    let labels = labels.clone();
+                    let lv = self.nodes[logits.0].value.clone();
+                    let n = lv.len() as f32;
+                    let seed = g.item();
+                    let dl = lv.zip(&labels, |z, y| {
+                        let p = 1.0 / (1.0 + (-z).exp());
+                        seed * (p - y) / n
+                    });
+                    self.accumulate(logits, dl);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::BF16;
+
+    fn fd_check(f: impl Fn(&[f32]) -> f32, xs: &[f32], analytic: &[f32], tol: f32) {
+        let h = 1e-3f32;
+        for i in 0..xs.len() {
+            let mut up = xs.to_vec();
+            up[i] += h;
+            let mut dn = xs.to_vec();
+            dn[i] -= h;
+            let fd = (f(&up) - f(&dn)) / (2.0 * h);
+            assert!(
+                (fd - analytic[i]).abs() <= tol * (1.0 + fd.abs()),
+                "grad[{i}] analytic={} fd={fd}",
+                analytic[i]
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_grad_matches_finite_difference() {
+        let xs = vec![0.3f32, -0.7, 1.2, 0.5, -0.2, 0.9];
+        let f = |w: &[f32]| {
+            let mut t = Tape::new(QPolicy::exact());
+            let a = t.input(Tensor::from_vec(2, 3, vec![1.0, 2.0, -1.0, 0.5, 0.1, 0.3]));
+            let wv = t.param(Tensor::from_vec(3, 2, w.to_vec()));
+            let y = t.matmul(a, wv);
+            let s = t.sigmoid(y);
+            let target = t.input(Tensor::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]));
+            let l = t.mse_loss(s, target);
+            t.value(l).item()
+        };
+        let mut t = Tape::new(QPolicy::exact());
+        let a = t.input(Tensor::from_vec(2, 3, vec![1.0, 2.0, -1.0, 0.5, 0.1, 0.3]));
+        let wv = t.param(Tensor::from_vec(3, 2, xs.clone()));
+        let y = t.matmul(a, wv);
+        let s = t.sigmoid(y);
+        let target = t.input(Tensor::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]));
+        let l = t.mse_loss(s, target);
+        t.backward(l);
+        let g = t.grad(wv).unwrap().data.clone();
+        fd_check(f, &xs, &g, 2e-2);
+    }
+
+    #[test]
+    fn bce_grad_matches_finite_difference() {
+        let xs = vec![0.2f32, -0.4, 0.8];
+        let labels = Tensor::vector(vec![1.0, 0.0, 1.0]);
+        let f = |z: &[f32]| {
+            let mut t = Tape::new(QPolicy::exact());
+            let zv = t.param(Tensor::vector(z.to_vec()));
+            let l = t.bce_loss(zv, Tensor::vector(vec![1.0, 0.0, 1.0]));
+            t.value(l).item()
+        };
+        let mut t = Tape::new(QPolicy::exact());
+        let zv = t.param(Tensor::vector(xs.clone()));
+        let l = t.bce_loss(zv, labels);
+        t.backward(l);
+        let g = t.grad(zv).unwrap().data.clone();
+        fd_check(f, &xs, &g, 1e-2);
+    }
+
+    #[test]
+    fn embed_grad_scatters_rows() {
+        let mut t = Tape::new(QPolicy::exact());
+        let table = t.param(Tensor::from_vec(4, 2, (0..8).map(|i| i as f32).collect()));
+        let e = t.embed(table, vec![1, 1, 3]);
+        let m = t.mean_all(e);
+        t.backward(m);
+        let g = t.grad(table).unwrap();
+        // 6 elements in `e`; each contributes 1/6
+        assert_eq!(g.at(1, 0), 2.0 / 6.0);
+        assert_eq!(g.at(3, 1), 1.0 / 6.0);
+        assert_eq!(g.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn quantised_forward_outputs_in_format() {
+        let mut t = Tape::new(QPolicy::new(BF16));
+        let a = t.input(Tensor::vector(vec![1.0001, 2.3456, -0.0001234]));
+        let b = t.input(Tensor::vector(vec![1.0, 1.0, 1.0]));
+        let s = t.add(a, b);
+        for &x in &t.value(s).data {
+            assert_eq!(x, crate::precision::round_nearest(x, BF16));
+        }
+    }
+
+    #[test]
+    fn relu_tanh_add_row_backward() {
+        let xs = vec![0.5f32, -0.3];
+        let f = |b: &[f32]| {
+            let mut t = Tape::new(QPolicy::exact());
+            let a = t.input(Tensor::from_vec(2, 2, vec![1.0, -1.0, 0.5, 2.0]));
+            let bias = t.param(Tensor::vector(b.to_vec()));
+            let h = t.add_row(a, bias);
+            let r = t.relu(h);
+            let th = t.tanh(r);
+            let m = t.mean_all(th);
+            t.value(m).item()
+        };
+        let mut t = Tape::new(QPolicy::exact());
+        let a = t.input(Tensor::from_vec(2, 2, vec![1.0, -1.0, 0.5, 2.0]));
+        let bias = t.param(Tensor::vector(xs.clone()));
+        let h = t.add_row(a, bias);
+        let r = t.relu(h);
+        let th = t.tanh(r);
+        let m = t.mean_all(th);
+        t.backward(m);
+        let g = t.grad(bias).unwrap().data.clone();
+        fd_check(f, &xs, &g, 2e-2);
+    }
+}

@@ -1,0 +1,169 @@
+//! Dense f32 tensor (rank ≤ 2) for the quantised-autograd simulator.
+//!
+//! Deliberately minimal: the simulator exists to reproduce the paper's
+//! numerical behaviour (per-operator output rounding with fp32 FMAC
+//! accumulation), not to be a general array library.  Row-major storage.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major tensor, rank 1 or 2 (a rank-1 tensor has rows == 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn vector(data: Vec<f32>) -> Self {
+        Self { rows: 1, cols: data.len(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { rows: 1, cols: 1, data: vec![v] }
+    }
+
+    /// Standard-normal init scaled by `scale`.
+    pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal() * scale).collect();
+        Self { rows, cols, data }
+    }
+
+    /// Uniform init in [lo, hi).
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.uniform_in(lo, hi)).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.len(), 1, "item() on non-scalar");
+        self.data[0]
+    }
+
+    /// `self @ other` with f32 FMAC accumulation.
+    ///
+    /// The paper's 16-bit FMAC unit multiplies 16-bit operands and
+    /// accumulates in 32 bits; operands here are 16-bit *values* stored in
+    /// f32, so plain f32 accumulation models the unit exactly.  The caller
+    /// rounds the output (one rounding per operator).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Tensor::zeros(m, n);
+        // i-k-j loop order: streams `other` rows, vectorizes over j.
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for (acc, &b) in orow.iter_mut().zip(brow) {
+                    *acc += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Element-wise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Element-wise binary op (shapes must match).
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        Tensor {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::new(5, 0);
+        let a = Tensor::randn(3, 4, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Tensor::zeros(2, 3);
+        let b = Tensor::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn zip_and_map() {
+        let a = Tensor::vector(vec![1.0, -2.0]);
+        let b = Tensor::vector(vec![0.5, 0.5]);
+        assert_eq!(a.zip(&b, |x, y| x * y).data, vec![0.5, -1.0]);
+        assert_eq!(a.map(f32::abs).data, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,89 @@
+//! PJRT execution engine: loads AOT-compiled HLO text and runs it.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin).  One [`Engine`] owns the
+//! PJRT client and a cache of compiled executables keyed by file path, so a
+//! coordinator sweeping many precision modes compiles each artifact once.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// Process-wide PJRT client + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text file (cached).
+    pub fn compile_file(
+        &self,
+        path: impl AsRef<Path>,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(exe) = self.cache.lock().unwrap().get(&path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path:?}"))?,
+        );
+        self.cache.lock().unwrap().insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with literal inputs; returns the flattened output literals.
+    ///
+    /// AOT lowering uses `return_tuple=True`, so the executable produces one
+    /// tuple; this unpacks it into the manifest's output order.
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = args.iter().collect();
+        self.run_refs(exe, &refs)
+    }
+
+    /// Execute with borrowed literal inputs (no state copies on the hot path).
+    pub fn run_refs(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<&xla::Literal>(args).context("pjrt execute")?;
+        let mut first = out
+            .into_iter()
+            .next()
+            .context("no output device")?
+            .into_iter()
+            .next()
+            .context("no output buffer")?
+            .to_literal_sync()
+            .context("output to literal")?;
+        // Output is a single tuple literal; decompose into elements.
+        if first.shape().map(|s| s.is_tuple()).unwrap_or(false) {
+            Ok(first.decompose_tuple()?)
+        } else {
+            Ok(vec![first])
+        }
+    }
+}

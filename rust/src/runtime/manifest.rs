@@ -1,0 +1,299 @@
+//! Typed view of `artifacts/manifest.json` produced by `python -m compile.aot`.
+//!
+//! The manifest is the only contract between the build-time python layer and
+//! the runtime rust layer: it records, per artifact, the exact ordered list
+//! of executable inputs/outputs with their roles, shapes and dtypes, plus the
+//! application/precision metadata the coordinator uses to label runs.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Role of one executable input/output slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Param,
+    OptState,
+    X,
+    Y,
+    Seed,
+    Lr,
+    Loss,
+    Metric,
+    CancelFrac,
+    Preds,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "param" => Role::Param,
+            "opt_state" => Role::OptState,
+            "x" => Role::X,
+            "y" => Role::Y,
+            "seed" => Role::Seed,
+            "lr" => Role::Lr,
+            "loss" => Role::Loss,
+            "metric" => Role::Metric,
+            "cancel_frac" => Role::CancelFrac,
+            "preds" => Role::Preds,
+            other => bail!("unknown slot role {other:?}"),
+        })
+    }
+}
+
+/// Element type of one slot (all emulated formats travel as F32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+/// One ordered input/output slot of an executable.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub role: Role,
+    pub key: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl Slot {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Slot> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("slot missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Slot {
+            role: Role::parse(j.get_str("role").context("slot missing role")?)?,
+            key: j.get_str("key").unwrap_or("").to_string(),
+            shape,
+            dtype: DType::parse(j.get_str("dtype").context("slot missing dtype")?)?,
+        })
+    }
+}
+
+/// File names of the three executables of one artifact.
+#[derive(Debug, Clone)]
+pub struct Files {
+    pub train: String,
+    pub eval: String,
+    pub init: String,
+}
+
+/// One (application × precision-mode) artifact entry.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub app: String,
+    pub mode: String,
+    pub fmt: String,
+    pub family: String,
+    pub optimizer: String,
+    pub metric_name: String,
+    pub paper_ref: String,
+    pub batch: usize,
+    pub hparams: HashMap<String, i64>,
+    pub train_inputs: Vec<Slot>,
+    pub train_outputs: Vec<Slot>,
+    pub eval_inputs: Vec<Slot>,
+    pub eval_outputs: Vec<Slot>,
+    pub num_params: usize,
+    pub num_opt_state: usize,
+    pub param_elements: usize,
+    pub files: Files,
+}
+
+fn slots(j: &Json, key: &str) -> Result<Vec<Slot>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("artifact missing {key}"))?
+        .iter()
+        .map(Slot::from_json)
+        .collect()
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get_str(key).with_context(|| format!("artifact missing {key}"))?.to_string())
+}
+
+impl Artifact {
+    fn from_json(j: &Json) -> Result<Artifact> {
+        let files = j.get("files").context("artifact missing files")?;
+        let mut hparams = HashMap::new();
+        if let Some(hp) = j.get("hparams").and_then(Json::as_obj) {
+            for (k, v) in hp {
+                if let Some(i) = v.as_i64() {
+                    hparams.insert(k.clone(), i);
+                }
+            }
+        }
+        Ok(Artifact {
+            name: req_str(j, "name")?,
+            app: req_str(j, "app")?,
+            mode: req_str(j, "mode")?,
+            fmt: req_str(j, "fmt")?,
+            family: req_str(j, "family")?,
+            optimizer: req_str(j, "optimizer")?,
+            metric_name: req_str(j, "metric_name")?,
+            paper_ref: j.get_str("paper_ref").unwrap_or("").to_string(),
+            batch: j.get_usize("batch").context("artifact missing batch")?,
+            hparams,
+            train_inputs: slots(j, "train_inputs")?,
+            train_outputs: slots(j, "train_outputs")?,
+            eval_inputs: slots(j, "eval_inputs")?,
+            eval_outputs: slots(j, "eval_outputs")?,
+            num_params: j.get_usize("num_params").context("missing num_params")?,
+            num_opt_state: j.get_usize("num_opt_state").context("missing num_opt_state")?,
+            param_elements: j.get_usize("param_elements").unwrap_or(0),
+            files: Files {
+                train: req_str(files, "train")?,
+                eval: req_str(files, "eval")?,
+                init: req_str(files, "init")?,
+            },
+        })
+    }
+
+    /// Shape/dtype of the `x` batch input.
+    pub fn x_slot(&self) -> &Slot {
+        self.train_inputs
+            .iter()
+            .find(|s| s.role == Role::X)
+            .expect("manifest artifact lacks x slot")
+    }
+
+    /// Shape/dtype of the `y` batch input.
+    pub fn y_slot(&self) -> &Slot {
+        self.train_inputs
+            .iter()
+            .find(|s| s.role == Role::Y)
+            .expect("manifest artifact lacks y slot")
+    }
+
+    /// Integer hparam (0 if missing).
+    pub fn hparam(&self, key: &str) -> i64 {
+        self.hparams.get(key).copied().unwrap_or(0)
+    }
+}
+
+/// The whole manifest plus its directory (for resolving file names).
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+    index: HashMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::from_json_text(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn from_json_text(text: &str, dir: PathBuf) -> Result<Self> {
+        let doc = Json::parse(text).context("parsing manifest.json")?;
+        let artifacts = doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts")?
+            .iter()
+            .map(Artifact::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let index = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+        Ok(Self { dir, artifacts, index })
+    }
+
+    /// Look up an artifact by name (`app__mode` or `app__mode-fmt`).
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.index.get(name).map(|&i| &self.artifacts[i]).with_context(|| {
+            let names: Vec<_> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+            format!("artifact {name:?} not in manifest; have: {names:?}")
+        })
+    }
+
+    /// All artifacts of one application.
+    pub fn for_app(&self, app: &str) -> Vec<&Artifact> {
+        self.artifacts.iter().filter(|a| a.app == app).collect()
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [{
+        "name": "lsq__sr16", "app": "lsq", "mode": "sr16", "fmt": "bf16",
+        "family": "mlp", "optimizer": "sgd", "metric_name": "loss",
+        "paper_ref": "", "batch": 1, "hparams": {"in_dim": 10},
+        "train_inputs": [
+          {"role":"param","key":"l0.b","shape":[1],"dtype":"f32"},
+          {"role":"param","key":"l0.w","shape":[10,1],"dtype":"f32"},
+          {"role":"x","key":"","shape":[1,10],"dtype":"f32"},
+          {"role":"y","key":"","shape":[1],"dtype":"f32"},
+          {"role":"seed","key":"","shape":[],"dtype":"i32"},
+          {"role":"lr","key":"","shape":[],"dtype":"f32"}],
+        "train_outputs": [
+          {"role":"param","key":"l0.b","shape":[1],"dtype":"f32"},
+          {"role":"param","key":"l0.w","shape":[10,1],"dtype":"f32"},
+          {"role":"loss","key":"","shape":[],"dtype":"f32"},
+          {"role":"metric","key":"","shape":[],"dtype":"f32"},
+          {"role":"cancel_frac","key":"","shape":[],"dtype":"f32"}],
+        "eval_inputs": [], "eval_outputs": [],
+        "num_params": 2, "num_opt_state": 0, "param_elements": 11,
+        "files": {"train":"a","eval":"b","init":"c"}
+      }]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json_text(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let a = m.get("lsq__sr16").unwrap();
+        assert_eq!(a.train_inputs.len(), 6);
+        assert_eq!(a.x_slot().shape, vec![1, 10]);
+        assert_eq!(a.y_slot().dtype, DType::F32);
+        assert_eq!(a.train_inputs[4].role, Role::Seed);
+        assert_eq!(a.hparam("in_dim"), 10);
+        assert_eq!(a.train_inputs[1].elements(), 10);
+        assert_eq!(m.for_app("lsq").len(), 1);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn scalar_slot_has_one_element() {
+        let s = Slot { role: Role::Lr, key: String::new(), shape: vec![], dtype: DType::F32 };
+        assert_eq!(s.elements(), 1);
+    }
+}

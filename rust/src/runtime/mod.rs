@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT engine + artifact manifest + training sessions.
+//!
+//! Loads the HLO-text artifacts produced by `python -m compile.aot` (the only
+//! place python runs) and executes them from the rust request path.
+
+mod engine;
+mod manifest;
+mod session;
+
+pub use engine::Engine;
+pub use manifest::{Artifact, DType, Files, Manifest, Role, Slot};
+pub use session::{BatchData, EvalStats, StepStats, TrainSession};

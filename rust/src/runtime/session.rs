@@ -1,0 +1,218 @@
+//! Training session: owns the model/optimizer state for one artifact and
+//! drives its train/eval/init executables.
+//!
+//! State (parameters, optimizer moments, Kahan buffers) stays in the order
+//! fixed by the manifest; the session shuttles it through the train step and
+//! never interprets it — the numeric format lives inside the lowered graph.
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::Engine;
+use super::manifest::{Artifact, DType, Manifest, Role, Slot};
+
+/// One host-side batch matching the artifact's x/y slots.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl BatchData {
+    pub fn len(&self) -> usize {
+        match self {
+            BatchData::F32(v) => v.len(),
+            BatchData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn to_literal(&self, slot: &Slot) -> Result<xla::Literal> {
+        let dims: Vec<i64> = slot.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (self, slot.dtype) {
+            (BatchData::F32(v), DType::F32) => xla::Literal::vec1(v),
+            (BatchData::I32(v), DType::I32) => xla::Literal::vec1(v),
+            _ => bail!(
+                "batch dtype mismatch for slot role {:?} (want {:?})",
+                slot.role,
+                slot.dtype
+            ),
+        };
+        if lit.element_count() != slot.elements() {
+            bail!(
+                "batch size mismatch: got {} elements, slot {:?} wants {}",
+                lit.element_count(),
+                slot.role,
+                slot.elements()
+            );
+        }
+        Ok(if dims.is_empty() { lit } else { lit.reshape(&dims)? })
+    }
+}
+
+/// Scalar results of one training step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepStats {
+    pub loss: f32,
+    pub metric: f32,
+    /// Fraction of non-zero weight updates cancelled by rounding (Fig 9).
+    pub cancel_frac: f32,
+}
+
+/// Results of one eval batch.
+#[derive(Debug, Clone)]
+pub struct EvalStats {
+    pub loss: f32,
+    pub metric: f32,
+    pub preds: Vec<f32>,
+}
+
+/// Live training state bound to one artifact's executables.
+pub struct TrainSession {
+    pub artifact: Artifact,
+    train_exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    eval_exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    init_exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    /// params + opt_state literals in manifest order.
+    state: Vec<xla::Literal>,
+    pub steps_done: u64,
+}
+
+impl TrainSession {
+    /// Compile (or fetch from cache) the artifact's executables.
+    pub fn new(engine: &Engine, manifest: &Manifest, name: &str) -> Result<Self> {
+        let artifact = manifest.get(name)?.clone();
+        let train_exe = engine.compile_file(manifest.path_of(&artifact.files.train))?;
+        let eval_exe = engine.compile_file(manifest.path_of(&artifact.files.eval))?;
+        let init_exe = engine.compile_file(manifest.path_of(&artifact.files.init))?;
+        Ok(Self { artifact, train_exe, eval_exe, init_exe, state: Vec::new(), steps_done: 0 })
+    }
+
+    /// Number of state tensors (params + optimizer state).
+    pub fn state_len(&self) -> usize {
+        self.artifact.num_params + self.artifact.num_opt_state
+    }
+
+    /// Initialize model + optimizer state from a seed (runs the init graph).
+    pub fn init(&mut self, engine: &Engine, seed: i32) -> Result<()> {
+        let out = engine.run(&self.init_exe, &[xla::Literal::scalar(seed)])?;
+        if out.len() != self.state_len() {
+            bail!(
+                "init produced {} tensors, manifest expects {}",
+                out.len(),
+                self.state_len()
+            );
+        }
+        self.state = out;
+        self.steps_done = 0;
+        Ok(())
+    }
+
+    /// Run one training step; state is replaced by the step outputs.
+    pub fn step(
+        &mut self,
+        engine: &Engine,
+        x: &BatchData,
+        y: &BatchData,
+        seed: i32,
+        lr: f32,
+    ) -> Result<StepStats> {
+        if self.state.is_empty() {
+            bail!("session not initialized (call init first)");
+        }
+        let a = &self.artifact;
+        let n = self.state_len();
+        // Bind by manifest slot roles: state tensors in order, then the
+        // batch/scalar inputs wherever the (possibly pruned) signature puts
+        // them.  Non-stochastic modes have no seed slot (see train_step.py).
+        let mut xl = None;
+        let mut yl = None;
+        let mut seedl = None;
+        let mut lrl = None;
+        for slot in &a.train_inputs {
+            match slot.role {
+                Role::X => xl = Some(x.to_literal(slot)?),
+                Role::Y => yl = Some(y.to_literal(slot)?),
+                Role::Seed => seedl = Some(xla::Literal::scalar(seed)),
+                Role::Lr => lrl = Some(xla::Literal::scalar(lr)),
+                _ => {}
+            }
+        }
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(a.train_inputs.len());
+        let mut state_it = self.state.iter();
+        for slot in &a.train_inputs {
+            args.push(match slot.role {
+                Role::Param | Role::OptState => {
+                    state_it.next().context("state tensor count mismatch")?
+                }
+                Role::X => xl.as_ref().unwrap(),
+                Role::Y => yl.as_ref().unwrap(),
+                Role::Seed => seedl.as_ref().unwrap(),
+                Role::Lr => lrl.as_ref().unwrap(),
+                other => bail!("unexpected train input role {other:?}"),
+            });
+        }
+        let mut out = engine.run_refs(&self.train_exe, &args)?;
+        let _ = n;
+        let expected = a.train_outputs.len();
+        if out.len() != expected {
+            bail!("train step produced {} outputs, expected {}", out.len(), expected);
+        }
+        let cancel_frac = scalar_f32(&out.pop().unwrap())?;
+        let metric = scalar_f32(&out.pop().unwrap())?;
+        let loss = scalar_f32(&out.pop().unwrap())?;
+        self.state = out;
+        self.steps_done += 1;
+        Ok(StepStats { loss, metric, cancel_frac })
+    }
+
+    /// Evaluate one batch with the current parameters.
+    pub fn eval(&self, engine: &Engine, x: &BatchData, y: &BatchData) -> Result<EvalStats> {
+        if self.state.is_empty() {
+            bail!("session not initialized (call init first)");
+        }
+        let a = &self.artifact;
+        let np = a.num_params;
+        let xl = x.to_literal(&a.eval_inputs[np])?;
+        let yl = y.to_literal(&a.eval_inputs[np + 1])?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(np + 2);
+        args.extend(self.state.iter().take(np));
+        args.extend([&xl, &yl]);
+        let out = engine.run_refs(&self.eval_exe, &args)?;
+        if out.len() != 3 {
+            bail!("eval produced {} outputs, expected 3", out.len());
+        }
+        Ok(EvalStats {
+            loss: scalar_f32(&out[0])?,
+            metric: scalar_f32(&out[1])?,
+            preds: out[2].to_vec::<f32>()?,
+        })
+    }
+
+    /// Copy one state tensor to host (by manifest slot index).
+    pub fn state_host(&self, idx: usize) -> Result<Vec<f32>> {
+        self.state
+            .get(idx)
+            .context("state index out of range")?
+            .to_vec::<f32>()
+            .map_err(Into::into)
+    }
+
+    /// Overwrite one state tensor from host values (e.g. checkpoint restore).
+    pub fn set_state(&mut self, idx: usize, values: &[f32]) -> Result<()> {
+        let slot = &self.artifact.train_inputs[idx];
+        if values.len() != slot.elements() {
+            bail!("set_state size mismatch");
+        }
+        let dims: Vec<i64> = slot.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(values);
+        self.state[idx] = if dims.is_empty() { lit } else { lit.reshape(&dims)? };
+        Ok(())
+    }
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}

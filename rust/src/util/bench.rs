@@ -1,0 +1,118 @@
+//! Criterion-style micro-benchmark harness (substrate; criterion itself is
+//! not available offline).  Median-of-samples timing with warmup, throughput
+//! reporting, and a `black_box` to defeat constant folding.
+
+use std::hint::black_box as bb;
+use std::time::Instant;
+
+/// Prevent the optimizer from eliding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let (val, unit) = humanize(self.median_ns);
+        format!(
+            "{:<44} {:>9.3} {}/iter  (min {:.3} {}, {} samples)",
+            self.name,
+            val,
+            unit,
+            humanize(self.min_ns).0,
+            humanize(self.min_ns).1,
+            self.samples
+        )
+    }
+}
+
+fn humanize(ns: f64) -> (f64, &'static str) {
+    if ns < 1_000.0 {
+        (ns, "ns")
+    } else if ns < 1_000_000.0 {
+        (ns / 1e3, "µs")
+    } else if ns < 1_000_000_000.0 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s")
+    }
+}
+
+/// Time `f` adaptively: targets ~0.5 s of total measurement, ≥10 samples.
+pub fn bench(name: &str, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibrate
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let per_sample = ((50_000_000.0 / once).ceil() as usize).clamp(1, 1_000_000);
+    // long-running benches (end-to-end experiment minis) get fewer samples
+    let samples = if once > 5e9 {
+        1
+    } else if once > 5e8 {
+        3
+    } else {
+        10
+    };
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..per_sample {
+            f();
+        }
+        times.push(t.elapsed().as_nanos() as f64 / per_sample as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        median_ns: median,
+        mean_ns: mean,
+        min_ns: times[0],
+        samples,
+    };
+    println!("{}", result.report());
+    result
+}
+
+/// Throughput helper: elements processed per iteration → Melem/s line.
+pub fn throughput(r: &BenchResult, elems_per_iter: usize) {
+    let meps = elems_per_iter as f64 / r.median_ns * 1e3;
+    println!(
+        "{:<44} {:>9.1} Melem/s",
+        format!("  ↳ {} throughput", r.name),
+        meps
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_numbers() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns);
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert_eq!(humanize(10.0).1, "ns");
+        assert_eq!(humanize(10_000.0).1, "µs");
+        assert_eq!(humanize(10_000_000.0).1, "ms");
+    }
+}

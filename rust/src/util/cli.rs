@@ -1,0 +1,148 @@
+//! Minimal CLI argument parser (substrate; no external deps available).
+//!
+//! Grammar: positional arguments interleaved with `--flag`, `--key value`
+//! and `--key=value` options.  Unknown flags are an error at `finish()`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (no program name).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare -- is not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional argument by index.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn opt(&mut self, key: &str, default: &str) -> String {
+        self.consumed.push(key.to_string());
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt_maybe(&mut self, key: &str) -> Option<String> {
+        self.consumed.push(key.to_string());
+        self.options.get(key).cloned()
+    }
+
+    /// Integer option with default.
+    pub fn opt_u64(&mut self, key: &str, default: u64) -> Result<u64> {
+        self.consumed.push(key.to_string());
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Float option with default.
+    pub fn opt_f64(&mut self, key: &str, default: f64) -> Result<f64> {
+        self.consumed.push(key.to_string());
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.consumed.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on any option/flag that was never consumed (typo guard).
+    pub fn finish(&self) -> Result<()> {
+        for k in self.options.keys() {
+            if !self.consumed.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.consumed.contains(f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_options_flags() {
+        let mut a = parse("train lsq --steps 100 --lr=0.5 --verbose");
+        assert_eq!(a.pos(0), Some("train"));
+        assert_eq!(a.pos(1), Some("lsq"));
+        assert_eq!(a.opt_u64("steps", 0).unwrap(), 100);
+        assert_eq!(a.opt_f64("lr", 0.0).unwrap(), 0.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = parse("x --known 1 --typo 2");
+        let _ = a.opt_u64("known", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let mut a = parse("--offset -5");
+        assert_eq!(a.opt("offset", ""), "-5");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let mut a = parse("--steps abc");
+        assert!(a.opt_u64("steps", 0).is_err());
+    }
+}

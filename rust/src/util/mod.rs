@@ -1,0 +1,11 @@
+//! Dependency-free substrates: JSON, TOML-subset config parsing, PRNG,
+//! CLI argument handling, table rendering, and the bench/property-test
+//! harnesses.  The build environment vendors only the `xla` crate closure,
+//! so everything else the framework needs is implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod tomlmini;

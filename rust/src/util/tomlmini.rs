@@ -1,0 +1,252 @@
+//! TOML-subset parser for run configs (dependency-free substrate).
+//!
+//! Supports the subset the config system uses: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! boolean / flat-array values, `#` comments, blank lines.  Keys are stored
+//! flat as `"section.sub.key"`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Flat key → value map (`section.key` dotted paths).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(err(ln, "unterminated section header"));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(err(ln, "empty section name"));
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(err(ln, "expected key = value"));
+            };
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(ln, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), ln)?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, value);
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(TomlValue::as_str).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(TomlValue::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(TomlValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(TomlValue::as_bool).unwrap_or(default)
+    }
+
+    /// All keys under a `section.` prefix.
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        let prefix = format!("{section}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+fn err(ln: usize, msg: &str) -> TomlError {
+    TomlError { line: ln + 1, message: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<TomlValue, TomlError> {
+    if s.is_empty() {
+        return Err(err(ln, "empty value"));
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let Some(end) = stripped.find('"') else {
+            return Err(err(ln, "unterminated string"));
+        };
+        if stripped[end + 1..].trim() != "" {
+            return Err(err(ln, "trailing content after string"));
+        }
+        return Ok(TomlValue::Str(stripped[..end].to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(err(ln, "unterminated array"));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part, ln)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(ln, &format!("cannot parse value {s:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = TomlDoc::parse(
+            r#"
+# run config
+name = "dlrm-sweep"   # inline comment
+[train]
+steps = 2000
+lr = 0.1
+modes = ["fp32", "sr16"]
+eval = true
+[train.schedule]
+kind = "step"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "dlrm-sweep");
+        assert_eq!(doc.i64_or("train.steps", 0), 2000);
+        assert_eq!(doc.f64_or("train.lr", 0.0), 0.1);
+        assert!(doc.bool_or("train.eval", false));
+        assert_eq!(doc.str_or("train.schedule.kind", ""), "step");
+        let modes = doc.get("train.modes").unwrap();
+        if let TomlValue::Array(a) = modes {
+            assert_eq!(a[1].as_str(), Some("sr16"));
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn integers_promote_to_float_lookup() {
+        let doc = TomlDoc::parse("lr = 1").unwrap();
+        assert_eq!(doc.f64_or("lr", 0.0), 1.0);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(TomlDoc::parse("x = \"unterminated").is_err());
+        assert!(TomlDoc::parse("[sec\nx = 1").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("s", ""), "a#b");
+    }
+}

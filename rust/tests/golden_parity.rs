@@ -1,0 +1,57 @@
+//! Bit-exact parity between the rust `precision` substrate and the python
+//! `formats` library, over the shared golden vectors emitted by `aot.py`.
+//!
+//! Skips (with a notice) when `artifacts/golden_formats.json` is absent —
+//! run `make artifacts` first.
+
+use bf16_train::precision::{round_nearest, round_stochastic, Format};
+use bf16_train::util::json::Json;
+
+fn load() -> Option<Json> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/golden_formats.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Json::parse(&text).expect("golden_formats.json must parse"))
+}
+
+fn u32s(j: &Json) -> Vec<u32> {
+    j.as_arr()
+        .expect("array")
+        .iter()
+        .map(|v| v.as_i64().expect("int") as u32)
+        .collect()
+}
+
+#[test]
+fn rust_rounding_matches_python_bit_for_bit() {
+    let Some(doc) = load() else {
+        eprintln!("SKIP: artifacts/golden_formats.json missing (run `make artifacts`)");
+        return;
+    };
+    let inputs: Vec<f32> = u32s(doc.get("inputs_bits").unwrap())
+        .into_iter()
+        .map(f32::from_bits)
+        .collect();
+    let formats = doc.get("formats").unwrap().as_obj().unwrap();
+    assert!(formats.len() >= 5, "expected all non-fp32 formats");
+    for (name, entry) in formats {
+        let fmt = Format::by_name(name).unwrap_or_else(|| panic!("unknown format {name}"));
+        let rbits = u32s(entry.get("rbits").unwrap());
+        let nearest: Vec<u32> = u32s(entry.get("nearest_bits").unwrap());
+        let stochastic: Vec<u32> = u32s(entry.get("stochastic_bits").unwrap());
+        for (i, &x) in inputs.iter().enumerate() {
+            let rn = round_nearest(x, fmt);
+            assert_eq!(
+                rn.to_bits(),
+                nearest[i],
+                "{name} nearest mismatch at {i}: x={x:e} ours={rn:e} theirs={:e}",
+                f32::from_bits(nearest[i])
+            );
+            let rs = round_stochastic(x, fmt, rbits[i]);
+            assert_eq!(
+                rs.to_bits(),
+                stochastic[i],
+                "{name} stochastic mismatch at {i}: x={x:e}",
+            );
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Property-based tests (hand-rolled: proptest is unavailable offline).
+//! Randomized invariants over the precision substrate, the quantised
+//! simulator, and the coordinator's pure components, with explicit seeds so
+//! failures reproduce.
+
+use bf16_train::config::Schedule;
+use bf16_train::precision::{
+    kahan_add, round_nearest, round_stochastic, Format, ALL, BF16,
+};
+use bf16_train::qsim::{QPolicy, Tape, Tensor};
+use bf16_train::util::rng::Rng;
+
+fn random_f32(rng: &mut Rng) -> f32 {
+    // wide dynamic range incl. negatives, zeros, tiny and huge magnitudes
+    let mag = 10f32.powi(rng.below(60) as i32 - 30);
+    let v = rng.normal() * mag;
+    if rng.below(50) == 0 {
+        0.0
+    } else {
+        v
+    }
+}
+
+#[test]
+fn prop_round_nearest_is_monotone() {
+    // x <= y  =>  Q(x) <= Q(y)  for every format
+    let mut rng = Rng::new(0xA1, 0);
+    for fmt in ALL {
+        for _ in 0..20_000 {
+            let a = random_f32(&mut rng);
+            let b = random_f32(&mut rng);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let ql = round_nearest(lo, fmt);
+            let qh = round_nearest(hi, fmt);
+            assert!(ql <= qh, "{} monotone violated: {lo} {hi} -> {ql} {qh}", fmt.name);
+        }
+    }
+}
+
+#[test]
+fn prop_round_nearest_sign_symmetric() {
+    // Q(-x) == -Q(x) (RNE is sign-symmetric)
+    let mut rng = Rng::new(0xA2, 0);
+    for fmt in ALL {
+        for _ in 0..20_000 {
+            let x = random_f32(&mut rng);
+            let a = round_nearest(-x, fmt);
+            let b = -round_nearest(x, fmt);
+            assert_eq!(a.to_bits(), b.to_bits(), "{}: x={x}", fmt.name);
+        }
+    }
+}
+
+#[test]
+fn prop_stochastic_brackets_value() {
+    // SR(x) is one of the two neighbours: |SR(x) - x| < ulp(x)
+    let mut rng = Rng::new(0xA3, 0);
+    for _ in 0..50_000 {
+        let x = rng.normal() * 10f32.powi(rng.below(16) as i32 - 8);
+        let q = round_stochastic(x, BF16, rng.next_u32());
+        let ulp = 2f32.powi(-7) * x.abs().max(f32::MIN_POSITIVE);
+        assert!((q - x).abs() <= ulp, "x={x} q={q}");
+    }
+}
+
+#[test]
+fn prop_stochastic_mean_near_exact() {
+    // empirical mean over dithers approaches x (unbiasedness)
+    let mut rng = Rng::new(0xA4, 0);
+    for _ in 0..20 {
+        let x = rng.uniform_in(0.5, 2.0);
+        let n = 20_000;
+        let mut acc = 0f64;
+        for _ in 0..n {
+            acc += round_stochastic(x, BF16, rng.next_u32()) as f64;
+        }
+        let mean = acc / n as f64;
+        let ulp = 2f64.powi(-8) * x as f64;
+        assert!((mean - x as f64).abs() < ulp * 0.15, "x={x} mean={mean}");
+    }
+}
+
+#[test]
+fn prop_kahan_beats_naive_accumulation() {
+    // random small-increment streams: compensated error <= naive error
+    let mut rng = Rng::new(0xA5, 0);
+    for trial in 0..50 {
+        let start = rng.uniform_in(0.5, 4.0);
+        let inc = 2f32.powi(-(rng.below(6) as i32) - 9);
+        let steps = 500 + rng.below(1500);
+        let mut naive = start;
+        let mut s = start;
+        let mut c = 0.0;
+        for _ in 0..steps {
+            naive = round_nearest(naive + inc, BF16);
+            let (ns, nc) = kahan_add(s, c, inc, BF16);
+            s = ns;
+            c = nc;
+        }
+        let exact = start as f64 + inc as f64 * steps as f64;
+        let e_naive = (naive as f64 - exact).abs();
+        let e_kahan = (s as f64 - exact).abs();
+        assert!(
+            e_kahan <= e_naive + 2f64.powi(-8) * exact.abs(),
+            "trial {trial}: kahan {e_kahan} vs naive {e_naive}"
+        );
+    }
+}
+
+#[test]
+fn prop_quantised_forward_error_bounded_per_op() {
+    // |quantised_fwd - exact_fwd| on a 2-layer MLP stays within a small
+    // multiple of eps times the value scale (no error explosion).
+    let mut rng = Rng::new(0xA6, 0);
+    for _ in 0..25 {
+        let x = Tensor::randn(4, 8, 1.0, &mut rng);
+        let w1 = Tensor::randn(8, 16, 0.35, &mut rng);
+        let w2 = Tensor::randn(16, 1, 0.25, &mut rng);
+        let run = |fmt: Option<Format>| -> f32 {
+            let mut t = match fmt {
+                None => Tape::new(QPolicy::exact()),
+                Some(f) => Tape::new(QPolicy::new(f)),
+            };
+            let xv = t.input(x.clone());
+            let w1v = t.param(w1.clone());
+            let w2v = t.param(w2.clone());
+            let h = t.matmul(xv, w1v);
+            let h = t.relu(h);
+            let o = t.matmul(h, w2v);
+            let m = t.mean_all(o);
+            t.value(m).item()
+        };
+        let exact = run(None);
+        let q = run(Some(BF16));
+        // ~4 rounding boundaries; allow a 32x eps budget on the magnitude
+        let tol = 32.0 * 2f32.powi(-8) * (exact.abs() + 1.0);
+        assert!((q - exact).abs() <= tol, "exact={exact} q={q}");
+    }
+}
+
+#[test]
+fn prop_schedule_factor_in_unit_interval() {
+    let mut rng = Rng::new(0xA7, 0);
+    for _ in 0..2000 {
+        let total = 1 + rng.below(100_000) as u64;
+        let step = rng.below(total as usize + 1) as u64;
+        for sched in [
+            Schedule::Constant,
+            Schedule::StepDecay { boundaries: vec![0.3, 0.6, 0.9], factor: 0.1 },
+            Schedule::WarmupLinear { warmup_frac: 0.08 },
+        ] {
+            let f = sched.factor(step, total);
+            assert!((0.0..=1.0 + 1e-9).contains(&f), "{sched:?} {step}/{total} -> {f}");
+        }
+    }
+}
+
+#[test]
+fn prop_data_generators_deterministic_across_instances() {
+    use bf16_train::data::{Ctr, Dataset, Images, Regression, SeqFrames, TokenCls, TokenLm};
+    for seed in [0u64, 7, 42] {
+        let pairs: Vec<(Box<dyn Dataset>, Box<dyn Dataset>)> = vec![
+            (
+                Box::new(Regression::new(10, 4, seed, 0)),
+                Box::new(Regression::new(10, 4, seed, 0)),
+            ),
+            (
+                Box::new(Images::new(16, 10, 4, seed, 0)),
+                Box::new(Images::new(16, 10, 4, seed, 0)),
+            ),
+            (
+                Box::new(Ctr::new(8, 4, 50, 16, seed, 0)),
+                Box::new(Ctr::new(8, 4, 50, 16, seed, 0)),
+            ),
+            (
+                Box::new(TokenCls::new(64, 8, 3, 8, seed, 0)),
+                Box::new(TokenCls::new(64, 8, 3, 8, seed, 0)),
+            ),
+            (
+                Box::new(TokenLm::new(64, 8, 4, seed, 0)),
+                Box::new(TokenLm::new(64, 8, 4, seed, 0)),
+            ),
+            (
+                Box::new(SeqFrames::new(8, 6, 4, 4, seed, 0)),
+                Box::new(SeqFrames::new(8, 6, 4, 4, seed, 0)),
+            ),
+        ];
+        for (mut a, mut b) in pairs {
+            for _ in 0..3 {
+                assert_eq!(a.next_batch(), b.next_batch(), "{}", a.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_auc_invariant_to_monotone_transform() {
+    let mut rng = Rng::new(0xA8, 0);
+    for _ in 0..50 {
+        let scored: Vec<(f32, bool)> = (0..200)
+            .map(|_| (rng.normal(), rng.uniform() < 0.4))
+            .collect();
+        let transformed: Vec<(f32, bool)> =
+            scored.iter().map(|&(s, y)| (s * 3.0 + 1.0, y)).collect();
+        let a = bf16_train::metrics::auc(&scored);
+        let b = bf16_train::metrics::auc(&transformed);
+        assert!((a - b).abs() < 1e-6);
+    }
+}

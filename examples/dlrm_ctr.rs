@@ -2,18 +2,19 @@
 //! every precision mode and format — the application where the paper's
 //! effect is most visible (embedding tables → tiny, cancellable updates).
 //!
+//! The whole (policy × seed) grid runs through the threaded `Sweep`, so the
+//! table fills in parallel across cores with deterministic per-cell seeds.
+//!
 //! ```bash
 //! cargo run --release --offline --example dlrm_ctr -- [--steps 800] [--seeds 2]
 //! ```
 
 use anyhow::Result;
 
-use bf16_train::config::RunConfig;
-use bf16_train::coordinator::Trainer;
 use bf16_train::metrics::mean_std;
-use bf16_train::runtime::{Engine, Manifest};
 use bf16_train::util::cli::Args;
 use bf16_train::util::table::{pm, Table};
+use bf16_train::{Policy, RunSpec, Runner, Sweep};
 
 fn main() -> Result<()> {
     let mut args = Args::parse(std::env::args().skip(1))?;
@@ -21,47 +22,60 @@ fn main() -> Result<()> {
     let seeds = args.opt_u64("seeds", 2)?;
     args.finish()?;
 
-    let engine = Engine::cpu()?;
-    let manifest = Manifest::load("artifacts")?;
+    let runner = Runner::open("artifacts")?;
+    let policies: Vec<Policy> = [
+        "fp32",
+        "mixed16",
+        "standard16",
+        "sr16",
+        "kahan16",
+        "srkahan16",
+        "standard16-fp16",
+        "sr16-fp16",
+        "kahan16-e8m5",
+    ]
+    .iter()
+    .map(|s| Policy::parse(s))
+    .collect::<Result<_, _>>()?;
+
+    let base = RunSpec::new("dlrm-small").steps(steps).eval_every(steps);
+    let results = Sweep::new(base)
+        .policies(policies.iter().copied())
+        .seeds(seeds)
+        .run(&runner)?;
+
     let mut table = Table::new(
         "DLRM-CTR: validation AUC% by precision policy",
         &["mode", "fmt", "val AUC %", "cancelled %"],
     );
-    let sweep: &[(&str, &str)] = &[
-        ("fp32", "bf16"),
-        ("mixed16", "bf16"),
-        ("standard16", "bf16"),
-        ("sr16", "bf16"),
-        ("kahan16", "bf16"),
-        ("srkahan16", "bf16"),
-        ("standard16", "fp16"),
-        ("sr16", "fp16"),
-        ("kahan16", "e8m5"),
-    ];
-    for (mode, fmt) in sweep {
-        let mut aucs = Vec::new();
-        let mut cancel = Vec::new();
-        for seed in 0..seeds {
-            let mut cfg = RunConfig::defaults_for("dlrm-small");
-            cfg.mode = mode.to_string();
-            cfg.fmt = fmt.to_string();
-            cfg.steps = steps;
-            cfg.eval_every = steps;
-            cfg.seed = seed;
-            let mut tr = Trainer::new(&engine, &manifest, cfg)?;
-            let s = tr.run()?;
-            aucs.push(s.val_metric);
-            cancel.push(s.mean_cancel_frac * 100.0);
-        }
-        let (m, sd) = mean_std(&aucs);
-        let (cm, _) = mean_std(&cancel);
+    for p in &policies {
+        let rs = results.for_policy(p);
+        // diverged runs are recorded as NaN — filter them like the
+        // experiment harness does instead of averaging NaN into the cell
+        let aucs: Vec<f64> =
+            rs.iter().map(|r| r.val_metric).filter(|v| v.is_finite()).collect();
+        let cancel: Vec<f64> = rs
+            .iter()
+            .map(|r| r.mean_cancel_frac * 100.0)
+            .filter(|v| v.is_finite())
+            .collect();
+        let auc_cell = if aucs.is_empty() {
+            "diverged".to_string()
+        } else {
+            let (m, sd) = mean_std(&aucs);
+            pm(m, sd, 2)
+        };
+        let cancel_cell = if cancel.is_empty() {
+            "-".to_string()
+        } else {
+            format!("{:.1}", mean_std(&cancel).0)
+        };
         table.row(vec![
-            mode.to_string(),
-            fmt.to_string(),
-            pm(m, sd, 2),
-            format!("{cm:.1}"),
+            p.mode.name().to_string(),
+            p.fmt.name.to_string(),
+            auc_cell,
+            cancel_cell,
         ]);
-        eprintln!("  {mode}-{fmt}: AUC {m:.2}");
     }
     println!("{}", table.render());
     println!("Shape to expect: fp32 ≈ sr16 ≈ kahan16 > standard16; fp16 lags bf16.");

@@ -1,5 +1,7 @@
 //! Theory walkthrough (paper §3.1): reproduce Figure 2 and probe Theorem 1
-//! interactively — no artifacts needed, pure rust-native simulation.
+//! interactively — no artifacts needed, pure rust-native simulation (this
+//! path deliberately bypasses the PJRT `Runner`/`RunSpec` API; the typed
+//! `precision::Policy` modes map onto `Placement` rounding sites here).
 //!
 //! ```bash
 //! cargo run --release --offline --example lsq_theory [-- steps]

@@ -5,30 +5,28 @@
 //! cargo run --release --offline --example quickstart
 //! ```
 //!
-//! Loads the AOT-compiled DLRM artifact (bf16), trains it with the failing
+//! Opens the runtime through the library `Runner` facade, then trains the
+//! AOT-compiled DLRM artifact under three typed policies — the failing
 //! standard nearest-rounding update, the paper's stochastic-rounding fix,
 //! and the fp32 baseline — printing the validation AUC of each.
 
 use anyhow::Result;
 
-use bf16_train::config::RunConfig;
-use bf16_train::coordinator::Trainer;
-use bf16_train::runtime::{Engine, Manifest};
+use bf16_train::{Mode, Policy, RunSpec, Runner};
 
 fn main() -> Result<()> {
-    let engine = Engine::cpu()?;
-    let manifest = Manifest::load("artifacts")?;
-    println!("PJRT platform: {}", engine.platform());
+    let runner = Runner::open("artifacts")?;
+    println!("PJRT platform: {}", runner.engine().platform());
 
-    for mode in ["fp32", "standard16", "sr16"] {
-        let mut cfg = RunConfig::defaults_for("dlrm-small");
-        cfg.mode = mode.to_string();
-        cfg.steps = 600;
-        cfg.eval_every = 600;
-        let mut tr = Trainer::new(&engine, &manifest, cfg)?;
-        let s = tr.run()?;
+    for mode in [Mode::Fp32, Mode::Standard16, Mode::Sr16] {
+        let spec = RunSpec::new("dlrm-small")
+            .policy(Policy::bf16(mode))
+            .steps(600)
+            .eval_every(600);
+        let s = runner.run(&spec)?;
         println!(
-            "{mode:<12} val AUC = {:>6.2}%   (train loss {:.4}, {:.0}% of updates cancelled)",
+            "{:<12} val AUC = {:>6.2}%   (train loss {:.4}, {:.0}% of updates cancelled)",
+            mode.name(),
             s.val_metric,
             s.final_train_loss,
             s.mean_cancel_frac * 100.0

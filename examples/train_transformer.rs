@@ -8,35 +8,34 @@
 //!     [--app gpt-tiny|gpt-small|gpt-100m] [--steps 300] [--mode kahan16]
 //! ```
 //!
+//! `--mode` takes any typed policy name (`kahan16`, `sr16-e8m5`, …).
 //! `gpt-tiny` (~0.9M params) is lowered by default; `gpt-small`/`gpt-100m`
 //! need `python -m compile.aot --filter gpt-small` (or gpt-100m) first.
 
 use anyhow::Result;
 
-use bf16_train::config::RunConfig;
-use bf16_train::coordinator::Trainer;
-use bf16_train::runtime::{Engine, Manifest};
 use bf16_train::util::cli::Args;
+use bf16_train::{Policy, RunSpec, Runner};
 
 fn main() -> Result<()> {
     let mut args = Args::parse(std::env::args().skip(1))?;
     let app = args.opt("app", "gpt-tiny");
-    let mode = args.opt("mode", "kahan16");
+    let policy: Policy = args.opt("mode", "kahan16").parse()?;
     let steps = args.opt_u64("steps", 300)?;
     args.finish()?;
 
-    let engine = Engine::cpu()?;
-    let manifest = Manifest::load("artifacts")?;
-    let mut cfg = RunConfig::defaults_for(&app);
-    cfg.mode = mode.clone();
-    cfg.steps = steps;
-    cfg.eval_every = steps;
-    cfg.log_every = (steps / 50).max(1);
+    let runner = Runner::open("artifacts")?;
+    let spec = RunSpec::new(&app)
+        .policy(policy)
+        .steps(steps)
+        .eval_every(steps)
+        .log_every((steps / 50).max(1));
+    let cfg = spec.build();
     println!(
         "end-to-end: {} [{}] — {} steps of causal-LM training on synthetic Markov corpus",
-        app, mode, steps
+        app, policy, steps
     );
-    let artifact = manifest.get(&cfg.artifact_name())?;
+    let artifact = runner.manifest().get(&cfg.artifact_name())?;
     println!(
         "model: {} params across {} tensors (vocab={}, dim={}, layers={})",
         artifact.param_elements,
@@ -46,7 +45,7 @@ fn main() -> Result<()> {
         artifact.hparam("layers"),
     );
 
-    let mut tr = Trainer::new(&engine, &manifest, cfg)?;
+    let mut tr = runner.trainer(&spec)?;
     let t0 = std::time::Instant::now();
     let summary = tr.run()?;
     println!("\nloss curve (step → train loss / ppl):");
@@ -71,7 +70,7 @@ fn main() -> Result<()> {
         t0.elapsed().as_secs_f64()
     );
     std::fs::create_dir_all("results")?;
-    let path = format!("results/e2e__{app}__{mode}.csv");
+    let path = format!("results/e2e__{app}__{policy}.csv");
     std::fs::write(&path, summary.history.to_csv(None))?;
     println!("history written to {path}");
     Ok(())

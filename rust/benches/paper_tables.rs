@@ -3,15 +3,18 @@
 //! path compiles and runs.  Full-scale runs: `repro exp all`.
 
 use bf16_train::coordinator::{run_experiment, ExpOptions};
-use bf16_train::runtime::{Engine, Manifest};
 use bf16_train::util::bench::bench;
+use bf16_train::Runner;
 
 fn main() {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    let runtime = Manifest::load(dir)
-        .ok()
-        .map(|m| (Engine::cpu().expect("pjrt cpu"), m));
-    let rt_ref = runtime.as_ref().map(|(e, m)| (e, m));
+    let runner = match Runner::open(dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            println!("note: PJRT runtime unavailable ({e:#})");
+            None
+        }
+    };
 
     let tmp = std::env::temp_dir().join("bf16_bench_results");
     let opts = ExpOptions {
@@ -20,6 +23,7 @@ fn main() {
         out_dir: tmp.to_string_lossy().into_owned(),
         artifacts_dir: dir.to_string(),
         smooth: 0.15,
+        threads: None,
     };
 
     // native-only experiments
@@ -29,14 +33,14 @@ fn main() {
         });
     }
     // PJRT-backed experiments (skip when artifacts missing)
-    if rt_ref.is_some() {
+    if runner.is_some() {
         for id in ["fig1", "table3", "fig10", "fig11", "fig12"] {
             bench(&format!("exp {id} (mini)"), || {
-                run_experiment(id, rt_ref, &opts, None).unwrap();
+                run_experiment(id, runner.as_ref(), &opts, None).unwrap();
             });
         }
         bench("exp table4 (mini, dlrm-small only)", || {
-            run_experiment("table4", rt_ref, &opts, Some("dlrm-small")).unwrap();
+            run_experiment("table4", runner.as_ref(), &opts, Some("dlrm-small")).unwrap();
         });
     } else {
         println!("SKIP PJRT experiments: no artifacts (run `make artifacts`)");

@@ -3,21 +3,18 @@
 //!
 //! Needs `make artifacts`; skips apps whose artifacts are missing.
 
-use bf16_train::config::RunConfig;
-use bf16_train::coordinator::Trainer;
-use bf16_train::runtime::{Engine, Manifest};
 use bf16_train::util::bench::bench;
+use bf16_train::{Policy, RunSpec, Runner};
 
 fn main() {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    let manifest = match Manifest::load(dir) {
-        Ok(m) => m,
+    let runner = match Runner::open(dir) {
+        Ok(r) => r,
         Err(_) => {
             println!("SKIP runtime_step: no artifacts (run `make artifacts`)");
             return;
         }
     };
-    let engine = Engine::cpu().expect("pjrt cpu");
 
     for (app, mode) in [
         ("lsq", "fp32"),
@@ -30,11 +27,11 @@ fn main() {
         ("lstm-seq", "sr16"),
         ("gpt-tiny", "kahan16"),
     ] {
-        let mut cfg = RunConfig::defaults_for(app);
-        cfg.mode = mode.to_string();
-        cfg.artifacts_dir = dir.to_string();
-        cfg.steps = u64::MAX; // schedule factor stays ~1
-        let Ok(mut tr) = Trainer::new(&engine, &manifest, cfg) else {
+        let spec = RunSpec::new(app)
+            .policy(Policy::parse(mode).unwrap())
+            .steps(u64::MAX) // schedule factor stays ~1
+            .artifacts_dir(dir);
+        let Ok(mut tr) = runner.trainer(&spec) else {
             println!("SKIP {app}__{mode}: artifact missing");
             continue;
         };

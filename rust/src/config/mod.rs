@@ -1,13 +1,18 @@
 //! Run configuration system: TOML files (`configs/*.toml`) + CLI overrides.
 //!
 //! A `RunConfig` fully determines one training run: the application, the
-//! precision mode/format (which select the AOT artifact), step budget,
+//! typed [`Policy`] (which selects the AOT artifact), step budget,
 //! learning-rate schedule, seeds, and eval cadence.  Per-application
 //! defaults mirror the paper's Appendix C hyperparameters (scaled).
+//!
+//! Prefer building configs through the [`RunSpec`] builder — it starts from
+//! the application defaults and rescales the eval/log cadence when the step
+//! budget changes, instead of callers poking raw fields.
 
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
+use crate::precision::{Format, Policy};
 use crate::util::tomlmini::TomlDoc;
 
 /// Learning-rate schedule kinds (the paper's Appendix C set).
@@ -64,8 +69,7 @@ impl Schedule {
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
     pub app: String,
-    pub mode: String,
-    pub fmt: String,
+    pub policy: Policy,
     pub steps: u64,
     pub base_lr: f64,
     pub schedule: Schedule,
@@ -80,11 +84,7 @@ pub struct RunConfig {
 impl RunConfig {
     /// Artifact name in the manifest.
     pub fn artifact_name(&self) -> String {
-        if self.fmt == "bf16" {
-            format!("{}__{}", self.app, self.mode)
-        } else {
-            format!("{}__{}-{}", self.app, self.mode, self.fmt)
-        }
+        self.policy.artifact_name(&self.app)
     }
 
     /// Per-application defaults (paper Appendix C, scaled to the synthetic
@@ -123,8 +123,7 @@ impl RunConfig {
         };
         RunConfig {
             app: app.to_string(),
-            mode: "fp32".to_string(),
-            fmt: "bf16".to_string(),
+            policy: Policy::default(),
             steps,
             base_lr: lr,
             schedule,
@@ -152,8 +151,20 @@ impl RunConfig {
             .context("config must set `app`")?
             .to_string();
         let mut cfg = Self::defaults_for(&app);
-        cfg.mode = doc.str_or("mode", &cfg.mode).to_string();
-        cfg.fmt = doc.str_or("fmt", &cfg.fmt).to_string();
+        // precision: either a combined `policy = "sr16-e8m5"` key, or the
+        // legacy `mode` / `fmt` pair — all validated by the typed parser.
+        if let Some(p) = doc.get("policy").and_then(|v| v.as_str()) {
+            cfg.policy = Policy::parse(p).with_context(|| format!("config key `policy` = {p:?}"))?;
+        }
+        if let Some(m) = doc.get("mode").and_then(|v| v.as_str()) {
+            let mode = m.parse().with_context(|| format!("config key `mode` = {m:?}"))?;
+            cfg.policy = Policy::new(mode, cfg.policy.fmt);
+        }
+        if let Some(f) = doc.get("fmt").and_then(|v| v.as_str()) {
+            let fmt = Format::by_name(f)
+                .with_context(|| format!("config key `fmt` = {f:?} is not a known format"))?;
+            cfg.policy = Policy::new(cfg.policy.mode, fmt);
+        }
         cfg.steps = doc.i64_or("train.steps", cfg.steps as i64) as u64;
         cfg.base_lr = doc.f64_or("train.lr", cfg.base_lr);
         cfg.seed = doc.i64_or("train.seed", cfg.seed as i64) as u64;
@@ -179,9 +190,174 @@ impl RunConfig {
     }
 }
 
+/// Builder for [`RunConfig`] — the single way run parameters are assembled
+/// across the CLI, the library [`Runner`](crate::Runner) facade, the
+/// [`Sweep`](crate::coordinator::Sweep) grid, and the examples.
+///
+/// ```ignore
+/// let cfg = RunSpec::new("dlrm-small")
+///     .policy(Policy::bf16(Mode::Sr16))
+///     .steps(600)
+///     .seed(3)
+///     .build();
+/// ```
+///
+/// `build` starts from the per-application defaults (or an explicit base
+/// config via [`RunSpec::from_config`]) and applies only the fields that
+/// were set.  Overriding `steps` rescales `eval_every`/`log_every` with the
+/// default cadence unless those were set explicitly too.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    base: RunConfig,
+    /// Whether the base cadence is derived app defaults (safe to rescale
+    /// when `steps` changes) rather than explicit user configuration.
+    rescale_cadence: bool,
+    policy: Option<Policy>,
+    steps: Option<u64>,
+    seed: Option<u64>,
+    lr: Option<f64>,
+    schedule: Option<Schedule>,
+    eval_every: Option<u64>,
+    eval_batches: Option<u64>,
+    log_every: Option<u64>,
+    artifacts_dir: Option<String>,
+    out_dir: Option<String>,
+}
+
+impl RunSpec {
+    /// Start from the per-application defaults.
+    pub fn new(app: &str) -> RunSpec {
+        let mut spec = Self::from_config(RunConfig::defaults_for(app));
+        spec.rescale_cadence = true;
+        spec
+    }
+
+    /// Start from an explicit base config (e.g. one loaded from TOML).
+    /// Its eval/log cadence is preserved even when `steps` is overridden.
+    pub fn from_config(base: RunConfig) -> RunSpec {
+        RunSpec {
+            base,
+            rescale_cadence: false,
+            policy: None,
+            steps: None,
+            seed: None,
+            lr: None,
+            schedule: None,
+            eval_every: None,
+            eval_batches: None,
+            log_every: None,
+            artifacts_dir: None,
+            out_dir: None,
+        }
+    }
+
+    pub fn app(&self) -> &str {
+        &self.base.app
+    }
+
+    pub fn policy(mut self, p: Policy) -> Self {
+        self.policy = Some(p);
+        self
+    }
+
+    pub fn steps(mut self, n: u64) -> Self {
+        self.steps = Some(n);
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = Some(s);
+        self
+    }
+
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+
+    pub fn schedule(mut self, s: Schedule) -> Self {
+        self.schedule = Some(s);
+        self
+    }
+
+    pub fn eval_every(mut self, n: u64) -> Self {
+        self.eval_every = Some(n);
+        self
+    }
+
+    pub fn eval_batches(mut self, n: u64) -> Self {
+        self.eval_batches = Some(n);
+        self
+    }
+
+    pub fn log_every(mut self, n: u64) -> Self {
+        self.log_every = Some(n);
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: &str) -> Self {
+        self.artifacts_dir = Some(dir.to_string());
+        self
+    }
+
+    pub fn out_dir(mut self, dir: &str) -> Self {
+        self.out_dir = Some(dir.to_string());
+        self
+    }
+
+    /// Materialize the final [`RunConfig`].
+    pub fn build(&self) -> RunConfig {
+        let mut cfg = self.base.clone();
+        if let Some(p) = self.policy {
+            cfg.policy = p;
+        }
+        if let Some(s) = self.steps {
+            if s != cfg.steps {
+                cfg.steps = s;
+                // keep the *default* cadence relative to the new budget;
+                // an explicit base (TOML) cadence is never overridden
+                if self.rescale_cadence {
+                    if self.eval_every.is_none() {
+                        cfg.eval_every = (s / 10).max(1);
+                    }
+                    if self.log_every.is_none() {
+                        cfg.log_every = (s / 200).max(1);
+                    }
+                }
+            }
+        }
+        if let Some(s) = self.seed {
+            cfg.seed = s;
+        }
+        if let Some(lr) = self.lr {
+            cfg.base_lr = lr;
+        }
+        if let Some(sched) = &self.schedule {
+            cfg.schedule = sched.clone();
+        }
+        if let Some(n) = self.eval_every {
+            cfg.eval_every = n;
+        }
+        if let Some(n) = self.eval_batches {
+            cfg.eval_batches = n;
+        }
+        if let Some(n) = self.log_every {
+            cfg.log_every = n;
+        }
+        if let Some(d) = &self.artifacts_dir {
+            cfg.artifacts_dir = d.clone();
+        }
+        if let Some(d) = &self.out_dir {
+            cfg.out_dir = d.clone();
+        }
+        cfg
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::precision::{Mode, E8M5};
 
     #[test]
     fn schedules_shape() {
@@ -225,11 +401,25 @@ warmup_frac = 0.1
 "#,
         )
         .unwrap();
+        assert_eq!(cfg.policy, Policy::new(Mode::Sr16, E8M5));
         assert_eq!(cfg.artifact_name(), "dlrm-small__sr16-e8m5");
         assert_eq!(cfg.steps, 50);
         assert_eq!(cfg.base_lr, 0.2);
         assert_eq!(cfg.seed, 3);
         assert_eq!(cfg.schedule, Schedule::WarmupLinear { warmup_frac: 0.1 });
+    }
+
+    #[test]
+    fn toml_combined_policy_key() {
+        let cfg = RunConfig::from_toml_text("app = \"lsq\"\npolicy = \"kahan16-e8m5\"").unwrap();
+        assert_eq!(cfg.policy, Policy::new(Mode::Kahan16, E8M5));
+    }
+
+    #[test]
+    fn toml_rejects_unknown_mode_or_fmt() {
+        assert!(RunConfig::from_toml_text("app = \"lsq\"\nmode = \"bogus\"").is_err());
+        assert!(RunConfig::from_toml_text("app = \"lsq\"\nfmt = \"e9m9\"").is_err());
+        assert!(RunConfig::from_toml_text("app = \"lsq\"\npolicy = \"sr16-\"").is_err());
     }
 
     #[test]
@@ -241,5 +431,48 @@ warmup_frac = 0.1
     #[test]
     fn missing_app_is_error() {
         assert!(RunConfig::from_toml_text("mode = \"fp32\"").is_err());
+    }
+
+    #[test]
+    fn runspec_applies_overrides_on_defaults() {
+        let cfg = RunSpec::new("dlrm-small")
+            .policy(Policy::bf16(Mode::Sr16))
+            .steps(600)
+            .seed(7)
+            .build();
+        assert_eq!(cfg.app, "dlrm-small");
+        assert_eq!(cfg.artifact_name(), "dlrm-small__sr16");
+        assert_eq!(cfg.steps, 600);
+        assert_eq!(cfg.seed, 7);
+        // cadence rescaled to the new budget
+        assert_eq!(cfg.eval_every, 60);
+        assert_eq!(cfg.log_every, 3);
+    }
+
+    #[test]
+    fn runspec_explicit_cadence_wins_over_rescale() {
+        let cfg = RunSpec::new("dlrm-small").steps(600).eval_every(600).build();
+        assert_eq!(cfg.eval_every, 600);
+        assert_eq!(cfg.log_every, 3); // still rescaled
+    }
+
+    #[test]
+    fn runspec_same_steps_keeps_base_cadence() {
+        let base = RunConfig::defaults_for("dlrm-small");
+        let cfg = RunSpec::from_config(base.clone()).steps(base.steps).build();
+        assert_eq!(cfg, base);
+    }
+
+    #[test]
+    fn runspec_from_config_preserves_explicit_cadence_on_steps_override() {
+        // a TOML-style base with explicit eval/log cadence must survive a
+        // --steps override untouched
+        let mut base = RunConfig::defaults_for("lsq");
+        base.eval_every = 50;
+        base.log_every = 7;
+        let cfg = RunSpec::from_config(base).steps(1000).build();
+        assert_eq!(cfg.steps, 1000);
+        assert_eq!(cfg.eval_every, 50);
+        assert_eq!(cfg.log_every, 7);
     }
 }

@@ -2,25 +2,31 @@
 //! (DESIGN.md §5 maps each to its modules).  Each experiment renders an
 //! aligned text table to stdout and writes text + CSV under `results/`.
 //!
+//! Every scenario is an [`Experiment`] implementation registered in
+//! [`EXPERIMENTS`]; [`run_experiment`] dispatches uniformly by id or alias,
+//! so new scenarios register in one place.  PJRT-backed experiments fan
+//! their (policy × seed) grids out through the threaded
+//! [`Sweep`](super::Sweep), which makes multi-seed regeneration scale with
+//! the core count while keeping results bit-identical to sequential runs.
+//!
 //! Heavy experiments accept `--steps` / `--seeds` overrides so CI-scale
 //! smoke runs and full paper-scale runs share one code path.
 
-use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::RunConfig;
+use crate::config::RunSpec;
 use crate::hwcost;
 use crate::metrics::mean_std;
-use crate::precision::Format;
+use crate::precision::{Mode, Policy, BF16, E8M1, E8M3, E8M5, FP16};
 use crate::qsim::dlrm::{DlrmConfig, DlrmTrainer};
 use crate::qsim::lsq::{self, LsqConfig, LsqData, Placement};
-use crate::qsim::Mode;
-use crate::runtime::{Engine, Manifest};
 use crate::util::table::{pm, Table};
+use crate::Runner;
 
-use super::trainer::{RunSummary, Trainer};
+use super::sweep::{Sweep, SweepResults};
+use super::trainer::RunSummary;
 
 /// Shared options for experiment runs.
 #[derive(Debug, Clone)]
@@ -31,6 +37,8 @@ pub struct ExpOptions {
     pub artifacts_dir: String,
     /// EMA alpha for exported curves (1.0 = unsmoothed, Figure 6)
     pub smooth: f64,
+    /// Worker threads for sweep fan-out (None: available parallelism)
+    pub threads: Option<usize>,
 }
 
 impl Default for ExpOptions {
@@ -41,6 +49,7 @@ impl Default for ExpOptions {
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
             smooth: 0.15,
+            threads: None,
         }
     }
 }
@@ -54,66 +63,53 @@ impl ExpOptions {
     }
 }
 
-/// Run one (app, mode, fmt) × seeds sweep through the PJRT coordinator.
-fn run_app(
-    engine: &Engine,
-    manifest: &Manifest,
-    app: &str,
-    mode: &str,
-    fmt: &str,
-    opts: &ExpOptions,
-) -> Result<Vec<RunSummary>> {
-    let mut out = Vec::new();
-    for seed in 0..opts.seeds {
-        let mut cfg = RunConfig::defaults_for(app);
-        cfg.mode = mode.into();
-        cfg.fmt = fmt.into();
-        cfg.seed = seed;
-        cfg.artifacts_dir = opts.artifacts_dir.clone();
-        if let Some(s) = opts.steps {
-            cfg.steps = s;
-            cfg.eval_every = (s / 4).max(1);
-            cfg.log_every = (s / 100).max(1);
-        }
-        let label = cfg.artifact_name();
-        eprintln!("  [{label} seed={seed}] {} steps…", cfg.steps);
-        let mut tr = Trainer::new(engine, manifest, cfg)?;
-        // A diverged run is a *result* (the standard16/fp16 modes are
-        // expected to fail on some workloads) — record NaN and continue.
-        let summary = match tr.run() {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("  [{label} seed={seed}] FAILED: {e}");
-                out.push(super::trainer::RunSummary {
-                    app: app.to_string(),
-                    mode: mode.to_string(),
-                    fmt: fmt.to_string(),
-                    seed,
-                    steps: 0,
-                    val_metric: f64::NAN,
-                    metric_name: "failed".into(),
-                    final_train_loss: f64::NAN,
-                    mean_cancel_frac: f64::NAN,
-                    history: Default::default(),
-                    wallclock_s: 0.0,
-                });
-                continue;
-            }
-        };
-        eprintln!(
-            "  [{label} seed={seed}] {}={:.3} loss={:.4} cancel={:.1}% ({:.1}s)",
-            summary.metric_name,
-            summary.val_metric,
-            summary.final_train_loss,
-            summary.mean_cancel_frac * 100.0,
-            summary.wallclock_s
-        );
-        out.push(summary);
-    }
-    Ok(out)
+/// Everything an experiment may need: options, the optional PJRT runner
+/// (absent when no artifacts are built), and an app filter.
+pub struct ExpContext<'a> {
+    pub runner: Option<&'a Runner>,
+    pub opts: &'a ExpOptions,
+    pub only_app: Option<&'a str>,
 }
 
-fn metric_cell(rs: &[RunSummary]) -> String {
+impl<'a> ExpContext<'a> {
+    /// The PJRT runner, or a clear error for runtime-backed experiments.
+    pub fn runner(&self, id: &str) -> Result<&'a Runner> {
+        self.runner
+            .with_context(|| format!("experiment {id} needs PJRT artifacts (run `make artifacts`)"))
+    }
+
+    /// Run one app's (policy × seed) grid through the threaded sweep.
+    fn sweep(&self, app: &str, policies: &[Policy], id: &str) -> Result<SweepResults> {
+        let opts = self.opts;
+        let mut base = RunSpec::new(app).artifacts_dir(&opts.artifacts_dir);
+        if let Some(s) = opts.steps {
+            base = base.steps(s).eval_every((s / 4).max(1)).log_every((s / 100).max(1));
+        }
+        let mut sweep = Sweep::new(base).policies(policies.iter().copied()).seeds(opts.seeds);
+        if let Some(t) = opts.threads {
+            sweep = sweep.threads(t);
+        }
+        sweep.run(self.runner(id)?)
+    }
+}
+
+/// One registered scenario (a paper table or figure).
+pub trait Experiment: Sync {
+    /// Primary id (`table4`, `fig9`, …).
+    fn id(&self) -> &'static str;
+    /// Alternate ids that render the same output (e.g. fig3 ⇒ table3).
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+    /// Whether the experiment needs the PJRT runtime + artifacts.
+    fn needs_runtime(&self) -> bool {
+        false
+    }
+    /// Render the experiment, writing outputs under `ctx.opts.out_dir`.
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String>;
+}
+
+fn metric_cell(rs: &[&RunSummary]) -> String {
     let vals: Vec<f64> =
         rs.iter().map(|r| r.val_metric).filter(|v| v.is_finite()).collect();
     if vals.is_empty() {
@@ -124,11 +120,11 @@ fn metric_cell(rs: &[RunSummary]) -> String {
 }
 
 /// Export per-seed curves as CSV (step, loss, metric, cancel, lr).
-fn export_curves(opts: &ExpOptions, tag: &str, rs: &[RunSummary]) -> Result<()> {
+fn export_curves(opts: &ExpOptions, tag: &str, rs: &[&RunSummary]) -> Result<()> {
     for r in rs {
         let alpha = if opts.smooth >= 1.0 { None } else { Some(opts.smooth) };
         opts.write(
-            &format!("{tag}__{}__{}__seed{}.csv", r.app, r.mode, r.seed),
+            &format!("{tag}__{}__{}__seed{}.csv", r.app, r.policy, r.seed),
             &r.history.to_csv(alpha),
         )?;
     }
@@ -139,188 +135,265 @@ fn export_curves(opts: &ExpOptions, tag: &str, rs: &[RunSummary]) -> Result<()> 
 // Table 1 & 2 — hardware cost model.
 // ---------------------------------------------------------------------------
 
-pub fn table1(opts: &ExpOptions) -> Result<String> {
-    let mut t = Table::new(
-        "Table 1 — FMAC hardware cost (relative to 32-bit FMAC)",
-        &["compute unit", "multiply", "mul energy", "accum", "acc energy", "area", "latency"],
-    );
-    for (name, c) in hwcost::table1() {
-        let mul_prec = if name.contains("16") { "16-bit" } else { "32-bit" };
-        t.row(vec![
-            name,
-            mul_prec.into(),
-            format!("{:.2}", c.mul_energy),
-            "32-bit".into(),
-            format!("{:.2}", c.acc_energy),
-            format!("{:.2}", c.area),
-            format!("{:.2}", c.latency),
-        ]);
+struct Table1;
+
+impl Experiment for Table1 {
+    fn id(&self) -> &'static str {
+        "table1"
     }
-    let s = t.render();
-    opts.write("table1.txt", &s)?;
-    opts.write("table1.csv", &t.to_csv())?;
-    Ok(s)
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let mut t = Table::new(
+            "Table 1 — FMAC hardware cost (relative to 32-bit FMAC)",
+            &["compute unit", "multiply", "mul energy", "accum", "acc energy", "area", "latency"],
+        );
+        for (name, c) in hwcost::table1() {
+            let mul_prec = if name.contains("16") { "16-bit" } else { "32-bit" };
+            t.row(vec![
+                name,
+                mul_prec.into(),
+                format!("{:.2}", c.mul_energy),
+                "32-bit".into(),
+                format!("{:.2}", c.acc_energy),
+                format!("{:.2}", c.area),
+                format!("{:.2}", c.latency),
+            ]);
+        }
+        let s = t.render();
+        opts.write("table1.txt", &s)?;
+        opts.write("table1.csv", &t.to_csv())?;
+        Ok(s)
+    }
 }
 
-pub fn table2(opts: &ExpOptions) -> Result<String> {
-    let mut t = Table::new(
-        "Table 2 — training precision modes (per-weight bytes; Adam states)",
-        &["mode", "weight", "master", "opt state", "kahan", "needs fp32 FPU", "total (Adam)"],
-    );
-    for mode in ["fp32", "mixed16", "standard16", "sr16", "kahan16"] {
-        let p = hwcost::memory_plan(mode);
-        t.row(vec![
-            mode.into(),
-            p.weight_bytes.to_string(),
-            p.master_bytes.to_string(),
-            format!("{}×2", p.opt_state_bytes),
-            p.kahan_bytes.to_string(),
-            if p.needs_fp32_fpu { "yes" } else { "NO" }.into(),
-            hwcost::training_bytes(mode, 1, 2).to_string(),
-        ]);
+struct Table2;
+
+impl Experiment for Table2 {
+    fn id(&self) -> &'static str {
+        "table2"
     }
-    let n = 1_000_000u64;
-    let kahan = hwcost::training_bytes("kahan16", n, 2) as f64;
-    let fp32 = hwcost::training_bytes("fp32", n, 2) as f64;
-    let mixed = hwcost::training_bytes("mixed16", n, 2) as f64;
-    let extra = format!(
-        "\nAppendix B.2 check (Adam, 1M weights): kahan16 saves {:.1}% vs fp32 (paper: 33%), {:.1}% vs mixed (paper: 43%)\n",
-        (1.0 - kahan / fp32) * 100.0,
-        (1.0 - kahan / mixed) * 100.0
-    );
-    let s = t.render() + &extra;
-    opts.write("table2.txt", &s)?;
-    opts.write("table2.csv", &t.to_csv())?;
-    Ok(s)
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let mut t = Table::new(
+            "Table 2 — training precision modes (per-weight bytes; Adam states)",
+            &["mode", "weight", "master", "opt state", "kahan", "needs fp32 FPU", "total (Adam)"],
+        );
+        for mode in [Mode::Fp32, Mode::Mixed16, Mode::Standard16, Mode::Sr16, Mode::Kahan16] {
+            let p = hwcost::memory_plan(mode);
+            t.row(vec![
+                mode.name().into(),
+                p.weight_bytes.to_string(),
+                p.master_bytes.to_string(),
+                format!("{}×2", p.opt_state_bytes),
+                p.kahan_bytes.to_string(),
+                if p.needs_fp32_fpu { "yes" } else { "NO" }.into(),
+                hwcost::training_bytes(mode, 1, 2).to_string(),
+            ]);
+        }
+        let n = 1_000_000u64;
+        let kahan = hwcost::training_bytes(Mode::Kahan16, n, 2) as f64;
+        let fp32 = hwcost::training_bytes(Mode::Fp32, n, 2) as f64;
+        let mixed = hwcost::training_bytes(Mode::Mixed16, n, 2) as f64;
+        let extra = format!(
+            "\nAppendix B.2 check (Adam, 1M weights): kahan16 saves {:.1}% vs fp32 (paper: 33%), {:.1}% vs mixed (paper: 43%)\n",
+            (1.0 - kahan / fp32) * 100.0,
+            (1.0 - kahan / mixed) * 100.0
+        );
+        let s = t.render() + &extra;
+        opts.write("table2.txt", &s)?;
+        opts.write("table2.csv", &t.to_csv())?;
+        Ok(s)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Figure 2 + Theorem 1 — native least-squares theory validation.
 // ---------------------------------------------------------------------------
 
-pub fn fig2(opts: &ExpOptions) -> Result<String> {
-    let cfg = LsqConfig {
-        steps: opts.steps.unwrap_or(20_000) as usize,
-        ..LsqConfig::default()
-    };
-    let data = LsqData::generate(&cfg);
-    let mut t = Table::new(
-        "Figure 2 — LSQ with selective nearest rounding (bf16, lr 0.01)",
-        &["rounding placement", "final loss", "final ||w-w*||", "halted steps %"],
-    );
-    let mut csv = String::from("placement,step,loss\n");
-    for placement in [
-        Placement::Exact,
-        Placement::ForwardBackward,
-        Placement::WeightUpdate,
-        Placement::Everywhere,
-        Placement::WeightUpdateSr,
-        Placement::WeightUpdateKahan,
-    ] {
-        let run = lsq::run(&cfg, &data, placement);
-        t.row(vec![
-            placement.name().into(),
-            format!("{:.3e}", run.losses.last().copied().unwrap_or(f32::NAN)),
-            format!("{:.3e}", run.final_dist),
-            format!("{:.1}", run.halt_frac * 100.0),
-        ]);
-        for (i, l) in run.losses.iter().enumerate() {
-            csv.push_str(&format!(
-                "{},{},{:.6e}\n",
-                placement.name(),
-                i * run.sample_every,
-                l
-            ));
-        }
-    }
-    let s = t.render();
-    opts.write("fig2.txt", &s)?;
-    opts.write("fig2.csv", &csv)?;
-    Ok(s)
-}
+struct Fig2;
 
-pub fn thm1(opts: &ExpOptions) -> Result<String> {
-    let mut t = Table::new(
-        "Theorem 1 — halting radius vs observed final distance (bf16)",
-        &["lr", "predicted radius", "observed ||w-w*||", "observed/predicted"],
-    );
-    for lr in [0.001f32, 0.01, 0.1] {
+impl Experiment for Fig2 {
+    fn id(&self) -> &'static str {
+        "fig2"
+    }
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
         let cfg = LsqConfig {
-            lr,
-            steps: opts.steps.unwrap_or(30_000) as usize,
-            noise_std: 0.0, // interpolation regime: A1 holds exactly
+            steps: opts.steps.unwrap_or(20_000) as usize,
             ..LsqConfig::default()
         };
         let data = LsqData::generate(&cfg);
-        let run = lsq::run(&cfg, &data, Placement::WeightUpdate);
-        let radius = lsq::halting_radius(&cfg, &data);
-        t.row(vec![
-            format!("{lr}"),
-            format!("{radius:.3e}"),
-            format!("{:.3e}", run.final_dist),
-            format!("{:.2}", run.final_dist / radius),
-        ]);
+        let mut t = Table::new(
+            "Figure 2 — LSQ with selective nearest rounding (bf16, lr 0.01)",
+            &["rounding placement", "final loss", "final ||w-w*||", "halted steps %"],
+        );
+        let mut csv = String::from("placement,step,loss\n");
+        for placement in [
+            Placement::Exact,
+            Placement::ForwardBackward,
+            Placement::WeightUpdate,
+            Placement::Everywhere,
+            Placement::WeightUpdateSr,
+            Placement::WeightUpdateKahan,
+        ] {
+            let run = lsq::run(&cfg, &data, placement);
+            t.row(vec![
+                placement.name().into(),
+                format!("{:.3e}", run.losses.last().copied().unwrap_or(f32::NAN)),
+                format!("{:.3e}", run.final_dist),
+                format!("{:.1}", run.halt_frac * 100.0),
+            ]);
+            for (i, l) in run.losses.iter().enumerate() {
+                csv.push_str(&format!(
+                    "{},{},{:.6e}\n",
+                    placement.name(),
+                    i * run.sample_every,
+                    l
+                ));
+            }
+        }
+        let s = t.render();
+        opts.write("fig2.txt", &s)?;
+        opts.write("fig2.csv", &csv)?;
+        Ok(s)
     }
-    let s = t.render()
-        + "\nTheorem 1: smaller lr ⇒ LARGER halting radius (opposite of exact SGD).\n";
-    opts.write("thm1.txt", &s)?;
-    Ok(s)
+}
+
+struct Thm1;
+
+impl Experiment for Thm1 {
+    fn id(&self) -> &'static str {
+        "thm1"
+    }
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let mut t = Table::new(
+            "Theorem 1 — halting radius vs observed final distance (bf16)",
+            &["lr", "predicted radius", "observed ||w-w*||", "observed/predicted"],
+        );
+        for lr in [0.001f32, 0.01, 0.1] {
+            let cfg = LsqConfig {
+                lr,
+                steps: opts.steps.unwrap_or(30_000) as usize,
+                noise_std: 0.0, // interpolation regime: A1 holds exactly
+                ..LsqConfig::default()
+            };
+            let data = LsqData::generate(&cfg);
+            let run = lsq::run(&cfg, &data, Placement::WeightUpdate);
+            let radius = lsq::halting_radius(&cfg, &data);
+            t.row(vec![
+                format!("{lr}"),
+                format!("{radius:.3e}"),
+                format!("{:.3e}", run.final_dist),
+                format!("{:.2}", run.final_dist / radius),
+            ]);
+        }
+        let s = t.render()
+            + "\nTheorem 1: smaller lr ⇒ LARGER halting radius (opposite of exact SGD).\n";
+        opts.write("thm1.txt", &s)?;
+        Ok(s)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Figure 1 / 6 — BERT-stand-in standard16 vs fp32 curves.
 // ---------------------------------------------------------------------------
 
-pub fn fig1(engine: &Engine, manifest: &Manifest, opts: &ExpOptions) -> Result<String> {
-    let mut t = Table::new(
-        "Figure 1 — transformer-cls: standard 16-bit-FPU vs 32-bit",
-        &["algorithm", "final train acc %", "val acc %"],
-    );
-    for mode in ["fp32", "standard16"] {
-        let rs = run_app(engine, manifest, "bert-cls", mode, "bf16", opts)?;
-        export_curves(opts, "fig1", &rs)?;
-        let train_acc: Vec<f64> = rs
-            .iter()
-            .map(|r| r.history.tail_metric(5) as f64 * 100.0)
-            .collect();
-        let (m, _) = mean_std(&train_acc);
-        t.row(vec![mode.into(), format!("{m:.2}"), metric_cell(&rs)]);
+struct Fig1;
+
+impl Experiment for Fig1 {
+    fn id(&self) -> &'static str {
+        "fig1"
     }
-    let s = t.render();
-    opts.write("fig1.txt", &s)?;
-    Ok(s)
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["fig6"]
+    }
+
+    fn needs_runtime(&self) -> bool {
+        true
+    }
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let mut t = Table::new(
+            "Figure 1 — transformer-cls: standard 16-bit-FPU vs 32-bit",
+            &["algorithm", "final train acc %", "val acc %"],
+        );
+        let policies = [Policy::bf16(Mode::Fp32), Policy::bf16(Mode::Standard16)];
+        let res = ctx.sweep("bert-cls", &policies, self.id())?;
+        for p in &policies {
+            let rs = res.for_policy(p);
+            export_curves(opts, "fig1", &rs)?;
+            let train_acc: Vec<f64> = rs
+                .iter()
+                .map(|r| r.history.tail_metric(5) as f64 * 100.0)
+                .collect();
+            let (m, _) = mean_std(&train_acc);
+            t.row(vec![p.to_string(), format!("{m:.2}"), metric_cell(&rs)]);
+        }
+        let s = t.render();
+        opts.write("fig1.txt", &s)?;
+        Ok(s)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Table 3 / Figures 3 & 7 — the accuracy-bottleneck ablation.
 // ---------------------------------------------------------------------------
 
-pub fn table3(engine: &Engine, manifest: &Manifest, opts: &ExpOptions) -> Result<String> {
-    let mut t = Table::new(
-        "Table 3 — accuracy bottleneck ablation (metric: paper convention)",
-        &["model", "metric", "32-bit", "standard 16-bit-FPU", "standard 16-bit + 32-bit weights"],
-    );
-    for app in ["cifar-cnn", "dlrm-small", "bert-cls"] {
-        let mut cells = Vec::new();
-        let mut metric_name = String::new();
-        for mode in ["fp32", "standard16", "mixed16"] {
-            let rs = run_app(engine, manifest, app, mode, "bf16", opts)?;
-            export_curves(opts, "fig3", &rs)?;
-            metric_name = rs[0].metric_name.clone();
-            cells.push(metric_cell(&rs));
-        }
-        t.row(vec![
-            app.into(),
-            metric_name,
-            cells[0].clone(),
-            cells[1].clone(),
-            cells[2].clone(),
-        ]);
+struct Table3;
+
+impl Experiment for Table3 {
+    fn id(&self) -> &'static str {
+        "table3"
     }
-    let s = t.render()
-        + "\nExpected shape (paper): column 3 < columns 2 & 4; ablating weight-update\nrounding (col 4) recovers 32-bit accuracy.\n";
-    opts.write("table3.txt", &s)?;
-    Ok(s)
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["fig3", "fig7"]
+    }
+
+    fn needs_runtime(&self) -> bool {
+        true
+    }
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let mut t = Table::new(
+            "Table 3 — accuracy bottleneck ablation (metric: paper convention)",
+            &["model", "metric", "32-bit", "standard 16-bit-FPU", "standard 16-bit + 32-bit weights"],
+        );
+        let policies =
+            [Policy::bf16(Mode::Fp32), Policy::bf16(Mode::Standard16), Policy::bf16(Mode::Mixed16)];
+        for app in ["cifar-cnn", "dlrm-small", "bert-cls"] {
+            let res = ctx.sweep(app, &policies, self.id())?;
+            let mut cells = Vec::new();
+            let mut metric_name = String::new();
+            for p in &policies {
+                let rs = res.for_policy(p);
+                export_curves(opts, "fig3", &rs)?;
+                if let Some(r) = rs.first() {
+                    metric_name = r.metric_name.clone();
+                }
+                cells.push(metric_cell(&rs));
+            }
+            t.row(vec![
+                app.into(),
+                metric_name,
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+            ]);
+        }
+        let s = t.render()
+            + "\nExpected shape (paper): column 3 < columns 2 & 4; ablating weight-update\nrounding (col 4) recovers 32-bit accuracy.\n";
+        opts.write("table3.txt", &s)?;
+        Ok(s)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -337,293 +410,409 @@ pub const TABLE4_APPS: [&str; 7] = [
     "lstm-seq",
 ];
 
-pub fn table4(
-    engine: &Engine,
-    manifest: &Manifest,
-    opts: &ExpOptions,
-    only_app: Option<&str>,
-) -> Result<String> {
-    let mut t = Table::new(
-        "Table 4 — 16-bit-FPU training vs 32-bit across applications",
-        &["model", "metric", "32-bit", "16-bit stochastic", "16-bit kahan", "16-bit standard"],
-    );
-    let apps: Vec<&str> = match only_app {
-        Some(a) => vec![a],
-        None => TABLE4_APPS.to_vec(),
-    };
-    let mut csv = String::from("app,mode,seed,metric_name,val_metric\n");
-    for app in apps {
-        let mut cells = BTreeMap::new();
-        let mut metric_name = String::new();
-        for mode in ["fp32", "sr16", "kahan16", "standard16"] {
-            let rs = run_app(engine, manifest, app, mode, "bf16", opts)?;
-            export_curves(opts, "fig4", &rs)?;
-            metric_name = rs[0].metric_name.clone();
-            for r in &rs {
-                csv.push_str(&format!(
-                    "{app},{mode},{},{},{:.4}\n",
-                    r.seed, r.metric_name, r.val_metric
-                ));
-            }
-            cells.insert(mode, metric_cell(&rs));
-        }
-        t.row(vec![
-            app.into(),
-            metric_name,
-            cells["fp32"].clone(),
-            cells["sr16"].clone(),
-            cells["kahan16"].clone(),
-            cells["standard16"].clone(),
-        ]);
+struct Table4;
+
+impl Experiment for Table4 {
+    fn id(&self) -> &'static str {
+        "table4"
     }
-    let s = t.render()
-        + "\nExpected shape (paper): sr16/kahan16 within noise of 32-bit; standard16 clearly worse.\n";
-    opts.write("table4.txt", &s)?;
-    opts.write("table4.csv", &csv)?;
-    Ok(s)
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["fig4", "fig8"]
+    }
+
+    fn needs_runtime(&self) -> bool {
+        true
+    }
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let mut t = Table::new(
+            "Table 4 — 16-bit-FPU training vs 32-bit across applications",
+            &["model", "metric", "32-bit", "16-bit stochastic", "16-bit kahan", "16-bit standard"],
+        );
+        let apps: Vec<&str> = match ctx.only_app {
+            Some(a) => vec![a],
+            None => TABLE4_APPS.to_vec(),
+        };
+        let policies = [
+            Policy::bf16(Mode::Fp32),
+            Policy::bf16(Mode::Sr16),
+            Policy::bf16(Mode::Kahan16),
+            Policy::bf16(Mode::Standard16),
+        ];
+        let mut csv = String::from("app,mode,seed,metric_name,val_metric\n");
+        for app in apps {
+            let res = ctx.sweep(app, &policies, self.id())?;
+            let mut cells = Vec::new();
+            let mut metric_name = String::new();
+            for p in &policies {
+                let rs = res.for_policy(p);
+                export_curves(opts, "fig4", &rs)?;
+                if let Some(r) = rs.first() {
+                    metric_name = r.metric_name.clone();
+                }
+                for r in &rs {
+                    csv.push_str(&format!(
+                        "{app},{p},{},{},{:.4}\n",
+                        r.seed, r.metric_name, r.val_metric
+                    ));
+                }
+                cells.push(metric_cell(&rs));
+            }
+            t.row(vec![
+                app.into(),
+                metric_name,
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+                cells[3].clone(),
+            ]);
+        }
+        let s = t.render()
+            + "\nExpected shape (paper): sr16/kahan16 within noise of 32-bit; standard16 clearly worse.\n";
+        opts.write("table4.txt", &s)?;
+        opts.write("table4.csv", &csv)?;
+        Ok(s)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Figure 5 — SR↔Kahan memory/accuracy trade-off (native DLRM).
 // ---------------------------------------------------------------------------
 
-pub fn fig5(opts: &ExpOptions) -> Result<String> {
-    let steps = opts.steps.unwrap_or(1200) as usize;
-    let mut t = Table::new(
-        "Figure 5 — DLRM: replacing SR with Kahan tensor-by-tensor",
-        &["kahan tensors", "weight MB (rel.)", "val AUC %"],
-    );
-    let base_cfg = DlrmConfig::default();
-    let n_tensors = base_cfg.num_tables + 6;
-    // sweep: 0 tensors (all SR) … all tensors Kahan, embeddings first
-    // (they dominate memory, exactly the paper's sweep axis).
-    for kahan_k in [0usize, 2, 4, n_tensors] {
-        let mut aucs = Vec::new();
-        let mut bytes = 0u64;
-        for seed in 0..opts.seeds {
-            let cfg = DlrmConfig { seed, ..base_cfg.clone() };
-            let modes: Vec<Mode> = (0..n_tensors)
-                .map(|i| if i < kahan_k { Mode::Kahan16 } else { Mode::Sr16 })
-                .collect();
-            let mut tr = DlrmTrainer::new_mixed(cfg, modes.clone());
-            bytes = tr.weight_bytes(&modes);
-            for _ in 0..steps {
-                tr.step(0.05);
-            }
-            let (_, auc) = tr.eval(16);
-            aucs.push(auc as f64 * 100.0);
-        }
-        let (m, s) = mean_std(&aucs);
-        let all_sr = DlrmTrainer::new(base_cfg.clone(), Mode::Sr16)
-            .weight_bytes(&vec![Mode::Sr16; n_tensors]);
-        t.row(vec![
-            format!("{kahan_k}/{n_tensors}"),
-            format!("{:.2}x", bytes as f64 / all_sr as f64),
-            pm(m, s, 2),
-        ]);
+struct Fig5;
+
+impl Experiment for Fig5 {
+    fn id(&self) -> &'static str {
+        "fig5"
     }
-    let s = t.render();
-    opts.write("fig5.txt", &s)?;
-    Ok(s)
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let steps = opts.steps.unwrap_or(1200) as usize;
+        let mut t = Table::new(
+            "Figure 5 — DLRM: replacing SR with Kahan tensor-by-tensor",
+            &["kahan tensors", "weight MB (rel.)", "val AUC %"],
+        );
+        let base_cfg = DlrmConfig::default();
+        let n_tensors = base_cfg.num_tables + 6;
+        // sweep: 0 tensors (all SR) … all tensors Kahan, embeddings first
+        // (they dominate memory, exactly the paper's sweep axis).
+        for kahan_k in [0usize, 2, 4, n_tensors] {
+            let mut aucs = Vec::new();
+            let mut bytes = 0u64;
+            for seed in 0..opts.seeds {
+                let cfg = DlrmConfig { seed, ..base_cfg.clone() };
+                let modes: Vec<Mode> = (0..n_tensors)
+                    .map(|i| if i < kahan_k { Mode::Kahan16 } else { Mode::Sr16 })
+                    .collect();
+                let mut tr = DlrmTrainer::new_mixed(cfg, modes.clone());
+                bytes = tr.weight_bytes(&modes);
+                for _ in 0..steps {
+                    tr.step(0.05);
+                }
+                let (_, auc) = tr.eval(16);
+                aucs.push(auc as f64 * 100.0);
+            }
+            let (m, s) = mean_std(&aucs);
+            let all_sr = DlrmTrainer::new(base_cfg.clone(), Mode::Sr16)
+                .weight_bytes(&vec![Mode::Sr16; n_tensors]);
+            t.row(vec![
+                format!("{kahan_k}/{n_tensors}"),
+                format!("{:.2}x", bytes as f64 / all_sr as f64),
+                pm(m, s, 2),
+            ]);
+        }
+        let s = t.render();
+        opts.write("fig5.txt", &s)?;
+        Ok(s)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Figure 9 — % of cancelled updates over training (native DLRM).
 // ---------------------------------------------------------------------------
 
-pub fn fig9(opts: &ExpOptions) -> Result<String> {
-    let steps = opts.steps.unwrap_or(3000) as usize;
-    let mut t = Table::new(
-        "Figure 9 — % non-zero updates cancelled by nearest rounding",
-        &["dataset proxy / lr", "phase", "embedding layer", "MLP layers"],
-    );
-    let mut csv = String::from("setting,step,embed_cancel_pct,mlp_cancel_pct,loss\n");
-    // Kaggle proxy: constant lr (cancellation grows as gradients shrink);
-    // Terabyte proxy: decaying lr (compound effect, paper App. D.3).
-    for (label, decay) in [("kaggle-constant-lr", false), ("terabyte-decaying-lr", true)] {
-        let cfg = DlrmConfig::default();
-        let mut tr = DlrmTrainer::new(cfg, Mode::Standard16);
-        let window = (steps / 40).max(1);
-        let mut emb_acc = crate::qsim::UpdateStats::default();
-        let mut mlp_acc = crate::qsim::UpdateStats::default();
-        let mut loss_acc = 0f64;
-        let mut early = (0f64, 0f64);
-        let mut late = (0f64, 0f64);
-        for step in 0..steps {
-            let lr = if decay {
-                let t = step as f32 / steps as f32;
-                if t < 0.5 {
-                    0.03
-                } else {
-                    0.03 * (1.0 - (t - 0.5) / 0.5).max(0.01)
-                }
-            } else {
-                0.03
-            };
-            let tel = tr.step(lr);
-            emb_acc.merge(tel.embed);
-            mlp_acc.merge(tel.mlp);
-            loss_acc += tel.loss as f64;
-            if (step + 1) % window == 0 {
-                let row = (emb_acc.frac() * 100.0, mlp_acc.frac() * 100.0);
-                csv.push_str(&format!(
-                    "{label},{},{:.2},{:.2},{:.4}\n",
-                    step + 1,
-                    row.0,
-                    row.1,
-                    loss_acc / window as f64
-                ));
-                if step < steps / 4 {
-                    early = row;
-                }
-                late = row;
-                emb_acc = Default::default();
-                mlp_acc = Default::default();
-                loss_acc = 0.0;
-            }
-        }
-        t.row(vec![
-            label.into(),
-            "early (first quarter)".into(),
-            format!("{:.1}%", early.0),
-            format!("{:.1}%", early.1),
-        ]);
-        t.row(vec![
-            label.into(),
-            "late (final window)".into(),
-            format!("{:.1}%", late.0),
-            format!("{:.1}%", late.1),
-        ]);
+struct Fig9;
+
+impl Experiment for Fig9 {
+    fn id(&self) -> &'static str {
+        "fig9"
     }
-    let s = t.render()
-        + "\nExpected shape (paper): cancellation grows into the mid-to-late stage,\nreaching >50-80% for both layer types; lr decay compounds the effect.\n";
-    opts.write("fig9.txt", &s)?;
-    opts.write("fig9.csv", &csv)?;
-    Ok(s)
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let steps = opts.steps.unwrap_or(3000) as usize;
+        let mut t = Table::new(
+            "Figure 9 — % non-zero updates cancelled by nearest rounding",
+            &["dataset proxy / lr", "phase", "embedding layer", "MLP layers"],
+        );
+        let mut csv = String::from("setting,step,embed_cancel_pct,mlp_cancel_pct,loss\n");
+        // Kaggle proxy: constant lr (cancellation grows as gradients shrink);
+        // Terabyte proxy: decaying lr (compound effect, paper App. D.3).
+        for (label, decay) in [("kaggle-constant-lr", false), ("terabyte-decaying-lr", true)] {
+            let cfg = DlrmConfig::default();
+            let mut tr = DlrmTrainer::new(cfg, Mode::Standard16);
+            let window = (steps / 40).max(1);
+            let mut emb_acc = crate::qsim::UpdateStats::default();
+            let mut mlp_acc = crate::qsim::UpdateStats::default();
+            let mut loss_acc = 0f64;
+            let mut early = (0f64, 0f64);
+            let mut late = (0f64, 0f64);
+            for step in 0..steps {
+                let lr = if decay {
+                    let t = step as f32 / steps as f32;
+                    if t < 0.5 {
+                        0.03
+                    } else {
+                        0.03 * (1.0 - (t - 0.5) / 0.5).max(0.01)
+                    }
+                } else {
+                    0.03
+                };
+                let tel = tr.step(lr);
+                emb_acc.merge(tel.embed);
+                mlp_acc.merge(tel.mlp);
+                loss_acc += tel.loss as f64;
+                if (step + 1) % window == 0 {
+                    let row = (emb_acc.frac() * 100.0, mlp_acc.frac() * 100.0);
+                    csv.push_str(&format!(
+                        "{label},{},{:.2},{:.2},{:.4}\n",
+                        step + 1,
+                        row.0,
+                        row.1,
+                        loss_acc / window as f64
+                    ));
+                    if step < steps / 4 {
+                        early = row;
+                    }
+                    late = row;
+                    emb_acc = Default::default();
+                    mlp_acc = Default::default();
+                    loss_acc = 0.0;
+                }
+            }
+            t.row(vec![
+                label.into(),
+                "early (first quarter)".into(),
+                format!("{:.1}%", early.0),
+                format!("{:.1}%", early.1),
+            ]);
+            t.row(vec![
+                label.into(),
+                "late (final window)".into(),
+                format!("{:.1}%", late.0),
+                format!("{:.1}%", late.1),
+            ]);
+        }
+        let s = t.render()
+            + "\nExpected shape (paper): cancellation grows into the mid-to-late stage,\nreaching >50-80% for both layer types; lr decay compounds the effect.\n";
+        opts.write("fig9.txt", &s)?;
+        opts.write("fig9.csv", &csv)?;
+        Ok(s)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Figure 10 / 12 — sub-16-bit and fp16 format sweeps (PJRT, DLRM).
 // ---------------------------------------------------------------------------
 
-pub fn fig10(engine: &Engine, manifest: &Manifest, opts: &ExpOptions) -> Result<String> {
-    let mut t = Table::new(
-        "Figure 10 — below 16-bit (DLRM; e8mN = 8 exp bits, N mantissa bits)",
-        &["format (bits)", "standard", "stochastic", "kahan", "32-bit ref"],
-    );
-    let fp32 = run_app(engine, manifest, "dlrm-small", "fp32", "bf16", opts)?;
-    let fp32_cell = metric_cell(&fp32);
-    for fmt in ["bf16", "e8m5", "e8m3", "e8m1"] {
-        let bits = Format::by_name(fmt).map(|f| f.total_bits()).unwrap_or(0);
-        let mut cells = Vec::new();
-        for mode in ["standard16", "sr16", "kahan16"] {
-            let rs = run_app(engine, manifest, "dlrm-small", mode, fmt, opts)?;
-            cells.push(metric_cell(&rs));
-        }
-        t.row(vec![
-            format!("{fmt} ({bits}-bit)"),
-            cells[0].clone(),
-            cells[1].clone(),
-            cells[2].clone(),
-            fp32_cell.clone(),
-        ]);
+struct Fig10;
+
+impl Experiment for Fig10 {
+    fn id(&self) -> &'static str {
+        "fig10"
     }
-    let s = t.render()
-        + "\nExpected shape (paper): only 14-bit (e8m5) Kahan stays near 16/32-bit;\nlower precision degrades in all modes.\n";
-    opts.write("fig10.txt", &s)?;
-    Ok(s)
+
+    fn needs_runtime(&self) -> bool {
+        true
+    }
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let mut t = Table::new(
+            "Figure 10 — below 16-bit (DLRM; e8mN = 8 exp bits, N mantissa bits)",
+            &["format (bits)", "standard", "stochastic", "kahan", "32-bit ref"],
+        );
+        let fmts = [BF16, E8M5, E8M3, E8M1];
+        let modes = [Mode::Standard16, Mode::Sr16, Mode::Kahan16];
+        // one grid: the fp32 reference plus every (mode, fmt) combination
+        let mut policies = vec![Policy::bf16(Mode::Fp32)];
+        for f in fmts {
+            policies.extend(modes.iter().map(|&m| Policy::new(m, f)));
+        }
+        let res = ctx.sweep("dlrm-small", &policies, self.id())?;
+        let fp32_cell = metric_cell(&res.for_policy(&Policy::bf16(Mode::Fp32)));
+        for f in fmts {
+            let cells: Vec<String> = modes
+                .iter()
+                .map(|&m| metric_cell(&res.for_policy(&Policy::new(m, f))))
+                .collect();
+            t.row(vec![
+                format!("{} ({}-bit)", f.name, f.total_bits()),
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+                fp32_cell.clone(),
+            ]);
+        }
+        let s = t.render()
+            + "\nExpected shape (paper): only 14-bit (e8m5) Kahan stays near 16/32-bit;\nlower precision degrades in all modes.\n";
+        opts.write("fig10.txt", &s)?;
+        Ok(s)
+    }
 }
 
-pub fn fig12(engine: &Engine, manifest: &Manifest, opts: &ExpOptions) -> Result<String> {
-    let mut t = Table::new(
-        "Figure 12 — Float16 (e5m10, no loss scaling) vs BFloat16 (DLRM)",
-        &["format", "standard", "stochastic", "kahan"],
-    );
-    for fmt in ["bf16", "fp16"] {
-        let mut cells = Vec::new();
-        for mode in ["standard16", "sr16", "kahan16"] {
-            let rs = run_app(engine, manifest, "dlrm-small", mode, fmt, opts)?;
-            cells.push(metric_cell(&rs));
-        }
-        t.row(vec![fmt.into(), cells[0].clone(), cells[1].clone(), cells[2].clone()]);
+struct Fig12;
+
+impl Experiment for Fig12 {
+    fn id(&self) -> &'static str {
+        "fig12"
     }
-    let s = t.render()
-        + "\nExpected shape (paper): fp16 lags bf16 even with SR/Kahan — dynamic range,\nnot mantissa, is the binding constraint.\n";
-    opts.write("fig12.txt", &s)?;
-    Ok(s)
+
+    fn needs_runtime(&self) -> bool {
+        true
+    }
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let mut t = Table::new(
+            "Figure 12 — Float16 (e5m10, no loss scaling) vs BFloat16 (DLRM)",
+            &["format", "standard", "stochastic", "kahan"],
+        );
+        let fmts = [BF16, FP16];
+        let modes = [Mode::Standard16, Mode::Sr16, Mode::Kahan16];
+        let mut policies = Vec::new();
+        for f in fmts {
+            policies.extend(modes.iter().map(|&m| Policy::new(m, f)));
+        }
+        let res = ctx.sweep("dlrm-small", &policies, self.id())?;
+        for f in fmts {
+            let cells: Vec<String> = modes
+                .iter()
+                .map(|&m| metric_cell(&res.for_policy(&Policy::new(m, f))))
+                .collect();
+            t.row(vec![f.name.into(), cells[0].clone(), cells[1].clone(), cells[2].clone()]);
+        }
+        let s = t.render()
+            + "\nExpected shape (paper): fp16 lags bf16 even with SR/Kahan — dynamic range,\nnot mantissa, is the binding constraint.\n";
+        opts.write("fig12.txt", &s)?;
+        Ok(s)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Figure 11 — combining SR + Kahan.
 // ---------------------------------------------------------------------------
 
-pub fn fig11(engine: &Engine, manifest: &Manifest, opts: &ExpOptions) -> Result<String> {
-    let mut t = Table::new(
-        "Figure 11 — stochastic rounding + Kahan simultaneously",
-        &["model", "32-bit", "sr+kahan combined"],
-    );
-    for app in ["cifar-cnn", "dlrm-small", "bert-cls"] {
-        let fp32 = run_app(engine, manifest, app, "fp32", "bf16", opts)?;
-        let combo = run_app(engine, manifest, app, "srkahan16", "bf16", opts)?;
-        export_curves(opts, "fig11", &combo)?;
-        t.row(vec![app.into(), metric_cell(&fp32), metric_cell(&combo)]);
+struct Fig11;
+
+impl Experiment for Fig11 {
+    fn id(&self) -> &'static str {
+        "fig11"
     }
-    let s = t.render();
-    opts.write("fig11.txt", &s)?;
-    Ok(s)
+
+    fn needs_runtime(&self) -> bool {
+        true
+    }
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let mut t = Table::new(
+            "Figure 11 — stochastic rounding + Kahan simultaneously",
+            &["model", "32-bit", "sr+kahan combined"],
+        );
+        let fp32 = Policy::bf16(Mode::Fp32);
+        let combo = Policy::bf16(Mode::SrKahan16);
+        for app in ["cifar-cnn", "dlrm-small", "bert-cls"] {
+            let res = ctx.sweep(app, &[fp32, combo], self.id())?;
+            let combo_rs = res.for_policy(&combo);
+            export_curves(opts, "fig11", &combo_rs)?;
+            t.row(vec![
+                app.into(),
+                metric_cell(&res.for_policy(&fp32)),
+                metric_cell(&combo_rs),
+            ]);
+        }
+        let s = t.render();
+        opts.write("fig11.txt", &s)?;
+        Ok(s)
+    }
 }
 
-/// Dispatch an experiment by id.  `engine`/`manifest` are created lazily by
-/// the caller for PJRT-backed experiments.
-pub fn run_experiment(
-    id: &str,
-    engine: Option<(&Engine, &Manifest)>,
-    opts: &ExpOptions,
-    only_app: Option<&str>,
-) -> Result<String> {
-    let need = |id: &str| -> Result<(&Engine, &Manifest)> {
-        engine.with_context(|| format!("experiment {id} needs PJRT artifacts (run `make artifacts`)"))
-    };
-    Ok(match id {
-        "table1" => table1(opts)?,
-        "table2" => table2(opts)?,
-        "fig2" => fig2(opts)?,
-        "thm1" => thm1(opts)?,
-        "fig5" => fig5(opts)?,
-        "fig9" => fig9(opts)?,
-        "fig1" | "fig6" => {
-            let (e, m) = need(id)?;
-            fig1(e, m, opts)?
-        }
-        "table3" | "fig3" | "fig7" => {
-            let (e, m) = need(id)?;
-            table3(e, m, opts)?
-        }
-        "table4" | "fig4" | "fig8" => {
-            let (e, m) = need(id)?;
-            table4(e, m, opts, only_app)?
-        }
-        "fig10" => {
-            let (e, m) = need(id)?;
-            fig10(e, m, opts)?
-        }
-        "fig11" => {
-            let (e, m) = need(id)?;
-            fig11(e, m, opts)?
-        }
-        "fig12" => {
-            let (e, m) = need(id)?;
-            fig12(e, m, opts)?
-        }
-        other => bail!(
-            "unknown experiment {other:?}; available: table1 table2 table3 table4 \
-             fig1 fig2 fig5 fig9 fig10 fig11 fig12 thm1 all"
-        ),
-    })
-}
+// ---------------------------------------------------------------------------
+// Registry + dispatch.
+// ---------------------------------------------------------------------------
 
-/// All experiment ids in dependency-light → heavy order.
+/// Every registered experiment, dependency-light → heavy.
+pub static EXPERIMENTS: &[&dyn Experiment] = &[
+    &Table1, &Table2, &Fig2, &Thm1, &Fig5, &Fig9, &Fig1, &Table3, &Fig10, &Fig11, &Fig12, &Table4,
+];
+
+/// All primary experiment ids, in registry order (for `exp all`).
 pub const ALL_EXPERIMENTS: [&str; 12] = [
     "table1", "table2", "fig2", "thm1", "fig5", "fig9", "fig1", "table3", "fig10", "fig11",
     "fig12", "table4",
 ];
+
+/// Find an experiment by primary id or alias.
+pub fn find_experiment(id: &str) -> Option<&'static dyn Experiment> {
+    EXPERIMENTS
+        .iter()
+        .copied()
+        .find(|e| e.id() == id || e.aliases().contains(&id))
+}
+
+/// Dispatch an experiment by id.  `runner` is created lazily by the caller
+/// and may be `None` when no artifacts are built (native experiments still
+/// run).
+pub fn run_experiment(
+    id: &str,
+    runner: Option<&Runner>,
+    opts: &ExpOptions,
+    only_app: Option<&str>,
+) -> Result<String> {
+    let Some(exp) = find_experiment(id) else {
+        bail!(
+            "unknown experiment {id:?}; available: {} all",
+            ALL_EXPERIMENTS.join(" ")
+        );
+    };
+    let ctx = ExpContext { runner, opts, only_app };
+    if exp.needs_runtime() {
+        ctx.runner(id)?; // fail early with a clear message
+    }
+    exp.run(&ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_match_all_experiments() {
+        let ids: Vec<&str> = EXPERIMENTS.iter().map(|e| e.id()).collect();
+        assert_eq!(ids, ALL_EXPERIMENTS.to_vec());
+    }
+
+    #[test]
+    fn aliases_resolve_to_their_experiment() {
+        assert_eq!(find_experiment("fig6").unwrap().id(), "fig1");
+        assert_eq!(find_experiment("fig3").unwrap().id(), "table3");
+        assert_eq!(find_experiment("fig4").unwrap().id(), "table4");
+        assert!(find_experiment("fig99").is_none());
+    }
+
+    #[test]
+    fn unknown_experiment_is_a_clear_error() {
+        let err = run_experiment("nope", None, &ExpOptions::default(), None).unwrap_err();
+        assert!(err.to_string().contains("unknown experiment"));
+    }
+
+    #[test]
+    fn runtime_experiments_fail_without_runner() {
+        let err = run_experiment("table4", None, &ExpOptions::default(), None).unwrap_err();
+        assert!(err.to_string().contains("needs PJRT artifacts"));
+    }
+}

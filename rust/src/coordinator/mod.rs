@@ -1,8 +1,14 @@
-//! L3 coordinator: the training loop, run configs, checkpointing, and the
-//! experiment harness that regenerates every paper table and figure.
+//! L3 coordinator: the training loop, run configs, checkpointing, the
+//! threaded policy × seed sweep, and the experiment registry that
+//! regenerates every paper table and figure.
 
 pub mod experiments;
+pub mod sweep;
 mod trainer;
 
-pub use experiments::{run_experiment, ExpOptions, ALL_EXPERIMENTS, TABLE4_APPS};
+pub use experiments::{
+    find_experiment, run_experiment, ExpContext, ExpOptions, Experiment, ALL_EXPERIMENTS,
+    EXPERIMENTS, TABLE4_APPS,
+};
+pub use sweep::{Sweep, SweepResults};
 pub use trainer::{RunSummary, Trainer};

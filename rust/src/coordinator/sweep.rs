@@ -1,0 +1,221 @@
+//! Policy × seed sweep grids with threaded fan-out.
+//!
+//! A [`Sweep`] expands a base [`RunSpec`] into one cell per (policy, seed)
+//! pair and runs the cells across worker threads.  Seeds are assigned
+//! deterministically when the grid is built (`base_seed + seed_index`), and
+//! results come back in grid order (policy-major, seed-minor) regardless of
+//! scheduling, so a threaded sweep is bit-identical to a sequential one.
+//!
+//! Each worker owns its own PJRT [`Engine`] (clients are cheap on CPU and
+//! the `xla` handle types are not `Send`); the parsed [`Manifest`] is shared
+//! by reference.  A run that diverges is recorded as a NaN summary — that is
+//! a *result* in this paper (standard16/fp16 are expected to fail on some
+//! workloads) — while a run that cannot even start (missing artifact) fails
+//! the whole sweep.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{RunConfig, RunSpec};
+use crate::metrics::History;
+use crate::precision::Policy;
+use crate::runtime::{Engine, Manifest};
+use crate::Runner;
+
+use super::trainer::{RunSummary, Trainer};
+
+/// A policy × seed grid over one application.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    base: RunSpec,
+    policies: Vec<Policy>,
+    seeds: u64,
+    base_seed: u64,
+    threads: Option<usize>,
+}
+
+impl Sweep {
+    /// Sweep over the given base spec (application, step budget, paths…).
+    pub fn new(base: RunSpec) -> Sweep {
+        Sweep { base, policies: Vec::new(), seeds: 1, base_seed: 0, threads: None }
+    }
+
+    /// Add one policy to the grid.
+    pub fn policy(mut self, p: Policy) -> Self {
+        self.policies.push(p);
+        self
+    }
+
+    /// Add several policies to the grid.
+    pub fn policies(mut self, ps: impl IntoIterator<Item = Policy>) -> Self {
+        self.policies.extend(ps);
+        self
+    }
+
+    /// Number of seeds per policy (seed values `base_seed..base_seed+n`).
+    pub fn seeds(mut self, n: u64) -> Self {
+        self.seeds = n;
+        self
+    }
+
+    /// First seed of the per-policy seed range (default 0).
+    pub fn base_seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+
+    /// Cap the worker-thread count (default: available parallelism).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Expand the grid into per-cell configs, policy-major, seed-minor.
+    pub fn cells(&self) -> Vec<RunConfig> {
+        let mut cells = Vec::with_capacity(self.policies.len() * self.seeds as usize);
+        for &p in &self.policies {
+            for k in 0..self.seeds {
+                cells.push(self.base.clone().policy(p).seed(self.base_seed + k).build());
+            }
+        }
+        cells
+    }
+
+    /// Run every cell; results are in `cells()` order.
+    pub fn run(&self, runner: &Runner) -> Result<SweepResults> {
+        let cells = self.cells();
+        let n = cells.len();
+        let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let threads = self.threads.unwrap_or(hw).min(n.max(1));
+        if threads <= 1 {
+            // reuse the runner's engine (and its compiled-executable cache)
+            let mut runs = Vec::with_capacity(n);
+            for cfg in cells {
+                runs.push(run_cell(runner.engine(), runner.manifest(), cfg)?);
+            }
+            return Ok(SweepResults { runs });
+        }
+
+        let manifest = runner.manifest();
+        let slots: Vec<Mutex<Option<Result<RunSummary>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        // contiguous chunks: cells are policy-major, so one artifact's
+        // cells stay on one worker and its executable cache amortizes the
+        // XLA compilation instead of every worker recompiling every policy
+        let chunk_len = (n + threads - 1) / threads;
+        let mut work: Vec<Vec<(usize, RunConfig)>> = Vec::with_capacity(threads);
+        let mut it = cells.into_iter().enumerate();
+        for _ in 0..threads {
+            work.push(it.by_ref().take(chunk_len).collect());
+        }
+        std::thread::scope(|s| {
+            for chunk in work {
+                if chunk.is_empty() {
+                    continue; // ceil division can leave trailing empty chunks
+                }
+                let slots = &slots;
+                s.spawn(move || {
+                    let engine = match Engine::cpu() {
+                        Ok(e) => e,
+                        Err(e) => {
+                            let msg = format!("sweep worker engine: {e:#}");
+                            for (i, _) in &chunk {
+                                *slots[*i].lock().unwrap() = Some(Err(anyhow!("{msg}")));
+                            }
+                            return;
+                        }
+                    };
+                    for (i, cfg) in chunk {
+                        let r = run_cell(&engine, manifest, cfg);
+                        *slots[i].lock().unwrap() = Some(r);
+                    }
+                });
+            }
+        });
+        let mut runs = Vec::with_capacity(n);
+        for slot in slots {
+            let r = slot.into_inner().unwrap().context("sweep worker never reported")?;
+            runs.push(r?);
+        }
+        Ok(SweepResults { runs })
+    }
+}
+
+/// Sweep output, in grid order (policy-major, seed-minor).
+#[derive(Debug, Clone)]
+pub struct SweepResults {
+    pub runs: Vec<RunSummary>,
+}
+
+impl SweepResults {
+    /// All runs of one policy, seed-ascending.
+    pub fn for_policy(&self, p: &Policy) -> Vec<&RunSummary> {
+        self.runs.iter().filter(|r| r.policy == *p).collect()
+    }
+}
+
+/// Run one grid cell.  Divergence becomes a NaN summary; failure to start
+/// (e.g. missing artifact) is a hard error.
+fn run_cell(engine: &Engine, manifest: &Manifest, cfg: RunConfig) -> Result<RunSummary> {
+    let label = cfg.artifact_name();
+    let seed = cfg.seed;
+    let app = cfg.app.clone();
+    let policy = cfg.policy;
+    eprintln!("  [{label} seed={seed}] {} steps…", cfg.steps);
+    let mut tr = Trainer::new(engine, manifest, cfg)?;
+    match tr.run() {
+        Ok(summary) => {
+            eprintln!(
+                "  [{label} seed={seed}] {}={:.3} loss={:.4} cancel={:.1}% ({:.1}s)",
+                summary.metric_name,
+                summary.val_metric,
+                summary.final_train_loss,
+                summary.mean_cancel_frac * 100.0,
+                summary.wallclock_s
+            );
+            Ok(summary)
+        }
+        Err(e) => {
+            // A diverged run is a *result* (the standard16/fp16 modes are
+            // expected to fail on some workloads) — record NaN and continue.
+            eprintln!("  [{label} seed={seed}] FAILED: {e}");
+            Ok(RunSummary {
+                app,
+                policy,
+                seed,
+                steps: 0,
+                val_metric: f64::NAN,
+                metric_name: "failed".into(),
+                final_train_loss: f64::NAN,
+                mean_cancel_frac: f64::NAN,
+                history: History::default(),
+                wallclock_s: 0.0,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::Mode;
+
+    #[test]
+    fn grid_is_policy_major_with_deterministic_seeds() {
+        let sweep = Sweep::new(RunSpec::new("lsq").steps(10))
+            .policies([Policy::bf16(Mode::Fp32), Policy::bf16(Mode::Sr16)])
+            .seeds(3)
+            .base_seed(100);
+        let cells = sweep.cells();
+        assert_eq!(cells.len(), 6);
+        assert_eq!(cells[0].policy, Policy::bf16(Mode::Fp32));
+        assert_eq!(cells[0].seed, 100);
+        assert_eq!(cells[2].seed, 102);
+        assert_eq!(cells[3].policy, Policy::bf16(Mode::Sr16));
+        assert_eq!(cells[3].seed, 100);
+        for c in &cells {
+            assert_eq!(c.steps, 10);
+        }
+    }
+}

@@ -11,14 +11,20 @@ use anyhow::{bail, Context, Result};
 use crate::config::RunConfig;
 use crate::data::{self, Split};
 use crate::metrics::{auc, History, HistoryPoint};
+use crate::precision::Policy;
 use crate::runtime::{BatchData, Engine, Manifest, TrainSession};
+
+/// Checkpoint magic: version 2 carries the artifact name in the header so a
+/// resume into a mismatched artifact fails loudly instead of silently
+/// loading same-shaped tensors.
+const CKPT_MAGIC: &[u8; 8] = b"BF16CKP2";
+const CKPT_MAGIC_V1: &[u8; 8] = b"BF16CKPT";
 
 /// Final summary of one run.
 #[derive(Debug, Clone)]
 pub struct RunSummary {
     pub app: String,
-    pub mode: String,
-    pub fmt: String,
+    pub policy: Policy,
     pub seed: u64,
     pub steps: u64,
     /// paper-convention validation metric (Acc% / AUC% / PPL / WER)
@@ -39,12 +45,14 @@ pub struct Trainer<'e> {
     valid_data: Box<dyn data::Dataset>,
     pub history: History,
     cancel_acc: f64,
+    /// Steps executed by *this* trainer (not counting resumed-from steps) —
+    /// the denominator for the mean cancellation fraction.
+    steps_run: u64,
 }
 
 impl<'e> Trainer<'e> {
     pub fn new(engine: &'e Engine, manifest: &Manifest, cfg: RunConfig) -> Result<Self> {
-        let name = cfg.artifact_name();
-        let mut session = TrainSession::new(engine, manifest, &name)?;
+        let mut session = TrainSession::open(engine, manifest, &cfg.app, cfg.policy)?;
         session.init(engine, cfg.seed as i32)?;
         let artifact = session.artifact.clone();
         let train_data = data::for_artifact(&artifact, cfg.seed, Split::Train)?;
@@ -57,6 +65,7 @@ impl<'e> Trainer<'e> {
             valid_data,
             history: History::default(),
             cancel_acc: 0.0,
+            steps_run: 0,
         })
     }
 
@@ -84,6 +93,7 @@ impl<'e> Trainer<'e> {
                 );
             }
             self.cancel_acc += stats.cancel_frac as f64;
+            self.steps_run += 1;
             if step % self.cfg.log_every == 0 {
                 self.history.push(HistoryPoint {
                     step,
@@ -129,10 +139,14 @@ impl<'e> Trainer<'e> {
         Ok((mean_loss, paper_metric))
     }
 
-    /// Full run: train with periodic eval, return the summary.
+    /// Full run: train until the configured step budget, then evaluate.
+    ///
+    /// Counts steps already done (e.g. a resumed checkpoint) against the
+    /// budget, so a resumed run finishes at `cfg.steps` like an
+    /// uninterrupted one instead of training `cfg.steps` extra steps.
     pub fn run(&mut self) -> Result<RunSummary> {
         let t0 = std::time::Instant::now();
-        let mut remaining = self.cfg.steps;
+        let mut remaining = self.cfg.steps.saturating_sub(self.session.steps_done);
         while remaining > 0 {
             let chunk = remaining.min(self.cfg.eval_every);
             self.run_steps(chunk)?;
@@ -141,14 +155,15 @@ impl<'e> Trainer<'e> {
         let (_, val_metric) = self.evaluate(self.cfg.eval_batches)?;
         Ok(RunSummary {
             app: self.cfg.app.clone(),
-            mode: self.cfg.mode.clone(),
-            fmt: self.cfg.fmt.clone(),
+            policy: self.cfg.policy,
             seed: self.cfg.seed,
             steps: self.cfg.steps,
             val_metric,
             metric_name: self.session.artifact.metric_name.clone(),
             final_train_loss: self.history.tail_loss(5) as f64,
-            mean_cancel_frac: self.cancel_acc / self.cfg.steps.max(1) as f64,
+            // mean over the steps actually executed, so partial runs and
+            // run_steps-driven benches report a correct fraction
+            mean_cancel_frac: self.cancel_acc / self.steps_run.max(1) as f64,
             history: std::mem::take(&mut self.history),
             wallclock_s: t0.elapsed().as_secs_f64(),
         })
@@ -158,11 +173,15 @@ impl<'e> Trainer<'e> {
 
     /// Save all state tensors to a binary checkpoint.
     ///
-    /// Format: magic, step counter, tensor count, then per tensor
-    /// `len:u64, f32-LE data`.  Layout order is the manifest state order.
+    /// Format (v2): magic, artifact-name length + bytes, step counter,
+    /// tensor count, then per tensor `len:u64, f32-LE data`.  Layout order
+    /// is the manifest state order.
     pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut buf: Vec<u8> = Vec::new();
-        buf.extend_from_slice(b"BF16CKPT");
+        buf.extend_from_slice(CKPT_MAGIC);
+        let name = self.cfg.artifact_name();
+        buf.extend_from_slice(&(name.len() as u64).to_le_bytes());
+        buf.extend_from_slice(name.as_bytes());
         buf.extend_from_slice(&self.session.steps_done.to_le_bytes());
         let n = self.session.state_len();
         buf.extend_from_slice(&(n as u64).to_le_bytes());
@@ -182,23 +201,54 @@ impl<'e> Trainer<'e> {
     pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
         let buf = std::fs::read(path.as_ref())
             .with_context(|| format!("reading checkpoint {:?}", path.as_ref()))?;
-        if buf.len() < 24 || &buf[..8] != b"BF16CKPT" {
+        if buf.len() >= 8 && &buf[..8] == CKPT_MAGIC_V1 {
+            bail!(
+                "checkpoint {:?} is in the legacy v1 format, which lacks the artifact-name \
+                 header and cannot be validated against this run; regenerate it by training \
+                 and saving again with this version",
+                path.as_ref()
+            );
+        }
+        if buf.len() < 32 || &buf[..8] != CKPT_MAGIC {
             bail!("not a bf16-train checkpoint");
         }
         let mut off = 8;
-        let rd_u64 = |buf: &[u8], off: &mut usize| {
+        let rd_u64 = |buf: &[u8], off: &mut usize| -> Result<u64> {
+            if *off + 8 > buf.len() {
+                bail!("truncated checkpoint");
+            }
             let v = u64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
             *off += 8;
-            v
+            Ok(v)
         };
-        let steps = rd_u64(&buf, &mut off);
-        let n = rd_u64(&buf, &mut off) as usize;
+        let name_len = rd_u64(&buf, &mut off)? as usize;
+        // guard with subtraction: `off + name_len` could wrap for a huge
+        // length read from a corrupted file
+        if name_len > buf.len().saturating_sub(off) {
+            bail!("truncated checkpoint");
+        }
+        let name = std::str::from_utf8(&buf[off..off + name_len])
+            .context("checkpoint artifact name is not utf-8")?
+            .to_string();
+        off += name_len;
+        let expected = self.cfg.artifact_name();
+        if name != expected {
+            bail!(
+                "checkpoint was saved from artifact {name:?} but this run uses {expected:?}; \
+                 refusing to load mismatched state"
+            );
+        }
+        let steps = rd_u64(&buf, &mut off)?;
+        let n = rd_u64(&buf, &mut off)? as usize;
         if n != self.session.state_len() {
             bail!("checkpoint has {n} tensors, artifact needs {}", self.session.state_len());
         }
         for i in 0..n {
-            let len = rd_u64(&buf, &mut off) as usize;
-            if off + len * 4 > buf.len() {
+            let len = rd_u64(&buf, &mut off)? as usize;
+            let byte_len = len
+                .checked_mul(4)
+                .with_context(|| format!("corrupt checkpoint: tensor {i} length {len}"))?;
+            if byte_len > buf.len().saturating_sub(off) {
                 bail!("truncated checkpoint");
             }
             let mut vals = Vec::with_capacity(len);
@@ -213,10 +263,9 @@ impl<'e> Trainer<'e> {
         self.session.steps_done = steps;
         // Reposition the training stream: generators are sequential, so a
         // resumed run must consume the same prefix the original run did to
-        // replay the remaining batches exactly.
-        for _ in 0..steps {
-            let _ = self.train_data.next_batch();
-        }
+        // replay the remaining batches exactly.  `skip` fast-forwards the
+        // generator RNG without materializing the batches.
+        self.train_data.skip(steps);
         Ok(())
     }
 }

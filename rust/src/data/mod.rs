@@ -20,6 +20,15 @@ pub trait Dataset: Send {
     fn next_batch(&mut self) -> (BatchData, BatchData);
     /// Human-readable name.
     fn name(&self) -> &str;
+    /// Fast-forward past `n` batches without materializing them (checkpoint
+    /// resume).  Implementations must consume *exactly* the RNG stream of
+    /// `n` `next_batch` calls; the default falls back to generating and
+    /// discarding the batches.
+    fn skip(&mut self, n: u64) {
+        for _ in 0..n {
+            let _ = self.next_batch();
+        }
+    }
 }
 
 /// Build the right generator for an artifact (by model family).
@@ -118,6 +127,16 @@ impl Dataset for Regression {
     fn name(&self) -> &str {
         "synthetic-regression"
     }
+
+    fn skip(&mut self, n: u64) {
+        // mirror next_batch: dim feature normals + 1 noise normal per row
+        for _ in 0..n * self.batch as u64 {
+            for _ in 0..self.dim {
+                self.rng.normal();
+            }
+            self.rng.normal();
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -177,6 +196,17 @@ impl Dataset for Images {
 
     fn name(&self) -> &str {
         "synthetic-images"
+    }
+
+    fn skip(&mut self, n: u64) {
+        // mirror next_batch: 1 class draw + one pixel-noise normal per value
+        let per = 3 * self.image * self.image;
+        for _ in 0..n * self.batch as u64 {
+            self.rng.below(self.classes);
+            for _ in 0..per {
+                self.rng.normal();
+            }
+        }
     }
 }
 
@@ -247,6 +277,19 @@ impl Dataset for Ctr {
 
     fn name(&self) -> &str {
         "synthetic-ctr"
+    }
+
+    fn skip(&mut self, n: u64) {
+        // mirror next_batch: dense normals + per-table zipf + 1 label uniform
+        for _ in 0..n * self.batch as u64 {
+            for _ in 0..self.dense {
+                self.rng.normal();
+            }
+            for _ in 0..self.tables {
+                self.rng.zipf(&self.zipf);
+            }
+            self.rng.uniform();
+        }
     }
 }
 
@@ -320,6 +363,19 @@ impl Dataset for TokenCls {
     fn name(&self) -> &str {
         "synthetic-entailment"
     }
+
+    fn skip(&mut self, n: u64) {
+        // mirror next_batch exactly, including the conditional resample
+        for _ in 0..n * self.batch as u64 {
+            let c = self.rng.below(self.classes);
+            for _ in 0..self.seq {
+                let tok = self.rng.zipf(&self.zipf);
+                if self.token_class_affinity[tok] as usize != c && self.rng.uniform() < 0.6 {
+                    self.rng.zipf(&self.zipf);
+                }
+            }
+        }
+    }
 }
 
 /// Causal LM: first-order Markov chain over a Zipf vocabulary; targets are
@@ -383,6 +439,16 @@ impl Dataset for TokenLm {
 
     fn name(&self) -> &str {
         "synthetic-markov-lm"
+    }
+
+    fn skip(&mut self, n: u64) {
+        // mirror next_batch: initial zipf + seq chained next_token draws
+        for _ in 0..n * self.batch as u64 {
+            let mut tok = self.rng.zipf(&self.zipf);
+            for _ in 0..self.seq {
+                tok = self.next_token(tok);
+            }
+        }
     }
 }
 
@@ -453,6 +519,21 @@ impl Dataset for SeqFrames {
 
     fn name(&self) -> &str {
         "synthetic-frames"
+    }
+
+    fn skip(&mut self, n: u64) {
+        // mirror next_batch: in_dim init normals + in_dim normals per frame
+        // (the label argmax draws nothing)
+        for _ in 0..n * self.batch as u64 {
+            for _ in 0..self.in_dim {
+                self.rng.normal();
+            }
+            for _ in 0..self.seq {
+                for _ in 0..self.in_dim {
+                    self.rng.normal();
+                }
+            }
+        }
     }
 }
 
@@ -556,4 +637,7 @@ mod tests {
         assert_eq!(x.len(), 4 * 10 * 32);
         assert_eq!(y.len(), 4 * 10);
     }
+
+    // skip()-vs-next_batch parity for every generator is covered by
+    // `prop_dataset_skip_equals_consuming_batches` in tests/properties.rs.
 }

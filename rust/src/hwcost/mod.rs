@@ -8,7 +8,7 @@
 //! headline: multiplier cost scales ~quadratically with mantissa width,
 //! adder/accumulator cost ~linearly.
 
-use crate::precision::Format;
+use crate::precision::{Format, Mode};
 
 /// Relative cost of one fused multiply-accumulate unit.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -66,10 +66,10 @@ pub struct MemoryPlan {
     pub needs_fp32_fpu: bool,
 }
 
-/// Memory plan for a named precision mode (mode names match the manifest).
-pub fn memory_plan(mode: &str) -> MemoryPlan {
+/// Memory plan for a precision mode (exhaustive over the typed `Mode`).
+pub fn memory_plan(mode: Mode) -> MemoryPlan {
     match mode {
-        "fp32" => MemoryPlan {
+        Mode::Fp32 => MemoryPlan {
             weight_bytes: 4,
             master_bytes: 0,
             opt_state_bytes: 4,
@@ -78,34 +78,33 @@ pub fn memory_plan(mode: &str) -> MemoryPlan {
         },
         // mixed precision: 16-bit working weights + 32-bit master + 32-bit
         // optimizer states (Micikevicius et al.)
-        "mixed16" | "mixed" => MemoryPlan {
+        Mode::Mixed16 => MemoryPlan {
             weight_bytes: 2,
             master_bytes: 4,
             opt_state_bytes: 4,
             kahan_bytes: 0,
             needs_fp32_fpu: true,
         },
-        "standard16" | "sr16" => MemoryPlan {
+        Mode::Standard16 | Mode::Sr16 => MemoryPlan {
             weight_bytes: 2,
             master_bytes: 0,
             opt_state_bytes: 2,
             kahan_bytes: 0,
             needs_fp32_fpu: false,
         },
-        "kahan16" | "srkahan16" => MemoryPlan {
+        Mode::Kahan16 | Mode::SrKahan16 => MemoryPlan {
             weight_bytes: 2,
             master_bytes: 0,
             opt_state_bytes: 2,
             kahan_bytes: 2,
             needs_fp32_fpu: false,
         },
-        other => panic!("unknown precision mode {other:?}"),
     }
 }
 
 /// Total training-state bytes for `n` weights under `mode` with `n_states`
 /// optimizer-state tensors (SGD-momentum: 1, Adam: 2).
-pub fn training_bytes(mode: &str, n: u64, n_states: u32) -> u64 {
+pub fn training_bytes(mode: Mode, n: u64, n_states: u32) -> u64 {
     let p = memory_plan(mode);
     n * (p.weight_bytes + p.master_bytes + p.opt_state_bytes * n_states + p.kahan_bytes)
         as u64
@@ -142,11 +141,11 @@ mod tests {
 
     #[test]
     fn table2_fpu_requirements() {
-        assert!(memory_plan("fp32").needs_fp32_fpu);
-        assert!(memory_plan("mixed16").needs_fp32_fpu);
-        assert!(!memory_plan("standard16").needs_fp32_fpu);
-        assert!(!memory_plan("sr16").needs_fp32_fpu);
-        assert!(!memory_plan("kahan16").needs_fp32_fpu);
+        assert!(memory_plan(Mode::Fp32).needs_fp32_fpu);
+        assert!(memory_plan(Mode::Mixed16).needs_fp32_fpu);
+        assert!(!memory_plan(Mode::Standard16).needs_fp32_fpu);
+        assert!(!memory_plan(Mode::Sr16).needs_fp32_fpu);
+        assert!(!memory_plan(Mode::Kahan16).needs_fp32_fpu);
     }
 
     #[test]
@@ -154,9 +153,9 @@ mod tests {
         // Adam: 2 optimizer states.  Paper: 16-bit+Kahan saves 33% vs
         // 32-bit and 43% vs mixed precision.
         let n = 1_000_000u64;
-        let kahan = training_bytes("kahan16", n, 2);
-        let fp32 = training_bytes("fp32", n, 2);
-        let mixed = training_bytes("mixed16", n, 2);
+        let kahan = training_bytes(Mode::Kahan16, n, 2);
+        let fp32 = training_bytes(Mode::Fp32, n, 2);
+        let mixed = training_bytes(Mode::Mixed16, n, 2);
         let vs32 = 1.0 - kahan as f64 / fp32 as f64;
         let vsmixed = 1.0 - kahan as f64 / mixed as f64;
         assert!((vs32 - 0.333).abs() < 0.01, "{vs32}");

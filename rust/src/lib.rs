@@ -17,6 +17,31 @@
 //!
 //! Python never runs on the training path; the `repro` binary is fully
 //! self-contained once `make artifacts` has been run.
+//!
+//! ## Typed API
+//!
+//! The paper's central object — a precision policy (compute format ×
+//! rounding mode × accumulator strategy) — is the typed
+//! [`Policy`](precision::Policy); run parameters are assembled with the
+//! [`RunSpec`](config::RunSpec) builder; the [`Runner`] facade owns the
+//! PJRT engine + manifest and hands out trainers; and
+//! [`Sweep`](coordinator::Sweep) fans policy × seed grids out across
+//! threads:
+//!
+//! ```ignore
+//! use bf16_train::{Mode, Policy, Runner, RunSpec, Sweep};
+//!
+//! let runner = Runner::open("artifacts")?;
+//! // one run
+//! let summary = runner.run(
+//!     &RunSpec::new("dlrm-small").policy(Policy::bf16(Mode::Sr16)).steps(600),
+//! )?;
+//! // a threaded policy × seed grid
+//! let results = Sweep::new(RunSpec::new("dlrm-small").steps(600))
+//!     .policies([Policy::bf16(Mode::Fp32), Policy::bf16(Mode::Sr16)])
+//!     .seeds(3)
+//!     .run(&runner)?;
+//! ```
 
 pub mod config;
 pub mod util;
@@ -27,3 +52,51 @@ pub mod metrics;
 pub mod precision;
 pub mod qsim;
 pub mod runtime;
+
+pub use config::{RunConfig, RunSpec, Schedule};
+pub use coordinator::{run_experiment, ExpOptions, RunSummary, Sweep, SweepResults, Trainer};
+pub use precision::{Format, Mode, Policy, RoundMode};
+
+use anyhow::Result;
+
+use runtime::{Engine, Manifest};
+
+/// Library-level facade over the PJRT runtime: owns the engine (with its
+/// compiled-executable cache) and the artifact manifest, and hands out
+/// [`Trainer`]s for [`RunSpec`]s.
+pub struct Runner {
+    engine: Engine,
+    manifest: Manifest,
+}
+
+impl Runner {
+    /// Open the runtime over an artifacts directory (`make artifacts`).
+    pub fn open(artifacts_dir: &str) -> Result<Runner> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let engine = Engine::cpu()?;
+        Ok(Runner { engine, manifest })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Build a live trainer for one run spec.
+    pub fn trainer(&self, spec: &RunSpec) -> Result<Trainer<'_>> {
+        self.trainer_for(spec.build())
+    }
+
+    /// Build a live trainer for a fully materialized config.
+    pub fn trainer_for(&self, cfg: RunConfig) -> Result<Trainer<'_>> {
+        Trainer::new(&self.engine, &self.manifest, cfg)
+    }
+
+    /// Run one spec end-to-end and return its summary.
+    pub fn run(&self, spec: &RunSpec) -> Result<RunSummary> {
+        self.trainer(spec)?.run()
+    }
+}

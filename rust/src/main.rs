@@ -6,14 +6,23 @@
 //!   exp <id> [--steps N] …    — regenerate one paper table/figure (or `all`)
 //!   bench-step <artifact>     — measure raw train-step latency
 //!
+//! Precision policies are typed end-to-end: `--mode sr16 --fmt e8m5` (and
+//! artifact names like `dlrm-small__sr16-e8m5`) parse through
+//! `precision::Policy`, so an invalid policy fails at the command line, not
+//! deep inside a run.  Runs are assembled with the `RunSpec` builder and
+//! executed through the library `Runner`; `exp` fans its policy × seed
+//! grids out across threads (cap with `--threads`).
+//!
 //! Python never runs here; artifacts must exist (`make artifacts`).
 
 use anyhow::{bail, Context, Result};
 
-use bf16_train::config::RunConfig;
-use bf16_train::coordinator::{run_experiment, ExpOptions, Trainer, ALL_EXPERIMENTS};
-use bf16_train::runtime::{Engine, Manifest};
+use bf16_train::config::{RunConfig, RunSpec};
+use bf16_train::coordinator::{run_experiment, ExpOptions, ALL_EXPERIMENTS};
+use bf16_train::precision::{Format, Mode, Policy};
+use bf16_train::runtime::Manifest;
 use bf16_train::util::cli::Args;
+use bf16_train::Runner;
 
 fn main() -> Result<()> {
     let mut args = Args::from_env()?;
@@ -36,14 +45,11 @@ const USAGE: &str = "usage: repro <command>
   train --app APP [--mode MODE] [--fmt FMT] [--steps N] [--seed S]
         [--lr LR] [--config FILE.toml] [--checkpoint PATH] [--resume PATH]
   exp <table1|table2|table3|table4|fig1|fig2|fig5|fig9|fig10|fig11|fig12|thm1|all>
-        [--steps N] [--seeds K] [--app APP] [--no-smooth]
-  bench-step <artifact-name> [--iters N]";
+        [--steps N] [--seeds K] [--app APP] [--threads T] [--no-smooth]
+  bench-step <artifact-name> [--iters N]
 
-fn open_runtime(artifacts_dir: &str) -> Result<(Engine, Manifest)> {
-    let engine = Engine::cpu()?;
-    let manifest = Manifest::load(artifacts_dir)?;
-    Ok((engine, manifest))
-}
+modes: fp32 standard16 mixed16 sr16 kahan16 srkahan16
+fmts:  bf16 (default) fp16 e8m5 e8m3 e8m1";
 
 fn cmd_list(args: &mut Args) -> Result<()> {
     let dir = args.opt("artifacts", "artifacts");
@@ -61,7 +67,7 @@ fn cmd_list(args: &mut Args) -> Result<()> {
 }
 
 fn cmd_train(args: &mut Args) -> Result<()> {
-    let mut cfg = match args.opt_maybe("config") {
+    let cfg = match args.opt_maybe("config") {
         Some(path) => RunConfig::from_toml_file(&path)?,
         None => {
             let app = args
@@ -70,32 +76,41 @@ fn cmd_train(args: &mut Args) -> Result<()> {
             RunConfig::defaults_for(&app)
         }
     };
+    let mut policy = cfg.policy;
     if let Some(m) = args.opt_maybe("mode") {
-        cfg.mode = m;
+        policy = Policy::new(m.parse::<Mode>()?, policy.fmt);
     }
     if let Some(f) = args.opt_maybe("fmt") {
-        cfg.fmt = f;
+        let fmt = Format::by_name(&f).with_context(|| format!("--fmt {f:?} is not a known format"))?;
+        policy = Policy::new(policy.mode, fmt);
     }
-    cfg.steps = args.opt_u64("steps", cfg.steps)?;
-    cfg.seed = args.opt_u64("seed", cfg.seed)?;
-    cfg.base_lr = args.opt_f64("lr", cfg.base_lr)?;
-    cfg.artifacts_dir = args.opt("artifacts", &cfg.artifacts_dir.clone());
+    let steps = args.opt_u64("steps", cfg.steps)?;
+    let seed = args.opt_u64("seed", cfg.seed)?;
+    let lr = args.opt_f64("lr", cfg.base_lr)?;
+    let artifacts_dir = args.opt("artifacts", &cfg.artifacts_dir.clone());
     let checkpoint = args.opt_maybe("checkpoint");
     let resume = args.opt_maybe("resume");
     args.finish()?;
 
-    let (engine, manifest) = open_runtime(&cfg.artifacts_dir)?;
+    let spec = RunSpec::from_config(cfg)
+        .policy(policy)
+        .steps(steps)
+        .seed(seed)
+        .lr(lr)
+        .artifacts_dir(&artifacts_dir);
+    let cfg = spec.build();
+    let runner = Runner::open(&artifacts_dir)?;
     println!(
         "train {} | steps={} lr={} seed={} [{} on {}]",
         cfg.artifact_name(),
         cfg.steps,
         cfg.base_lr,
         cfg.seed,
-        cfg.mode,
-        engine.platform()
+        cfg.policy.mode,
+        runner.engine().platform()
     );
     let out_dir = cfg.out_dir.clone();
-    let mut tr = Trainer::new(&engine, &manifest, cfg)?;
+    let mut tr = runner.trainer_for(cfg)?;
     if let Some(path) = resume {
         tr.load_checkpoint(&path)?;
         println!("resumed from {path}");
@@ -113,7 +128,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     std::fs::create_dir_all(&out_dir)?;
     let csv_path = format!(
         "{out_dir}/train__{}__{}__seed{}.csv",
-        summary.app, summary.mode, summary.seed
+        summary.app, summary.policy, summary.seed
     );
     std::fs::write(&csv_path, summary.history.to_csv(None))?;
     println!("history: {csv_path}");
@@ -132,6 +147,10 @@ fn cmd_exp(args: &mut Args) -> Result<()> {
         out_dir: args.opt("out", "results"),
         artifacts_dir: args.opt("artifacts", "artifacts"),
         smooth: 0.15,
+        threads: args
+            .opt_maybe("threads")
+            .map(|s| s.parse::<usize>().with_context(|| format!("--threads expects an integer, got {s:?}")))
+            .transpose()?,
     };
     if args.flag("no-smooth") {
         opts.smooth = 1.0; // Figure 6: unsmoothed curves
@@ -139,9 +158,16 @@ fn cmd_exp(args: &mut Args) -> Result<()> {
     let only_app = args.opt_maybe("app");
     args.finish()?;
 
-    // PJRT runtime is only created when an experiment needs it.
-    let runtime = open_runtime(&opts.artifacts_dir).ok();
-    let rt_ref = runtime.as_ref().map(|(e, m)| (e, m));
+    // PJRT runtime is only created when an experiment needs it.  Surface
+    // the reason it is unavailable (missing artifacts vs a build without
+    // the `pjrt` feature) instead of swallowing it.
+    let runner = match Runner::open(&opts.artifacts_dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("note: PJRT runtime unavailable ({e:#}); native experiments only");
+            None
+        }
+    };
 
     let ids: Vec<&str> = if id == "all" {
         ALL_EXPERIMENTS.to_vec()
@@ -150,7 +176,7 @@ fn cmd_exp(args: &mut Args) -> Result<()> {
     };
     for id in ids {
         eprintln!("=== experiment {id} ===");
-        let rendered = run_experiment(id, rt_ref, &opts, only_app.as_deref())?;
+        let rendered = run_experiment(id, runner.as_ref(), &opts, only_app.as_deref())?;
         println!("{rendered}");
     }
     println!("results written to {}/", opts.out_dir);
@@ -162,22 +188,17 @@ fn cmd_bench_step(args: &mut Args) -> Result<()> {
     let iters = args.opt_u64("iters", 200)?;
     let dir = args.opt("artifacts", "artifacts");
     args.finish()?;
-    let (engine, manifest) = open_runtime(&dir)?;
-    let mut cfg = RunConfig::defaults_for(name.split("__").next().unwrap_or(&name));
-    let parts: Vec<&str> = name.split("__").collect();
-    if parts.len() == 2 {
-        let (mode, fmt) = match parts[1].split_once('-') {
-            Some((m, f)) => (m.to_string(), f.to_string()),
-            None => (parts[1].to_string(), "bf16".to_string()),
-        };
-        cfg.mode = mode;
-        cfg.fmt = fmt;
-    }
-    cfg.artifacts_dir = dir;
-    cfg.steps = iters;
-    let mut tr = Trainer::new(&engine, &manifest, cfg)?;
-    // warmup
-    tr.run_steps(iters.min(20))?;
+    let (app, policy) = Policy::parse_artifact_name(&name)?;
+    // Budget warmup + timed iters so the timed region runs mid-schedule
+    // (WarmupLinear decays to 0 once steps_done exceeds cfg.steps).
+    let warmup = iters.min(20);
+    let spec = RunSpec::new(&app)
+        .policy(policy)
+        .steps(warmup + iters)
+        .artifacts_dir(&dir);
+    let runner = Runner::open(&dir)?;
+    let mut tr = runner.trainer(&spec)?;
+    tr.run_steps(warmup)?;
     let t0 = std::time::Instant::now();
     tr.run_steps(iters)?;
     let dt = t0.elapsed().as_secs_f64();

@@ -11,11 +11,17 @@
 //! This substrate powers the rust-native quantised trainer (`qsim`), the
 //! theory-validation experiments (Figure 2, Theorem 1) and the property
 //! tests; the PJRT path does its rounding *inside* the lowered HLO instead.
+//!
+//! [`Policy`] (mode × format, with the derived rounding scheme) is the typed
+//! precision-policy core shared by config, qsim, runtime and coordinator —
+//! the single place the `"sr16-e8m5"` naming convention is parsed/printed.
 
 mod format;
 mod kahan;
+mod policy;
 mod round;
 
 pub use format::{Format, ALL, BF16, E8M1, E8M3, E8M5, FP16, FP32};
 pub use kahan::{kahan_add, KahanAcc};
+pub use policy::{Mode, Policy, PolicyParseError};
 pub use round::{round_nearest, round_stochastic, RoundMode, Rounder};

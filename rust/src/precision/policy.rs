@@ -1,0 +1,293 @@
+//! The typed precision policy — the paper's central experiment axis.
+//!
+//! A [`Policy`] is the (training mode × storage format) pair that selects an
+//! AOT artifact, an optimizer update rule and a rounding scheme.  It
+//! round-trips the artifact naming convention used throughout the repo:
+//! `"sr16"` (bare mode implies bf16) and `"sr16-e8m5"` (explicit format),
+//! and `"app__sr16-e8m5"` for full artifact names.  Every call site that
+//! used to re-split those strings by hand (config loading, the CLI,
+//! `qsim::optim`, the manifest) now goes through this module.
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::format::{Format, BF16, FP32};
+use super::round::RoundMode;
+
+/// Weight-update policy for one training run (the paper's Algorithms 1-3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// Exact 32-bit training (baseline).
+    Fp32,
+    /// Pure 16-bit FPU with nearest rounding everywhere (the failing mode).
+    Standard16,
+    /// 16-bit compute + 32-bit master weights (Micikevicius et al.).
+    Mixed16,
+    /// 16-bit with stochastic rounding on the weight update (Algorithm 2).
+    Sr16,
+    /// 16-bit with Kahan-compensated weight accumulation (Algorithm 3).
+    Kahan16,
+    /// Stochastic rounding and Kahan summation combined (Figure 11).
+    SrKahan16,
+}
+
+impl Mode {
+    pub const ALL: [Mode; 6] = [
+        Mode::Fp32,
+        Mode::Standard16,
+        Mode::Mixed16,
+        Mode::Sr16,
+        Mode::Kahan16,
+        Mode::SrKahan16,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Fp32 => "fp32",
+            Mode::Standard16 => "standard16",
+            Mode::Mixed16 => "mixed16",
+            Mode::Sr16 => "sr16",
+            Mode::Kahan16 => "kahan16",
+            Mode::SrKahan16 => "srkahan16",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Mode> {
+        Mode::ALL.into_iter().find(|m| m.name() == name)
+    }
+
+    pub fn exact_update(&self) -> bool {
+        matches!(self, Mode::Fp32 | Mode::Mixed16)
+    }
+
+    pub fn stochastic(&self) -> bool {
+        matches!(self, Mode::Sr16 | Mode::SrKahan16)
+    }
+
+    pub fn kahan(&self) -> bool {
+        matches!(self, Mode::Kahan16 | Mode::SrKahan16)
+    }
+
+    /// Rounding applied to the weight-accumulate output under this mode.
+    pub fn round_mode(&self) -> RoundMode {
+        if self.exact_update() {
+            RoundMode::Exact
+        } else if self.stochastic() {
+            RoundMode::Stochastic
+        } else {
+            RoundMode::Nearest
+        }
+    }
+
+    /// Format for forward/backward compute under this mode.
+    pub fn compute_fmt(&self, fmt: Format) -> Format {
+        match self {
+            Mode::Fp32 => FP32,
+            _ => fmt,
+        }
+    }
+}
+
+impl fmt::Display for Mode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Mode {
+    type Err = PolicyParseError;
+
+    fn from_str(s: &str) -> Result<Mode, PolicyParseError> {
+        Mode::by_name(s).ok_or_else(|| PolicyParseError::unknown_mode(s))
+    }
+}
+
+/// Error returned by the `Policy`/`Mode` parsers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PolicyParseError {
+    msg: String,
+}
+
+impl PolicyParseError {
+    fn unknown_mode(s: &str) -> Self {
+        let known: Vec<&str> = Mode::ALL.iter().map(|m| m.name()).collect();
+        Self { msg: format!("unknown precision mode {s:?} (known: {})", known.join(" ")) }
+    }
+
+    fn unknown_fmt(s: &str) -> Self {
+        let known: Vec<&str> = super::format::ALL.iter().map(|f| f.name).collect();
+        Self { msg: format!("unknown numeric format {s:?} (known: {})", known.join(" ")) }
+    }
+}
+
+impl fmt::Display for PolicyParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for PolicyParseError {}
+
+/// A complete precision policy: mode × storage format, with the derived
+/// weight-update rounding mode and Kahan flag cached alongside.
+///
+/// `round` and `kahan` are derived from `mode` — construct policies through
+/// [`Policy::new`] / [`Policy::parse`] so they stay consistent.  Equality
+/// and hashing compare only the semantic `(mode, fmt)` key, so a struct
+/// literal with stale derived fields can never break grid lookups.
+#[derive(Debug, Clone, Copy, Eq)]
+pub struct Policy {
+    pub mode: Mode,
+    pub fmt: Format,
+    pub round: RoundMode,
+    pub kahan: bool,
+}
+
+impl PartialEq for Policy {
+    fn eq(&self, other: &Policy) -> bool {
+        self.mode == other.mode && self.fmt == other.fmt
+    }
+}
+
+impl std::hash::Hash for Policy {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.mode.hash(state);
+        self.fmt.hash(state);
+    }
+}
+
+impl Policy {
+    /// Build a policy, deriving the rounding mode and Kahan flag.
+    pub fn new(mode: Mode, fmt: Format) -> Policy {
+        Policy { mode, fmt, round: mode.round_mode(), kahan: mode.kahan() }
+    }
+
+    /// The common case: a mode over bf16 storage.
+    pub fn bf16(mode: Mode) -> Policy {
+        Policy::new(mode, BF16)
+    }
+
+    /// Parse from one mode string and one format string (e.g. CLI
+    /// `--mode sr16 --fmt e8m5`, or the manifest's metadata fields).
+    pub fn from_parts(mode: &str, fmt: &str) -> Result<Policy, PolicyParseError> {
+        let mode = mode.parse::<Mode>()?;
+        let fmt = Format::by_name(fmt).ok_or_else(|| PolicyParseError::unknown_fmt(fmt))?;
+        Ok(Policy::new(mode, fmt))
+    }
+
+    /// Parse a policy name: `"sr16"` (bare mode ⇒ bf16) or `"sr16-e8m5"`.
+    pub fn parse(s: &str) -> Result<Policy, PolicyParseError> {
+        match s.split_once('-') {
+            None => Ok(Policy::bf16(s.parse::<Mode>()?)),
+            Some((mode, fmt)) => Policy::from_parts(mode, fmt),
+        }
+    }
+
+    /// Format for forward/backward compute under this policy.
+    pub fn compute_fmt(&self) -> Format {
+        self.mode.compute_fmt(self.fmt)
+    }
+
+    /// Artifact name in the manifest: `app__mode`, or `app__mode-fmt` for
+    /// non-bf16 formats (the bare-bf16 suffix-elision rule).
+    pub fn artifact_name(&self, app: &str) -> String {
+        format!("{app}__{self}")
+    }
+
+    /// Inverse of [`Policy::artifact_name`]: split `"app__mode-fmt"` into
+    /// the application and its policy.  A bare application name (no `"__"`)
+    /// yields the default fp32/bf16 policy.
+    pub fn parse_artifact_name(name: &str) -> Result<(String, Policy), PolicyParseError> {
+        match name.split_once("__") {
+            None => Ok((name.to_string(), Policy::default())),
+            Some((app, policy)) => Ok((app.to_string(), Policy::parse(policy)?)),
+        }
+    }
+}
+
+impl Default for Policy {
+    /// The 32-bit baseline over bf16 storage (matching `RunConfig` defaults).
+    fn default() -> Policy {
+        Policy::bf16(Mode::Fp32)
+    }
+}
+
+impl fmt::Display for Policy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.fmt == BF16 {
+            f.write_str(self.mode.name())
+        } else {
+            write!(f, "{}-{}", self.mode.name(), self.fmt.name)
+        }
+    }
+}
+
+impl FromStr for Policy {
+    type Err = PolicyParseError;
+
+    fn from_str(s: &str) -> Result<Policy, PolicyParseError> {
+        Policy::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::{E8M5, FP16};
+    use super::*;
+
+    #[test]
+    fn mode_round_trip_by_name() {
+        for m in Mode::ALL {
+            assert_eq!(Mode::by_name(m.name()), Some(m));
+            assert_eq!(m.name().parse::<Mode>(), Ok(m));
+        }
+        assert_eq!(Mode::by_name("bogus"), None);
+        assert!("bogus".parse::<Mode>().is_err());
+    }
+
+    #[test]
+    fn derived_fields_follow_mode() {
+        assert_eq!(Policy::bf16(Mode::Fp32).round, RoundMode::Exact);
+        assert_eq!(Policy::bf16(Mode::Mixed16).round, RoundMode::Exact);
+        assert_eq!(Policy::bf16(Mode::Standard16).round, RoundMode::Nearest);
+        assert_eq!(Policy::bf16(Mode::Sr16).round, RoundMode::Stochastic);
+        let combo = Policy::bf16(Mode::SrKahan16);
+        assert_eq!(combo.round, RoundMode::Stochastic);
+        assert!(combo.kahan);
+        assert!(Policy::bf16(Mode::Kahan16).kahan);
+        assert!(!Policy::bf16(Mode::Sr16).kahan);
+    }
+
+    #[test]
+    fn display_elides_bf16() {
+        assert_eq!(Policy::bf16(Mode::Sr16).to_string(), "sr16");
+        assert_eq!(Policy::new(Mode::Sr16, E8M5).to_string(), "sr16-e8m5");
+        assert_eq!(Policy::new(Mode::Kahan16, FP16).to_string(), "kahan16-fp16");
+    }
+
+    #[test]
+    fn parse_accepts_explicit_bf16_and_normalizes() {
+        let p = Policy::parse("sr16-bf16").unwrap();
+        assert_eq!(p, Policy::bf16(Mode::Sr16));
+        assert_eq!(p.to_string(), "sr16");
+    }
+
+    #[test]
+    fn artifact_names_round_trip() {
+        let p = Policy::new(Mode::Kahan16, E8M5);
+        assert_eq!(p.artifact_name("dlrm-small"), "dlrm-small__kahan16-e8m5");
+        let (app, q) = Policy::parse_artifact_name("dlrm-small__kahan16-e8m5").unwrap();
+        assert_eq!(app, "dlrm-small");
+        assert_eq!(q, p);
+        // bare app name (no policy suffix) defaults to fp32/bf16
+        let (app, q) = Policy::parse_artifact_name("lsq").unwrap();
+        assert_eq!(app, "lsq");
+        assert_eq!(q, Policy::default());
+    }
+
+    #[test]
+    fn compute_fmt_only_fp32_escapes() {
+        assert!(Policy::bf16(Mode::Fp32).compute_fmt().is_fp32());
+        assert_eq!(Policy::new(Mode::Sr16, E8M5).compute_fmt(), E8M5);
+    }
+}

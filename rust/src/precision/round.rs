@@ -4,7 +4,7 @@ use super::format::Format;
 use crate::util::rng::Rng;
 
 /// How an operator output is rounded onto the target format.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RoundMode {
     /// Round-to-nearest-even (the standard FMAC output mode).
     Nearest,

@@ -8,10 +8,10 @@
 //! the rounding behaviour of interest lives in the *updates*, not the
 //! interaction flavour), a top MLP to a single logit, BCE loss.
 
-use crate::precision::Format;
+use crate::precision::{Format, Mode};
 use crate::util::rng::{Rng, ZipfTable};
 
-use super::optim::{Mode, Sgd, SgdState, UpdateStats};
+use super::optim::{Sgd, SgdState, UpdateStats};
 use super::tape::{QPolicy, Tape, Var};
 use super::tensor::Tensor;
 

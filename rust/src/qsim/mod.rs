@@ -14,6 +14,7 @@ pub mod optim;
 pub mod tape;
 pub mod tensor;
 
-pub use optim::{Mode, Sgd, SgdState, UpdateStats};
+pub use crate::precision::Mode;
+pub use optim::{Sgd, SgdState, UpdateStats};
 pub use tape::{QPolicy, Tape, Var};
 pub use tensor::Tensor;

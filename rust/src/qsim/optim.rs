@@ -5,67 +5,10 @@
 //! fast paths) and by the property-test suite; the PJRT path runs the same
 //! algorithms inside lowered HLO instead.
 
-use crate::precision::{round_nearest, round_stochastic, Format, BF16};
+use crate::precision::{round_nearest, round_stochastic, Format, Mode, Policy, BF16};
 use crate::util::rng::Rng;
 
 use super::tensor::Tensor;
-
-/// Full precision policy for one training run (mirror of PrecisionMode).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Mode {
-    Fp32,
-    Standard16,
-    Mixed16,
-    Sr16,
-    Kahan16,
-    SrKahan16,
-}
-
-impl Mode {
-    pub const ALL: [Mode; 6] = [
-        Mode::Fp32,
-        Mode::Standard16,
-        Mode::Mixed16,
-        Mode::Sr16,
-        Mode::Kahan16,
-        Mode::SrKahan16,
-    ];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Mode::Fp32 => "fp32",
-            Mode::Standard16 => "standard16",
-            Mode::Mixed16 => "mixed16",
-            Mode::Sr16 => "sr16",
-            Mode::Kahan16 => "kahan16",
-            Mode::SrKahan16 => "srkahan16",
-        }
-    }
-
-    pub fn by_name(name: &str) -> Option<Mode> {
-        Mode::ALL.into_iter().find(|m| m.name() == name)
-    }
-
-    pub fn exact_update(&self) -> bool {
-        matches!(self, Mode::Fp32 | Mode::Mixed16)
-    }
-
-    pub fn stochastic(&self) -> bool {
-        matches!(self, Mode::Sr16 | Mode::SrKahan16)
-    }
-
-    pub fn kahan(&self) -> bool {
-        matches!(self, Mode::Kahan16 | Mode::SrKahan16)
-    }
-
-    /// Format for forward/backward compute under this mode.
-    pub fn compute_fmt(&self, fmt: Format) -> Format {
-        match self {
-            Mode::Fp32 => crate::precision::FP32,
-            _ => fmt,
-        }
-    }
-}
 
 /// Per-step statistics (Figure 9's cancellation telemetry).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -115,6 +58,11 @@ impl Sgd {
 
     pub fn bf16(mode: Mode, momentum: f32, weight_decay: f32, seed: u64) -> Self {
         Self::new(mode, BF16, momentum, weight_decay, seed)
+    }
+
+    /// Build from a typed precision policy.
+    pub fn from_policy(policy: Policy, momentum: f32, weight_decay: f32, seed: u64) -> Self {
+        Self::new(policy.mode, policy.fmt, momentum, weight_decay, seed)
     }
 
     pub fn init_state(&self, w: &Tensor) -> SgdState {
@@ -253,10 +201,10 @@ mod tests {
     }
 
     #[test]
-    fn mode_round_trip_by_name() {
-        for m in Mode::ALL {
-            assert_eq!(Mode::by_name(m.name()), Some(m));
-        }
-        assert_eq!(Mode::by_name("bogus"), None);
+    fn from_policy_binds_mode_and_fmt() {
+        let p = Policy::parse("sr16-e8m5").unwrap();
+        let opt = Sgd::from_policy(p, 0.9, 0.0, 1);
+        assert_eq!(opt.mode, Mode::Sr16);
+        assert_eq!(opt.fmt, crate::precision::E8M5);
     }
 }

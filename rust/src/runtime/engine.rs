@@ -10,6 +10,8 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
+use super::xla;
+
 /// Process-wide PJRT client + executable cache.
 pub struct Engine {
     client: xla::PjRtClient,

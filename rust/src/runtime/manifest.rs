@@ -10,6 +10,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::precision::Policy;
 use crate::util::json::Json;
 
 /// Role of one executable input/output slot.
@@ -194,6 +195,12 @@ impl Artifact {
     pub fn hparam(&self, key: &str) -> i64 {
         self.hparams.get(key).copied().unwrap_or(0)
     }
+
+    /// Typed precision policy from the manifest's mode/fmt metadata.
+    pub fn policy(&self) -> Result<Policy> {
+        Policy::from_parts(&self.mode, &self.fmt)
+            .with_context(|| format!("artifact {:?} metadata", self.name))
+    }
 }
 
 /// The whole manifest plus its directory (for resolving file names).
@@ -289,6 +296,9 @@ mod tests {
         assert_eq!(a.train_inputs[1].elements(), 10);
         assert_eq!(m.for_app("lsq").len(), 1);
         assert!(m.get("nope").is_err());
+        let p = a.policy().unwrap();
+        assert_eq!(p, Policy::parse("sr16").unwrap());
+        assert_eq!(p.artifact_name(&a.app), a.name);
     }
 
     #[test]

@@ -2,10 +2,20 @@
 //!
 //! Loads the HLO-text artifacts produced by `python -m compile.aot` (the only
 //! place python runs) and executes them from the rust request path.
+//!
+//! The PJRT dependency (the `xla` crate + XLA C library) is gated behind the
+//! `pjrt` cargo feature.  Without it, the crate still builds — the native
+//! `qsim` experiments, the precision substrate and all pure components work —
+//! and `Engine::cpu()` returns a clear runtime error instead.
 
 mod engine;
 mod manifest;
 mod session;
+
+#[cfg(feature = "pjrt")]
+pub(crate) use ::xla;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod xla;
 
 pub use engine::Engine;
 pub use manifest::{Artifact, DType, Files, Manifest, Role, Slot};

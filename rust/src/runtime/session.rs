@@ -7,8 +7,11 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::precision::Policy;
+
 use super::engine::Engine;
 use super::manifest::{Artifact, DType, Manifest, Role, Slot};
+use super::xla;
 
 /// One host-side batch matching the artifact's x/y slots.
 #[derive(Debug, Clone, PartialEq)]
@@ -81,6 +84,11 @@ pub struct TrainSession {
 }
 
 impl TrainSession {
+    /// Typed entry point: open the session for `app` under `policy`.
+    pub fn open(engine: &Engine, manifest: &Manifest, app: &str, policy: Policy) -> Result<Self> {
+        Self::new(engine, manifest, &policy.artifact_name(app))
+    }
+
     /// Compile (or fetch from cache) the artifact's executables.
     pub fn new(engine: &Engine, manifest: &Manifest, name: &str) -> Result<Self> {
         let artifact = manifest.get(name)?.clone();

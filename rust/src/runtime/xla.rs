@@ -1,0 +1,120 @@
+//! Minimal stand-in for the `xla` crate, compiled when the `pjrt` cargo
+//! feature is off (the default in dependency-free builds).
+//!
+//! Mirrors exactly the API surface `engine.rs`/`session.rs` use, so the
+//! whole crate type-checks without the XLA C library; every entry point that
+//! would touch PJRT returns a runtime error instead.  Enable `--features
+//! pjrt` to link the real bindings.
+
+use std::fmt;
+
+/// Error for any stubbed PJRT call.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT runtime not compiled in: rebuild with `--features pjrt` \
+         (requires the `xla` crate and the XLA C library)"
+            .to_string(),
+    ))
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_vals: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T>(_val: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        unavailable()
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+pub struct Shape;
+
+impl Shape {
+    pub fn is_tuple(&self) -> bool {
+        false
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}

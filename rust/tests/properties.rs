@@ -5,7 +5,7 @@
 
 use bf16_train::config::Schedule;
 use bf16_train::precision::{
-    kahan_add, round_nearest, round_stochastic, Format, ALL, BF16,
+    kahan_add, round_nearest, round_stochastic, Format, Mode, Policy, ALL, BF16,
 };
 use bf16_train::qsim::{QPolicy, Tape, Tensor};
 use bf16_train::util::rng::Rng;
@@ -189,6 +189,92 @@ fn prop_data_generators_deterministic_across_instances() {
             for _ in 0..3 {
                 assert_eq!(a.next_batch(), b.next_batch(), "{}", a.name());
             }
+        }
+    }
+}
+
+#[test]
+fn prop_policy_parse_display_round_trips_exhaustively() {
+    // every mode × format combination must survive Display → parse, and the
+    // artifact-name rule (bare bf16 suffix elision) must invert exactly
+    for mode in Mode::ALL {
+        for fmt in ALL {
+            let p = Policy::new(mode, fmt);
+            let name = p.to_string();
+            assert_eq!(name.parse::<Policy>().unwrap(), p, "policy name {name:?}");
+            if fmt == BF16 {
+                assert_eq!(name, mode.name(), "bf16 suffix must be elided");
+            } else {
+                assert_eq!(name, format!("{}-{}", mode.name(), fmt.name));
+            }
+            for app in ["lsq", "dlrm-small", "gpt-tiny"] {
+                let artifact = p.artifact_name(app);
+                let (got_app, got_p) = Policy::parse_artifact_name(&artifact).unwrap();
+                assert_eq!((got_app.as_str(), got_p), (app, p), "artifact {artifact:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_policy_rejects_malformed_strings() {
+    for bad in [
+        "",
+        "bogus",
+        "SR16",
+        "fp32 ",
+        " fp32",
+        "sr16-",
+        "-bf16",
+        "sr16-nope",
+        "sr16-e8m5-x",
+        "sr16_e8m5",
+    ] {
+        assert!(bad.parse::<Policy>().is_err(), "{bad:?} should not parse");
+    }
+    assert!(Policy::parse_artifact_name("dlrm__bogus").is_err());
+    assert!(Policy::from_parts("sr16", "nope").is_err());
+    assert!(Policy::from_parts("nope", "bf16").is_err());
+}
+
+#[test]
+fn prop_dataset_skip_equals_consuming_batches() {
+    use bf16_train::data::{Ctr, Dataset, Images, Regression, SeqFrames, TokenCls, TokenLm};
+    // skip(n) must land the generator exactly where n next_batch calls do,
+    // for every generator and several skip lengths
+    for n in [1u64, 2, 5] {
+        let pairs: Vec<(Box<dyn Dataset>, Box<dyn Dataset>)> = vec![
+            (
+                Box::new(Regression::new(10, 4, 1, 0x7E)),
+                Box::new(Regression::new(10, 4, 1, 0x7E)),
+            ),
+            (
+                Box::new(Images::new(16, 10, 4, 2, 0x7E)),
+                Box::new(Images::new(16, 10, 4, 2, 0x7E)),
+            ),
+            (
+                Box::new(Ctr::new(8, 4, 50, 16, 3, 0x7E)),
+                Box::new(Ctr::new(8, 4, 50, 16, 3, 0x7E)),
+            ),
+            (
+                Box::new(TokenCls::new(64, 8, 3, 8, 4, 0x7E)),
+                Box::new(TokenCls::new(64, 8, 3, 8, 4, 0x7E)),
+            ),
+            (
+                Box::new(TokenLm::new(64, 8, 4, 5, 0x7E)),
+                Box::new(TokenLm::new(64, 8, 4, 5, 0x7E)),
+            ),
+            (
+                Box::new(SeqFrames::new(8, 6, 4, 4, 6, 0x7E)),
+                Box::new(SeqFrames::new(8, 6, 4, 4, 6, 0x7E)),
+            ),
+        ];
+        for (mut a, mut b) in pairs {
+            a.skip(n);
+            for _ in 0..n {
+                b.next_batch();
+            }
+            assert_eq!(a.next_batch(), b.next_batch(), "{} skip({n})", a.name());
         }
     }
 }

@@ -2,41 +2,37 @@
 //! checkpoint, and verify the paper's qualitative behaviour on the lsq app.
 //!
 //! These tests need `make artifacts` to have produced at least the lsq
-//! artifact set; they skip with a notice otherwise.  They share one PJRT
-//! client (creating several in one process is wasteful but safe).
+//! artifact set; they skip with a notice otherwise.  Runs go through the
+//! library `Runner` facade with `RunSpec`-built configs.
 
-use bf16_train::config::RunConfig;
-use bf16_train::coordinator::Trainer;
-use bf16_train::runtime::{Engine, Manifest};
+use bf16_train::{Policy, RunSpec, Runner};
 
-fn runtime() -> Option<(Engine, Manifest)> {
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    let manifest = match Manifest::load(dir) {
-        Ok(m) => m,
-        Err(_) => {
-            eprintln!("SKIP: no artifacts (run `make artifacts`)");
-            return None;
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn runtime() -> Option<Runner> {
+    match Runner::open(ARTIFACTS) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP: runtime unavailable ({e:#}); run `make artifacts`");
+            None
         }
-    };
-    let engine = Engine::cpu().expect("PJRT CPU client");
-    Some((engine, manifest))
+    }
 }
 
-fn lsq_cfg(mode: &str, steps: u64, seed: u64) -> RunConfig {
-    let mut cfg = RunConfig::defaults_for("lsq");
-    cfg.mode = mode.to_string();
-    cfg.steps = steps;
-    cfg.seed = seed;
-    cfg.eval_every = steps;
-    cfg.artifacts_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string();
-    cfg
+fn lsq_spec(mode: &str, steps: u64, seed: u64) -> RunSpec {
+    RunSpec::new("lsq")
+        .policy(Policy::parse(mode).unwrap())
+        .steps(steps)
+        .seed(seed)
+        .eval_every(steps)
+        .artifacts_dir(ARTIFACTS)
 }
 
 #[test]
 fn fp32_training_descends_and_is_deterministic() {
-    let Some((engine, manifest)) = runtime() else { return };
+    let Some(runner) = runtime() else { return };
     let run = |seed| {
-        let mut tr = Trainer::new(&engine, &manifest, lsq_cfg("fp32", 400, seed)).unwrap();
+        let mut tr = runner.trainer(&lsq_spec("fp32", 400, seed)).unwrap();
         tr.run().unwrap()
     };
     let a = run(1);
@@ -49,9 +45,9 @@ fn fp32_training_descends_and_is_deterministic() {
 
 #[test]
 fn standard16_halts_above_fp32_and_fixes_recover() {
-    let Some((engine, manifest)) = runtime() else { return };
+    let Some(runner) = runtime() else { return };
     let final_loss = |mode: &str| {
-        let mut tr = Trainer::new(&engine, &manifest, lsq_cfg(mode, 4000, 0)).unwrap();
+        let mut tr = runner.trainer(&lsq_spec(mode, 4000, 0)).unwrap();
         let s = tr.run().unwrap();
         (s.final_train_loss, s.mean_cancel_frac)
     };
@@ -69,20 +65,20 @@ fn standard16_halts_above_fp32_and_fixes_recover() {
 
 #[test]
 fn checkpoint_round_trip_resumes_identically() {
-    let Some((engine, manifest)) = runtime() else { return };
+    let Some(runner) = runtime() else { return };
     let dir = std::env::temp_dir().join("bf16_ckpt_test");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("lsq.ckpt");
 
     // train 200 steps, checkpoint, train 200 more
-    let mut tr = Trainer::new(&engine, &manifest, lsq_cfg("sr16", 400, 3)).unwrap();
+    let mut tr = runner.trainer(&lsq_spec("sr16", 400, 3)).unwrap();
     tr.run_steps(200).unwrap();
     tr.save_checkpoint(&path).unwrap();
     tr.run_steps(200).unwrap();
     let (loss_a, _) = tr.evaluate(4).unwrap();
 
     // restore and redo the same 200 steps
-    let mut tr2 = Trainer::new(&engine, &manifest, lsq_cfg("sr16", 400, 3)).unwrap();
+    let mut tr2 = runner.trainer(&lsq_spec("sr16", 400, 3)).unwrap();
     tr2.load_checkpoint(&path).unwrap();
     tr2.run_steps(200).unwrap();
     let (loss_b, _) = tr2.evaluate(4).unwrap();
@@ -90,9 +86,29 @@ fn checkpoint_round_trip_resumes_identically() {
 }
 
 #[test]
+fn checkpoint_rejects_mismatched_artifact() {
+    let Some(runner) = runtime() else { return };
+    let dir = std::env::temp_dir().join("bf16_ckpt_mismatch_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("lsq_sr16.ckpt");
+
+    let mut tr = runner.trainer(&lsq_spec("sr16", 100, 0)).unwrap();
+    tr.run_steps(10).unwrap();
+    tr.save_checkpoint(&path).unwrap();
+
+    // same app, same state shapes — but a different policy must be refused
+    let mut other = runner.trainer(&lsq_spec("kahan16", 100, 0)).unwrap();
+    let err = other.load_checkpoint(&path).unwrap_err().to_string();
+    assert!(
+        err.contains("lsq__sr16") && err.contains("lsq__kahan16"),
+        "error should name both artifacts: {err}"
+    );
+}
+
+#[test]
 fn weights_remain_bf16_representable_in_16bit_modes() {
-    let Some((engine, manifest)) = runtime() else { return };
-    let mut tr = Trainer::new(&engine, &manifest, lsq_cfg("standard16", 50, 0)).unwrap();
+    let Some(runner) = runtime() else { return };
+    let mut tr = runner.trainer(&lsq_spec("standard16", 50, 0)).unwrap();
     tr.run_steps(50).unwrap();
     // reach into the session: params are the first num_params state tensors
     let summary_session = tr; // Trainer owns the session privately; use checkpoint
@@ -101,12 +117,19 @@ fn weights_remain_bf16_representable_in_16bit_modes() {
     let path = dir.join("w.ckpt");
     summary_session.save_checkpoint(&path).unwrap();
     let buf = std::fs::read(&path).unwrap();
-    // parse: skip magic+step+count, then first tensor
-    let n_tensors = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+    // parse the v2 layout: magic, name_len + name, steps, tensor count,
+    // then the first tensor's length + f32 data
+    assert_eq!(&buf[..8], b"BF16CKP2");
+    let name_len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    assert_eq!(&buf[16..16 + name_len], b"lsq__standard16");
+    let mut off = 16 + name_len + 8; // skip the step counter
+    let n_tensors = u64::from_le_bytes(buf[off..off + 8].try_into().unwrap()) as usize;
     assert!(n_tensors >= 2);
-    let len = u64::from_le_bytes(buf[24..32].try_into().unwrap()) as usize;
+    off += 8;
+    let len = u64::from_le_bytes(buf[off..off + 8].try_into().unwrap()) as usize;
+    off += 8;
     for k in 0..len {
-        let v = f32::from_le_bytes(buf[32 + 4 * k..36 + 4 * k].try_into().unwrap());
+        let v = f32::from_le_bytes(buf[off + 4 * k..off + 4 * k + 4].try_into().unwrap());
         let q = bf16_train::precision::round_nearest(v, bf16_train::precision::BF16);
         assert_eq!(v.to_bits(), q.to_bits(), "weight {k} not bf16-representable: {v}");
     }
@@ -114,16 +137,13 @@ fn weights_remain_bf16_representable_in_16bit_modes() {
 
 #[test]
 fn eval_preds_match_batch_size() {
-    let Some((engine, manifest)) = runtime() else { return };
-    let Ok(_a) = manifest.get("dlrm-small__fp32") else {
+    let Some(runner) = runtime() else { return };
+    let Ok(_a) = runner.manifest().get("dlrm-small__fp32") else {
         eprintln!("SKIP: dlrm-small artifacts not built");
         return;
     };
-    let mut cfg = RunConfig::defaults_for("dlrm-small");
-    cfg.steps = 5;
-    cfg.eval_every = 5;
-    cfg.artifacts_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string();
-    let mut tr = Trainer::new(&engine, &manifest, cfg).unwrap();
+    let spec = RunSpec::new("dlrm-small").steps(5).eval_every(5).artifacts_dir(ARTIFACTS);
+    let mut tr = runner.trainer(&spec).unwrap();
     tr.run_steps(5).unwrap();
     let (loss, auc) = tr.evaluate(2).unwrap();
     assert!(loss.is_finite());

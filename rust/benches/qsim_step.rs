@@ -1,0 +1,112 @@
+//! Native-step bench baseline: times lsq + dlrm train steps per precision
+//! mode on the vectorized `Fast` backend against the scalar `Reference`
+//! backend (the pre-optimization code path), with no PJRT artifacts needed.
+//!
+//! Emits `BENCH_qsim.json` (override the path with `QSIM_BENCH_OUT`) so
+//! future PRs have a throughput trajectory to compare against.  Set
+//! `QSIM_BENCH_SMOKE=1` (or pass `--smoke`) for a tiny CI-sized iteration
+//! budget that only verifies the target still runs end to end.
+
+use bf16_train::qsim::dlrm::{DlrmConfig, DlrmTrainer};
+use bf16_train::qsim::lsq::{self, LsqConfig, LsqData, Placement};
+use bf16_train::qsim::{Backend, Mode, Tensor};
+use bf16_train::util::bench::{bench, bench_n, black_box, write_bench_json, BenchResult};
+use bf16_train::util::rng::Rng;
+
+fn timed(smoke: bool, name: &str, f: impl FnMut()) -> BenchResult {
+    if smoke {
+        bench_n(name, 3, f)
+    } else {
+        bench(name, f)
+    }
+}
+
+fn dlrm_trainer(mode: Mode, backend: Backend) -> DlrmTrainer {
+    let cfg = DlrmConfig { seed: 3, backend, ..Default::default() };
+    let mut tr = DlrmTrainer::new(cfg, mode);
+    // warm the tape arena / allocator so we time steady state
+    for _ in 0..3 {
+        tr.step(0.05);
+    }
+    tr
+}
+
+fn main() {
+    let smoke = std::env::var("QSIM_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke");
+    let out_path =
+        std::env::var("QSIM_BENCH_OUT").unwrap_or_else(|_| "BENCH_qsim.json".into());
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    // -- kernel micro-bench: tiled vs reference matmul ----------------------
+    let mut rng = Rng::new(1, 0);
+    let a = Tensor::randn(128, 256, 1.0, &mut rng);
+    let b = Tensor::randn(256, 64, 1.0, &mut rng);
+    let fast_mm = timed(smoke, "matmul 128x256x64 tiled", || {
+        black_box(a.matmul(&b));
+    });
+    let ref_mm = timed(smoke, "matmul 128x256x64 reference", || {
+        black_box(a.matmul_reference(&b));
+    });
+    derived.push(("speedup_matmul_128x256x64".into(), ref_mm.median_ns / fast_mm.median_ns));
+    results.extend([fast_mm, ref_mm]);
+
+    // -- dlrm-small train step, per mode and backend ------------------------
+    for mode in [Mode::Fp32, Mode::Standard16, Mode::Sr16, Mode::Kahan16, Mode::SrKahan16] {
+        let mut pair = Vec::new();
+        for backend in [Backend::Fast, Backend::Reference] {
+            let mut tr = dlrm_trainer(mode, backend);
+            let r = timed(
+                smoke,
+                &format!("dlrm-small step {} {}", mode.name(), backend.name()),
+                || {
+                    black_box(tr.step(0.05));
+                },
+            );
+            pair.push(r.median_ns);
+            results.push(r);
+        }
+        let speedup = pair[1] / pair[0];
+        println!("  ↳ dlrm-small {} speedup fast/reference: {speedup:.2}x", mode.name());
+        derived.push((format!("speedup_dlrm_{}", mode.name()), speedup));
+    }
+
+    // -- lsq theory loop, per rounding placement ----------------------------
+    let steps = if smoke { 50 } else { 1000 };
+    let cfg = LsqConfig { steps, n_samples: 256, ..LsqConfig::default() };
+    let data = LsqData::generate(&cfg);
+    for placement in
+        [Placement::WeightUpdate, Placement::WeightUpdateSr, Placement::WeightUpdateKahan]
+    {
+        let r = timed(smoke, &format!("lsq {steps} steps {}", placement.name()), || {
+            black_box(lsq::run(&cfg, &data, placement));
+        });
+        results.push(r);
+    }
+
+    // -- bit-identity spot check (the test suite asserts this too) ----------
+    let parity_steps = if smoke { 10 } else { 100 };
+    let mut fast = {
+        let cfg = DlrmConfig { seed: 11, backend: Backend::Fast, ..Default::default() };
+        DlrmTrainer::new(cfg, Mode::Sr16)
+    };
+    let mut reference = {
+        let cfg = DlrmConfig { seed: 11, backend: Backend::Reference, ..Default::default() };
+        DlrmTrainer::new(cfg, Mode::Sr16)
+    };
+    for s in 0..parity_steps {
+        let a = fast.step(0.05);
+        let b = reference.step(0.05);
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "fast/reference loss diverged at step {s}"
+        );
+    }
+    println!("parity: {parity_steps} sr16 steps bit-identical across backends");
+    derived.push(("parity_sr16_steps".into(), parity_steps as f64));
+
+    write_bench_json(&out_path, &results, &derived).expect("writing bench json");
+    println!("wrote {out_path}");
+}

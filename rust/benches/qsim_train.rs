@@ -12,8 +12,13 @@ fn main() {
     let a = Tensor::randn(128, 256, 1.0, &mut rng);
     let b = Tensor::randn(256, 64, 1.0, &mut rng);
 
-    let r = bench("qsim matmul 128x256x64 fp32", || {
+    let r = bench("qsim matmul 128x256x64 fp32 (tiled)", || {
         black_box(a.matmul(&b));
+    });
+    throughput(&r, 128 * 256 * 64);
+
+    let r = bench("qsim matmul 128x256x64 fp32 (reference)", || {
+        black_box(a.matmul_reference(&b));
     });
     throughput(&r, 128 * 256 * 64);
 

@@ -3,7 +3,8 @@
 //! optimizer throughput (EXPERIMENTS.md §Perf).
 
 use bf16_train::precision::{
-    kahan_add, round_nearest, round_stochastic, RoundMode, Rounder, BF16, E8M3, FP16,
+    kahan_add, round_nearest, round_nearest_slice, round_stochastic, round_stochastic_slice,
+    RoundMode, Rounder, BF16, E8M3, FP16,
 };
 use bf16_train::util::bench::{bench, black_box, throughput};
 use bf16_train::util::rng::Rng;
@@ -48,6 +49,30 @@ fn main() {
         let mut v = xs.clone();
         r.round_slice(&mut v);
         black_box(v);
+    });
+    throughput(&r, n);
+
+    // batched slice kernels vs the scalar loops above
+    let r = bench("round_nearest_slice/bf16 64k", || {
+        let mut v = xs.clone();
+        round_nearest_slice(&mut v, BF16);
+        black_box(v);
+    });
+    throughput(&r, n);
+
+    let r = bench("round_stochastic_slice/bf16 64k", || {
+        let mut g = Rng::new(1, 0);
+        let mut v = xs.clone();
+        round_stochastic_slice(&mut v, BF16, &mut g);
+        black_box(v);
+    });
+    throughput(&r, n);
+
+    let r = bench("rng/fill_u32 64k", || {
+        let mut g = Rng::new(3, 0);
+        let mut buf = vec![0u32; n];
+        g.fill_u32(&mut buf);
+        black_box(buf);
     });
     throughput(&r, n);
 

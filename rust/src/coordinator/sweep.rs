@@ -191,6 +191,7 @@ fn run_cell(engine: &Engine, manifest: &Manifest, cfg: RunConfig) -> Result<RunS
                 mean_cancel_frac: f64::NAN,
                 history: History::default(),
                 wallclock_s: 0.0,
+                steps_per_s: 0.0,
             })
         }
     }

@@ -34,6 +34,9 @@ pub struct RunSummary {
     pub mean_cancel_frac: f64,
     pub history: History,
     pub wallclock_s: f64,
+    /// Training throughput over the steps this run actually executed (the
+    /// qsim/runtime hot-path regression signal; 0.0 when nothing ran).
+    pub steps_per_s: f64,
 }
 
 /// A live run: owns the session + generators.
@@ -152,6 +155,7 @@ impl<'e> Trainer<'e> {
             self.run_steps(chunk)?;
             remaining -= chunk;
         }
+        let train_s = t0.elapsed().as_secs_f64();
         let (_, val_metric) = self.evaluate(self.cfg.eval_batches)?;
         Ok(RunSummary {
             app: self.cfg.app.clone(),
@@ -166,6 +170,7 @@ impl<'e> Trainer<'e> {
             mean_cancel_frac: self.cancel_acc / self.steps_run.max(1) as f64,
             history: std::mem::take(&mut self.history),
             wallclock_s: t0.elapsed().as_secs_f64(),
+            steps_per_s: if train_s > 0.0 { self.steps_run as f64 / train_s } else { 0.0 },
         })
     }
 

@@ -123,7 +123,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         summary.final_train_loss,
         summary.mean_cancel_frac * 100.0,
         summary.wallclock_s,
-        summary.steps as f64 / summary.wallclock_s
+        summary.steps_per_s
     );
     std::fs::create_dir_all(&out_dir)?;
     let csv_path = format!(

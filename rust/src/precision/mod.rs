@@ -24,4 +24,7 @@ mod round;
 pub use format::{Format, ALL, BF16, E8M1, E8M3, E8M5, FP16, FP32};
 pub use kahan::{kahan_add, KahanAcc};
 pub use policy::{Mode, Policy, PolicyParseError};
-pub use round::{round_nearest, round_stochastic, RoundMode, Rounder};
+pub use round::{
+    round_nearest, round_nearest_slice, round_stochastic, round_stochastic_slice, RoundMode,
+    Rounder,
+};

@@ -69,6 +69,94 @@ pub fn round_stochastic(x: f32, fmt: Format, rbits: u32) -> f32 {
     clamp_range(f32::from_bits(rounded), fmt)
 }
 
+/// Dither words drawn per chunk by [`round_stochastic_slice`]; sized so the
+/// bit buffer lives in L1 while still amortizing the RNG call overhead.
+const SR_CHUNK: usize = 256;
+
+/// Round a slice to nearest-even in place.
+///
+/// Bit-identical to mapping [`round_nearest`] over the slice; the format
+/// constants (`drop_bits`, masks, clamp bounds) are hoisted out of the loop
+/// so the body is straight-line bit arithmetic the compiler can vectorize.
+pub fn round_nearest_slice(xs: &mut [f32], fmt: Format) {
+    if fmt.is_fp32() {
+        return;
+    }
+    let drop = fmt.drop_bits();
+    let half_m1 = (1u32 << (drop - 1)) - 1;
+    let keep_mask = u32::MAX << drop;
+    let clamp = fmt.exp_bits < 8;
+    let max_v = fmt.max_value();
+    let min_n = fmt.min_normal();
+    for x in xs.iter_mut() {
+        let v = *x;
+        if !v.is_finite() {
+            continue;
+        }
+        let u = v.to_bits();
+        let lsb = (u >> drop) & 1;
+        let mut y = f32::from_bits(u.wrapping_add(half_m1 + lsb) & keep_mask);
+        if clamp {
+            let a = y.abs();
+            if a > max_v {
+                y = f32::INFINITY.copysign(y);
+            } else if a < min_n {
+                y = 0.0f32.copysign(y);
+            }
+        }
+        *x = y;
+    }
+}
+
+/// Stochastically round a slice in place, drawing dither bits from `rng`.
+///
+/// Bit-identical to the scalar loop `for x { round_stochastic(x, fmt,
+/// rng.next_u32()) }` — including RNG consumption: exactly one dither word is
+/// drawn per element, in element order, even for fp32 (where the values pass
+/// through unchanged), so the generator stays interchangeable with the
+/// scalar path.  Dither words are drawn in [`SR_CHUNK`]-sized batches via
+/// [`Rng::fill_u32`] and the format constants are hoisted out of the loop.
+pub fn round_stochastic_slice(xs: &mut [f32], fmt: Format, rng: &mut Rng) {
+    let mut bits = [0u32; SR_CHUNK];
+    if fmt.is_fp32() {
+        // keep the dither stream position identical to the scalar path
+        let mut left = xs.len();
+        while left > 0 {
+            let take = left.min(SR_CHUNK);
+            rng.fill_u32(&mut bits[..take]);
+            left -= take;
+        }
+        return;
+    }
+    let drop = fmt.drop_bits();
+    let noise_mask = (1u32 << drop) - 1;
+    let keep_mask = u32::MAX << drop;
+    let clamp = fmt.exp_bits < 8;
+    let max_v = fmt.max_value();
+    let min_n = fmt.min_normal();
+    for chunk in xs.chunks_mut(SR_CHUNK) {
+        let b = &mut bits[..chunk.len()];
+        rng.fill_u32(b);
+        for (x, &rb) in chunk.iter_mut().zip(b.iter()) {
+            let v = *x;
+            if !v.is_finite() {
+                continue;
+            }
+            let u = v.to_bits();
+            let mut y = f32::from_bits(u.wrapping_add(rb & noise_mask) & keep_mask);
+            if clamp {
+                let a = y.abs();
+                if a > max_v {
+                    y = f32::INFINITY.copysign(y);
+                } else if a < min_n {
+                    y = 0.0f32.copysign(y);
+                }
+            }
+            *x = y;
+        }
+    }
+}
+
 /// A bound (format, mode, RNG) rounding policy for hot loops.
 #[derive(Debug)]
 pub struct Rounder {
@@ -95,21 +183,13 @@ impl Rounder {
         }
     }
 
-    /// Round a slice in place.
+    /// Round a slice in place via the batched kernels (bit-identical to
+    /// mapping [`Rounder::round`] over the slice, including RNG draws).
     pub fn round_slice(&mut self, xs: &mut [f32]) {
         match self.mode {
             RoundMode::Exact => {}
-            RoundMode::Nearest => {
-                for x in xs {
-                    *x = round_nearest(*x, self.fmt);
-                }
-            }
-            RoundMode::Stochastic => {
-                for x in xs {
-                    let bits = self.rng.next_u32();
-                    *x = round_stochastic(*x, self.fmt, bits);
-                }
-            }
+            RoundMode::Nearest => round_nearest_slice(xs, self.fmt),
+            RoundMode::Stochastic => round_stochastic_slice(xs, self.fmt, &mut self.rng),
         }
     }
 }
@@ -187,6 +267,81 @@ mod tests {
         }
         let frac = ups as f64 / n as f64;
         assert!((frac - 0.25).abs() < 0.01, "{frac}");
+    }
+
+    /// Wide-dynamic-range value soup including zeros, subnormal-range
+    /// magnitudes, huge magnitudes (overflow for e5 formats) and specials.
+    fn soup(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed, 0x50);
+        (0..n)
+            .map(|i| match i % 97 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::INFINITY,
+                3 => f32::NEG_INFINITY,
+                4 => f32::NAN,
+                _ => rng.normal() * 10f32.powi(rng.below(60) as i32 - 30),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn nearest_slice_matches_scalar_all_formats_odd_lengths() {
+        for fmt in ALL {
+            for len in [0usize, 1, 7, 255, 256, 257, 1023] {
+                let xs = soup(len, 0xBEEF ^ len as u64);
+                let mut fast = xs.clone();
+                round_nearest_slice(&mut fast, fmt);
+                for (i, (&f, &x)) in fast.iter().zip(&xs).enumerate() {
+                    let want = round_nearest(x, fmt);
+                    assert_eq!(
+                        f.to_bits(),
+                        want.to_bits(),
+                        "{} len={len} i={i} x={x}",
+                        fmt.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_slice_matches_scalar_all_formats_odd_lengths() {
+        for fmt in ALL {
+            for len in [0usize, 1, 7, 255, 256, 257, 1023] {
+                let xs = soup(len, 0xFACE ^ len as u64);
+                let mut fast = xs.clone();
+                let mut rng_fast = Rng::new(99, len as u64);
+                let mut rng_ref = rng_fast.clone();
+                round_stochastic_slice(&mut fast, fmt, &mut rng_fast);
+                for (i, (&f, &x)) in fast.iter().zip(&xs).enumerate() {
+                    let want = round_stochastic(x, fmt, rng_ref.next_u32());
+                    assert_eq!(
+                        f.to_bits(),
+                        want.to_bits(),
+                        "{} len={len} i={i} x={x}",
+                        fmt.name
+                    );
+                }
+                // generator must land exactly where the scalar loop leaves it
+                assert_eq!(rng_fast.next_u64(), rng_ref.next_u64(), "{} len={len}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn rounder_slice_matches_per_element_round() {
+        for mode in [RoundMode::Exact, RoundMode::Nearest, RoundMode::Stochastic] {
+            let xs = soup(513, 0xD0);
+            let mut a = Rounder::new(BF16, mode, 5);
+            let mut b = Rounder::new(BF16, mode, 5);
+            let mut fast = xs.clone();
+            a.round_slice(&mut fast);
+            let scalar: Vec<f32> = xs.iter().map(|&x| b.round(x)).collect();
+            for (i, (f, s)) in fast.iter().zip(&scalar).enumerate() {
+                assert_eq!(f.to_bits(), s.to_bits(), "{mode:?} i={i}");
+            }
+        }
     }
 
     #[test]

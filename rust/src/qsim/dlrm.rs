@@ -8,12 +8,13 @@
 //! the rounding behaviour of interest lives in the *updates*, not the
 //! interaction flavour), a top MLP to a single logit, BCE loss.
 
-use crate::precision::{Format, Mode};
+use crate::precision::{Format, Mode, FP32};
 use crate::util::rng::{Rng, ZipfTable};
 
 use super::optim::{Sgd, SgdState, UpdateStats};
 use super::tape::{QPolicy, Tape, Var};
 use super::tensor::Tensor;
+use super::Backend;
 
 /// Model + data configuration.
 #[derive(Debug, Clone)]
@@ -26,6 +27,10 @@ pub struct DlrmConfig {
     pub batch: usize,
     pub fmt: Format,
     pub seed: u64,
+    /// Kernel backend: `Fast` (tape arena + vectorized kernels) or
+    /// `Reference` (fresh tape + scalar loops each step, the bench
+    /// baseline).  Bit-identical results either way.
+    pub backend: Backend,
 }
 
 impl Default for DlrmConfig {
@@ -39,6 +44,7 @@ impl Default for DlrmConfig {
             batch: 32,
             fmt: crate::precision::BF16,
             seed: 0,
+            backend: Backend::Fast,
         }
     }
 }
@@ -158,24 +164,34 @@ impl DlrmModel {
         }
     }
 
-    /// Build the forward graph for one batch.
+    /// Build the forward graph for one batch into a fresh tape.
     ///
     /// Returns (tape, loss var, param vars) with params ordered
     /// [tables..., bot_w, bot_b, top_w, top_b, head_w, head_b].
     pub fn forward(&self, batch: &CtrBatch, policy: QPolicy) -> (Tape, Var, Vec<Var>) {
         let mut t = Tape::new(policy);
+        let (loss, params) = self.forward_into(&mut t, batch);
+        (t, loss, params)
+    }
+
+    /// Build the forward graph into a caller-owned tape — the steady-state
+    /// entry point: `t.reset()` between steps recycles every node and
+    /// gradient buffer, so graph construction is allocation-free once the
+    /// pool has warmed up.  Param values are copied into pooled buffers
+    /// (`param_from`), never cloned into fresh allocations.
+    pub fn forward_into(&self, t: &mut Tape, batch: &CtrBatch) -> (Var, Vec<Var>) {
         let mut params = Vec::new();
         // embeddings
         let mut feats: Vec<Var> = Vec::new();
         for (ti, table) in self.tables.iter().enumerate() {
-            let tv = t.param(table.clone());
+            let tv = t.param_from(table);
             params.push(tv);
             feats.push(t.embed(tv, batch.cat[ti].clone()));
         }
         // bottom MLP over dense features
-        let x = t.input(batch.dense.clone());
-        let bw = t.param(self.bot_w.clone());
-        let bb = t.param(self.bot_b.clone());
+        let x = t.input_from(&batch.dense);
+        let bw = t.param_from(&self.bot_w);
+        let bb = t.param_from(&self.bot_b);
         params.extend([bw, bb]);
         let z0 = t.matmul(x, bw);
         let z1 = t.add_row(z0, bb);
@@ -183,14 +199,14 @@ impl DlrmModel {
         feats.push(z);
         // interaction: concat features, top MLP, scalar head
         let cat = t.concat_cols(feats);
-        let tw = t.param(self.top_w.clone());
-        let tb = t.param(self.top_b.clone());
+        let tw = t.param_from(&self.top_w);
+        let tb = t.param_from(&self.top_b);
         params.extend([tw, tb]);
         let h0 = t.matmul(cat, tw);
         let h1 = t.add_row(h0, tb);
         let h = t.relu(h1);
-        let hw = t.param(self.head_w.clone());
-        let hb = t.param(self.head_b.clone());
+        let hw = t.param_from(&self.head_w);
+        let hb = t.param_from(&self.head_b);
         params.extend([hw, hb]);
         let l0 = t.matmul(h, hw);
         let logits2d = t.add_row(l0, hb); // (B, 1)
@@ -198,7 +214,7 @@ impl DlrmModel {
             logits2d,
             Tensor::from_vec(batch.labels.len(), 1, batch.labels.data.clone()),
         );
-        (t, loss, params)
+        (loss, params)
     }
 
     /// Forward pass only; returns per-example logits.
@@ -256,6 +272,9 @@ pub struct DlrmTrainer {
     states: Vec<SgdState>,
     gen: CtrGen,
     policy: QPolicy,
+    /// Retained across steps (`Fast` backend): node + gradient storage is
+    /// recycled via `Tape::reset` instead of reallocated per step.
+    tape: Tape,
 }
 
 impl DlrmTrainer {
@@ -274,7 +293,10 @@ impl DlrmTrainer {
         let opts: Vec<Sgd> = modes
             .iter()
             .enumerate()
-            .map(|(i, &m)| Sgd::new(m, cfg.fmt, 0.0, 0.0, cfg.seed ^ 0x0B ^ i as u64))
+            .map(|(i, &m)| {
+                Sgd::new(m, cfg.fmt, 0.0, 0.0, cfg.seed ^ 0x0B ^ i as u64)
+                    .with_backend(cfg.backend)
+            })
             .collect();
         let mut probe = DlrmModel::init(&cfg);
         let states = probe
@@ -285,12 +307,13 @@ impl DlrmTrainer {
             .collect();
         // fwd/bwd compute rounds unless every tensor trains in fp32
         let policy = if modes.iter().all(|&m| m == Mode::Fp32) {
-            QPolicy::exact()
+            QPolicy::with_backend(FP32, cfg.backend)
         } else {
-            QPolicy::new(cfg.fmt)
+            QPolicy::with_backend(cfg.fmt, cfg.backend)
         };
         let gen = CtrGen::new(&cfg);
-        Self { model, opts, states, gen, policy }
+        let tape = Tape::new(policy);
+        Self { model, opts, states, gen, policy, tape }
     }
 
     /// Weight-memory bytes under the per-tensor modes (Figure 5's x-axis).
@@ -305,22 +328,38 @@ impl DlrmTrainer {
     }
 
     /// One SGD step over a fresh synthetic batch.
+    ///
+    /// `Fast` backend: the retained tape is `reset` (node and gradient
+    /// buffers recycled) and gradients are fed to the optimizer by
+    /// reference, so steady-state tensor traffic is allocation-free; only
+    /// the small per-batch index/label buffers stored in graph ops are
+    /// still allocated each step.  `Reference` backend: a fresh tape per
+    /// step, reproducing the pre-optimization allocation pattern.
     pub fn step(&mut self, lr: f32) -> StepTelemetry {
         let batch = self.gen.next_batch();
-        let (mut tape, loss, param_vars) = self.model.forward(&batch, self.policy);
-        tape.backward(loss);
-        let loss_val = tape.value(loss).item();
-        let grads: Vec<Tensor> = param_vars
-            .iter()
-            .map(|&v| tape.grad(v).cloned().unwrap_or_else(|| {
-                let t = tape.value(v);
-                Tensor::zeros(t.rows, t.cols)
-            }))
-            .collect();
+        if self.policy.backend == Backend::Fast {
+            self.tape.reset();
+        } else {
+            self.tape = Tape::new(self.policy);
+        }
+        let (loss, param_vars) = self.model.forward_into(&mut self.tape, &batch);
+        self.tape.backward(loss);
+        let loss_val = self.tape.value(loss).item();
         let n_tables = self.model.cfg.num_tables;
         let mut tel = StepTelemetry { loss: loss_val, ..Default::default() };
+        let tape = &self.tape;
         let params = self.model.param_tensors_mut();
-        for (i, (w, g)) in params.into_iter().zip(&grads).enumerate() {
+        for (i, (w, var)) in params.into_iter().zip(&param_vars).enumerate() {
+            let zero_g;
+            let g = match tape.grad(*var) {
+                Some(g) => g,
+                // a parameter off the loss path still takes its (no-op)
+                // optimizer update, including the per-element dither draws
+                None => {
+                    zero_g = Tensor::zeros(w.rows, w.cols);
+                    &zero_g
+                }
+            };
             let stats = self.opts[i].step(w, &mut self.states[i], g, lr);
             if i < n_tables {
                 tel.embed.merge(stats);
@@ -388,6 +427,63 @@ mod tests {
             early.frac(),
             late.frac()
         );
+    }
+
+    /// Acceptance gate for the kernel vectorization: the fast path (arena
+    /// tape, tiled matmul, batched SR) must reproduce the scalar reference
+    /// path bit-for-bit over a real training trajectory.
+    #[test]
+    fn sr16_hundred_steps_bit_identical_across_backends() {
+        let mk = |backend| {
+            let cfg = DlrmConfig { seed: 11, backend, ..Default::default() };
+            DlrmTrainer::new(cfg, Mode::Sr16)
+        };
+        let mut fast = mk(Backend::Fast);
+        let mut reference = mk(Backend::Reference);
+        for step in 0..100 {
+            let a = fast.step(0.05);
+            let b = reference.step(0.05);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged at step {step}");
+            assert_eq!(a.embed, b.embed, "embed stats diverged at step {step}");
+            assert_eq!(a.mlp, b.mlp, "mlp stats diverged at step {step}");
+        }
+        let mut fm = fast.model;
+        let mut rm = reference.model;
+        for (pi, (wa, wb)) in fm
+            .param_tensors_mut()
+            .into_iter()
+            .zip(rm.param_tensors_mut())
+            .enumerate()
+        {
+            assert_eq!(wa.data.len(), wb.data.len());
+            for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "param {pi} elem {ei} after 100 steps");
+            }
+        }
+    }
+
+    /// Same gate for the kahan+SR combination (exercises every optimizer
+    /// stage and the kahan state buffers).
+    #[test]
+    fn srkahan16_thirty_steps_bit_identical_across_backends() {
+        let mk = |backend| {
+            let cfg = DlrmConfig { seed: 13, backend, ..Default::default() };
+            DlrmTrainer::new(cfg, Mode::SrKahan16)
+        };
+        let mut fast = mk(Backend::Fast);
+        let mut reference = mk(Backend::Reference);
+        for step in 0..30 {
+            let a = fast.step(0.05);
+            let b = reference.step(0.05);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged at step {step}");
+        }
+        let mut fm = fast.model;
+        let mut rm = reference.model;
+        for (wa, wb) in fm.param_tensors_mut().into_iter().zip(rm.param_tensors_mut()) {
+            for (x, y) in wa.data.iter().zip(wb.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

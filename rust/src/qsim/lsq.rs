@@ -173,36 +173,61 @@ pub fn run(cfg: &LsqConfig, data: &LsqData, placement: Placement) -> LsqRun {
         let ga = rf(a);
         let mut any_moved = false;
         let mut any_update = false;
-        for j in 0..cfg.dim {
-            let gj = rf(ga * x[j]);
-            let u = cfg.lr * gj; // update magnitude (exact scalar mult;
-                                 // rounding of the subtraction output is
-                                 // what Theorem 1 is about)
-            let wj = w[j];
-            let new = if placement.rounds_update() {
-                match placement {
-                    Placement::WeightUpdateSr => {
-                        round_stochastic(wj - u, fmt, rng.next_u32())
-                    }
-                    Placement::WeightUpdateKahan => {
-                        let yv = round_nearest(-u - kahan[j], fmt);
-                        let s = round_nearest(wj + yv, fmt);
-                        kahan[j] =
-                            round_nearest(round_nearest(s - wj, fmt) - yv, fmt);
-                        s
-                    }
-                    _ => round_nearest(wj - u, fmt),
-                }
-            } else {
-                wj - u
-            };
+        // update magnitude u = lr·gj is an exact scalar mult; rounding of
+        // the subtraction output is what Theorem 1 is about.  The placement
+        // dispatch is hoisted out of the per-coordinate loop so each variant
+        // runs a straight-line slice pass.
+        let mut track = |u: f32, wj: f32, new: f32| {
             if u != 0.0 {
                 any_update = true;
                 if new != wj {
                     any_moved = true;
                 }
             }
-            w[j] = new;
+        };
+        match placement {
+            Placement::Exact | Placement::ForwardBackward => {
+                for j in 0..cfg.dim {
+                    let gj = rf(ga * x[j]);
+                    let u = cfg.lr * gj;
+                    let wj = w[j];
+                    let new = wj - u;
+                    track(u, wj, new);
+                    w[j] = new;
+                }
+            }
+            Placement::WeightUpdate | Placement::Everywhere => {
+                for j in 0..cfg.dim {
+                    let gj = rf(ga * x[j]);
+                    let u = cfg.lr * gj;
+                    let wj = w[j];
+                    let new = round_nearest(wj - u, fmt);
+                    track(u, wj, new);
+                    w[j] = new;
+                }
+            }
+            Placement::WeightUpdateSr => {
+                for j in 0..cfg.dim {
+                    let gj = rf(ga * x[j]);
+                    let u = cfg.lr * gj;
+                    let wj = w[j];
+                    let new = round_stochastic(wj - u, fmt, rng.next_u32());
+                    track(u, wj, new);
+                    w[j] = new;
+                }
+            }
+            Placement::WeightUpdateKahan => {
+                for j in 0..cfg.dim {
+                    let gj = rf(ga * x[j]);
+                    let u = cfg.lr * gj;
+                    let wj = w[j];
+                    let yv = round_nearest(-u - kahan[j], fmt);
+                    let new = round_nearest(wj + yv, fmt);
+                    kahan[j] = round_nearest(round_nearest(new - wj, fmt) - yv, fmt);
+                    track(u, wj, new);
+                    w[j] = new;
+                }
+            }
         }
         if any_update && !any_moved {
             halted_steps += 1;

@@ -14,6 +14,31 @@ pub mod optim;
 pub mod tape;
 pub mod tensor;
 
+/// Which kernel implementations the simulator runs on.
+///
+/// Both backends are bit-identical by construction (verified by property
+/// tests and the 100-step trainer parity test); `Reference` preserves the
+/// original scalar loops and per-step allocation behaviour so the bench can
+/// measure the vectorized path against the pre-optimization baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Backend {
+    /// Scalar kernels, fresh tape + per-element RNG each step (the
+    /// pre-vectorization code path, kept as the exactness oracle).
+    Reference,
+    /// Tiled matmul, arena-reuse tape, batched rounding (default).
+    #[default]
+    Fast,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Reference => "reference",
+            Backend::Fast => "fast",
+        }
+    }
+}
+
 pub use crate::precision::Mode;
 pub use optim::{Sgd, SgdState, UpdateStats};
 pub use tape::{QPolicy, Tape, Var};

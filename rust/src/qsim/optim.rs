@@ -5,10 +5,13 @@
 //! fast paths) and by the property-test suite; the PJRT path runs the same
 //! algorithms inside lowered HLO instead.
 
-use crate::precision::{round_nearest, round_stochastic, Format, Mode, Policy, BF16};
+use crate::precision::{
+    round_nearest, round_nearest_slice, round_stochastic, Format, Mode, Policy, BF16,
+};
 use crate::util::rng::Rng;
 
 use super::tensor::Tensor;
+use super::Backend;
 
 /// Per-step statistics (Figure 9's cancellation telemetry).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -48,12 +51,32 @@ pub struct Sgd {
     pub fmt: Format,
     pub momentum: f32,
     pub weight_decay: f32,
+    pub backend: Backend,
     rng: Rng,
+    /// Per-step update-magnitude scratch (stage buffer, reused across steps).
+    u_buf: Vec<f32>,
+    /// Pre-drawn SR dither words (one per element, reused across steps).
+    bits_buf: Vec<u32>,
 }
 
 impl Sgd {
     pub fn new(mode: Mode, fmt: Format, momentum: f32, weight_decay: f32, seed: u64) -> Self {
-        Self { mode, fmt, momentum, weight_decay, rng: Rng::new(seed, 0x0907) }
+        Self {
+            mode,
+            fmt,
+            momentum,
+            weight_decay,
+            backend: Backend::Fast,
+            rng: Rng::new(seed, 0x0907),
+            u_buf: Vec::new(),
+            bits_buf: Vec::new(),
+        }
+    }
+
+    /// Builder-style backend override (the scalar reference path).
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
     }
 
     pub fn bf16(mode: Mode, momentum: f32, weight_decay: f32, seed: u64) -> Self {
@@ -74,7 +97,156 @@ impl Sgd {
 
     /// One update of `w` from gradient `g`.  All optimizer-internal ops are
     /// nearest-rounded in the 16-bit modes (Algorithms 2 & 3).
+    ///
+    /// The fast path runs as per-stage slice passes with batched dither
+    /// draws; the reference path is the original interleaved per-element
+    /// loop.  Both are bit-identical, including RNG consumption (one dither
+    /// word per element, in element order, for the stochastic modes).
     pub fn step(
+        &mut self,
+        w: &mut Tensor,
+        state: &mut SgdState,
+        g: &Tensor,
+        lr: f32,
+    ) -> UpdateStats {
+        match self.backend {
+            Backend::Fast => self.step_fast(w, state, g, lr),
+            Backend::Reference => self.step_reference(w, state, g, lr),
+        }
+    }
+
+    /// Vectorized update: per-stage slice passes over `w` / `momentum` /
+    /// `kahan` with the format constants hoisted and SR dither pre-drawn in
+    /// bulk, instead of one interleaved branchy loop per element.
+    fn step_fast(
+        &mut self,
+        w: &mut Tensor,
+        state: &mut SgdState,
+        g: &Tensor,
+        lr: f32,
+    ) -> UpdateStats {
+        let n = w.data.len();
+        debug_assert_eq!(g.data.len(), n);
+        let exact = self.mode.exact_update();
+        let stochastic = self.mode.stochastic();
+        let fmt = self.fmt;
+
+        // stage 1: effective gradient (+ optional decoupled weight decay)
+        let u = &mut self.u_buf;
+        u.clear();
+        u.extend_from_slice(&g.data);
+        if self.weight_decay != 0.0 {
+            let wd = self.weight_decay;
+            if exact {
+                for (ui, &wi) in u.iter_mut().zip(&w.data) {
+                    *ui += wd * wi;
+                }
+            } else {
+                for (ui, &wi) in u.iter_mut().zip(&w.data) {
+                    *ui = round_nearest(*ui + round_nearest(wd * wi, fmt), fmt);
+                }
+            }
+        }
+
+        // stage 2: momentum accumulation (slice pass over the state tensor)
+        if let Some(mom) = &mut state.momentum {
+            let mu = self.momentum;
+            if exact {
+                for (ui, mi) in u.iter_mut().zip(mom.data.iter_mut()) {
+                    let m_new = mu * *mi + *ui;
+                    *mi = m_new;
+                    *ui = m_new;
+                }
+            } else {
+                for (ui, mi) in u.iter_mut().zip(mom.data.iter_mut()) {
+                    let m_new = round_nearest(round_nearest(mu * *mi, fmt) + *ui, fmt);
+                    *mi = m_new;
+                    *ui = m_new;
+                }
+            }
+        }
+
+        // stage 3: update magnitude u = r(lr · m)
+        for ui in u.iter_mut() {
+            *ui *= lr;
+        }
+        if !exact {
+            round_nearest_slice(u, fmt);
+        }
+
+        // stage 4: bulk dither draws (same words the scalar loop would draw)
+        if stochastic {
+            if self.bits_buf.len() != n {
+                self.bits_buf.resize(n, 0);
+            }
+            self.rng.fill_u32(&mut self.bits_buf);
+        }
+
+        // stage 5: weight accumulate + cancellation stats, one pass
+        let mut stats = UpdateStats::default();
+        if self.mode.kahan() {
+            // srkahan16 (Fig 11): the accumulate output is SR'd
+            let c = state.kahan.as_mut().expect("kahan mode without kahan state");
+            for i in 0..n {
+                let ui = u[i];
+                let wi = w.data[i];
+                let y = round_nearest(-ui - c.data[i], fmt);
+                let s = if stochastic {
+                    round_stochastic(wi + y, fmt, self.bits_buf[i])
+                } else {
+                    round_nearest(wi + y, fmt)
+                };
+                c.data[i] = round_nearest(round_nearest(s - wi, fmt) - y, fmt);
+                if ui != 0.0 {
+                    stats.nonzero += 1;
+                    if s == wi {
+                        stats.cancelled += 1;
+                    }
+                }
+                w.data[i] = s;
+            }
+        } else if exact {
+            for (wi, &ui) in w.data.iter_mut().zip(u.iter()) {
+                let w_new = *wi - ui;
+                if ui != 0.0 {
+                    stats.nonzero += 1;
+                    if w_new == *wi {
+                        stats.cancelled += 1;
+                    }
+                }
+                *wi = w_new;
+            }
+        } else if stochastic {
+            for i in 0..n {
+                let ui = u[i];
+                let wi = w.data[i];
+                let w_new = round_stochastic(wi - ui, fmt, self.bits_buf[i]);
+                if ui != 0.0 {
+                    stats.nonzero += 1;
+                    if w_new == wi {
+                        stats.cancelled += 1;
+                    }
+                }
+                w.data[i] = w_new;
+            }
+        } else {
+            for (wi, &ui) in w.data.iter_mut().zip(u.iter()) {
+                let w_new = round_nearest(*wi - ui, fmt);
+                if ui != 0.0 {
+                    stats.nonzero += 1;
+                    if w_new == *wi {
+                        stats.cancelled += 1;
+                    }
+                }
+                *wi = w_new;
+            }
+        }
+        stats
+    }
+
+    /// The original interleaved per-element loop (pre-vectorization code),
+    /// kept as the bit-exactness oracle and bench baseline.
+    fn step_reference(
         &mut self,
         w: &mut Tensor,
         state: &mut SgdState,
@@ -198,6 +370,59 @@ mod tests {
         }
         // with momentum the total displacement exceeds 10 * lr * g
         assert!(1.0 - w.item() > 10.0 * 0.1 * 0.01);
+    }
+
+    #[test]
+    fn fast_step_bit_identical_to_reference_all_modes() {
+        use crate::precision::{E8M5, FP16};
+        let mut rng = Rng::new(0x51, 0);
+        for mode in Mode::ALL {
+            for fmt in [BF16, FP16, E8M5] {
+                for (momentum, wd) in [(0.0, 0.0), (0.9, 0.0), (0.9, 1e-4)] {
+                    let mut fast = Sgd::new(mode, fmt, momentum, wd, 42);
+                    let mut reference =
+                        Sgd::new(mode, fmt, momentum, wd, 42).with_backend(Backend::Reference);
+                    // odd length exercises ragged dither chunks
+                    let len = 515;
+                    let init: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+                    let mut wf = Tensor::vector(init.clone());
+                    let mut wr = Tensor::vector(init);
+                    let mut sf = fast.init_state(&wf);
+                    let mut sr = reference.init_state(&wr);
+                    for step in 0..20 {
+                        // occasionally-zero gradients hit the stats guard
+                        let g = Tensor::vector(
+                            (0..len)
+                                .map(|i| {
+                                    if (i + step) % 13 == 0 {
+                                        0.0
+                                    } else {
+                                        rng.normal() * 2f32.powi(-(step as i32) - 2)
+                                    }
+                                })
+                                .collect(),
+                        );
+                        let stf = fast.step(&mut wf, &mut sf, &g, 0.05);
+                        let str_ = reference.step(&mut wr, &mut sr, &g, 0.05);
+                        assert_eq!(stf, str_, "{mode:?}/{}/mu={momentum} step {step}", fmt.name);
+                        for (i, (a, b)) in wf.data.iter().zip(&wr.data).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "{mode:?}/{}/mu={momentum} step {step} w[{i}]",
+                                fmt.name
+                            );
+                        }
+                        if let (Some(mf), Some(mr)) = (&sf.momentum, &sr.momentum) {
+                            assert_eq!(mf.data, mr.data, "{mode:?} momentum state");
+                        }
+                        if let (Some(kf), Some(kr)) = (&sf.kahan, &sr.kahan) {
+                            assert_eq!(kf.data, kr.data, "{mode:?} kahan state");
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -6,40 +6,72 @@
 //! is rounded at each operator boundary.  The quantisation *policy* is
 //! per-graph, so the theory experiments can independently toggle rounding
 //! for forward/backward compute versus weight updates (Figure 2).
+//!
+//! ## Arena reuse
+//!
+//! Trainers rebuild the graph every step, so the tape retains its node and
+//! gradient buffers across steps: [`Tape::reset`] clears the recorded graph
+//! but moves every tensor allocation into a free pool that subsequent ops
+//! draw from.  **`reset` invalidates all outstanding [`Var`]s** — after a
+//! reset the graph must be rebuilt from scratch.  Steady-state training
+//! therefore runs allocation-free once buffer capacities have converged
+//! (usually within two steps).
 
-use crate::precision::{round_nearest, Format, FP32};
+use crate::precision::{round_nearest, round_nearest_slice, Format, FP32};
 
 use super::tensor::Tensor;
+use super::Backend;
 
 /// Rounding policy for forward/backward compute.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QPolicy {
     pub fmt: Format,
+    pub backend: Backend,
 }
 
 impl QPolicy {
     pub fn exact() -> Self {
-        Self { fmt: FP32 }
+        Self { fmt: FP32, backend: Backend::Fast }
     }
 
     pub fn new(fmt: Format) -> Self {
-        Self { fmt }
+        Self { fmt, backend: Backend::Fast }
     }
 
+    pub fn with_backend(fmt: Format, backend: Backend) -> Self {
+        Self { fmt, backend }
+    }
+
+    /// Round a slice in place per the policy (the per-operator output
+    /// rounding).  Backends are bit-identical; `Reference` keeps the
+    /// original scalar loop for baseline timing.
     #[inline]
-    fn q(&self, t: Tensor) -> Tensor {
+    fn q_slice(&self, xs: &mut [f32]) {
         if self.fmt.is_fp32() {
-            return t;
+            return;
         }
-        let mut t = t;
-        for x in &mut t.data {
-            *x = round_nearest(*x, self.fmt);
+        match self.backend {
+            Backend::Fast => round_nearest_slice(xs, self.fmt),
+            Backend::Reference => {
+                for x in xs {
+                    *x = round_nearest(*x, self.fmt);
+                }
+            }
         }
-        t
+    }
+
+    /// Format to fuse into producing kernels, `None` for fp32 passthrough.
+    #[inline]
+    fn fuse_fmt(&self) -> Option<Format> {
+        if self.fmt.is_fp32() {
+            None
+        } else {
+            Some(self.fmt)
+        }
     }
 }
 
-/// Index of a node in the tape.
+/// Index of a node in the tape.  Invalidated by [`Tape::reset`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Var(pub usize);
 
@@ -67,157 +99,324 @@ enum Op {
     ConcatCols(Vec<Var>),
 }
 
-struct Node {
-    op: Op,
-    value: Tensor,
-    grad: Option<Tensor>,
+// -- free-pool helpers (free functions so backward can hold disjoint field
+//    borrows of the tape while allocating) ----------------------------------
+
+/// Take an empty tensor whose storage comes from the pool (no zero fill —
+/// callers extend/resize as they produce elements).
+fn pool_tensor(free: &mut Vec<Vec<f32>>) -> Tensor {
+    let mut data = free.pop().unwrap_or_default();
+    data.clear();
+    Tensor { rows: 0, cols: 0, data }
+}
+
+fn pool_zeros(free: &mut Vec<Vec<f32>>, rows: usize, cols: usize) -> Tensor {
+    let mut t = pool_tensor(free);
+    t.rows = rows;
+    t.cols = cols;
+    t.data.resize(rows * cols, 0.0);
+    t
+}
+
+fn pool_copy(free: &mut Vec<Vec<f32>>, src: &Tensor) -> Tensor {
+    let mut t = pool_tensor(free);
+    t.rows = src.rows;
+    t.cols = src.cols;
+    t.data.extend_from_slice(&src.data);
+    t
+}
+
+fn pool_map(free: &mut Vec<Vec<f32>>, src: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    let mut t = pool_tensor(free);
+    t.rows = src.rows;
+    t.cols = src.cols;
+    t.data.extend(src.data.iter().map(|&x| f(x)));
+    t
+}
+
+fn pool_zip(
+    free: &mut Vec<Vec<f32>>,
+    a: &Tensor,
+    b: &Tensor,
+    f: impl Fn(f32, f32) -> f32,
+) -> Tensor {
+    debug_assert_eq!(a.data.len(), b.data.len());
+    let mut t = pool_tensor(free);
+    t.rows = a.rows;
+    t.cols = a.cols;
+    t.data.extend(a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)));
+    t
+}
+
+/// Accumulate cotangent `g` into node `v`'s gradient (rounding at the
+/// operator boundary, fp32 fan-in accumulation rounded once — same rule as
+/// qops._qcast_bwd).  No-grad leaves (tape inputs) skip all of it and
+/// recycle the buffer.
+fn accum(
+    policy: QPolicy,
+    requires_grad: &[bool],
+    grads: &mut [Option<Tensor>],
+    free: &mut Vec<Vec<f32>>,
+    v: Var,
+    mut g: Tensor,
+) {
+    if !requires_grad[v.0] {
+        free.push(g.data);
+        return;
+    }
+    policy.q_slice(&mut g.data);
+    match &mut grads[v.0] {
+        Some(existing) => {
+            assert_eq!(existing.data.len(), g.data.len(), "cotangent shape mismatch");
+            for (e, &x) in existing.data.iter_mut().zip(&g.data) {
+                *e += x;
+            }
+            policy.q_slice(&mut existing.data);
+            free.push(g.data);
+        }
+        None => grads[v.0] = Some(g),
+    }
 }
 
 /// The autograd tape: build forward ops, then `backward` from a scalar.
+///
+/// Node storage is split into parallel vectors (ops / values / grads) so the
+/// backward pass can read operand values while writing gradients without
+/// cloning whole tensors per op.
 pub struct Tape {
-    nodes: Vec<Node>,
+    ops: Vec<Op>,
+    values: Vec<Tensor>,
+    grads: Vec<Option<Tensor>>,
+    requires_grad: Vec<bool>,
     pub policy: QPolicy,
+    /// Retired buffers recycled across ops and (via [`Tape::reset`]) steps.
+    free: Vec<Vec<f32>>,
 }
 
 impl Tape {
     pub fn new(policy: QPolicy) -> Self {
-        Self { nodes: Vec::new(), policy }
+        Self {
+            ops: Vec::new(),
+            values: Vec::new(),
+            grads: Vec::new(),
+            requires_grad: Vec::new(),
+            policy,
+            free: Vec::new(),
+        }
     }
 
-    fn push(&mut self, op: Op, value: Tensor) -> Var {
-        self.nodes.push(Node { op, value, grad: None });
-        Var(self.nodes.len() - 1)
+    /// Clear the recorded graph while retaining all tensor storage for
+    /// reuse.  Invalidates every outstanding [`Var`]; the next step's graph
+    /// must be rebuilt from scratch, but its allocations are served from
+    /// the pool instead of the allocator.
+    pub fn reset(&mut self) {
+        self.ops.clear();
+        for t in self.values.drain(..) {
+            self.free.push(t.data);
+        }
+        for g in self.grads.drain(..) {
+            if let Some(t) = g {
+                self.free.push(t.data);
+            }
+        }
+        self.requires_grad.clear();
     }
 
-    /// Register an input (no gradient collected).
+    /// Number of nodes recorded since construction / the last reset.
+    pub fn num_nodes(&self) -> usize {
+        self.values.len()
+    }
+
+    fn push(&mut self, op: Op, value: Tensor, requires_grad: bool) -> Var {
+        self.ops.push(op);
+        self.values.push(value);
+        self.grads.push(None);
+        self.requires_grad.push(requires_grad);
+        Var(self.values.len() - 1)
+    }
+
+    fn take_buf(&mut self) -> Vec<f32> {
+        let mut b = self.free.pop().unwrap_or_default();
+        b.clear();
+        b
+    }
+
+    /// Register an input: no cotangent is accumulated into it during
+    /// `backward` ([`Tape::grad`] stays `None`).
     pub fn input(&mut self, t: Tensor) -> Var {
-        self.push(Op::Leaf, t)
+        self.push(Op::Leaf, t, false)
     }
 
     /// Register a parameter (gradient collected).  The value is used as
     /// stored — callers keep parameters in-format themselves.
     pub fn param(&mut self, t: Tensor) -> Var {
-        self.push(Op::Leaf, t)
+        self.push(Op::Leaf, t, true)
+    }
+
+    /// [`Tape::input`] that copies into a pool buffer instead of taking an
+    /// owned tensor (no per-step allocation in steady state).
+    pub fn input_from(&mut self, t: &Tensor) -> Var {
+        let c = pool_copy(&mut self.free, t);
+        self.push(Op::Leaf, c, false)
+    }
+
+    /// [`Tape::param`] that copies into a pool buffer instead of taking an
+    /// owned tensor (no per-step allocation in steady state).
+    pub fn param_from(&mut self, t: &Tensor) -> Var {
+        let c = pool_copy(&mut self.free, t);
+        self.push(Op::Leaf, c, true)
     }
 
     pub fn value(&self, v: Var) -> &Tensor {
-        &self.nodes[v.0].value
+        &self.values[v.0]
     }
 
     pub fn grad(&self, v: Var) -> Option<&Tensor> {
-        self.nodes[v.0].grad.as_ref()
+        self.grads[v.0].as_ref()
     }
 
-    // -- forward ops (each rounds its output once) -------------------------
+    // -- forward ops (each rounds its output once, fused with the producing
+    //    loop so rounding never makes a second pass over cold memory) -------
+
+    fn unary(&mut self, a: Var, op: Op, f: impl Fn(f32) -> f32) -> Var {
+        let mut data = self.take_buf();
+        let av = &self.values[a.0];
+        data.extend(av.data.iter().map(|&x| f(x)));
+        let mut out = Tensor { rows: av.rows, cols: av.cols, data };
+        self.policy.q_slice(&mut out.data);
+        self.push(op, out, true)
+    }
+
+    fn binary(&mut self, a: Var, b: Var, op: Op, f: impl Fn(f32, f32) -> f32) -> Var {
+        let mut data = self.take_buf();
+        let (av, bv) = (&self.values[a.0], &self.values[b.0]);
+        assert_eq!(av.rows, bv.rows);
+        assert_eq!(av.cols, bv.cols);
+        data.extend(av.data.iter().zip(&bv.data).map(|(&x, &y)| f(x, y)));
+        let mut out = Tensor { rows: av.rows, cols: av.cols, data };
+        self.policy.q_slice(&mut out.data);
+        self.push(op, out, true)
+    }
+
+    fn push_scalar(&mut self, op: Op, v: f32) -> Var {
+        let mut t = Tensor::scalar(v);
+        self.policy.q_slice(&mut t.data);
+        self.push(op, t, true)
+    }
 
     pub fn matmul(&mut self, a: Var, b: Var) -> Var {
-        let out = self.policy.q(self.nodes[a.0].value.matmul(&self.nodes[b.0].value));
-        self.push(Op::MatMul(a, b), out)
+        match self.policy.backend {
+            Backend::Fast => {
+                let mut out = Tensor { rows: 0, cols: 0, data: self.take_buf() };
+                let fuse = self.policy.fuse_fmt();
+                self.values[a.0].matmul_into(&self.values[b.0], &mut out, fuse);
+                self.push(Op::MatMul(a, b), out, true)
+            }
+            Backend::Reference => {
+                let mut out = self.values[a.0].matmul_reference(&self.values[b.0]);
+                self.policy.q_slice(&mut out.data);
+                self.push(Op::MatMul(a, b), out, true)
+            }
+        }
     }
 
     pub fn add(&mut self, a: Var, b: Var) -> Var {
-        let out = self
-            .policy
-            .q(self.nodes[a.0].value.zip(&self.nodes[b.0].value, |x, y| x + y));
-        self.push(Op::Add(a, b), out)
+        self.binary(a, b, Op::Add(a, b), |x, y| x + y)
     }
 
     /// Broadcast-add a (1, n) bias to an (m, n) activation.
     pub fn add_row(&mut self, a: Var, bias: Var) -> Var {
-        let av = &self.nodes[a.0].value;
-        let bv = &self.nodes[bias.0].value;
-        assert_eq!(bv.rows, 1);
-        assert_eq!(bv.cols, av.cols);
-        let mut out = av.clone();
-        for r in 0..out.rows {
-            for c in 0..out.cols {
-                *out.at_mut(r, c) += bv.at(0, c);
+        let mut data = self.take_buf();
+        {
+            let (av, bv) = (&self.values[a.0], &self.values[bias.0]);
+            assert_eq!(bv.rows, 1);
+            assert_eq!(bv.cols, av.cols);
+            data.reserve(av.data.len());
+            if av.cols > 0 {
+                for arow in av.data.chunks_exact(av.cols) {
+                    data.extend(arow.iter().zip(&bv.data).map(|(&x, &b)| x + b));
+                }
             }
         }
-        let out = self.policy.q(out);
-        self.push(Op::AddRow(a, bias), out)
+        let (rows, cols) = (self.values[a.0].rows, self.values[a.0].cols);
+        let mut out = Tensor { rows, cols, data };
+        self.policy.q_slice(&mut out.data);
+        self.push(Op::AddRow(a, bias), out, true)
     }
 
     pub fn sub(&mut self, a: Var, b: Var) -> Var {
-        let out = self
-            .policy
-            .q(self.nodes[a.0].value.zip(&self.nodes[b.0].value, |x, y| x - y));
-        self.push(Op::Sub(a, b), out)
+        self.binary(a, b, Op::Sub(a, b), |x, y| x - y)
     }
 
     pub fn mul(&mut self, a: Var, b: Var) -> Var {
-        let out = self
-            .policy
-            .q(self.nodes[a.0].value.zip(&self.nodes[b.0].value, |x, y| x * y));
-        self.push(Op::Mul(a, b), out)
+        self.binary(a, b, Op::Mul(a, b), |x, y| x * y)
     }
 
     pub fn relu(&mut self, a: Var) -> Var {
-        let out = self.policy.q(self.nodes[a.0].value.map(|x| x.max(0.0)));
-        self.push(Op::Relu(a), out)
+        self.unary(a, Op::Relu(a), |x| x.max(0.0))
     }
 
     pub fn sigmoid(&mut self, a: Var) -> Var {
-        let out = self.policy.q(self.nodes[a.0].value.map(|x| 1.0 / (1.0 + (-x).exp())));
-        self.push(Op::Sigmoid(a), out)
+        self.unary(a, Op::Sigmoid(a), |x| 1.0 / (1.0 + (-x).exp()))
     }
 
     pub fn tanh(&mut self, a: Var) -> Var {
-        let out = self.policy.q(self.nodes[a.0].value.map(f32::tanh));
-        self.push(Op::Tanh(a), out)
+        self.unary(a, Op::Tanh(a), f32::tanh)
     }
 
     /// Embedding lookup: rows of `table` selected by `idx`.
     pub fn embed(&mut self, table: Var, idx: Vec<usize>) -> Var {
-        let tv = &self.nodes[table.0].value;
-        let mut out = Tensor::zeros(idx.len(), tv.cols);
-        for (r, &i) in idx.iter().enumerate() {
-            let row = &tv.data[i * tv.cols..(i + 1) * tv.cols];
-            out.data[r * tv.cols..(r + 1) * tv.cols].copy_from_slice(row);
+        let mut data = self.take_buf();
+        let tv = &self.values[table.0];
+        let cols = tv.cols;
+        data.reserve(idx.len() * cols);
+        for &i in &idx {
+            data.extend_from_slice(&tv.data[i * cols..(i + 1) * cols]);
         }
+        let out = Tensor { rows: idx.len(), cols, data };
         // gather is a memory op: values already in-format, no rounding
-        self.push(Op::Embed { table, idx }, out)
+        self.push(Op::Embed { table, idx }, out, true)
     }
 
     /// Column-wise concat (a memory op: values pass through unrounded).
     pub fn concat_cols(&mut self, parts: Vec<Var>) -> Var {
-        assert!(!parts.is_empty());
-        let rows = self.nodes[parts[0].0].value.rows;
-        let total: usize = parts.iter().map(|v| self.nodes[v.0].value.cols).collect::<Vec<_>>().iter().sum();
-        let mut out = Tensor::zeros(rows, total);
+        assert!(!parts.is_empty(), "concat_cols: need at least one part");
+        let mut data = self.take_buf();
+        let rows = self.values[parts[0].0].rows;
+        let total: usize = parts.iter().map(|v| self.values[v.0].cols).sum();
+        data.resize(rows * total, 0.0);
         let mut off = 0;
         for &p in &parts {
-            let pv = &self.nodes[p.0].value;
+            let pv = &self.values[p.0];
             assert_eq!(pv.rows, rows, "concat row mismatch");
             for r in 0..rows {
-                out.data[r * total + off..r * total + off + pv.cols]
+                data[r * total + off..r * total + off + pv.cols]
                     .copy_from_slice(&pv.data[r * pv.cols..(r + 1) * pv.cols]);
             }
             off += pv.cols;
         }
-        self.push(Op::ConcatCols(parts), out)
+        let out = Tensor { rows, cols: total, data };
+        self.push(Op::ConcatCols(parts), out, true)
     }
 
     pub fn mean_all(&mut self, a: Var) -> Var {
-        let v = &self.nodes[a.0].value;
+        let v = &self.values[a.0];
         let m = v.data.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
-        let out = self.policy.q(Tensor::scalar(m as f32));
-        self.push(Op::MeanAll(a), out)
+        self.push_scalar(Op::MeanAll(a), m as f32)
     }
 
     /// Fused 0.5·mean((a-b)²) — one output rounding, like qops.mse_loss.
     pub fn mse_loss(&mut self, a: Var, b: Var) -> Var {
         let d = self.sub(a, b);
-        let dv = &self.nodes[d.0].value;
-        let m = dv.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
-            / dv.len() as f64;
-        let out = self.policy.q(Tensor::scalar(0.5 * m as f32));
-        self.push(Op::MseLoss(d), out)
+        let dv = &self.values[d.0];
+        let m =
+            dv.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / dv.len() as f64;
+        self.push_scalar(Op::MseLoss(d), 0.5 * m as f32)
     }
 
     /// Fused BCE-with-logits against constant labels.
     pub fn bce_loss(&mut self, logits: Var, labels: Tensor) -> Var {
-        let lv = &self.nodes[logits.0].value;
+        let lv = &self.values[logits.0];
         assert_eq!(lv.len(), labels.len());
         let mut acc = 0f64;
         for (&z, &y) in lv.data.iter().zip(&labels.data) {
@@ -225,147 +424,175 @@ impl Tape {
             let l = z.max(0.0) - z * y + (1.0 + (-z.abs()).exp()).ln();
             acc += l as f64;
         }
-        let out = self.policy.q(Tensor::scalar((acc / lv.len() as f64) as f32));
-        self.push(Op::BceLoss { logits, labels }, out)
+        let mean = (acc / lv.len() as f64) as f32;
+        self.push_scalar(Op::BceLoss { logits, labels }, mean)
     }
 
     // -- backward -----------------------------------------------------------
 
-    fn accumulate(&mut self, v: Var, g: Tensor) {
-        // Cotangents are rounded at every operator boundary (same rule as
-        // qops._qcast_bwd); accumulation of fan-in happens in fp32 then is
-        // rounded once.
-        let g = self.policy.q(g);
-        match &mut self.nodes[v.0].grad {
-            Some(existing) => {
-                let summed = existing.zip(&g, |a, b| a + b);
-                *existing = self.policy.q(summed);
-            }
-            None => self.nodes[v.0].grad = Some(g),
-        }
-    }
-
     /// Run reverse-mode from scalar `root` (seed gradient 1.0).
+    ///
+    /// Operand values are read through split field borrows — no per-op
+    /// tensor cloning — and every intermediate cotangent draws its storage
+    /// from (and returns it to) the tape's buffer pool.
     pub fn backward(&mut self, root: Var) {
-        assert_eq!(self.nodes[root.0].value.len(), 1, "backward from non-scalar");
-        self.nodes[root.0].grad = Some(Tensor::scalar(1.0));
+        assert_eq!(self.values[root.0].len(), 1, "backward from non-scalar");
+        self.grads[root.0] = Some(Tensor::scalar(1.0));
+        let Tape { ops, values, grads, requires_grad, policy, free } = self;
+        let policy = *policy;
+        let rg: &[bool] = requires_grad;
         for i in (0..=root.0).rev() {
-            let Some(g) = self.nodes[i].grad.clone() else { continue };
-            // Split borrows: read values, then push grads.
-            match &self.nodes[i].op {
+            let Some(g) = grads[i].take() else { continue };
+            match &ops[i] {
                 Op::Leaf => {}
                 Op::MatMul(a, b) => {
                     let (a, b) = (*a, *b);
-                    let av = self.nodes[a.0].value.clone();
-                    let bv = self.nodes[b.0].value.clone();
-                    let da = g.matmul(&bv.transpose());
-                    let db = av.transpose().matmul(&g);
-                    self.accumulate(a, da);
-                    self.accumulate(b, db);
+                    match policy.backend {
+                        Backend::Fast => {
+                            // da = g·bᵀ, db = aᵀ·g, transposes in pooled
+                            // scratch; a no-grad operand (a tape input) skips
+                            // its cotangent matmul entirely
+                            if rg[a.0] {
+                                let mut bt = pool_tensor(free);
+                                values[b.0].transpose_into(&mut bt);
+                                let mut da = pool_tensor(free);
+                                g.matmul_into(&bt, &mut da, None);
+                                free.push(bt.data);
+                                accum(policy, rg, grads, free, a, da);
+                            }
+                            if rg[b.0] {
+                                let mut at = pool_tensor(free);
+                                values[a.0].transpose_into(&mut at);
+                                let mut db = pool_tensor(free);
+                                at.matmul_into(&g, &mut db, None);
+                                free.push(at.data);
+                                accum(policy, rg, grads, free, b, db);
+                            }
+                        }
+                        Backend::Reference => {
+                            let da = g.matmul_reference(&values[b.0].transpose());
+                            let db = values[a.0].transpose().matmul_reference(&g);
+                            accum(policy, rg, grads, free, a, da);
+                            accum(policy, rg, grads, free, b, db);
+                        }
+                    }
                 }
                 Op::Add(a, b) => {
                     let (a, b) = (*a, *b);
-                    self.accumulate(a, g.clone());
-                    self.accumulate(b, g);
+                    let ga = pool_copy(free, &g);
+                    let gb = pool_copy(free, &g);
+                    accum(policy, rg, grads, free, a, ga);
+                    accum(policy, rg, grads, free, b, gb);
                 }
                 Op::AddRow(a, bias) => {
                     let (a, bias) = (*a, *bias);
-                    let mut db = Tensor::zeros(1, g.cols);
-                    for r in 0..g.rows {
-                        for c in 0..g.cols {
-                            *db.at_mut(0, c) += g.at(r, c);
+                    let mut db = pool_zeros(free, 1, g.cols);
+                    if g.cols > 0 {
+                        for grow in g.data.chunks_exact(g.cols) {
+                            for (d, &x) in db.data.iter_mut().zip(grow) {
+                                *d += x;
+                            }
                         }
                     }
-                    self.accumulate(a, g);
-                    self.accumulate(bias, db);
+                    let ga = pool_copy(free, &g);
+                    accum(policy, rg, grads, free, a, ga);
+                    accum(policy, rg, grads, free, bias, db);
                 }
                 Op::Sub(a, b) => {
                     let (a, b) = (*a, *b);
-                    self.accumulate(a, g.clone());
-                    self.accumulate(b, g.map(|x| -x));
+                    let ga = pool_copy(free, &g);
+                    let gb = pool_map(free, &g, |x| -x);
+                    accum(policy, rg, grads, free, a, ga);
+                    accum(policy, rg, grads, free, b, gb);
                 }
                 Op::Mul(a, b) => {
                     let (a, b) = (*a, *b);
-                    let av = self.nodes[a.0].value.clone();
-                    let bv = self.nodes[b.0].value.clone();
-                    self.accumulate(a, g.zip(&bv, |gg, y| gg * y));
-                    self.accumulate(b, g.zip(&av, |gg, x| gg * x));
+                    let ga = pool_zip(free, &g, &values[b.0], |gg, y| gg * y);
+                    let gb = pool_zip(free, &g, &values[a.0], |gg, x| gg * x);
+                    accum(policy, rg, grads, free, a, ga);
+                    accum(policy, rg, grads, free, b, gb);
                 }
                 Op::Relu(a) => {
                     let a = *a;
-                    let av = self.nodes[a.0].value.clone();
-                    self.accumulate(a, g.zip(&av, |gg, x| if x > 0.0 { gg } else { 0.0 }));
+                    let ga = pool_zip(free, &g, &values[a.0], |gg, x| {
+                        if x > 0.0 {
+                            gg
+                        } else {
+                            0.0
+                        }
+                    });
+                    accum(policy, rg, grads, free, a, ga);
                 }
                 Op::Sigmoid(a) => {
                     let a = *a;
-                    let yv = self.nodes[i].value.clone();
-                    self.accumulate(a, g.zip(&yv, |gg, y| gg * y * (1.0 - y)));
+                    let ga = pool_zip(free, &g, &values[i], |gg, y| gg * y * (1.0 - y));
+                    accum(policy, rg, grads, free, a, ga);
                 }
                 Op::Tanh(a) => {
                     let a = *a;
-                    let yv = self.nodes[i].value.clone();
-                    self.accumulate(a, g.zip(&yv, |gg, y| gg * (1.0 - y * y)));
+                    let ga = pool_zip(free, &g, &values[i], |gg, y| gg * (1.0 - y * y));
+                    accum(policy, rg, grads, free, a, ga);
                 }
                 Op::Embed { table, idx } => {
                     let table = *table;
-                    let idx = idx.clone();
-                    let tv = &self.nodes[table.0].value;
-                    let mut dt = Tensor::zeros(tv.rows, tv.cols);
+                    let (rows, cols) = (values[table.0].rows, values[table.0].cols);
+                    let mut dt = pool_zeros(free, rows, cols);
                     for (r, &row_i) in idx.iter().enumerate() {
-                        for c in 0..g.cols {
-                            *dt.at_mut(row_i, c) += g.at(r, c);
+                        let dst = &mut dt.data[row_i * cols..(row_i + 1) * cols];
+                        let src = &g.data[r * cols..(r + 1) * cols];
+                        for (d, &x) in dst.iter_mut().zip(src) {
+                            *d += x;
                         }
                     }
-                    self.accumulate(table, dt);
+                    accum(policy, rg, grads, free, table, dt);
                 }
                 Op::MeanAll(a) => {
                     let a = *a;
-                    let n = self.nodes[a.0].value.len() as f32;
-                    let seed = g.item() / n;
-                    let av = &self.nodes[a.0].value;
-                    let da = Tensor {
-                        rows: av.rows,
-                        cols: av.cols,
-                        data: vec![seed; av.len()],
-                    };
-                    self.accumulate(a, da);
+                    let av = &values[a.0];
+                    let seed = g.item() / av.len() as f32;
+                    let mut da = pool_tensor(free);
+                    da.rows = av.rows;
+                    da.cols = av.cols;
+                    da.data.resize(av.len(), seed);
+                    accum(policy, rg, grads, free, a, da);
                 }
                 Op::MseLoss(d) => {
                     let d = *d;
-                    let dv = self.nodes[d.0].value.clone();
-                    let n = dv.len() as f32;
+                    let n = values[d.0].len() as f32;
                     let seed = g.item();
-                    self.accumulate(d, dv.map(|x| seed * x / n));
+                    let da = pool_map(free, &values[d.0], |x| seed * x / n);
+                    accum(policy, rg, grads, free, d, da);
                 }
                 Op::ConcatCols(parts) => {
-                    let parts = parts.clone();
                     let mut off = 0;
-                    for p in parts {
-                        let pv_cols = self.nodes[p.0].value.cols;
-                        let pv_rows = self.nodes[p.0].value.rows;
-                        let mut dp = Tensor::zeros(pv_rows, pv_cols);
-                        for r in 0..pv_rows {
-                            dp.data[r * pv_cols..(r + 1) * pv_cols].copy_from_slice(
-                                &g.data[r * g.cols + off..r * g.cols + off + pv_cols],
+                    for &p in parts {
+                        let (pr, pc) = (values[p.0].rows, values[p.0].cols);
+                        let mut dp = pool_tensor(free);
+                        dp.rows = pr;
+                        dp.cols = pc;
+                        dp.data.reserve(pr * pc);
+                        for r in 0..pr {
+                            dp.data.extend_from_slice(
+                                &g.data[r * g.cols + off..r * g.cols + off + pc],
                             );
                         }
-                        self.accumulate(p, dp);
-                        off += pv_cols;
+                        accum(policy, rg, grads, free, p, dp);
+                        off += pc;
                     }
                 }
                 Op::BceLoss { logits, labels } => {
                     let logits = *logits;
-                    let labels = labels.clone();
-                    let lv = self.nodes[logits.0].value.clone();
+                    let lv = &values[logits.0];
                     let n = lv.len() as f32;
                     let seed = g.item();
-                    let dl = lv.zip(&labels, |z, y| {
+                    let dl = pool_zip(free, lv, labels, |z, y| {
                         let p = 1.0 / (1.0 + (-z).exp());
                         seed * (p - y) / n
                     });
-                    self.accumulate(logits, dl);
+                    accum(policy, rg, grads, free, logits, dl);
                 }
             }
+            grads[i] = Some(g);
         }
     }
 }
@@ -374,6 +601,7 @@ impl Tape {
 mod tests {
     use super::*;
     use crate::precision::BF16;
+    use crate::util::rng::Rng;
 
     fn fd_check(f: impl Fn(&[f32]) -> f32, xs: &[f32], analytic: &[f32], tol: f32) {
         let h = 1e-3f32;
@@ -482,5 +710,76 @@ mod tests {
         t.backward(m);
         let g = t.grad(bias).unwrap().data.clone();
         fd_check(f, &xs, &g, 2e-2);
+    }
+
+    #[test]
+    fn inputs_collect_no_gradient_params_do() {
+        let mut t = Tape::new(QPolicy::exact());
+        let x = t.input(Tensor::vector(vec![1.0, 2.0]));
+        let w = t.param(Tensor::vector(vec![0.5, -0.5]));
+        let p = t.mul(x, w);
+        let m = t.mean_all(p);
+        t.backward(m);
+        assert!(t.grad(x).is_none(), "inputs must not accumulate cotangents");
+        assert!(t.grad(w).is_some());
+    }
+
+    /// Build one MLP step's graph; returns (loss value, weight grad).
+    fn mlp_graph(t: &mut Tape, x: &Tensor, w: &Tensor, bias: &Tensor) -> (f32, Tensor) {
+        let xv = t.input_from(x);
+        let wv = t.param_from(w);
+        let bv = t.param_from(bias);
+        let h = t.matmul(xv, wv);
+        let hb = t.add_row(h, bv);
+        let r = t.relu(hb);
+        let s = t.sigmoid(r);
+        let m = t.mean_all(s);
+        t.backward(m);
+        (t.value(m).item(), t.grad(wv).unwrap().clone())
+    }
+
+    #[test]
+    fn reset_reuses_buffers_and_reproduces_fresh_tape() {
+        let mut rng = Rng::new(0x7A, 0);
+        let x = Tensor::randn(4, 6, 1.0, &mut rng);
+        let w = Tensor::randn(6, 3, 0.5, &mut rng);
+        let bias = Tensor::randn(1, 3, 0.1, &mut rng);
+        let mut reused = Tape::new(QPolicy::new(BF16));
+        let first = mlp_graph(&mut reused, &x, &w, &bias);
+        for _ in 0..3 {
+            reused.reset();
+            let again = mlp_graph(&mut reused, &x, &w, &bias);
+            let mut fresh = Tape::new(QPolicy::new(BF16));
+            let clean = mlp_graph(&mut fresh, &x, &w, &bias);
+            assert_eq!(again.0.to_bits(), clean.0.to_bits());
+            assert_eq!(again.1, clean.1);
+            assert_eq!(again.0.to_bits(), first.0.to_bits());
+        }
+    }
+
+    #[test]
+    fn fast_and_reference_backends_bit_identical() {
+        let mut rng = Rng::new(0x7B, 0);
+        for _ in 0..10 {
+            let x = Tensor::randn(5, 65, 1.0, &mut rng);
+            let w = Tensor::randn(65, 7, 0.3, &mut rng);
+            let bias = Tensor::randn(1, 7, 0.1, &mut rng);
+            let mut fast = Tape::new(QPolicy::with_backend(BF16, Backend::Fast));
+            let mut reference = Tape::new(QPolicy::with_backend(BF16, Backend::Reference));
+            let (lf, gf) = mlp_graph(&mut fast, &x, &w, &bias);
+            let (lr, gr) = mlp_graph(&mut reference, &x, &w, &bias);
+            assert_eq!(lf.to_bits(), lr.to_bits());
+            assert_eq!(gf.rows, gr.rows);
+            for (a, b) in gf.data.iter().zip(&gr.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "concat_cols: need at least one part")]
+    fn concat_cols_rejects_empty() {
+        let mut t = Tape::new(QPolicy::exact());
+        let _ = t.concat_cols(vec![]);
     }
 }

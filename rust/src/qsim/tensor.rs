@@ -4,7 +4,14 @@
 //! numerical behaviour (per-operator output rounding with fp32 FMAC
 //! accumulation), not to be a general array library.  Row-major storage.
 
+use crate::precision::{round_nearest_slice, Format};
 use crate::util::rng::Rng;
+
+/// k-panel height: rows of `other` streamed per tile (64 rows × ≤256 cols of
+/// f32 fits L1 alongside the output panel).
+const MM_KB: usize = 64;
+/// j-panel width: output columns accumulated per tile.
+const MM_NB: usize = 256;
 
 /// Dense row-major tensor, rank 1 or 2 (a rank-1 tensor has rows == 1).
 #[derive(Debug, Clone, PartialEq)]
@@ -75,6 +82,57 @@ impl Tensor {
     /// f32, so plain f32 accumulation models the unit exactly.  The caller
     /// rounds the output (one rounding per operator).
     pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out, None);
+        out
+    }
+
+    /// Cache-blocked `self @ other` into a caller-owned output tensor.
+    ///
+    /// Tiles the k and j loops into panels so `other`'s rows and the output
+    /// panel stay L1-resident while the inner multiply-accumulate loop
+    /// vectorizes over j.  Each output element accumulates its k terms in
+    /// strictly increasing k order with the same zero-skip, so the result is
+    /// bit-identical to [`Tensor::matmul_reference`].
+    ///
+    /// With `round: Some(fmt)`, each finished output row is nearest-rounded
+    /// onto `fmt` while still cache-hot — the operator's output rounding
+    /// fused into the producing kernel instead of a second memory pass.
+    pub fn matmul_into(&self, other: &Tensor, out: &mut Tensor, round: Option<Format>) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        out.rows = m;
+        out.cols = n;
+        out.data.clear();
+        out.data.resize(m * n, 0.0);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j0 in (0..n).step_by(MM_NB) {
+                let j1 = (j0 + MM_NB).min(n);
+                let opanel = &mut orow[j0..j1];
+                for k0 in (0..k).step_by(MM_KB) {
+                    let k1 = (k0 + MM_KB).min(k);
+                    for (kk, &a) in arow[k0..k1].iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = &other.data[(k0 + kk) * n + j0..(k0 + kk) * n + j1];
+                        for (acc, &b) in opanel.iter_mut().zip(brow) {
+                            *acc += a * b;
+                        }
+                    }
+                }
+            }
+            if let Some(fmt) = round {
+                round_nearest_slice(orow, fmt);
+            }
+        }
+    }
+
+    /// The original scalar i-k-j matmul, kept as the bit-exactness oracle
+    /// for the tiled kernel (and as the `Backend::Reference` bench baseline).
+    pub fn matmul_reference(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Tensor::zeros(m, n);
@@ -98,12 +156,21 @@ impl Tensor {
     /// Transposed copy.
     pub fn transpose(&self) -> Tensor {
         let mut out = Tensor::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into a caller-owned tensor (backward-pass scratch reuse).
+    pub fn transpose_into(&self, out: &mut Tensor) {
+        out.rows = self.cols;
+        out.cols = self.rows;
+        out.data.clear();
+        out.data.resize(self.rows * self.cols, 0.0);
         for r in 0..self.rows {
             for c in 0..self.cols {
-                *out.at_mut(c, r) = self.at(r, c);
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
             }
         }
-        out
     }
 
     /// Element-wise map into a new tensor.
@@ -157,6 +224,60 @@ mod tests {
         let a = Tensor::zeros(2, 3);
         let b = Tensor::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn tiled_matmul_bit_identical_to_reference() {
+        let mut rng = Rng::new(0x77, 0);
+        // odd/unaligned shapes straddling the MM_KB/MM_NB panel boundaries
+        for (m, k, n) in [
+            (1, 1, 1),
+            (3, 5, 7),
+            (2, 63, 65),
+            (4, 64, 256),
+            (5, 65, 257),
+            (2, 200, 300),
+        ] {
+            let mut a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            // sprinkle zeros to exercise the zero-skip path
+            for i in 0..a.data.len() {
+                if i % 7 == 0 {
+                    a.data[i] = 0.0;
+                }
+            }
+            let fast = a.matmul(&b);
+            let reference = a.matmul_reference(&b);
+            assert_eq!(fast.rows, reference.rows);
+            assert_eq!(fast.cols, reference.cols);
+            for (i, (x, y)) in fast.data.iter().zip(&reference.data).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n}) elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_into_fused_rounding_matches_post_pass() {
+        use crate::precision::{round_nearest, BF16};
+        let mut rng = Rng::new(0x78, 0);
+        let a = Tensor::randn(5, 33, 1.0, &mut rng);
+        let b = Tensor::randn(33, 17, 1.0, &mut rng);
+        let mut fused = Tensor::zeros(0, 0);
+        a.matmul_into(&b, &mut fused, Some(BF16));
+        let mut post = a.matmul_reference(&b);
+        for x in &mut post.data {
+            *x = round_nearest(*x, BF16);
+        }
+        assert_eq!(fused.data, post.data);
+    }
+
+    #[test]
+    fn transpose_into_reuses_buffer() {
+        let mut rng = Rng::new(0x79, 0);
+        let a = Tensor::randn(3, 4, 1.0, &mut rng);
+        let mut out = Tensor::zeros(9, 9); // wrong shape on purpose
+        a.transpose_into(&mut out);
+        assert_eq!(out, a.transpose());
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! Criterion-style micro-benchmark harness (substrate; criterion itself is
 //! not available offline).  Median-of-samples timing with warmup, throughput
-//! reporting, and a `black_box` to defeat constant folding.
+//! reporting, a `black_box` to defeat constant folding, and a JSON artifact
+//! writer (`BENCH_*.json`) so bench trajectories survive across PRs.
 
+use std::collections::BTreeMap;
 use std::hint::black_box as bb;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// Prevent the optimizer from eliding a value.
 #[inline]
@@ -22,6 +26,16 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("median_ns".to_string(), Json::Num(self.median_ns));
+        o.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        o.insert("min_ns".to_string(), Json::Num(self.min_ns));
+        o.insert("samples".to_string(), Json::Num(self.samples as f64));
+        Json::Obj(o)
+    }
+
     pub fn report(&self) -> String {
         let (val, unit) = humanize(self.median_ns);
         format!(
@@ -85,6 +99,48 @@ pub fn bench(name: &str, mut f: impl FnMut()) -> BenchResult {
     result
 }
 
+/// Fixed-budget variant for smoke/CI runs: one warmup call then exactly
+/// `iters` timed iterations, reported as a single sample.  Keeps bench
+/// targets runnable (and their wiring verified) inside a tiny CI budget.
+pub fn bench_n(name: &str, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    f(); // warmup
+    let iters = iters.max(1);
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t.elapsed().as_nanos() as f64 / iters as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        median_ns: per,
+        mean_ns: per,
+        min_ns: per,
+        samples: 1,
+    };
+    println!("{}", result.report());
+    result
+}
+
+/// Write a `BENCH_*.json` artifact: every bench result plus derived scalar
+/// metrics (speedup ratios, throughputs) under a `derived` object.
+pub fn write_bench_json(
+    path: impl AsRef<std::path::Path>,
+    benches: &[BenchResult],
+    derived: &[(String, f64)],
+) -> std::io::Result<()> {
+    let mut root = BTreeMap::new();
+    root.insert(
+        "benches".to_string(),
+        Json::Arr(benches.iter().map(BenchResult::to_json).collect()),
+    );
+    let mut d = BTreeMap::new();
+    for (k, v) in derived {
+        d.insert(k.clone(), Json::Num(*v));
+    }
+    root.insert("derived".to_string(), Json::Obj(d));
+    std::fs::write(path, Json::Obj(root).to_string())
+}
+
 /// Throughput helper: elements processed per iteration → Melem/s line.
 pub fn throughput(r: &BenchResult, elems_per_iter: usize) {
     let meps = elems_per_iter as f64 / r.median_ns * 1e3;
@@ -107,6 +163,26 @@ mod tests {
         });
         assert!(r.median_ns > 0.0);
         assert!(r.min_ns <= r.median_ns);
+    }
+
+    #[test]
+    fn bench_n_fixed_budget_and_json_round_trip() {
+        let mut acc = 0u64;
+        let r = bench_n("smoke", 4, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(r.samples, 1);
+        assert!(r.median_ns >= 0.0);
+        let path = std::env::temp_dir().join("bf16_bench_json_test.json");
+        write_bench_json(&path, &[r], &[("speedup_x".to_string(), 2.5)]).unwrap();
+        let parsed =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).expect("valid json");
+        assert!(parsed.get("benches").is_some());
+        assert_eq!(
+            parsed.get("derived").and_then(|d| d.get("speedup_x")).and_then(Json::as_f64),
+            Some(2.5)
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -5,9 +5,10 @@
 
 use bf16_train::config::Schedule;
 use bf16_train::precision::{
-    kahan_add, round_nearest, round_stochastic, Format, Mode, Policy, ALL, BF16,
+    kahan_add, round_nearest, round_nearest_slice, round_stochastic, round_stochastic_slice,
+    Format, Mode, Policy, ALL, BF16,
 };
-use bf16_train::qsim::{QPolicy, Tape, Tensor};
+use bf16_train::qsim::{Backend, QPolicy, Tape, Tensor};
 use bf16_train::util::rng::Rng;
 
 fn random_f32(rng: &mut Rng) -> f32 {
@@ -135,6 +136,109 @@ fn prop_quantised_forward_error_bounded_per_op() {
         // ~4 rounding boundaries; allow a 32x eps budget on the magnitude
         let tol = 32.0 * 2f32.powi(-8) * (exact.abs() + 1.0);
         assert!((q - exact).abs() <= tol, "exact={exact} q={q}");
+    }
+}
+
+#[test]
+fn prop_slice_rounding_kernels_match_scalar_all_formats() {
+    // the batched kernels must be bit-identical to the scalar reference for
+    // every format, at odd/unaligned lengths straddling the chunk size
+    let mut rng = Rng::new(0xB1, 0);
+    for fmt in ALL {
+        for len in [1usize, 5, 127, 255, 256, 257, 511, 777] {
+            let xs: Vec<f32> = (0..len).map(|_| random_f32(&mut rng)).collect();
+            // nearest
+            let mut fast = xs.clone();
+            round_nearest_slice(&mut fast, fmt);
+            for (i, (&f, &x)) in fast.iter().zip(&xs).enumerate() {
+                assert_eq!(
+                    f.to_bits(),
+                    round_nearest(x, fmt).to_bits(),
+                    "nearest {} len={len} i={i}",
+                    fmt.name
+                );
+            }
+            // stochastic: values and RNG stream position must both match
+            let mut fast = xs.clone();
+            let mut ra = Rng::new(0xB2, len as u64);
+            let mut rb = ra.clone();
+            round_stochastic_slice(&mut fast, fmt, &mut ra);
+            for (i, (&f, &x)) in fast.iter().zip(&xs).enumerate() {
+                assert_eq!(
+                    f.to_bits(),
+                    round_stochastic(x, fmt, rb.next_u32()).to_bits(),
+                    "stochastic {} len={len} i={i}",
+                    fmt.name
+                );
+            }
+            assert_eq!(ra.next_u64(), rb.next_u64(), "rng stream {} len={len}", fmt.name);
+        }
+    }
+}
+
+#[test]
+fn prop_fill_u32_is_the_next_u32_stream() {
+    for (seed, len) in [(1u64, 1usize), (2, 4), (3, 63), (4, 64), (5, 1000)] {
+        let mut a = Rng::new(seed, 9);
+        let mut b = Rng::new(seed, 9);
+        let mut buf = vec![0u32; len];
+        a.fill_u32(&mut buf);
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, b.next_u32(), "seed={seed} i={i}");
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "stream position seed={seed}");
+    }
+}
+
+#[test]
+fn prop_tiled_matmul_matches_scalar_reference() {
+    let mut rng = Rng::new(0xB3, 0);
+    for trial in 0..40 {
+        let m = 1 + rng.below(9);
+        let k = 1 + rng.below(300);
+        let n = 1 + rng.below(300);
+        let mut a = Tensor::randn(m, k, 1.0, &mut rng);
+        let b = Tensor::randn(k, n, 1.0, &mut rng);
+        // zeros exercise the skip path; identical in both kernels
+        for i in 0..a.data.len() {
+            if i % 5 == 0 {
+                a.data[i] = 0.0;
+            }
+        }
+        let fast = a.matmul(&b);
+        let reference = a.matmul_reference(&b);
+        for (i, (x, y)) in fast.data.iter().zip(&reference.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "trial {trial} ({m}x{k}x{n}) elem {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_tape_backends_bit_identical_over_formats() {
+    // one fwd+bwd MLP step per format: fast (arena + tiled + fused rounding)
+    // vs reference (scalar) must agree bitwise on loss and weight grads
+    let mut rng = Rng::new(0xB4, 0);
+    for fmt in ALL {
+        for _ in 0..5 {
+            let x = Tensor::randn(3, 70, 1.0, &mut rng);
+            let w = Tensor::randn(70, 5, 0.3, &mut rng);
+            let run = |backend: Backend| {
+                let mut t = Tape::new(QPolicy::with_backend(fmt, backend));
+                let xv = t.input_from(&x);
+                let wv = t.param_from(&w);
+                let h = t.matmul(xv, wv);
+                let r = t.relu(h);
+                let m = t.mean_all(r);
+                t.backward(m);
+                (t.value(m).item(), t.grad(wv).unwrap().clone())
+            };
+            let (lf, gf) = run(Backend::Fast);
+            let (lr, gr) = run(Backend::Reference);
+            assert_eq!(lf.to_bits(), lr.to_bits(), "{} loss", fmt.name);
+            for (i, (a, b)) in gf.data.iter().zip(&gr.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} grad elem {i}", fmt.name);
+            }
+        }
     }
 }
 

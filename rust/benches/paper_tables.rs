@@ -22,8 +22,7 @@ fn main() {
         seeds: 1,
         out_dir: tmp.to_string_lossy().into_owned(),
         artifacts_dir: dir.to_string(),
-        smooth: 0.15,
-        threads: None,
+        ..ExpOptions::default()
     };
 
     // native-only experiments

@@ -1,11 +1,15 @@
 //! Native-step bench baseline: times lsq + dlrm train steps per precision
 //! mode on the vectorized `Fast` backend against the scalar `Reference`
-//! backend (the pre-optimization code path), with no PJRT artifacts needed.
+//! backend (the pre-optimization code path), with no PJRT artifacts needed,
+//! plus an `intra_threads ∈ {1, 2, hw}` scaling sweep of the parallel
+//! execution layer (`derived.scaling_dlrm_sr16_tN` = t1 median / tN median;
+//! > 1.0 means the worker pool pays off at N threads).
 //!
 //! Emits `BENCH_qsim.json` (override the path with `QSIM_BENCH_OUT`) so
 //! future PRs have a throughput trajectory to compare against.  Set
 //! `QSIM_BENCH_SMOKE=1` (or pass `--smoke`) for a tiny CI-sized iteration
-//! budget that only verifies the target still runs end to end.
+//! budget that only verifies the target still runs end to end (smoke
+//! scaling ratios are noise — `derived.smoke = 1` marks such runs).
 
 use bf16_train::qsim::dlrm::{DlrmConfig, DlrmTrainer};
 use bf16_train::qsim::lsq::{self, LsqConfig, LsqData, Placement};
@@ -72,6 +76,59 @@ fn main() {
         derived.push((format!("speedup_dlrm_{}", mode.name()), speedup));
     }
 
+    // -- intra-step scaling: a DLRM big enough for the pool to matter -------
+    // (dlrm-small's default shapes are too tiny to amortize any dispatch;
+    // this config matches a mid-size production-ish embedding + MLP stack)
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut thread_counts = vec![1usize, 2];
+    if hw > 2 {
+        thread_counts.push(hw);
+    }
+    let par_cfg = |threads: usize| DlrmConfig {
+        seed: 3,
+        table_size: 2000,
+        embed_dim: 32,
+        dense_dim: 32,
+        hidden: 256,
+        batch: if smoke { 64 } else { 256 },
+        intra_threads: threads,
+        ..Default::default()
+    };
+    let mut t1_median = None;
+    for &threads in &thread_counts {
+        let mut tr = DlrmTrainer::new(par_cfg(threads), Mode::Sr16);
+        for _ in 0..2 {
+            tr.step(0.05); // warm the tape arena and the worker pool
+        }
+        let r = timed(smoke, &format!("dlrm-par step sr16 t{threads}"), || {
+            black_box(tr.step(0.05));
+        });
+        match t1_median {
+            None => t1_median = Some(r.median_ns),
+            Some(t1) => {
+                let scaling = t1 / r.median_ns;
+                println!("  ↳ dlrm-par sr16 scaling t{threads} vs t1: {scaling:.2}x");
+                derived.push((format!("scaling_dlrm_sr16_t{threads}"), scaling));
+            }
+        }
+        results.push(r);
+    }
+    // thread-count bit-identity spot check on the scaling config
+    {
+        let mut a = DlrmTrainer::new(par_cfg(1), Mode::Sr16);
+        let mut b = DlrmTrainer::new(par_cfg(2), Mode::Sr16);
+        for s in 0..3 {
+            let ta = a.step(0.05);
+            let tb = b.step(0.05);
+            assert_eq!(
+                ta.loss.to_bits(),
+                tb.loss.to_bits(),
+                "t1/t2 loss diverged at step {s}"
+            );
+        }
+        println!("parity: dlrm-par sr16 bit-identical at 1 vs 2 intra-threads");
+    }
+
     // -- lsq theory loop, per rounding placement ----------------------------
     let steps = if smoke { 50 } else { 1000 };
     let cfg = LsqConfig { steps, n_samples: 256, ..LsqConfig::default() };
@@ -106,6 +163,7 @@ fn main() {
     }
     println!("parity: {parity_steps} sr16 steps bit-identical across backends");
     derived.push(("parity_sr16_steps".into(), parity_steps as f64));
+    derived.push(("smoke".into(), if smoke { 1.0 } else { 0.0 }));
 
     write_bench_json(&out_path, &results, &derived).expect("writing bench json");
     println!("wrote {out_path}");

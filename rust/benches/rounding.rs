@@ -4,10 +4,10 @@
 
 use bf16_train::precision::{
     kahan_add, round_nearest, round_nearest_slice, round_stochastic, round_stochastic_slice,
-    RoundMode, Rounder, BF16, E8M3, FP16,
+    round_stochastic_slice_keyed, RoundMode, Rounder, BF16, E8M3, FP16,
 };
 use bf16_train::util::bench::{bench, black_box, throughput};
-use bf16_train::util::rng::Rng;
+use bf16_train::util::rng::{DitherKey, Rng};
 
 fn main() {
     let mut rng = Rng::new(7, 0);
@@ -65,6 +65,25 @@ fn main() {
         let mut v = xs.clone();
         round_stochastic_slice(&mut v, BF16, &mut g);
         black_box(v);
+    });
+    throughput(&r, n);
+
+    // counter-keyed SR (the dither schedule the qsim trainers consume):
+    // slice kernel vs the scalar per-word draws it must match bit-for-bit
+    let key = DitherKey::new(7, 0x5352, 0, 0);
+    let r = bench("round_stochastic_slice_keyed/bf16 64k", || {
+        let mut v = xs.clone();
+        round_stochastic_slice_keyed(&mut v, BF16, key, 0);
+        black_box(v);
+    });
+    throughput(&r, n);
+
+    let r = bench("dither_key/word 64k", || {
+        let mut acc = 0u32;
+        for i in 0..n {
+            acc = acc.wrapping_add(key.word(i as u64));
+        }
+        black_box(acc);
     });
     throughput(&r, n);
 

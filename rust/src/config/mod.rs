@@ -79,6 +79,16 @@ pub struct RunConfig {
     pub log_every: u64,
     pub artifacts_dir: String,
     pub out_dir: String,
+    /// Worker threads *within* one train step (`--intra-threads`; TOML key
+    /// `train.intra_threads`).  `1` = sequential (default), `0` = available
+    /// parallelism.  Honored by the qsim-native kernels (the fig5/fig9
+    /// experiments, `qsim-parity`, the native benches); the PJRT session
+    /// path records it in its `RunSummary` but executes its lowered
+    /// programs as compiled.  SR dither is counter-keyed, so results are
+    /// bit-identical at every setting.  Distinct from sweep-level
+    /// `--threads`, which fans *runs* out across workers — a multi-worker
+    /// sweep clamps auto (`0`) cells back to `1` to avoid oversubscription.
+    pub intra_threads: usize,
 }
 
 impl RunConfig {
@@ -133,6 +143,7 @@ impl RunConfig {
             log_every: (steps / 200).max(1),
             artifacts_dir: "artifacts".to_string(),
             out_dir: "results".to_string(),
+            intra_threads: 1,
         }
     }
 
@@ -173,6 +184,10 @@ impl RunConfig {
         cfg.log_every = doc.i64_or("train.log_every", cfg.log_every as i64) as u64;
         cfg.artifacts_dir = doc.str_or("paths.artifacts", &cfg.artifacts_dir).to_string();
         cfg.out_dir = doc.str_or("paths.out", &cfg.out_dir).to_string();
+        // .max(0): a negative TOML value must not wrap through `as usize`
+        // into an astronomical thread count — treat it as auto (0)
+        cfg.intra_threads =
+            doc.i64_or("train.intra_threads", cfg.intra_threads as i64).max(0) as usize;
         if let Some(kind) = doc.get("schedule.kind").and_then(|v| v.as_str()) {
             let warmup = doc.f64_or("schedule.warmup_frac", 0.0);
             let boundaries: Vec<f64> = doc
@@ -222,6 +237,7 @@ pub struct RunSpec {
     log_every: Option<u64>,
     artifacts_dir: Option<String>,
     out_dir: Option<String>,
+    intra_threads: Option<usize>,
 }
 
 impl RunSpec {
@@ -248,6 +264,7 @@ impl RunSpec {
             log_every: None,
             artifacts_dir: None,
             out_dir: None,
+            intra_threads: None,
         }
     }
 
@@ -305,6 +322,13 @@ impl RunSpec {
         self
     }
 
+    /// Intra-step worker threads (1 = sequential, 0 = auto).  Results are
+    /// bit-identical at every setting; this only trades wall-clock.
+    pub fn intra_threads(mut self, n: usize) -> Self {
+        self.intra_threads = Some(n);
+        self
+    }
+
     /// Materialize the final [`RunConfig`].
     pub fn build(&self) -> RunConfig {
         let mut cfg = self.base.clone();
@@ -349,6 +373,9 @@ impl RunSpec {
         }
         if let Some(d) = &self.out_dir {
             cfg.out_dir = d.clone();
+        }
+        if let Some(n) = self.intra_threads {
+            cfg.intra_threads = n;
         }
         cfg
     }
@@ -447,6 +474,19 @@ warmup_frac = 0.1
         // cadence rescaled to the new budget
         assert_eq!(cfg.eval_every, 60);
         assert_eq!(cfg.log_every, 3);
+    }
+
+    #[test]
+    fn intra_threads_defaults_parses_and_overrides() {
+        let cfg = RunConfig::defaults_for("dlrm-small");
+        assert_eq!(cfg.intra_threads, 1, "sequential by default");
+        let cfg = RunConfig::from_toml_text(
+            "app = \"dlrm-small\"\n[train]\nintra_threads = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.intra_threads, 4);
+        let spec = RunSpec::new("dlrm-small").intra_threads(2);
+        assert_eq!(spec.build().intra_threads, 2);
     }
 
     #[test]

@@ -39,6 +39,12 @@ pub struct ExpOptions {
     pub smooth: f64,
     /// Worker threads for sweep fan-out (None: available parallelism)
     pub threads: Option<usize>,
+    /// Intra-step worker threads per run (None: the config default of 1;
+    /// `0` = auto, which a multi-worker sweep clamps back to sequential).
+    /// Drives the qsim-native experiments (fig5/fig9) directly; sweep-based
+    /// experiments thread it into each cell's `RunConfig`.  Bit-identical
+    /// results at every setting.
+    pub intra_threads: Option<usize>,
 }
 
 impl Default for ExpOptions {
@@ -50,6 +56,7 @@ impl Default for ExpOptions {
             artifacts_dir: "artifacts".into(),
             smooth: 0.15,
             threads: None,
+            intra_threads: None,
         }
     }
 }
@@ -85,6 +92,9 @@ impl<'a> ExpContext<'a> {
         if let Some(s) = opts.steps {
             base = base.steps(s).eval_every((s / 4).max(1)).log_every((s / 100).max(1));
         }
+        if let Some(t) = opts.intra_threads {
+            base = base.intra_threads(t);
+        }
         let mut sweep = Sweep::new(base).policies(policies.iter().copied()).seeds(opts.seeds);
         if let Some(t) = opts.threads {
             sweep = sweep.threads(t);
@@ -117,6 +127,21 @@ fn metric_cell(rs: &[&RunSummary]) -> String {
     }
     let (m, s) = mean_std(&vals);
     pm(m, s, 2)
+}
+
+/// Mean training throughput over a set of runs (`-` when nothing ran) —
+/// surfaces `steps_per_s` in the experiment tables, not just the train CLI.
+fn throughput_cell<'a>(rs: impl IntoIterator<Item = &'a RunSummary>) -> String {
+    let vals: Vec<f64> = rs
+        .into_iter()
+        .map(|r| r.steps_per_s)
+        .filter(|v| v.is_finite() && *v > 0.0)
+        .collect();
+    if vals.is_empty() {
+        return "-".into();
+    }
+    let (m, _) = mean_std(&vals);
+    format!("{m:.1}")
 }
 
 /// Export per-seed curves as CSV (step, loss, metric, cancel, lr).
@@ -322,7 +347,7 @@ impl Experiment for Fig1 {
         let opts = ctx.opts;
         let mut t = Table::new(
             "Figure 1 — transformer-cls: standard 16-bit-FPU vs 32-bit",
-            &["algorithm", "final train acc %", "val acc %"],
+            &["algorithm", "final train acc %", "val acc %", "steps/s"],
         );
         let policies = [Policy::bf16(Mode::Fp32), Policy::bf16(Mode::Standard16)];
         let res = ctx.sweep("bert-cls", &policies, self.id())?;
@@ -334,7 +359,12 @@ impl Experiment for Fig1 {
                 .map(|r| r.history.tail_metric(5) as f64 * 100.0)
                 .collect();
             let (m, _) = mean_std(&train_acc);
-            t.row(vec![p.to_string(), format!("{m:.2}"), metric_cell(&rs)]);
+            t.row(vec![
+                p.to_string(),
+                format!("{m:.2}"),
+                metric_cell(&rs),
+                throughput_cell(rs.iter().copied()),
+            ]);
         }
         let s = t.render();
         opts.write("fig1.txt", &s)?;
@@ -429,7 +459,15 @@ impl Experiment for Table4 {
         let opts = ctx.opts;
         let mut t = Table::new(
             "Table 4 — 16-bit-FPU training vs 32-bit across applications",
-            &["model", "metric", "32-bit", "16-bit stochastic", "16-bit kahan", "16-bit standard"],
+            &[
+                "model",
+                "metric",
+                "32-bit",
+                "16-bit stochastic",
+                "16-bit kahan",
+                "16-bit standard",
+                "sr16 steps/s",
+            ],
         );
         let apps: Vec<&str> = match ctx.only_app {
             Some(a) => vec![a],
@@ -467,6 +505,11 @@ impl Experiment for Table4 {
                 cells[1].clone(),
                 cells[2].clone(),
                 cells[3].clone(),
+                // one policy's throughput, not a cross-policy mean: sr16 is
+                // the paper's headline mode and the hot-path signal
+                throughput_cell(
+                    res.for_policy(&Policy::bf16(Mode::Sr16)).into_iter(),
+                ),
             ]);
         }
         let s = t.render()
@@ -493,14 +536,23 @@ impl Experiment for Fig5 {
         let steps = opts.steps.unwrap_or(1200) as usize;
         let mut t = Table::new(
             "Figure 5 — DLRM: replacing SR with Kahan tensor-by-tensor",
-            &["kahan tensors", "weight MB (rel.)", "val AUC %"],
+            &["kahan tensors", "weight MB (rel.)", "val AUC %", "steps/s"],
         );
-        let base_cfg = DlrmConfig::default();
+        let base_cfg = DlrmConfig {
+            intra_threads: opts.intra_threads.unwrap_or(1),
+            ..DlrmConfig::default()
+        };
         let n_tensors = base_cfg.num_tables + 6;
+        // the all-SR byte count is loop-invariant: compute the denominator
+        // once (sequential probe — no point spawning a pool for a byte sum)
+        let all_sr =
+            DlrmTrainer::new(DlrmConfig { intra_threads: 1, ..base_cfg.clone() }, Mode::Sr16)
+                .weight_bytes(&vec![Mode::Sr16; n_tensors]);
         // sweep: 0 tensors (all SR) … all tensors Kahan, embeddings first
         // (they dominate memory, exactly the paper's sweep axis).
         for kahan_k in [0usize, 2, 4, n_tensors] {
             let mut aucs = Vec::new();
+            let mut sps = Vec::new();
             let mut bytes = 0u64;
             for seed in 0..opts.seeds {
                 let cfg = DlrmConfig { seed, ..base_cfg.clone() };
@@ -509,19 +561,24 @@ impl Experiment for Fig5 {
                     .collect();
                 let mut tr = DlrmTrainer::new_mixed(cfg, modes.clone());
                 bytes = tr.weight_bytes(&modes);
+                let t0 = std::time::Instant::now();
                 for _ in 0..steps {
                     tr.step(0.05);
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                if dt > 0.0 {
+                    sps.push(steps as f64 / dt);
                 }
                 let (_, auc) = tr.eval(16);
                 aucs.push(auc as f64 * 100.0);
             }
             let (m, s) = mean_std(&aucs);
-            let all_sr = DlrmTrainer::new(base_cfg.clone(), Mode::Sr16)
-                .weight_bytes(&vec![Mode::Sr16; n_tensors]);
+            let (sps_m, _) = mean_std(&sps);
             t.row(vec![
                 format!("{kahan_k}/{n_tensors}"),
                 format!("{:.2}x", bytes as f64 / all_sr as f64),
                 pm(m, s, 2),
+                format!("{sps_m:.1}"),
             ]);
         }
         let s = t.render();
@@ -546,14 +603,18 @@ impl Experiment for Fig9 {
         let steps = opts.steps.unwrap_or(3000) as usize;
         let mut t = Table::new(
             "Figure 9 — % non-zero updates cancelled by nearest rounding",
-            &["dataset proxy / lr", "phase", "embedding layer", "MLP layers"],
+            &["dataset proxy / lr", "phase", "embedding layer", "MLP layers", "steps/s"],
         );
         let mut csv = String::from("setting,step,embed_cancel_pct,mlp_cancel_pct,loss\n");
         // Kaggle proxy: constant lr (cancellation grows as gradients shrink);
         // Terabyte proxy: decaying lr (compound effect, paper App. D.3).
         for (label, decay) in [("kaggle-constant-lr", false), ("terabyte-decaying-lr", true)] {
-            let cfg = DlrmConfig::default();
+            let cfg = DlrmConfig {
+                intra_threads: opts.intra_threads.unwrap_or(1),
+                ..DlrmConfig::default()
+            };
             let mut tr = DlrmTrainer::new(cfg, Mode::Standard16);
+            let t0 = std::time::Instant::now();
             let window = (steps / 40).max(1);
             let mut emb_acc = crate::qsim::UpdateStats::default();
             let mut mlp_acc = crate::qsim::UpdateStats::default();
@@ -593,17 +654,21 @@ impl Experiment for Fig9 {
                     loss_acc = 0.0;
                 }
             }
+            let dt = t0.elapsed().as_secs_f64();
+            let sps = if dt > 0.0 { format!("{:.1}", steps as f64 / dt) } else { "-".into() };
             t.row(vec![
                 label.into(),
                 "early (first quarter)".into(),
                 format!("{:.1}%", early.0),
                 format!("{:.1}%", early.1),
+                sps.clone(),
             ]);
             t.row(vec![
                 label.into(),
                 "late (final window)".into(),
                 format!("{:.1}%", late.0),
                 format!("{:.1}%", late.1),
+                sps,
             ]);
         }
         let s = t.render()

@@ -12,6 +12,18 @@
 //! a *result* in this paper (standard16/fp16 are expected to fail on some
 //! workloads) — while a run that cannot even start (missing artifact) fails
 //! the whole sweep.
+//!
+//! ## Thread budget
+//!
+//! Sweep `--threads` fans *runs* out across workers; the per-run
+//! `--intra-threads` knob parallelizes *within* a step.  The defaults
+//! compose safely: cells inherit `intra_threads = 1`, and a cell asking for
+//! *auto* sizing (`intra_threads == 0`) is clamped back to sequential when
+//! the sweep runs multi-worker — every worker auto-sizing to all cores
+//! would oversubscribe the machine `workers×`.  An explicit per-run thread
+//! count always passes through.  Worker count never exceeds the number of
+//! non-empty work chunks — the ceil-division chunk plan is recomputed so no
+//! idle workers are spawned.
 
 use std::sync::Mutex;
 
@@ -73,10 +85,25 @@ impl Sweep {
 
     /// Expand the grid into per-cell configs, policy-major, seed-minor.
     pub fn cells(&self) -> Vec<RunConfig> {
+        self.cells_for_workers(1)
+    }
+
+    /// Like [`Sweep::cells`], but with the multi-worker intra-thread rule
+    /// applied: a cell that asks for *auto* intra-step sizing
+    /// (`intra_threads == 0`) is clamped to sequential when runs fan out
+    /// across `workers > 1` — every worker auto-sizing to all cores would
+    /// oversubscribe the machine `workers×`.  An explicit thread count
+    /// (builder or TOML `train.intra_threads`) is the caller's choice and
+    /// always passes through.
+    fn cells_for_workers(&self, workers: usize) -> Vec<RunConfig> {
         let mut cells = Vec::with_capacity(self.policies.len() * self.seeds as usize);
         for &p in &self.policies {
             for k in 0..self.seeds {
-                cells.push(self.base.clone().policy(p).seed(self.base_seed + k).build());
+                let mut cfg = self.base.clone().policy(p).seed(self.base_seed + k).build();
+                if workers > 1 && cfg.intra_threads == 0 {
+                    cfg.intra_threads = 1;
+                }
+                cells.push(cfg);
             }
         }
         cells
@@ -84,10 +111,10 @@ impl Sweep {
 
     /// Run every cell; results are in `cells()` order.
     pub fn run(&self, runner: &Runner) -> Result<SweepResults> {
-        let cells = self.cells();
-        let n = cells.len();
+        let n = self.policies.len() * self.seeds as usize;
         let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
         let threads = self.threads.unwrap_or(hw).min(n.max(1));
+        let cells = self.cells_for_workers(threads);
         if threads <= 1 {
             // reuse the runner's engine (and its compiled-executable cache)
             let mut runs = Vec::with_capacity(n);
@@ -102,17 +129,22 @@ impl Sweep {
             (0..n).map(|_| Mutex::new(None)).collect();
         // contiguous chunks: cells are policy-major, so one artifact's
         // cells stay on one worker and its executable cache amortizes the
-        // XLA compilation instead of every worker recompiling every policy
+        // XLA compilation instead of every worker recompiling every policy.
+        // Ceil division can plan fewer non-empty chunks than `threads`
+        // (e.g. 5 cells / 4 workers → 3 chunks of 2); recompute the worker
+        // count from the chunk length so no idle worker is ever spawned.
         let chunk_len = (n + threads - 1) / threads;
+        let threads = (n + chunk_len - 1) / chunk_len;
         let mut work: Vec<Vec<(usize, RunConfig)>> = Vec::with_capacity(threads);
         let mut it = cells.into_iter().enumerate();
         for _ in 0..threads {
             work.push(it.by_ref().take(chunk_len).collect());
         }
+        debug_assert!(work.iter().all(|c| !c.is_empty()), "idle sweep worker planned");
         std::thread::scope(|s| {
             for chunk in work {
                 if chunk.is_empty() {
-                    continue; // ceil division can leave trailing empty chunks
+                    continue; // defensive: the recomputed plan has none
                 }
                 let slots = &slots;
                 s.spawn(move || {
@@ -162,17 +194,19 @@ fn run_cell(engine: &Engine, manifest: &Manifest, cfg: RunConfig) -> Result<RunS
     let seed = cfg.seed;
     let app = cfg.app.clone();
     let policy = cfg.policy;
+    let intra_threads = cfg.intra_threads;
     eprintln!("  [{label} seed={seed}] {} steps…", cfg.steps);
     let mut tr = Trainer::new(engine, manifest, cfg)?;
     match tr.run() {
         Ok(summary) => {
             eprintln!(
-                "  [{label} seed={seed}] {}={:.3} loss={:.4} cancel={:.1}% ({:.1}s)",
+                "  [{label} seed={seed}] {}={:.3} loss={:.4} cancel={:.1}% ({:.1}s, {:.1} steps/s)",
                 summary.metric_name,
                 summary.val_metric,
                 summary.final_train_loss,
                 summary.mean_cancel_frac * 100.0,
-                summary.wallclock_s
+                summary.wallclock_s,
+                summary.steps_per_s
             );
             Ok(summary)
         }
@@ -192,6 +226,7 @@ fn run_cell(engine: &Engine, manifest: &Manifest, cfg: RunConfig) -> Result<RunS
                 history: History::default(),
                 wallclock_s: 0.0,
                 steps_per_s: 0.0,
+                intra_threads,
             })
         }
     }
@@ -217,6 +252,43 @@ mod tests {
         assert_eq!(cells[3].seed, 100);
         for c in &cells {
             assert_eq!(c.steps, 10);
+        }
+    }
+
+    #[test]
+    fn multi_worker_sweep_clamps_auto_intra_threads() {
+        // auto sizing (0) is fine single-worker but must not survive a
+        // multi-worker fan-out (workers × cores oversubscription)
+        let sweep = Sweep::new(RunSpec::new("lsq").steps(10).intra_threads(0))
+            .policies([Policy::bf16(Mode::Fp32), Policy::bf16(Mode::Sr16)])
+            .seeds(2);
+        assert!(sweep.cells_for_workers(1).iter().all(|c| c.intra_threads == 0));
+        assert!(sweep.cells_for_workers(4).iter().all(|c| c.intra_threads == 1));
+        // the sequential default is untouched either way
+        let sweep = Sweep::new(RunSpec::new("lsq").steps(10))
+            .policy(Policy::bf16(Mode::Fp32))
+            .seeds(2);
+        assert!(sweep.cells_for_workers(4).iter().all(|c| c.intra_threads == 1));
+        // an explicit per-run thread count always passes through
+        let sweep = Sweep::new(RunSpec::new("lsq").steps(10).intra_threads(2))
+            .policy(Policy::bf16(Mode::Fp32))
+            .seeds(3);
+        assert!(sweep.cells_for_workers(4).iter().all(|c| c.intra_threads == 2));
+    }
+
+    #[test]
+    fn chunk_plan_never_leaves_idle_workers() {
+        // the replanned worker count used by `run`: every worker gets a
+        // non-empty contiguous chunk for any (cells, threads) combination
+        for n in 1usize..40 {
+            for req in 1usize..10 {
+                let threads = req.min(n);
+                let chunk_len = (n + threads - 1) / threads;
+                let replanned = (n + chunk_len - 1) / chunk_len;
+                assert!(replanned <= threads, "n={n} req={req}");
+                let last = n - chunk_len * (replanned - 1);
+                assert!((1..=chunk_len).contains(&last), "n={n} req={req}");
+            }
         }
     }
 }

@@ -37,6 +37,13 @@ pub struct RunSummary {
     /// Training throughput over the steps this run actually executed (the
     /// qsim/runtime hot-path regression signal; 0.0 when nothing ran).
     pub steps_per_s: f64,
+    /// Intra-step worker threads the run was configured with.  Metrics
+    /// (losses, accuracies, `mean_cancel_frac`, checkpoints) are
+    /// bit-identical across settings — only `steps_per_s`/`wallclock_s`
+    /// may differ; the CI determinism job asserts exactly that over the
+    /// qsim-native trainer.  The PJRT session path records the setting but
+    /// does not yet re-thread its lowered executables.
+    pub intra_threads: usize,
 }
 
 /// A live run: owns the session + generators.
@@ -171,6 +178,7 @@ impl<'e> Trainer<'e> {
             history: std::mem::take(&mut self.history),
             wallclock_s: t0.elapsed().as_secs_f64(),
             steps_per_s: if train_s > 0.0 { self.steps_run as f64 / train_s } else { 0.0 },
+            intra_threads: self.cfg.intra_threads,
         })
     }
 

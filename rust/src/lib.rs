@@ -42,6 +42,24 @@
 //!     .seeds(3)
 //!     .run(&runner)?;
 //! ```
+//!
+//! ## Deterministic intra-step parallelism
+//!
+//! Stochastic-rounding dither is **counter-keyed**
+//! ([`util::rng::DitherKey`]): every dither word is a pure function of
+//! `(seed, stream, step, tensor_id, element_index)` rather than a draw from
+//! a sequential stream.  On top of that, the qsim kernels (matmul row
+//! panels, elementwise tape ops, the staged SGD update) fan out over a
+//! per-trainer worker pool ([`qsim::Pool`]) sized by `--intra-threads`
+//! (`RunSpec::intra_threads`, TOML `train.intra_threads`; `1` = sequential
+//! default, `0` = auto).  Because the dither is positional and every
+//! parallel kernel is row/element-local, **training results are
+//! bit-identical at every thread count** — and to the scalar
+//! `Backend::Reference` oracle.  `--intra-threads` composes with the
+//! sweep-level `--threads` (runs × workers); a multi-worker sweep clamps
+//! auto-sized (`0`) cells back to sequential to avoid oversubscription.
+//! The pool currently drives the qsim-native kernels; the PJRT session
+//! path records the knob but executes its lowered programs as compiled.
 
 pub mod config;
 pub mod util;

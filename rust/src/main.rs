@@ -5,6 +5,8 @@
 //!   train                     — run one training job (flags or --config TOML)
 //!   exp <id> [--steps N] …    — regenerate one paper table/figure (or `all`)
 //!   bench-step <artifact>     — measure raw train-step latency
+//!   qsim-parity               — deterministic digest of a native qsim run
+//!                               (CI diffs it across --intra-threads values)
 //!
 //! Precision policies are typed end-to-end: `--mode sr16 --fmt e8m5` (and
 //! artifact names like `dlrm-small__sr16-e8m5`) parse through
@@ -32,6 +34,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&mut args),
         "exp" => cmd_exp(&mut args),
         "bench-step" => cmd_bench_step(&mut args),
+        "qsim-parity" => cmd_qsim_parity(&mut args),
         "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -43,13 +46,22 @@ fn main() -> Result<()> {
 const USAGE: &str = "usage: repro <command>
   list [--artifacts DIR]
   train --app APP [--mode MODE] [--fmt FMT] [--steps N] [--seed S]
-        [--lr LR] [--config FILE.toml] [--checkpoint PATH] [--resume PATH]
+        [--lr LR] [--intra-threads T] [--config FILE.toml]
+        [--checkpoint PATH] [--resume PATH]
   exp <table1|table2|table3|table4|fig1|fig2|fig5|fig9|fig10|fig11|fig12|thm1|all>
-        [--steps N] [--seeds K] [--app APP] [--threads T] [--no-smooth]
-  bench-step <artifact-name> [--iters N]
+        [--steps N] [--seeds K] [--app APP] [--threads T]
+        [--intra-threads T] [--no-smooth]
+  bench-step <artifact-name> [--iters N] [--intra-threads T]
+  qsim-parity [--steps N] [--seed S] [--intra-threads T]
 
 modes: fp32 standard16 mixed16 sr16 kahan16 srkahan16
-fmts:  bf16 (default) fp16 e8m5 e8m3 e8m1";
+fmts:  bf16 (default) fp16 e8m5 e8m3 e8m1
+
+--threads fans runs out across sweep workers; --intra-threads parallelizes
+within one train step (bit-identical results at every setting).  Today the
+intra-step pool drives the qsim-native kernels (fig5/fig9, qsim-parity, the
+native benches); the PJRT session path records the setting but still runs
+its lowered executables as compiled.";
 
 fn cmd_list(args: &mut Args) -> Result<()> {
     let dir = args.opt("artifacts", "artifacts");
@@ -87,6 +99,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     let steps = args.opt_u64("steps", cfg.steps)?;
     let seed = args.opt_u64("seed", cfg.seed)?;
     let lr = args.opt_f64("lr", cfg.base_lr)?;
+    let intra_threads = args.opt_u64("intra-threads", cfg.intra_threads as u64)? as usize;
     let artifacts_dir = args.opt("artifacts", &cfg.artifacts_dir.clone());
     let checkpoint = args.opt_maybe("checkpoint");
     let resume = args.opt_maybe("resume");
@@ -97,6 +110,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         .steps(steps)
         .seed(seed)
         .lr(lr)
+        .intra_threads(intra_threads)
         .artifacts_dir(&artifacts_dir);
     let cfg = spec.build();
     let runner = Runner::open(&artifacts_dir)?;
@@ -151,6 +165,13 @@ fn cmd_exp(args: &mut Args) -> Result<()> {
             .opt_maybe("threads")
             .map(|s| s.parse::<usize>().with_context(|| format!("--threads expects an integer, got {s:?}")))
             .transpose()?,
+        intra_threads: args
+            .opt_maybe("intra-threads")
+            .map(|s| {
+                s.parse::<usize>()
+                    .with_context(|| format!("--intra-threads expects an integer, got {s:?}"))
+            })
+            .transpose()?,
     };
     if args.flag("no-smooth") {
         opts.smooth = 1.0; // Figure 6: unsmoothed curves
@@ -186,6 +207,7 @@ fn cmd_exp(args: &mut Args) -> Result<()> {
 fn cmd_bench_step(args: &mut Args) -> Result<()> {
     let name = args.pos(1).context("bench-step needs an artifact name")?.to_string();
     let iters = args.opt_u64("iters", 200)?;
+    let intra_threads = args.opt_u64("intra-threads", 1)? as usize;
     let dir = args.opt("artifacts", "artifacts");
     args.finish()?;
     let (app, policy) = Policy::parse_artifact_name(&name)?;
@@ -195,6 +217,7 @@ fn cmd_bench_step(args: &mut Args) -> Result<()> {
     let spec = RunSpec::new(&app)
         .policy(policy)
         .steps(warmup + iters)
+        .intra_threads(intra_threads)
         .artifacts_dir(&dir);
     let runner = Runner::open(&dir)?;
     let mut tr = runner.trainer(&spec)?;
@@ -207,5 +230,52 @@ fn cmd_bench_step(args: &mut Args) -> Result<()> {
         dt * 1000.0 / iters as f64,
         iters as f64 / dt
     );
+    Ok(())
+}
+
+/// Deterministic digest of a native qsim DLRM training run: per-step loss
+/// bit patterns and cancellation counters, plus a final eval.  Contains no
+/// timings, so the output must be byte-identical across `--intra-threads`
+/// settings — the CI determinism job runs it at 1 and 4 threads and diffs.
+fn cmd_qsim_parity(args: &mut Args) -> Result<()> {
+    use bf16_train::qsim::dlrm::{DlrmConfig, DlrmTrainer};
+
+    let steps = args.opt_u64("steps", 40)?;
+    let seed = args.opt_u64("seed", 17)?;
+    let intra_threads = args.opt_u64("intra-threads", 1)? as usize;
+    args.finish()?;
+    eprintln!("qsim-parity: {steps} steps, seed {seed}, {intra_threads} intra-threads");
+    for mode in [Mode::Sr16, Mode::SrKahan16] {
+        let cfg = DlrmConfig {
+            seed,
+            // large enough that the parallel kernels actually engage
+            table_size: 600,
+            embed_dim: 16,
+            hidden: 64,
+            batch: 48,
+            intra_threads,
+            ..Default::default()
+        };
+        let mut tr = DlrmTrainer::new(cfg, mode);
+        for step in 0..steps {
+            let tel = tr.step(0.05);
+            println!(
+                "{} step {step}: loss {:08x} embed {}/{} mlp {}/{}",
+                mode.name(),
+                tel.loss.to_bits(),
+                tel.embed.cancelled,
+                tel.embed.nonzero,
+                tel.mlp.cancelled,
+                tel.mlp.nonzero
+            );
+        }
+        let (eval_loss, auc) = tr.eval(4);
+        println!(
+            "{} final: eval-loss {:08x} auc {:08x}",
+            mode.name(),
+            eval_loss.to_bits(),
+            auc.to_bits()
+        );
+    }
     Ok(())
 }

@@ -25,6 +25,6 @@ pub use format::{Format, ALL, BF16, E8M1, E8M3, E8M5, FP16, FP32};
 pub use kahan::{kahan_add, KahanAcc};
 pub use policy::{Mode, Policy, PolicyParseError};
 pub use round::{
-    round_nearest, round_nearest_slice, round_stochastic, round_stochastic_slice, RoundMode,
-    Rounder,
+    round_nearest, round_nearest_slice, round_stochastic, round_stochastic_slice,
+    round_stochastic_slice_keyed, RoundMode, Rounder,
 };

@@ -1,7 +1,18 @@
 //! Rounding kernels: RNE and stochastic, bit-identical to the python side.
+//!
+//! Stochastic rounding comes in two flavours: the legacy *sequential* slice
+//! kernel ([`round_stochastic_slice`], dither drawn from an [`Rng`] stream,
+//! element-order load-bearing) and the *counter-keyed* schedule, where the
+//! dither for element `i` is a pure function of position via
+//! [`DitherKey::word`], so any chunking or thread schedule reproduces it
+//! bit-for-bit.  The qsim trainers consume the keyed schedule through
+//! scalar `round_stochastic(x, fmt, key.word(i))` calls (their loops
+//! interleave stats with the rounding); [`round_stochastic_slice_keyed`] is
+//! the pure slice-level form of the same schedule for whole-buffer
+//! consumers, and the chunk-invariance oracle the property tests pin down.
 
 use super::format::Format;
-use crate::util::rng::Rng;
+use crate::util::rng::{DitherKey, Rng};
 
 /// How an operator output is rounded onto the target format.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -137,6 +148,52 @@ pub fn round_stochastic_slice(xs: &mut [f32], fmt: Format, rng: &mut Rng) {
     for chunk in xs.chunks_mut(SR_CHUNK) {
         let b = &mut bits[..chunk.len()];
         rng.fill_u32(b);
+        for (x, &rb) in chunk.iter_mut().zip(b.iter()) {
+            let v = *x;
+            if !v.is_finite() {
+                continue;
+            }
+            let u = v.to_bits();
+            let mut y = f32::from_bits(u.wrapping_add(rb & noise_mask) & keep_mask);
+            if clamp {
+                let a = y.abs();
+                if a > max_v {
+                    y = f32::INFINITY.copysign(y);
+                } else if a < min_n {
+                    y = 0.0f32.copysign(y);
+                }
+            }
+            *x = y;
+        }
+    }
+}
+
+/// Stochastically round a slice in place with counter-keyed dither.
+///
+/// Element `j` of `xs` uses dither word `key.word(base + j)`; the result is
+/// therefore a pure function of `(key, base, xs)` — independent of how the
+/// slice is chunked across calls or threads.  Rounding a whole tensor is
+/// bit-identical to rounding any partition of it, provided each piece passes
+/// its element offset as `base`.  Equivalent to the scalar loop
+/// `for (j, x) { round_stochastic(x, fmt, key.word(base + j)) }`; dither is
+/// generated in [`SR_CHUNK`]-sized batches via [`DitherKey::fill`] so the
+/// counter mixing vectorizes independently of the rounding loop.
+pub fn round_stochastic_slice_keyed(xs: &mut [f32], fmt: Format, key: DitherKey, base: u64) {
+    if fmt.is_fp32() {
+        // counter-based dither has no stream position to maintain: fp32
+        // passthrough simply draws nothing
+        return;
+    }
+    let drop = fmt.drop_bits();
+    let noise_mask = (1u32 << drop) - 1;
+    let keep_mask = u32::MAX << drop;
+    let clamp = fmt.exp_bits < 8;
+    let max_v = fmt.max_value();
+    let min_n = fmt.min_normal();
+    let mut bits = [0u32; SR_CHUNK];
+    for (ci, chunk) in xs.chunks_mut(SR_CHUNK).enumerate() {
+        let b = &mut bits[..chunk.len()];
+        key.fill(base.wrapping_add((ci * SR_CHUNK) as u64), b);
         for (x, &rb) in chunk.iter_mut().zip(b.iter()) {
             let v = *x;
             if !v.is_finite() {
@@ -325,6 +382,42 @@ mod tests {
                 }
                 // generator must land exactly where the scalar loop leaves it
                 assert_eq!(rng_fast.next_u64(), rng_ref.next_u64(), "{} len={len}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn keyed_slice_matches_scalar_oracle_all_formats() {
+        let key = DitherKey::new(7, 0x5352, 3, 1);
+        for fmt in ALL {
+            for len in [0usize, 1, 7, 255, 256, 257, 1023] {
+                let xs = soup(len, 0xDE1 ^ len as u64);
+                let mut fast = xs.clone();
+                round_stochastic_slice_keyed(&mut fast, fmt, key, 0);
+                for (i, (&f, &x)) in fast.iter().zip(&xs).enumerate() {
+                    let want = round_stochastic(x, fmt, key.word(i as u64));
+                    assert_eq!(f.to_bits(), want.to_bits(), "{} len={len} i={i}", fmt.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn keyed_slice_chunking_is_invariant() {
+        let key = DitherKey::new(11, 0x5352, 9, 2);
+        let xs = soup(1000, 0xC0FFEE);
+        let mut whole = xs.clone();
+        round_stochastic_slice_keyed(&mut whole, BF16, key, 0);
+        for chunk in [1usize, 3, 64, 97, 256, 999] {
+            let mut pieces = xs.clone();
+            let mut off = 0usize;
+            while off < pieces.len() {
+                let end = (off + chunk).min(pieces.len());
+                round_stochastic_slice_keyed(&mut pieces[off..end], BF16, key, off as u64);
+                off = end;
+            }
+            for (i, (a, b)) in pieces.iter().zip(&whole).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunk={chunk} i={i}");
             }
         }
     }

@@ -8,10 +8,13 @@
 //! the rounding behaviour of interest lives in the *updates*, not the
 //! interaction flavour), a top MLP to a single logit, BCE loss.
 
+use std::sync::Arc;
+
 use crate::precision::{Format, Mode, FP32};
 use crate::util::rng::{Rng, ZipfTable};
 
 use super::optim::{Sgd, SgdState, UpdateStats};
+use super::pool::Pool;
 use super::tape::{QPolicy, Tape, Var};
 use super::tensor::Tensor;
 use super::Backend;
@@ -31,6 +34,11 @@ pub struct DlrmConfig {
     /// `Reference` (fresh tape + scalar loops each step, the bench
     /// baseline).  Bit-identical results either way.
     pub backend: Backend,
+    /// Worker threads for intra-step parallelism (`Fast` backend only;
+    /// `Reference` is always scalar-sequential).  `1` = no worker threads,
+    /// `0` = available parallelism.  The SR dither is counter-keyed, so
+    /// training results are bit-identical at every setting.
+    pub intra_threads: usize,
 }
 
 impl Default for DlrmConfig {
@@ -45,6 +53,7 @@ impl Default for DlrmConfig {
             fmt: crate::precision::BF16,
             seed: 0,
             backend: Backend::Fast,
+            intra_threads: 1,
         }
     }
 }
@@ -275,6 +284,9 @@ pub struct DlrmTrainer {
     /// Retained across steps (`Fast` backend): node + gradient storage is
     /// recycled via `Tape::reset` instead of reallocated per step.
     tape: Tape,
+    /// Shared intra-step worker pool (spawned once, here; the tape and
+    /// every optimizer hold clones of this handle).
+    pool: Arc<Pool>,
 }
 
 impl DlrmTrainer {
@@ -287,15 +299,27 @@ impl DlrmTrainer {
     /// Per-tensor precision modes (Figure 5's incremental SR→Kahan sweep).
     /// `modes` ordering matches the param order of `DlrmModel::forward`:
     /// [tables..., bot_w, bot_b, top_w, top_b, head_w, head_b].
+    ///
+    /// The worker pool is spawned here, once per trainer, sized by
+    /// `cfg.intra_threads`; tensors are distinguished in the dither
+    /// schedule by their param index (the key's `tensor_id` coordinate),
+    /// not by per-tensor seeds.
     pub fn new_mixed(cfg: DlrmConfig, modes: Vec<Mode>) -> Self {
         assert_eq!(modes.len(), cfg.num_tables + 6, "one mode per tensor");
+        let pool = Arc::new(Pool::new(if cfg.backend == Backend::Fast {
+            cfg.intra_threads
+        } else {
+            1
+        }));
         let model = DlrmModel::init(&cfg);
         let opts: Vec<Sgd> = modes
             .iter()
             .enumerate()
             .map(|(i, &m)| {
-                Sgd::new(m, cfg.fmt, 0.0, 0.0, cfg.seed ^ 0x0B ^ i as u64)
+                Sgd::new(m, cfg.fmt, 0.0, 0.0, cfg.seed)
+                    .with_tensor_id(i as u64)
                     .with_backend(cfg.backend)
+                    .with_pool(Arc::clone(&pool))
             })
             .collect();
         let mut probe = DlrmModel::init(&cfg);
@@ -312,8 +336,13 @@ impl DlrmTrainer {
             QPolicy::with_backend(cfg.fmt, cfg.backend)
         };
         let gen = CtrGen::new(&cfg);
-        let tape = Tape::new(policy);
-        Self { model, opts, states, gen, policy, tape }
+        let tape = Tape::with_pool(policy, Arc::clone(&pool));
+        Self { model, opts, states, gen, policy, tape, pool }
+    }
+
+    /// Effective intra-step worker count (1 unless configured otherwise).
+    pub fn intra_threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Weight-memory bytes under the per-tensor modes (Figure 5's x-axis).
@@ -354,7 +383,8 @@ impl DlrmTrainer {
             let g = match tape.grad(*var) {
                 Some(g) => g,
                 // a parameter off the loss path still takes its (no-op)
-                // optimizer update, including the per-element dither draws
+                // optimizer update, so its step counter — the dither key's
+                // step coordinate — stays in lockstep with the others
                 None => {
                     zero_g = Tensor::zeros(w.rows, w.cols);
                     &zero_g
@@ -458,6 +488,58 @@ mod tests {
             assert_eq!(wa.data.len(), wb.data.len());
             for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "param {pi} elem {ei} after 100 steps");
+            }
+        }
+    }
+
+    /// Acceptance gate for deterministic intra-step parallelism: the same
+    /// seed must produce bit-identical training at every thread count (the
+    /// dither schedule is counter-keyed, and every parallel kernel is
+    /// row/element-local).
+    #[test]
+    fn sr16_training_bit_identical_across_thread_counts() {
+        let mk = |intra_threads| {
+            let cfg = DlrmConfig {
+                seed: 17,
+                // large enough that matmul and optimizer fan-out engage
+                table_size: 600,
+                embed_dim: 16,
+                hidden: 64,
+                batch: 48,
+                intra_threads,
+                ..Default::default()
+            };
+            DlrmTrainer::new(cfg, Mode::Sr16)
+        };
+        let mut base = mk(1);
+        let base_tel: Vec<StepTelemetry> = (0..25).map(|_| base.step(0.05)).collect();
+        for threads in [2usize, 4] {
+            let mut tr = mk(threads);
+            assert_eq!(tr.intra_threads(), threads);
+            for (step, want) in base_tel.iter().enumerate() {
+                let got = tr.step(0.05);
+                assert_eq!(
+                    got.loss.to_bits(),
+                    want.loss.to_bits(),
+                    "loss diverged at step {step} with {threads} threads"
+                );
+                assert_eq!(got.embed, want.embed, "embed stats, step {step}, t={threads}");
+                assert_eq!(got.mlp, want.mlp, "mlp stats, step {step}, t={threads}");
+            }
+            for (pi, (wa, wb)) in base
+                .model
+                .param_tensors_mut()
+                .into_iter()
+                .zip(tr.model.param_tensors_mut())
+                .enumerate()
+            {
+                for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "param {pi} elem {ei} diverged with {threads} threads"
+                    );
+                }
             }
         }
     }

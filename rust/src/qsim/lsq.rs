@@ -15,7 +15,14 @@
 //! Plus `WeightUpdateSr` / `WeightUpdateKahan` for the Section-3.2 fixes.
 
 use crate::precision::{round_nearest, round_stochastic, Format};
-use crate::util::rng::Rng;
+use crate::util::rng::{DitherKey, Rng};
+
+/// Stream tag for the LSQ experiment's SR dither keys.  The dither is
+/// counter-keyed by `(seed, step, coordinate)`, not drawn from the sample-
+/// selection stream — so every placement sees the *same* sample sequence
+/// (previously `WeightUpdateSr` perturbed the shared stream with its extra
+/// draws) and chunked/parallel evaluation would be bit-identical.
+const LSQ_DITHER_STREAM: u64 = 0x5352;
 
 /// Where rounding is applied in the SGD loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -207,11 +214,12 @@ pub fn run(cfg: &LsqConfig, data: &LsqData, placement: Placement) -> LsqRun {
                 }
             }
             Placement::WeightUpdateSr => {
+                let key = DitherKey::new(cfg.seed, LSQ_DITHER_STREAM, t as u64, 0);
                 for j in 0..cfg.dim {
                     let gj = rf(ga * x[j]);
                     let u = cfg.lr * gj;
                     let wj = w[j];
-                    let new = round_stochastic(wj - u, fmt, rng.next_u32());
+                    let new = round_stochastic(wj - u, fmt, key.word(j as u64));
                     track(u, wj, new);
                     w[j] = new;
                 }
@@ -333,6 +341,18 @@ mod tests {
             "dist={} radius={radius}",
             halted.final_dist
         );
+    }
+
+    #[test]
+    fn sr_run_is_deterministic() {
+        // counter-keyed dither: same seed → bit-identical trajectory, and
+        // the dither draws never touch the sample-selection stream
+        let cfg = LsqConfig { steps: 500, n_samples: 64, ..LsqConfig::default() };
+        let data = LsqData::generate(&cfg);
+        let a = run(&cfg, &data, Placement::WeightUpdateSr);
+        let b = run(&cfg, &data, Placement::WeightUpdateSr);
+        assert_eq!(a.losses, b.losses);
+        assert_eq!(a.final_dist.to_bits(), b.final_dist.to_bits());
     }
 
     #[test]

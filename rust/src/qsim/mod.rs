@@ -11,6 +11,7 @@
 pub mod dlrm;
 pub mod lsq;
 pub mod optim;
+pub mod pool;
 pub mod tape;
 pub mod tensor;
 
@@ -20,6 +21,11 @@ pub mod tensor;
 /// tests and the 100-step trainer parity test); `Reference` preserves the
 /// original scalar loops and per-step allocation behaviour so the bench can
 /// measure the vectorized path against the pre-optimization baseline.
+/// `Fast` additionally fans its kernels out over a per-trainer worker
+/// [`Pool`] when `intra_threads > 1`; because SR dither is counter-keyed
+/// (a pure function of element position), results stay bit-identical at
+/// every thread count — and to `Reference`, which always runs
+/// scalar-sequential over the same dither schedule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Backend {
     /// Scalar kernels, fresh tape + per-element RNG each step (the
@@ -41,5 +47,6 @@ impl Backend {
 
 pub use crate::precision::Mode;
 pub use optim::{Sgd, SgdState, UpdateStats};
+pub use pool::Pool;
 pub use tape::{QPolicy, Tape, Var};
 pub use tensor::Tensor;

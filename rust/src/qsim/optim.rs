@@ -4,14 +4,32 @@
 //! Used by the native theory experiments (Figure 2, Theorem 1, Figure 9/10
 //! fast paths) and by the property-test suite; the PJRT path runs the same
 //! algorithms inside lowered HLO instead.
+//!
+//! ## Dither schedule
+//!
+//! Stochastic-rounding dither is **counter-keyed**: the word for element
+//! `i` of step `t` is `DitherKey::new(seed, STREAM, t, tensor_id).word(i)` —
+//! a pure function of position, not a draw from a sequential stream.  Both
+//! backends consume the same schedule by construction, and the `Fast` path
+//! can split the update into chunks across a worker [`Pool`] without
+//! changing a single bit of the result.
+
+use std::sync::Arc;
 
 use crate::precision::{
     round_nearest, round_nearest_slice, round_stochastic, Format, Mode, Policy, BF16,
 };
-use crate::util::rng::Rng;
+use crate::util::rng::DitherKey;
 
+use super::pool::Pool;
 use super::tensor::Tensor;
 use super::Backend;
+
+/// Stream tag separating optimizer dither keys from every other RNG use.
+const SGD_DITHER_STREAM: u64 = 0x0907;
+
+/// Minimum elements per chunk before `Sgd::step` fans out across the pool.
+const SGD_PAR_MIN: usize = 4096;
 
 /// Per-step statistics (Figure 9's cancellation telemetry).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -52,11 +70,32 @@ pub struct Sgd {
     pub momentum: f32,
     pub weight_decay: f32,
     pub backend: Backend,
-    rng: Rng,
+    /// Seed coordinate of the dither key (run-level randomness).
+    seed: u64,
+    /// Tensor coordinate of the dither key — set one id per parameter
+    /// tensor ([`Sgd::with_tensor_id`]) so tensors sharing a seed still
+    /// draw independent dither.
+    tensor_id: u64,
+    /// Steps taken so far — the step coordinate of the dither key.
+    step_idx: u64,
+    /// Worker pool for the chunked `Fast` update (single-threaded default).
+    pool: Arc<Pool>,
     /// Per-step update-magnitude scratch (stage buffer, reused across steps).
     u_buf: Vec<f32>,
-    /// Pre-drawn SR dither words (one per element, reused across steps).
-    bits_buf: Vec<u32>,
+}
+
+/// Scalar parameters of one update, copied per step so chunk workers share
+/// them without touching `&self`.
+#[derive(Clone, Copy)]
+struct StepParams {
+    fmt: Format,
+    exact: bool,
+    stochastic: bool,
+    kahan: bool,
+    momentum: f32,
+    weight_decay: f32,
+    lr: f32,
+    key: DitherKey,
 }
 
 impl Sgd {
@@ -67,15 +106,31 @@ impl Sgd {
             momentum,
             weight_decay,
             backend: Backend::Fast,
-            rng: Rng::new(seed, 0x0907),
+            seed,
+            tensor_id: 0,
+            step_idx: 0,
+            pool: Pool::single(),
             u_buf: Vec::new(),
-            bits_buf: Vec::new(),
         }
     }
 
     /// Builder-style backend override (the scalar reference path).
     pub fn with_backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Builder-style tensor id for the dither key (one id per parameter
+    /// tensor of a model).
+    pub fn with_tensor_id(mut self, tensor_id: u64) -> Self {
+        self.tensor_id = tensor_id;
+        self
+    }
+
+    /// Builder-style worker pool for the chunked `Fast` update.  Results
+    /// are bit-identical at every pool size (and to `Reference`).
+    pub fn with_pool(mut self, pool: Arc<Pool>) -> Self {
+        self.pool = pool;
         self
     }
 
@@ -98,10 +153,12 @@ impl Sgd {
     /// One update of `w` from gradient `g`.  All optimizer-internal ops are
     /// nearest-rounded in the 16-bit modes (Algorithms 2 & 3).
     ///
-    /// The fast path runs as per-stage slice passes with batched dither
-    /// draws; the reference path is the original interleaved per-element
-    /// loop.  Both are bit-identical, including RNG consumption (one dither
-    /// word per element, in element order, for the stochastic modes).
+    /// The fast path runs as per-stage slice passes, chunked across the
+    /// worker pool when the tensor is large enough; the reference path is
+    /// the original interleaved per-element loop.  Both consume the same
+    /// counter-keyed dither schedule (word `i` of the step's key for
+    /// element `i`), so they are bit-identical — to each other and across
+    /// every thread count.
     pub fn step(
         &mut self,
         w: &mut Tensor,
@@ -109,149 +166,135 @@ impl Sgd {
         g: &Tensor,
         lr: f32,
     ) -> UpdateStats {
+        let key = DitherKey::new(self.seed, SGD_DITHER_STREAM, self.step_idx, self.tensor_id);
+        self.step_idx = self.step_idx.wrapping_add(1);
         match self.backend {
-            Backend::Fast => self.step_fast(w, state, g, lr),
-            Backend::Reference => self.step_reference(w, state, g, lr),
+            Backend::Fast => self.step_fast(w, state, g, lr, key),
+            Backend::Reference => self.step_reference(w, state, g, lr, key),
         }
     }
 
     /// Vectorized update: per-stage slice passes over `w` / `momentum` /
-    /// `kahan` with the format constants hoisted and SR dither pre-drawn in
-    /// bulk, instead of one interleaved branchy loop per element.
+    /// `kahan` with the format constants hoisted, run whole (small tensors)
+    /// or as disjoint chunks fanned out over the pool (large tensors).
     fn step_fast(
         &mut self,
         w: &mut Tensor,
         state: &mut SgdState,
         g: &Tensor,
         lr: f32,
+        key: DitherKey,
     ) -> UpdateStats {
         let n = w.data.len();
         debug_assert_eq!(g.data.len(), n);
-        let exact = self.mode.exact_update();
-        let stochastic = self.mode.stochastic();
-        let fmt = self.fmt;
+        let p = StepParams {
+            fmt: self.fmt,
+            exact: self.mode.exact_update(),
+            stochastic: self.mode.stochastic(),
+            kahan: self.mode.kahan(),
+            momentum: self.momentum,
+            weight_decay: self.weight_decay,
+            lr,
+            key,
+        };
+        if self.u_buf.len() != n {
+            self.u_buf.resize(n, 0.0);
+        }
+        let threads = self.pool.threads().min(n / SGD_PAR_MIN.max(1)).max(1);
+        if threads <= 1 {
+            return step_span(
+                p,
+                0,
+                &mut w.data,
+                &g.data,
+                state.momentum.as_mut().map(|t| t.data.as_mut_slice()),
+                state.kahan.as_mut().map(|t| t.data.as_mut_slice()),
+                &mut self.u_buf,
+            );
+        }
 
-        // stage 1: effective gradient (+ optional decoupled weight decay)
-        let u = &mut self.u_buf;
-        u.clear();
-        u.extend_from_slice(&g.data);
-        if self.weight_decay != 0.0 {
-            let wd = self.weight_decay;
-            if exact {
-                for (ui, &wi) in u.iter_mut().zip(&w.data) {
-                    *ui += wd * wi;
+        /// One worker's disjoint view of every per-element array.
+        struct Span<'a> {
+            base: usize,
+            w: &'a mut [f32],
+            g: &'a [f32],
+            mom: Option<&'a mut [f32]>,
+            kahan: Option<&'a mut [f32]>,
+            u: &'a mut [f32],
+            stats: UpdateStats,
+        }
+
+        let per = (n + threads - 1) / threads;
+        let mut parts: Vec<Span> = Vec::with_capacity(threads);
+        let mut w_rest = w.data.as_mut_slice();
+        let mut u_rest = self.u_buf.as_mut_slice();
+        let mut g_rest: &[f32] = &g.data;
+        let mut m_rest = state.momentum.as_mut().map(|t| t.data.as_mut_slice());
+        let mut k_rest = state.kahan.as_mut().map(|t| t.data.as_mut_slice());
+        let mut base = 0usize;
+        while base < n {
+            let take = per.min(n - base);
+            let (wc, wr) = std::mem::take(&mut w_rest).split_at_mut(take);
+            let (uc, ur) = std::mem::take(&mut u_rest).split_at_mut(take);
+            let (gc, gr) = g_rest.split_at(take);
+            g_rest = gr;
+            let mc = match m_rest.take() {
+                Some(s) => {
+                    let (a, b) = s.split_at_mut(take);
+                    m_rest = Some(b);
+                    Some(a)
                 }
-            } else {
-                for (ui, &wi) in u.iter_mut().zip(&w.data) {
-                    *ui = round_nearest(*ui + round_nearest(wd * wi, fmt), fmt);
+                None => None,
+            };
+            let kc = match k_rest.take() {
+                Some(s) => {
+                    let (a, b) = s.split_at_mut(take);
+                    k_rest = Some(b);
+                    Some(a)
                 }
-            }
+                None => None,
+            };
+            parts.push(Span {
+                base,
+                w: wc,
+                g: gc,
+                mom: mc,
+                kahan: kc,
+                u: uc,
+                stats: UpdateStats::default(),
+            });
+            w_rest = wr;
+            u_rest = ur;
+            base += take;
         }
-
-        // stage 2: momentum accumulation (slice pass over the state tensor)
-        if let Some(mom) = &mut state.momentum {
-            let mu = self.momentum;
-            if exact {
-                for (ui, mi) in u.iter_mut().zip(mom.data.iter_mut()) {
-                    let m_new = mu * *mi + *ui;
-                    *mi = m_new;
-                    *ui = m_new;
-                }
-            } else {
-                for (ui, mi) in u.iter_mut().zip(mom.data.iter_mut()) {
-                    let m_new = round_nearest(round_nearest(mu * *mi, fmt) + *ui, fmt);
-                    *mi = m_new;
-                    *ui = m_new;
-                }
-            }
-        }
-
-        // stage 3: update magnitude u = r(lr · m)
-        for ui in u.iter_mut() {
-            *ui *= lr;
-        }
-        if !exact {
-            round_nearest_slice(u, fmt);
-        }
-
-        // stage 4: bulk dither draws (same words the scalar loop would draw)
-        if stochastic {
-            if self.bits_buf.len() != n {
-                self.bits_buf.resize(n, 0);
-            }
-            self.rng.fill_u32(&mut self.bits_buf);
-        }
-
-        // stage 5: weight accumulate + cancellation stats, one pass
+        let parts = self.pool.run_parts(parts, |s| {
+            s.stats = step_span(
+                p,
+                s.base as u64,
+                &mut *s.w,
+                s.g,
+                s.mom.as_deref_mut(),
+                s.kahan.as_deref_mut(),
+                &mut *s.u,
+            );
+        });
         let mut stats = UpdateStats::default();
-        if self.mode.kahan() {
-            // srkahan16 (Fig 11): the accumulate output is SR'd
-            let c = state.kahan.as_mut().expect("kahan mode without kahan state");
-            for i in 0..n {
-                let ui = u[i];
-                let wi = w.data[i];
-                let y = round_nearest(-ui - c.data[i], fmt);
-                let s = if stochastic {
-                    round_stochastic(wi + y, fmt, self.bits_buf[i])
-                } else {
-                    round_nearest(wi + y, fmt)
-                };
-                c.data[i] = round_nearest(round_nearest(s - wi, fmt) - y, fmt);
-                if ui != 0.0 {
-                    stats.nonzero += 1;
-                    if s == wi {
-                        stats.cancelled += 1;
-                    }
-                }
-                w.data[i] = s;
-            }
-        } else if exact {
-            for (wi, &ui) in w.data.iter_mut().zip(u.iter()) {
-                let w_new = *wi - ui;
-                if ui != 0.0 {
-                    stats.nonzero += 1;
-                    if w_new == *wi {
-                        stats.cancelled += 1;
-                    }
-                }
-                *wi = w_new;
-            }
-        } else if stochastic {
-            for i in 0..n {
-                let ui = u[i];
-                let wi = w.data[i];
-                let w_new = round_stochastic(wi - ui, fmt, self.bits_buf[i]);
-                if ui != 0.0 {
-                    stats.nonzero += 1;
-                    if w_new == wi {
-                        stats.cancelled += 1;
-                    }
-                }
-                w.data[i] = w_new;
-            }
-        } else {
-            for (wi, &ui) in w.data.iter_mut().zip(u.iter()) {
-                let w_new = round_nearest(*wi - ui, fmt);
-                if ui != 0.0 {
-                    stats.nonzero += 1;
-                    if w_new == *wi {
-                        stats.cancelled += 1;
-                    }
-                }
-                *wi = w_new;
-            }
+        for s in parts {
+            stats.merge(s.stats);
         }
         stats
     }
 
     /// The original interleaved per-element loop (pre-vectorization code),
-    /// kept as the bit-exactness oracle and bench baseline.
+    /// kept as the bit-exactness oracle and bench baseline.  Always scalar
+    /// and sequential, but addressing the same counter-keyed dither.
     fn step_reference(
         &mut self,
         w: &mut Tensor,
         state: &mut SgdState,
         g: &Tensor,
         lr: f32,
+        key: DitherKey,
     ) -> UpdateStats {
         let exact = self.mode.exact_update();
         let fmt = self.fmt;
@@ -276,7 +319,7 @@ impl Sgd {
                 let c = state.kahan.as_mut().unwrap();
                 let y = r(-u - c.data[i]);
                 let s = if self.mode.stochastic() {
-                    round_stochastic(wi + y, fmt, self.rng.next_u32())
+                    round_stochastic(wi + y, fmt, key.word(i as u64))
                 } else {
                     r(wi + y)
                 };
@@ -285,7 +328,7 @@ impl Sgd {
             } else if exact {
                 wi - u
             } else if self.mode.stochastic() {
-                round_stochastic(wi - u, fmt, self.rng.next_u32())
+                round_stochastic(wi - u, fmt, key.word(i as u64))
             } else {
                 r(wi - u)
             };
@@ -301,9 +344,137 @@ impl Sgd {
     }
 }
 
+/// The staged update over one contiguous element span starting at global
+/// offset `base`.  Every stage is element-local and the dither word for
+/// element `base + i` is `p.key.word(base + i)`, so running the spans of a
+/// partition in any order (or in parallel) reproduces the whole-tensor pass
+/// bit-for-bit.
+fn step_span(
+    p: StepParams,
+    base: u64,
+    w: &mut [f32],
+    g: &[f32],
+    mom: Option<&mut [f32]>,
+    kahan: Option<&mut [f32]>,
+    u: &mut [f32],
+) -> UpdateStats {
+    let n = w.len();
+    debug_assert_eq!(g.len(), n);
+    debug_assert_eq!(u.len(), n);
+    let fmt = p.fmt;
+
+    // stage 1: effective gradient (+ optional decoupled weight decay)
+    u.copy_from_slice(g);
+    if p.weight_decay != 0.0 {
+        let wd = p.weight_decay;
+        if p.exact {
+            for (ui, &wi) in u.iter_mut().zip(w.iter()) {
+                *ui += wd * wi;
+            }
+        } else {
+            for (ui, &wi) in u.iter_mut().zip(w.iter()) {
+                *ui = round_nearest(*ui + round_nearest(wd * wi, fmt), fmt);
+            }
+        }
+    }
+
+    // stage 2: momentum accumulation (slice pass over the state span)
+    if let Some(mom) = mom {
+        let mu = p.momentum;
+        if p.exact {
+            for (ui, mi) in u.iter_mut().zip(mom.iter_mut()) {
+                let m_new = mu * *mi + *ui;
+                *mi = m_new;
+                *ui = m_new;
+            }
+        } else {
+            for (ui, mi) in u.iter_mut().zip(mom.iter_mut()) {
+                let m_new = round_nearest(round_nearest(mu * *mi, fmt) + *ui, fmt);
+                *mi = m_new;
+                *ui = m_new;
+            }
+        }
+    }
+
+    // stage 3: update magnitude u = r(lr · m)
+    for ui in u.iter_mut() {
+        *ui *= p.lr;
+    }
+    if !p.exact {
+        round_nearest_slice(u, fmt);
+    }
+
+    // stage 4: weight accumulate + cancellation stats, one pass, dither
+    // addressed by global element position
+    let mut stats = UpdateStats::default();
+    if p.kahan {
+        // srkahan16 (Fig 11): the accumulate output is SR'd
+        let c = kahan.expect("kahan mode without kahan state");
+        for i in 0..n {
+            let ui = u[i];
+            let wi = w[i];
+            let y = round_nearest(-ui - c[i], fmt);
+            let s = if p.stochastic {
+                round_stochastic(wi + y, fmt, p.key.word(base.wrapping_add(i as u64)))
+            } else {
+                round_nearest(wi + y, fmt)
+            };
+            c[i] = round_nearest(round_nearest(s - wi, fmt) - y, fmt);
+            if ui != 0.0 {
+                stats.nonzero += 1;
+                if s == wi {
+                    stats.cancelled += 1;
+                }
+            }
+            w[i] = s;
+        }
+    } else if p.exact {
+        for (wi, &ui) in w.iter_mut().zip(u.iter()) {
+            let w_new = *wi - ui;
+            if ui != 0.0 {
+                stats.nonzero += 1;
+                if w_new == *wi {
+                    stats.cancelled += 1;
+                }
+            }
+            *wi = w_new;
+        }
+    } else if p.stochastic {
+        // scalar keyed draws: the cancellation stats need each update
+        // magnitude `u[i]` *and* its rounded result side by side, so the
+        // slice kernel (which would overwrite one of them) doesn't fit here
+        for i in 0..n {
+            let ui = u[i];
+            let wi = w[i];
+            let w_new =
+                round_stochastic(wi - ui, fmt, p.key.word(base.wrapping_add(i as u64)));
+            if ui != 0.0 {
+                stats.nonzero += 1;
+                if w_new == wi {
+                    stats.cancelled += 1;
+                }
+            }
+            w[i] = w_new;
+        }
+    } else {
+        for (wi, &ui) in w.iter_mut().zip(u.iter()) {
+            let w_new = round_nearest(*wi - ui, fmt);
+            if ui != 0.0 {
+                stats.nonzero += 1;
+                if w_new == *wi {
+                    stats.cancelled += 1;
+                }
+            }
+            *wi = w_new;
+        }
+    }
+    stats
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn run(mode: Mode, grad: f32, lr: f32, steps: usize) -> (f32, f64) {
         let mut opt = Sgd::bf16(mode, 0.0, 0.0, 1);
@@ -379,9 +550,10 @@ mod tests {
         for mode in Mode::ALL {
             for fmt in [BF16, FP16, E8M5] {
                 for (momentum, wd) in [(0.0, 0.0), (0.9, 0.0), (0.9, 1e-4)] {
-                    let mut fast = Sgd::new(mode, fmt, momentum, wd, 42);
-                    let mut reference =
-                        Sgd::new(mode, fmt, momentum, wd, 42).with_backend(Backend::Reference);
+                    let mut fast = Sgd::new(mode, fmt, momentum, wd, 42).with_tensor_id(7);
+                    let mut reference = Sgd::new(mode, fmt, momentum, wd, 42)
+                        .with_tensor_id(7)
+                        .with_backend(Backend::Reference);
                     // odd length exercises ragged dither chunks
                     let len = 515;
                     let init: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
@@ -420,6 +592,49 @@ mod tests {
                             assert_eq!(kf.data, kr.data, "{mode:?} kahan state");
                         }
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_step_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(0x52, 0);
+        // big enough to split into several SGD_PAR_MIN chunks, ragged tail
+        let len = 3 * SGD_PAR_MIN + 517;
+        let init: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+        let grads: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..len).map(|_| rng.normal() * 2f32.powi(-6)).collect())
+            .collect();
+        for mode in [Mode::Sr16, Mode::SrKahan16, Mode::Kahan16, Mode::Standard16] {
+            let run_with = |threads: usize| {
+                let mut opt = Sgd::bf16(mode, 0.9, 1e-4, 9)
+                    .with_tensor_id(3)
+                    .with_pool(Arc::new(Pool::new(threads)));
+                let mut w = Tensor::vector(init.clone());
+                let mut st = opt.init_state(&w);
+                let mut stats = UpdateStats::default();
+                for g in &grads {
+                    stats.merge(opt.step(&mut w, &mut st, &Tensor::vector(g.clone()), 0.05));
+                }
+                (w, st, stats)
+            };
+            let (w1, s1, st1) = run_with(1);
+            for threads in [2usize, 3, 4] {
+                let (wt, stt, stats_t) = run_with(threads);
+                assert_eq!(st1, stats_t, "{mode:?} stats threads={threads}");
+                for (i, (a, b)) in w1.data.iter().zip(&wt.data).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{mode:?} threads={threads} w[{i}]"
+                    );
+                }
+                if let (Some(ma), Some(mb)) = (&s1.momentum, &stt.momentum) {
+                    assert_eq!(ma.data, mb.data, "{mode:?} momentum threads={threads}");
+                }
+                if let (Some(ka), Some(kb)) = (&s1.kahan, &stt.kahan) {
+                    assert_eq!(ka.data, kb.data, "{mode:?} kahan threads={threads}");
                 }
             }
         }

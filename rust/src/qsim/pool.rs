@@ -1,0 +1,350 @@
+//! Scoped fork-join worker pool for intra-step parallelism.
+//!
+//! One [`Pool`] is spawned per trainer (sized by the `--intra-threads`
+//! knob) and reused for every parallel region of every step: row panels of
+//! the matmul kernels, elementwise tape ops, and the staged `Sgd::step`
+//! passes.  Dispatch is a single mutex/condvar handshake per region, cheap
+//! enough for the qsim kernel granularity; worker threads live for the
+//! pool's lifetime, so steady-state training never spawns.
+//!
+//! ## Determinism contract
+//!
+//! The pool only ever *partitions* work — callers hand it element-local or
+//! row-local computations over disjoint chunks, each chunk carrying its
+//! global offset.  Combined with the counter-keyed SR dither
+//! ([`crate::util::rng::DitherKey`], where every dither word is a pure
+//! function of element position), results are bit-identical at every thread
+//! count, including `threads == 1` and the scalar `Reference` backend.
+//! Nothing in this module may introduce an accumulation order that depends
+//! on scheduling.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Hard ceiling on worker slots per pool (a safety cap, far above any
+/// sensible intra-step parallelism for these kernels).
+pub const MAX_THREADS: usize = 256;
+
+/// Type-erased pointer to the current region's task closure.  Only
+/// dereferenced between the epoch bump in [`Pool::run`] and the
+/// `active == 0` handshake that `run` blocks on before returning, so the
+/// underlying closure is always alive at every dereference.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls from many threads are fine)
+// and `Pool::run` guarantees it outlives every dereference (see above).
+unsafe impl Send for TaskPtr {}
+
+struct JobState {
+    /// Bumped once per `run`; workers run each epoch exactly once.
+    epoch: u64,
+    task: Option<TaskPtr>,
+    /// Workers still executing the current epoch.
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    job: Mutex<JobState>,
+    start: Condvar,
+    done: Condvar,
+}
+
+/// A fixed-size fork-join pool.  `threads == 1` is a true no-op wrapper
+/// (no worker threads, no synchronization) so single-threaded configs pay
+/// nothing.
+pub struct Pool {
+    shared: Option<Arc<Shared>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes concurrent `run` calls (the job slot holds one region).
+    run_lock: Mutex<()>,
+    threads: usize,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads).finish()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, id: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let ptr = {
+            let mut job = shared.job.lock().unwrap();
+            loop {
+                if job.shutdown {
+                    return;
+                }
+                if job.epoch != seen_epoch {
+                    seen_epoch = job.epoch;
+                    break job.task.expect("task set for epoch");
+                }
+                job = shared.start.wait(job).unwrap();
+            }
+        };
+        // SAFETY: `Pool::run` keeps the closure alive until every worker
+        // has decremented `active` for this epoch, which happens below,
+        // strictly after this call returns.
+        let task: &(dyn Fn(usize) + Sync) = unsafe { &*ptr.0 };
+        // A panicking kernel must not unwind past the handshake: silently
+        // skipping a chunk would corrupt results, and never decrementing
+        // `active` would deadlock `run`.  Kernels are plain slice loops
+        // that should never panic — treat it as fatal, loudly.
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(id))).is_err() {
+            eprintln!("qsim worker {id}: kernel panicked; aborting");
+            std::process::abort();
+        }
+        let mut job = shared.job.lock().unwrap();
+        job.active -= 1;
+        if job.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Blocks until every worker has finished the current epoch, then clears
+/// the task slot.  Used via `Drop` so [`Pool::run`] waits even when the
+/// calling thread's own share of the task panics — workers must never
+/// outlive the region borrow.
+struct WaitGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let mut job = self.shared.job.lock().unwrap();
+        while job.active > 0 {
+            job = self.shared.done.wait(job).unwrap();
+        }
+        job.task = None;
+    }
+}
+
+impl Pool {
+    /// Build a pool.  `threads == 0` means "auto" (available parallelism);
+    /// `threads == 1` spawns nothing.  Requests are capped at
+    /// [`MAX_THREADS`] — oversubscription beyond that is never useful here,
+    /// and an unchecked count (e.g. a config value gone through integer
+    /// conversion) must not exhaust OS threads.
+    pub fn new(threads: usize) -> Pool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            threads.min(MAX_THREADS)
+        };
+        if threads <= 1 {
+            return Pool {
+                shared: None,
+                handles: Vec::new(),
+                run_lock: Mutex::new(()),
+                threads: 1,
+            };
+        }
+        let shared = Arc::new(Shared {
+            job: Mutex::new(JobState { epoch: 0, task: None, active: 0, shutdown: false }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|id| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("qsim-worker-{id}"))
+                    .spawn(move || worker_loop(s, id))
+                    .expect("spawning qsim worker thread")
+            })
+            .collect();
+        Pool { shared: Some(shared), handles, run_lock: Mutex::new(()), threads }
+    }
+
+    /// A single-threaded pool behind an `Arc` (the default for tapes and
+    /// optimizers constructed without explicit parallelism).
+    pub fn single() -> Arc<Pool> {
+        Arc::new(Pool::new(1))
+    }
+
+    /// Worker-slot count (including the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `task(worker_id)` once per worker slot `0..threads()`, in
+    /// parallel; the calling thread takes slot 0.  Returns only after every
+    /// slot has finished.  Concurrent `run` calls serialize.
+    pub fn run(&self, task: &(dyn Fn(usize) + Sync)) {
+        let Some(shared) = &self.shared else {
+            task(0);
+            return;
+        };
+        let _region = self.run_lock.lock().unwrap();
+        // Erase the caller's lifetime: workers only dereference between the
+        // epoch bump and the active == 0 handshake below, while `task` is
+        // still borrowed by this frame.
+        let task_static: &'static (dyn Fn(usize) + Sync + 'static) =
+            unsafe { std::mem::transmute(task) };
+        let ptr = TaskPtr(task_static as *const _);
+        {
+            let mut job = shared.job.lock().unwrap();
+            job.task = Some(ptr);
+            job.epoch = job.epoch.wrapping_add(1);
+            job.active = self.threads - 1;
+            shared.start.notify_all();
+        }
+        // The guard waits for every worker even if `task(0)` unwinds, so
+        // the erased borrow can never dangle.
+        let _wait = WaitGuard { shared };
+        task(0);
+    }
+
+    /// Run `f` once per element of `parts` — part `i` on worker slot `i` —
+    /// and return the parts once every call has finished.  This is the one
+    /// fork-join entry point the kernel call sites share: they build their
+    /// disjoint views (row bands, element spans), and the pool owns the
+    /// dispatch.  At most [`Pool::threads`] parts are supported per call.
+    pub fn run_parts<T, F>(&self, mut parts: Vec<T>, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(&mut T) + Sync,
+    {
+        assert!(parts.len() <= self.threads, "more parts than worker slots");
+        if parts.len() <= 1 {
+            if let Some(p) = parts.first_mut() {
+                f(p);
+            }
+            return parts;
+        }
+        let slots: Vec<Mutex<&mut T>> = parts.iter_mut().map(Mutex::new).collect();
+        self.run(&|wid| {
+            if let Some(slot) = slots.get(wid) {
+                let mut guard = slot.lock().unwrap();
+                f(&mut **guard);
+            }
+        });
+        drop(slots);
+        parts
+    }
+
+    /// Parallel in-place transform over contiguous chunks of `data`.
+    ///
+    /// `f(offset, chunk)` receives each chunk together with its global
+    /// element offset, so counter-keyed consumers can address per-element
+    /// state (dither words) position-wise.  Chunks are disjoint and cover
+    /// `data` exactly once; `f` must be element-local (no cross-chunk
+    /// dependence) for results to be schedule-independent.  Slices shorter
+    /// than `min_chunk` per thread degrade gracefully toward fewer chunks
+    /// (down to a plain sequential call).
+    pub fn for_chunks_mut<T, F>(&self, data: &mut [T], min_chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let n = data.len();
+        let max_chunks = if min_chunk <= 1 { n } else { n / min_chunk };
+        let t = self.threads.min(max_chunks).max(1);
+        if t <= 1 {
+            f(0, data);
+            return;
+        }
+        let per = (n + t - 1) / t;
+        let mut parts: Vec<(usize, &mut [T])> = Vec::with_capacity(t);
+        let mut rest = data;
+        let mut off = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            parts.push((off, head));
+            off += take;
+            rest = tail;
+        }
+        self.run_parts(parts, |(off, chunk)| f(*off, &mut **chunk));
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            {
+                let mut job = shared.job.lock().unwrap();
+                job.shutdown = true;
+                shared.start.notify_all();
+            }
+            for h in self.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn single_threaded_pool_runs_inline() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.run(&|wid| {
+            assert_eq!(wid, 0);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn every_worker_slot_runs_exactly_once_per_region() {
+        let pool = Pool::new(4);
+        assert_eq!(pool.threads(), 4);
+        for _ in 0..50 {
+            let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(&|wid| {
+                hits[wid].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "slot {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_chunks_mut_covers_disjointly_with_offsets() {
+        for threads in [1usize, 2, 3, 4] {
+            let pool = Pool::new(threads);
+            for len in [0usize, 1, 7, 100, 1001] {
+                let mut data = vec![0u32; len];
+                pool.for_chunks_mut(&mut data, 1, |off, chunk| {
+                    for (j, x) in chunk.iter_mut().enumerate() {
+                        // each element written exactly once with its index
+                        *x = (off + j) as u32 + 1;
+                    }
+                });
+                for (i, &x) in data.iter().enumerate() {
+                    assert_eq!(x, i as u32 + 1, "threads={threads} len={len} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_chunks_mut_respects_min_chunk() {
+        let pool = Pool::new(4);
+        let mut data = vec![0u8; 100];
+        // min_chunk larger than the slice → one sequential chunk at offset 0
+        let regions = AtomicUsize::new(0);
+        pool.for_chunks_mut(&mut data, 1000, |off, chunk| {
+            assert_eq!(off, 0);
+            assert_eq!(chunk.len(), 100);
+            regions.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(regions.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn auto_sizing_uses_available_parallelism() {
+        let pool = Pool::new(0);
+        assert!(pool.threads() >= 1);
+    }
+}

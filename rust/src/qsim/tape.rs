@@ -17,10 +17,17 @@
 //! therefore runs allocation-free once buffer capacities have converged
 //! (usually within two steps).
 
+use std::sync::Arc;
+
 use crate::precision::{round_nearest, round_nearest_slice, Format, FP32};
 
+use super::pool::Pool;
 use super::tensor::Tensor;
 use super::Backend;
+
+/// Minimum element count before an elementwise op fans out across the
+/// worker pool (memory-bound loops amortize the dispatch handshake slowly).
+const EW_PAR_MIN: usize = 8192;
 
 /// Rounding policy for forward/backward compute.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -191,10 +198,20 @@ pub struct Tape {
     pub policy: QPolicy,
     /// Retired buffers recycled across ops and (via [`Tape::reset`]) steps.
     free: Vec<Vec<f32>>,
+    /// Worker pool for the `Fast` backend's parallel kernels (matmul row
+    /// panels, large elementwise ops).  Single-threaded by default; shared
+    /// with the owning trainer via [`Tape::with_pool`].  Results are
+    /// bit-identical at every pool size.
+    pool: Arc<Pool>,
 }
 
 impl Tape {
     pub fn new(policy: QPolicy) -> Self {
+        Self::with_pool(policy, Pool::single())
+    }
+
+    /// Build a tape whose `Fast`-backend kernels fan out over `pool`.
+    pub fn with_pool(policy: QPolicy, pool: Arc<Pool>) -> Self {
         Self {
             ops: Vec::new(),
             values: Vec::new(),
@@ -202,6 +219,7 @@ impl Tape {
             requires_grad: Vec::new(),
             policy,
             free: Vec::new(),
+            pool,
         }
     }
 
@@ -278,23 +296,69 @@ impl Tape {
     // -- forward ops (each rounds its output once, fused with the producing
     //    loop so rounding never makes a second pass over cold memory) -------
 
-    fn unary(&mut self, a: Var, op: Op, f: impl Fn(f32) -> f32) -> Var {
+    /// Elementwise ops compute + round per contiguous chunk; both steps are
+    /// element-local, so the pooled path is bit-identical to the sequential
+    /// one regardless of how chunks land on workers.
+    fn unary(&mut self, a: Var, op: Op, f: impl Fn(f32) -> f32 + Sync) -> Var {
         let mut data = self.take_buf();
-        let av = &self.values[a.0];
-        data.extend(av.data.iter().map(|&x| f(x)));
-        let mut out = Tensor { rows: av.rows, cols: av.cols, data };
-        self.policy.q_slice(&mut out.data);
+        let policy = self.policy;
+        let (rows, cols);
+        {
+            let av = &self.values[a.0];
+            rows = av.rows;
+            cols = av.cols;
+            if policy.backend == Backend::Fast
+                && self.pool.threads() > 1
+                && av.data.len() >= EW_PAR_MIN
+            {
+                data.resize(av.data.len(), 0.0);
+                let src = &av.data;
+                self.pool.for_chunks_mut(&mut data, EW_PAR_MIN, |off, chunk| {
+                    for (o, &x) in chunk.iter_mut().zip(&src[off..off + chunk.len()]) {
+                        *o = f(x);
+                    }
+                    policy.q_slice(chunk);
+                });
+            } else {
+                data.extend(av.data.iter().map(|&x| f(x)));
+                policy.q_slice(&mut data);
+            }
+        }
+        let out = Tensor { rows, cols, data };
         self.push(op, out, true)
     }
 
-    fn binary(&mut self, a: Var, b: Var, op: Op, f: impl Fn(f32, f32) -> f32) -> Var {
+    fn binary(&mut self, a: Var, b: Var, op: Op, f: impl Fn(f32, f32) -> f32 + Sync) -> Var {
         let mut data = self.take_buf();
-        let (av, bv) = (&self.values[a.0], &self.values[b.0]);
-        assert_eq!(av.rows, bv.rows);
-        assert_eq!(av.cols, bv.cols);
-        data.extend(av.data.iter().zip(&bv.data).map(|(&x, &y)| f(x, y)));
-        let mut out = Tensor { rows: av.rows, cols: av.cols, data };
-        self.policy.q_slice(&mut out.data);
+        let policy = self.policy;
+        let (rows, cols);
+        {
+            let (av, bv) = (&self.values[a.0], &self.values[b.0]);
+            assert_eq!(av.rows, bv.rows);
+            assert_eq!(av.cols, bv.cols);
+            rows = av.rows;
+            cols = av.cols;
+            if policy.backend == Backend::Fast
+                && self.pool.threads() > 1
+                && av.data.len() >= EW_PAR_MIN
+            {
+                data.resize(av.data.len(), 0.0);
+                let (sa, sb) = (&av.data, &bv.data);
+                self.pool.for_chunks_mut(&mut data, EW_PAR_MIN, |off, chunk| {
+                    let end = off + chunk.len();
+                    for ((o, &x), &y) in
+                        chunk.iter_mut().zip(&sa[off..end]).zip(&sb[off..end])
+                    {
+                        *o = f(x, y);
+                    }
+                    policy.q_slice(chunk);
+                });
+            } else {
+                data.extend(av.data.iter().zip(&bv.data).map(|(&x, &y)| f(x, y)));
+                policy.q_slice(&mut data);
+            }
+        }
+        let out = Tensor { rows, cols, data };
         self.push(op, out, true)
     }
 
@@ -309,7 +373,12 @@ impl Tape {
             Backend::Fast => {
                 let mut out = Tensor { rows: 0, cols: 0, data: self.take_buf() };
                 let fuse = self.policy.fuse_fmt();
-                self.values[a.0].matmul_into(&self.values[b.0], &mut out, fuse);
+                self.values[a.0].matmul_into_pooled(
+                    &self.values[b.0],
+                    &mut out,
+                    fuse,
+                    &self.pool,
+                );
                 self.push(Op::MatMul(a, b), out, true)
             }
             Backend::Reference => {
@@ -438,8 +507,9 @@ impl Tape {
     pub fn backward(&mut self, root: Var) {
         assert_eq!(self.values[root.0].len(), 1, "backward from non-scalar");
         self.grads[root.0] = Some(Tensor::scalar(1.0));
-        let Tape { ops, values, grads, requires_grad, policy, free } = self;
+        let Tape { ops, values, grads, requires_grad, policy, free, pool } = self;
         let policy = *policy;
+        let pool: &Pool = pool;
         let rg: &[bool] = requires_grad;
         for i in (0..=root.0).rev() {
             let Some(g) = grads[i].take() else { continue };
@@ -456,7 +526,7 @@ impl Tape {
                                 let mut bt = pool_tensor(free);
                                 values[b.0].transpose_into(&mut bt);
                                 let mut da = pool_tensor(free);
-                                g.matmul_into(&bt, &mut da, None);
+                                g.matmul_into_pooled(&bt, &mut da, None, pool);
                                 free.push(bt.data);
                                 accum(policy, rg, grads, free, a, da);
                             }
@@ -464,7 +534,7 @@ impl Tape {
                                 let mut at = pool_tensor(free);
                                 values[a.0].transpose_into(&mut at);
                                 let mut db = pool_tensor(free);
-                                at.matmul_into(&g, &mut db, None);
+                                at.matmul_into_pooled(&g, &mut db, None, pool);
                                 free.push(at.data);
                                 accum(policy, rg, grads, free, b, db);
                             }
@@ -754,6 +824,29 @@ mod tests {
             assert_eq!(again.0.to_bits(), clean.0.to_bits());
             assert_eq!(again.1, clean.1);
             assert_eq!(again.0.to_bits(), first.0.to_bits());
+        }
+    }
+
+    #[test]
+    fn pooled_tape_bit_identical_to_single_threaded() {
+        let mut rng = Rng::new(0x7C, 0);
+        // large enough to cross both the elementwise and matmul fan-out
+        // thresholds, with ragged dimensions
+        let x = Tensor::randn(64, 200, 1.0, &mut rng);
+        let w = Tensor::randn(200, 161, 0.3, &mut rng);
+        let bias = Tensor::randn(1, 161, 0.1, &mut rng);
+        let run = |pool: Arc<Pool>| {
+            let mut t = Tape::with_pool(QPolicy::new(BF16), pool);
+            mlp_graph(&mut t, &x, &w, &bias)
+        };
+        let (l1, g1) = run(Pool::single());
+        for threads in [2usize, 3, 4] {
+            let (l, g) = run(Arc::new(Pool::new(threads)));
+            assert_eq!(l.to_bits(), l1.to_bits(), "loss threads={threads}");
+            assert_eq!(g.data.len(), g1.data.len());
+            for (i, (a, b)) in g.data.iter().zip(&g1.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} grad[{i}]");
+            }
         }
     }
 

@@ -7,11 +7,17 @@
 use crate::precision::{round_nearest_slice, Format};
 use crate::util::rng::Rng;
 
+use super::pool::Pool;
+
 /// k-panel height: rows of `other` streamed per tile (64 rows × ≤256 cols of
 /// f32 fits L1 alongside the output panel).
 const MM_KB: usize = 64;
 /// j-panel width: output columns accumulated per tile.
 const MM_NB: usize = 256;
+/// Minimum multiply-accumulate count before a matmul is worth fanning out
+/// across the worker pool (below this, one dispatch handshake costs more
+/// than the whole product).
+const MM_PAR_MIN: usize = 16_384;
 
 /// Dense row-major tensor, rank 1 or 2 (a rank-1 tensor has rows == 1).
 #[derive(Debug, Clone, PartialEq)]
@@ -100,14 +106,28 @@ impl Tensor {
     /// fused into the producing kernel instead of a second memory pass.
     pub fn matmul_into(&self, other: &Tensor, out: &mut Tensor, round: Option<Format>) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let (m, n) = (self.rows, other.cols);
         out.rows = m;
         out.cols = n;
         out.data.clear();
         out.data.resize(m * n, 0.0);
-        for i in 0..m {
+        self.mm_rows(other, 0, &mut out.data, round);
+    }
+
+    /// Tiled multiply for one contiguous band of output rows starting at
+    /// `row0` (`band.len()` must be a multiple of `other.cols`).  Each row
+    /// is produced entirely by one call with the k accumulation order of
+    /// the scalar reference, so any row partition of the output — including
+    /// a parallel one — yields bit-identical results.
+    fn mm_rows(&self, other: &Tensor, row0: usize, band: &mut [f32], round: Option<Format>) {
+        let (k, n) = (self.cols, other.cols);
+        if n == 0 {
+            return;
+        }
+        debug_assert_eq!(band.len() % n, 0);
+        for (bi, orow) in band.chunks_exact_mut(n).enumerate() {
+            let i = row0 + bi;
             let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out.data[i * n..(i + 1) * n];
             for j0 in (0..n).step_by(MM_NB) {
                 let j1 = (j0 + MM_NB).min(n);
                 let opanel = &mut orow[j0..j1];
@@ -128,6 +148,48 @@ impl Tensor {
                 round_nearest_slice(orow, fmt);
             }
         }
+    }
+
+    /// [`Tensor::matmul_into`] with the output rows fanned out across a
+    /// worker [`Pool`] in contiguous bands.
+    ///
+    /// Every output element still accumulates its k terms sequentially in
+    /// one band pass, so the result is bit-identical to the sequential and
+    /// scalar-reference kernels at any thread count.  Small products (fewer
+    /// than [`MM_PAR_MIN`] multiply-accumulates) stay sequential — the
+    /// dispatch handshake would dominate.
+    pub fn matmul_into_pooled(
+        &self,
+        other: &Tensor,
+        out: &mut Tensor,
+        round: Option<Format>,
+        pool: &Pool,
+    ) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        if pool.threads() <= 1 || m < 2 || m * k * n < MM_PAR_MIN {
+            self.matmul_into(other, out, round);
+            return;
+        }
+        out.rows = m;
+        out.cols = n;
+        out.data.clear();
+        out.data.resize(m * n, 0.0);
+        let t = pool.threads().min(m);
+        let rows_per = (m + t - 1) / t;
+        let mut bands: Vec<(usize, &mut [f32])> = Vec::with_capacity(t);
+        let mut rest = out.data.as_mut_slice();
+        let mut row0 = 0usize;
+        while row0 < m {
+            let take = rows_per.min(m - row0);
+            let (band, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
+            bands.push((row0, band));
+            rest = tail;
+            row0 += take;
+        }
+        pool.run_parts(bands, |(row0, band)| {
+            self.mm_rows(other, *row0, &mut **band, round);
+        });
     }
 
     /// The original scalar i-k-j matmul, kept as the bit-exactness oracle
@@ -252,6 +314,36 @@ mod tests {
             assert_eq!(fast.cols, reference.cols);
             for (i, (x, y)) in fast.data.iter().zip(&reference.data).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n}) elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_matmul_bit_identical_at_every_thread_count() {
+        use crate::precision::BF16;
+        let mut rng = Rng::new(0x7A7, 0);
+        // shapes below and above the MM_PAR_MIN fan-out threshold, ragged
+        // row counts that don't divide evenly across workers
+        for (m, k, n) in [(1, 8, 8), (3, 5, 7), (7, 64, 64), (33, 96, 50), (128, 64, 40)] {
+            let a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            for round in [None, Some(BF16)] {
+                let mut seq = Tensor::zeros(0, 0);
+                a.matmul_into(&b, &mut seq, round);
+                for threads in [1usize, 2, 3, 4] {
+                    let pool = Pool::new(threads);
+                    let mut par = Tensor::zeros(0, 0);
+                    a.matmul_into_pooled(&b, &mut par, round, &pool);
+                    assert_eq!(par.rows, seq.rows);
+                    assert_eq!(par.cols, seq.cols);
+                    for (i, (x, y)) in par.data.iter().zip(&seq.data).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "({m},{k},{n}) threads={threads} round={round:?} elem {i}"
+                        );
+                    }
+                }
             }
         }
     }

@@ -1,9 +1,22 @@
-//! Deterministic PRNG substrate (splitmix64 / xoshiro256**).
+//! Deterministic PRNG substrate (splitmix64 / xoshiro256**) plus the
+//! counter-based keyed generator behind stochastic-rounding dither.
 //!
 //! Used by the synthetic data pipeline, the rust-native quantised trainer's
 //! stochastic rounding, and the property-test harness.  Deterministic,
 //! seedable, dependency-free — data generation must be reproducible from a
 //! (seed, stream) pair recorded in run metadata.
+//!
+//! Two generator families live here:
+//!
+//! * [`Rng`] — a *sequential* stream (xoshiro256**): each draw advances
+//!   hidden state, so consumers must draw in a fixed order.  Data
+//!   generation and initialization use this.
+//! * [`DitherKey`] — a *counter-based* keyed generator (splitmix64-style
+//!   mix over `key + index·golden`): every output word is a pure function
+//!   of `(seed, stream, step, tensor_id, element_index)`.  SR dither uses
+//!   this, so any slice of any tensor can be rounded independently, in any
+//!   order, on any thread, with bit-identical results (Gupta et al. 2015:
+//!   SR's guarantees are order-independent — only stream plumbing isn't).
 
 /// xoshiro256** with splitmix64 seeding.
 #[derive(Debug, Clone)]
@@ -123,6 +136,62 @@ impl Rng {
     }
 }
 
+/// Finalizer of splitmix64 (Stafford's mix13 constants): a bijective
+/// avalanche over u64, the mixing core of [`DitherKey`].
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// The golden-ratio increment of splitmix64 — the counter stride.
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// Counter-based keyed RNG for stochastic-rounding dither.
+///
+/// A key is derived once per `(seed, stream, step, tensor_id)` quadruple;
+/// dither word `i` is then `mix64(key + i·golden)` — exactly the splitmix64
+/// sequence seeded at the key, addressed by position instead of generated by
+/// mutation.  Because each word is a pure function of its coordinates:
+///
+/// * chunked / parallel rounding of a slice is bit-identical to whole-slice
+///   rounding (element `i` always draws word `i`);
+/// * the scalar `Reference` backend and the vectorized / multi-threaded
+///   `Fast` backend consume the *same* dither schedule by construction;
+/// * no stream position has to be maintained or replayed across skips.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DitherKey(u64);
+
+impl DitherKey {
+    /// Derive the key for one `(seed, stream, step, tensor_id)` quadruple.
+    ///
+    /// Each coordinate is absorbed with its own odd multiplier and a full
+    /// mix round, so keys differing in any single coordinate produce
+    /// independent dither streams.
+    pub fn new(seed: u64, stream: u64, step: u64, tensor_id: u64) -> Self {
+        let mut k = seed ^ 0x243F_6A88_85A3_08D3; // pi: domain constant
+        k = mix64(k.wrapping_add(stream.wrapping_mul(0xA3EC_6476_5935_9ACD)));
+        k = mix64(k.wrapping_add(step.wrapping_mul(0xD6E8_FEB8_6659_FD93)));
+        k = mix64(k.wrapping_add(tensor_id.wrapping_mul(0xCA5A_8263_9512_1157)));
+        DitherKey(k)
+    }
+
+    /// Dither word for element `index` (the high 32 bits of the mixed
+    /// counter, matching [`Rng::next_u32`]'s high-bits convention).
+    #[inline]
+    pub fn word(self, index: u64) -> u32 {
+        (mix64(self.0.wrapping_add(index.wrapping_mul(GOLDEN))) >> 32) as u32
+    }
+
+    /// Bulk generation: `out[j] = self.word(base + j)`.
+    pub fn fill(self, base: u64, out: &mut [u32]) {
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot = self.word(base.wrapping_add(j as u64));
+        }
+    }
+}
+
 /// Precomputed inverse-CDF table for Zipf sampling.
 #[derive(Debug, Clone)]
 pub struct ZipfTable {
@@ -223,6 +292,38 @@ mod tests {
         }
         assert!(counts[0] > counts[10]);
         assert!(counts[0] > counts[50]);
+    }
+
+    #[test]
+    fn dither_key_is_a_pure_function_of_coordinates() {
+        let a = DitherKey::new(1, 2, 3, 4);
+        let b = DitherKey::new(1, 2, 3, 4);
+        assert_eq!(a, b);
+        for i in [0u64, 1, 7, 1 << 40, u64::MAX] {
+            assert_eq!(a.word(i), b.word(i));
+        }
+        // changing any single coordinate changes the stream
+        for other in [
+            DitherKey::new(9, 2, 3, 4),
+            DitherKey::new(1, 9, 3, 4),
+            DitherKey::new(1, 2, 9, 4),
+            DitherKey::new(1, 2, 3, 9),
+        ] {
+            let same = (0..64).filter(|&i| other.word(i) == a.word(i)).count();
+            assert!(same <= 1, "streams should not track each other ({same}/64 equal)");
+        }
+    }
+
+    #[test]
+    fn dither_key_fill_matches_word() {
+        let key = DitherKey::new(0xF00, 0x51, 12, 3);
+        for (base, len) in [(0u64, 17usize), (5, 256), (u64::MAX - 3, 8)] {
+            let mut buf = vec![0u32; len];
+            key.fill(base, &mut buf);
+            for (j, &v) in buf.iter().enumerate() {
+                assert_eq!(v, key.word(base.wrapping_add(j as u64)), "base={base} j={j}");
+            }
+        }
     }
 
     #[test]

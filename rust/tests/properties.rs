@@ -6,10 +6,10 @@
 use bf16_train::config::Schedule;
 use bf16_train::precision::{
     kahan_add, round_nearest, round_nearest_slice, round_stochastic, round_stochastic_slice,
-    Format, Mode, Policy, ALL, BF16,
+    round_stochastic_slice_keyed, Format, Mode, Policy, ALL, BF16,
 };
 use bf16_train::qsim::{Backend, QPolicy, Tape, Tensor};
-use bf16_train::util::rng::Rng;
+use bf16_train::util::rng::{DitherKey, Rng};
 
 fn random_f32(rng: &mut Rng) -> f32 {
     // wide dynamic range incl. negatives, zeros, tiny and huge magnitudes
@@ -172,6 +172,114 @@ fn prop_slice_rounding_kernels_match_scalar_all_formats() {
                 );
             }
             assert_eq!(ra.next_u64(), rb.next_u64(), "rng stream {} len={len}", fmt.name);
+        }
+    }
+}
+
+#[test]
+fn prop_dither_words_are_uniform() {
+    // the counter RNG behind SR dither: mean near 2^31, every output bit
+    // near half ones, over several keys
+    let keys = [(0u64, 0u64, 0u64, 0u64), (42, 0x907, 3, 7), (9, 1, 1000, 2)];
+    for (seed, stream, step, tid) in keys {
+        let key = DitherKey::new(seed, stream, step, tid);
+        let n = 1u64 << 16;
+        let mut acc = 0f64;
+        let mut bit_ones = [0u32; 32];
+        for i in 0..n {
+            let w = key.word(i);
+            acc += w as f64;
+            for (b, ones) in bit_ones.iter_mut().enumerate() {
+                *ones += (w >> b) & 1;
+            }
+        }
+        let mean = acc / n as f64;
+        let expect = (u32::MAX as f64) / 2.0;
+        assert!(
+            (mean - expect).abs() < expect * 0.01,
+            "key {key:?}: mean {mean:.0} vs {expect:.0}"
+        );
+        for (b, &ones) in bit_ones.iter().enumerate() {
+            let frac = ones as f64 / n as f64;
+            assert!(
+                (frac - 0.5).abs() < 0.02,
+                "key {key:?} bit {b}: ones fraction {frac}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_dither_keys_independent_across_tensor_and_step() {
+    // streams of keys differing in one coordinate (tensor_id or step) must
+    // look unrelated: word collisions at chance level and cross-stream bit
+    // agreement near 50%
+    let n = 4096u64;
+    let base = DitherKey::new(5, 0x907, 10, 3);
+    let neighbours = [
+        DitherKey::new(5, 0x907, 10, 4), // tensor_id + 1
+        DitherKey::new(5, 0x907, 11, 3), // step + 1
+        DitherKey::new(5, 0x907, 11, 4), // both
+        DitherKey::new(6, 0x907, 10, 3), // seed + 1
+    ];
+    for other in neighbours {
+        let mut equal_words = 0u64;
+        let mut agreeing_bits = 0u64;
+        for i in 0..n {
+            let a = base.word(i);
+            let b = other.word(i);
+            if a == b {
+                equal_words += 1;
+            }
+            agreeing_bits += (!(a ^ b)).count_ones() as u64;
+        }
+        // P(word collision) = 2^-32; over 4096 draws even 2 would be wild
+        assert!(equal_words <= 1, "{other:?}: {equal_words} word collisions");
+        let agree_frac = agreeing_bits as f64 / (n * 32) as f64;
+        assert!(
+            (agree_frac - 0.5).abs() < 0.02,
+            "{other:?}: cross-stream bit agreement {agree_frac}"
+        );
+    }
+}
+
+#[test]
+fn prop_keyed_rounding_chunking_invariant_ragged_lengths() {
+    // chunked/parallel rounding of a slice must equal whole-slice rounding
+    // bit-for-bit for every format, ragged length and chunk size
+    let mut rng = Rng::new(0xB5, 0);
+    for fmt in ALL {
+        for len in [1usize, 2, 7, 63, 64, 65, 255, 257, 777] {
+            let key = DitherKey::new(0xD17, 0x51, len as u64, 1);
+            let xs: Vec<f32> = (0..len).map(|_| random_f32(&mut rng)).collect();
+            let mut whole = xs.clone();
+            round_stochastic_slice_keyed(&mut whole, fmt, key, 0);
+            // scalar oracle
+            for (i, (&w, &x)) in whole.iter().zip(&xs).enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    round_stochastic(x, fmt, key.word(i as u64)).to_bits(),
+                    "{} len={len} i={i} oracle",
+                    fmt.name
+                );
+            }
+            for chunk in [1usize, 2, 5, 16, 97, 256] {
+                let mut pieces = xs.clone();
+                let mut off = 0;
+                while off < len {
+                    let end = (off + chunk).min(len);
+                    round_stochastic_slice_keyed(&mut pieces[off..end], fmt, key, off as u64);
+                    off = end;
+                }
+                for (i, (a, b)) in pieces.iter().zip(&whole).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{} len={len} chunk={chunk} i={i}",
+                        fmt.name
+                    );
+                }
+            }
         }
     }
 }

@@ -11,6 +11,10 @@
 //! `--mode` takes any typed policy name (`kahan16`, `sr16-e8m5`, …).
 //! `gpt-tiny` (~0.9M params) is lowered by default; `gpt-small`/`gpt-100m`
 //! need `python -m compile.aot --filter gpt-small` (or gpt-100m) first.
+//!
+//! For a transformer LM on the *bit-exact native simulator* (no artifacts,
+//! exact per-operator rounding, deterministic across `--intra-threads`),
+//! see the `gpt_nano` example / `repro exp gpt` instead.
 
 use anyhow::Result;
 

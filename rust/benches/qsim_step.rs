@@ -12,6 +12,7 @@
 //! scaling ratios are noise — `derived.smoke = 1` marks such runs).
 
 use bf16_train::qsim::dlrm::{DlrmConfig, DlrmTrainer};
+use bf16_train::qsim::gpt::{GptConfig, GptTrainer};
 use bf16_train::qsim::lsq::{self, LsqConfig, LsqData, Placement};
 use bf16_train::qsim::{Backend, Mode, Tensor};
 use bf16_train::util::bench::{bench, bench_n, black_box, write_bench_json, BenchResult};
@@ -127,6 +128,81 @@ fn main() {
             );
         }
         println!("parity: dlrm-par sr16 bit-identical at 1 vs 2 intra-threads");
+    }
+
+    // -- gpt-nano train step, per mode and backend --------------------------
+    let gpt_trainer = |mode: Mode, backend: Backend| {
+        let cfg = GptConfig { seed: 3, backend, ..Default::default() };
+        let mut tr = GptTrainer::new(cfg, mode);
+        for _ in 0..3 {
+            tr.step(0.1); // warm the tape arena
+        }
+        tr
+    };
+    for mode in [Mode::Fp32, Mode::Sr16] {
+        let mut pair = Vec::new();
+        for backend in [Backend::Fast, Backend::Reference] {
+            let mut tr = gpt_trainer(mode, backend);
+            let r = timed(
+                smoke,
+                &format!("gpt-nano step {} {}", mode.name(), backend.name()),
+                || {
+                    black_box(tr.step(0.1));
+                },
+            );
+            pair.push(r.median_ns);
+            results.push(r);
+        }
+        let speedup = pair[1] / pair[0];
+        println!("  ↳ gpt-nano {} speedup fast/reference: {speedup:.2}x", mode.name());
+        derived.push((format!("speedup_gpt_{}", mode.name()), speedup));
+    }
+
+    // -- gpt intra-step scaling: a transformer big enough for the pool ------
+    // (attention fans out per sequence, the matmuls per row panel)
+    let gpt_par_cfg = |threads: usize| GptConfig {
+        seed: 3,
+        vocab: 256,
+        seq_len: 32,
+        dim: 64,
+        hidden: 256,
+        batch: if smoke { 8 } else { 16 },
+        intra_threads: threads,
+        ..Default::default()
+    };
+    let mut gpt_t1_median = None;
+    for &threads in &thread_counts {
+        let mut tr = GptTrainer::new(gpt_par_cfg(threads), Mode::Sr16);
+        for _ in 0..2 {
+            tr.step(0.1); // warm the tape arena and the worker pool
+        }
+        let r = timed(smoke, &format!("gpt-par step sr16 t{threads}"), || {
+            black_box(tr.step(0.1));
+        });
+        match gpt_t1_median {
+            None => gpt_t1_median = Some(r.median_ns),
+            Some(t1) => {
+                let scaling = t1 / r.median_ns;
+                println!("  ↳ gpt-par sr16 scaling t{threads} vs t1: {scaling:.2}x");
+                derived.push((format!("scaling_gpt_sr16_t{threads}"), scaling));
+            }
+        }
+        results.push(r);
+    }
+    // thread-count bit-identity spot check on the gpt scaling config
+    {
+        let mut a = GptTrainer::new(gpt_par_cfg(1), Mode::Sr16);
+        let mut b = GptTrainer::new(gpt_par_cfg(2), Mode::Sr16);
+        for s in 0..3 {
+            let (la, _) = a.step(0.1);
+            let (lb, _) = b.step(0.1);
+            assert_eq!(
+                la.to_bits(),
+                lb.to_bits(),
+                "gpt t1/t2 loss diverged at step {s}"
+            );
+        }
+        println!("parity: gpt-par sr16 bit-identical at 1 vs 2 intra-threads");
     }
 
     // -- lsq theory loop, per rounding placement ----------------------------

@@ -21,6 +21,7 @@ use crate::hwcost;
 use crate::metrics::mean_std;
 use crate::precision::{Mode, Policy, BF16, E8M1, E8M3, E8M5, FP16};
 use crate::qsim::dlrm::{DlrmConfig, DlrmTrainer};
+use crate::qsim::gpt::{GptConfig, GptTrainer};
 use crate::qsim::lsq::{self, LsqConfig, LsqData, Placement};
 use crate::util::table::{pm, Table};
 use crate::Runner;
@@ -680,6 +681,90 @@ impl Experiment for Fig9 {
 }
 
 // ---------------------------------------------------------------------------
+// gpt-nano — the native transformer-LM scenario of the Table-4 comparison.
+// ---------------------------------------------------------------------------
+
+/// The Table-4-style nearest/SR/Kahan comparison on the *bit-exact*
+/// simulator's third application family: a tiny causal-transformer LM over
+/// a seeded Markov corpus (the first two being DLRM and least-squares).
+/// Runs fully native — no PJRT artifacts needed — and is bit-identical
+/// across backends and `--intra-threads` settings.
+struct GptNano;
+
+impl Experiment for GptNano {
+    fn id(&self) -> &'static str {
+        "gpt"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["gpt-nano"]
+    }
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let steps = opts.steps.unwrap_or(300) as usize;
+        let warm = (steps / 20).max(1);
+        let mut t = Table::new(
+            "gpt-nano (native) — 16-bit-FPU training vs 32-bit, transformer LM",
+            &["mode", "eval loss", "eval ppl", "cancel %", "steps/s"],
+        );
+        let mut csv = String::from("mode,seed,eval_loss,eval_ppl,cancel_frac\n");
+        for mode in [Mode::Fp32, Mode::Sr16, Mode::Kahan16, Mode::Standard16] {
+            let mut losses = Vec::new();
+            let mut sps = Vec::new();
+            let mut cancel = crate::qsim::UpdateStats::default();
+            for seed in 0..opts.seeds {
+                let cfg = GptConfig {
+                    seed,
+                    intra_threads: opts.intra_threads.unwrap_or(1),
+                    ..GptConfig::default()
+                };
+                let mut tr = GptTrainer::new(cfg, mode);
+                let mut seed_cancel = crate::qsim::UpdateStats::default();
+                let t0 = std::time::Instant::now();
+                for step in 0..steps {
+                    // constant lr with a short linear warmup
+                    let lr = if step < warm {
+                        0.2 * (step + 1) as f32 / warm as f32
+                    } else {
+                        0.2
+                    };
+                    let (_, stats) = tr.step(lr);
+                    seed_cancel.merge(stats);
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                if dt > 0.0 {
+                    sps.push(steps as f64 / dt);
+                }
+                let el = tr.eval(8) as f64;
+                losses.push(el);
+                csv.push_str(&format!(
+                    "{},{seed},{el:.4},{:.3},{:.4}\n",
+                    mode.name(),
+                    el.exp(),
+                    seed_cancel.frac()
+                ));
+                cancel.merge(seed_cancel);
+            }
+            let (m, s) = mean_std(&losses);
+            let (sm, _) = mean_std(&sps);
+            t.row(vec![
+                mode.name().into(),
+                pm(m, s, 3),
+                format!("{:.2}", m.exp()),
+                format!("{:.1}", cancel.frac() * 100.0),
+                if sps.is_empty() { "-".into() } else { format!("{sm:.1}") },
+            ]);
+        }
+        let s = t.render()
+            + "\nExpected shape (paper): sr16/kahan16 within noise of 32-bit; standard16\nworse — nearest rounding cancels late-training updates (see cancel %).\n";
+        opts.write("gpt.txt", &s)?;
+        opts.write("gpt.csv", &csv)?;
+        Ok(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Figure 10 / 12 — sub-16-bit and fp16 format sweeps (PJRT, DLRM).
 // ---------------------------------------------------------------------------
 
@@ -812,13 +897,14 @@ impl Experiment for Fig11 {
 
 /// Every registered experiment, dependency-light → heavy.
 pub static EXPERIMENTS: &[&dyn Experiment] = &[
-    &Table1, &Table2, &Fig2, &Thm1, &Fig5, &Fig9, &Fig1, &Table3, &Fig10, &Fig11, &Fig12, &Table4,
+    &Table1, &Table2, &Fig2, &Thm1, &Fig5, &Fig9, &GptNano, &Fig1, &Table3, &Fig10, &Fig11,
+    &Fig12, &Table4,
 ];
 
 /// All primary experiment ids, in registry order (for `exp all`).
-pub const ALL_EXPERIMENTS: [&str; 12] = [
-    "table1", "table2", "fig2", "thm1", "fig5", "fig9", "fig1", "table3", "fig10", "fig11",
-    "fig12", "table4",
+pub const ALL_EXPERIMENTS: [&str; 13] = [
+    "table1", "table2", "fig2", "thm1", "fig5", "fig9", "gpt", "fig1", "table3", "fig10",
+    "fig11", "fig12", "table4",
 ];
 
 /// Find an experiment by primary id or alias.
@@ -866,7 +952,13 @@ mod tests {
         assert_eq!(find_experiment("fig6").unwrap().id(), "fig1");
         assert_eq!(find_experiment("fig3").unwrap().id(), "table3");
         assert_eq!(find_experiment("fig4").unwrap().id(), "table4");
+        assert_eq!(find_experiment("gpt-nano").unwrap().id(), "gpt");
         assert!(find_experiment("fig99").is_none());
+    }
+
+    #[test]
+    fn gpt_experiment_runs_without_runtime() {
+        assert!(!find_experiment("gpt").unwrap().needs_runtime());
     }
 
     #[test]

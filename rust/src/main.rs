@@ -48,14 +48,19 @@ const USAGE: &str = "usage: repro <command>
   train --app APP [--mode MODE] [--fmt FMT] [--steps N] [--seed S]
         [--lr LR] [--intra-threads T] [--config FILE.toml]
         [--checkpoint PATH] [--resume PATH]
-  exp <table1|table2|table3|table4|fig1|fig2|fig5|fig9|fig10|fig11|fig12|thm1|all>
+  exp <table1|table2|table3|table4|fig1|fig2|fig5|fig9|fig10|fig11|fig12|thm1|gpt|all>
         [--steps N] [--seeds K] [--app APP] [--threads T]
         [--intra-threads T] [--no-smooth]
   bench-step <artifact-name> [--iters N] [--intra-threads T]
   qsim-parity [--steps N] [--seed S] [--intra-threads T]
+        [--app all|dlrm|gpt] [--backend fast|reference]
 
 modes: fp32 standard16 mixed16 sr16 kahan16 srkahan16
 fmts:  bf16 (default) fp16 e8m5 e8m3 e8m1
+
+`exp gpt` trains the native gpt-nano transformer LM (attention + layernorm
++ tied softmax on the bit-exact simulator) across fp32/sr16/kahan16/
+standard16 — no PJRT artifacts needed.
 
 --threads fans runs out across sweep workers; --intra-threads parallelizes
 within one train step (bit-identical results at every setting).  Today the
@@ -233,49 +238,96 @@ fn cmd_bench_step(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// Deterministic digest of a native qsim DLRM training run: per-step loss
-/// bit patterns and cancellation counters, plus a final eval.  Contains no
-/// timings, so the output must be byte-identical across `--intra-threads`
-/// settings — the CI determinism job runs it at 1 and 4 threads and diffs.
+/// Deterministic digest of native qsim training runs (DLRM and the
+/// gpt-nano transformer LM): per-step loss bit patterns and cancellation
+/// counters, plus a final eval.  Contains no timings, so the output must be
+/// byte-identical across `--intra-threads` settings *and* across
+/// `--backend fast|reference` — the CI determinism job diffs all of them.
 fn cmd_qsim_parity(args: &mut Args) -> Result<()> {
     use bf16_train::qsim::dlrm::{DlrmConfig, DlrmTrainer};
+    use bf16_train::qsim::gpt::{GptConfig, GptTrainer};
+    use bf16_train::qsim::Backend;
 
     let steps = args.opt_u64("steps", 40)?;
     let seed = args.opt_u64("seed", 17)?;
     let intra_threads = args.opt_u64("intra-threads", 1)? as usize;
+    let app = args.opt("app", "all");
+    if !matches!(app.as_str(), "all" | "dlrm" | "gpt" | "gpt-nano") {
+        bail!("--app must be all, dlrm or gpt, got {app:?}");
+    }
+    let backend = match args.opt("backend", "fast").as_str() {
+        "fast" => Backend::Fast,
+        "reference" => Backend::Reference,
+        other => bail!("--backend must be fast or reference, got {other:?}"),
+    };
     args.finish()?;
-    eprintln!("qsim-parity: {steps} steps, seed {seed}, {intra_threads} intra-threads");
-    for mode in [Mode::Sr16, Mode::SrKahan16] {
-        let cfg = DlrmConfig {
-            seed,
-            // large enough that the parallel kernels actually engage
-            table_size: 600,
-            embed_dim: 16,
-            hidden: 64,
-            batch: 48,
-            intra_threads,
-            ..Default::default()
-        };
-        let mut tr = DlrmTrainer::new(cfg, mode);
-        for step in 0..steps {
-            let tel = tr.step(0.05);
+    eprintln!(
+        "qsim-parity: {steps} steps, seed {seed}, {intra_threads} intra-threads, {} backend",
+        backend.name()
+    );
+    if app == "all" || app == "dlrm" {
+        for mode in [Mode::Sr16, Mode::SrKahan16] {
+            let cfg = DlrmConfig {
+                seed,
+                // large enough that the parallel kernels actually engage
+                table_size: 600,
+                embed_dim: 16,
+                hidden: 64,
+                batch: 48,
+                backend,
+                intra_threads,
+                ..Default::default()
+            };
+            let mut tr = DlrmTrainer::new(cfg, mode);
+            for step in 0..steps {
+                let tel = tr.step(0.05);
+                println!(
+                    "dlrm {} step {step}: loss {:08x} embed {}/{} mlp {}/{}",
+                    mode.name(),
+                    tel.loss.to_bits(),
+                    tel.embed.cancelled,
+                    tel.embed.nonzero,
+                    tel.mlp.cancelled,
+                    tel.mlp.nonzero
+                );
+            }
+            let (eval_loss, auc) = tr.eval(4);
             println!(
-                "{} step {step}: loss {:08x} embed {}/{} mlp {}/{}",
+                "dlrm {} final: eval-loss {:08x} auc {:08x}",
                 mode.name(),
-                tel.loss.to_bits(),
-                tel.embed.cancelled,
-                tel.embed.nonzero,
-                tel.mlp.cancelled,
-                tel.mlp.nonzero
+                eval_loss.to_bits(),
+                auc.to_bits()
             );
         }
-        let (eval_loss, auc) = tr.eval(4);
-        println!(
-            "{} final: eval-loss {:08x} auc {:08x}",
-            mode.name(),
-            eval_loss.to_bits(),
-            auc.to_bits()
-        );
+    }
+    if app == "all" || app == "gpt" || app == "gpt-nano" {
+        for mode in [Mode::Fp32, Mode::Standard16, Mode::Sr16, Mode::Kahan16] {
+            let cfg = GptConfig {
+                seed,
+                // large enough that the attention/matmul fan-outs engage
+                vocab: 64,
+                seq_len: 16,
+                dim: 32,
+                hidden: 64,
+                batch: 8,
+                backend,
+                intra_threads,
+                ..Default::default()
+            };
+            let mut tr = GptTrainer::new(cfg, mode);
+            for step in 0..steps {
+                let (loss, stats) = tr.step(0.1);
+                println!(
+                    "gpt-nano {} step {step}: loss {:08x} upd {}/{}",
+                    mode.name(),
+                    loss.to_bits(),
+                    stats.cancelled,
+                    stats.nonzero
+                );
+            }
+            let eval_loss = tr.eval(4);
+            println!("gpt-nano {} final: eval-loss {:08x}", mode.name(), eval_loss.to_bits());
+        }
     }
     Ok(())
 }

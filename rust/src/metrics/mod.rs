@@ -6,6 +6,9 @@ use std::fmt::Write as _;
 /// ROC AUC from (score, is_positive) pairs (the paper's DLRM metric).
 ///
 /// Rank-sum (Mann–Whitney U) formulation with average ranks for ties.
+/// Total-order sort (`f32::total_cmp`), so non-finite scores — exactly what
+/// a diverging `standard16` run produces — rank deterministically (NaNs
+/// above +inf) instead of panicking mid-experiment.
 pub fn auc(scored: &[(f32, bool)]) -> f32 {
     let pos = scored.iter().filter(|(_, y)| *y).count();
     let neg = scored.len() - pos;
@@ -13,7 +16,7 @@ pub fn auc(scored: &[(f32, bool)]) -> f32 {
         return 0.5;
     }
     let mut sorted: Vec<&(f32, bool)> = scored.iter().collect();
-    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
     // average ranks over tie groups
     let mut rank_sum_pos = 0f64;
     let mut i = 0;
@@ -163,6 +166,26 @@ mod tests {
     fn auc_with_ties_is_half_credit() {
         let tied = vec![(0.5f32, true), (0.5, false), (0.5, true), (0.5, false)];
         assert!((auc(&tied) - 0.5).abs() < 1e-6);
+    }
+
+    /// Diverged runs hand AUC NaN/inf logits; it must stay total and finite
+    /// (it used to panic in `partial_cmp(..).unwrap()`).
+    #[test]
+    fn auc_survives_non_finite_scores() {
+        let scored = vec![
+            (f32::NAN, true),
+            (0.3, false),
+            (f32::INFINITY, true),
+            (f32::NEG_INFINITY, false),
+            (0.7, true),
+            (f32::NAN, false),
+        ];
+        let a = auc(&scored);
+        assert!(a.is_finite());
+        assert!((0.0..=1.0).contains(&a), "{a}");
+        // all-NaN input is likewise defined
+        let nans = vec![(f32::NAN, true), (f32::NAN, false)];
+        assert!(auc(&nans).is_finite());
     }
 
     #[test]

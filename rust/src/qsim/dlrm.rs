@@ -13,11 +13,16 @@ use std::sync::Arc;
 use crate::precision::{Format, Mode, FP32};
 use crate::util::rng::{Rng, ZipfTable};
 
+use super::nn::{Embedding, Linear, Module};
 use super::optim::{Sgd, SgdState, UpdateStats};
 use super::pool::Pool;
 use super::tape::{QPolicy, Tape, Var};
 use super::tensor::Tensor;
 use super::Backend;
+
+/// Stream tag for the held-out eval batches — disjoint from the training
+/// stream (0xC7), so evaluation can never perturb the training trajectory.
+const CTR_EVAL_STREAM: u64 = 0xE7A1;
 
 /// Model + data configuration.
 #[derive(Debug, Clone)]
@@ -112,64 +117,48 @@ impl CtrGen {
         }
         CtrBatch { dense, cat, labels }
     }
+
+    /// Fork a generator sharing this one's ground-truth model but drawing
+    /// samples from an independent (seed, stream) pair.  Trainers hand
+    /// their eval loop a fork so evaluation draws never advance the
+    /// training stream (`eval` used to consume `self.gen`, silently making
+    /// the training trajectory a function of `eval_every`).
+    pub fn fork(&self, stream: u64) -> CtrGen {
+        CtrGen {
+            cfg: self.cfg.clone(),
+            zipf: self.zipf.clone(),
+            truth_dense: self.truth_dense.clone(),
+            truth_cat: self.truth_cat.clone(),
+            rng: Rng::new(self.cfg.seed, stream),
+        }
+    }
 }
 
-/// The model parameters (kept in-format by the optimizer).
+/// The model, composed from `qsim::nn` layers (the layer logic that used to
+/// be hand-rolled here).  Parameter tensors live inside the layers, kept
+/// in-format by the optimizer; the graph shape and the init draw order are
+/// unchanged by the refactor, so trajectories are bit-identical to the
+/// pre-`nn` implementation.
 pub struct DlrmModel {
     pub cfg: DlrmConfig,
-    pub tables: Vec<Tensor>,
-    pub bot_w: Tensor,
-    pub bot_b: Tensor,
-    pub top_w: Tensor,
-    pub top_b: Tensor,
-    pub head_w: Tensor,
-    pub head_b: Tensor,
+    pub tables: Vec<Embedding>,
+    pub bot: Linear,
+    pub top: Linear,
+    pub head: Linear,
 }
 
 impl DlrmModel {
     pub fn init(cfg: &DlrmConfig) -> Self {
         let mut rng = Rng::new(cfg.seed, 0xD1);
         let inter_dim = cfg.embed_dim * (cfg.num_tables + 1);
-        let quant = |mut t: Tensor| {
-            for x in &mut t.data {
-                *x = crate::precision::round_nearest(*x, cfg.fmt);
-            }
-            t
-        };
         Self {
             cfg: cfg.clone(),
             tables: (0..cfg.num_tables)
-                .map(|_| {
-                    quant(Tensor::rand_uniform(
-                        cfg.table_size,
-                        cfg.embed_dim,
-                        -0.05,
-                        0.05,
-                        &mut rng,
-                    ))
-                })
+                .map(|_| Embedding::init(cfg.table_size, cfg.embed_dim, 0.05, cfg.fmt, &mut rng))
                 .collect(),
-            bot_w: quant(Tensor::randn(
-                cfg.dense_dim,
-                cfg.embed_dim,
-                (2.0 / cfg.dense_dim as f32).sqrt(),
-                &mut rng,
-            )),
-            bot_b: Tensor::zeros(1, cfg.embed_dim),
-            top_w: quant(Tensor::randn(
-                inter_dim,
-                cfg.hidden,
-                (2.0 / inter_dim as f32).sqrt(),
-                &mut rng,
-            )),
-            top_b: Tensor::zeros(1, cfg.hidden),
-            head_w: quant(Tensor::randn(
-                cfg.hidden,
-                1,
-                (2.0 / cfg.hidden as f32).sqrt(),
-                &mut rng,
-            )),
-            head_b: Tensor::zeros(1, 1),
+            bot: Linear::init(cfg.dense_dim, cfg.embed_dim, true, cfg.fmt, &mut rng),
+            top: Linear::init(inter_dim, cfg.hidden, true, cfg.fmt, &mut rng),
+            head: Linear::init(cfg.hidden, 1, true, cfg.fmt, &mut rng),
         }
     }
 
@@ -193,32 +182,18 @@ impl DlrmModel {
         // embeddings
         let mut feats: Vec<Var> = Vec::new();
         for (ti, table) in self.tables.iter().enumerate() {
-            let tv = t.param_from(table);
-            params.push(tv);
-            feats.push(t.embed(tv, batch.cat[ti].clone()));
+            feats.push(table.forward(t, batch.cat[ti].clone(), &mut params));
         }
         // bottom MLP over dense features
         let x = t.input_from(&batch.dense);
-        let bw = t.param_from(&self.bot_w);
-        let bb = t.param_from(&self.bot_b);
-        params.extend([bw, bb]);
-        let z0 = t.matmul(x, bw);
-        let z1 = t.add_row(z0, bb);
+        let z1 = self.bot.forward(t, x, &mut params);
         let z = t.relu(z1);
         feats.push(z);
         // interaction: concat features, top MLP, scalar head
         let cat = t.concat_cols(feats);
-        let tw = t.param_from(&self.top_w);
-        let tb = t.param_from(&self.top_b);
-        params.extend([tw, tb]);
-        let h0 = t.matmul(cat, tw);
-        let h1 = t.add_row(h0, tb);
+        let h1 = self.top.forward(t, cat, &mut params);
         let h = t.relu(h1);
-        let hw = t.param_from(&self.head_w);
-        let hb = t.param_from(&self.head_b);
-        params.extend([hw, hb]);
-        let l0 = t.matmul(h, hw);
-        let logits2d = t.add_row(l0, hb); // (B, 1)
+        let logits2d = self.head.forward(t, h, &mut params); // (B, 1)
         let loss = t.bce_loss(
             logits2d,
             Tensor::from_vec(batch.labels.len(), 1, batch.labels.data.clone()),
@@ -231,37 +206,27 @@ impl DlrmModel {
         let mut t2 = Tape::new(policy);
         let mut feats: Vec<Var> = Vec::new();
         for (ti, table) in self.tables.iter().enumerate() {
-            let tv = t2.input(table.clone());
-            feats.push(t2.embed(tv, batch.cat[ti].clone()));
+            feats.push(table.forward_frozen(&mut t2, batch.cat[ti].clone()));
         }
         let x = t2.input(batch.dense.clone());
-        let bw = t2.input(self.bot_w.clone());
-        let bb = t2.input(self.bot_b.clone());
-        let z0 = t2.matmul(x, bw);
-        let z1 = t2.add_row(z0, bb);
+        let z1 = self.bot.forward_frozen(&mut t2, x);
         let z = t2.relu(z1);
         feats.push(z);
         let cat = t2.concat_cols(feats);
-        let tw = t2.input(self.top_w.clone());
-        let tb = t2.input(self.top_b.clone());
-        let h0 = t2.matmul(cat, tw);
-        let h1 = t2.add_row(h0, tb);
+        let h1 = self.top.forward_frozen(&mut t2, cat);
         let h = t2.relu(h1);
-        let hw = t2.input(self.head_w.clone());
-        let hb = t2.input(self.head_b.clone());
-        let l0 = t2.matmul(h, hw);
-        let logits2d = t2.add_row(l0, hb);
+        let logits2d = self.head.forward_frozen(&mut t2, h);
         t2.value(logits2d).data.clone()
     }
 
     fn param_tensors_mut(&mut self) -> Vec<&mut Tensor> {
-        let mut v: Vec<&mut Tensor> = self.tables.iter_mut().collect();
-        v.push(&mut self.bot_w);
-        v.push(&mut self.bot_b);
-        v.push(&mut self.top_w);
-        v.push(&mut self.top_b);
-        v.push(&mut self.head_w);
-        v.push(&mut self.head_b);
+        let mut v: Vec<&mut Tensor> = Vec::new();
+        for e in &mut self.tables {
+            v.extend(e.params_mut());
+        }
+        v.extend(self.bot.params_mut());
+        v.extend(self.top.params_mut());
+        v.extend(self.head.params_mut());
         v
     }
 }
@@ -280,6 +245,10 @@ pub struct DlrmTrainer {
     opts: Vec<Sgd>,
     states: Vec<SgdState>,
     gen: CtrGen,
+    /// Dedicated eval stream forked from the seed (shared ground truth,
+    /// disjoint sample draws): evaluation never touches `gen`, so the
+    /// training trajectory is invariant to `eval_every`.
+    eval_gen: CtrGen,
     policy: QPolicy,
     /// Retained across steps (`Fast` backend): node + gradient storage is
     /// recycled via `Tape::reset` instead of reallocated per step.
@@ -336,8 +305,9 @@ impl DlrmTrainer {
             QPolicy::with_backend(cfg.fmt, cfg.backend)
         };
         let gen = CtrGen::new(&cfg);
+        let eval_gen = gen.fork(CTR_EVAL_STREAM);
         let tape = Tape::with_pool(policy, Arc::clone(&pool));
-        Self { model, opts, states, gen, policy, tape, pool }
+        Self { model, opts, states, gen, eval_gen, policy, tape, pool }
     }
 
     /// Effective intra-step worker count (1 unless configured otherwise).
@@ -400,12 +370,19 @@ impl DlrmTrainer {
         tel
     }
 
-    /// Evaluate mean loss and AUC over `n` fresh batches.
+    /// Evaluate mean loss and AUC over `n` fresh batches from the dedicated
+    /// eval stream.  Side-effect-free with respect to training: the
+    /// training generator is never advanced (it used to be, making every
+    /// reported accuracy a function of the eval cadence).  `n == 0` is
+    /// defined as `(0.0, 0.5)` — no data, chance AUC — instead of 0/0 NaN.
     pub fn eval(&mut self, n: usize) -> (f32, f32) {
+        if n == 0 {
+            return (0.0, 0.5);
+        }
         let mut loss_acc = 0f64;
         let mut scored: Vec<(f32, bool)> = Vec::new();
         for _ in 0..n {
-            let batch = self.gen.next_batch();
+            let batch = self.eval_gen.next_batch();
             let (tape, loss, _) = self.model.forward(&batch, self.policy);
             loss_acc += tape.value(loss).item() as f64;
             let logits = self.model.logits(&batch, self.policy);
@@ -566,6 +543,62 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
+    }
+
+    /// Bugfix gate: the training trajectory must be bit-identical whether
+    /// or not (and how often) `eval` runs — evaluation draws from its own
+    /// forked stream, never the training generator.
+    #[test]
+    fn eval_cadence_does_not_change_training_trajectory() {
+        let mk = || {
+            let cfg = DlrmConfig { seed: 21, ..Default::default() };
+            DlrmTrainer::new(cfg, Mode::Sr16)
+        };
+        let mut with_eval = mk();
+        let mut without = mk();
+        for step in 0..30 {
+            let a = with_eval.step(0.05);
+            let b = without.step(0.05);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged at step {step}");
+            assert_eq!(a.embed, b.embed, "embed stats diverged at step {step}");
+            assert_eq!(a.mlp, b.mlp, "mlp stats diverged at step {step}");
+            // eval_every = 10, the ISSUE's regression cadence
+            if (step + 1) % 10 == 0 {
+                let (el, auc) = with_eval.eval(2);
+                assert!(el.is_finite() && (0.0..=1.0).contains(&auc));
+            }
+        }
+        for (pi, (wa, wb)) in with_eval
+            .model
+            .param_tensors_mut()
+            .into_iter()
+            .zip(without.model.param_tensors_mut())
+            .enumerate()
+        {
+            for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "param {pi} elem {ei}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_eval_is_defined() {
+        let cfg = DlrmConfig { seed: 2, ..Default::default() };
+        let mut tr = DlrmTrainer::new(cfg, Mode::Fp32);
+        assert_eq!(tr.eval(0), (0.0, 0.5));
+    }
+
+    #[test]
+    fn eval_stream_shares_ground_truth_with_training() {
+        // a forked generator must describe the same synthetic task: a
+        // trained model should score (clearly) better than chance on it
+        let cfg = DlrmConfig { seed: 9, ..Default::default() };
+        let mut tr = DlrmTrainer::new(cfg, Mode::Fp32);
+        for _ in 0..400 {
+            tr.step(0.1);
+        }
+        let (_, auc) = tr.eval(16);
+        assert!(auc > 0.55, "held-out auc {auc} — eval stream looks unrelated to training");
     }
 
     #[test]

@@ -1,0 +1,596 @@
+//! Native tiny causal-transformer LM (`gpt-nano`) on the quantised tape —
+//! the third exactly-simulated application family after DLRM and
+//! least-squares.
+//!
+//! Kalamkar et al. (2019) show bf16 behaviour differs materially across
+//! model families (embeddings vs attention vs MLP); this puts attention,
+//! layernorm and a tied softmax head on the bit-exact simulator with the
+//! same determinism contract as the DLRM path: counter-keyed SR dither,
+//! `Fast`/`Reference` backends bit-identical, and bit-identical training at
+//! every `--intra-threads` setting.
+//!
+//! Architecture (`gpt-nano`): token + position embeddings → N pre-LN blocks
+//! of single-head causal attention and a two-layer MLP (residual branches
+//! scaled by 1/√(2·N)) → final layernorm → softmax head **tied** to the
+//! token embedding (`logits = x @ embedᵀ` via the tape's `matmul_nt`).
+//! Data is a seeded synthetic first-order Markov corpus, so the optimal
+//! loss is the chain's conditional entropy and the LM has real structure
+//! (bigram statistics + positional regularities) to learn.
+
+use std::sync::Arc;
+
+use crate::precision::{Format, Mode, FP32};
+use crate::util::rng::Rng;
+
+use super::nn::{Embedding, LayerNorm, Linear, Mlp, Module};
+use super::optim::{Sgd, SgdState, UpdateStats};
+use super::pool::Pool;
+use super::tape::{QPolicy, Tape, Var};
+use super::tensor::Tensor;
+use super::Backend;
+
+/// Stream tag for the synthetic Markov corpus' training draws.
+const LM_DATA_STREAM: u64 = 0x6D6B; // "mk"
+/// Stream tag for the held-out eval draws (disjoint from training, so eval
+/// cadence can never perturb the training trajectory).
+const LM_EVAL_STREAM: u64 = 0xE7A2;
+/// Stream tag for the ground-truth transition model.
+const LM_TRUTH_STREAM: u64 = 0x7472; // "tr"
+/// Stream tag for parameter initialisation.
+const LM_INIT_STREAM: u64 = 0x6E; // "n"
+
+/// Model + data configuration.
+#[derive(Debug, Clone)]
+pub struct GptConfig {
+    pub vocab: usize,
+    pub seq_len: usize,
+    /// Residual / head width.
+    pub dim: usize,
+    /// MLP hidden width.
+    pub hidden: usize,
+    pub n_blocks: usize,
+    /// Sequences per batch.
+    pub batch: usize,
+    pub fmt: Format,
+    pub seed: u64,
+    /// Kernel backend (see [`Backend`]); bit-identical results either way.
+    pub backend: Backend,
+    /// Intra-step worker threads (`Fast` backend only; `1` = sequential,
+    /// `0` = auto).  Bit-identical results at every setting.
+    pub intra_threads: usize,
+}
+
+impl Default for GptConfig {
+    fn default() -> Self {
+        Self {
+            vocab: 32,
+            seq_len: 16,
+            dim: 16,
+            hidden: 32,
+            n_blocks: 2,
+            batch: 8,
+            fmt: crate::precision::BF16,
+            seed: 0,
+            backend: Backend::Fast,
+            intra_threads: 1,
+        }
+    }
+}
+
+/// One batch of next-token prediction data: `batch` sequences of `seq_len`
+/// tokens, flattened row-major (sequence s occupies rows s·T .. (s+1)·T).
+pub struct LmBatch {
+    pub tokens: Vec<usize>,
+    pub targets: Vec<usize>,
+}
+
+/// Seeded synthetic Markov corpus: a row-stochastic transition matrix with
+/// peaked successor distributions (softmax of N(0, 2) logits), sampled by
+/// inverse CDF.  The transition model is shared between forks, so train and
+/// eval streams draw from the *same* language through disjoint RNG streams.
+pub struct MarkovGen {
+    cfg: GptConfig,
+    /// Per-token cumulative successor distribution (vocab × vocab).
+    cdf: Arc<Vec<f32>>,
+    rng: Rng,
+}
+
+impl MarkovGen {
+    pub fn new(cfg: &GptConfig) -> Self {
+        let mut truth = Rng::new(cfg.seed, LM_TRUTH_STREAM);
+        let v = cfg.vocab;
+        let mut cdf = vec![0f32; v * v];
+        for r in 0..v {
+            let row = &mut cdf[r * v..(r + 1) * v];
+            let mut total = 0f64;
+            for x in row.iter_mut() {
+                *x = (truth.normal() * 2.0).exp();
+                total += *x as f64;
+            }
+            let mut acc = 0f64;
+            for x in row.iter_mut() {
+                acc += *x as f64;
+                *x = (acc / total) as f32;
+            }
+            // fp guard: the last bucket must cover every u in [0, 1)
+            row[v - 1] = 1.0;
+        }
+        Self { cfg: cfg.clone(), cdf: Arc::new(cdf), rng: Rng::new(cfg.seed, LM_DATA_STREAM) }
+    }
+
+    /// Fork a generator sharing this one's transition model but drawing
+    /// samples from an independent (seed, stream) pair.
+    pub fn fork(&self, stream: u64) -> MarkovGen {
+        MarkovGen {
+            cfg: self.cfg.clone(),
+            cdf: Arc::clone(&self.cdf),
+            rng: Rng::new(self.cfg.seed, stream),
+        }
+    }
+
+    fn next_token(&mut self, prev: usize) -> usize {
+        let v = self.cfg.vocab;
+        let u = self.rng.uniform();
+        let row = &self.cdf[prev * v..(prev + 1) * v];
+        row.partition_point(|&c| c < u).min(v - 1)
+    }
+
+    pub fn next_batch(&mut self) -> LmBatch {
+        let (b, t_len, v) = (self.cfg.batch, self.cfg.seq_len, self.cfg.vocab);
+        let mut tokens = Vec::with_capacity(b * t_len);
+        let mut targets = Vec::with_capacity(b * t_len);
+        for _ in 0..b {
+            let mut prev = self.rng.below(v);
+            for _ in 0..t_len {
+                tokens.push(prev);
+                let next = self.next_token(prev);
+                targets.push(next);
+                prev = next;
+            }
+        }
+        LmBatch { tokens, targets }
+    }
+}
+
+/// One pre-LN transformer block.
+pub struct GptBlock {
+    pub ln1: LayerNorm,
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub ln2: LayerNorm,
+    pub mlp: Mlp,
+}
+
+impl Module for GptBlock {
+    fn params(&self) -> Vec<&Tensor> {
+        let mut v = self.wq.params();
+        v.extend(self.wk.params());
+        v.extend(self.wv.params());
+        v.extend(self.wo.params());
+        v.extend(self.mlp.params());
+        v
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        let mut v = self.wq.params_mut();
+        v.extend(self.wk.params_mut());
+        v.extend(self.wv.params_mut());
+        v.extend(self.wo.params_mut());
+        v.extend(self.mlp.params_mut());
+        v
+    }
+}
+
+/// The model: embeddings + blocks + tied softmax head, built from `qsim::nn`
+/// layers.
+pub struct GptModel {
+    pub cfg: GptConfig,
+    pub tok: Embedding,
+    pub pos: Embedding,
+    pub blocks: Vec<GptBlock>,
+    pub ln_f: LayerNorm,
+    /// Residual-branch scale 1/√(2·n_blocks) (GPT-2-style depth scaling,
+    /// applied through the tape's `scale` op).
+    res_scale: f32,
+}
+
+impl GptModel {
+    pub fn init(cfg: &GptConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed, LM_INIT_STREAM);
+        let d = cfg.dim;
+        let tok = Embedding::init(cfg.vocab, d, 0.05, cfg.fmt, &mut rng);
+        let pos = Embedding::init(cfg.seq_len, d, 0.05, cfg.fmt, &mut rng);
+        let blocks = (0..cfg.n_blocks)
+            .map(|_| GptBlock {
+                ln1: LayerNorm::new(),
+                wq: Linear::init(d, d, false, cfg.fmt, &mut rng),
+                wk: Linear::init(d, d, false, cfg.fmt, &mut rng),
+                wv: Linear::init(d, d, false, cfg.fmt, &mut rng),
+                wo: Linear::init(d, d, false, cfg.fmt, &mut rng),
+                ln2: LayerNorm::new(),
+                mlp: Mlp::init(d, cfg.hidden, d, cfg.fmt, &mut rng),
+            })
+            .collect();
+        Self {
+            cfg: cfg.clone(),
+            tok,
+            pos,
+            blocks,
+            ln_f: LayerNorm::new(),
+            res_scale: 1.0 / (2.0 * cfg.n_blocks.max(1) as f32).sqrt(),
+        }
+    }
+
+    /// Number of parameter tensors: tok + pos + 8 per block (wq/wk/wv/wo +
+    /// the MLP's two weight/bias pairs); the tied softmax head adds none.
+    pub fn num_tensors(cfg: &GptConfig) -> usize {
+        2 + 8 * cfg.n_blocks
+    }
+
+    /// Position ids 0..T repeated once per sequence.
+    fn pos_ids(&self, seqs: usize) -> Vec<usize> {
+        let t_len = self.cfg.seq_len;
+        let mut ids = Vec::with_capacity(seqs * t_len);
+        for _ in 0..seqs {
+            ids.extend(0..t_len);
+        }
+        ids
+    }
+
+    /// Build the training graph into a caller-owned tape; returns
+    /// (loss, params) with params ordered
+    /// [tok, pos, (wq, wk, wv, wo, fc1_w, fc1_b, fc2_w, fc2_b) × block].
+    pub fn forward_into(&self, t: &mut Tape, batch: &LmBatch) -> (Var, Vec<Var>) {
+        let t_len = self.cfg.seq_len;
+        assert_eq!(batch.tokens.len(), batch.targets.len());
+        assert!(t_len > 0 && batch.tokens.len() % t_len == 0, "partial sequence in batch");
+        let seqs = batch.tokens.len() / t_len;
+        let mut params = Vec::new();
+        let tokv = self.tok.bind(t, &mut params);
+        let x_tok = t.gather_rows(tokv, batch.tokens.clone());
+        let posv = self.pos.bind(t, &mut params);
+        let x_pos = t.gather_rows(posv, self.pos_ids(seqs));
+        let mut x = t.add(x_tok, x_pos);
+        for blk in &self.blocks {
+            let h = blk.ln1.forward(t, x);
+            let q = blk.wq.forward(t, h, &mut params);
+            let k = blk.wk.forward(t, h, &mut params);
+            let v = blk.wv.forward(t, h, &mut params);
+            let a = t.causal_attention(q, k, v, seqs);
+            let o = blk.wo.forward(t, a, &mut params);
+            let o = t.scale(o, self.res_scale);
+            x = t.add(x, o);
+            let h2 = blk.ln2.forward(t, x);
+            let m = blk.mlp.forward(t, h2, &mut params);
+            let m = t.scale(m, self.res_scale);
+            x = t.add(x, m);
+        }
+        let xf = self.ln_f.forward(t, x);
+        // tied softmax: the head reuses the token-embedding param node
+        let logits = t.matmul_nt(xf, tokv);
+        let loss = t.softmax_xent(logits, batch.targets.clone());
+        (loss, params)
+    }
+
+    /// Forward-only mean loss over one batch (all tensors as no-grad
+    /// inputs; same rounding policy as training forward).
+    pub fn eval_loss(&self, batch: &LmBatch, policy: QPolicy) -> f32 {
+        let mut t = Tape::new(policy);
+        let t_len = self.cfg.seq_len;
+        let seqs = batch.tokens.len() / t_len;
+        let tokv = t.input(self.tok.table.clone());
+        let x_tok = t.gather_rows(tokv, batch.tokens.clone());
+        let posv = t.input(self.pos.table.clone());
+        let x_pos = t.gather_rows(posv, self.pos_ids(seqs));
+        let mut x = t.add(x_tok, x_pos);
+        for blk in &self.blocks {
+            let h = blk.ln1.forward(&mut t, x);
+            let q = blk.wq.forward_frozen(&mut t, h);
+            let k = blk.wk.forward_frozen(&mut t, h);
+            let v = blk.wv.forward_frozen(&mut t, h);
+            let a = t.causal_attention(q, k, v, seqs);
+            let o = blk.wo.forward_frozen(&mut t, a);
+            let o = t.scale(o, self.res_scale);
+            x = t.add(x, o);
+            let h2 = blk.ln2.forward(&mut t, x);
+            let m = blk.mlp.forward_frozen(&mut t, h2);
+            let m = t.scale(m, self.res_scale);
+            x = t.add(x, m);
+        }
+        let xf = self.ln_f.forward(&mut t, x);
+        let logits = t.matmul_nt(xf, tokv);
+        let loss = t.softmax_xent(logits, batch.targets.clone());
+        t.value(loss).item()
+    }
+
+    /// All parameter tensors, in forward registration order.
+    pub fn param_tensors_mut(&mut self) -> Vec<&mut Tensor> {
+        let mut v = self.tok.params_mut();
+        v.extend(self.pos.params_mut());
+        for b in &mut self.blocks {
+            v.extend(b.params_mut());
+        }
+        v
+    }
+}
+
+/// Trainer combining the model, per-tensor optimizers and the corpus
+/// generators — the gpt-nano counterpart of `DlrmTrainer`.
+pub struct GptTrainer {
+    pub model: GptModel,
+    opts: Vec<Sgd>,
+    states: Vec<SgdState>,
+    gen: MarkovGen,
+    /// Dedicated eval stream forked from the seed: evaluation never
+    /// advances the training generator.
+    eval_gen: MarkovGen,
+    policy: QPolicy,
+    tape: Tape,
+    pool: Arc<Pool>,
+}
+
+impl GptTrainer {
+    pub fn new(cfg: GptConfig, mode: Mode) -> Self {
+        let pool = Arc::new(Pool::new(if cfg.backend == Backend::Fast {
+            cfg.intra_threads
+        } else {
+            1
+        }));
+        let model = GptModel::init(&cfg);
+        let n = GptModel::num_tensors(&cfg);
+        let opts: Vec<Sgd> = (0..n)
+            .map(|i| {
+                Sgd::new(mode, cfg.fmt, 0.0, 0.0, cfg.seed)
+                    .with_tensor_id(i as u64)
+                    .with_backend(cfg.backend)
+                    .with_pool(Arc::clone(&pool))
+            })
+            .collect();
+        let mut probe = GptModel::init(&cfg);
+        let states: Vec<SgdState> = probe
+            .param_tensors_mut()
+            .iter()
+            .zip(&opts)
+            .map(|(t, o)| o.init_state(t))
+            .collect();
+        let policy = if mode == Mode::Fp32 {
+            QPolicy::with_backend(FP32, cfg.backend)
+        } else {
+            QPolicy::with_backend(cfg.fmt, cfg.backend)
+        };
+        let gen = MarkovGen::new(&cfg);
+        let eval_gen = gen.fork(LM_EVAL_STREAM);
+        let tape = Tape::with_pool(policy, Arc::clone(&pool));
+        Self { model, opts, states, gen, eval_gen, policy, tape, pool }
+    }
+
+    /// Effective intra-step worker count.
+    pub fn intra_threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// One SGD step over a fresh synthetic batch; returns the train loss
+    /// and the merged update-cancellation stats (Figure-9-style telemetry).
+    pub fn step(&mut self, lr: f32) -> (f32, UpdateStats) {
+        let batch = self.gen.next_batch();
+        if self.policy.backend == Backend::Fast {
+            self.tape.reset();
+        } else {
+            self.tape = Tape::new(self.policy);
+        }
+        let (loss, param_vars) = self.model.forward_into(&mut self.tape, &batch);
+        self.tape.backward(loss);
+        let loss_val = self.tape.value(loss).item();
+        let mut stats = UpdateStats::default();
+        let tape = &self.tape;
+        let params = self.model.param_tensors_mut();
+        for (i, (w, var)) in params.into_iter().zip(&param_vars).enumerate() {
+            let zero_g;
+            let g = match tape.grad(*var) {
+                Some(g) => g,
+                // off-path parameters still take their (no-op) update so
+                // their dither-key step counters stay in lockstep
+                None => {
+                    zero_g = Tensor::zeros(w.rows, w.cols);
+                    &zero_g
+                }
+            };
+            stats.merge(self.opts[i].step(w, &mut self.states[i], g, lr));
+        }
+        (loss_val, stats)
+    }
+
+    /// Mean eval loss (natural log — perplexity is `exp`) over `n` fresh
+    /// batches from the dedicated eval stream.  `n == 0` is defined as 0.0.
+    pub fn eval(&mut self, n: usize) -> f32 {
+        if n == 0 {
+            return 0.0;
+        }
+        let mut acc = 0f64;
+        for _ in 0..n {
+            let batch = self.eval_gen.next_batch();
+            acc += self.model.eval_loss(&batch, self.policy) as f64;
+        }
+        (acc / n as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markov_gen_is_deterministic_and_in_range() {
+        let cfg = GptConfig { seed: 5, ..Default::default() };
+        let mut a = MarkovGen::new(&cfg);
+        let mut b = MarkovGen::new(&cfg);
+        let ba = a.next_batch();
+        let bb = b.next_batch();
+        assert_eq!(ba.tokens, bb.tokens);
+        assert_eq!(ba.targets, bb.targets);
+        assert_eq!(ba.tokens.len(), cfg.batch * cfg.seq_len);
+        assert!(ba.tokens.iter().all(|&t| t < cfg.vocab));
+        assert!(ba.targets.iter().all(|&t| t < cfg.vocab));
+        // targets are the next-token shift of the underlying walk
+        for s in 0..cfg.batch {
+            for i in 0..cfg.seq_len - 1 {
+                assert_eq!(
+                    ba.targets[s * cfg.seq_len + i],
+                    ba.tokens[s * cfg.seq_len + i + 1],
+                    "seq {s} pos {i}"
+                );
+            }
+        }
+        // a forked stream shares the language but draws different samples
+        let mut e = a.fork(0x1234);
+        let be = e.next_batch();
+        assert_ne!(be.tokens, ba.tokens);
+    }
+
+    #[test]
+    fn fp32_training_reduces_loss() {
+        let cfg = GptConfig { seed: 3, ..Default::default() };
+        let mut tr = GptTrainer::new(cfg, Mode::Fp32);
+        let first: f32 = (0..10).map(|_| tr.step(0.1).0).sum::<f32>() / 10.0;
+        for _ in 0..280 {
+            tr.step(0.1);
+        }
+        let last: f32 = (0..10).map(|_| tr.step(0.1).0).sum::<f32>() / 10.0;
+        assert!(last < first, "first={first} last={last}");
+        // and eval agrees (below the uniform-prediction bound ln V)
+        let el = tr.eval(4);
+        assert!(el < (tr.model.cfg.vocab as f32).ln(), "eval {el}");
+    }
+
+    /// Acceptance gate (tentpole): the gpt-nano sr16 trajectory is
+    /// bit-identical between the vectorized fast path and the scalar
+    /// reference backend over 50 steps.
+    #[test]
+    fn sr16_fifty_steps_bit_identical_across_backends() {
+        let mk = |backend| {
+            let cfg = GptConfig { seed: 11, backend, ..Default::default() };
+            GptTrainer::new(cfg, Mode::Sr16)
+        };
+        let mut fast = mk(Backend::Fast);
+        let mut reference = mk(Backend::Reference);
+        for step in 0..50 {
+            let (la, sa) = fast.step(0.1);
+            let (lb, sb) = reference.step(0.1);
+            assert_eq!(la.to_bits(), lb.to_bits(), "loss diverged at step {step}");
+            assert_eq!(sa, sb, "update stats diverged at step {step}");
+        }
+        let mut fm = fast.model;
+        let mut rm = reference.model;
+        for (pi, (wa, wb)) in fm
+            .param_tensors_mut()
+            .into_iter()
+            .zip(rm.param_tensors_mut())
+            .enumerate()
+        {
+            assert_eq!(wa.data.len(), wb.data.len());
+            for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "param {pi} elem {ei} after 50 steps");
+            }
+        }
+    }
+
+    /// Acceptance gate (tentpole): bit-identical sr16 training at 1 vs 4
+    /// intra-threads, sized so the attention/matmul fan-outs engage.
+    #[test]
+    fn sr16_training_bit_identical_across_thread_counts() {
+        let mk = |intra_threads| {
+            let cfg = GptConfig {
+                seed: 17,
+                vocab: 64,
+                seq_len: 16,
+                dim: 32,
+                hidden: 64,
+                batch: 8,
+                intra_threads,
+                ..Default::default()
+            };
+            GptTrainer::new(cfg, Mode::Sr16)
+        };
+        let mut base = mk(1);
+        let base_tel: Vec<(f32, UpdateStats)> = (0..15).map(|_| base.step(0.1)).collect();
+        let base_eval = base.eval(2);
+        for threads in [4usize] {
+            let mut tr = mk(threads);
+            assert_eq!(tr.intra_threads(), threads);
+            for (step, (want_l, want_s)) in base_tel.iter().enumerate() {
+                let (l, s) = tr.step(0.1);
+                assert_eq!(
+                    l.to_bits(),
+                    want_l.to_bits(),
+                    "loss diverged at step {step} with {threads} threads"
+                );
+                assert_eq!(s, *want_s, "stats diverged at step {step}, t={threads}");
+            }
+            assert_eq!(tr.eval(2).to_bits(), base_eval.to_bits(), "eval, t={threads}");
+            for (pi, (wa, wb)) in base
+                .model
+                .param_tensors_mut()
+                .into_iter()
+                .zip(tr.model.param_tensors_mut())
+                .enumerate()
+            {
+                for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "param {pi} elem {ei} diverged with {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Bugfix gate: eval cadence must not perturb the training trajectory
+    /// (the eval generator is a fork, not the training stream).
+    #[test]
+    fn eval_cadence_does_not_change_training_trajectory() {
+        let mk = || {
+            let cfg = GptConfig { seed: 23, ..Default::default() };
+            GptTrainer::new(cfg, Mode::Sr16)
+        };
+        let mut with_eval = mk();
+        let mut without = mk();
+        for step in 0..30 {
+            let (la, _) = with_eval.step(0.1);
+            let (lb, _) = without.step(0.1);
+            assert_eq!(la.to_bits(), lb.to_bits(), "step {step}");
+            if (step + 1) % 10 == 0 {
+                let el = with_eval.eval(2);
+                assert!(el.is_finite());
+            }
+        }
+        for (wa, wb) in with_eval
+            .model
+            .param_tensors_mut()
+            .into_iter()
+            .zip(without.model.param_tensors_mut())
+        {
+            for (x, y) in wa.data.iter().zip(wb.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(with_eval.eval(0), 0.0, "empty eval is defined");
+    }
+
+    #[test]
+    fn param_registration_order_matches_param_tensors() {
+        let cfg = GptConfig { seed: 1, ..Default::default() };
+        let mut model = GptModel::init(&cfg);
+        let gen_batch = MarkovGen::new(&cfg).next_batch();
+        let mut tape = Tape::new(QPolicy::exact());
+        let (_, vars) = model.forward_into(&mut tape, &gen_batch);
+        assert_eq!(vars.len(), GptModel::num_tensors(&cfg));
+        // every registered var's shape matches the owned tensor walk
+        for (var, tensor) in vars.iter().zip(model.param_tensors_mut()) {
+            let v = tape.value(*var);
+            assert_eq!((v.rows, v.cols), (tensor.rows, tensor.cols));
+        }
+    }
+}

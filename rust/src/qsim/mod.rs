@@ -2,14 +2,18 @@
 //!
 //! A small dense tensor library + reverse-mode autograd where **every
 //! operator accumulates in fp32 and rounds its output** onto a configured
-//! format, plus optimizers implementing the paper's weight-update policies.
-//! Powers the theory experiments (Figure 2 / Theorem 1), the per-layer
-//! cancellation telemetry (Figure 9), the sub-16-bit sweeps (Figure 10) and
-//! the native criterion benches; the seven deep-learning applications run
-//! through the PJRT runtime instead.
+//! format, a reusable layer library ([`nn`]), plus optimizers implementing
+//! the paper's weight-update policies.  Powers the theory experiments
+//! (Figure 2 / Theorem 1), the per-layer cancellation telemetry (Figure 9),
+//! the sub-16-bit sweeps (Figure 10), the native criterion benches and the
+//! bit-exact application scenarios — DLRM ([`dlrm`]), least-squares
+//! ([`lsq`]) and the tiny causal-transformer LM ([`gpt`]); the paper's
+//! seven full-scale applications run through the PJRT runtime instead.
 
 pub mod dlrm;
+pub mod gpt;
 pub mod lsq;
+pub mod nn;
 pub mod optim;
 pub mod pool;
 pub mod tape;
@@ -46,6 +50,7 @@ impl Backend {
 }
 
 pub use crate::precision::Mode;
+pub use nn::Module;
 pub use optim::{Sgd, SgdState, UpdateStats};
 pub use pool::Pool;
 pub use tape::{QPolicy, Tape, Var};

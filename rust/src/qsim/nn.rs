@@ -1,0 +1,308 @@
+//! `qsim::nn` — reusable layer library over the quantised tape.
+//!
+//! The layer logic that used to be hand-rolled inside `qsim::dlrm` (embedding
+//! gathers, Linear + bias, two-layer MLP blocks), extracted so every native
+//! application (DLRM, gpt-nano, future scenarios) composes the same audited
+//! building blocks instead of re-deriving them.
+//!
+//! ## Parameter registration contract
+//!
+//! Layers own their parameter tensors (kept in-format by the caller's
+//! optimizer, exactly like the DLRM fields they replace).  Every training
+//! `forward` registers its tensors on the tape via `param_from` and appends
+//! the resulting [`Var`]s to the caller's list **in a fixed order** — the
+//! same order [`Module::params`]/[`Module::params_mut`] walk.  That shared
+//! order is what maps each tensor to its optimizer slot and counter-keyed
+//! dither `tensor_id`, so it is part of the reproducibility contract:
+//! reordering registrations changes SR trajectories.
+//!
+//! `forward_frozen` variants build the same graph from no-grad `input`
+//! leaves (inference/eval paths — backward skips them entirely).
+
+use crate::precision::{round_nearest, Format};
+use crate::util::rng::Rng;
+
+use super::tape::{Tape, Var};
+use super::tensor::Tensor;
+
+/// Quantise a freshly-initialised parameter onto the storage format.
+fn quant(mut t: Tensor, fmt: Format) -> Tensor {
+    for x in &mut t.data {
+        *x = round_nearest(*x, fmt);
+    }
+    t
+}
+
+/// Anything owning parameter tensors in a fixed registration order.
+pub trait Module {
+    /// Parameter tensors, in the same order the forward pass registers them.
+    fn params(&self) -> Vec<&Tensor>;
+    /// Mutable view in the same order (optimizer updates).
+    fn params_mut(&mut self) -> Vec<&mut Tensor>;
+    /// Number of parameter tensors this module registers.
+    fn num_params(&self) -> usize {
+        self.params().len()
+    }
+}
+
+/// Fully-connected layer `x @ w (+ b)`; He-initialised, stored in-format.
+#[derive(Debug, Clone)]
+pub struct Linear {
+    pub w: Tensor,
+    pub b: Option<Tensor>,
+}
+
+impl Linear {
+    /// He init: `w ~ N(0, 2/in_dim)`, quantised onto `fmt`; bias zeros.
+    pub fn init(in_dim: usize, out_dim: usize, bias: bool, fmt: Format, rng: &mut Rng) -> Self {
+        let w = quant(
+            Tensor::randn(in_dim, out_dim, (2.0 / in_dim.max(1) as f32).sqrt(), rng),
+            fmt,
+        );
+        Self { w, b: bias.then(|| Tensor::zeros(1, out_dim)) }
+    }
+
+    /// Register params and build `x @ w (+ b)`; pushes `[w, (b)]` onto
+    /// `params` in that order.
+    pub fn forward(&self, t: &mut Tape, x: Var, params: &mut Vec<Var>) -> Var {
+        let wv = t.param_from(&self.w);
+        params.push(wv);
+        let y = t.matmul(x, wv);
+        match &self.b {
+            Some(b) => {
+                let bv = t.param_from(b);
+                params.push(bv);
+                t.add_row(y, bv)
+            }
+            None => y,
+        }
+    }
+
+    /// Same graph from no-grad inputs (inference/eval paths).
+    pub fn forward_frozen(&self, t: &mut Tape, x: Var) -> Var {
+        let wv = t.input(self.w.clone());
+        let y = t.matmul(x, wv);
+        match &self.b {
+            Some(b) => {
+                let bv = t.input(b.clone());
+                t.add_row(y, bv)
+            }
+            None => y,
+        }
+    }
+}
+
+impl Module for Linear {
+    fn params(&self) -> Vec<&Tensor> {
+        let mut v = vec![&self.w];
+        if let Some(b) = &self.b {
+            v.push(b);
+        }
+        v
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        let mut v = vec![&mut self.w];
+        if let Some(b) = &mut self.b {
+            v.push(b);
+        }
+        v
+    }
+}
+
+/// Embedding table: an `(n, dim)` tensor gathered by row index.
+#[derive(Debug, Clone)]
+pub struct Embedding {
+    pub table: Tensor,
+}
+
+impl Embedding {
+    /// Uniform init in `[-scale, scale)`, quantised onto `fmt`.
+    pub fn init(n: usize, dim: usize, scale: f32, fmt: Format, rng: &mut Rng) -> Self {
+        Self { table: quant(Tensor::rand_uniform(n, dim, -scale, scale, rng), fmt) }
+    }
+
+    /// Register the table and gather `idx` rows; pushes `[table]` onto
+    /// `params`.
+    pub fn forward(&self, t: &mut Tape, idx: Vec<usize>, params: &mut Vec<Var>) -> Var {
+        let tv = self.bind(t, params);
+        t.gather_rows(tv, idx)
+    }
+
+    /// Register the table *without* gathering — for weight tying, where the
+    /// caller reuses the returned [`Var`] for both input gathers and the
+    /// `matmul_nt` output projection (one shared parameter node, gradients
+    /// from both paths accumulate into it).
+    pub fn bind(&self, t: &mut Tape, params: &mut Vec<Var>) -> Var {
+        let tv = t.param_from(&self.table);
+        params.push(tv);
+        tv
+    }
+
+    /// Gather from a no-grad copy of the table (inference/eval paths).
+    pub fn forward_frozen(&self, t: &mut Tape, idx: Vec<usize>) -> Var {
+        let tv = t.input(self.table.clone());
+        t.gather_rows(tv, idx)
+    }
+}
+
+impl Module for Embedding {
+    fn params(&self) -> Vec<&Tensor> {
+        vec![&self.table]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        vec![&mut self.table]
+    }
+}
+
+/// Two-layer MLP block: `relu(x @ w1 + b1) @ w2 + b2`.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub fc1: Linear,
+    pub fc2: Linear,
+}
+
+impl Mlp {
+    pub fn init(in_dim: usize, hidden: usize, out_dim: usize, fmt: Format, rng: &mut Rng) -> Self {
+        Self {
+            fc1: Linear::init(in_dim, hidden, true, fmt, rng),
+            fc2: Linear::init(hidden, out_dim, true, fmt, rng),
+        }
+    }
+
+    /// Pushes `[fc1.w, fc1.b, fc2.w, fc2.b]` onto `params`.
+    pub fn forward(&self, t: &mut Tape, x: Var, params: &mut Vec<Var>) -> Var {
+        let h = self.fc1.forward(t, x, params);
+        let r = t.relu(h);
+        self.fc2.forward(t, r, params)
+    }
+
+    pub fn forward_frozen(&self, t: &mut Tape, x: Var) -> Var {
+        let h = self.fc1.forward_frozen(t, x);
+        let r = t.relu(h);
+        self.fc2.forward_frozen(t, r)
+    }
+}
+
+impl Module for Mlp {
+    fn params(&self) -> Vec<&Tensor> {
+        let mut v = self.fc1.params();
+        v.extend(self.fc2.params());
+        v
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Tensor> {
+        let mut v = self.fc1.params_mut();
+        v.extend(self.fc2.params_mut());
+        v
+    }
+}
+
+/// Non-affine row-wise layer normalisation.
+///
+/// No parameters: the paper's precision story lives in the *weight updates*,
+/// and a learnable gain/shift would just be another pair of in-format
+/// Linears — the plain normaliser keeps the op inventory minimal while
+/// giving the transformer its conditioning.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerNorm {
+    pub eps: f32,
+}
+
+impl LayerNorm {
+    pub fn new() -> Self {
+        Self { eps: 1e-5 }
+    }
+
+    pub fn forward(&self, t: &mut Tape, x: Var) -> Var {
+        t.layernorm(x, self.eps)
+    }
+}
+
+impl Default for LayerNorm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tape::QPolicy;
+    use super::*;
+    use crate::precision::BF16;
+
+    #[test]
+    fn linear_registers_params_in_order_and_computes() {
+        let mut rng = Rng::new(1, 0);
+        let lin = Linear::init(3, 2, true, BF16, &mut rng);
+        assert_eq!(lin.num_params(), 2);
+        let mut t = Tape::new(QPolicy::exact());
+        let x = t.input(Tensor::from_vec(1, 3, vec![1.0, 0.0, 0.0]));
+        let mut params = Vec::new();
+        let y = lin.forward(&mut t, x, &mut params);
+        assert_eq!(params.len(), 2);
+        // x = e0 ⇒ y = w row 0 (+ zero bias)
+        let out = t.value(y);
+        for (c, &o) in out.data.iter().enumerate() {
+            assert_eq!(o, lin.w.at(0, c));
+        }
+        // params are in-format
+        for &p in &lin.w.data {
+            assert_eq!(p, crate::precision::round_nearest(p, BF16));
+        }
+    }
+
+    #[test]
+    fn linear_without_bias_registers_one_tensor() {
+        let mut rng = Rng::new(2, 0);
+        let lin = Linear::init(4, 4, false, BF16, &mut rng);
+        assert_eq!(lin.num_params(), 1);
+        let mut t = Tape::new(QPolicy::exact());
+        let x = t.input(Tensor::from_vec(2, 4, vec![0.5; 8]));
+        let mut params = Vec::new();
+        let _ = lin.forward(&mut t, x, &mut params);
+        assert_eq!(params.len(), 1);
+    }
+
+    #[test]
+    fn embedding_gathers_rows_and_ties() {
+        let mut rng = Rng::new(3, 0);
+        let emb = Embedding::init(5, 3, 0.1, BF16, &mut rng);
+        let mut t = Tape::new(QPolicy::exact());
+        let mut params = Vec::new();
+        let tv = emb.bind(&mut t, &mut params);
+        let gathered = t.gather_rows(tv, vec![4, 0]);
+        let gv = t.value(gathered);
+        for c in 0..3 {
+            assert_eq!(gv.at(0, c), emb.table.at(4, c));
+            assert_eq!(gv.at(1, c), emb.table.at(0, c));
+        }
+        // tied use: the same var feeds an output projection; both paths'
+        // gradients land on one tensor
+        let logits = t.matmul_nt(gathered, tv);
+        let loss = t.softmax_xent(logits, vec![1, 2]);
+        t.backward(loss);
+        assert!(t.grad(tv).is_some());
+        assert_eq!(params.len(), 1);
+    }
+
+    #[test]
+    fn mlp_frozen_matches_trainable_forward() {
+        let mut rng = Rng::new(4, 0);
+        let mlp = Mlp::init(4, 8, 2, BF16, &mut rng);
+        assert_eq!(mlp.num_params(), 4);
+        let x = Tensor::randn(3, 4, 1.0, &mut rng);
+        let mut t1 = Tape::new(QPolicy::new(BF16));
+        let mut params = Vec::new();
+        let xv1 = t1.input_from(&x);
+        let y1 = mlp.forward(&mut t1, xv1, &mut params);
+        assert_eq!(params.len(), 4);
+        let mut t2 = Tape::new(QPolicy::new(BF16));
+        let xv2 = t2.input_from(&x);
+        let y2 = mlp.forward_frozen(&mut t2, xv2);
+        for (a, b) in t1.value(y1).data.iter().zip(&t2.value(y2).data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -29,6 +29,10 @@ use super::Backend;
 /// worker pool (memory-bound loops amortize the dispatch handshake slowly).
 const EW_PAR_MIN: usize = 8192;
 
+/// Minimum multiply-accumulate count (`seqs · T² · d`) before the fused
+/// attention kernel fans its sequences out across the worker pool.
+const ATTN_PAR_MIN: usize = 16_384;
+
 /// Rounding policy for forward/backward compute.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QPolicy {
@@ -104,6 +108,19 @@ enum Op {
     AddRow(Var, Var),
     /// Column-wise concatenation of same-row-count tensors (memory op).
     ConcatCols(Vec<Var>),
+    /// Multiply by a compile-time-constant scalar (residual-branch scaling).
+    Scale(Var, f32),
+    /// `a @ bᵀ` without materializing the transpose (tied softmax head).
+    MatMulNT(Var, Var),
+    /// Row-wise layer normalisation, non-affine: `(x - μ) / √(σ² + eps)`.
+    LayerNorm { x: Var, eps: f32 },
+    /// Fused single-head causal self-attention over `seqs` packed
+    /// sequences of `rows / seqs` tokens each; `probs` retains the
+    /// (unrounded, internal-fp32) post-softmax weights for backward.
+    CausalAttn { q: Var, k: Var, v: Var, seqs: usize, probs: Tensor },
+    /// Fused softmax + cross-entropy against per-row target classes
+    /// (mean over rows, natural log) -> scalar.
+    SoftmaxXent { logits: Var, targets: Vec<usize> },
 }
 
 // -- free-pool helpers (free functions so backward can hold disjoint field
@@ -153,6 +170,166 @@ fn pool_zip(
     t.cols = a.cols;
     t.data.extend(a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)));
     t
+}
+
+/// Partition `data` (a `rows × cols` buffer) into per-worker bands of whole
+/// rows and run `f(row0, band)` on each — the shared fan-out shape of every
+/// row-local kernel (layernorm, per-row losses).  The computation inside a
+/// row never depends on which band it landed in, so results are
+/// bit-identical at every thread count, including the sequential call.
+fn run_row_bands(
+    pool: &Pool,
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    debug_assert_eq!(data.len(), rows * cols);
+    let t = pool.threads().min(rows.max(1));
+    if t <= 1 || cols == 0 {
+        f(0, data);
+        return;
+    }
+    let per = (rows + t - 1) / t;
+    let mut parts: Vec<(usize, &mut [f32])> = Vec::with_capacity(t);
+    let mut rest = data;
+    let mut row0 = 0usize;
+    while row0 < rows {
+        let take = per.min(rows - row0);
+        let (band, tail) = std::mem::take(&mut rest).split_at_mut(take * cols);
+        parts.push((row0, band));
+        rest = tail;
+        row0 += take;
+    }
+    pool.run_parts(parts, |(row0, band)| f(*row0, &mut **band));
+}
+
+/// Row-wise layer normalisation of the `rows × cols` band `src` into `dst`:
+/// `y = (x - μ) / √(σ² + eps)`, with μ/σ² accumulated in f64 and the output
+/// rounded per the policy.  Entirely row-local.
+fn layernorm_rows(src: &[f32], cols: usize, eps: f32, dst: &mut [f32], policy: QPolicy) {
+    debug_assert_eq!(src.len(), dst.len());
+    if cols == 0 {
+        return;
+    }
+    for (srow, drow) in src.chunks_exact(cols).zip(dst.chunks_exact_mut(cols)) {
+        let n = cols as f64;
+        let mut mu = 0f64;
+        for &x in srow {
+            mu += x as f64;
+        }
+        mu /= n;
+        let mut var = 0f64;
+        for &x in srow {
+            let d = x as f64 - mu;
+            var += d * d;
+        }
+        var /= n;
+        let inv = 1.0 / (var + eps as f64).sqrt();
+        let (mu, inv) = (mu as f32, inv as f32);
+        for (d, &x) in drow.iter_mut().zip(srow) {
+            *d = (x - mu) * inv;
+        }
+        policy.q_slice(drow);
+    }
+}
+
+/// Forward causal attention for a band of sequences starting at `seq0`.
+///
+/// `q`/`k`/`v` are the full packed `(seqs·T, d)` buffers; `out` and `p` are
+/// this band's slices of the output and probability buffers (both
+/// zero-initialised).  For each row i of each sequence: scaled scores
+/// against keys j ≤ i, max-subtracted softmax (exp-sum in f64), then the
+/// probability-weighted value sum; the output row is rounded per the
+/// policy, the probabilities stay internal fp32 (retained for backward).
+/// Everything is sequence-local, so any sequence partition — including the
+/// pooled one — is bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn attn_forward_seqs(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t_len: usize,
+    d: usize,
+    alpha: f32,
+    seq0: usize,
+    out: &mut [f32],
+    p: &mut [f32],
+    policy: QPolicy,
+) {
+    if t_len == 0 || d == 0 {
+        return;
+    }
+    let nseq = out.len() / (t_len * d);
+    debug_assert_eq!(p.len(), nseq * t_len * t_len);
+    for si in 0..nseq {
+        let s = seq0 + si;
+        let obase = si * t_len * d;
+        let pbase = si * t_len * t_len;
+        for i in 0..t_len {
+            let qrow = &q[(s * t_len + i) * d..(s * t_len + i + 1) * d];
+            let prow = &mut p[pbase + i * t_len..pbase + (i + 1) * t_len];
+            // scaled masked scores into the prob row (reused as scratch)
+            let mut m = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let krow = &k[(s * t_len + j) * d..(s * t_len + j + 1) * d];
+                let mut sc = 0f32;
+                for (&a, &b) in qrow.iter().zip(krow) {
+                    sc += a * b;
+                }
+                sc *= alpha;
+                prow[j] = sc;
+                if sc > m {
+                    m = sc;
+                }
+            }
+            let mut denom = 0f64;
+            for pj in prow[..=i].iter_mut() {
+                let e = ((*pj - m) as f64).exp();
+                *pj = e as f32;
+                denom += e;
+            }
+            let inv = (1.0 / denom) as f32;
+            for pj in prow[..=i].iter_mut() {
+                *pj *= inv;
+            }
+            // columns j > i stay zero (the causal mask)
+            let orow = &mut out[obase + i * d..obase + (i + 1) * d];
+            for j in 0..=i {
+                let pij = prow[j];
+                if pij == 0.0 {
+                    continue;
+                }
+                let vrow = &v[(s * t_len + j) * d..(s * t_len + j + 1) * d];
+                for (o, &b) in orow.iter_mut().zip(vrow) {
+                    *o += pij * b;
+                }
+            }
+            policy.q_slice(orow);
+        }
+    }
+}
+
+/// Per-row stable cross-entropy: `lse(z) - z[target]`, exp-sum in f64.
+///
+/// Degenerate rows (a ±inf max, i.e. a diverged run) report NaN — the loss
+/// has no finite value and must *look* diverged downstream; masking it
+/// with 0.0 would make a blown-up `standard16` run score as perfect.
+fn xent_row(row: &[f32], target: usize) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for &z in row {
+        if z > m {
+            m = z;
+        }
+    }
+    if !m.is_finite() {
+        return f32::NAN;
+    }
+    let mut sum = 0f64;
+    for &z in row {
+        sum += ((z - m) as f64).exp();
+    }
+    (m as f64 + sum.ln()) as f32 - row[target]
 }
 
 /// Accumulate cotangent `g` into node `v`'s gradient (rounding at the
@@ -228,7 +405,15 @@ impl Tape {
     /// must be rebuilt from scratch, but its allocations are served from
     /// the pool instead of the allocator.
     pub fn reset(&mut self) {
-        self.ops.clear();
+        // recover op-held tensor storage too (attention probabilities, BCE
+        // labels), so fused ops stay allocation-free in steady state
+        for op in self.ops.drain(..) {
+            match op {
+                Op::BceLoss { labels, .. } => self.free.push(labels.data),
+                Op::CausalAttn { probs, .. } => self.free.push(probs.data),
+                _ => {}
+            }
+        }
         for t in self.values.drain(..) {
             self.free.push(t.data);
         }
@@ -447,6 +632,200 @@ impl Tape {
         self.push(Op::Embed { table, idx }, out, true)
     }
 
+    /// Row gather from any tape node — the generalized form of
+    /// [`Tape::embed`] (same op, same scatter-add backward): selects rows of
+    /// an activation or table by index, e.g. token/position lookups or
+    /// picking per-sequence rows out of a packed batch.
+    pub fn gather_rows(&mut self, x: Var, idx: Vec<usize>) -> Var {
+        self.embed(x, idx)
+    }
+
+    /// Multiply by a constant scalar (e.g. the GPT residual-branch scale
+    /// 1/√(2·depth)).  Rounds its output like any elementwise op; the
+    /// constant itself is exact.
+    pub fn scale(&mut self, a: Var, c: f32) -> Var {
+        self.unary(a, Op::Scale(a, c), move |x| c * x)
+    }
+
+    /// `a @ bᵀ` without materializing a transposed copy — the tied-softmax
+    /// output projection (`logits = x @ embedᵀ`).  Backward accumulates
+    /// into *both* operands, so tying the embedding table to the output
+    /// head is a single shared parameter node.
+    pub fn matmul_nt(&mut self, a: Var, b: Var) -> Var {
+        let mut out = Tensor { rows: 0, cols: 0, data: self.take_buf() };
+        match self.policy.backend {
+            Backend::Fast => {
+                self.values[a.0].matmul_nt_into_pooled(&self.values[b.0], &mut out, &self.pool);
+            }
+            Backend::Reference => {
+                self.values[a.0].matmul_nt_into(&self.values[b.0], &mut out);
+            }
+        }
+        self.policy.q_slice(&mut out.data);
+        self.push(Op::MatMulNT(a, b), out, true)
+    }
+
+    /// Row-wise layer normalisation (non-affine): `(x - μ) / √(σ² + eps)`
+    /// per row, one output rounding.  Row-local, fanned out across the pool
+    /// for large activations; bit-identical at every thread count.
+    pub fn layernorm(&mut self, a: Var, eps: f32) -> Var {
+        let mut data = self.take_buf();
+        let policy = self.policy;
+        let (rows, cols);
+        {
+            let av = &self.values[a.0];
+            rows = av.rows;
+            cols = av.cols;
+            data.resize(av.data.len(), 0.0);
+            let src = &av.data;
+            if policy.backend == Backend::Fast
+                && self.pool.threads() > 1
+                && av.data.len() >= EW_PAR_MIN
+            {
+                run_row_bands(&self.pool, &mut data, rows, cols, |row0, band| {
+                    layernorm_rows(
+                        &src[row0 * cols..row0 * cols + band.len()],
+                        cols,
+                        eps,
+                        band,
+                        policy,
+                    );
+                });
+            } else {
+                layernorm_rows(src, cols, eps, &mut data, policy);
+            }
+        }
+        let out = Tensor { rows, cols, data };
+        self.push(Op::LayerNorm { x: a, eps }, out, true)
+    }
+
+    /// Fused single-head causal self-attention over `seqs` packed
+    /// sequences.
+    ///
+    /// `q`/`k`/`v` are `(seqs·T, d)` row-major with sequence `s` occupying
+    /// rows `s·T .. (s+1)·T`.  Scores are scaled by 1/√d, masked to j ≤ i,
+    /// softmax-normalised (internal fp32, max-subtracted) and applied to
+    /// `v`; only the output is rounded — one rounding per operator, like
+    /// the other fused ops.  The probability matrix is retained in the op
+    /// for backward (storage drawn from the tape's buffer pool and
+    /// recovered by [`Tape::reset`]).  Sequence-local, so the pooled
+    /// fan-out is bit-identical at every thread count.
+    pub fn causal_attention(&mut self, q: Var, k: Var, v: Var, seqs: usize) -> Var {
+        let (rows, d) = {
+            let (qv, kv, vv) = (&self.values[q.0], &self.values[k.0], &self.values[v.0]);
+            assert_eq!(qv.rows, kv.rows, "attention q/k row mismatch");
+            assert_eq!(qv.rows, vv.rows, "attention q/v row mismatch");
+            assert_eq!(qv.cols, kv.cols, "attention q/k width mismatch");
+            assert_eq!(qv.cols, vv.cols, "attention q/v width mismatch");
+            (qv.rows, qv.cols)
+        };
+        assert!(seqs > 0 && rows % seqs == 0, "rows must pack whole sequences");
+        let t_len = rows / seqs;
+        let alpha = 1.0 / (d.max(1) as f32).sqrt();
+        let policy = self.policy;
+        let mut data = self.take_buf();
+        data.resize(rows * d, 0.0);
+        // prob storage comes from (and returns to, via reset) the pool —
+        // take_buf clears, so the resize zero-fills every element
+        let mut probs = Tensor { rows, cols: t_len, data: self.take_buf() };
+        probs.data.resize(rows * t_len, 0.0);
+        {
+            let (qd, kd, vd) =
+                (&self.values[q.0].data, &self.values[k.0].data, &self.values[v.0].data);
+            let engage = policy.backend == Backend::Fast
+                && self.pool.threads() > 1
+                && seqs >= 2
+                && seqs * t_len * t_len * d >= ATTN_PAR_MIN;
+            if engage {
+                // matching per-sequence bands of the output and prob buffers
+                struct Band<'a> {
+                    seq0: usize,
+                    out: &'a mut [f32],
+                    p: &'a mut [f32],
+                }
+                let t = self.pool.threads().min(seqs);
+                let per = (seqs + t - 1) / t;
+                let mut parts: Vec<Band> = Vec::with_capacity(t);
+                let mut orest = data.as_mut_slice();
+                let mut prest = probs.data.as_mut_slice();
+                let mut s0 = 0usize;
+                while s0 < seqs {
+                    let take = per.min(seqs - s0);
+                    let (ob, otail) =
+                        std::mem::take(&mut orest).split_at_mut(take * t_len * d);
+                    let (pb, ptail) =
+                        std::mem::take(&mut prest).split_at_mut(take * t_len * t_len);
+                    parts.push(Band { seq0: s0, out: ob, p: pb });
+                    orest = otail;
+                    prest = ptail;
+                    s0 += take;
+                }
+                self.pool.run_parts(parts, |b| {
+                    attn_forward_seqs(
+                        qd,
+                        kd,
+                        vd,
+                        t_len,
+                        d,
+                        alpha,
+                        b.seq0,
+                        &mut *b.out,
+                        &mut *b.p,
+                        policy,
+                    );
+                });
+            } else {
+                attn_forward_seqs(
+                    qd, kd, vd, t_len, d, alpha, 0, &mut data, &mut probs.data, policy,
+                );
+            }
+        }
+        let out = Tensor { rows, cols: d, data };
+        self.push(Op::CausalAttn { q, k, v, seqs, probs }, out, true)
+    }
+
+    /// Fused softmax + cross-entropy against per-row target class indices
+    /// (mean over rows, natural log — perplexity is `exp(loss)`), stabilised
+    /// by max-subtraction with the exp-sum in f64.  Per-row losses are
+    /// row-local (pooled for large logit blocks); the cross-row mean is one
+    /// sequential f64 reduction in row order, so the scalar output is
+    /// bit-identical at every thread count.
+    pub fn softmax_xent(&mut self, logits: Var, targets: Vec<usize>) -> Var {
+        let mut rowloss = self.take_buf();
+        let mean = {
+            let lv = &self.values[logits.0];
+            assert_eq!(lv.rows, targets.len(), "one target per row");
+            assert!(lv.cols > 0, "softmax_xent over empty rows");
+            rowloss.resize(lv.rows, 0.0);
+            let cols = lv.cols;
+            let src = &lv.data;
+            let tg = &targets;
+            if self.policy.backend == Backend::Fast
+                && self.pool.threads() > 1
+                && lv.data.len() >= EW_PAR_MIN
+            {
+                // one slot per row: slot r of `rowloss` is row r's loss
+                run_row_bands(&self.pool, &mut rowloss, lv.rows, 1, |row0, band| {
+                    for (ri, slot) in band.iter_mut().enumerate() {
+                        let r = row0 + ri;
+                        *slot = xent_row(&src[r * cols..(r + 1) * cols], tg[r]);
+                    }
+                });
+            } else {
+                for (r, slot) in rowloss.iter_mut().enumerate() {
+                    *slot = xent_row(&src[r * cols..(r + 1) * cols], tg[r]);
+                }
+            }
+            let mut acc = 0f64;
+            for &l in rowloss.iter() {
+                acc += l as f64;
+            }
+            (acc / lv.rows.max(1) as f64) as f32
+        };
+        self.free.push(std::mem::take(&mut rowloss));
+        self.push_scalar(Op::SoftmaxXent { logits, targets }, mean)
+    }
+
     /// Column-wise concat (a memory op: values pass through unrounded).
     pub fn concat_cols(&mut self, parts: Vec<Var>) -> Var {
         assert!(!parts.is_empty(), "concat_cols: need at least one part");
@@ -661,6 +1040,186 @@ impl Tape {
                     });
                     accum(policy, rg, grads, free, logits, dl);
                 }
+                Op::Scale(a, c) => {
+                    let (a, c) = (*a, *c);
+                    let ga = pool_map(free, &g, |x| x * c);
+                    accum(policy, rg, grads, free, a, ga);
+                }
+                Op::MatMulNT(a, b) => {
+                    // out = a @ bᵀ  ⇒  da = g @ b,  db = gᵀ @ a
+                    let (a, b) = (*a, *b);
+                    match policy.backend {
+                        Backend::Fast => {
+                            if rg[a.0] {
+                                let mut da = pool_tensor(free);
+                                g.matmul_into_pooled(&values[b.0], &mut da, None, pool);
+                                accum(policy, rg, grads, free, a, da);
+                            }
+                            if rg[b.0] {
+                                let mut gt = pool_tensor(free);
+                                g.transpose_into(&mut gt);
+                                let mut db = pool_tensor(free);
+                                gt.matmul_into_pooled(&values[a.0], &mut db, None, pool);
+                                free.push(gt.data);
+                                accum(policy, rg, grads, free, b, db);
+                            }
+                        }
+                        Backend::Reference => {
+                            let da = g.matmul_reference(&values[b.0]);
+                            let db = g.transpose().matmul_reference(&values[a.0]);
+                            accum(policy, rg, grads, free, a, da);
+                            accum(policy, rg, grads, free, b, db);
+                        }
+                    }
+                }
+                Op::LayerNorm { x, eps } => {
+                    // y = x̂ / √(σ²+eps); dx = inv·(g − mean(g) − x̂·mean(g⊙x̂))
+                    // with μ/σ²/x̂ recomputed from the input (the stored
+                    // output is rounded — internals stay fp32, like the
+                    // other fused ops).  Row-local and cheap: sequential.
+                    let (x, eps) = (*x, *eps);
+                    let av = &values[x.0];
+                    let cols = av.cols;
+                    let mut dx = pool_zeros(free, av.rows, cols);
+                    if cols > 0 {
+                        for ((srow, grow), drow) in av
+                            .data
+                            .chunks_exact(cols)
+                            .zip(g.data.chunks_exact(cols))
+                            .zip(dx.data.chunks_exact_mut(cols))
+                        {
+                            let n = cols as f64;
+                            let mut mu = 0f64;
+                            for &v in srow {
+                                mu += v as f64;
+                            }
+                            mu /= n;
+                            let mut var = 0f64;
+                            for &v in srow {
+                                let dv = v as f64 - mu;
+                                var += dv * dv;
+                            }
+                            var /= n;
+                            let inv = 1.0 / (var + eps as f64).sqrt();
+                            let mut gsum = 0f64;
+                            let mut gxsum = 0f64;
+                            for (&gg, &v) in grow.iter().zip(srow) {
+                                let xh = (v as f64 - mu) * inv;
+                                gsum += gg as f64;
+                                gxsum += gg as f64 * xh;
+                            }
+                            let gmean = gsum / n;
+                            let gxmean = gxsum / n;
+                            for ((dxv, &gg), &v) in drow.iter_mut().zip(grow).zip(srow) {
+                                let xh = (v as f64 - mu) * inv;
+                                *dxv = (inv * (gg as f64 - gmean - xh * gxmean)) as f32;
+                            }
+                        }
+                    }
+                    accum(policy, rg, grads, free, x, dx);
+                }
+                Op::CausalAttn { q, k, v, seqs, probs } => {
+                    // dV = Pᵀ dO;  dP = dO Vᵀ;  dS = P⊙(dP − rowdot(dP,P));
+                    // dQ = α dS K;  dK = α dSᵀ Q — all per sequence, using
+                    // the retained (internal-fp32) probabilities.
+                    let (q, k, v, seqs) = (*q, *k, *v, *seqs);
+                    let rows = values[q.0].rows;
+                    let d = values[q.0].cols;
+                    let t_len = if seqs == 0 { 0 } else { rows / seqs };
+                    let alpha = 1.0 / (d.max(1) as f32).sqrt();
+                    let mut dq = pool_zeros(free, rows, d);
+                    let mut dk = pool_zeros(free, rows, d);
+                    let mut dv = pool_zeros(free, rows, d);
+                    let mut dprow = free.pop().unwrap_or_default();
+                    dprow.clear();
+                    dprow.resize(t_len, 0.0);
+                    {
+                        let qd = &values[q.0].data;
+                        let kd = &values[k.0].data;
+                        let vd = &values[v.0].data;
+                        let pd = &probs.data;
+                        let gd = &g.data;
+                        for s in 0..seqs {
+                            for i in 0..t_len {
+                                let ri = s * t_len + i;
+                                let grow = &gd[ri * d..(ri + 1) * d];
+                                let prow = &pd[ri * t_len..(ri + 1) * t_len];
+                                let mut row_dot = 0f64;
+                                for j in 0..=i {
+                                    let rj = s * t_len + j;
+                                    let pij = prow[j];
+                                    let vrow = &vd[rj * d..(rj + 1) * d];
+                                    let dvrow = &mut dv.data[rj * d..(rj + 1) * d];
+                                    let mut dp = 0f32;
+                                    for ((&gg, &bv), dvx) in
+                                        grow.iter().zip(vrow).zip(dvrow.iter_mut())
+                                    {
+                                        dp += gg * bv;
+                                        *dvx += pij * gg;
+                                    }
+                                    dprow[j] = dp;
+                                    row_dot += (dp * pij) as f64;
+                                }
+                                let rd = row_dot as f32;
+                                let qrow = &qd[ri * d..(ri + 1) * d];
+                                for j in 0..=i {
+                                    let rj = s * t_len + j;
+                                    let ds = prow[j] * (dprow[j] - rd) * alpha;
+                                    if ds == 0.0 {
+                                        continue;
+                                    }
+                                    let krow = &kd[rj * d..(rj + 1) * d];
+                                    let dqrow = &mut dq.data[ri * d..(ri + 1) * d];
+                                    for (dqx, &kx) in dqrow.iter_mut().zip(krow) {
+                                        *dqx += ds * kx;
+                                    }
+                                    let dkrow = &mut dk.data[rj * d..(rj + 1) * d];
+                                    for (dkx, &qx) in dkrow.iter_mut().zip(qrow) {
+                                        *dkx += ds * qx;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    free.push(dprow);
+                    accum(policy, rg, grads, free, q, dq);
+                    accum(policy, rg, grads, free, k, dk);
+                    accum(policy, rg, grads, free, v, dv);
+                }
+                Op::SoftmaxXent { logits, targets } => {
+                    // dz = seed · (softmax(z) − onehot(target)) / rows, with
+                    // the softmax recomputed from the (fp32) logits.
+                    let logits = *logits;
+                    let lv = &values[logits.0];
+                    let (rows, cols) = (lv.rows, lv.cols);
+                    let seed = g.item() / rows.max(1) as f32;
+                    let mut dz = pool_zeros(free, rows, cols);
+                    for r in 0..rows {
+                        let zrow = &lv.data[r * cols..(r + 1) * cols];
+                        let drow = &mut dz.data[r * cols..(r + 1) * cols];
+                        let mut m = f32::NEG_INFINITY;
+                        for &z in zrow {
+                            if z > m {
+                                m = z;
+                            }
+                        }
+                        if !m.is_finite() {
+                            // degenerate (±inf) row: its loss is already
+                            // NaN — no usable gradient, contribute none
+                            continue;
+                        }
+                        let mut sum = 0f64;
+                        for &z in zrow {
+                            sum += ((z - m) as f64).exp();
+                        }
+                        let inv = 1.0 / sum;
+                        for (dx, &z) in drow.iter_mut().zip(zrow) {
+                            *dx = seed * ((((z - m) as f64).exp() * inv) as f32);
+                        }
+                        drow[targets[r]] -= seed;
+                    }
+                    accum(policy, rg, grads, free, logits, dz);
+                }
             }
             grads[i] = Some(g);
         }
@@ -874,5 +1433,322 @@ mod tests {
     fn concat_cols_rejects_empty() {
         let mut t = Tape::new(QPolicy::exact());
         let _ = t.concat_cols(vec![]);
+    }
+
+    #[test]
+    fn scale_grad_matches_finite_difference() {
+        let xs = vec![0.4f32, -1.2, 0.7, 2.1];
+        let f = |w: &[f32]| {
+            let mut t = Tape::new(QPolicy::exact());
+            let wv = t.param(Tensor::vector(w.to_vec()));
+            let y = t.scale(wv, 1.7);
+            let s = t.tanh(y);
+            let m = t.mean_all(s);
+            t.value(m).item()
+        };
+        let mut t = Tape::new(QPolicy::exact());
+        let wv = t.param(Tensor::vector(xs.clone()));
+        let y = t.scale(wv, 1.7);
+        let s = t.tanh(y);
+        let m = t.mean_all(s);
+        t.backward(m);
+        let g = t.grad(wv).unwrap().data.clone();
+        fd_check(f, &xs, &g, 2e-2);
+    }
+
+    #[test]
+    fn layernorm_grad_matches_finite_difference() {
+        let xs = vec![0.5f32, -0.3, 1.2, 0.8, -1.1, 0.05];
+        let f = |w: &[f32]| {
+            let mut t = Tape::new(QPolicy::exact());
+            let wv = t.param(Tensor::from_vec(2, 3, w.to_vec()));
+            let y = t.layernorm(wv, 1e-5);
+            let s = t.sigmoid(y);
+            let m = t.mean_all(s);
+            t.value(m).item()
+        };
+        let mut t = Tape::new(QPolicy::exact());
+        let wv = t.param(Tensor::from_vec(2, 3, xs.clone()));
+        let y = t.layernorm(wv, 1e-5);
+        let s = t.sigmoid(y);
+        let m = t.mean_all(s);
+        t.backward(m);
+        let g = t.grad(wv).unwrap().data.clone();
+        fd_check(f, &xs, &g, 2e-2);
+    }
+
+    #[test]
+    fn layernorm_rows_are_normalised() {
+        let mut t = Tape::new(QPolicy::exact());
+        let x = t.input(Tensor::from_vec(2, 4, vec![1.0, 2.0, 3.0, 4.0, -5.0, 0.0, 5.0, 10.0]));
+        let y = t.layernorm(x, 1e-6);
+        for row in t.value(y).data.chunks_exact(4) {
+            let mu: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 4.0;
+            assert!(mu.abs() < 1e-5, "row mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "row var {var}");
+        }
+    }
+
+    #[test]
+    fn softmax_xent_grad_matches_finite_difference() {
+        let xs = vec![0.3f32, -0.7, 1.2, 0.5, -0.2, 0.9];
+        let targets = vec![2usize, 0];
+        let f = |w: &[f32]| {
+            let mut t = Tape::new(QPolicy::exact());
+            let wv = t.param(Tensor::from_vec(2, 3, w.to_vec()));
+            let l = t.softmax_xent(wv, vec![2, 0]);
+            t.value(l).item()
+        };
+        let mut t = Tape::new(QPolicy::exact());
+        let wv = t.param(Tensor::from_vec(2, 3, xs.clone()));
+        let l = t.softmax_xent(wv, targets);
+        t.backward(l);
+        let g = t.grad(wv).unwrap().data.clone();
+        // each row of dz sums to ~0 (softmax minus onehot)
+        for row in g.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-5, "row grad sum {s}");
+        }
+        fd_check(f, &xs, &g, 1e-2);
+    }
+
+    #[test]
+    fn softmax_xent_matches_log_likelihood() {
+        // two rows with known softmax: loss = mean(-ln p[target])
+        let mut t = Tape::new(QPolicy::exact());
+        let z = t.input(Tensor::from_vec(2, 2, vec![0.0, 0.0, 2.0, 0.0]));
+        let l = t.softmax_xent(z, vec![1, 0]);
+        let want = (2f64.ln() + (1.0 + (-2f64).exp()).ln()) / 2.0;
+        assert!((t.value(l).item() as f64 - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn matmul_nt_grad_matches_finite_difference() {
+        let a0 = vec![0.5f32, -0.2, 0.8, 0.1, 0.9, -0.4];
+        let b0 = vec![0.3f32, 0.7, -0.5, 0.2, 0.6, -0.8];
+        // grad wrt a (b as input), then wrt b (a as input)
+        let fa = |w: &[f32]| {
+            let mut t = Tape::new(QPolicy::exact());
+            let av = t.param(Tensor::from_vec(2, 3, w.to_vec()));
+            let bv = t.input(Tensor::from_vec(2, 3, vec![0.3, 0.7, -0.5, 0.2, 0.6, -0.8]));
+            let y = t.matmul_nt(av, bv);
+            let s = t.sigmoid(y);
+            let m = t.mean_all(s);
+            t.value(m).item()
+        };
+        let mut t = Tape::new(QPolicy::exact());
+        let av = t.param(Tensor::from_vec(2, 3, a0.clone()));
+        let bv = t.param(Tensor::from_vec(2, 3, b0.clone()));
+        let y = t.matmul_nt(av, bv);
+        let s = t.sigmoid(y);
+        let m = t.mean_all(s);
+        t.backward(m);
+        let ga = t.grad(av).unwrap().data.clone();
+        let gb = t.grad(bv).unwrap().data.clone();
+        fd_check(fa, &a0, &ga, 2e-2);
+        let fb = |w: &[f32]| {
+            let mut t = Tape::new(QPolicy::exact());
+            let av = t.input(Tensor::from_vec(2, 3, vec![0.5, -0.2, 0.8, 0.1, 0.9, -0.4]));
+            let bv = t.param(Tensor::from_vec(2, 3, w.to_vec()));
+            let y = t.matmul_nt(av, bv);
+            let s = t.sigmoid(y);
+            let m = t.mean_all(s);
+            t.value(m).item()
+        };
+        fd_check(fb, &b0, &gb, 2e-2);
+    }
+
+    #[test]
+    fn gather_rows_grad_scatters_like_embed() {
+        let mut t = Tape::new(QPolicy::exact());
+        let x = t.param(Tensor::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        let gsel = t.gather_rows(x, vec![2, 0, 2]);
+        let m = t.mean_all(gsel);
+        t.backward(m);
+        let g = t.grad(x).unwrap();
+        assert_eq!(g.at(2, 0), 2.0 / 6.0);
+        assert_eq!(g.at(0, 1), 1.0 / 6.0);
+        assert_eq!(g.at(1, 0), 0.0);
+    }
+
+    /// Attention graph builder for the FD checks: which of q/k/v is the
+    /// parameter is selected by `which` (0/1/2); the other two are inputs.
+    fn attn_loss(which: usize, w: &[f32], others: [&[f32]; 2]) -> (f32, Option<Vec<f32>>) {
+        let mut t = Tape::new(QPolicy::exact());
+        let shape = |data: &[f32]| Tensor::from_vec(6, 2, data.to_vec());
+        let mut mk = |is_param: bool, data: &[f32]| {
+            if is_param {
+                t.param(shape(data))
+            } else {
+                t.input(shape(data))
+            }
+        };
+        let slots: Vec<Var> = match which {
+            0 => vec![mk(true, w), mk(false, others[0]), mk(false, others[1])],
+            1 => vec![mk(false, others[0]), mk(true, w), mk(false, others[1])],
+            _ => vec![mk(false, others[0]), mk(false, others[1]), mk(true, w)],
+        };
+        // two sequences of three tokens, head dim 2
+        let a = t.causal_attention(slots[0], slots[1], slots[2], 2);
+        let s = t.tanh(a);
+        let m = t.mean_all(s);
+        t.backward(m);
+        let pv = slots[which];
+        let grad = t.grad(pv).map(|g| g.data.clone());
+        (t.value(m).item(), grad)
+    }
+
+    #[test]
+    fn causal_attention_grad_matches_finite_difference() {
+        let q0: Vec<f32> = vec![0.5, -0.2, 0.8, 0.1, -0.6, 0.9, 0.2, 0.4, -0.3, 0.7, 0.1, -0.5];
+        let k0: Vec<f32> = vec![0.3, 0.6, -0.4, 0.8, 0.2, -0.7, 0.5, 0.1, 0.9, -0.2, -0.6, 0.3];
+        let v0: Vec<f32> = vec![-0.5, 0.2, 0.7, -0.1, 0.4, 0.8, -0.9, 0.3, 0.6, 0.5, -0.2, 0.1];
+        let sets: [(usize, &[f32], [&[f32]; 2]); 3] = [
+            (0, &q0, [&k0, &v0]),
+            (1, &k0, [&q0, &v0]),
+            (2, &v0, [&q0, &k0]),
+        ];
+        for (which, w, others) in sets {
+            let g = attn_loss(which, w, others).1.expect("param collects grad");
+            let f = |x: &[f32]| attn_loss(which, x, others).0;
+            fd_check(f, w, &g, 2e-2);
+        }
+    }
+
+    #[test]
+    fn causal_attention_is_causal() {
+        // perturbing a later token's k/v must not change earlier outputs
+        let mut rng = Rng::new(0xA77, 0);
+        let q = Tensor::randn(4, 3, 1.0, &mut rng);
+        let k = Tensor::randn(4, 3, 1.0, &mut rng);
+        let v = Tensor::randn(4, 3, 1.0, &mut rng);
+        let run = |k: &Tensor, v: &Tensor| {
+            let mut t = Tape::new(QPolicy::exact());
+            let qv = t.input(q.clone());
+            let kv = t.input(k.clone());
+            let vv = t.input(v.clone());
+            let a = t.causal_attention(qv, kv, vv, 1);
+            t.value(a).data.clone()
+        };
+        let base = run(&k, &v);
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for c in 0..3 {
+            *k2.at_mut(3, c) += 5.0;
+            *v2.at_mut(3, c) -= 3.0;
+        }
+        let poked = run(&k2, &v2);
+        // rows 0..3 (tokens before the perturbed one) are bit-identical
+        for i in 0..9 {
+            assert_eq!(base[i].to_bits(), poked[i].to_bits(), "elem {i}");
+        }
+        // the final row must actually depend on its own k/v
+        assert!(base[9..].iter().zip(&poked[9..]).any(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn causal_attention_rows_are_convex_weights() {
+        // with v = identity-ish rows, each output row is a convex combination
+        let mut t = Tape::new(QPolicy::exact());
+        let q = t.input(Tensor::from_vec(3, 2, vec![0.1, 0.2, -0.3, 0.4, 0.5, -0.6]));
+        let k = t.input(Tensor::from_vec(3, 2, vec![0.7, -0.1, 0.2, 0.3, -0.4, 0.5]));
+        let v = t.input(Tensor::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]));
+        let a = t.causal_attention(q, k, v, 1);
+        let out = t.value(a);
+        // row 0 attends only to token 0
+        assert!((out.at(0, 0) - 1.0).abs() < 1e-6);
+        assert!(out.at(0, 1).abs() < 1e-6);
+        // later rows: weights sum to 1, so col sums equal the row sum of v's
+        for i in 1..3 {
+            let s = out.at(i, 0) + out.at(i, 1);
+            assert!(s > 0.99 && s < 2.01, "row {i} sum {s}");
+        }
+    }
+
+    /// Extends every FD check above to `Backend::Reference`: under the
+    /// exact (fp32) policy both backends must produce bit-identical values
+    /// AND gradients for each new op, so the finite-difference validation
+    /// of the Fast path carries over verbatim.
+    #[test]
+    fn new_op_grads_bit_identical_on_reference_backend() {
+        let mut rng = Rng::new(0xFD2, 0);
+        let x = Tensor::randn(6, 4, 1.0, &mut rng);
+        let emb = Tensor::randn(9, 4, 0.5, &mut rng);
+        let targets = vec![0usize, 3, 8, 1, 5, 2];
+        let run = |backend| {
+            let mut t = Tape::new(QPolicy::with_backend(FP32, backend));
+            let xv = t.param(x.clone());
+            let ln = t.layernorm(xv, 1e-5);
+            let sc = t.scale(ln, 1.3);
+            let gsel = t.gather_rows(sc, vec![1, 0, 3, 2, 5, 4]);
+            let a = t.causal_attention(gsel, sc, ln, 2);
+            let ev = t.param(emb.clone());
+            let logits = t.matmul_nt(a, ev);
+            let loss = t.softmax_xent(logits, targets.clone());
+            t.backward(loss);
+            (
+                t.value(loss).item(),
+                t.grad(xv).unwrap().clone(),
+                t.grad(ev).unwrap().clone(),
+            )
+        };
+        let (lf, gxf, gef) = run(Backend::Fast);
+        let (lr, gxr, ger) = run(Backend::Reference);
+        assert_eq!(lf.to_bits(), lr.to_bits());
+        for (i, (a, b)) in gxf.data.iter().zip(&gxr.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "x grad[{i}]");
+        }
+        for (i, (a, b)) in gef.data.iter().zip(&ger.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "emb grad[{i}]");
+        }
+    }
+
+    /// The new LM ops under a shared graph: pooled fan-out and the scalar
+    /// reference backend must both reproduce the single-threaded fast path
+    /// bit-for-bit (the PR-3 determinism contract extended to gpt-nano's
+    /// kernels).
+    #[test]
+    fn lm_ops_bit_identical_across_pools_and_backends() {
+        let mut rng = Rng::new(0x9A7, 0);
+        // 8 sequences × 16 tokens × width 64: crosses the layernorm
+        // (EW_PAR_MIN), attention (ATTN_PAR_MIN) and matmul-NT (MM-class)
+        // fan-out thresholds with ragged worker splits
+        let (seqs, t_len, d) = (8usize, 16usize, 64usize);
+        let rows = seqs * t_len;
+        let x = Tensor::randn(rows, d, 1.0, &mut rng);
+        let wq = Tensor::randn(d, d, 0.2, &mut rng);
+        let emb = Tensor::randn(37, d, 0.3, &mut rng); // "vocab" 37
+        let targets: Vec<usize> = (0..rows).map(|i| (i * 7) % 37).collect();
+        let build = |t: &mut Tape| -> (f32, Tensor) {
+            let xv = t.input_from(&x);
+            let ln = t.layernorm(xv, 1e-5);
+            let wv = t.param_from(&wq);
+            let q = t.matmul(ln, wv);
+            let a = t.causal_attention(q, ln, ln, seqs);
+            let sc = t.scale(a, 0.5);
+            let r = t.add(ln, sc);
+            let ev = t.param_from(&emb);
+            let logits = t.matmul_nt(r, ev);
+            let loss = t.softmax_xent(logits, targets.clone());
+            t.backward(loss);
+            (t.value(loss).item(), t.grad(ev).unwrap().clone())
+        };
+        let mut base_tape = Tape::with_pool(QPolicy::new(BF16), Pool::single());
+        let (l1, g1) = build(&mut base_tape);
+        for threads in [2usize, 3, 4] {
+            let mut t = Tape::with_pool(QPolicy::new(BF16), Arc::new(Pool::new(threads)));
+            let (l, g) = build(&mut t);
+            assert_eq!(l.to_bits(), l1.to_bits(), "loss threads={threads}");
+            for (i, (a, b)) in g.data.iter().zip(&g1.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} grad[{i}]");
+            }
+        }
+        let mut rt = Tape::new(QPolicy::with_backend(BF16, Backend::Reference));
+        let (lr, gr) = build(&mut rt);
+        assert_eq!(lr.to_bits(), l1.to_bits(), "reference backend loss");
+        for (i, (a, b)) in gr.data.iter().zip(&g1.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "reference grad[{i}]");
+        }
     }
 }

@@ -192,6 +192,78 @@ impl Tensor {
         });
     }
 
+    /// `self @ otherᵀ` with f32 FMAC accumulation (no transposed copy):
+    /// `out[i][j] = Σ_k self[i,k] · other[j,k]`.  The tied-softmax output
+    /// projection (`logits = x @ embedᵀ`) runs through this so weight tying
+    /// never materializes a transposed table.
+    ///
+    /// One kernel serves both backends: every output element is a row-local
+    /// dot product accumulated in ascending k, so the pooled row fan-out
+    /// ([`Tensor::matmul_nt_into_pooled`]) and the sequential call are
+    /// bit-identical by construction.
+    pub fn matmul_nt_into(&self, other: &Tensor, out: &mut Tensor) {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        out.rows = m;
+        out.cols = n;
+        out.data.clear();
+        out.data.resize(m * n, 0.0);
+        self.nt_rows(other, 0, &mut out.data);
+    }
+
+    /// `self @ otherᵀ` for one contiguous band of output rows starting at
+    /// `row0` (`band.len()` must be a multiple of `other.rows`).
+    fn nt_rows(&self, other: &Tensor, row0: usize, band: &mut [f32]) {
+        let (k, n) = (self.cols, other.rows);
+        if n == 0 {
+            return;
+        }
+        debug_assert_eq!(band.len() % n, 0);
+        for (bi, orow) in band.chunks_exact_mut(n).enumerate() {
+            let i = row0 + bi;
+            let arow = &self.data[i * k..(i + 1) * k];
+            for (j, acc) in orow.iter_mut().enumerate() {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut s = 0f32;
+                for (&a, &b) in arow.iter().zip(brow) {
+                    s += a * b;
+                }
+                *acc = s;
+            }
+        }
+    }
+
+    /// [`Tensor::matmul_nt_into`] with the output rows fanned out across a
+    /// worker [`Pool`] in contiguous bands; small products stay sequential.
+    /// Bit-identical at every thread count (row-local dot products).
+    pub fn matmul_nt_into_pooled(&self, other: &Tensor, out: &mut Tensor, pool: &Pool) {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        if pool.threads() <= 1 || m < 2 || m * k * n < MM_PAR_MIN {
+            self.matmul_nt_into(other, out);
+            return;
+        }
+        out.rows = m;
+        out.cols = n;
+        out.data.clear();
+        out.data.resize(m * n, 0.0);
+        let t = pool.threads().min(m);
+        let rows_per = (m + t - 1) / t;
+        let mut bands: Vec<(usize, &mut [f32])> = Vec::with_capacity(t);
+        let mut rest = out.data.as_mut_slice();
+        let mut row0 = 0usize;
+        while row0 < m {
+            let take = rows_per.min(m - row0);
+            let (band, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
+            bands.push((row0, band));
+            rest = tail;
+            row0 += take;
+        }
+        pool.run_parts(bands, |(row0, band)| {
+            self.nt_rows(other, *row0, &mut **band);
+        });
+    }
+
     /// The original scalar i-k-j matmul, kept as the bit-exactness oracle
     /// for the tiled kernel (and as the `Backend::Reference` bench baseline).
     pub fn matmul_reference(&self, other: &Tensor) -> Tensor {
@@ -343,6 +415,49 @@ mod tests {
                             "({m},{k},{n}) threads={threads} round={round:?} elem {i}"
                         );
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let mut rng = Rng::new(0x7D1, 0);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (5, 33, 17), (33, 64, 50)] {
+            let a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(n, k, 1.0, &mut rng);
+            let mut nt = Tensor::zeros(0, 0);
+            a.matmul_nt_into(&b, &mut nt);
+            let via_t = a.matmul_reference(&b.transpose());
+            assert_eq!(nt.rows, via_t.rows);
+            assert_eq!(nt.cols, via_t.cols);
+            for (i, (x, y)) in nt.data.iter().zip(&via_t.data).enumerate() {
+                assert!((x - y).abs() <= 1e-5 * (1.0 + y.abs()), "({m},{k},{n}) elem {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_matmul_nt_bit_identical_at_every_thread_count() {
+        let mut rng = Rng::new(0x7D2, 0);
+        // shapes below and above the fan-out threshold, ragged row counts
+        for (m, k, n) in [(1, 8, 8), (3, 5, 7), (33, 96, 50), (128, 64, 40)] {
+            let a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(n, k, 1.0, &mut rng);
+            let mut seq = Tensor::zeros(0, 0);
+            a.matmul_nt_into(&b, &mut seq);
+            for threads in [1usize, 2, 3, 4] {
+                let pool = Pool::new(threads);
+                let mut par = Tensor::zeros(0, 0);
+                a.matmul_nt_into_pooled(&b, &mut par, &pool);
+                assert_eq!(par.rows, seq.rows);
+                assert_eq!(par.cols, seq.cols);
+                for (i, (x, y)) in par.data.iter().zip(&seq.data).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "({m},{k},{n}) threads={threads} elem {i}"
+                    );
                 }
             }
         }

@@ -34,11 +34,10 @@ fn main() -> Result<()> {
         let t0 = std::time::Instant::now();
         for step in 0..steps {
             let lr = if step < warm { 0.2 * (step + 1) as f32 / warm as f32 } else { 0.2 };
-            let (_, stats) = tr.step(lr);
-            cancel.merge(stats);
+            cancel.merge(tr.step(lr).total());
         }
         let dt = t0.elapsed().as_secs_f64();
-        let el = tr.eval(8);
+        let el = tr.eval(8).loss;
         println!(
             "{:<12} {:>10.4} {:>10.2} {:>9.1} {:>9.1}",
             mode.name(),

@@ -1,9 +1,14 @@
-//! Native-step bench baseline: times lsq + dlrm train steps per precision
-//! mode on the vectorized `Fast` backend against the scalar `Reference`
-//! backend (the pre-optimization code path), with no PJRT artifacts needed,
-//! plus an `intra_threads ∈ {1, 2, hw}` scaling sweep of the parallel
-//! execution layer (`derived.scaling_dlrm_sr16_tN` = t1 median / tN median;
+//! Native-step bench baseline: times lsq + dlrm + gpt-nano + mlp train
+//! steps per precision mode on the vectorized `Fast` backend against the
+//! scalar `Reference` backend (the pre-optimization code path), with no
+//! PJRT artifacts needed, plus `intra_threads ∈ {1, 2, hw}` scaling sweeps
+//! of the parallel execution layer (`derived.scaling_dlrm_sr16_tN` /
+//! `scaling_gpt_sr16_tN` / `scaling_mlp_sr16_tN` = t1 median / tN median;
 //! > 1.0 means the worker pool pays off at N threads).
+//!
+//! Every app runs through the generic `qsim::train` engine, so the
+//! per-app sections are one helper call each (`bench_app_modes` /
+//! `bench_app_scaling`) instead of copied loops.
 //!
 //! Emits `BENCH_qsim.json` (override the path with `QSIM_BENCH_OUT`) so
 //! future PRs have a throughput trajectory to compare against.  Set
@@ -11,9 +16,11 @@
 //! budget that only verifies the target still runs end to end (smoke
 //! scaling ratios are noise — `derived.smoke = 1` marks such runs).
 
-use bf16_train::qsim::dlrm::{DlrmConfig, DlrmTrainer};
-use bf16_train::qsim::gpt::{GptConfig, GptTrainer};
+use bf16_train::qsim::dlrm::DlrmConfig;
+use bf16_train::qsim::gpt::GptConfig;
 use bf16_train::qsim::lsq::{self, LsqConfig, LsqData, Placement};
+use bf16_train::qsim::mlp::MlpConfig;
+use bf16_train::qsim::train::{Task, Trainer};
 use bf16_train::qsim::{Backend, Mode, Tensor};
 use bf16_train::util::bench::{bench, bench_n, black_box, write_bench_json, BenchResult};
 use bf16_train::util::rng::Rng;
@@ -26,14 +33,86 @@ fn timed(smoke: bool, name: &str, f: impl FnMut()) -> BenchResult {
     }
 }
 
-fn dlrm_trainer(mode: Mode, backend: Backend) -> DlrmTrainer {
-    let cfg = DlrmConfig { seed: 3, backend, ..Default::default() };
-    let mut tr = DlrmTrainer::new(cfg, mode);
-    // warm the tape arena / allocator so we time steady state
-    for _ in 0..3 {
-        tr.step(0.05);
+/// Per-(mode, backend) step timings + `derived.speedup_<tag>_<mode>`
+/// (reference median / fast median) for one app.
+#[allow(clippy::too_many_arguments)]
+fn bench_app_modes<T: Task>(
+    smoke: bool,
+    label: &str,
+    tag: &str,
+    lr: f32,
+    modes: &[Mode],
+    mk: impl Fn(Backend) -> T,
+    results: &mut Vec<BenchResult>,
+    derived: &mut Vec<(String, f64)>,
+) {
+    for &mode in modes {
+        let mut pair = Vec::new();
+        for backend in [Backend::Fast, Backend::Reference] {
+            let mut tr = Trainer::new(mk(backend), mode);
+            // warm the tape arena / allocator so we time steady state
+            for _ in 0..3 {
+                tr.step(lr);
+            }
+            let r = timed(
+                smoke,
+                &format!("{label} step {} {}", mode.name(), backend.name()),
+                || {
+                    black_box(tr.step(lr));
+                },
+            );
+            pair.push(r.median_ns);
+            results.push(r);
+        }
+        let speedup = pair[1] / pair[0];
+        println!("  ↳ {label} {} speedup fast/reference: {speedup:.2}x", mode.name());
+        derived.push((format!("speedup_{tag}_{}", mode.name()), speedup));
     }
-    tr
+}
+
+/// `intra_threads` scaling sweep (`derived.scaling_<tag>_sr16_tN` = t1
+/// median / tN median) plus a t1-vs-t2 bit-identity spot check for one app
+/// (the test suite asserts the full contract; this guards the bench
+/// configs themselves).
+#[allow(clippy::too_many_arguments)]
+fn bench_app_scaling<T: Task>(
+    smoke: bool,
+    label: &str,
+    tag: &str,
+    lr: f32,
+    thread_counts: &[usize],
+    mk: impl Fn(usize) -> T,
+    results: &mut Vec<BenchResult>,
+    derived: &mut Vec<(String, f64)>,
+) {
+    let mut t1_median = None;
+    for &threads in thread_counts {
+        let mut tr = Trainer::new(mk(threads), Mode::Sr16);
+        // warm the tape arena and the worker pool
+        for _ in 0..2 {
+            tr.step(lr);
+        }
+        let r = timed(smoke, &format!("{label} step sr16 t{threads}"), || {
+            black_box(tr.step(lr));
+        });
+        match t1_median {
+            None => t1_median = Some(r.median_ns),
+            Some(t1) => {
+                let scaling = t1 / r.median_ns;
+                println!("  ↳ {label} sr16 scaling t{threads} vs t1: {scaling:.2}x");
+                derived.push((format!("scaling_{tag}_sr16_t{threads}"), scaling));
+            }
+        }
+        results.push(r);
+    }
+    let mut a = Trainer::new(mk(1), Mode::Sr16);
+    let mut b = Trainer::new(mk(2), Mode::Sr16);
+    for s in 0..3 {
+        let la = a.step(lr).loss;
+        let lb = b.step(lr).loss;
+        assert_eq!(la.to_bits(), lb.to_bits(), "{label} t1/t2 loss diverged at step {s}");
+    }
+    println!("parity: {label} sr16 bit-identical at 1 vs 2 intra-threads");
 }
 
 fn main() {
@@ -57,153 +136,110 @@ fn main() {
     derived.push(("speedup_matmul_128x256x64".into(), ref_mm.median_ns / fast_mm.median_ns));
     results.extend([fast_mm, ref_mm]);
 
-    // -- dlrm-small train step, per mode and backend ------------------------
-    for mode in [Mode::Fp32, Mode::Standard16, Mode::Sr16, Mode::Kahan16, Mode::SrKahan16] {
-        let mut pair = Vec::new();
-        for backend in [Backend::Fast, Backend::Reference] {
-            let mut tr = dlrm_trainer(mode, backend);
-            let r = timed(
-                smoke,
-                &format!("dlrm-small step {} {}", mode.name(), backend.name()),
-                || {
-                    black_box(tr.step(0.05));
-                },
-            );
-            pair.push(r.median_ns);
-            results.push(r);
-        }
-        let speedup = pair[1] / pair[0];
-        println!("  ↳ dlrm-small {} speedup fast/reference: {speedup:.2}x", mode.name());
-        derived.push((format!("speedup_dlrm_{}", mode.name()), speedup));
-    }
-
-    // -- intra-step scaling: a DLRM big enough for the pool to matter -------
-    // (dlrm-small's default shapes are too tiny to amortize any dispatch;
-    // this config matches a mid-size production-ish embedding + MLP stack)
     let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let mut thread_counts = vec![1usize, 2];
     if hw > 2 {
         thread_counts.push(hw);
     }
-    let par_cfg = |threads: usize| DlrmConfig {
-        seed: 3,
-        table_size: 2000,
-        embed_dim: 32,
-        dense_dim: 32,
-        hidden: 256,
-        batch: if smoke { 64 } else { 256 },
-        intra_threads: threads,
-        ..Default::default()
-    };
-    let mut t1_median = None;
-    for &threads in &thread_counts {
-        let mut tr = DlrmTrainer::new(par_cfg(threads), Mode::Sr16);
-        for _ in 0..2 {
-            tr.step(0.05); // warm the tape arena and the worker pool
-        }
-        let r = timed(smoke, &format!("dlrm-par step sr16 t{threads}"), || {
-            black_box(tr.step(0.05));
-        });
-        match t1_median {
-            None => t1_median = Some(r.median_ns),
-            Some(t1) => {
-                let scaling = t1 / r.median_ns;
-                println!("  ↳ dlrm-par sr16 scaling t{threads} vs t1: {scaling:.2}x");
-                derived.push((format!("scaling_dlrm_sr16_t{threads}"), scaling));
-            }
-        }
-        results.push(r);
-    }
-    // thread-count bit-identity spot check on the scaling config
-    {
-        let mut a = DlrmTrainer::new(par_cfg(1), Mode::Sr16);
-        let mut b = DlrmTrainer::new(par_cfg(2), Mode::Sr16);
-        for s in 0..3 {
-            let ta = a.step(0.05);
-            let tb = b.step(0.05);
-            assert_eq!(
-                ta.loss.to_bits(),
-                tb.loss.to_bits(),
-                "t1/t2 loss diverged at step {s}"
-            );
-        }
-        println!("parity: dlrm-par sr16 bit-identical at 1 vs 2 intra-threads");
-    }
+
+    // -- dlrm-small train step, per mode and backend ------------------------
+    bench_app_modes(
+        smoke,
+        "dlrm-small",
+        "dlrm",
+        0.05,
+        &[Mode::Fp32, Mode::Standard16, Mode::Sr16, Mode::Kahan16, Mode::SrKahan16],
+        |backend| DlrmConfig { seed: 3, backend, ..Default::default() },
+        &mut results,
+        &mut derived,
+    );
+
+    // -- dlrm intra-step scaling: a DLRM big enough for the pool to matter --
+    // (dlrm-small's default shapes are too tiny to amortize any dispatch;
+    // this config matches a mid-size production-ish embedding + MLP stack)
+    bench_app_scaling(
+        smoke,
+        "dlrm-par",
+        "dlrm",
+        0.05,
+        &thread_counts,
+        |threads| DlrmConfig {
+            seed: 3,
+            table_size: 2000,
+            embed_dim: 32,
+            dense_dim: 32,
+            hidden: 256,
+            batch: if smoke { 64 } else { 256 },
+            intra_threads: threads,
+            ..Default::default()
+        },
+        &mut results,
+        &mut derived,
+    );
 
     // -- gpt-nano train step, per mode and backend --------------------------
-    let gpt_trainer = |mode: Mode, backend: Backend| {
-        let cfg = GptConfig { seed: 3, backend, ..Default::default() };
-        let mut tr = GptTrainer::new(cfg, mode);
-        for _ in 0..3 {
-            tr.step(0.1); // warm the tape arena
-        }
-        tr
-    };
-    for mode in [Mode::Fp32, Mode::Sr16] {
-        let mut pair = Vec::new();
-        for backend in [Backend::Fast, Backend::Reference] {
-            let mut tr = gpt_trainer(mode, backend);
-            let r = timed(
-                smoke,
-                &format!("gpt-nano step {} {}", mode.name(), backend.name()),
-                || {
-                    black_box(tr.step(0.1));
-                },
-            );
-            pair.push(r.median_ns);
-            results.push(r);
-        }
-        let speedup = pair[1] / pair[0];
-        println!("  ↳ gpt-nano {} speedup fast/reference: {speedup:.2}x", mode.name());
-        derived.push((format!("speedup_gpt_{}", mode.name()), speedup));
-    }
+    bench_app_modes(
+        smoke,
+        "gpt-nano",
+        "gpt",
+        0.1,
+        &[Mode::Fp32, Mode::Sr16],
+        |backend| GptConfig { seed: 3, backend, ..Default::default() },
+        &mut results,
+        &mut derived,
+    );
 
     // -- gpt intra-step scaling: a transformer big enough for the pool ------
     // (attention fans out per sequence, the matmuls per row panel)
-    let gpt_par_cfg = |threads: usize| GptConfig {
-        seed: 3,
-        vocab: 256,
-        seq_len: 32,
-        dim: 64,
-        hidden: 256,
-        batch: if smoke { 8 } else { 16 },
-        intra_threads: threads,
-        ..Default::default()
-    };
-    let mut gpt_t1_median = None;
-    for &threads in &thread_counts {
-        let mut tr = GptTrainer::new(gpt_par_cfg(threads), Mode::Sr16);
-        for _ in 0..2 {
-            tr.step(0.1); // warm the tape arena and the worker pool
-        }
-        let r = timed(smoke, &format!("gpt-par step sr16 t{threads}"), || {
-            black_box(tr.step(0.1));
-        });
-        match gpt_t1_median {
-            None => gpt_t1_median = Some(r.median_ns),
-            Some(t1) => {
-                let scaling = t1 / r.median_ns;
-                println!("  ↳ gpt-par sr16 scaling t{threads} vs t1: {scaling:.2}x");
-                derived.push((format!("scaling_gpt_sr16_t{threads}"), scaling));
-            }
-        }
-        results.push(r);
-    }
-    // thread-count bit-identity spot check on the gpt scaling config
-    {
-        let mut a = GptTrainer::new(gpt_par_cfg(1), Mode::Sr16);
-        let mut b = GptTrainer::new(gpt_par_cfg(2), Mode::Sr16);
-        for s in 0..3 {
-            let (la, _) = a.step(0.1);
-            let (lb, _) = b.step(0.1);
-            assert_eq!(
-                la.to_bits(),
-                lb.to_bits(),
-                "gpt t1/t2 loss diverged at step {s}"
-            );
-        }
-        println!("parity: gpt-par sr16 bit-identical at 1 vs 2 intra-threads");
-    }
+    bench_app_scaling(
+        smoke,
+        "gpt-par",
+        "gpt",
+        0.1,
+        &thread_counts,
+        |threads| GptConfig {
+            seed: 3,
+            vocab: 256,
+            seq_len: 32,
+            dim: 64,
+            hidden: 256,
+            batch: if smoke { 8 } else { 16 },
+            intra_threads: threads,
+            ..Default::default()
+        },
+        &mut results,
+        &mut derived,
+    );
+
+    // -- mlp (spiral classifier) train step, per mode and backend -----------
+    bench_app_modes(
+        smoke,
+        "mlp",
+        "mlp",
+        0.1,
+        &[Mode::Fp32, Mode::Sr16],
+        |backend| MlpConfig { seed: 3, backend, ..Default::default() },
+        &mut results,
+        &mut derived,
+    );
+
+    // -- mlp intra-step scaling: widths where the matmul fan-out matters ----
+    bench_app_scaling(
+        smoke,
+        "mlp-par",
+        "mlp",
+        0.1,
+        &thread_counts,
+        |threads| MlpConfig {
+            seed: 3,
+            hidden: 512,
+            batch: if smoke { 64 } else { 256 },
+            intra_threads: threads,
+            ..Default::default()
+        },
+        &mut results,
+        &mut derived,
+    );
 
     // -- lsq theory loop, per rounding placement ----------------------------
     let steps = if smoke { 50 } else { 1000 };
@@ -220,14 +256,14 @@ fn main() {
 
     // -- bit-identity spot check (the test suite asserts this too) ----------
     let parity_steps = if smoke { 10 } else { 100 };
-    let mut fast = {
-        let cfg = DlrmConfig { seed: 11, backend: Backend::Fast, ..Default::default() };
-        DlrmTrainer::new(cfg, Mode::Sr16)
-    };
-    let mut reference = {
-        let cfg = DlrmConfig { seed: 11, backend: Backend::Reference, ..Default::default() };
-        DlrmTrainer::new(cfg, Mode::Sr16)
-    };
+    let mut fast = Trainer::new(
+        DlrmConfig { seed: 11, backend: Backend::Fast, ..Default::default() },
+        Mode::Sr16,
+    );
+    let mut reference = Trainer::new(
+        DlrmConfig { seed: 11, backend: Backend::Reference, ..Default::default() },
+        Mode::Sr16,
+    );
     for s in 0..parity_steps {
         let a = fast.step(0.05);
         let b = reference.step(0.05);

@@ -126,6 +126,13 @@ impl RunConfig {
             "bert-cls" => (1_200, 2e-3, Schedule::WarmupLinear { warmup_frac: 0.0 }),
             "bert-lm" => (1_200, 1e-3, Schedule::WarmupLinear { warmup_frac: 0.08 }),
             "lstm-seq" => (1_200, 3e-2, Schedule::Constant),
+            // native qsim apps (`repro train --native`, `repro exp mlp`):
+            // budgets/lr match the native experiment harness
+            "dlrm" => (1_000, 0.05, Schedule::Constant),
+            "mlp" => (600, 0.3, Schedule::WarmupLinear { warmup_frac: 0.05 }),
+            // bare "gpt" is the experiment id the CLI also accepts for the
+            // native app — same budget as its canonical "gpt-nano" name
+            "gpt" | "gpt-nano" => (300, 0.2, Schedule::WarmupLinear { warmup_frac: 0.05 }),
             name if name.starts_with("gpt-") => {
                 (300, 1e-3, Schedule::WarmupLinear { warmup_frac: 0.05 })
             }
@@ -474,6 +481,17 @@ warmup_frac = 0.1
         // cadence rescaled to the new budget
         assert_eq!(cfg.eval_every, 60);
         assert_eq!(cfg.log_every, 3);
+    }
+
+    #[test]
+    fn native_app_defaults_are_consistent() {
+        // both accepted spellings of the native gpt app share one budget
+        let gpt = RunConfig::defaults_for("gpt");
+        let nano = RunConfig::defaults_for("gpt-nano");
+        assert_eq!((gpt.steps, gpt.base_lr), (nano.steps, nano.base_lr));
+        let mlp = RunConfig::defaults_for("mlp");
+        assert_eq!(mlp.steps, 600);
+        assert_eq!(mlp.base_lr, 0.3);
     }
 
     #[test]

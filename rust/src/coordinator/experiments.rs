@@ -21,8 +21,11 @@ use crate::hwcost;
 use crate::metrics::mean_std;
 use crate::precision::{Mode, Policy, BF16, E8M1, E8M3, E8M5, FP16};
 use crate::qsim::dlrm::{DlrmConfig, DlrmTrainer};
-use crate::qsim::gpt::{GptConfig, GptTrainer};
+use crate::qsim::gpt::GptConfig;
 use crate::qsim::lsq::{self, LsqConfig, LsqData, Placement};
+use crate::qsim::mlp::MlpConfig;
+use crate::qsim::train::{Task, Trainer as NativeTrainer};
+use crate::qsim::UpdateStats;
 use crate::util::table::{pm, Table};
 use crate::Runner;
 
@@ -143,6 +146,68 @@ fn throughput_cell<'a>(rs: impl IntoIterator<Item = &'a RunSummary>) -> String {
     }
     let (m, _) = mean_std(&vals);
     format!("{m:.1}")
+}
+
+/// One cell of a native (qsim) mode × seed grid.
+struct NativeCell {
+    mode: Mode,
+    /// Per-seed eval losses / metrics / cancellation fractions.
+    eval_loss: Vec<f64>,
+    eval_metric: Vec<f64>,
+    cancel_fracs: Vec<f64>,
+    /// Merged update stats over every seed's run.
+    cancel: UpdateStats,
+    sps: Vec<f64>,
+    /// Weight-memory footprint under the cell's mode (generic param-walk
+    /// accounting — every native app reports its memory plan).
+    weight_kb: f64,
+}
+
+/// Run a Table-4-style mode × seed grid through the generic native trainer
+/// — the single loop behind every qsim-app experiment (gpt, mlp, future
+/// tasks).  Per-app code shrinks to a config constructor and a table
+/// renderer.
+fn run_native_grid<T: Task>(
+    modes: &[Mode],
+    seeds: u64,
+    steps: usize,
+    lr: impl Fn(usize) -> f32,
+    eval_batches: usize,
+    mk_task: impl Fn(u64) -> T,
+) -> Vec<NativeCell> {
+    let mut cells = Vec::new();
+    for &mode in modes {
+        let mut cell = NativeCell {
+            mode,
+            eval_loss: Vec::new(),
+            eval_metric: Vec::new(),
+            cancel_fracs: Vec::new(),
+            cancel: UpdateStats::default(),
+            sps: Vec::new(),
+            weight_kb: 0.0,
+        };
+        for seed in 0..seeds {
+            let mut tr = NativeTrainer::new(mk_task(seed), mode);
+            cell.weight_kb = tr.weight_bytes() as f64 / 1024.0;
+            let mut seed_cancel = UpdateStats::default();
+            let t0 = std::time::Instant::now();
+            for step in 0..steps {
+                let tel = tr.step(lr(step));
+                seed_cancel.merge(tel.total());
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            if dt > 0.0 {
+                cell.sps.push(steps as f64 / dt);
+            }
+            let m = tr.eval(eval_batches);
+            cell.eval_loss.push(m.loss as f64);
+            cell.eval_metric.push(m.metric as f64);
+            cell.cancel_fracs.push(seed_cancel.frac());
+            cell.cancel.merge(seed_cancel);
+        }
+        cells.push(cell);
+    }
+    cells
 }
 
 /// Export per-seed curves as CSV (step, loss, metric, cancel, lr).
@@ -548,7 +613,7 @@ impl Experiment for Fig5 {
         // once (sequential probe — no point spawning a pool for a byte sum)
         let all_sr =
             DlrmTrainer::new(DlrmConfig { intra_threads: 1, ..base_cfg.clone() }, Mode::Sr16)
-                .weight_bytes(&vec![Mode::Sr16; n_tensors]);
+                .weight_bytes();
         // sweep: 0 tensors (all SR) … all tensors Kahan, embeddings first
         // (they dominate memory, exactly the paper's sweep axis).
         for kahan_k in [0usize, 2, 4, n_tensors] {
@@ -561,7 +626,7 @@ impl Experiment for Fig5 {
                     .map(|i| if i < kahan_k { Mode::Kahan16 } else { Mode::Sr16 })
                     .collect();
                 let mut tr = DlrmTrainer::new_mixed(cfg, modes.clone());
-                bytes = tr.weight_bytes(&modes);
+                bytes = tr.weight_bytes();
                 let t0 = std::time::Instant::now();
                 for _ in 0..steps {
                     tr.step(0.05);
@@ -570,7 +635,7 @@ impl Experiment for Fig5 {
                 if dt > 0.0 {
                     sps.push(steps as f64 / dt);
                 }
-                let (_, auc) = tr.eval(16);
+                let auc = tr.eval(16).metric;
                 aucs.push(auc as f64 * 100.0);
             }
             let (m, s) = mean_std(&aucs);
@@ -706,60 +771,117 @@ impl Experiment for GptNano {
         let warm = (steps / 20).max(1);
         let mut t = Table::new(
             "gpt-nano (native) — 16-bit-FPU training vs 32-bit, transformer LM",
-            &["mode", "eval loss", "eval ppl", "cancel %", "steps/s"],
+            &["mode", "eval loss", "eval ppl", "weight KB", "cancel %", "steps/s"],
         );
         let mut csv = String::from("mode,seed,eval_loss,eval_ppl,cancel_frac\n");
-        for mode in [Mode::Fp32, Mode::Sr16, Mode::Kahan16, Mode::Standard16] {
-            let mut losses = Vec::new();
-            let mut sps = Vec::new();
-            let mut cancel = crate::qsim::UpdateStats::default();
-            for seed in 0..opts.seeds {
-                let cfg = GptConfig {
-                    seed,
-                    intra_threads: opts.intra_threads.unwrap_or(1),
-                    ..GptConfig::default()
-                };
-                let mut tr = GptTrainer::new(cfg, mode);
-                let mut seed_cancel = crate::qsim::UpdateStats::default();
-                let t0 = std::time::Instant::now();
-                for step in 0..steps {
-                    // constant lr with a short linear warmup
-                    let lr = if step < warm {
-                        0.2 * (step + 1) as f32 / warm as f32
-                    } else {
-                        0.2
-                    };
-                    let (_, stats) = tr.step(lr);
-                    seed_cancel.merge(stats);
-                }
-                let dt = t0.elapsed().as_secs_f64();
-                if dt > 0.0 {
-                    sps.push(steps as f64 / dt);
-                }
-                let el = tr.eval(8) as f64;
-                losses.push(el);
+        let intra = opts.intra_threads.unwrap_or(1);
+        let cells = run_native_grid(
+            &[Mode::Fp32, Mode::Sr16, Mode::Kahan16, Mode::Standard16],
+            opts.seeds,
+            steps,
+            // constant lr with a short linear warmup
+            |step| if step < warm { 0.2 * (step + 1) as f32 / warm as f32 } else { 0.2 },
+            8,
+            |seed| GptConfig { seed, intra_threads: intra, ..GptConfig::default() },
+        );
+        for cell in &cells {
+            for (seed, (el, cf)) in
+                cell.eval_loss.iter().zip(&cell.cancel_fracs).enumerate()
+            {
                 csv.push_str(&format!(
-                    "{},{seed},{el:.4},{:.3},{:.4}\n",
-                    mode.name(),
-                    el.exp(),
-                    seed_cancel.frac()
+                    "{},{seed},{el:.4},{:.3},{cf:.4}\n",
+                    cell.mode.name(),
+                    el.exp()
                 ));
-                cancel.merge(seed_cancel);
             }
-            let (m, s) = mean_std(&losses);
-            let (sm, _) = mean_std(&sps);
+            let (m, s) = mean_std(&cell.eval_loss);
+            let (sm, _) = mean_std(&cell.sps);
             t.row(vec![
-                mode.name().into(),
+                cell.mode.name().into(),
                 pm(m, s, 3),
                 format!("{:.2}", m.exp()),
-                format!("{:.1}", cancel.frac() * 100.0),
-                if sps.is_empty() { "-".into() } else { format!("{sm:.1}") },
+                format!("{:.1}", cell.weight_kb),
+                format!("{:.1}", cell.cancel.frac() * 100.0),
+                if cell.sps.is_empty() { "-".into() } else { format!("{sm:.1}") },
             ]);
         }
         let s = t.render()
             + "\nExpected shape (paper): sr16/kahan16 within noise of 32-bit; standard16\nworse — nearest rounding cancels late-training updates (see cancel %).\n";
         opts.write("gpt.txt", &s)?;
         opts.write("gpt.csv", &csv)?;
+        Ok(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mlp — the generic-engine proof app (spiral classifier).
+// ---------------------------------------------------------------------------
+
+/// The Table-4-style nearest/SR/Kahan comparison on the spiral-MLP
+/// classifier — the app added *through* the generic `qsim::train` engine
+/// (a `Task` impl, no hand-rolled trainer), demonstrating that new native
+/// scenarios cost a config + forward pass rather than a copied loop.
+/// Runs fully native and is bit-identical across backends and
+/// `--intra-threads` settings.
+struct MlpExp;
+
+impl Experiment for MlpExp {
+    fn id(&self) -> &'static str {
+        "mlp"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["spiral"]
+    }
+
+    fn run(&self, ctx: &ExpContext<'_>) -> Result<String> {
+        let opts = ctx.opts;
+        let steps = opts.steps.unwrap_or(600) as usize;
+        let warm = (steps / 20).max(1);
+        let mut t = Table::new(
+            "mlp (native) — 16-bit-FPU training vs 32-bit, spiral classifier",
+            &["mode", "eval loss", "eval acc %", "weight KB", "cancel %", "steps/s"],
+        );
+        let mut csv = String::from("mode,seed,eval_loss,eval_acc,cancel_frac\n");
+        let intra = opts.intra_threads.unwrap_or(1);
+        let cells = run_native_grid(
+            &[Mode::Fp32, Mode::Sr16, Mode::Kahan16, Mode::Standard16],
+            opts.seeds,
+            steps,
+            |step| if step < warm { 0.3 * (step + 1) as f32 / warm as f32 } else { 0.3 },
+            8,
+            |seed| MlpConfig { seed, intra_threads: intra, ..MlpConfig::default() },
+        );
+        for cell in &cells {
+            for (seed, ((el, acc), cf)) in cell
+                .eval_loss
+                .iter()
+                .zip(&cell.eval_metric)
+                .zip(&cell.cancel_fracs)
+                .enumerate()
+            {
+                csv.push_str(&format!(
+                    "{},{seed},{el:.4},{acc:.4},{cf:.4}\n",
+                    cell.mode.name()
+                ));
+            }
+            let (ml, sl) = mean_std(&cell.eval_loss);
+            let accs: Vec<f64> = cell.eval_metric.iter().map(|a| a * 100.0).collect();
+            let (ma, sa) = mean_std(&accs);
+            let (sm, _) = mean_std(&cell.sps);
+            t.row(vec![
+                cell.mode.name().into(),
+                pm(ml, sl, 3),
+                pm(ma, sa, 1),
+                format!("{:.1}", cell.weight_kb),
+                format!("{:.1}", cell.cancel.frac() * 100.0),
+                if cell.sps.is_empty() { "-".into() } else { format!("{sm:.1}") },
+            ]);
+        }
+        let s = t.render()
+            + "\nExpected shape (paper): sr16/kahan16 within noise of 32-bit; standard16\nworse — nearest rounding cancels late-training updates (see cancel %).\n";
+        opts.write("mlp.txt", &s)?;
+        opts.write("mlp.csv", &csv)?;
         Ok(s)
     }
 }
@@ -897,14 +1019,14 @@ impl Experiment for Fig11 {
 
 /// Every registered experiment, dependency-light → heavy.
 pub static EXPERIMENTS: &[&dyn Experiment] = &[
-    &Table1, &Table2, &Fig2, &Thm1, &Fig5, &Fig9, &GptNano, &Fig1, &Table3, &Fig10, &Fig11,
-    &Fig12, &Table4,
+    &Table1, &Table2, &Fig2, &Thm1, &Fig5, &Fig9, &GptNano, &MlpExp, &Fig1, &Table3, &Fig10,
+    &Fig11, &Fig12, &Table4,
 ];
 
 /// All primary experiment ids, in registry order (for `exp all`).
-pub const ALL_EXPERIMENTS: [&str; 13] = [
-    "table1", "table2", "fig2", "thm1", "fig5", "fig9", "gpt", "fig1", "table3", "fig10",
-    "fig11", "fig12", "table4",
+pub const ALL_EXPERIMENTS: [&str; 14] = [
+    "table1", "table2", "fig2", "thm1", "fig5", "fig9", "gpt", "mlp", "fig1", "table3",
+    "fig10", "fig11", "fig12", "table4",
 ];
 
 /// Find an experiment by primary id or alias.
@@ -953,12 +1075,32 @@ mod tests {
         assert_eq!(find_experiment("fig3").unwrap().id(), "table3");
         assert_eq!(find_experiment("fig4").unwrap().id(), "table4");
         assert_eq!(find_experiment("gpt-nano").unwrap().id(), "gpt");
+        assert_eq!(find_experiment("spiral").unwrap().id(), "mlp");
         assert!(find_experiment("fig99").is_none());
     }
 
     #[test]
-    fn gpt_experiment_runs_without_runtime() {
+    fn native_experiments_run_without_runtime() {
         assert!(!find_experiment("gpt").unwrap().needs_runtime());
+        assert!(!find_experiment("mlp").unwrap().needs_runtime());
+    }
+
+    /// Acceptance gate: `repro exp mlp` produces a Table-4-style results
+    /// table through the generic native trainer (tiny budget here).
+    #[test]
+    fn mlp_experiment_renders_a_table4_style_table() {
+        let dir = std::env::temp_dir().join("bf16_mlp_exp_test");
+        let opts = ExpOptions {
+            steps: Some(12),
+            seeds: 1,
+            out_dir: dir.to_string_lossy().into_owned(),
+            ..ExpOptions::default()
+        };
+        let out = run_experiment("mlp", None, &opts, None).unwrap();
+        for needle in ["fp32", "sr16", "kahan16", "standard16", "eval acc %", "weight KB"] {
+            assert!(out.contains(needle), "missing {needle:?} in:\n{out}");
+        }
+        assert!(dir.join("mlp.csv").exists());
     }
 
     #[test]

@@ -13,12 +13,7 @@ use crate::data::{self, Split};
 use crate::metrics::{auc, History, HistoryPoint};
 use crate::precision::Policy;
 use crate::runtime::{BatchData, Engine, Manifest, TrainSession};
-
-/// Checkpoint magic: version 2 carries the artifact name in the header so a
-/// resume into a mismatched artifact fails loudly instead of silently
-/// loading same-shaped tensors.
-const CKPT_MAGIC: &[u8; 8] = b"BF16CKP2";
-const CKPT_MAGIC_V1: &[u8; 8] = b"BF16CKPT";
+use crate::util::ckpt;
 
 /// Final summary of one run.
 #[derive(Debug, Clone)]
@@ -186,26 +181,21 @@ impl<'e> Trainer<'e> {
 
     /// Save all state tensors to a binary checkpoint.
     ///
-    /// Format (v2): magic, artifact-name length + bytes, step counter,
-    /// tensor count, then per tensor `len:u64, f32-LE data`.  Layout order
-    /// is the manifest state order.
+    /// Format (`BF16CKP2`, shared framing in [`crate::util::ckpt`]): magic,
+    /// artifact-name length + bytes, step counter, tensor count, then per
+    /// tensor `len:u64, f32-LE data`.  Layout order is the manifest state
+    /// order.  Byte-identical to the pre-refactor writer, so existing
+    /// checkpoints stay loadable.
     pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut buf: Vec<u8> = Vec::new();
-        buf.extend_from_slice(CKPT_MAGIC);
-        let name = self.cfg.artifact_name();
-        buf.extend_from_slice(&(name.len() as u64).to_le_bytes());
-        buf.extend_from_slice(name.as_bytes());
-        buf.extend_from_slice(&self.session.steps_done.to_le_bytes());
+        let mut w = ckpt::Writer::new();
+        w.str(&self.cfg.artifact_name());
+        w.u64(self.session.steps_done);
         let n = self.session.state_len();
-        buf.extend_from_slice(&(n as u64).to_le_bytes());
+        w.u64(n as u64);
         for i in 0..n {
-            let vals = self.session.state_host(i)?;
-            buf.extend_from_slice(&(vals.len() as u64).to_le_bytes());
-            for v in vals {
-                buf.extend_from_slice(&v.to_le_bytes());
-            }
+            w.f32s(&self.session.state_host(i)?);
         }
-        std::fs::write(path.as_ref(), buf)
+        std::fs::write(path.as_ref(), w.into_bytes())
             .with_context(|| format!("writing checkpoint {:?}", path.as_ref()))?;
         Ok(())
     }
@@ -214,36 +204,9 @@ impl<'e> Trainer<'e> {
     pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
         let buf = std::fs::read(path.as_ref())
             .with_context(|| format!("reading checkpoint {:?}", path.as_ref()))?;
-        if buf.len() >= 8 && &buf[..8] == CKPT_MAGIC_V1 {
-            bail!(
-                "checkpoint {:?} is in the legacy v1 format, which lacks the artifact-name \
-                 header and cannot be validated against this run; regenerate it by training \
-                 and saving again with this version",
-                path.as_ref()
-            );
-        }
-        if buf.len() < 32 || &buf[..8] != CKPT_MAGIC {
-            bail!("not a bf16-train checkpoint");
-        }
-        let mut off = 8;
-        let rd_u64 = |buf: &[u8], off: &mut usize| -> Result<u64> {
-            if *off + 8 > buf.len() {
-                bail!("truncated checkpoint");
-            }
-            let v = u64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
-            *off += 8;
-            Ok(v)
-        };
-        let name_len = rd_u64(&buf, &mut off)? as usize;
-        // guard with subtraction: `off + name_len` could wrap for a huge
-        // length read from a corrupted file
-        if name_len > buf.len().saturating_sub(off) {
-            bail!("truncated checkpoint");
-        }
-        let name = std::str::from_utf8(&buf[off..off + name_len])
-            .context("checkpoint artifact name is not utf-8")?
-            .to_string();
-        off += name_len;
+        let mut r = ckpt::Reader::new(&buf)
+            .with_context(|| format!("checkpoint {:?}", path.as_ref()))?;
+        let name = r.str()?;
         let expected = self.cfg.artifact_name();
         if name != expected {
             bail!(
@@ -251,26 +214,13 @@ impl<'e> Trainer<'e> {
                  refusing to load mismatched state"
             );
         }
-        let steps = rd_u64(&buf, &mut off)?;
-        let n = rd_u64(&buf, &mut off)? as usize;
+        let steps = r.u64()?;
+        let n = r.u64()? as usize;
         if n != self.session.state_len() {
             bail!("checkpoint has {n} tensors, artifact needs {}", self.session.state_len());
         }
         for i in 0..n {
-            let len = rd_u64(&buf, &mut off)? as usize;
-            let byte_len = len
-                .checked_mul(4)
-                .with_context(|| format!("corrupt checkpoint: tensor {i} length {len}"))?;
-            if byte_len > buf.len().saturating_sub(off) {
-                bail!("truncated checkpoint");
-            }
-            let mut vals = Vec::with_capacity(len);
-            for k in 0..len {
-                vals.push(f32::from_le_bytes(
-                    buf[off + k * 4..off + k * 4 + 4].try_into().unwrap(),
-                ));
-            }
-            off += len * 4;
+            let vals = r.f32s()?;
             self.session.set_state(i, &vals)?;
         }
         self.session.steps_done = steps;

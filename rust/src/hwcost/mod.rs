@@ -110,6 +110,19 @@ pub fn training_bytes(mode: Mode, n: u64, n_states: u32) -> u64 {
         as u64
 }
 
+/// Weight-storage bytes for one parameter tensor of `elems` elements
+/// trained under `mode`: the in-format weights plus any Kahan compensation
+/// buffer (the quantities that scale with the *weight* count; optimizer
+/// state is accounted separately via [`training_bytes`]).  This is the
+/// per-tensor unit the generic `qsim::train::Trainer::weight_bytes` walk
+/// sums — the accounting used to be hand-rolled inside the DLRM trainer
+/// only; now every app's memory plan comes from the same `Module` param
+/// walk.
+pub fn tensor_weight_bytes(elems: u64, mode: Mode) -> u64 {
+    let p = memory_plan(mode);
+    elems * (p.weight_bytes + p.kahan_bytes) as u64
+}
+
 /// Figure 5's x-axis: bytes per weight when a fraction `kahan_frac` of the
 /// model's weights use Kahan (rest stochastic rounding), Adam-free DLRM
 /// (SGD, no momentum ⇒ no optimizer state).
@@ -160,6 +173,15 @@ mod tests {
         let vsmixed = 1.0 - kahan as f64 / mixed as f64;
         assert!((vs32 - 0.333).abs() < 0.01, "{vs32}");
         assert!((vsmixed - 0.428).abs() < 0.01, "{vsmixed}");
+    }
+
+    #[test]
+    fn tensor_weight_bytes_counts_weights_plus_kahan() {
+        assert_eq!(tensor_weight_bytes(100, Mode::Sr16), 200);
+        assert_eq!(tensor_weight_bytes(100, Mode::Standard16), 200);
+        assert_eq!(tensor_weight_bytes(100, Mode::Kahan16), 400);
+        assert_eq!(tensor_weight_bytes(100, Mode::SrKahan16), 400);
+        assert_eq!(tensor_weight_bytes(100, Mode::Fp32), 400);
     }
 
     #[test]

@@ -60,6 +60,15 @@
 //! auto-sized (`0`) cells back to sequential to avoid oversubscription.
 //! The pool currently drives the qsim-native kernels; the PJRT session
 //! path records the knob but executes its lowered programs as compiled.
+//!
+//! ## The native training engine
+//!
+//! Native (simulator) apps implement one trait — [`qsim::train::Task`] —
+//! and the generic [`qsim::train::Trainer`] supplies the training loop,
+//! the per-tensor optimizer bank, the held-out eval fork, the intra-step
+//! pool and native `BF16CKP2` checkpoint/resume (bit-identical
+//! continuation).  `qsim::dlrm`, `qsim::gpt` and `qsim::mlp` are `Task`
+//! impls; see the README's "Adding a new app" walkthrough.
 
 pub mod config;
 pub mod util;
@@ -74,6 +83,7 @@ pub mod runtime;
 pub use config::{RunConfig, RunSpec, Schedule};
 pub use coordinator::{run_experiment, ExpOptions, RunSummary, Sweep, SweepResults, Trainer};
 pub use precision::{Format, Mode, Policy, RoundMode};
+pub use qsim::train::{EvalMetrics, StepTelemetry, Task, Trainer as NativeTrainer};
 
 use anyhow::Result;
 

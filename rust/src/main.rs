@@ -47,20 +47,25 @@ const USAGE: &str = "usage: repro <command>
   list [--artifacts DIR]
   train --app APP [--mode MODE] [--fmt FMT] [--steps N] [--seed S]
         [--lr LR] [--intra-threads T] [--config FILE.toml]
-        [--checkpoint PATH] [--resume PATH]
-  exp <table1|table2|table3|table4|fig1|fig2|fig5|fig9|fig10|fig11|fig12|thm1|gpt|all>
+        [--checkpoint PATH] [--resume PATH] [--native]
+  exp <table1|table2|table3|table4|fig1|fig2|fig5|fig9|fig10|fig11|fig12|thm1|gpt|mlp|all>
         [--steps N] [--seeds K] [--app APP] [--threads T]
         [--intra-threads T] [--no-smooth]
   bench-step <artifact-name> [--iters N] [--intra-threads T]
   qsim-parity [--steps N] [--seed S] [--intra-threads T]
-        [--app all|dlrm|gpt] [--backend fast|reference]
+        [--app all|dlrm|gpt|mlp] [--backend fast|reference]
 
 modes: fp32 standard16 mixed16 sr16 kahan16 srkahan16
 fmts:  bf16 (default) fp16 e8m5 e8m3 e8m1
 
-`exp gpt` trains the native gpt-nano transformer LM (attention + layernorm
-+ tied softmax on the bit-exact simulator) across fp32/sr16/kahan16/
-standard16 — no PJRT artifacts needed.
+`exp gpt` / `exp mlp` train the native apps (gpt-nano transformer LM;
+spiral-MLP classifier) across fp32/sr16/kahan16/standard16 on the
+bit-exact simulator — no PJRT artifacts needed.
+
+`train --native` runs one app (dlrm, gpt-nano, mlp) on the generic
+`qsim::train` engine instead of the PJRT runtime; --checkpoint / --resume
+save and restore native BF16CKP2 checkpoints, and a resumed run is
+bit-identical to an uninterrupted one.
 
 --threads fans runs out across sweep workers; --intra-threads parallelizes
 within one train step (bit-identical results at every setting).  Today the
@@ -108,7 +113,22 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     let artifacts_dir = args.opt("artifacts", &cfg.artifacts_dir.clone());
     let checkpoint = args.opt_maybe("checkpoint");
     let resume = args.opt_maybe("resume");
+    let native = args.flag("native");
     args.finish()?;
+
+    if native {
+        return cmd_train_native(
+            &cfg.app,
+            policy,
+            steps,
+            seed,
+            lr,
+            intra_threads,
+            cfg.eval_batches,
+            checkpoint,
+            resume,
+        );
+    }
 
     let spec = RunSpec::from_config(cfg)
         .policy(policy)
@@ -154,6 +174,102 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     if let Some(path) = checkpoint {
         tr.save_checkpoint(&path)?;
         println!("checkpoint: {path}");
+    }
+    Ok(())
+}
+
+/// `train --native`: run one app on the generic `qsim::train` engine (no
+/// PJRT artifacts), with native BF16CKP2 checkpoint/resume.  Constant lr —
+/// the native engine leaves scheduling to the experiment harness.
+#[allow(clippy::too_many_arguments)]
+fn cmd_train_native(
+    app: &str,
+    policy: Policy,
+    steps: u64,
+    seed: u64,
+    lr: f64,
+    intra_threads: usize,
+    eval_batches: u64,
+    checkpoint: Option<String>,
+    resume: Option<String>,
+) -> Result<()> {
+    use bf16_train::qsim::dlrm::DlrmConfig;
+    use bf16_train::qsim::gpt::GptConfig;
+    use bf16_train::qsim::mlp::MlpConfig;
+
+    println!(
+        "train {app} (native qsim) | steps={steps} lr={lr} seed={seed} [{} on {}]",
+        policy.mode, policy.fmt.name
+    );
+    let fmt = policy.fmt;
+    match app {
+        "dlrm" => run_native_train(
+            DlrmConfig { seed, fmt, intra_threads, ..Default::default() },
+            policy.mode,
+            steps,
+            lr,
+            eval_batches,
+            checkpoint,
+            resume,
+        ),
+        "gpt" | "gpt-nano" => run_native_train(
+            GptConfig { seed, fmt, intra_threads, ..Default::default() },
+            policy.mode,
+            steps,
+            lr,
+            eval_batches,
+            checkpoint,
+            resume,
+        ),
+        "mlp" => run_native_train(
+            MlpConfig { seed, fmt, intra_threads, ..Default::default() },
+            policy.mode,
+            steps,
+            lr,
+            eval_batches,
+            checkpoint,
+            resume,
+        ),
+        other => bail!("--native supports apps dlrm, gpt-nano and mlp, got {other:?}"),
+    }
+}
+
+/// The app-generic body of `train --native` — one function for every
+/// [`Task`](bf16_train::qsim::Task), which is the point of the engine.
+fn run_native_train<T: bf16_train::qsim::Task>(
+    task: T,
+    mode: Mode,
+    steps: u64,
+    lr: f64,
+    eval_batches: u64,
+    checkpoint: Option<String>,
+    resume: Option<String>,
+) -> Result<()> {
+    let mut tr = bf16_train::qsim::train::Trainer::new(task, mode);
+    if let Some(path) = &resume {
+        tr.load_checkpoint(path)?;
+        println!("resumed from {path} at step {}", tr.steps_done());
+    }
+    let remaining = steps.saturating_sub(tr.steps_done());
+    let t0 = std::time::Instant::now();
+    let mut last_loss = f32::NAN;
+    for _ in 0..remaining {
+        last_loss = tr.step(lr as f32).loss;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = tr.eval(eval_batches as usize);
+    println!(
+        "done: eval loss={:.4} {}={:.4}  train-loss={:.4}  ({} steps, {:.1} steps/s)",
+        m.loss,
+        m.metric_name,
+        m.metric,
+        last_loss,
+        remaining,
+        if dt > 0.0 { remaining as f64 / dt } else { 0.0 }
+    );
+    if let Some(path) = &checkpoint {
+        tr.save_checkpoint(path)?;
+        println!("checkpoint: {path} (step {})", tr.steps_done());
     }
     Ok(())
 }
@@ -238,22 +354,24 @@ fn cmd_bench_step(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// Deterministic digest of native qsim training runs (DLRM and the
-/// gpt-nano transformer LM): per-step loss bit patterns and cancellation
+/// Deterministic digest of native qsim training runs (DLRM, the gpt-nano
+/// transformer LM and the spiral-MLP classifier — all through the generic
+/// `qsim::train` engine): per-step loss bit patterns and cancellation
 /// counters, plus a final eval.  Contains no timings, so the output must be
 /// byte-identical across `--intra-threads` settings *and* across
 /// `--backend fast|reference` — the CI determinism job diffs all of them.
 fn cmd_qsim_parity(args: &mut Args) -> Result<()> {
     use bf16_train::qsim::dlrm::{DlrmConfig, DlrmTrainer};
     use bf16_train::qsim::gpt::{GptConfig, GptTrainer};
+    use bf16_train::qsim::mlp::{MlpConfig, MlpTrainer};
     use bf16_train::qsim::Backend;
 
     let steps = args.opt_u64("steps", 40)?;
     let seed = args.opt_u64("seed", 17)?;
     let intra_threads = args.opt_u64("intra-threads", 1)? as usize;
     let app = args.opt("app", "all");
-    if !matches!(app.as_str(), "all" | "dlrm" | "gpt" | "gpt-nano") {
-        bail!("--app must be all, dlrm or gpt, got {app:?}");
+    if !matches!(app.as_str(), "all" | "dlrm" | "gpt" | "gpt-nano" | "mlp") {
+        bail!("--app must be all, dlrm, gpt or mlp, got {app:?}");
     }
     let backend = match args.opt("backend", "fast").as_str() {
         "fast" => Backend::Fast,
@@ -291,12 +409,12 @@ fn cmd_qsim_parity(args: &mut Args) -> Result<()> {
                     tel.mlp.nonzero
                 );
             }
-            let (eval_loss, auc) = tr.eval(4);
+            let m = tr.eval(4);
             println!(
                 "dlrm {} final: eval-loss {:08x} auc {:08x}",
                 mode.name(),
-                eval_loss.to_bits(),
-                auc.to_bits()
+                m.loss.to_bits(),
+                m.metric.to_bits()
             );
         }
     }
@@ -316,17 +434,50 @@ fn cmd_qsim_parity(args: &mut Args) -> Result<()> {
             };
             let mut tr = GptTrainer::new(cfg, mode);
             for step in 0..steps {
-                let (loss, stats) = tr.step(0.1);
+                let tel = tr.step(0.1);
+                let stats = tel.total();
                 println!(
                     "gpt-nano {} step {step}: loss {:08x} upd {}/{}",
                     mode.name(),
-                    loss.to_bits(),
+                    tel.loss.to_bits(),
                     stats.cancelled,
                     stats.nonzero
                 );
             }
-            let eval_loss = tr.eval(4);
+            let eval_loss = tr.eval(4).loss;
             println!("gpt-nano {} final: eval-loss {:08x}", mode.name(), eval_loss.to_bits());
+        }
+    }
+    if app == "all" || app == "mlp" {
+        for mode in [Mode::Fp32, Mode::Standard16, Mode::Sr16, Mode::Kahan16] {
+            let cfg = MlpConfig {
+                seed,
+                // large enough that the matmul fan-outs engage
+                hidden: 96,
+                batch: 64,
+                backend,
+                intra_threads,
+                ..Default::default()
+            };
+            let mut tr = MlpTrainer::new(cfg, mode);
+            for step in 0..steps {
+                let tel = tr.step(0.1);
+                let stats = tel.total();
+                println!(
+                    "mlp {} step {step}: loss {:08x} upd {}/{}",
+                    mode.name(),
+                    tel.loss.to_bits(),
+                    stats.cancelled,
+                    stats.nonzero
+                );
+            }
+            let m = tr.eval(4);
+            println!(
+                "mlp {} final: eval-loss {:08x} acc {:08x}",
+                mode.name(),
+                m.loss.to_bits(),
+                m.metric.to_bits()
+            );
         }
     }
     Ok(())

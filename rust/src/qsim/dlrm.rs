@@ -8,17 +8,16 @@
 //! the rounding behaviour of interest lives in the *updates*, not the
 //! interaction flavour), a top MLP to a single logit, BCE loss.
 
-use std::sync::Arc;
-
-use crate::precision::{Format, Mode, FP32};
+use crate::precision::Format;
 use crate::util::rng::{Rng, ZipfTable};
 
 use super::nn::{Embedding, Linear, Module};
-use super::optim::{Sgd, SgdState, UpdateStats};
-use super::pool::Pool;
 use super::tape::{QPolicy, Tape, Var};
 use super::tensor::Tensor;
+use super::train::{EvalMetrics, Task, TensorClass, Trainer};
 use super::Backend;
+
+pub use super::train::StepTelemetry;
 
 /// Stream tag for the held-out eval batches — disjoint from the training
 /// stream (0xC7), so evaluation can never perturb the training trajectory.
@@ -201,8 +200,12 @@ impl DlrmModel {
         (loss, params)
     }
 
-    /// Forward pass only; returns per-example logits.
-    pub fn logits(&self, batch: &CtrBatch, policy: QPolicy) -> Vec<f32> {
+    /// Forward-only pass from no-grad leaves; returns (mean BCE loss,
+    /// per-example logits) off one frozen graph — the eval hot path used
+    /// to build two identical graphs per batch (one for the loss, one for
+    /// the logits).  Frozen and trainable forwards are bit-identical, so
+    /// the reported eval loss is unchanged.
+    pub fn eval_scores(&self, batch: &CtrBatch, policy: QPolicy) -> (f32, Vec<f32>) {
         let mut t2 = Tape::new(policy);
         let mut feats: Vec<Var> = Vec::new();
         for (ti, table) in self.tables.iter().enumerate() {
@@ -216,10 +219,28 @@ impl DlrmModel {
         let h1 = self.top.forward_frozen(&mut t2, cat);
         let h = t2.relu(h1);
         let logits2d = self.head.forward_frozen(&mut t2, h);
-        t2.value(logits2d).data.clone()
+        let loss = t2.bce_loss(
+            logits2d,
+            Tensor::from_vec(batch.labels.len(), 1, batch.labels.data.clone()),
+        );
+        let scores = t2.value(logits2d).data.clone();
+        (t2.value(loss).item(), scores)
     }
 
-    fn param_tensors_mut(&mut self) -> Vec<&mut Tensor> {
+    /// All parameter tensors, in forward registration order.
+    pub fn param_tensors(&self) -> Vec<&Tensor> {
+        let mut v: Vec<&Tensor> = Vec::new();
+        for e in &self.tables {
+            v.extend(e.params());
+        }
+        v.extend(self.bot.params());
+        v.extend(self.top.params());
+        v.extend(self.head.params());
+        v
+    }
+
+    /// Mutable walk in the same order (optimizer updates).
+    pub fn param_tensors_mut(&mut self) -> Vec<&mut Tensor> {
         let mut v: Vec<&mut Tensor> = Vec::new();
         for e in &mut self.tables {
             v.extend(e.params_mut());
@@ -231,172 +252,116 @@ impl DlrmModel {
     }
 }
 
-/// Per-step per-layer-class telemetry (Figure 9's series).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct StepTelemetry {
-    pub loss: f32,
-    pub embed: UpdateStats,
-    pub mlp: UpdateStats,
-}
+/// DLRM as a [`Task`]: the config maps onto the model, the CTR stream and
+/// the AUC eval; the generic [`Trainer`] supplies the loop, the optimizer
+/// bank (per-tensor modes included — Figure 5's sweep), the eval fork and
+/// checkpointing.  Param order: [tables..., bot_w, bot_b, top_w, top_b,
+/// head_w, head_b]; tensors are distinguished in the dither schedule by
+/// that index (the key's `tensor_id` coordinate), not by per-tensor seeds.
+impl Task for DlrmConfig {
+    type Model = DlrmModel;
+    type Gen = CtrGen;
+    type Batch = CtrBatch;
 
-/// Trainer combining the model, optimizer and data generator.
-pub struct DlrmTrainer {
-    pub model: DlrmModel,
-    opts: Vec<Sgd>,
-    states: Vec<SgdState>,
-    gen: CtrGen,
-    /// Dedicated eval stream forked from the seed (shared ground truth,
-    /// disjoint sample draws): evaluation never touches `gen`, so the
-    /// training trajectory is invariant to `eval_every`.
-    eval_gen: CtrGen,
-    policy: QPolicy,
-    /// Retained across steps (`Fast` backend): node + gradient storage is
-    /// recycled via `Tape::reset` instead of reallocated per step.
-    tape: Tape,
-    /// Shared intra-step worker pool (spawned once, here; the tape and
-    /// every optimizer hold clones of this handle).
-    pool: Arc<Pool>,
-}
+    const NAME: &'static str = "dlrm";
+    const EVAL_STREAM: u64 = CTR_EVAL_STREAM;
 
-impl DlrmTrainer {
-    /// All parameter tensors share one precision mode.
-    pub fn new(cfg: DlrmConfig, mode: Mode) -> Self {
-        let n = cfg.num_tables + 6;
-        Self::new_mixed(cfg, vec![mode; n])
+    fn seed(&self) -> u64 {
+        self.seed
     }
 
-    /// Per-tensor precision modes (Figure 5's incremental SR→Kahan sweep).
-    /// `modes` ordering matches the param order of `DlrmModel::forward`:
-    /// [tables..., bot_w, bot_b, top_w, top_b, head_w, head_b].
-    ///
-    /// The worker pool is spawned here, once per trainer, sized by
-    /// `cfg.intra_threads`; tensors are distinguished in the dither
-    /// schedule by their param index (the key's `tensor_id` coordinate),
-    /// not by per-tensor seeds.
-    pub fn new_mixed(cfg: DlrmConfig, modes: Vec<Mode>) -> Self {
-        assert_eq!(modes.len(), cfg.num_tables + 6, "one mode per tensor");
-        let pool = Arc::new(Pool::new(if cfg.backend == Backend::Fast {
-            cfg.intra_threads
+    fn fmt(&self) -> Format {
+        self.fmt
+    }
+
+    fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    fn intra_threads(&self) -> usize {
+        self.intra_threads
+    }
+
+    fn config_fingerprint(&self) -> String {
+        format!(
+            "seed={} tables={} rows={} embed={} dense={} hidden={} batch={}",
+            self.seed, self.num_tables, self.table_size, self.embed_dim, self.dense_dim,
+            self.hidden, self.batch
+        )
+    }
+
+    fn num_tensors(&self) -> usize {
+        self.num_tables + 6
+    }
+
+    fn tensor_class(&self, i: usize) -> TensorClass {
+        if i < self.num_tables {
+            TensorClass::Embed
         } else {
-            1
-        }));
-        let model = DlrmModel::init(&cfg);
-        let opts: Vec<Sgd> = modes
-            .iter()
-            .enumerate()
-            .map(|(i, &m)| {
-                Sgd::new(m, cfg.fmt, 0.0, 0.0, cfg.seed)
-                    .with_tensor_id(i as u64)
-                    .with_backend(cfg.backend)
-                    .with_pool(Arc::clone(&pool))
-            })
-            .collect();
-        let mut probe = DlrmModel::init(&cfg);
-        let states = probe
-            .param_tensors_mut()
-            .iter()
-            .zip(&opts)
-            .map(|(t, o)| o.init_state(t))
-            .collect();
-        // fwd/bwd compute rounds unless every tensor trains in fp32
-        let policy = if modes.iter().all(|&m| m == Mode::Fp32) {
-            QPolicy::with_backend(FP32, cfg.backend)
-        } else {
-            QPolicy::with_backend(cfg.fmt, cfg.backend)
-        };
-        let gen = CtrGen::new(&cfg);
-        let eval_gen = gen.fork(CTR_EVAL_STREAM);
-        let tape = Tape::with_pool(policy, Arc::clone(&pool));
-        Self { model, opts, states, gen, eval_gen, policy, tape, pool }
-    }
-
-    /// Effective intra-step worker count (1 unless configured otherwise).
-    pub fn intra_threads(&self) -> usize {
-        self.pool.threads()
-    }
-
-    /// Weight-memory bytes under the per-tensor modes (Figure 5's x-axis).
-    pub fn weight_bytes(&self, modes: &[Mode]) -> u64 {
-        let mut probe = DlrmModel::init(&self.model.cfg);
-        probe
-            .param_tensors_mut()
-            .iter()
-            .zip(modes)
-            .map(|(t, m)| t.data.len() as u64 * if m.kahan() { 4 } else { 2 })
-            .sum()
-    }
-
-    /// One SGD step over a fresh synthetic batch.
-    ///
-    /// `Fast` backend: the retained tape is `reset` (node and gradient
-    /// buffers recycled) and gradients are fed to the optimizer by
-    /// reference, so steady-state tensor traffic is allocation-free; only
-    /// the small per-batch index/label buffers stored in graph ops are
-    /// still allocated each step.  `Reference` backend: a fresh tape per
-    /// step, reproducing the pre-optimization allocation pattern.
-    pub fn step(&mut self, lr: f32) -> StepTelemetry {
-        let batch = self.gen.next_batch();
-        if self.policy.backend == Backend::Fast {
-            self.tape.reset();
-        } else {
-            self.tape = Tape::new(self.policy);
+            TensorClass::Dense
         }
-        let (loss, param_vars) = self.model.forward_into(&mut self.tape, &batch);
-        self.tape.backward(loss);
-        let loss_val = self.tape.value(loss).item();
-        let n_tables = self.model.cfg.num_tables;
-        let mut tel = StepTelemetry { loss: loss_val, ..Default::default() };
-        let tape = &self.tape;
-        let params = self.model.param_tensors_mut();
-        for (i, (w, var)) in params.into_iter().zip(&param_vars).enumerate() {
-            let zero_g;
-            let g = match tape.grad(*var) {
-                Some(g) => g,
-                // a parameter off the loss path still takes its (no-op)
-                // optimizer update, so its step counter — the dither key's
-                // step coordinate — stays in lockstep with the others
-                None => {
-                    zero_g = Tensor::zeros(w.rows, w.cols);
-                    &zero_g
-                }
-            };
-            let stats = self.opts[i].step(w, &mut self.states[i], g, lr);
-            if i < n_tables {
-                tel.embed.merge(stats);
-            } else {
-                tel.mlp.merge(stats);
-            }
-        }
-        tel
     }
 
-    /// Evaluate mean loss and AUC over `n` fresh batches from the dedicated
-    /// eval stream.  Side-effect-free with respect to training: the
-    /// training generator is never advanced (it used to be, making every
-    /// reported accuracy a function of the eval cadence).  `n == 0` is
-    /// defined as `(0.0, 0.5)` — no data, chance AUC — instead of 0/0 NaN.
-    pub fn eval(&mut self, n: usize) -> (f32, f32) {
+    fn init_model(&self) -> DlrmModel {
+        DlrmModel::init(self)
+    }
+
+    fn make_gen(&self) -> CtrGen {
+        CtrGen::new(self)
+    }
+
+    fn fork_gen(gen: &CtrGen, stream: u64) -> CtrGen {
+        gen.fork(stream)
+    }
+
+    fn next_batch(gen: &mut CtrGen) -> CtrBatch {
+        gen.next_batch()
+    }
+
+    fn forward_into(model: &DlrmModel, t: &mut Tape, batch: &CtrBatch) -> (Var, Vec<Var>) {
+        model.forward_into(t, batch)
+    }
+
+    fn param_tensors(model: &DlrmModel) -> Vec<&Tensor> {
+        model.param_tensors()
+    }
+
+    fn param_tensors_mut(model: &mut DlrmModel) -> Vec<&mut Tensor> {
+        model.param_tensors_mut()
+    }
+
+    /// Mean loss and AUC over `n` fresh batches.  `n == 0` is defined as
+    /// `(0.0, 0.5)` — no data, chance AUC — instead of 0/0 NaN.
+    fn eval(model: &DlrmModel, gen: &mut CtrGen, n: usize, policy: QPolicy) -> EvalMetrics {
         if n == 0 {
-            return (0.0, 0.5);
+            return EvalMetrics { loss: 0.0, metric: 0.5, metric_name: "auc" };
         }
         let mut loss_acc = 0f64;
         let mut scored: Vec<(f32, bool)> = Vec::new();
         for _ in 0..n {
-            let batch = self.eval_gen.next_batch();
-            let (tape, loss, _) = self.model.forward(&batch, self.policy);
-            loss_acc += tape.value(loss).item() as f64;
-            let logits = self.model.logits(&batch, self.policy);
+            let batch = gen.next_batch();
+            let (loss, logits) = model.eval_scores(&batch, policy);
+            loss_acc += loss as f64;
             for (z, &y) in logits.iter().zip(&batch.labels.data) {
                 scored.push((*z, y > 0.5));
             }
         }
-        ((loss_acc / n as f64) as f32, crate::metrics::auc(&scored))
+        EvalMetrics {
+            loss: (loss_acc / n as f64) as f32,
+            metric: crate::metrics::auc(&scored),
+            metric_name: "auc",
+        }
     }
 }
+
+/// The DLRM trainer — an instantiation of the generic engine.
+pub type DlrmTrainer = Trainer<DlrmConfig>;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::precision::Mode;
+    use crate::qsim::UpdateStats;
 
     #[test]
     fn training_reduces_loss_fp32() {
@@ -564,8 +529,8 @@ mod tests {
             assert_eq!(a.mlp, b.mlp, "mlp stats diverged at step {step}");
             // eval_every = 10, the ISSUE's regression cadence
             if (step + 1) % 10 == 0 {
-                let (el, auc) = with_eval.eval(2);
-                assert!(el.is_finite() && (0.0..=1.0).contains(&auc));
+                let m = with_eval.eval(2);
+                assert!(m.loss.is_finite() && (0.0..=1.0).contains(&m.metric));
             }
         }
         for (pi, (wa, wb)) in with_eval
@@ -585,7 +550,7 @@ mod tests {
     fn empty_eval_is_defined() {
         let cfg = DlrmConfig { seed: 2, ..Default::default() };
         let mut tr = DlrmTrainer::new(cfg, Mode::Fp32);
-        assert_eq!(tr.eval(0), (0.0, 0.5));
+        assert_eq!(tr.eval(0), EvalMetrics { loss: 0.0, metric: 0.5, metric_name: "auc" });
     }
 
     #[test]
@@ -597,7 +562,7 @@ mod tests {
         for _ in 0..400 {
             tr.step(0.1);
         }
-        let (_, auc) = tr.eval(16);
+        let auc = tr.eval(16).metric;
         assert!(auc > 0.55, "held-out auc {auc} — eval stream looks unrelated to training");
     }
 

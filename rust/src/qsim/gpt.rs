@@ -19,14 +19,13 @@
 
 use std::sync::Arc;
 
-use crate::precision::{Format, Mode, FP32};
+use crate::precision::Format;
 use crate::util::rng::Rng;
 
 use super::nn::{Embedding, LayerNorm, Linear, Mlp, Module};
-use super::optim::{Sgd, SgdState, UpdateStats};
-use super::pool::Pool;
 use super::tape::{QPolicy, Tape, Var};
 use super::tensor::Tensor;
+use super::train::{EvalMetrics, Task, TensorClass, Trainer};
 use super::Backend;
 
 /// Stream tag for the synthetic Markov corpus' training draws.
@@ -306,6 +305,16 @@ impl GptModel {
     }
 
     /// All parameter tensors, in forward registration order.
+    pub fn param_tensors(&self) -> Vec<&Tensor> {
+        let mut v = self.tok.params();
+        v.extend(self.pos.params());
+        for b in &self.blocks {
+            v.extend(b.params());
+        }
+        v
+    }
+
+    /// Mutable walk in the same order (optimizer updates).
     pub fn param_tensors_mut(&mut self) -> Vec<&mut Tensor> {
         let mut v = self.tok.params_mut();
         v.extend(self.pos.params_mut());
@@ -316,110 +325,109 @@ impl GptModel {
     }
 }
 
-/// Trainer combining the model, per-tensor optimizers and the corpus
-/// generators — the gpt-nano counterpart of `DlrmTrainer`.
-pub struct GptTrainer {
-    pub model: GptModel,
-    opts: Vec<Sgd>,
-    states: Vec<SgdState>,
-    gen: MarkovGen,
-    /// Dedicated eval stream forked from the seed: evaluation never
-    /// advances the training generator.
-    eval_gen: MarkovGen,
-    policy: QPolicy,
-    tape: Tape,
-    pool: Arc<Pool>,
-}
+/// gpt-nano as a [`Task`]: the config maps onto the model, the Markov
+/// corpus and the perplexity eval; the generic [`Trainer`] supplies the
+/// loop, the per-tensor optimizer bank (mixed precision placements now
+/// work here too, not just on DLRM), the eval fork and checkpointing.
+/// Param order: [tok, pos, (wq, wk, wv, wo, fc1_w, fc1_b, fc2_w, fc2_b)
+/// × block]; the token/position embeddings are the `Embed` telemetry
+/// class, everything else `Dense`.
+impl Task for GptConfig {
+    type Model = GptModel;
+    type Gen = MarkovGen;
+    type Batch = LmBatch;
 
-impl GptTrainer {
-    pub fn new(cfg: GptConfig, mode: Mode) -> Self {
-        let pool = Arc::new(Pool::new(if cfg.backend == Backend::Fast {
-            cfg.intra_threads
-        } else {
-            1
-        }));
-        let model = GptModel::init(&cfg);
-        let n = GptModel::num_tensors(&cfg);
-        let opts: Vec<Sgd> = (0..n)
-            .map(|i| {
-                Sgd::new(mode, cfg.fmt, 0.0, 0.0, cfg.seed)
-                    .with_tensor_id(i as u64)
-                    .with_backend(cfg.backend)
-                    .with_pool(Arc::clone(&pool))
-            })
-            .collect();
-        let mut probe = GptModel::init(&cfg);
-        let states: Vec<SgdState> = probe
-            .param_tensors_mut()
-            .iter()
-            .zip(&opts)
-            .map(|(t, o)| o.init_state(t))
-            .collect();
-        let policy = if mode == Mode::Fp32 {
-            QPolicy::with_backend(FP32, cfg.backend)
-        } else {
-            QPolicy::with_backend(cfg.fmt, cfg.backend)
-        };
-        let gen = MarkovGen::new(&cfg);
-        let eval_gen = gen.fork(LM_EVAL_STREAM);
-        let tape = Tape::with_pool(policy, Arc::clone(&pool));
-        Self { model, opts, states, gen, eval_gen, policy, tape, pool }
+    const NAME: &'static str = "gpt-nano";
+    const EVAL_STREAM: u64 = LM_EVAL_STREAM;
+
+    fn seed(&self) -> u64 {
+        self.seed
     }
 
-    /// Effective intra-step worker count.
-    pub fn intra_threads(&self) -> usize {
-        self.pool.threads()
+    fn fmt(&self) -> Format {
+        self.fmt
     }
 
-    /// One SGD step over a fresh synthetic batch; returns the train loss
-    /// and the merged update-cancellation stats (Figure-9-style telemetry).
-    pub fn step(&mut self, lr: f32) -> (f32, UpdateStats) {
-        let batch = self.gen.next_batch();
-        if self.policy.backend == Backend::Fast {
-            self.tape.reset();
+    fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    fn intra_threads(&self) -> usize {
+        self.intra_threads
+    }
+
+    fn config_fingerprint(&self) -> String {
+        format!(
+            "seed={} vocab={} seq={} dim={} hidden={} blocks={} batch={}",
+            self.seed, self.vocab, self.seq_len, self.dim, self.hidden, self.n_blocks,
+            self.batch
+        )
+    }
+
+    fn num_tensors(&self) -> usize {
+        GptModel::num_tensors(self)
+    }
+
+    fn tensor_class(&self, i: usize) -> TensorClass {
+        if i < 2 {
+            TensorClass::Embed
         } else {
-            self.tape = Tape::new(self.policy);
+            TensorClass::Dense
         }
-        let (loss, param_vars) = self.model.forward_into(&mut self.tape, &batch);
-        self.tape.backward(loss);
-        let loss_val = self.tape.value(loss).item();
-        let mut stats = UpdateStats::default();
-        let tape = &self.tape;
-        let params = self.model.param_tensors_mut();
-        for (i, (w, var)) in params.into_iter().zip(&param_vars).enumerate() {
-            let zero_g;
-            let g = match tape.grad(*var) {
-                Some(g) => g,
-                // off-path parameters still take their (no-op) update so
-                // their dither-key step counters stay in lockstep
-                None => {
-                    zero_g = Tensor::zeros(w.rows, w.cols);
-                    &zero_g
-                }
-            };
-            stats.merge(self.opts[i].step(w, &mut self.states[i], g, lr));
-        }
-        (loss_val, stats)
     }
 
-    /// Mean eval loss (natural log — perplexity is `exp`) over `n` fresh
-    /// batches from the dedicated eval stream.  `n == 0` is defined as 0.0.
-    pub fn eval(&mut self, n: usize) -> f32 {
+    fn init_model(&self) -> GptModel {
+        GptModel::init(self)
+    }
+
+    fn make_gen(&self) -> MarkovGen {
+        MarkovGen::new(self)
+    }
+
+    fn fork_gen(gen: &MarkovGen, stream: u64) -> MarkovGen {
+        gen.fork(stream)
+    }
+
+    fn next_batch(gen: &mut MarkovGen) -> LmBatch {
+        gen.next_batch()
+    }
+
+    fn forward_into(model: &GptModel, t: &mut Tape, batch: &LmBatch) -> (Var, Vec<Var>) {
+        model.forward_into(t, batch)
+    }
+
+    fn param_tensors(model: &GptModel) -> Vec<&Tensor> {
+        model.param_tensors()
+    }
+
+    fn param_tensors_mut(model: &mut GptModel) -> Vec<&mut Tensor> {
+        model.param_tensors_mut()
+    }
+
+    /// Mean eval loss (natural log) and perplexity (`exp(loss)`) over `n`
+    /// fresh batches.  `n == 0` is defined as zero loss / unit perplexity.
+    fn eval(model: &GptModel, gen: &mut MarkovGen, n: usize, policy: QPolicy) -> EvalMetrics {
         if n == 0 {
-            return 0.0;
+            return EvalMetrics { loss: 0.0, metric: 1.0, metric_name: "ppl" };
         }
         let mut acc = 0f64;
         for _ in 0..n {
-            let batch = self.eval_gen.next_batch();
-            acc += self.model.eval_loss(&batch, self.policy) as f64;
+            let batch = gen.next_batch();
+            acc += model.eval_loss(&batch, policy) as f64;
         }
-        (acc / n as f64) as f32
+        let loss = (acc / n as f64) as f32;
+        EvalMetrics { loss, metric: loss.exp(), metric_name: "ppl" }
     }
 }
+
+/// The gpt-nano trainer — an instantiation of the generic engine.
+pub type GptTrainer = Trainer<GptConfig>;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::precision::Mode;
+    use crate::qsim::train::StepTelemetry;
 
     #[test]
     fn markov_gen_is_deterministic_and_in_range() {
@@ -453,14 +461,14 @@ mod tests {
     fn fp32_training_reduces_loss() {
         let cfg = GptConfig { seed: 3, ..Default::default() };
         let mut tr = GptTrainer::new(cfg, Mode::Fp32);
-        let first: f32 = (0..10).map(|_| tr.step(0.1).0).sum::<f32>() / 10.0;
+        let first: f32 = (0..10).map(|_| tr.step(0.1).loss).sum::<f32>() / 10.0;
         for _ in 0..280 {
             tr.step(0.1);
         }
-        let last: f32 = (0..10).map(|_| tr.step(0.1).0).sum::<f32>() / 10.0;
+        let last: f32 = (0..10).map(|_| tr.step(0.1).loss).sum::<f32>() / 10.0;
         assert!(last < first, "first={first} last={last}");
         // and eval agrees (below the uniform-prediction bound ln V)
-        let el = tr.eval(4);
+        let el = tr.eval(4).loss;
         assert!(el < (tr.model.cfg.vocab as f32).ln(), "eval {el}");
     }
 
@@ -476,10 +484,11 @@ mod tests {
         let mut fast = mk(Backend::Fast);
         let mut reference = mk(Backend::Reference);
         for step in 0..50 {
-            let (la, sa) = fast.step(0.1);
-            let (lb, sb) = reference.step(0.1);
-            assert_eq!(la.to_bits(), lb.to_bits(), "loss diverged at step {step}");
-            assert_eq!(sa, sb, "update stats diverged at step {step}");
+            let a = fast.step(0.1);
+            let b = reference.step(0.1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged at step {step}");
+            assert_eq!(a.embed, b.embed, "embed stats diverged at step {step}");
+            assert_eq!(a.mlp, b.mlp, "dense stats diverged at step {step}");
         }
         let mut fm = fast.model;
         let mut rm = reference.model;
@@ -514,21 +523,26 @@ mod tests {
             GptTrainer::new(cfg, Mode::Sr16)
         };
         let mut base = mk(1);
-        let base_tel: Vec<(f32, UpdateStats)> = (0..15).map(|_| base.step(0.1)).collect();
+        let base_tel: Vec<StepTelemetry> = (0..15).map(|_| base.step(0.1)).collect();
         let base_eval = base.eval(2);
         for threads in [4usize] {
             let mut tr = mk(threads);
             assert_eq!(tr.intra_threads(), threads);
-            for (step, (want_l, want_s)) in base_tel.iter().enumerate() {
-                let (l, s) = tr.step(0.1);
+            for (step, want) in base_tel.iter().enumerate() {
+                let got = tr.step(0.1);
                 assert_eq!(
-                    l.to_bits(),
-                    want_l.to_bits(),
+                    got.loss.to_bits(),
+                    want.loss.to_bits(),
                     "loss diverged at step {step} with {threads} threads"
                 );
-                assert_eq!(s, *want_s, "stats diverged at step {step}, t={threads}");
+                assert_eq!(got.embed, want.embed, "embed stats, step {step}, t={threads}");
+                assert_eq!(got.mlp, want.mlp, "dense stats, step {step}, t={threads}");
             }
-            assert_eq!(tr.eval(2).to_bits(), base_eval.to_bits(), "eval, t={threads}");
+            assert_eq!(
+                tr.eval(2).loss.to_bits(),
+                base_eval.loss.to_bits(),
+                "eval, t={threads}"
+            );
             for (pi, (wa, wb)) in base
                 .model
                 .param_tensors_mut()
@@ -558,12 +572,12 @@ mod tests {
         let mut with_eval = mk();
         let mut without = mk();
         for step in 0..30 {
-            let (la, _) = with_eval.step(0.1);
-            let (lb, _) = without.step(0.1);
-            assert_eq!(la.to_bits(), lb.to_bits(), "step {step}");
+            let a = with_eval.step(0.1);
+            let b = without.step(0.1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step}");
             if (step + 1) % 10 == 0 {
                 let el = with_eval.eval(2);
-                assert!(el.is_finite());
+                assert!(el.loss.is_finite());
             }
         }
         for (wa, wb) in with_eval
@@ -576,7 +590,37 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
-        assert_eq!(with_eval.eval(0), 0.0, "empty eval is defined");
+        let empty = with_eval.eval(0);
+        assert_eq!((empty.loss, empty.metric), (0.0, 1.0), "empty eval is defined");
+    }
+
+    /// Satellite gate: per-tensor mixed-precision modes (previously a
+    /// DLRM-only capability) work on gpt through the generic trainer —
+    /// Kahan embeddings + SR everywhere else trains sanely, and the mix is
+    /// reflected in the generic weight-byte accounting.
+    #[test]
+    fn mixed_precision_modes_work_on_gpt() {
+        let cfg = GptConfig { seed: 29, ..Default::default() };
+        let n = GptModel::num_tensors(&cfg);
+        // tok + pos embeddings in kahan16, every block tensor in sr16
+        let modes: Vec<Mode> =
+            (0..n).map(|i| if i < 2 { Mode::Kahan16 } else { Mode::Sr16 }).collect();
+        let all_sr = vec![Mode::Sr16; n];
+        let mut tr = GptTrainer::new_mixed(cfg, modes.clone());
+        let mut loss = 0.0;
+        for _ in 0..20 {
+            let tel = tr.step(0.1);
+            loss = tel.loss;
+            assert!(loss.is_finite());
+            // embeddings and dense tensors are tracked as separate classes
+            assert!(tel.embed.nonzero > 0 || tel.mlp.nonzero > 0);
+        }
+        assert!(tr.eval(2).loss.is_finite());
+        assert!(
+            tr.weight_bytes_for(&modes) > tr.weight_bytes_for(&all_sr),
+            "kahan embeddings must cost extra compensation bytes"
+        );
+        assert!(loss < (tr.model.cfg.vocab as f32).ln() * 1.5, "training went nowhere: {loss}");
     }
 
     #[test]

@@ -2,22 +2,27 @@
 //!
 //! A small dense tensor library + reverse-mode autograd where **every
 //! operator accumulates in fp32 and rounds its output** onto a configured
-//! format, a reusable layer library ([`nn`]), plus optimizers implementing
-//! the paper's weight-update policies.  Powers the theory experiments
-//! (Figure 2 / Theorem 1), the per-layer cancellation telemetry (Figure 9),
-//! the sub-16-bit sweeps (Figure 10), the native criterion benches and the
-//! bit-exact application scenarios — DLRM ([`dlrm`]), least-squares
-//! ([`lsq`]) and the tiny causal-transformer LM ([`gpt`]); the paper's
-//! seven full-scale applications run through the PJRT runtime instead.
+//! format, a reusable layer library ([`nn`]), optimizers implementing the
+//! paper's weight-update policies, and the generic training engine
+//! ([`train`]): one `Trainer<T: Task>` supplying the loop, per-tensor
+//! optimizer bank, eval fork and native checkpoint/resume to every app.
+//! Powers the theory experiments (Figure 2 / Theorem 1), the per-layer
+//! cancellation telemetry (Figure 9), the sub-16-bit sweeps (Figure 10),
+//! the native criterion benches and the bit-exact application scenarios —
+//! DLRM ([`dlrm`]), least-squares ([`lsq`]), the tiny causal-transformer
+//! LM ([`gpt`]) and the spiral MLP classifier ([`mlp`]); the paper's seven
+//! full-scale applications run through the PJRT runtime instead.
 
 pub mod dlrm;
 pub mod gpt;
 pub mod lsq;
+pub mod mlp;
 pub mod nn;
 pub mod optim;
 pub mod pool;
 pub mod tape;
 pub mod tensor;
+pub mod train;
 
 /// Which kernel implementations the simulator runs on.
 ///
@@ -55,3 +60,4 @@ pub use optim::{Sgd, SgdState, UpdateStats};
 pub use pool::Pool;
 pub use tape::{QPolicy, Tape, Var};
 pub use tensor::Tensor;
+pub use train::{EvalMetrics, StepTelemetry, Task, TensorClass};

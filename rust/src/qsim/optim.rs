@@ -134,6 +134,19 @@ impl Sgd {
         self
     }
 
+    /// Steps taken so far — the step coordinate of the dither key.
+    pub fn step_idx(&self) -> u64 {
+        self.step_idx
+    }
+
+    /// Reposition the step counter (checkpoint resume): the next update
+    /// draws dither for step `idx`, exactly as if the optimizer had already
+    /// executed `idx` steps.  Because the dither schedule is counter-keyed,
+    /// this is all the RNG state an optimizer has.
+    pub fn set_step_idx(&mut self, idx: u64) {
+        self.step_idx = idx;
+    }
+
     pub fn bf16(mode: Mode, momentum: f32, weight_decay: f32, seed: u64) -> Self {
         Self::new(mode, BF16, momentum, weight_decay, seed)
     }

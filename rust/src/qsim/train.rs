@@ -1,0 +1,736 @@
+//! `qsim::train` — the generic training engine over native quantised apps.
+//!
+//! The paper's claim is *cross-application*: SR/Kahan weight updates close
+//! the 16-bit gap on seven diverse workloads (Zamirai et al. 2020; Kalamkar
+//! et al. 2019 make the same point for bf16 generally).  Before this module
+//! every native app re-implemented its own trainer loop by hand (and the
+//! copies drifted: DLRM returned `StepTelemetry`, gpt a bare tuple; only
+//! DLRM had per-tensor mixed modes or weight-byte accounting).  Now an app
+//! is a [`Task`] — config → model, a forkable batch generator, a
+//! graph-building `forward_into`, per-app eval — and `Trainer<T>` supplies
+//! everything else once:
+//!
+//! * the per-tensor optimizer bank keyed by counter-dither `tensor_id`
+//!   (uniform via [`Trainer::new`] or per-tensor via [`Trainer::new_mixed`]
+//!   — Figure-5/9-style placements for *every* app, not just DLRM);
+//! * the intra-step fork-join [`Pool`] and arena [`Tape`] (bit-identical
+//!   results at every `--intra-threads` setting and on
+//!   [`Backend::Reference`]);
+//! * the dedicated held-out eval generator forked from the seed, so eval
+//!   cadence can never perturb a training trajectory;
+//! * unified [`StepTelemetry`] / [`EvalMetrics`];
+//! * **native checkpoint save/resume** in the `BF16CKP2` format that
+//!   previously only the PJRT coordinator path supported.  Because all
+//!   native RNG is counter-keyed or stream-seeded, a resumed run is
+//!   **bit-identical** to an uninterrupted one (tests pin this at 1 and 4
+//!   intra-threads).
+//!
+//! The construction and step order exactly mirror the former hand-rolled
+//! `DlrmTrainer`/`GptTrainer`, so existing trajectories are bit-identical
+//! across the refactor (the `repro qsim-parity` digests pin this).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::hwcost;
+use crate::precision::{Format, Mode, FP32};
+use crate::util::ckpt;
+
+use super::optim::{Sgd, SgdState, UpdateStats};
+use super::pool::Pool;
+use super::tape::{QPolicy, Tape, Var};
+use super::tensor::Tensor;
+use super::Backend;
+
+/// Telemetry class of one parameter tensor (Figure 9 separates embedding
+/// tables from dense/MLP layers; apps without embeddings are all-dense).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorClass {
+    /// Embedding tables (sparse row updates; the paper's most
+    /// cancellation-prone layer family).
+    Embed,
+    /// Everything else: dense weights, biases, attention projections.
+    Dense,
+}
+
+/// Per-step per-layer-class telemetry (Figure 9's series), unified across
+/// apps — DLRM used to return this while gpt returned a bare tuple.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTelemetry {
+    pub loss: f32,
+    /// Update stats over the [`TensorClass::Embed`] tensors.
+    pub embed: UpdateStats,
+    /// Update stats over the [`TensorClass::Dense`] tensors.
+    pub mlp: UpdateStats,
+}
+
+impl StepTelemetry {
+    /// Merged stats over every parameter tensor.
+    pub fn total(&self) -> UpdateStats {
+        let mut t = self.embed;
+        t.merge(self.mlp);
+        t
+    }
+}
+
+/// Unified eval result: mean loss over the eval batches plus the app's
+/// paper-convention metric (AUC for CTR, perplexity for LMs, accuracy for
+/// classifiers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalMetrics {
+    pub loss: f32,
+    pub metric: f32,
+    pub metric_name: &'static str,
+}
+
+/// One native application: the implementing type *is* the app config
+/// (`DlrmConfig`, `GptConfig`, `MlpConfig`), and the trait maps it onto a
+/// model, a data stream and an eval procedure.  Everything else — optimizer
+/// bank, worker pool, tape arena, eval fork, telemetry, checkpointing — is
+/// supplied by [`Trainer`].
+///
+/// ## Contracts
+///
+/// * `forward_into` must register parameter tensors on the tape **in the
+///   same order** `param_tensors`/`param_tensors_mut` walk them: that
+///   shared order maps each tensor to its optimizer slot and counter-dither
+///   `tensor_id`, so it is part of the reproducibility contract.
+/// * `make_gen` must be a pure function of the config (seeded), and
+///   `fork_gen` must share the generator's ground-truth model while drawing
+///   from an independent `(seed, stream)` pair — the trainer's eval stream
+///   and checkpoint fast-forward both rely on it.
+pub trait Task {
+    type Model;
+    type Gen;
+    type Batch;
+
+    /// Short app id, recorded in checkpoint headers ("dlrm", "gpt-nano",
+    /// "mlp") — resuming a checkpoint into a different app fails loudly.
+    const NAME: &'static str;
+    /// Stream tag for the held-out eval generator fork (disjoint from the
+    /// training stream, unique per app).
+    const EVAL_STREAM: u64;
+
+    // -- config accessors (the Task is the app config) ----------------------
+    fn seed(&self) -> u64;
+    fn fmt(&self) -> Format;
+    fn backend(&self) -> Backend;
+    fn intra_threads(&self) -> usize;
+    /// One-line fingerprint of every config field that shapes the model or
+    /// the data stream (seed, sizes, task parameters) — but **not**
+    /// execution knobs (backend, intra-threads), which may legitimately
+    /// differ across a resume because results are bit-identical across
+    /// them.  Recorded in checkpoints and validated on load, so resuming
+    /// into a differently-configured trainer (same tensor shapes, different
+    /// seed or data distribution) fails loudly instead of silently
+    /// producing a trajectory that continues nothing.
+    fn config_fingerprint(&self) -> String;
+    /// Number of parameter tensors the model registers.
+    fn num_tensors(&self) -> usize;
+    /// Telemetry class of parameter tensor `i` (registration order).
+    fn tensor_class(&self, i: usize) -> TensorClass;
+
+    // -- model + data -------------------------------------------------------
+    fn init_model(&self) -> Self::Model;
+    fn make_gen(&self) -> Self::Gen;
+    fn fork_gen(gen: &Self::Gen, stream: u64) -> Self::Gen;
+    fn next_batch(gen: &mut Self::Gen) -> Self::Batch;
+
+    /// Fast-forward the generator past `n` batches (checkpoint resume).
+    /// The default draws and discards; override if the app has a cheaper
+    /// exact skip.
+    fn skip_batches(gen: &mut Self::Gen, n: u64) {
+        for _ in 0..n {
+            let _ = Self::next_batch(gen);
+        }
+    }
+
+    // -- graph + parameters -------------------------------------------------
+    /// Build the training graph for one batch into the caller's tape;
+    /// returns the loss and the registered parameter [`Var`]s in walk order.
+    fn forward_into(model: &Self::Model, t: &mut Tape, batch: &Self::Batch) -> (Var, Vec<Var>);
+    /// Parameter tensors in registration order (checkpoint save, byte
+    /// accounting).
+    fn param_tensors(model: &Self::Model) -> Vec<&Tensor>;
+    /// Mutable walk in the same order (optimizer updates, checkpoint load).
+    fn param_tensors_mut(model: &mut Self::Model) -> Vec<&mut Tensor>;
+
+    // -- eval ---------------------------------------------------------------
+    /// Evaluate over `n` fresh batches from `gen` (the trainer hands in its
+    /// dedicated eval fork).  `n == 0` must be defined (no data ⇒ zero loss,
+    /// chance metric), never 0/0 NaN.
+    fn eval(model: &Self::Model, gen: &mut Self::Gen, n: usize, policy: QPolicy) -> EvalMetrics;
+}
+
+/// The generic native trainer: one implementation of the training loop,
+/// optimizer bank, eval fork, telemetry and checkpointing for every
+/// [`Task`].
+pub struct Trainer<T: Task> {
+    pub task: T,
+    pub model: T::Model,
+    /// Per-tensor precision modes, in parameter walk order.
+    modes: Vec<Mode>,
+    opts: Vec<Sgd>,
+    states: Vec<SgdState>,
+    gen: T::Gen,
+    /// Dedicated eval stream forked from the seed (shared ground truth,
+    /// disjoint draws): evaluation never touches `gen`, so the training
+    /// trajectory is invariant to eval cadence.
+    eval_gen: T::Gen,
+    policy: QPolicy,
+    /// Retained across steps (`Fast` backend): node + gradient storage is
+    /// recycled via `Tape::reset` instead of reallocated per step.
+    tape: Tape,
+    /// Shared intra-step worker pool (spawned once, here; the tape and
+    /// every optimizer hold clones of this handle).
+    pool: Arc<Pool>,
+    steps_done: u64,
+}
+
+impl<T: Task> Trainer<T> {
+    /// All parameter tensors share one precision mode.
+    pub fn new(task: T, mode: Mode) -> Self {
+        let n = task.num_tensors();
+        Self::new_mixed(task, vec![mode; n])
+    }
+
+    /// Per-tensor precision modes (Figure 5's incremental SR→Kahan sweep,
+    /// Figure-9-style placements) — available to every app, not just DLRM.
+    /// `modes` ordering matches the parameter registration order of the
+    /// task's `forward_into`.
+    pub fn new_mixed(task: T, modes: Vec<Mode>) -> Self {
+        assert_eq!(modes.len(), task.num_tensors(), "one mode per parameter tensor");
+        let backend = task.backend();
+        let pool = Arc::new(Pool::new(if backend == Backend::Fast {
+            task.intra_threads()
+        } else {
+            1
+        }));
+        let mut model = task.init_model();
+        let fmt = task.fmt();
+        let seed = task.seed();
+        let opts: Vec<Sgd> = modes
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                Sgd::new(m, fmt, 0.0, 0.0, seed)
+                    .with_tensor_id(i as u64)
+                    .with_backend(backend)
+                    .with_pool(Arc::clone(&pool))
+            })
+            .collect();
+        let states: Vec<SgdState> = T::param_tensors_mut(&mut model)
+            .iter()
+            .zip(&opts)
+            .map(|(t, o)| o.init_state(t))
+            .collect();
+        // fwd/bwd compute rounds unless every tensor trains in fp32
+        let policy = if modes.iter().all(|&m| m == Mode::Fp32) {
+            QPolicy::with_backend(FP32, backend)
+        } else {
+            QPolicy::with_backend(fmt, backend)
+        };
+        let gen = task.make_gen();
+        let eval_gen = T::fork_gen(&gen, T::EVAL_STREAM);
+        let tape = Tape::with_pool(policy, Arc::clone(&pool));
+        Self { task, model, modes, opts, states, gen, eval_gen, policy, tape, pool, steps_done: 0 }
+    }
+
+    /// Effective intra-step worker count (1 unless configured otherwise).
+    pub fn intra_threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Steps this trainer has executed (including resumed-from steps).
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
+    }
+
+    /// Per-tensor precision modes, in parameter walk order.
+    pub fn modes(&self) -> &[Mode] {
+        &self.modes
+    }
+
+    /// The forward/backward rounding policy.
+    pub fn policy(&self) -> QPolicy {
+        self.policy
+    }
+
+    /// One SGD step over a fresh synthetic batch.
+    ///
+    /// `Fast` backend: the retained tape is `reset` (node and gradient
+    /// buffers recycled) and gradients are fed to the optimizer by
+    /// reference, so steady-state tensor traffic is allocation-free.
+    /// `Reference` backend: a fresh tape per step, reproducing the
+    /// pre-optimization allocation pattern.
+    pub fn step(&mut self, lr: f32) -> StepTelemetry {
+        let batch = T::next_batch(&mut self.gen);
+        if self.policy.backend == Backend::Fast {
+            self.tape.reset();
+        } else {
+            self.tape = Tape::new(self.policy);
+        }
+        let (loss, param_vars) = T::forward_into(&self.model, &mut self.tape, &batch);
+        self.tape.backward(loss);
+        let loss_val = self.tape.value(loss).item();
+        let mut tel = StepTelemetry { loss: loss_val, ..Default::default() };
+        let tape = &self.tape;
+        let params = T::param_tensors_mut(&mut self.model);
+        for (i, (w, var)) in params.into_iter().zip(&param_vars).enumerate() {
+            let zero_g;
+            let g = match tape.grad(*var) {
+                Some(g) => g,
+                // a parameter off the loss path still takes its (no-op)
+                // optimizer update, so its step counter — the dither key's
+                // step coordinate — stays in lockstep with the others
+                None => {
+                    zero_g = Tensor::zeros(w.rows, w.cols);
+                    &zero_g
+                }
+            };
+            let stats = self.opts[i].step(w, &mut self.states[i], g, lr);
+            match self.task.tensor_class(i) {
+                TensorClass::Embed => tel.embed.merge(stats),
+                TensorClass::Dense => tel.mlp.merge(stats),
+            }
+        }
+        self.steps_done += 1;
+        tel
+    }
+
+    /// Evaluate over `n` fresh batches from the dedicated eval stream.
+    /// Side-effect-free with respect to training: the training generator is
+    /// never advanced.
+    pub fn eval(&mut self, n: usize) -> EvalMetrics {
+        T::eval(&self.model, &mut self.eval_gen, n, self.policy)
+    }
+
+    /// Weight-memory bytes under the trainer's own per-tensor modes
+    /// (generic [`hwcost`] accounting from the parameter walk — every app
+    /// reports a memory plan, not just DLRM).
+    pub fn weight_bytes(&self) -> u64 {
+        self.weight_bytes_for(&self.modes)
+    }
+
+    /// Weight-memory bytes under hypothetical per-tensor modes (Figure 5's
+    /// x-axis sweeps these without rebuilding trainers).
+    pub fn weight_bytes_for(&self, modes: &[Mode]) -> u64 {
+        T::param_tensors(&self.model)
+            .iter()
+            .zip(modes)
+            .map(|(t, &m)| hwcost::tensor_weight_bytes(t.data.len() as u64, m))
+            .sum()
+    }
+
+    // -- checkpointing -------------------------------------------------------
+
+    /// Header name recorded in (and validated against) checkpoints.
+    fn ckpt_name(&self) -> String {
+        format!("qsim/{}", T::NAME)
+    }
+
+    /// Save all training state to a binary checkpoint (`BF16CKP2`, the
+    /// same format family as the PJRT coordinator path).
+    ///
+    /// Layout after the magic: app name, storage format name, config
+    /// fingerprint, the per-tensor mode list, the step counter, then per
+    /// parameter tensor the weights plus optional momentum/Kahan state
+    /// slices.  Everything
+    /// needed for a bit-identical resume is either in the file or
+    /// reconstructed from the (seeded) task config: the SR dither schedule
+    /// is a pure function of `(seed, stream, step, tensor_id, element)`,
+    /// and the training stream is fast-forwarded past the consumed batches
+    /// on load.
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = ckpt::Writer::new();
+        w.str(&self.ckpt_name());
+        w.str(self.task.fmt().name);
+        w.str(&self.task.config_fingerprint());
+        w.u64(self.modes.len() as u64);
+        for m in &self.modes {
+            w.str(m.name());
+        }
+        w.u64(self.steps_done);
+        let params = T::param_tensors(&self.model);
+        w.u64(params.len() as u64);
+        for (t, st) in params.iter().zip(&self.states) {
+            w.f32s(&t.data);
+            w.opt_f32s(st.momentum.as_ref().map(|m| m.data.as_slice()));
+            w.opt_f32s(st.kahan.as_ref().map(|k| k.data.as_slice()));
+        }
+        std::fs::write(path.as_ref(), w.into_bytes())
+            .with_context(|| format!("writing checkpoint {:?}", path.as_ref()))?;
+        Ok(())
+    }
+
+    /// Restore training state from a checkpoint written by
+    /// [`Trainer::save_checkpoint`].
+    ///
+    /// Validates the app name, storage format, config fingerprint,
+    /// per-tensor mode list and every tensor shape before touching any
+    /// state — a checkpoint from a different app (or a
+    /// differently-configured trainer, even one with identical tensor
+    /// shapes) fails loudly.  Execution knobs (backend, intra-threads)
+    /// are deliberately *not* validated: results are bit-identical across
+    /// them, so resuming on different hardware settings is legitimate.
+    /// After loading, optimizer step counters are repositioned and the
+    /// training stream is fast-forwarded, so continuing the run is
+    /// bit-identical to never having stopped.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let buf = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading checkpoint {:?}", path.as_ref()))?;
+        let mut r = ckpt::Reader::new(&buf)
+            .with_context(|| format!("checkpoint {:?}", path.as_ref()))?;
+        self.load_checkpoint_reader(&mut r)
+    }
+
+    fn load_checkpoint_reader(&mut self, r: &mut ckpt::Reader<'_>) -> Result<()> {
+        let name = r.str()?;
+        let expected = self.ckpt_name();
+        if name != expected {
+            bail!(
+                "checkpoint was saved from app {name:?} but this trainer runs {expected:?}; \
+                 refusing to load mismatched state"
+            );
+        }
+        let fmt = r.str()?;
+        if fmt != self.task.fmt().name {
+            bail!(
+                "checkpoint was saved with storage format {fmt:?} but this trainer uses {:?}",
+                self.task.fmt().name
+            );
+        }
+        let fingerprint = r.str()?;
+        let expected_fp = self.task.config_fingerprint();
+        if fingerprint != expected_fp {
+            bail!(
+                "checkpoint was saved from a differently-configured trainer \
+                 (config {fingerprint:?}, this trainer {expected_fp:?}); a resume would \
+                 silently continue neither run — refusing to load"
+            );
+        }
+        let n_modes = r.u64()? as usize;
+        if n_modes != self.modes.len() {
+            bail!("checkpoint has {n_modes} tensor modes, this trainer has {}", self.modes.len());
+        }
+        for (i, m) in self.modes.iter().enumerate() {
+            let got = r.str()?;
+            if got != m.name() {
+                bail!(
+                    "checkpoint tensor {i} was trained in mode {got:?} but this trainer \
+                     uses {:?}; refusing to load mismatched state",
+                    m.name()
+                );
+            }
+        }
+        let steps = r.u64()?;
+        let n = r.u64()? as usize;
+        let expected_lens: Vec<usize> =
+            T::param_tensors(&self.model).iter().map(|t| t.data.len()).collect();
+        if n != expected_lens.len() {
+            bail!("checkpoint has {n} tensors, model has {}", expected_lens.len());
+        }
+        // Phase 1: parse and validate the *entire* file before touching any
+        // trainer state — a truncated or mismatched checkpoint must leave
+        // the trainer exactly as it was, never half-overwritten.
+        let mut loaded: Vec<(Vec<f32>, Option<Vec<f32>>, Option<Vec<f32>>)> =
+            Vec::with_capacity(n);
+        for (i, &len) in expected_lens.iter().enumerate() {
+            let w = r.f32s()?;
+            if w.len() != len {
+                bail!("checkpoint tensor {i} has {} elements, model expects {len}", w.len());
+            }
+            let mom = r.opt_f32s()?;
+            match (&self.states[i].momentum, &mom) {
+                (Some(st), Some(v)) if v.len() == st.data.len() => {}
+                (None, None) => {}
+                _ => bail!("checkpoint momentum state mismatch for tensor {i}"),
+            }
+            let kah = r.opt_f32s()?;
+            match (&self.states[i].kahan, &kah) {
+                (Some(st), Some(v)) if v.len() == st.data.len() => {}
+                (None, None) => {}
+                _ => bail!("checkpoint kahan state mismatch for tensor {i}"),
+            }
+            loaded.push((w, mom, kah));
+        }
+        // Phase 2: apply — nothing below can fail.
+        for ((t, st), (w, mom, kah)) in T::param_tensors_mut(&mut self.model)
+            .into_iter()
+            .zip(self.states.iter_mut())
+            .zip(loaded)
+        {
+            t.data.copy_from_slice(&w);
+            if let (Some(s), Some(v)) = (st.momentum.as_mut(), mom) {
+                s.data.copy_from_slice(&v);
+            }
+            if let (Some(s), Some(v)) = (st.kahan.as_mut(), kah) {
+                s.data.copy_from_slice(&v);
+            }
+        }
+        self.steps_done = steps;
+        // the only optimizer RNG state is the counter-keyed step index
+        for o in &mut self.opts {
+            o.set_step_idx(steps);
+        }
+        // Reposition the training stream: generators are sequential, so a
+        // resumed run must consume the same prefix the original run did to
+        // replay the remaining batches exactly.  The eval fork is rebuilt
+        // fresh (eval draws never influence training).
+        let mut gen = self.task.make_gen();
+        T::skip_batches(&mut gen, steps);
+        self.eval_gen = T::fork_gen(&gen, T::EVAL_STREAM);
+        self.gen = gen;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qsim::dlrm::{DlrmConfig, DlrmTrainer};
+    use crate::qsim::gpt::{GptConfig, GptTrainer};
+    use crate::qsim::mlp::{MlpConfig, MlpTrainer};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bf16_qsim_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn assert_params_bit_identical<T: Task>(a: &mut Trainer<T>, b: &mut Trainer<T>, what: &str) {
+        let pa = T::param_tensors_mut(&mut a.model);
+        let pb = T::param_tensors_mut(&mut b.model);
+        assert_eq!(pa.len(), pb.len());
+        for (pi, (wa, wb)) in pa.into_iter().zip(pb).enumerate() {
+            assert_eq!(wa.data.len(), wb.data.len(), "{what}: param {pi} shape");
+            for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: param {pi} elem {ei}");
+            }
+        }
+    }
+
+    /// Tentpole acceptance: save at step k, resume into a fresh trainer,
+    /// and the continuation is bit-identical to an uninterrupted run — at
+    /// 1 and 4 intra-threads (counter-keyed dither makes this exact).
+    /// `SrKahan16` exercises both the SR step keys and the Kahan state
+    /// buffers through the checkpoint.
+    #[test]
+    fn dlrm_resume_is_bit_identical_to_uninterrupted_run() {
+        for threads in [1usize, 4] {
+            let mk = || {
+                let cfg = DlrmConfig {
+                    seed: 31,
+                    // large enough that the parallel kernels engage at t=4
+                    table_size: 600,
+                    embed_dim: 16,
+                    hidden: 64,
+                    batch: 48,
+                    intra_threads: threads,
+                    ..Default::default()
+                };
+                DlrmTrainer::new(cfg, Mode::SrKahan16)
+            };
+            let path = tmp(&format!("dlrm_resume_t{threads}.ckpt"));
+
+            let mut full = mk();
+            let mut interrupted = mk();
+            for _ in 0..10 {
+                full.step(0.05);
+                interrupted.step(0.05);
+            }
+            interrupted.save_checkpoint(&path).unwrap();
+            // interleave an eval on the interrupted side: cadence must not
+            // perturb anything that lands in the checkpoint
+            interrupted.eval(2);
+
+            let mut resumed = mk();
+            resumed.load_checkpoint(&path).unwrap();
+            assert_eq!(resumed.steps_done(), 10);
+            for step in 0..15 {
+                let a = full.step(0.05);
+                let b = resumed.step(0.05);
+                assert_eq!(
+                    a.loss.to_bits(),
+                    b.loss.to_bits(),
+                    "loss diverged at post-resume step {step} (t={threads})"
+                );
+                assert_eq!(a.embed, b.embed, "embed stats, step {step}, t={threads}");
+                assert_eq!(a.mlp, b.mlp, "mlp stats, step {step}, t={threads}");
+            }
+            assert_params_bit_identical(&mut full, &mut resumed, &format!("t={threads}"));
+        }
+    }
+
+    /// The same resume guarantee for the third app (sr16: SR dither step
+    /// keys must re-align after the counter reposition) — and the resume
+    /// happens at a *different* intra-thread count, which the config
+    /// fingerprint deliberately permits because results are bit-identical
+    /// across execution knobs.
+    #[test]
+    fn mlp_resume_is_bit_identical_to_uninterrupted_run() {
+        let mk = |intra_threads| {
+            let cfg = MlpConfig { seed: 7, intra_threads, ..Default::default() };
+            MlpTrainer::new(cfg, Mode::Sr16)
+        };
+        let path = tmp("mlp_resume.ckpt");
+        let mut full = mk(1);
+        let mut interrupted = mk(1);
+        for _ in 0..12 {
+            full.step(0.1);
+            interrupted.step(0.1);
+        }
+        interrupted.save_checkpoint(&path).unwrap();
+        let mut resumed = mk(2);
+        resumed.load_checkpoint(&path).unwrap();
+        for step in 0..12 {
+            let a = full.step(0.1);
+            let b = resumed.step(0.1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step}");
+        }
+        assert_params_bit_identical(&mut full, &mut resumed, "mlp resume");
+        // and the eval fork is live after a resume
+        let m = resumed.eval(2);
+        assert!(m.loss.is_finite());
+        assert_eq!(m.metric_name, "acc");
+    }
+
+    /// A checkpoint from one app must not load into another, even when
+    /// nothing else would catch it — the header name check fires first.
+    #[test]
+    fn mismatched_app_checkpoint_fails_loudly() {
+        let path = tmp("dlrm_for_gpt.ckpt");
+        let mut dlrm = DlrmTrainer::new(DlrmConfig { seed: 1, ..Default::default() }, Mode::Sr16);
+        dlrm.step(0.05);
+        dlrm.save_checkpoint(&path).unwrap();
+
+        let mut gpt = GptTrainer::new(GptConfig { seed: 1, ..Default::default() }, Mode::Sr16);
+        let err = gpt.load_checkpoint(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("qsim/dlrm") && err.contains("qsim/gpt-nano"),
+            "error should name both apps: {err}"
+        );
+    }
+
+    /// Same app, same tensor shapes, different seed: the config
+    /// fingerprint must refuse — a resume would fast-forward a generator
+    /// that never produced the checkpointed weights, silently continuing
+    /// neither run.  Execution knobs are exempt (tested in the mlp resume
+    /// test, which resumes at a different intra-thread count).
+    #[test]
+    fn mismatched_config_checkpoint_fails_loudly() {
+        let path = tmp("mlp_seed1.ckpt");
+        let mut a = MlpTrainer::new(MlpConfig { seed: 1, ..Default::default() }, Mode::Sr16);
+        a.step(0.1);
+        a.save_checkpoint(&path).unwrap();
+        let mut b = MlpTrainer::new(MlpConfig { seed: 2, ..Default::default() }, Mode::Sr16);
+        let err = b.load_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("differently-configured"), "{err}");
+    }
+
+    /// Same-app, different per-tensor modes: refuse instead of silently
+    /// producing a garbage trajectory.
+    #[test]
+    fn mismatched_mode_checkpoint_fails_loudly() {
+        let path = tmp("mlp_sr16.ckpt");
+        let mut a = MlpTrainer::new(MlpConfig { seed: 2, ..Default::default() }, Mode::Sr16);
+        a.step(0.1);
+        a.save_checkpoint(&path).unwrap();
+        let mut b = MlpTrainer::new(MlpConfig { seed: 2, ..Default::default() }, Mode::Kahan16);
+        let err = b.load_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("mode"), "{err}");
+    }
+
+    /// A load that fails mid-file must leave the trainer untouched
+    /// (phase-1 validation parses the whole file before phase-2 applies
+    /// anything) — a half-overwritten trainer would train from garbage
+    /// with no further error.
+    #[test]
+    fn failed_load_leaves_trainer_state_untouched() {
+        let path = tmp("mlp_truncated.ckpt");
+        let mut src = MlpTrainer::new(MlpConfig { seed: 4, ..Default::default() }, Mode::Sr16);
+        for _ in 0..5 {
+            src.step(0.1);
+        }
+        src.save_checkpoint(&path).unwrap();
+        // header stays valid; the tensor section is truncated
+        let buf = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &buf[..buf.len() - 12]).unwrap();
+
+        let mk = || MlpTrainer::new(MlpConfig { seed: 4, ..Default::default() }, Mode::Sr16);
+        let mut damaged = mk();
+        let mut pristine = mk();
+        assert!(damaged.load_checkpoint(&path).is_err());
+        assert_eq!(damaged.steps_done(), 0, "step counter must be untouched");
+        // the trainer still trains exactly like one that never saw the load
+        for step in 0..5 {
+            let a = damaged.step(0.1);
+            let b = pristine.step(0.1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step}");
+        }
+        assert_params_bit_identical(&mut damaged, &mut pristine, "failed load");
+    }
+
+    #[test]
+    fn corrupt_and_legacy_checkpoints_are_clear_errors() {
+        let path = tmp("garbage.ckpt");
+        std::fs::write(&path, b"BF16CKPT-old-v1-payload").unwrap();
+        let mut tr = MlpTrainer::new(MlpConfig::default(), Mode::Sr16);
+        let err = tr.load_checkpoint(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("legacy v1"), "{err:#}");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        let err = tr.load_checkpoint(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("not a bf16-train checkpoint"), "{err:#}");
+    }
+
+    /// Satellite: the generic weight-byte accounting matches the explicit
+    /// per-mode formula the DLRM-only implementation used.
+    #[test]
+    fn generic_weight_bytes_matches_param_walk() {
+        let cfg = DlrmConfig { seed: 3, ..Default::default() };
+        let n = cfg.num_tables + 6;
+        let modes: Vec<Mode> =
+            (0..n).map(|i| if i < 2 { Mode::Kahan16 } else { Mode::Sr16 }).collect();
+        let tr = DlrmTrainer::new_mixed(cfg, modes.clone());
+        let expected: u64 = tr
+            .model
+            .param_tensors()
+            .iter()
+            .zip(&modes)
+            .map(|(t, m)| t.data.len() as u64 * if m.kahan() { 4 } else { 2 })
+            .sum();
+        assert_eq!(tr.weight_bytes_for(&modes), expected);
+        assert_eq!(tr.weight_bytes(), expected, "trainer's own modes");
+        // gpt and mlp report memory plans too now: kahan16 stores 2 weight
+        // + 2 compensation bytes per element, sr16 stores 2
+        let gpt = GptTrainer::new(GptConfig::default(), Mode::Kahan16);
+        let gpt_elems: u64 =
+            gpt.model.param_tensors().iter().map(|t| t.data.len() as u64).sum();
+        assert_eq!(gpt.weight_bytes(), 4 * gpt_elems);
+        let mlp = MlpTrainer::new(MlpConfig::default(), Mode::Sr16);
+        let mlp_elems: u64 =
+            mlp.model.param_tensors().iter().map(|t| t.data.len() as u64).sum();
+        assert_eq!(mlp.weight_bytes(), 2 * mlp_elems);
+    }
+
+    /// Eval goes through the dedicated fork: cadence cannot perturb the
+    /// training trajectory of *any* task (the generic engine owns the fork).
+    #[test]
+    fn generic_eval_is_side_effect_free() {
+        let mk = || MlpTrainer::new(MlpConfig { seed: 5, ..Default::default() }, Mode::Sr16);
+        let mut with_eval = mk();
+        let mut without = mk();
+        for step in 0..20 {
+            let a = with_eval.step(0.1);
+            let b = without.step(0.1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step}");
+            if (step + 1) % 5 == 0 {
+                let m = with_eval.eval(2);
+                assert!(m.loss.is_finite());
+            }
+        }
+        assert_params_bit_identical(&mut with_eval, &mut without, "eval cadence");
+    }
+}

@@ -1,0 +1,209 @@
+//! Shared binary framing for the `BF16CKP2` checkpoint format.
+//!
+//! Two writers produce this format — the PJRT coordinator trainer
+//! (`coordinator::Trainer`) and the native quantised-simulator engine
+//! (`qsim::train::Trainer`) — so the length-prefixed primitives live here
+//! instead of being re-derived (and drifting) in each.  The layout is
+//! deliberately dumb: a magic, then a sequence of `u64`-length-prefixed
+//! strings / f32 slices, every integer little-endian.  Readers validate
+//! every length against the remaining buffer, so a truncated or corrupted
+//! file fails with a clear error instead of a panic or a wrapped index.
+
+use anyhow::{bail, Context, Result};
+
+/// Version-2 magic: the header carries the artifact/app name so resuming
+/// into a mismatched run fails loudly instead of silently loading
+/// same-shaped tensors.
+pub const MAGIC_V2: &[u8; 8] = b"BF16CKP2";
+/// Legacy v1 magic — recognised only to produce a better error.
+pub const MAGIC_V1: &[u8; 8] = b"BF16CKPT";
+
+/// Append-only builder for a v2 checkpoint body (magic written up front).
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC_V2);
+        Writer { buf }
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice (bit patterns preserved exactly).
+    pub fn f32s(&mut self, vals: &[f32]) {
+        self.u64(vals.len() as u64);
+        for v in vals {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Presence byte + length-prefixed slice (optional state tensors).
+    pub fn opt_f32s(&mut self, vals: Option<&[f32]>) {
+        match vals {
+            Some(v) => {
+                self.u8(1);
+                self.f32s(v);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+impl Default for Writer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bounds-checked cursor over a v2 checkpoint buffer.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Validate the magic (distinguishing the legacy v1 format) and
+    /// position the cursor after it.
+    pub fn new(buf: &'a [u8]) -> Result<Reader<'a>> {
+        if buf.len() >= 8 && &buf[..8] == MAGIC_V1 {
+            bail!(
+                "checkpoint is in the legacy v1 format, which lacks the artifact-name \
+                 header and cannot be validated against this run; regenerate it by \
+                 training and saving again with this version"
+            );
+        }
+        if buf.len() < 8 || &buf[..8] != MAGIC_V2 {
+            bail!("not a bf16-train checkpoint");
+        }
+        Ok(Reader { buf, off: 8 })
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.off)
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        if self.remaining() < 8 {
+            bail!("truncated checkpoint");
+        }
+        let v = u64::from_le_bytes(self.buf[self.off..self.off + 8].try_into().unwrap());
+        self.off += 8;
+        Ok(v)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        if self.remaining() < 1 {
+            bail!("truncated checkpoint");
+        }
+        let v = self.buf[self.off];
+        self.off += 1;
+        Ok(v)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u64()? as usize;
+        // compare against the remainder (not `off + len`, which could wrap
+        // for a huge length read from a corrupted file)
+        if len > self.remaining() {
+            bail!("truncated checkpoint");
+        }
+        let s = std::str::from_utf8(&self.buf[self.off..self.off + len])
+            .context("checkpoint string is not utf-8")?
+            .to_string();
+        self.off += len;
+        Ok(s)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let len = self.u64()? as usize;
+        let byte_len = len
+            .checked_mul(4)
+            .with_context(|| format!("corrupt checkpoint: tensor length {len}"))?;
+        if byte_len > self.remaining() {
+            bail!("truncated checkpoint");
+        }
+        let mut vals = Vec::with_capacity(len);
+        for k in 0..len {
+            vals.push(f32::from_le_bytes(
+                self.buf[self.off + k * 4..self.off + k * 4 + 4].try_into().unwrap(),
+            ));
+        }
+        self.off += byte_len;
+        Ok(vals)
+    }
+
+    pub fn opt_f32s(&mut self) -> Result<Option<Vec<f32>>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f32s()?)),
+            other => bail!("corrupt checkpoint: bad option tag {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_every_primitive() {
+        let mut w = Writer::new();
+        w.str("qsim/dlrm");
+        w.u64(42);
+        w.f32s(&[1.5, -0.25, f32::from_bits(0x7fc0_0001)]); // incl. a NaN payload
+        w.opt_f32s(None);
+        w.opt_f32s(Some(&[2.0]));
+        let bytes = w.into_bytes();
+        assert_eq!(&bytes[..8], MAGIC_V2);
+
+        let mut r = Reader::new(&bytes).unwrap();
+        assert_eq!(r.str().unwrap(), "qsim/dlrm");
+        assert_eq!(r.u64().unwrap(), 42);
+        let vals = r.f32s().unwrap();
+        assert_eq!(vals.len(), 3);
+        assert_eq!(vals[0], 1.5);
+        assert_eq!(vals[2].to_bits(), 0x7fc0_0001, "bit patterns survive");
+        assert!(r.opt_f32s().unwrap().is_none());
+        assert_eq!(r.opt_f32s().unwrap().unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(Reader::new(b"nonsense").is_err());
+        let v1_err = Reader::new(b"BF16CKPTxxxx").unwrap_err().to_string();
+        assert!(v1_err.contains("legacy v1"), "{v1_err}");
+
+        let mut w = Writer::new();
+        w.f32s(&[1.0, 2.0, 3.0]);
+        let mut bytes = w.into_bytes();
+        bytes.truncate(bytes.len() - 2);
+        let mut r = Reader::new(&bytes).unwrap();
+        assert!(r.f32s().is_err(), "truncated slice must error");
+
+        // a huge declared length must not wrap the offset
+        let mut w = Writer::new();
+        w.u64(u64::MAX);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes).unwrap();
+        assert!(r.str().is_err());
+    }
+}

@@ -4,6 +4,7 @@
 //! so everything else the framework needs is implemented here.
 
 pub mod bench;
+pub mod ckpt;
 pub mod cli;
 pub mod json;
 pub mod rng;

@@ -133,8 +133,8 @@ impl Sweep {
         // Ceil division can plan fewer non-empty chunks than `threads`
         // (e.g. 5 cells / 4 workers → 3 chunks of 2); recompute the worker
         // count from the chunk length so no idle worker is ever spawned.
-        let chunk_len = (n + threads - 1) / threads;
-        let threads = (n + chunk_len - 1) / chunk_len;
+        let chunk_len = n.div_ceil(threads);
+        let threads = n.div_ceil(chunk_len);
         let mut work: Vec<Vec<(usize, RunConfig)>> = Vec::with_capacity(threads);
         let mut it = cells.into_iter().enumerate();
         for _ in 0..threads {
@@ -283,8 +283,8 @@ mod tests {
         for n in 1usize..40 {
             for req in 1usize..10 {
                 let threads = req.min(n);
-                let chunk_len = (n + threads - 1) / threads;
-                let replanned = (n + chunk_len - 1) / chunk_len;
+                let chunk_len = n.div_ceil(threads);
+                let replanned = n.div_ceil(chunk_len);
                 assert!(replanned <= threads, "n={n} req={req}");
                 let last = n - chunk_len * (replanned - 1);
                 assert!((1..=chunk_len).contains(&last), "n={n} req={req}");

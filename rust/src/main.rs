@@ -35,6 +35,8 @@ fn main() -> Result<()> {
         "exp" => cmd_exp(&mut args),
         "bench-step" => cmd_bench_step(&mut args),
         "qsim-parity" => cmd_qsim_parity(&mut args),
+        "lint-tape" => cmd_lint_tape(&mut args),
+        "fuzz-tape" => cmd_fuzz_tape(&mut args),
         "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -54,6 +56,8 @@ const USAGE: &str = "usage: repro <command>
   bench-step <artifact-name> [--iters N] [--intra-threads T]
   qsim-parity [--steps N] [--seed S] [--intra-threads T]
         [--app all|dlrm|gpt|mlp] [--backend fast|reference]
+  lint-tape [--app all|dlrm|gpt|mlp|lsq] [--seed S]
+  fuzz-tape [--budget N] [--seed S] [--case I]
 
 modes: fp32 standard16 mixed16 sr16 kahan16 srkahan16
 fmts:  bf16 (default) fp16 e8m5 e8m3 e8m1
@@ -66,6 +70,15 @@ bit-exact simulator — no PJRT artifacts needed.
 `qsim::train` engine instead of the PJRT runtime; --checkpoint / --resume
 save and restore native BF16CKP2 checkpoints, and a resumed run is
 bit-identical to an uninterrupted one.
+
+`lint-tape` records one real training step per app, exports the tape
+graph as a program IR and runs the `qsim::verify` structural linter over
+it (shapes, grad flow, dead nodes, fusable chains), then resets the tape
+and audits free-pool accounting.  `fuzz-tape` runs the enumerative
+differential fuzzer: seeded random tape programs checked for bitwise
+parity across backends, thread counts and every policy format, against
+finite-difference gradients, and through the validated rewrite pass; a
+failure prints a minimized repro replayable with --case.
 
 --threads fans runs out across sweep workers; --intra-threads parallelizes
 within one train step (bit-identical results at every setting).  Today the
@@ -481,4 +494,159 @@ fn cmd_qsim_parity(args: &mut Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Export one recorded training-step graph as a `qsim::verify` program,
+/// lint it, and audit free-pool accounting across `reset()`.  Returns
+/// `true` when the app's tape is unhealthy (lint errors or leaked
+/// buffers) so the caller can fail the process.
+fn report_tape_lint(
+    name: &str,
+    t: &mut bf16_train::qsim::Tape,
+    loss: bf16_train::qsim::Var,
+    n_params: usize,
+) -> bool {
+    use bf16_train::qsim::verify;
+
+    let prog = t.export_program();
+    let report = verify::lint(&prog, loss.0);
+    let (errors, warnings, infos) = report.counts();
+    println!(
+        "{name}: {} tape nodes, {n_params} param tensors — {errors} errors, \
+         {warnings} warnings, {infos} infos",
+        prog.nodes.len()
+    );
+    if !report.is_clean() {
+        print!("{report}");
+    }
+    t.reset();
+    let (pool_bufs, outstanding) = t.pool_stats();
+    println!("{name}: free-pool after reset: {pool_bufs} buffers pooled, {outstanding} outstanding");
+    if outstanding != 0 {
+        println!(
+            "{name}: FREE-POOL ACCOUNTING VIOLATION: {outstanding} buffer(s) \
+             taken from the pool were never returned by reset()"
+        );
+    }
+    errors > 0 || outstanding != 0
+}
+
+/// Build + backward one real training step for a [`Task`] app and lint it.
+fn lint_task_graph<T: bf16_train::qsim::Task>(task: T) -> bool {
+    use bf16_train::qsim::{QPolicy, Tape};
+
+    let policy = QPolicy::with_backend(task.fmt(), task.backend());
+    let model = task.init_model();
+    let mut gen = task.make_gen();
+    let batch = T::next_batch(&mut gen);
+    let mut t = Tape::new(policy);
+    let (loss, params) = T::forward_into(&model, &mut t, &batch);
+    t.backward(loss);
+    report_tape_lint(T::NAME, &mut t, loss, params.len())
+}
+
+/// `lsq` trains outside the tape (hand-rolled SGD over `w`), so lint the
+/// equivalent recorded graph: `x @ w` against targets under the fused MSE
+/// loss — same shapes, same ops the tape would record for it.
+fn lint_lsq_graph(seed: u64) -> bool {
+    use bf16_train::qsim::lsq::{LsqConfig, LsqData};
+    use bf16_train::qsim::{QPolicy, Tape, Tensor};
+
+    let cfg = LsqConfig { seed, ..Default::default() };
+    let data = LsqData::generate(&cfg);
+    let batch = cfg.n_samples.min(64);
+    let mut t = Tape::new(QPolicy::exact());
+    let x = t.input(Tensor::from_vec(batch, cfg.dim, data.xs[..batch * cfg.dim].to_vec()));
+    let y = t.input(Tensor::from_vec(batch, 1, data.ys[..batch].to_vec()));
+    let w = t.param(Tensor::zeros(cfg.dim, 1));
+    let pred = t.matmul(x, w);
+    let loss = t.mse_loss(pred, y);
+    t.backward(loss);
+    report_tape_lint("lsq", &mut t, loss, 1)
+}
+
+/// `repro lint-tape` — static analysis of each app's real training graph.
+fn cmd_lint_tape(args: &mut Args) -> Result<()> {
+    use bf16_train::qsim::dlrm::DlrmConfig;
+    use bf16_train::qsim::gpt::GptConfig;
+    use bf16_train::qsim::mlp::MlpConfig;
+
+    let app = args.opt("app", "all");
+    let seed = args.opt_u64("seed", 17)?;
+    args.finish()?;
+    if !matches!(app.as_str(), "all" | "dlrm" | "gpt" | "gpt-nano" | "mlp" | "lsq") {
+        bail!("--app must be all, dlrm, gpt, mlp or lsq, got {app:?}");
+    }
+    let mut unhealthy = false;
+    if app == "all" || app == "dlrm" {
+        unhealthy |= lint_task_graph(DlrmConfig { seed, ..Default::default() });
+    }
+    if app == "all" || app == "gpt" || app == "gpt-nano" {
+        unhealthy |= lint_task_graph(GptConfig { seed, ..Default::default() });
+    }
+    if app == "all" || app == "mlp" {
+        unhealthy |= lint_task_graph(MlpConfig { seed, ..Default::default() });
+    }
+    if app == "all" || app == "lsq" {
+        unhealthy |= lint_lsq_graph(seed);
+    }
+    if unhealthy {
+        bail!("lint-tape found structural errors (see diagnostics above)");
+    }
+    println!("lint-tape: all checked graphs structurally clean");
+    Ok(())
+}
+
+/// `repro fuzz-tape` — enumerative differential fuzzing of the tape.
+fn cmd_fuzz_tape(args: &mut Args) -> Result<()> {
+    use bf16_train::qsim::verify::{fuzz, gen};
+
+    let budget = args.opt_u64("budget", 200)?;
+    let seed = args.opt_u64("seed", 1)?;
+    let case = args
+        .opt_maybe("case")
+        .map(|s| {
+            s.parse::<u64>()
+                .with_context(|| format!("--case expects an integer, got {s:?}"))
+        })
+        .transpose()?;
+    args.finish()?;
+
+    if let Some(i) = case {
+        // Replay one case verbosely (the FUZZ-REPRO workflow).
+        let c = gen::gen_case(seed, i);
+        println!("FUZZ-REPRO seed={seed} case={i} — program:");
+        print!("{}", c.program);
+        return match fuzz::check_case(&c) {
+            Ok(stats) => {
+                println!(
+                    "PASS: {} parity/gradient/rewrite checks, {} rewrites validated",
+                    stats.checks, stats.rewrites
+                );
+                Ok(())
+            }
+            Err(e) => bail!("FAIL: {e}"),
+        };
+    }
+
+    let fmt_names: Vec<&str> = fuzz::sweep_formats().iter().map(|f| f.name).collect();
+    println!(
+        "fuzz-tape: seed={seed} budget={budget} formats=[{}] backends=[fast, reference] threads=[1, 4]",
+        fmt_names.join(", ")
+    );
+    let out = fuzz::run(seed, budget);
+    match &out.failure {
+        None => {
+            println!(
+                "PASS: {} cases, {} checks ({} rewrite admissions proven bit-identical)",
+                out.cases_run, out.checks_run, out.rewrites_validated
+            );
+            Ok(())
+        }
+        Some(f) => {
+            println!("FAIL after {} clean cases:\n{}", out.cases_run, f.render());
+            bail!("fuzz-tape found a divergence; replay with: repro fuzz-tape --seed {} --case {}",
+                f.seed, f.case)
+        }
+    }
 }

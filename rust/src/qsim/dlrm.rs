@@ -183,20 +183,17 @@ impl DlrmModel {
         for (ti, table) in self.tables.iter().enumerate() {
             feats.push(table.forward(t, batch.cat[ti].clone(), &mut params));
         }
-        // bottom MLP over dense features
+        // bottom MLP over dense features (fused affine-relu panel)
         let x = t.input_from(&batch.dense);
-        let z1 = self.bot.forward(t, x, &mut params);
-        let z = t.relu(z1);
+        let z = self.bot.forward_relu(t, x, &mut params);
         feats.push(z);
         // interaction: concat features, top MLP, scalar head
         let cat = t.concat_cols(feats);
-        let h1 = self.top.forward(t, cat, &mut params);
-        let h = t.relu(h1);
+        let h = self.top.forward_relu(t, cat, &mut params);
         let logits2d = self.head.forward(t, h, &mut params); // (B, 1)
-        let loss = t.bce_loss(
-            logits2d,
-            Tensor::from_vec(batch.labels.len(), 1, batch.labels.data.clone()),
-        );
+        // labels copy into a pooled buffer: a fresh Tensor here would
+        // retire one new allocation into the free pool every step
+        let loss = t.bce_loss_from(logits2d, &batch.labels);
         (loss, params)
     }
 
@@ -212,17 +209,12 @@ impl DlrmModel {
             feats.push(table.forward_frozen(&mut t2, batch.cat[ti].clone()));
         }
         let x = t2.input(batch.dense.clone());
-        let z1 = self.bot.forward_frozen(&mut t2, x);
-        let z = t2.relu(z1);
+        let z = self.bot.forward_relu_frozen(&mut t2, x);
         feats.push(z);
         let cat = t2.concat_cols(feats);
-        let h1 = self.top.forward_frozen(&mut t2, cat);
-        let h = t2.relu(h1);
+        let h = self.top.forward_relu_frozen(&mut t2, cat);
         let logits2d = self.head.forward_frozen(&mut t2, h);
-        let loss = t2.bce_loss(
-            logits2d,
-            Tensor::from_vec(batch.labels.len(), 1, batch.labels.data.clone()),
-        );
+        let loss = t2.bce_loss_from(logits2d, &batch.labels);
         let scores = t2.value(logits2d).data.clone();
         (t2.value(loss).item(), scores)
     }

@@ -23,6 +23,7 @@ pub mod pool;
 pub mod tape;
 pub mod tensor;
 pub mod train;
+pub mod verify;
 
 /// Which kernel implementations the simulator runs on.
 ///

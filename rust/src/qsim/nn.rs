@@ -64,30 +64,68 @@ impl Linear {
 
     /// Register params and build `x @ w (+ b)`; pushes `[w, (b)]` onto
     /// `params` in that order.
+    ///
+    /// The biased case records the fused [`Tape::affine`] node — the
+    /// `matmul + add_row` rewrite, admitted by `qsim::verify` as
+    /// bit-identical to the unfused chain — so registration order and
+    /// numerics are unchanged while the bias add happens in the matmul
+    /// panel.
     pub fn forward(&self, t: &mut Tape, x: Var, params: &mut Vec<Var>) -> Var {
         let wv = t.param_from(&self.w);
         params.push(wv);
-        let y = t.matmul(x, wv);
         match &self.b {
             Some(b) => {
                 let bv = t.param_from(b);
                 params.push(bv);
-                t.add_row(y, bv)
+                t.affine(x, wv, bv, false)
             }
-            None => y,
+            None => t.matmul(x, wv),
+        }
+    }
+
+    /// [`Linear::forward`] with a trailing relu, fused into the same
+    /// affine node when a bias is present (`matmul + add_row + relu` →
+    /// `affine(relu)`, the second admitted rewrite).
+    pub fn forward_relu(&self, t: &mut Tape, x: Var, params: &mut Vec<Var>) -> Var {
+        let wv = t.param_from(&self.w);
+        params.push(wv);
+        match &self.b {
+            Some(b) => {
+                let bv = t.param_from(b);
+                params.push(bv);
+                t.affine(x, wv, bv, true)
+            }
+            None => {
+                let y = t.matmul(x, wv);
+                t.relu(y)
+            }
         }
     }
 
     /// Same graph from no-grad inputs (inference/eval paths).
     pub fn forward_frozen(&self, t: &mut Tape, x: Var) -> Var {
         let wv = t.input(self.w.clone());
-        let y = t.matmul(x, wv);
         match &self.b {
             Some(b) => {
                 let bv = t.input(b.clone());
-                t.add_row(y, bv)
+                t.affine(x, wv, bv, false)
             }
-            None => y,
+            None => t.matmul(x, wv),
+        }
+    }
+
+    /// [`Linear::forward_relu`] from no-grad inputs.
+    pub fn forward_relu_frozen(&self, t: &mut Tape, x: Var) -> Var {
+        let wv = t.input(self.w.clone());
+        match &self.b {
+            Some(b) => {
+                let bv = t.input(b.clone());
+                t.affine(x, wv, bv, true)
+            }
+            None => {
+                let y = t.matmul(x, wv);
+                t.relu(y)
+            }
         }
     }
 }
@@ -171,16 +209,16 @@ impl Mlp {
         }
     }
 
-    /// Pushes `[fc1.w, fc1.b, fc2.w, fc2.b]` onto `params`.
+    /// Pushes `[fc1.w, fc1.b, fc2.w, fc2.b]` onto `params`.  The hidden
+    /// layer runs as one fused affine-relu node (fc1 always carries a
+    /// bias) — same numerics, same registration order, one kernel.
     pub fn forward(&self, t: &mut Tape, x: Var, params: &mut Vec<Var>) -> Var {
-        let h = self.fc1.forward(t, x, params);
-        let r = t.relu(h);
+        let r = self.fc1.forward_relu(t, x, params);
         self.fc2.forward(t, r, params)
     }
 
     pub fn forward_frozen(&self, t: &mut Tape, x: Var) -> Var {
-        let h = self.fc1.forward_frozen(t, x);
-        let r = t.relu(h);
+        let r = self.fc1.forward_relu_frozen(t, x);
         self.fc2.forward_frozen(t, r)
     }
 }

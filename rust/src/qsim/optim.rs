@@ -237,7 +237,7 @@ impl Sgd {
             stats: UpdateStats,
         }
 
-        let per = (n + threads - 1) / threads;
+        let per = n.div_ceil(threads);
         let mut parts: Vec<Span> = Vec::with_capacity(threads);
         let mut w_rest = w.data.as_mut_slice();
         let mut u_rest = self.u_buf.as_mut_slice();

@@ -247,7 +247,7 @@ impl Pool {
             f(0, data);
             return;
         }
-        let per = (n + t - 1) / t;
+        let per = n.div_ceil(t);
         let mut parts: Vec<(usize, &mut [T])> = Vec::with_capacity(t);
         let mut rest = data;
         let mut off = 0usize;

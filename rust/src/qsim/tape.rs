@@ -83,8 +83,13 @@ impl QPolicy {
 }
 
 /// Index of a node in the tape.  Invalidated by [`Tape::reset`].
+///
+/// The second field is the tape *epoch* the Var was minted in (bumped by
+/// every `reset`); debug builds assert it on every use, so a stale Var —
+/// one held across a `reset` — panics at the offending call site instead
+/// of silently reading the next step's graph.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct Var(pub usize);
+pub struct Var(pub usize, pub u32);
 
 enum Op {
     /// Leaf (input or parameter).
@@ -106,6 +111,10 @@ enum Op {
     BceLoss { logits: Var, labels: Tensor },
     /// Broadcast a (1, n) bias over rows of a (m, n) input.
     AddRow(Var, Var),
+    /// Fused `x @ w + b` panel with optional trailing relu — the validated
+    /// `matmul + add_row (+ relu)` rewrite (see [`Tape::affine`] for the
+    /// bit-identity argument).
+    Affine { x: Var, w: Var, b: Var, relu: bool },
     /// Column-wise concatenation of same-row-count tensors (memory op).
     ConcatCols(Vec<Var>),
     /// Multiply by a compile-time-constant scalar (residual-branch scaling).
@@ -123,18 +132,63 @@ enum Op {
     SoftmaxXent { logits: Var, targets: Vec<usize> },
 }
 
+// -- free pool --------------------------------------------------------------
+
+/// The tape's recycled-buffer pool, with leak accounting.
+///
+/// Every buffer handed out by [`FreeList::take`] (whether recycled or
+/// freshly allocated on a pool miss) increments `outstanding`; every buffer
+/// returned by [`FreeList::put`] decrements it.  Externally allocated
+/// buffers entering tape storage (owned-tensor `input`/`param`, the
+/// `Reference` backend's fresh backward temporaries) are announced through
+/// [`FreeList::note_external`] so their eventual return balances.  After
+/// [`Tape::reset`] has drained every node, gradient and op-held tensor,
+/// `outstanding` must be exactly zero — a positive count means a pooled
+/// buffer was dropped instead of returned (a steady-state allocation leak),
+/// a `put` past zero means a buffer was double-pooled.  Debug builds assert
+/// the invariant; [`Tape::pool_stats`] exposes the counters to the linter.
+#[derive(Default)]
+struct FreeList {
+    bufs: Vec<Vec<f32>>,
+    /// Buffers currently held by tape storage or in-flight computation.
+    outstanding: u64,
+}
+
+impl FreeList {
+    /// Hand out a cleared buffer (recycled when available).
+    fn take(&mut self) -> Vec<f32> {
+        self.outstanding += 1;
+        let mut b = self.bufs.pop().unwrap_or_default();
+        b.clear();
+        b
+    }
+
+    /// Return a buffer previously handed out (or announced external).
+    fn put(&mut self, b: Vec<f32>) {
+        self.outstanding = self
+            .outstanding
+            .checked_sub(1)
+            .expect("free-pool accounting: buffer returned that was never taken");
+        self.bufs.push(b);
+    }
+
+    /// Announce a buffer that entered tape storage without coming from
+    /// `take` — it will be `put` back by `reset` like any pooled buffer.
+    fn note_external(&mut self) {
+        self.outstanding += 1;
+    }
+}
+
 // -- free-pool helpers (free functions so backward can hold disjoint field
 //    borrows of the tape while allocating) ----------------------------------
 
 /// Take an empty tensor whose storage comes from the pool (no zero fill —
 /// callers extend/resize as they produce elements).
-fn pool_tensor(free: &mut Vec<Vec<f32>>) -> Tensor {
-    let mut data = free.pop().unwrap_or_default();
-    data.clear();
-    Tensor { rows: 0, cols: 0, data }
+fn pool_tensor(free: &mut FreeList) -> Tensor {
+    Tensor { rows: 0, cols: 0, data: free.take() }
 }
 
-fn pool_zeros(free: &mut Vec<Vec<f32>>, rows: usize, cols: usize) -> Tensor {
+fn pool_zeros(free: &mut FreeList, rows: usize, cols: usize) -> Tensor {
     let mut t = pool_tensor(free);
     t.rows = rows;
     t.cols = cols;
@@ -142,7 +196,7 @@ fn pool_zeros(free: &mut Vec<Vec<f32>>, rows: usize, cols: usize) -> Tensor {
     t
 }
 
-fn pool_copy(free: &mut Vec<Vec<f32>>, src: &Tensor) -> Tensor {
+fn pool_copy(free: &mut FreeList, src: &Tensor) -> Tensor {
     let mut t = pool_tensor(free);
     t.rows = src.rows;
     t.cols = src.cols;
@@ -150,7 +204,7 @@ fn pool_copy(free: &mut Vec<Vec<f32>>, src: &Tensor) -> Tensor {
     t
 }
 
-fn pool_map(free: &mut Vec<Vec<f32>>, src: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+fn pool_map(free: &mut FreeList, src: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
     let mut t = pool_tensor(free);
     t.rows = src.rows;
     t.cols = src.cols;
@@ -159,7 +213,7 @@ fn pool_map(free: &mut Vec<Vec<f32>>, src: &Tensor, f: impl Fn(f32) -> f32) -> T
 }
 
 fn pool_zip(
-    free: &mut Vec<Vec<f32>>,
+    free: &mut FreeList,
     a: &Tensor,
     b: &Tensor,
     f: impl Fn(f32, f32) -> f32,
@@ -190,7 +244,7 @@ fn run_row_bands(
         f(0, data);
         return;
     }
-    let per = (rows + t - 1) / t;
+    let per = rows.div_ceil(t);
     let mut parts: Vec<(usize, &mut [f32])> = Vec::with_capacity(t);
     let mut rest = data;
     let mut row0 = 0usize;
@@ -340,12 +394,12 @@ fn accum(
     policy: QPolicy,
     requires_grad: &[bool],
     grads: &mut [Option<Tensor>],
-    free: &mut Vec<Vec<f32>>,
+    free: &mut FreeList,
     v: Var,
     mut g: Tensor,
 ) {
     if !requires_grad[v.0] {
-        free.push(g.data);
+        free.put(g.data);
         return;
     }
     policy.q_slice(&mut g.data);
@@ -356,7 +410,7 @@ fn accum(
                 *e += x;
             }
             policy.q_slice(&mut existing.data);
-            free.push(g.data);
+            free.put(g.data);
         }
         None => grads[v.0] = Some(g),
     }
@@ -373,8 +427,12 @@ pub struct Tape {
     grads: Vec<Option<Tensor>>,
     requires_grad: Vec<bool>,
     pub policy: QPolicy,
-    /// Retired buffers recycled across ops and (via [`Tape::reset`]) steps.
-    free: Vec<Vec<f32>>,
+    /// Retired buffers recycled across ops and (via [`Tape::reset`]) steps,
+    /// with outstanding-buffer accounting (see [`FreeList`]).
+    free: FreeList,
+    /// Bumped by every [`Tape::reset`]; Vars carry the epoch they were
+    /// minted in, and debug builds reject cross-epoch use.
+    epoch: u32,
     /// Worker pool for the `Fast` backend's parallel kernels (matmul row
     /// panels, large elementwise ops).  Single-threaded by default; shared
     /// with the owning trainer via [`Tape::with_pool`].  Results are
@@ -395,7 +453,8 @@ impl Tape {
             grads: Vec::new(),
             requires_grad: Vec::new(),
             policy,
-            free: Vec::new(),
+            free: FreeList::default(),
+            epoch: 0,
             pool,
         }
     }
@@ -409,20 +468,38 @@ impl Tape {
         // labels), so fused ops stay allocation-free in steady state
         for op in self.ops.drain(..) {
             match op {
-                Op::BceLoss { labels, .. } => self.free.push(labels.data),
-                Op::CausalAttn { probs, .. } => self.free.push(probs.data),
+                Op::BceLoss { labels, .. } => self.free.put(labels.data),
+                Op::CausalAttn { probs, .. } => self.free.put(probs.data),
                 _ => {}
             }
         }
         for t in self.values.drain(..) {
-            self.free.push(t.data);
+            self.free.put(t.data);
         }
         for g in self.grads.drain(..) {
             if let Some(t) = g {
-                self.free.push(t.data);
+                self.free.put(t.data);
             }
         }
         self.requires_grad.clear();
+        self.epoch = self.epoch.wrapping_add(1);
+        // Every buffer ever handed out (or adopted) must now be back in the
+        // pool: a remainder is a recycling leak in some op's forward or
+        // backward path.
+        debug_assert_eq!(
+            self.free.outstanding, 0,
+            "free-pool accounting: {} buffer(s) taken from the pool were \
+             dropped instead of returned before reset",
+            self.free.outstanding
+        );
+    }
+
+    /// Free-pool accounting counters: `(buffers parked in the pool,
+    /// buffers outstanding in tape storage / in flight)`.  Right after a
+    /// [`Tape::reset`] the second component must be zero; in steady state
+    /// the first stops growing once capacities converge.
+    pub fn pool_stats(&self) -> (usize, u64) {
+        (self.free.bufs.len(), self.free.outstanding)
     }
 
     /// Number of nodes recorded since construction / the last reset.
@@ -435,24 +512,37 @@ impl Tape {
         self.values.push(value);
         self.grads.push(None);
         self.requires_grad.push(requires_grad);
-        Var(self.values.len() - 1)
+        Var(self.values.len() - 1, self.epoch)
+    }
+
+    /// Debug-build staleness guard: reject a [`Var`] minted before the
+    /// last [`Tape::reset`] at the call site that misuses it.
+    #[inline]
+    fn check(&self, v: Var) {
+        debug_assert_eq!(
+            v.1, self.epoch,
+            "stale Var({}): minted in tape epoch {} but the tape is at epoch {} \
+             (reset() invalidates all outstanding Vars)",
+            v.0, v.1, self.epoch
+        );
+        debug_assert!(v.0 < self.values.len(), "Var({}) out of range", v.0);
     }
 
     fn take_buf(&mut self) -> Vec<f32> {
-        let mut b = self.free.pop().unwrap_or_default();
-        b.clear();
-        b
+        self.free.take()
     }
 
     /// Register an input: no cotangent is accumulated into it during
     /// `backward` ([`Tape::grad`] stays `None`).
     pub fn input(&mut self, t: Tensor) -> Var {
+        self.free.note_external();
         self.push(Op::Leaf, t, false)
     }
 
     /// Register a parameter (gradient collected).  The value is used as
     /// stored — callers keep parameters in-format themselves.
     pub fn param(&mut self, t: Tensor) -> Var {
+        self.free.note_external();
         self.push(Op::Leaf, t, true)
     }
 
@@ -471,10 +561,12 @@ impl Tape {
     }
 
     pub fn value(&self, v: Var) -> &Tensor {
+        self.check(v);
         &self.values[v.0]
     }
 
     pub fn grad(&self, v: Var) -> Option<&Tensor> {
+        self.check(v);
         self.grads[v.0].as_ref()
     }
 
@@ -485,6 +577,7 @@ impl Tape {
     /// element-local, so the pooled path is bit-identical to the sequential
     /// one regardless of how chunks land on workers.
     fn unary(&mut self, a: Var, op: Op, f: impl Fn(f32) -> f32 + Sync) -> Var {
+        self.check(a);
         let mut data = self.take_buf();
         let policy = self.policy;
         let (rows, cols);
@@ -514,6 +607,8 @@ impl Tape {
     }
 
     fn binary(&mut self, a: Var, b: Var, op: Op, f: impl Fn(f32, f32) -> f32 + Sync) -> Var {
+        self.check(a);
+        self.check(b);
         let mut data = self.take_buf();
         let policy = self.policy;
         let (rows, cols);
@@ -547,13 +642,20 @@ impl Tape {
         self.push(op, out, true)
     }
 
+    /// Scalar node from a pooled buffer.  `Tensor::scalar` here would leak
+    /// one fresh allocation into the free pool per step (every fused-loss
+    /// scalar retires into the pool at `reset`), growing it without bound.
     fn push_scalar(&mut self, op: Op, v: f32) -> Var {
-        let mut t = Tensor::scalar(v);
+        let mut data = self.take_buf();
+        data.push(v);
+        let mut t = Tensor { rows: 1, cols: 1, data };
         self.policy.q_slice(&mut t.data);
         self.push(op, t, true)
     }
 
     pub fn matmul(&mut self, a: Var, b: Var) -> Var {
+        self.check(a);
+        self.check(b);
         match self.policy.backend {
             Backend::Fast => {
                 let mut out = Tensor { rows: 0, cols: 0, data: self.take_buf() };
@@ -567,7 +669,10 @@ impl Tape {
                 self.push(Op::MatMul(a, b), out, true)
             }
             Backend::Reference => {
+                // reference kernels allocate fresh outputs (the pre-arena
+                // code path); announce them so pool accounting balances
                 let mut out = self.values[a.0].matmul_reference(&self.values[b.0]);
+                self.free.note_external();
                 self.policy.q_slice(&mut out.data);
                 self.push(Op::MatMul(a, b), out, true)
             }
@@ -580,6 +685,8 @@ impl Tape {
 
     /// Broadcast-add a (1, n) bias to an (m, n) activation.
     pub fn add_row(&mut self, a: Var, bias: Var) -> Var {
+        self.check(a);
+        self.check(bias);
         let mut data = self.take_buf();
         {
             let (av, bv) = (&self.values[a.0], &self.values[bias.0]);
@@ -596,6 +703,72 @@ impl Tape {
         let mut out = Tensor { rows, cols, data };
         self.policy.q_slice(&mut out.data);
         self.push(Op::AddRow(a, bias), out, true)
+    }
+
+    /// Fused affine panel: `x @ w + b` with an optional trailing relu —
+    /// the `matmul → add_row (→ relu)` chain of [`nn::Linear`] collapsed
+    /// into one node.
+    ///
+    /// **Bit-identity contract** (fuzzer-validated, see `qsim::verify`):
+    /// the fused op reproduces the unfused chain exactly, on both backends
+    /// and at every thread count.  Forward: the matmul output is rounded by
+    /// the producing kernel, the bias row-add is rounded once, and the relu
+    /// output is rounded once — the same three per-operator roundings the
+    /// chain performs, over the same fp32 intermediates (rounding is
+    /// elementwise, so the chain's chunked/pooled rounding of identical
+    /// values lands on identical bits).  Backward: the relu mask is read
+    /// off the *fused output* `y` — valid because the pre-relu value `a` is
+    /// in-format, so `y = max(a, 0)` satisfies `y > 0 ⟺ a > 0` (NaN scores
+    /// `false` on both sides: `f32::max(NaN, 0.0)` is `0.0`) — and the
+    /// masked cotangent is rounded once before the bias column-sum and the
+    /// two matmul cotangents, exactly where `accum` would round it between
+    /// the unfused nodes (rounding is idempotent on in-format values, so
+    /// the chain's extra pass-through roundings are no-ops).
+    ///
+    /// [`nn::Linear`]: super::nn::Linear
+    pub fn affine(&mut self, x: Var, w: Var, b: Var, relu: bool) -> Var {
+        self.check(x);
+        self.check(w);
+        self.check(b);
+        let mut out = match self.policy.backend {
+            Backend::Fast => {
+                let mut out = Tensor { rows: 0, cols: 0, data: self.take_buf() };
+                let fuse = self.policy.fuse_fmt();
+                self.values[x.0].matmul_into_pooled(
+                    &self.values[w.0],
+                    &mut out,
+                    fuse,
+                    &self.pool,
+                );
+                out
+            }
+            Backend::Reference => {
+                let mut out = self.values[x.0].matmul_reference(&self.values[w.0]);
+                self.free.note_external();
+                self.policy.q_slice(&mut out.data);
+                out
+            }
+        };
+        {
+            let bv = &self.values[b.0];
+            assert_eq!(bv.rows, 1);
+            assert_eq!(bv.cols, out.cols);
+            if out.cols > 0 {
+                for orow in out.data.chunks_exact_mut(out.cols) {
+                    for (o, &bx) in orow.iter_mut().zip(&bv.data) {
+                        *o += bx;
+                    }
+                }
+            }
+            self.policy.q_slice(&mut out.data);
+        }
+        if relu {
+            for o in &mut out.data {
+                *o = o.max(0.0);
+            }
+            self.policy.q_slice(&mut out.data);
+        }
+        self.push(Op::Affine { x, w, b, relu }, out, true)
     }
 
     pub fn sub(&mut self, a: Var, b: Var) -> Var {
@@ -620,6 +793,7 @@ impl Tape {
 
     /// Embedding lookup: rows of `table` selected by `idx`.
     pub fn embed(&mut self, table: Var, idx: Vec<usize>) -> Var {
+        self.check(table);
         let mut data = self.take_buf();
         let tv = &self.values[table.0];
         let cols = tv.cols;
@@ -652,6 +826,8 @@ impl Tape {
     /// into *both* operands, so tying the embedding table to the output
     /// head is a single shared parameter node.
     pub fn matmul_nt(&mut self, a: Var, b: Var) -> Var {
+        self.check(a);
+        self.check(b);
         let mut out = Tensor { rows: 0, cols: 0, data: self.take_buf() };
         match self.policy.backend {
             Backend::Fast => {
@@ -669,6 +845,7 @@ impl Tape {
     /// per row, one output rounding.  Row-local, fanned out across the pool
     /// for large activations; bit-identical at every thread count.
     pub fn layernorm(&mut self, a: Var, eps: f32) -> Var {
+        self.check(a);
         let mut data = self.take_buf();
         let policy = self.policy;
         let (rows, cols);
@@ -711,6 +888,9 @@ impl Tape {
     /// recovered by [`Tape::reset`]).  Sequence-local, so the pooled
     /// fan-out is bit-identical at every thread count.
     pub fn causal_attention(&mut self, q: Var, k: Var, v: Var, seqs: usize) -> Var {
+        self.check(q);
+        self.check(k);
+        self.check(v);
         let (rows, d) = {
             let (qv, kv, vv) = (&self.values[q.0], &self.values[k.0], &self.values[v.0]);
             assert_eq!(qv.rows, kv.rows, "attention q/k row mismatch");
@@ -744,7 +924,7 @@ impl Tape {
                     p: &'a mut [f32],
                 }
                 let t = self.pool.threads().min(seqs);
-                let per = (seqs + t - 1) / t;
+                let per = seqs.div_ceil(t);
                 let mut parts: Vec<Band> = Vec::with_capacity(t);
                 let mut orest = data.as_mut_slice();
                 let mut prest = probs.data.as_mut_slice();
@@ -791,6 +971,7 @@ impl Tape {
     /// sequential f64 reduction in row order, so the scalar output is
     /// bit-identical at every thread count.
     pub fn softmax_xent(&mut self, logits: Var, targets: Vec<usize>) -> Var {
+        self.check(logits);
         let mut rowloss = self.take_buf();
         let mean = {
             let lv = &self.values[logits.0];
@@ -822,13 +1003,16 @@ impl Tape {
             }
             (acc / lv.rows.max(1) as f64) as f32
         };
-        self.free.push(std::mem::take(&mut rowloss));
+        self.free.put(std::mem::take(&mut rowloss));
         self.push_scalar(Op::SoftmaxXent { logits, targets }, mean)
     }
 
     /// Column-wise concat (a memory op: values pass through unrounded).
     pub fn concat_cols(&mut self, parts: Vec<Var>) -> Var {
         assert!(!parts.is_empty(), "concat_cols: need at least one part");
+        for &p in &parts {
+            self.check(p);
+        }
         let mut data = self.take_buf();
         let rows = self.values[parts[0].0].rows;
         let total: usize = parts.iter().map(|v| self.values[v.0].cols).sum();
@@ -848,6 +1032,7 @@ impl Tape {
     }
 
     pub fn mean_all(&mut self, a: Var) -> Var {
+        self.check(a);
         let v = &self.values[a.0];
         let m = v.data.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
         self.push_scalar(Op::MeanAll(a), m as f32)
@@ -862,8 +1047,24 @@ impl Tape {
         self.push_scalar(Op::MseLoss(d), 0.5 * m as f32)
     }
 
-    /// Fused BCE-with-logits against constant labels.
+    /// Fused BCE-with-logits against constant labels (owned tensor — its
+    /// storage is adopted into the free pool at `reset`).
     pub fn bce_loss(&mut self, logits: Var, labels: Tensor) -> Var {
+        self.check(logits);
+        self.free.note_external();
+        self.bce_loss_inner(logits, labels)
+    }
+
+    /// [`Tape::bce_loss`] that copies the labels into a pool buffer instead
+    /// of taking an owned tensor — callers passing a fresh clone every step
+    /// would otherwise grow the free pool by one orphaned buffer per step.
+    pub fn bce_loss_from(&mut self, logits: Var, labels: &Tensor) -> Var {
+        self.check(logits);
+        let c = pool_copy(&mut self.free, labels);
+        self.bce_loss_inner(logits, c)
+    }
+
+    fn bce_loss_inner(&mut self, logits: Var, labels: Tensor) -> Var {
         let lv = &self.values[logits.0];
         assert_eq!(lv.len(), labels.len());
         let mut acc = 0f64;
@@ -876,6 +1077,73 @@ impl Tape {
         self.push_scalar(Op::BceLoss { logits, labels }, mean)
     }
 
+    // -- static analysis ----------------------------------------------------
+
+    /// Export the recorded graph as a [`verify`](super::verify) IR program
+    /// for structural linting and fusion-opportunity scanning.  Purely
+    /// observational — the tape is not modified.
+    pub fn export_program(&self) -> super::verify::Program {
+        use super::verify::{NodeIr, OpIr};
+        let nodes = self
+            .ops
+            .iter()
+            .zip(&self.values)
+            .zip(&self.requires_grad)
+            .map(|((op, val), &rg)| {
+                let op = match op {
+                    Op::Leaf => OpIr::Leaf,
+                    Op::MatMul(a, b) => OpIr::MatMul(a.0, b.0),
+                    Op::Add(a, b) => OpIr::Add(a.0, b.0),
+                    Op::Sub(a, b) => OpIr::Sub(a.0, b.0),
+                    Op::Mul(a, b) => OpIr::Mul(a.0, b.0),
+                    Op::Relu(a) => OpIr::Relu(a.0),
+                    Op::Sigmoid(a) => OpIr::Sigmoid(a.0),
+                    Op::Tanh(a) => OpIr::Tanh(a.0),
+                    Op::Embed { table, idx } => {
+                        OpIr::GatherRows { x: table.0, idx: idx.clone() }
+                    }
+                    Op::MeanAll(a) => OpIr::MeanAll(a.0),
+                    Op::MseLoss(d) => OpIr::MseLoss { diff: d.0 },
+                    Op::BceLoss { logits, labels } => {
+                        OpIr::BceLoss { logits: logits.0, labels: labels.data.clone() }
+                    }
+                    Op::AddRow(a, b) => OpIr::AddRow(a.0, b.0),
+                    Op::Affine { x, w, b, relu } => {
+                        OpIr::Affine { x: x.0, w: w.0, b: b.0, relu: *relu }
+                    }
+                    Op::ConcatCols(parts) => {
+                        OpIr::ConcatCols(parts.iter().map(|p| p.0).collect())
+                    }
+                    Op::Scale(a, c) => OpIr::Scale(a.0, *c),
+                    Op::MatMulNT(a, b) => OpIr::MatMulNT(a.0, b.0),
+                    Op::LayerNorm { x, eps } => OpIr::LayerNorm { x: x.0, eps: *eps },
+                    Op::CausalAttn { q, k, v, seqs, .. } => {
+                        OpIr::CausalAttn { q: q.0, k: k.0, v: v.0, seqs: *seqs }
+                    }
+                    Op::SoftmaxXent { logits, targets } => {
+                        OpIr::SoftmaxXent { logits: logits.0, targets: targets.clone() }
+                    }
+                };
+                NodeIr { op, rows: val.rows, cols: val.cols, requires_grad: rg }
+            })
+            .collect();
+        super::verify::Program { nodes }
+    }
+
+    /// Debug-build structural gate run by [`Tape::backward`]: export the
+    /// graph and assert the linter finds no errors (shape inconsistencies,
+    /// malformed operand references, a non-scalar root).
+    #[cfg(debug_assertions)]
+    fn debug_validate(&self, root: Var) {
+        let prog = self.export_program();
+        let errs = super::verify::lint(&prog, root.0).errors();
+        debug_assert!(
+            errs.is_empty(),
+            "tape graph failed its structural lint before backward:\n{}",
+            errs.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
     // -- backward -----------------------------------------------------------
 
     /// Run reverse-mode from scalar `root` (seed gradient 1.0).
@@ -884,9 +1152,18 @@ impl Tape {
     /// tensor cloning — and every intermediate cotangent draws its storage
     /// from (and returns it to) the tape's buffer pool.
     pub fn backward(&mut self, root: Var) {
+        self.check(root);
         assert_eq!(self.values[root.0].len(), 1, "backward from non-scalar");
-        self.grads[root.0] = Some(Tensor::scalar(1.0));
-        let Tape { ops, values, grads, requires_grad, policy, free, pool } = self;
+        #[cfg(debug_assertions)]
+        self.debug_validate(root);
+        // seed gradient from the pool — a fresh Tensor::scalar here retires
+        // into the free pool every reset, leaking one allocation per step
+        let mut seed = pool_tensor(&mut self.free);
+        seed.rows = 1;
+        seed.cols = 1;
+        seed.data.push(1.0);
+        self.grads[root.0] = Some(seed);
+        let Tape { ops, values, grads, requires_grad, policy, free, pool, .. } = self;
         let policy = *policy;
         let pool: &Pool = pool;
         let rg: &[bool] = requires_grad;
@@ -906,7 +1183,7 @@ impl Tape {
                                 values[b.0].transpose_into(&mut bt);
                                 let mut da = pool_tensor(free);
                                 g.matmul_into_pooled(&bt, &mut da, None, pool);
-                                free.push(bt.data);
+                                free.put(bt.data);
                                 accum(policy, rg, grads, free, a, da);
                             }
                             if rg[b.0] {
@@ -914,13 +1191,15 @@ impl Tape {
                                 values[a.0].transpose_into(&mut at);
                                 let mut db = pool_tensor(free);
                                 at.matmul_into_pooled(&g, &mut db, None, pool);
-                                free.push(at.data);
+                                free.put(at.data);
                                 accum(policy, rg, grads, free, b, db);
                             }
                         }
                         Backend::Reference => {
                             let da = g.matmul_reference(&values[b.0].transpose());
                             let db = values[a.0].transpose().matmul_reference(&g);
+                            free.note_external();
+                            free.note_external();
                             accum(policy, rg, grads, free, a, da);
                             accum(policy, rg, grads, free, b, db);
                         }
@@ -946,6 +1225,66 @@ impl Tape {
                     let ga = pool_copy(free, &g);
                     accum(policy, rg, grads, free, a, ga);
                     accum(policy, rg, grads, free, bias, db);
+                }
+                Op::Affine { x, w, b, relu } => {
+                    // the unfused chain's backward verbatim: relu mask (read
+                    // off the fused output — valid for in-format pre-relu
+                    // values, see the forward's doc comment), one boundary
+                    // rounding, then the add_row column-sum and the two
+                    // matmul cotangents.  Contribution order (db, dx, dw)
+                    // matches the unfused node order so fan-in rounding
+                    // sequences agree even when operands alias.
+                    let (x, w, b, relu) = (*x, *w, *b, *relu);
+                    let mut g1 = if relu {
+                        pool_zip(free, &g, &values[i], |gg, y| {
+                            if y > 0.0 {
+                                gg
+                            } else {
+                                0.0
+                            }
+                        })
+                    } else {
+                        pool_copy(free, &g)
+                    };
+                    policy.q_slice(&mut g1.data);
+                    let mut db = pool_zeros(free, 1, g1.cols);
+                    if g1.cols > 0 {
+                        for grow in g1.data.chunks_exact(g1.cols) {
+                            for (d, &gx) in db.data.iter_mut().zip(grow) {
+                                *d += gx;
+                            }
+                        }
+                    }
+                    accum(policy, rg, grads, free, b, db);
+                    match policy.backend {
+                        Backend::Fast => {
+                            if rg[x.0] {
+                                let mut wt = pool_tensor(free);
+                                values[w.0].transpose_into(&mut wt);
+                                let mut dx = pool_tensor(free);
+                                g1.matmul_into_pooled(&wt, &mut dx, None, pool);
+                                free.put(wt.data);
+                                accum(policy, rg, grads, free, x, dx);
+                            }
+                            if rg[w.0] {
+                                let mut xt = pool_tensor(free);
+                                values[x.0].transpose_into(&mut xt);
+                                let mut dw = pool_tensor(free);
+                                xt.matmul_into_pooled(&g1, &mut dw, None, pool);
+                                free.put(xt.data);
+                                accum(policy, rg, grads, free, w, dw);
+                            }
+                        }
+                        Backend::Reference => {
+                            let dx = g1.matmul_reference(&values[w.0].transpose());
+                            let dw = values[x.0].transpose().matmul_reference(&g1);
+                            free.note_external();
+                            free.note_external();
+                            accum(policy, rg, grads, free, x, dx);
+                            accum(policy, rg, grads, free, w, dw);
+                        }
+                    }
+                    free.put(g1.data);
                 }
                 Op::Sub(a, b) => {
                     let (a, b) = (*a, *b);
@@ -1060,13 +1399,15 @@ impl Tape {
                                 g.transpose_into(&mut gt);
                                 let mut db = pool_tensor(free);
                                 gt.matmul_into_pooled(&values[a.0], &mut db, None, pool);
-                                free.push(gt.data);
+                                free.put(gt.data);
                                 accum(policy, rg, grads, free, b, db);
                             }
                         }
                         Backend::Reference => {
                             let da = g.matmul_reference(&values[b.0]);
                             let db = g.transpose().matmul_reference(&values[a.0]);
+                            free.note_external();
+                            free.note_external();
                             accum(policy, rg, grads, free, a, da);
                             accum(policy, rg, grads, free, b, db);
                         }
@@ -1130,8 +1471,7 @@ impl Tape {
                     let mut dq = pool_zeros(free, rows, d);
                     let mut dk = pool_zeros(free, rows, d);
                     let mut dv = pool_zeros(free, rows, d);
-                    let mut dprow = free.pop().unwrap_or_default();
-                    dprow.clear();
+                    let mut dprow = free.take();
                     dprow.resize(t_len, 0.0);
                     {
                         let qd = &values[q.0].data;
@@ -1181,7 +1521,7 @@ impl Tape {
                             }
                         }
                     }
-                    free.push(dprow);
+                    free.put(dprow);
                     accum(policy, rg, grads, free, q, dq);
                     accum(policy, rg, grads, free, k, dk);
                     accum(policy, rg, grads, free, v, dv);
@@ -1750,5 +2090,136 @@ mod tests {
         for (i, (a, b)) in gr.data.iter().zip(&g1.data).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "reference grad[{i}]");
         }
+    }
+
+    /// The fused affine panel must reproduce the unfused
+    /// `matmul → add_row (→ relu)` chain bit-for-bit: loss and every
+    /// parameter gradient, on both backends, at 1 and 4 intra-threads,
+    /// under the exact and a rounding policy.  This is the hot-path
+    /// admission test for the `FuseAffine`/`FuseAffineRelu` rewrites.
+    #[test]
+    fn affine_bit_identical_to_unfused_chain() {
+        let mut rng = Rng::new(0xAF1, 0);
+        // crosses the elementwise and matmul fan-out thresholds
+        let x = Tensor::randn(48, 130, 1.0, &mut rng);
+        let w = Tensor::randn(130, 70, 0.3, &mut rng);
+        let bias = Tensor::randn(1, 70, 0.1, &mut rng);
+        let run = |policy: QPolicy, pool: Arc<Pool>, fused: bool, relu: bool| {
+            let mut t = Tape::with_pool(policy, pool);
+            let xv = t.param_from(&x);
+            let wv = t.param_from(&w);
+            let bv = t.param_from(&bias);
+            let out = if fused {
+                t.affine(xv, wv, bv, relu)
+            } else {
+                let m = t.matmul(xv, wv);
+                let a = t.add_row(m, bv);
+                if relu {
+                    t.relu(a)
+                } else {
+                    a
+                }
+            };
+            let s = t.sigmoid(out);
+            let l = t.mean_all(s);
+            t.backward(l);
+            (
+                t.value(l).item(),
+                t.grad(xv).unwrap().clone(),
+                t.grad(wv).unwrap().clone(),
+                t.grad(bv).unwrap().clone(),
+            )
+        };
+        for fmt in [FP32, BF16] {
+            for relu in [false, true] {
+                let base = run(QPolicy::new(fmt), Pool::single(), false, relu);
+                for (backend, threads) in [
+                    (Backend::Fast, 1),
+                    (Backend::Fast, 4),
+                    (Backend::Reference, 1),
+                ] {
+                    let pool = if threads == 1 {
+                        Pool::single()
+                    } else {
+                        Arc::new(Pool::new(threads))
+                    };
+                    let got = run(QPolicy::with_backend(fmt, backend), pool, true, relu);
+                    let what = format!(
+                        "fmt={} relu={relu} backend={} threads={threads}",
+                        fmt.name,
+                        backend.name()
+                    );
+                    assert_eq!(got.0.to_bits(), base.0.to_bits(), "loss {what}");
+                    for (which, (gf, gu)) in
+                        [(&got.1, &base.1), (&got.2, &base.2), (&got.3, &base.3)]
+                            .iter()
+                            .enumerate()
+                    {
+                        for (i, (a, b)) in gf.data.iter().zip(&gu.data).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "grad tensor {which} elem {i} {what}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pool-accounting regression: after warmup, stepping a graph through
+    /// `reset` must neither leave buffers outstanding nor keep growing the
+    /// free pool.  Before the pooled-scalar fix, every step leaked two
+    /// fresh allocations into the pool (the fused-loss scalar and the
+    /// backward seed), so the pool grew without bound.
+    #[test]
+    fn reset_pool_accounting_reaches_steady_state() {
+        let mut rng = Rng::new(0x9001, 0);
+        let x = Tensor::randn(4, 6, 1.0, &mut rng);
+        let w = Tensor::randn(6, 3, 0.5, &mut rng);
+        let bias = Tensor::randn(1, 3, 0.1, &mut rng);
+        let mut t = Tape::new(QPolicy::new(BF16));
+        // warm the pool: two steps lets every buffer capacity converge
+        for _ in 0..2 {
+            let _ = mlp_graph(&mut t, &x, &w, &bias);
+            t.reset();
+        }
+        let (settled, outstanding) = t.pool_stats();
+        assert_eq!(outstanding, 0, "buffers left outstanding after reset");
+        for step in 0..4 {
+            let _ = mlp_graph(&mut t, &x, &w, &bias);
+            t.reset();
+            let (now, outstanding) = t.pool_stats();
+            assert_eq!(outstanding, 0, "step {step}: outstanding after reset");
+            assert_eq!(now, settled, "step {step}: free pool kept growing");
+        }
+    }
+
+    /// A Var held across `reset` must be rejected (debug builds).
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "stale Var")]
+    fn stale_var_across_reset_panics_in_debug() {
+        let mut t = Tape::new(QPolicy::exact());
+        let v = t.input(Tensor::vector(vec![1.0, 2.0]));
+        t.reset();
+        let fresh = t.input(Tensor::vector(vec![3.0, 4.0]));
+        let _ = t.add(v, fresh);
+    }
+
+    /// The exported IR mirrors the recorded graph and passes the linter.
+    #[test]
+    fn export_program_mirrors_graph_and_lints_clean() {
+        let mut t = Tape::new(QPolicy::exact());
+        let x = t.input(Tensor::from_vec(2, 3, vec![1.0, 2.0, -1.0, 0.5, 0.1, 0.3]));
+        let w = t.param(Tensor::from_vec(3, 2, vec![0.3, -0.7, 1.2, 0.5, -0.2, 0.9]));
+        let b = t.param(Tensor::from_vec(1, 2, vec![0.1, -0.1]));
+        let y = t.affine(x, w, b, true);
+        let l = t.softmax_xent(y, vec![1, 0]);
+        let prog = t.export_program();
+        assert_eq!(prog.nodes.len(), t.num_nodes());
+        let report = super::super::verify::lint(&prog, l.0);
+        assert!(report.errors().is_empty(), "{report}");
     }
 }

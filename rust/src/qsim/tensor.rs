@@ -176,7 +176,7 @@ impl Tensor {
         out.data.clear();
         out.data.resize(m * n, 0.0);
         let t = pool.threads().min(m);
-        let rows_per = (m + t - 1) / t;
+        let rows_per = m.div_ceil(t);
         let mut bands: Vec<(usize, &mut [f32])> = Vec::with_capacity(t);
         let mut rest = out.data.as_mut_slice();
         let mut row0 = 0usize;
@@ -248,7 +248,7 @@ impl Tensor {
         out.data.clear();
         out.data.resize(m * n, 0.0);
         let t = pool.threads().min(m);
-        let rows_per = (m + t - 1) / t;
+        let rows_per = m.div_ceil(t);
         let mut bands: Vec<(usize, &mut [f32])> = Vec::with_capacity(t);
         let mut rest = out.data.as_mut_slice();
         let mut row0 = 0usize;

@@ -1,0 +1,254 @@
+//! Replay a tape program on a fresh [`Tape`] under an arbitrary policy,
+//! backend and intra-thread count.
+//!
+//! This is the differential-testing primitive: the fuzzer and the rewrite
+//! validator both run the *same* [`Program`] + leaf tensors through
+//! [`run`] with different `(QPolicy, threads)` pairs and demand bitwise
+//! identical values, gradients and loss — the repo's determinism contract
+//! made mechanically checkable.
+
+use std::sync::Arc;
+
+use super::ir::{OpIr, Program};
+use crate::qsim::{Pool, QPolicy, Tape, Tensor, Var};
+
+/// Everything observable from one replay.
+#[derive(Debug, Clone)]
+pub struct Replay {
+    /// Scalar loss (the root node, mean-capped if the program's last node
+    /// is not already scalar).
+    pub loss: f32,
+    /// Forward value of every program node, by node index.
+    pub values: Vec<Tensor>,
+    /// Gradient of every program node after backward (`None` where the
+    /// tape accumulated nothing, e.g. no-grad input leaves).
+    pub grads: Vec<Option<Tensor>>,
+}
+
+/// Replay `prog` with `leaves` feeding its leaf nodes in order.
+///
+/// A non-scalar final node is capped with `mean_all` so backward always
+/// runs; the cap node is not part of the reported `values`/`grads`.
+pub fn run(
+    prog: &Program,
+    leaves: &[Tensor],
+    policy: QPolicy,
+    threads: usize,
+) -> Result<Replay, String> {
+    let pool = if threads <= 1 { Pool::single() } else { Arc::new(Pool::new(threads)) };
+    let mut t = Tape::with_pool(policy, pool);
+    let mut vars: Vec<Var> = Vec::with_capacity(prog.nodes.len());
+    let mut next_leaf = 0usize;
+    for (i, n) in prog.nodes.iter().enumerate() {
+        let at = |d: &usize| vars[*d];
+        let v = match &n.op {
+            OpIr::Leaf => {
+                let Some(src) = leaves.get(next_leaf) else {
+                    return Err(format!(
+                        "program needs more leaves than the {} supplied",
+                        leaves.len()
+                    ));
+                };
+                next_leaf += 1;
+                if src.rows != n.rows || src.cols != n.cols {
+                    return Err(format!(
+                        "leaf %{i} expects {}x{}, got {}x{}",
+                        n.rows, n.cols, src.rows, src.cols
+                    ));
+                }
+                if n.requires_grad {
+                    t.param(src.clone())
+                } else {
+                    t.input(src.clone())
+                }
+            }
+            OpIr::MatMul(a, b) => t.matmul(at(a), at(b)),
+            OpIr::Add(a, b) => t.add(at(a), at(b)),
+            OpIr::Sub(a, b) => t.sub(at(a), at(b)),
+            OpIr::Mul(a, b) => t.mul(at(a), at(b)),
+            OpIr::Relu(a) => t.relu(at(a)),
+            OpIr::Sigmoid(a) => t.sigmoid(at(a)),
+            OpIr::Tanh(a) => t.tanh(at(a)),
+            OpIr::GatherRows { x, idx } => t.gather_rows(at(x), idx.clone()),
+            OpIr::MeanAll(a) => t.mean_all(at(a)),
+            OpIr::MseLoss { .. } => {
+                return Err(format!(
+                    "node %{i}: mse_loss is recorded fused over a diff node and \
+                     cannot be replayed standalone"
+                ));
+            }
+            OpIr::BceLoss { logits, labels } => {
+                let ln = &prog.nodes[*logits];
+                let lt = Tensor::from_vec(ln.rows, ln.cols, labels.clone());
+                t.bce_loss_from(at(logits), &lt)
+            }
+            OpIr::AddRow(a, b) => t.add_row(at(a), at(b)),
+            OpIr::Affine { x, w, b, relu } => t.affine(at(x), at(w), at(b), *relu),
+            OpIr::ConcatCols(parts) => {
+                let vs: Vec<Var> = parts.iter().map(at).collect();
+                t.concat_cols(vs)
+            }
+            OpIr::Scale(a, c) => t.scale(at(a), *c),
+            OpIr::MatMulNT(a, b) => t.matmul_nt(at(a), at(b)),
+            OpIr::LayerNorm { x, eps } => t.layernorm(at(x), *eps),
+            OpIr::CausalAttn { q, k, v, seqs } => {
+                t.causal_attention(at(q), at(k), at(v), *seqs)
+            }
+            OpIr::SoftmaxXent { logits, targets } => {
+                t.softmax_xent(at(logits), targets.clone())
+            }
+        };
+        vars.push(v);
+    }
+    if next_leaf != leaves.len() {
+        return Err(format!(
+            "{} leaf tensors supplied but the program only has {next_leaf} leaf nodes",
+            leaves.len()
+        ));
+    }
+    let Some(&last) = vars.last() else {
+        return Err("empty program".into());
+    };
+    let scalar = {
+        let v = t.value(last);
+        v.rows == 1 && v.cols == 1
+    };
+    let root = if scalar { last } else { t.mean_all(last) };
+    let loss = t.value(root).item();
+    let values: Vec<Tensor> = vars.iter().map(|&v| t.value(v).clone()).collect();
+    t.backward(root);
+    let grads: Vec<Option<Tensor>> = vars.iter().map(|&v| t.grad(v).cloned()).collect();
+    Ok(Replay { loss, values, grads })
+}
+
+/// Bitwise tensor equality (NaN-stable: compares the f32 payload bits).
+pub fn bits_equal(a: &Tensor, b: &Tensor) -> bool {
+    a.rows == b.rows
+        && a.cols == b.cols
+        && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// First divergence between two replays of the same program, or `None`.
+pub fn diff_replays(a: &Replay, b: &Replay) -> Option<String> {
+    if a.loss.to_bits() != b.loss.to_bits() {
+        return Some(format!("loss differs: {:e} vs {:e}", a.loss, b.loss));
+    }
+    for (i, (x, y)) in a.values.iter().zip(&b.values).enumerate() {
+        if !bits_equal(x, y) {
+            let e = first_bit_diff(x, y);
+            return Some(format!(
+                "forward value of %{i} differs (first at element {e}: {:e} vs {:e})",
+                x.data[e], y.data[e]
+            ));
+        }
+    }
+    for (i, (x, y)) in a.grads.iter().zip(&b.grads).enumerate() {
+        match (x, y) {
+            (None, None) => {}
+            (Some(x), Some(y)) if bits_equal(x, y) => {}
+            (Some(x), Some(y)) => {
+                let e = first_bit_diff(x, y);
+                return Some(format!(
+                    "gradient of %{i} differs (first at element {e}: {:e} vs {:e})",
+                    x.data[e], y.data[e]
+                ));
+            }
+            _ => return Some(format!("gradient of %{i} present in one replay only")),
+        }
+    }
+    None
+}
+
+fn first_bit_diff(a: &Tensor, b: &Tensor) -> usize {
+    a.data
+        .iter()
+        .zip(&b.data)
+        .position(|(x, y)| x.to_bits() != y.to_bits())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ir::NodeIr;
+    use super::*;
+    use crate::precision::BF16;
+    use crate::qsim::Backend;
+
+    fn leaf(rows: usize, cols: usize, rg: bool) -> NodeIr {
+        NodeIr { op: OpIr::Leaf, rows, cols, requires_grad: rg }
+    }
+
+    fn node(op: OpIr, rows: usize, cols: usize) -> NodeIr {
+        NodeIr { op, rows, cols, requires_grad: true }
+    }
+
+    fn tiny_program() -> (Program, Vec<Tensor>) {
+        let prog = Program {
+            nodes: vec![
+                leaf(2, 3, false),
+                leaf(3, 2, true),
+                leaf(1, 2, true),
+                node(OpIr::MatMul(0, 1), 2, 2),
+                node(OpIr::AddRow(3, 2), 2, 2),
+                node(OpIr::Relu(4), 2, 2),
+                node(OpIr::SoftmaxXent { logits: 5, targets: vec![0, 1] }, 1, 1),
+            ],
+        };
+        let leaves = vec![
+            Tensor::from_vec(2, 3, vec![0.4, -1.2, 0.7, 1.5, 0.2, -0.3]),
+            Tensor::from_vec(3, 2, vec![0.3, -0.7, 1.2, 0.5, -0.2, 0.9]),
+            Tensor::from_vec(1, 2, vec![0.1, -0.1]),
+        ];
+        (prog, leaves)
+    }
+
+    #[test]
+    fn replay_matches_direct_tape_build_bitwise() {
+        let (prog, leaves) = tiny_program();
+        let rep = run(&prog, &leaves, QPolicy::new(BF16), 1).unwrap();
+
+        let mut t = Tape::new(QPolicy::new(BF16));
+        let x = t.input(leaves[0].clone());
+        let w = t.param(leaves[1].clone());
+        let b = t.param(leaves[2].clone());
+        let mm = t.matmul(x, w);
+        let ar = t.add_row(mm, b);
+        let h = t.relu(ar);
+        let l = t.softmax_xent(h, vec![0, 1]);
+        t.backward(l);
+
+        assert_eq!(rep.loss.to_bits(), t.value(l).item().to_bits());
+        assert!(bits_equal(&rep.values[5], t.value(h)));
+        assert!(bits_equal(rep.grads[1].as_ref().unwrap(), t.grad(w).unwrap()));
+        assert!(rep.grads[0].is_none(), "input leaf must not accumulate a gradient");
+    }
+
+    #[test]
+    fn non_scalar_tail_is_mean_capped() {
+        let prog = Program {
+            nodes: vec![leaf(2, 2, true), node(OpIr::Relu(0), 2, 2)],
+        };
+        let leaves = vec![Tensor::from_vec(2, 2, vec![1.0, -2.0, 3.0, -4.0])];
+        let rep = run(&prog, &leaves, QPolicy::exact(), 1).unwrap();
+        assert_eq!(rep.loss, 1.0); // mean(relu([1,-2,3,-4])) = (1+0+3+0)/4
+        assert!(rep.grads[0].is_some());
+    }
+
+    #[test]
+    fn backend_parity_on_the_tiny_program() {
+        let (prog, leaves) = tiny_program();
+        let fast = run(&prog, &leaves, QPolicy::with_backend(BF16, Backend::Fast), 1).unwrap();
+        let refr =
+            run(&prog, &leaves, QPolicy::with_backend(BF16, Backend::Reference), 1).unwrap();
+        let fast4 = run(&prog, &leaves, QPolicy::with_backend(BF16, Backend::Fast), 4).unwrap();
+        assert!(diff_replays(&fast, &refr).is_none());
+        assert!(diff_replays(&fast, &fast4).is_none());
+    }
+
+    #[test]
+    fn leaf_count_mismatch_is_an_error() {
+        let (prog, mut leaves) = tiny_program();
+        leaves.pop();
+        assert!(run(&prog, &leaves, QPolicy::exact(), 1).is_err());
+    }
+}

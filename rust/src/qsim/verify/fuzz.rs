@@ -1,0 +1,334 @@
+//! Differential fuzzer over generated tape programs.
+//!
+//! For every generated case ([`super::gen`]) the fuzzer demands, under
+//! every policy-mode compute format (plus the fp16 / e8m5 stress
+//! formats):
+//!
+//! 1. **Backend parity** — `Backend::Fast` at 1 thread is the baseline;
+//!    `Fast` at 4 threads, `Reference` at 1 and 4 threads must match it
+//!    bit-for-bit on every node value, every gradient, and the loss.
+//! 2. **Gradient truth** — at fp32, analytic gradients must agree with
+//!    dual-step central finite differences (`h = 1e-3` and `5e-4`): a
+//!    point only *fails* when the two FD estimates agree with each other
+//!    but not with the tape (points straddling a relu kink make the two
+//!    estimates disagree and are skipped, not failed).
+//! 3. **Rewrite admission** — every fusable chain the rewriter matches is
+//!    applied and must pass [`super::rewrite::validate`]'s bit-identity
+//!    sweep.
+//!
+//! Failures minimize to the shortest failing program prefix and carry a
+//! one-line `FUZZ-REPRO seed=S case=I` stamp that replays exactly.
+
+use super::exec;
+use super::gen::{self, Case};
+use super::ir::OpIr;
+use super::rewrite;
+use crate::precision::{Format, Mode, BF16, E8M5, FP16, FP32};
+use crate::qsim::{Backend, QPolicy};
+
+/// Formats the sweep covers: every `Mode::ALL` compute format over the
+/// paper's bf16 default, plus the dynamic-range stress formats.
+pub fn sweep_formats() -> Vec<Format> {
+    let mut fmts: Vec<Format> = Vec::new();
+    for m in Mode::ALL {
+        let f = m.compute_fmt(BF16);
+        if !fmts.contains(&f) {
+            fmts.push(f);
+        }
+    }
+    for f in [FP16, E8M5] {
+        if !fmts.contains(&f) {
+            fmts.push(f);
+        }
+    }
+    fmts
+}
+
+/// One fuzzer failure, minimized.
+#[derive(Debug, Clone)]
+pub struct FuzzFailure {
+    pub seed: u64,
+    pub case: u64,
+    /// What diverged on the full program.
+    pub check: String,
+    /// Shortest failing prefix: its listing and its (possibly different)
+    /// first failing check.
+    pub minimized_program: String,
+    pub minimized_check: String,
+    pub minimized_nodes: usize,
+}
+
+impl FuzzFailure {
+    /// The one-line stamp that reproduces this failure.
+    pub fn repro_line(&self) -> String {
+        format!("FUZZ-REPRO seed={} case={}", self.seed, self.case)
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{}\nfull-program check failed: {}\nminimized to {} nodes \
+             (shortest failing prefix):\n{}minimized check: {}",
+            self.repro_line(),
+            self.check,
+            self.minimized_nodes,
+            self.minimized_program,
+            self.minimized_check
+        )
+    }
+}
+
+/// Aggregate result of a fuzz run.
+#[derive(Debug, Clone, Default)]
+pub struct FuzzOutcome {
+    pub seed: u64,
+    pub cases_run: u64,
+    /// Individual (format × backend × threads) parity cells compared,
+    /// plus FD points and rewrite-admission cells.
+    pub checks_run: u64,
+    pub rewrites_validated: u64,
+    pub failure: Option<FuzzFailure>,
+}
+
+impl FuzzOutcome {
+    pub fn passed(&self) -> bool {
+        self.failure.is_none()
+    }
+}
+
+/// Fuzz `budget` cases from stream `seed`, stopping at the first failure.
+pub fn run(seed: u64, budget: u64) -> FuzzOutcome {
+    let mut out = FuzzOutcome { seed, ..FuzzOutcome::default() };
+    for i in 0..budget {
+        let case = gen::gen_case(seed, i);
+        match check_case(&case) {
+            Ok(stats) => {
+                out.cases_run += 1;
+                out.checks_run += stats.checks;
+                out.rewrites_validated += stats.rewrites;
+            }
+            Err(check) => {
+                out.failure = Some(minimize(&case, check));
+                return out;
+            }
+        }
+    }
+    out
+}
+
+/// Re-check a single case by its repro coordinates.
+pub fn replay_one(seed: u64, case: u64) -> Result<CaseStats, String> {
+    check_case(&gen::gen_case(seed, case))
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CaseStats {
+    pub checks: u64,
+    pub rewrites: u64,
+}
+
+/// All checks for one case; `Err` carries the first divergence.
+pub fn check_case(case: &Case) -> Result<CaseStats, String> {
+    let prog = &case.program;
+    let leaves = &case.leaves;
+    let mut stats = CaseStats::default();
+
+    for fmt in sweep_formats() {
+        let base = exec::run(prog, leaves, QPolicy::with_backend(fmt, Backend::Fast), 1)
+            .map_err(|e| format!("replay failed [{} fast t1]: {e}", fmt.name))?;
+        for (backend, threads) in
+            [(Backend::Fast, 4), (Backend::Reference, 1), (Backend::Reference, 4)]
+        {
+            let cell = format!("{} {} t{threads}", fmt.name, backend.name());
+            let alt = exec::run(prog, leaves, QPolicy::with_backend(fmt, backend), threads)
+                .map_err(|e| format!("replay failed [{cell}]: {e}"))?;
+            if let Some(d) = exec::diff_replays(&base, &alt) {
+                return Err(format!("backend divergence [{cell} vs {} fast t1]: {d}", fmt.name));
+            }
+            stats.checks += 1;
+        }
+    }
+
+    stats.checks += fd_check(case)?;
+
+    for cand in rewrite::find(prog) {
+        let rw = rewrite::apply(prog, &cand);
+        let cells = rewrite::validate(prog, &rw, leaves)
+            .map_err(|e| format!("rewrite {} rejected: {e}", cand.describe()))?;
+        stats.checks += cells;
+        stats.rewrites += 1;
+    }
+
+    Ok(stats)
+}
+
+/// Dual-step finite-difference gradient check at exact fp32.
+fn fd_check(case: &Case) -> Result<u64, String> {
+    let prog = &case.program;
+    let base = exec::run(prog, &case.leaves, QPolicy::exact(), 1)
+        .map_err(|e| format!("fd baseline replay failed: {e}"))?;
+    if !base.loss.is_finite() {
+        return Ok(0); // degenerate sample; parity checks above still ran
+    }
+    let mut checks = 0u64;
+    for (ord, ni) in prog.leaf_nodes().into_iter().enumerate() {
+        if !prog.nodes[ni].requires_grad {
+            continue;
+        }
+        let Some(g) = &base.grads[ni] else { continue }; // dead parameter
+        for e in 0..g.data.len() {
+            let an = g.data[e] as f64;
+            let (Some(fd1), Some(fd2)) = (
+                central_diff(case, ord, e, 1e-3)?,
+                central_diff(case, ord, e, 5e-4)?,
+            ) else {
+                continue;
+            };
+            // Two consistent FD estimates that both disagree with the
+            // analytic gradient indict the tape; inconsistent estimates
+            // mean the sample straddles a kink — skip, don't fail.
+            if (fd1 - fd2).abs() > 0.02 * (1.0 + fd1.abs()) {
+                continue;
+            }
+            if (an - fd1).abs() > 0.1 * (1.0 + fd1.abs()) {
+                return Err(format!(
+                    "gradient mismatch at param %{ni} element {e}: analytic \
+                     {an:.6e} vs finite-difference {fd1:.6e} (h=1e-3, \
+                     corroborated at h=5e-4 by {fd2:.6e})"
+                ));
+            }
+            checks += 1;
+        }
+    }
+    Ok(checks)
+}
+
+/// Central difference of the loss wrt leaf `ord`, element `e`.  `None`
+/// when the perturbed losses go non-finite or the step quantizes away.
+fn central_diff(
+    case: &Case,
+    ord: usize,
+    e: usize,
+    h: f64,
+) -> Result<Option<f64>, String> {
+    let x0 = case.leaves[ord].data[e] as f64;
+    let hh = h * x0.abs().max(1.0);
+    let mut up = case.leaves.clone();
+    up[ord].data[e] = (x0 + hh) as f32;
+    let mut dn = case.leaves.clone();
+    dn[ord].data[e] = (x0 - hh) as f32;
+    let eff = up[ord].data[e] as f64 - dn[ord].data[e] as f64;
+    if eff == 0.0 {
+        return Ok(None);
+    }
+    let lu = exec::run(&case.program, &up, QPolicy::exact(), 1)
+        .map_err(|e| format!("fd replay failed: {e}"))?
+        .loss as f64;
+    let ld = exec::run(&case.program, &dn, QPolicy::exact(), 1)
+        .map_err(|e| format!("fd replay failed: {e}"))?
+        .loss as f64;
+    if !lu.is_finite() || !ld.is_finite() {
+        return Ok(None);
+    }
+    Ok(Some((lu - ld) / eff))
+}
+
+/// Shrink a failing case to its shortest failing program prefix (every
+/// prefix of an append-only DAG is itself a closed program; a non-scalar
+/// prefix tail is mean-capped by the replayer).
+fn minimize(case: &Case, full_check: String) -> FuzzFailure {
+    for p in 1..=case.program.nodes.len() {
+        let prog = super::ir::Program { nodes: case.program.nodes[..p].to_vec() };
+        let n_leaves =
+            prog.nodes.iter().filter(|n| matches!(n.op, OpIr::Leaf)).count();
+        let sub = Case {
+            seed: case.seed,
+            index: case.index,
+            program: prog,
+            leaves: case.leaves[..n_leaves].to_vec(),
+        };
+        if let Err(check) = check_case(&sub) {
+            return FuzzFailure {
+                seed: case.seed,
+                case: case.index,
+                check: full_check,
+                minimized_program: sub.program.to_string(),
+                minimized_check: check,
+                minimized_nodes: sub.program.nodes.len(),
+            };
+        }
+    }
+    // The full program failed but no prefix does (should not happen since
+    // the last prefix IS the full program) — report it unminimized.
+    FuzzFailure {
+        seed: case.seed,
+        case: case.index,
+        check: full_check.clone(),
+        minimized_program: case.program.to_string(),
+        minimized_check: full_check,
+        minimized_nodes: case.program.nodes.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_fp32_and_bf16_and_stress_formats() {
+        let fmts = sweep_formats();
+        assert!(fmts.contains(&FP32));
+        assert!(fmts.contains(&BF16));
+        assert!(fmts.contains(&FP16));
+        assert!(fmts.contains(&E8M5));
+    }
+
+    #[test]
+    fn smoke_budget_passes_clean() {
+        let out = run(1, 25);
+        assert!(
+            out.passed(),
+            "fuzz failure:\n{}",
+            out.failure.as_ref().unwrap().render()
+        );
+        assert_eq!(out.cases_run, 25);
+        assert!(out.checks_run > 0);
+    }
+
+    #[test]
+    fn replay_one_matches_run() {
+        let stats = replay_one(1, 3).expect("case (1,3) must pass");
+        assert!(stats.checks > 0);
+    }
+
+    #[test]
+    fn minimizer_finds_shortest_failing_prefix() {
+        // A case that fails in check_case by construction: a program whose
+        // replay errors (mse_loss is not replayable) after a valid prelude.
+        use super::super::ir::{NodeIr, Program};
+        let case = Case {
+            seed: 0,
+            index: 0,
+            program: Program {
+                nodes: vec![
+                    NodeIr { op: OpIr::Leaf, rows: 2, cols: 2, requires_grad: true },
+                    NodeIr { op: OpIr::Relu(0), rows: 2, cols: 2, requires_grad: true },
+                    NodeIr {
+                        op: OpIr::MseLoss { diff: 1 },
+                        rows: 1,
+                        cols: 1,
+                        requires_grad: true,
+                    },
+                ],
+            },
+            leaves: vec![crate::qsim::Tensor::from_vec(
+                2,
+                2,
+                vec![0.5, -0.5, 1.5, -1.5],
+            )],
+        };
+        let check = check_case(&case).unwrap_err();
+        let fail = minimize(&case, check);
+        assert_eq!(fail.minimized_nodes, 3, "{}", fail.render());
+        assert!(fail.repro_line().contains("seed=0 case=0"));
+    }
+}

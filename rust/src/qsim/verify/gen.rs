@@ -1,0 +1,228 @@
+//! Enumerative, seeded generator of small tape programs.
+//!
+//! `gen_case(seed, index)` is a pure function: the same `(seed, index)`
+//! pair always yields the same program and the same leaf cvecs, so any
+//! fuzzer failure is reproducible from its one-line `FUZZ-REPRO` stamp.
+//! Programs are built over the public tape vocabulary (elementwise
+//! unary/binary, matmul / matmul_nt, add_row, gather_rows, layernorm,
+//! concat_cols, causal_attention) and closed with one of the fused loss
+//! heads (softmax_xent, bce_loss) or a mean cap; the generator is biased
+//! toward `matmul + add_row (+ relu)` chains so the rewrite pass always
+//! has candidates to validate.
+
+use super::ir::{NodeIr, OpIr, Program};
+use crate::qsim::Tensor;
+use crate::util::rng::Rng;
+
+/// One generated fuzz case: a lint-clean program plus its leaf tensors.
+#[derive(Debug, Clone)]
+pub struct Case {
+    pub seed: u64,
+    pub index: u64,
+    pub program: Program,
+    pub leaves: Vec<Tensor>,
+}
+
+struct Builder {
+    nodes: Vec<NodeIr>,
+    leaves: Vec<Tensor>,
+    rng: Rng,
+}
+
+impl Builder {
+    fn shape(&self, i: usize) -> (usize, usize) {
+        (self.nodes[i].rows, self.nodes[i].cols)
+    }
+
+    /// Interior node: the tape marks every non-leaf differentiable.
+    fn push(&mut self, op: OpIr, rows: usize, cols: usize) -> usize {
+        self.nodes.push(NodeIr { op, rows, cols, requires_grad: true });
+        self.nodes.len() - 1
+    }
+
+    /// New leaf with seeded normal data (occasionally scaled up to poke
+    /// the narrow formats' rounding thresholds).
+    fn leaf(&mut self, rows: usize, cols: usize, param: bool) -> usize {
+        let scale = if self.rng.below(8) == 0 { 4.0 } else { 1.0 };
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(self.rng.normal() * scale);
+        }
+        self.leaves.push(Tensor::from_vec(rows, cols, data));
+        self.nodes.push(NodeIr { op: OpIr::Leaf, rows, cols, requires_grad: param });
+        self.nodes.len() - 1
+    }
+
+    /// Leaf that is a parameter ~80% of the time.
+    fn maybe_param_leaf(&mut self, rows: usize, cols: usize) -> usize {
+        let param = self.rng.below(5) != 0;
+        self.leaf(rows, cols, param)
+    }
+
+    fn dim(&mut self) -> usize {
+        1 + self.rng.below(4)
+    }
+}
+
+/// Deterministically generate fuzz case `index` of stream `seed`.
+pub fn gen_case(seed: u64, index: u64) -> Case {
+    let mut b = Builder { nodes: Vec::new(), leaves: Vec::new(), rng: Rng::new(seed, index) };
+
+    // Seed node: always a trainable parameter so gradients flow somewhere.
+    let (r0, c0) = (b.dim(), b.dim());
+    let first = b.leaf(r0, c0, true);
+    let mut avail = vec![first];
+
+    let n_ops = 2 + b.rng.below(5);
+    for _ in 0..n_ops {
+        let pick = avail[b.rng.below(avail.len())];
+        let (r, c) = b.shape(pick);
+        let new = match b.rng.below(10) {
+            0 => {
+                let op = match b.rng.below(3) {
+                    0 => OpIr::Relu(pick),
+                    1 => OpIr::Sigmoid(pick),
+                    _ => OpIr::Tanh(pick),
+                };
+                b.push(op, r, c)
+            }
+            1 => {
+                let factor = b.rng.uniform_in(-2.0, 2.0);
+                b.push(OpIr::Scale(pick, factor), r, c)
+            }
+            2 => {
+                // Binary with a same-shaped partner: reuse an existing node
+                // when one fits (exercises shared operands), else a leaf.
+                let partner = avail
+                    .iter()
+                    .copied()
+                    .filter(|&o| o != pick && b.shape(o) == (r, c))
+                    .last();
+                let other = match partner {
+                    Some(o) if b.rng.below(2) == 0 => o,
+                    _ => b.maybe_param_leaf(r, c),
+                };
+                let op = match b.rng.below(3) {
+                    0 => OpIr::Add(pick, other),
+                    1 => OpIr::Sub(pick, other),
+                    _ => OpIr::Mul(pick, other),
+                };
+                b.push(op, r, c)
+            }
+            3 => {
+                let n2 = b.dim();
+                let w = b.maybe_param_leaf(c, n2);
+                b.push(OpIr::MatMul(pick, w), r, n2)
+            }
+            4 => {
+                let r2 = b.dim();
+                let w = b.maybe_param_leaf(r2, c);
+                b.push(OpIr::MatMulNT(pick, w), r, r2)
+            }
+            5 => {
+                let bias = b.maybe_param_leaf(1, c);
+                b.push(OpIr::AddRow(pick, bias), r, c)
+            }
+            6 => {
+                let n_idx = 1 + b.rng.below(4);
+                let idx: Vec<usize> = (0..n_idx).map(|_| b.rng.below(r)).collect();
+                b.push(OpIr::GatherRows { x: pick, idx }, n_idx, c)
+            }
+            7 => b.push(OpIr::LayerNorm { x: pick, eps: 1e-5 }, r, c),
+            8 => {
+                let c2 = b.dim();
+                let other = b.maybe_param_leaf(r, c2);
+                b.push(OpIr::ConcatCols(vec![pick, other]), r, c + c2)
+            }
+            _ => {
+                // Biased fusable chain: matmul + add_row (+ relu), the
+                // rewrite pass's target pattern.
+                let n2 = b.dim();
+                let w = b.leaf(c, n2, true);
+                let bias = b.leaf(1, n2, true);
+                let mm = b.push(OpIr::MatMul(pick, w), r, n2);
+                let ar = b.push(OpIr::AddRow(mm, bias), r, n2);
+                if b.rng.below(2) == 0 {
+                    b.push(OpIr::Relu(ar), r, n2)
+                } else {
+                    ar
+                }
+            }
+        };
+        avail.push(new);
+    }
+
+    // Attention gets its own arm (needs three same-shaped operands): bolt
+    // it onto the tail occasionally.
+    if b.rng.below(4) == 0 {
+        let seqs = 1 + b.rng.below(2);
+        let tokens = 1 + b.rng.below(3);
+        let d = 1 + b.rng.below(3);
+        let q = b.leaf(seqs * tokens, d, true);
+        let k = b.leaf(seqs * tokens, d, true);
+        let v = b.leaf(seqs * tokens, d, true);
+        avail.push(b.push(OpIr::CausalAttn { q, k, v, seqs }, seqs * tokens, d));
+    }
+
+    // Loss head over the last computed node (keeps the tail live).
+    let tail = *avail.last().unwrap();
+    let (tr, tc) = b.shape(tail);
+    match b.rng.below(3) {
+        0 if tc >= 2 => {
+            let targets: Vec<usize> = (0..tr).map(|_| b.rng.below(tc)).collect();
+            b.push(OpIr::SoftmaxXent { logits: tail, targets }, 1, 1);
+        }
+        1 => {
+            let labels: Vec<f32> =
+                (0..tr * tc).map(|_| b.rng.below(2) as f32).collect();
+            b.push(OpIr::BceLoss { logits: tail, labels }, 1, 1);
+        }
+        _ => {
+            b.push(OpIr::MeanAll(tail), 1, 1);
+        }
+    }
+
+    Case { seed, index, program: Program { nodes: b.nodes }, leaves: b.leaves }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lint::lint;
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = gen_case(7, 13);
+        let b = gen_case(7, 13);
+        assert_eq!(a.program, b.program);
+        assert_eq!(a.leaves.len(), b.leaves.len());
+        for (x, y) in a.leaves.iter().zip(&b.leaves) {
+            assert!(super::super::exec::bits_equal(x, y));
+        }
+        // A different index must change the stream.
+        let c = gen_case(7, 14);
+        assert!(a.program != c.program || a.leaves.len() != c.leaves.len());
+    }
+
+    #[test]
+    fn generated_programs_lint_clean_and_end_scalar() {
+        for i in 0..200 {
+            let case = gen_case(3, i);
+            let root = case.program.nodes.len() - 1;
+            let n = &case.program.nodes[root];
+            assert_eq!((n.rows, n.cols), (1, 1), "case {i} root is not scalar");
+            let errs = lint(&case.program, root).errors();
+            assert!(
+                errs.is_empty(),
+                "case {i} fails lint:\n{}\n{}",
+                case.program,
+                errs.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+            );
+            assert_eq!(
+                case.leaves.len(),
+                case.program.leaf_nodes().len(),
+                "case {i} leaf tensors out of sync with leaf nodes"
+            );
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Program IR over recorded tape graphs.
+//!
+//! A [`Program`] is a flat, append-only list of [`NodeIr`] nodes mirroring
+//! the tape's `Op` list one-to-one: node `i` of the IR is tape node `i`,
+//! operands are plain indices (always `< i`), and constant payloads
+//! (gather indices, xent targets, BCE labels, the scale factor) are baked
+//! into the op so a program is self-contained — it can be linted, printed,
+//! replayed on a fresh tape ([`super::exec`]), and rewritten
+//! ([`super::rewrite`]) without touching the tape that produced it.
+
+use std::fmt;
+
+/// One tape operation, operands by node index.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpIr {
+    /// Leaf (input or parameter — distinguished by `NodeIr::requires_grad`).
+    Leaf,
+    MatMul(usize, usize),
+    Add(usize, usize),
+    Sub(usize, usize),
+    Mul(usize, usize),
+    Relu(usize),
+    Sigmoid(usize),
+    Tanh(usize),
+    /// Row gather (`Op::Embed` exports as this): out[r] = x[idx[r]].
+    GatherRows { x: usize, idx: Vec<usize> },
+    MeanAll(usize),
+    /// Fused `0.5 * mean(d^2)` over a difference node (not replayable
+    /// standalone — the tape only records it via `mse_loss`).
+    MseLoss { diff: usize },
+    BceLoss { logits: usize, labels: Vec<f32> },
+    AddRow(usize, usize),
+    /// Fused `x @ w + b` (+ optional relu) — the validated rewrite target.
+    Affine { x: usize, w: usize, b: usize, relu: bool },
+    ConcatCols(Vec<usize>),
+    Scale(usize, f32),
+    MatMulNT(usize, usize),
+    LayerNorm { x: usize, eps: f32 },
+    CausalAttn { q: usize, k: usize, v: usize, seqs: usize },
+    SoftmaxXent { logits: usize, targets: Vec<usize> },
+}
+
+impl OpIr {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpIr::Leaf => "leaf",
+            OpIr::MatMul(..) => "matmul",
+            OpIr::Add(..) => "add",
+            OpIr::Sub(..) => "sub",
+            OpIr::Mul(..) => "mul",
+            OpIr::Relu(..) => "relu",
+            OpIr::Sigmoid(..) => "sigmoid",
+            OpIr::Tanh(..) => "tanh",
+            OpIr::GatherRows { .. } => "gather_rows",
+            OpIr::MeanAll(..) => "mean_all",
+            OpIr::MseLoss { .. } => "mse_loss",
+            OpIr::BceLoss { .. } => "bce_loss",
+            OpIr::AddRow(..) => "add_row",
+            OpIr::Affine { .. } => "affine",
+            OpIr::ConcatCols(..) => "concat_cols",
+            OpIr::Scale(..) => "scale",
+            OpIr::MatMulNT(..) => "matmul_nt",
+            OpIr::LayerNorm { .. } => "layernorm",
+            OpIr::CausalAttn { .. } => "causal_attn",
+            OpIr::SoftmaxXent { .. } => "softmax_xent",
+        }
+    }
+
+    /// Operand node indices, in the order backward visits them.
+    pub fn operands(&self) -> Vec<usize> {
+        match self {
+            OpIr::Leaf => vec![],
+            OpIr::MatMul(a, b)
+            | OpIr::Add(a, b)
+            | OpIr::Sub(a, b)
+            | OpIr::Mul(a, b)
+            | OpIr::AddRow(a, b)
+            | OpIr::MatMulNT(a, b) => vec![*a, *b],
+            OpIr::Relu(a)
+            | OpIr::Sigmoid(a)
+            | OpIr::Tanh(a)
+            | OpIr::MeanAll(a)
+            | OpIr::Scale(a, _) => vec![*a],
+            OpIr::GatherRows { x, .. } => vec![*x],
+            OpIr::MseLoss { diff } => vec![*diff],
+            OpIr::BceLoss { logits, .. } => vec![*logits],
+            OpIr::Affine { x, w, b, .. } => vec![*x, *w, *b],
+            OpIr::ConcatCols(parts) => parts.clone(),
+            OpIr::LayerNorm { x, .. } => vec![*x],
+            OpIr::CausalAttn { q, k, v, .. } => vec![*q, *k, *v],
+            OpIr::SoftmaxXent { logits, .. } => vec![*logits],
+        }
+    }
+}
+
+/// One IR node: the op plus the shape and grad flag the tape recorded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeIr {
+    pub op: OpIr,
+    pub rows: usize,
+    pub cols: usize,
+    pub requires_grad: bool,
+}
+
+/// A whole tape program (see module docs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Program {
+    pub nodes: Vec<NodeIr>,
+}
+
+impl Program {
+    /// How many nodes reference each node as an operand.
+    pub fn use_counts(&self) -> Vec<usize> {
+        let mut uses = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            for d in n.op.operands() {
+                if d < uses.len() {
+                    uses[d] += 1;
+                }
+            }
+        }
+        uses
+    }
+
+    /// Nodes reachable from `root` by following operands.
+    pub fn reachable(&self, root: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.nodes.len()];
+        if root >= self.nodes.len() {
+            return seen;
+        }
+        let mut stack = vec![root];
+        while let Some(i) = stack.pop() {
+            if seen[i] {
+                continue;
+            }
+            seen[i] = true;
+            for d in self.nodes[i].op.operands() {
+                if d < self.nodes.len() && !seen[d] {
+                    stack.push(d);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Node indices of all leaves, in leaf (replay-feed) order.
+    pub fn leaf_nodes(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.op, OpIr::Leaf))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+impl fmt::Display for Program {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, n) in self.nodes.iter().enumerate() {
+            write!(f, "%{i:<3} = {}", n.op.name())?;
+            let ops = n.op.operands();
+            if !ops.is_empty() {
+                write!(f, "(")?;
+                for (k, d) in ops.iter().enumerate() {
+                    if k > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "%{d}")?;
+                }
+                write!(f, ")")?;
+            }
+            match &n.op {
+                OpIr::Scale(_, c) => write!(f, " c={c}")?,
+                OpIr::LayerNorm { eps, .. } => write!(f, " eps={eps}")?,
+                OpIr::CausalAttn { seqs, .. } => write!(f, " seqs={seqs}")?,
+                OpIr::GatherRows { idx, .. } => write!(f, " idx={idx:?}")?,
+                OpIr::SoftmaxXent { targets, .. } => write!(f, " targets={targets:?}")?,
+                OpIr::BceLoss { labels, .. } => write!(f, " labels[{}]", labels.len())?,
+                OpIr::Affine { relu, .. } => write!(f, " relu={relu}")?,
+                _ => {}
+            }
+            write!(f, "  [{}x{}]", n.rows, n.cols)?;
+            if n.requires_grad {
+                write!(f, " grad")?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaf(rows: usize, cols: usize, rg: bool) -> NodeIr {
+        NodeIr { op: OpIr::Leaf, rows, cols, requires_grad: rg }
+    }
+
+    #[test]
+    fn use_counts_and_reachability() {
+        let prog = Program {
+            nodes: vec![
+                leaf(2, 3, false),
+                leaf(3, 2, true),
+                NodeIr { op: OpIr::MatMul(0, 1), rows: 2, cols: 2, requires_grad: true },
+                leaf(2, 2, true), // dead
+                NodeIr { op: OpIr::MeanAll(2), rows: 1, cols: 1, requires_grad: true },
+            ],
+        };
+        assert_eq!(prog.use_counts(), vec![1, 1, 1, 0, 0]);
+        let seen = prog.reachable(4);
+        assert_eq!(seen, vec![true, true, true, false, true]);
+        assert_eq!(prog.leaf_nodes(), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn display_lists_every_node() {
+        let prog = Program {
+            nodes: vec![
+                leaf(1, 2, true),
+                NodeIr { op: OpIr::Relu(0), rows: 1, cols: 2, requires_grad: true },
+            ],
+        };
+        let s = prog.to_string();
+        assert!(s.contains("relu(%0)"), "{s}");
+        assert_eq!(s.lines().count(), 2);
+    }
+}

@@ -1,0 +1,464 @@
+//! Structural linter over tape programs.
+//!
+//! Checks a [`Program`] the way a compiler front-end would: per-op shape
+//! consistency, operand ordering (append-only DAG), `requires_grad`
+//! conventions (non-leaf nodes always carry the flag; gradient flow stops
+//! at no-grad input leaves), scalar-loss root, dead-node / dead-parameter
+//! reachability, and fusable-chain opportunities (as `Info` diagnostics,
+//! actioned by [`super::rewrite`]).  `Tape::backward` runs this in debug
+//! builds on every step via `Tape::debug_validate`, so the checks must
+//! hold for every graph the apps actually record — errors are reserved
+//! for structurally impossible tapes, warnings for legal-but-suspect ones.
+
+use std::fmt;
+
+use super::ir::{OpIr, Program};
+use super::rewrite;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One diagnostic, anchored to a node.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    pub severity: Severity,
+    pub node: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} @%{}: {}", self.severity.label(), self.node, self.message)
+    }
+}
+
+/// All diagnostics from one [`lint`] run.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    pub diags: Vec<Diag>,
+}
+
+impl LintReport {
+    fn push(&mut self, severity: Severity, node: usize, message: String) {
+        self.diags.push(Diag { severity, node, message });
+    }
+
+    /// Error-severity diagnostics (owned — callable on a temporary report).
+    pub fn errors(&self) -> Vec<Diag> {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).cloned().collect()
+    }
+
+    pub fn warnings(&self) -> Vec<Diag> {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).cloned().collect()
+    }
+
+    /// (errors, warnings, infos)
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for d in &self.diags {
+            match d.severity {
+                Severity::Error => c.0 += 1,
+                Severity::Warning => c.1 += 1,
+                Severity::Info => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+}
+
+impl fmt::Display for LintReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.diags.is_empty() {
+            return writeln!(f, "lint clean: no diagnostics");
+        }
+        for d in &self.diags {
+            writeln!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Lint `prog` with `root` as the intended loss node.
+pub fn lint(prog: &Program, root: usize) -> LintReport {
+    let mut rep = LintReport::default();
+    let n = prog.nodes.len();
+
+    if n == 0 {
+        rep.push(Severity::Error, 0, "empty program".into());
+        return rep;
+    }
+
+    // Per-node structural checks.  Operand-order violations make shape
+    // checks meaningless for that node, so they short-circuit it.
+    for i in 0..n {
+        let node = &prog.nodes[i];
+        let mut ordered = true;
+        for d in node.op.operands() {
+            if d >= i {
+                rep.push(
+                    Severity::Error,
+                    i,
+                    format!(
+                        "{} operand %{d} is not defined before this node \
+                         (tape programs are append-only DAGs)",
+                        node.op.name()
+                    ),
+                );
+                ordered = false;
+            }
+        }
+        if !ordered {
+            continue;
+        }
+        if !matches!(node.op, OpIr::Leaf) && !node.requires_grad {
+            rep.push(
+                Severity::Error,
+                i,
+                format!(
+                    "non-leaf {} node marked no-grad: the tape records every \
+                     interior node as differentiable (gradient flow is cut \
+                     only at no-grad input leaves)",
+                    node.op.name()
+                ),
+            );
+        }
+        check_shapes(prog, i, &mut rep);
+    }
+
+    // Root checks.
+    if root >= n {
+        rep.push(Severity::Error, root, format!("root node out of range (program has {n} nodes)"));
+        return rep;
+    }
+    let r = &prog.nodes[root];
+    if r.rows != 1 || r.cols != 1 {
+        rep.push(
+            Severity::Error,
+            root,
+            format!("root must be a scalar loss node, got {}x{} {}", r.rows, r.cols, r.op.name()),
+        );
+    }
+    if !r.requires_grad {
+        rep.push(
+            Severity::Warning,
+            root,
+            "loss does not depend on any trainable parameter (backward is a no-op)".into(),
+        );
+    }
+
+    // Reachability: dead parameters, dead compute, unused inputs.
+    let seen = prog.reachable(root);
+    for i in 0..n {
+        if seen[i] {
+            continue;
+        }
+        let node = &prog.nodes[i];
+        match (&node.op, node.requires_grad) {
+            (OpIr::Leaf, true) => rep.push(
+                Severity::Warning,
+                i,
+                "trainable parameter is unreachable from the loss: no gradient will reach it"
+                    .into(),
+            ),
+            (OpIr::Leaf, false) => {
+                rep.push(Severity::Info, i, "input leaf is never consumed".into())
+            }
+            _ => rep.push(
+                Severity::Warning,
+                i,
+                format!("dead {} node: computed but unreachable from the loss", node.op.name()),
+            ),
+        }
+    }
+
+    // Fusion opportunities (actioned by the rewrite pass, reported here so
+    // `lint-tape` surfaces what the fuzzer-validated rewriter would do).
+    for cand in rewrite::find(prog) {
+        rep.push(Severity::Info, cand.add_row, format!("fusable chain: {}", cand.describe()));
+    }
+
+    rep
+}
+
+/// Shape rules per op.  `i`'s operands are known to be `< i`.
+fn check_shapes(prog: &Program, i: usize, rep: &mut LintReport) {
+    let node = &prog.nodes[i];
+    let shape = |d: usize| (prog.nodes[d].rows, prog.nodes[d].cols);
+    let mut err = |msg: String| rep.push(Severity::Error, i, msg);
+    let out = (node.rows, node.cols);
+    match &node.op {
+        OpIr::Leaf => {}
+        OpIr::MatMul(a, b) => {
+            let ((m, ka), (kb, c)) = (shape(*a), shape(*b));
+            if ka != kb {
+                err(format!("matmul inner dims disagree: %{a} is {m}x{ka}, %{b} is {kb}x{c}"));
+            }
+            if out != (m, c) {
+                err(format!("matmul output should be {m}x{c}, recorded {}x{}", out.0, out.1));
+            }
+        }
+        OpIr::MatMulNT(a, b) => {
+            let ((m, ka), (r, kb)) = (shape(*a), shape(*b));
+            if ka != kb {
+                err(format!("matmul_nt inner dims disagree: %{a} is {m}x{ka}, %{b} is {r}x{kb}"));
+            }
+            if out != (m, r) {
+                err(format!("matmul_nt output should be {m}x{r}, recorded {}x{}", out.0, out.1));
+            }
+        }
+        OpIr::Add(a, b) | OpIr::Sub(a, b) | OpIr::Mul(a, b) => {
+            let (sa, sb) = (shape(*a), shape(*b));
+            if sa != sb {
+                err(format!(
+                    "{} operands disagree: %{a} is {}x{}, %{b} is {}x{}",
+                    node.op.name(),
+                    sa.0,
+                    sa.1,
+                    sb.0,
+                    sb.1
+                ));
+            }
+            if out != sa {
+                err(format!("{} output shape drifts from operands", node.op.name()));
+            }
+        }
+        OpIr::AddRow(a, b) => {
+            let (sa, sb) = (shape(*a), shape(*b));
+            if sb.0 != 1 || sb.1 != sa.1 {
+                err(format!(
+                    "add_row bias %{b} must be 1x{} to broadcast over %{a} ({}x{}), got {}x{}",
+                    sa.1, sa.0, sa.1, sb.0, sb.1
+                ));
+            }
+            if out != sa {
+                err("add_row output shape drifts from input".into());
+            }
+        }
+        OpIr::Affine { x, w, b, .. } => {
+            let ((m, kx), (kw, c), (br, bc)) = (shape(*x), shape(*w), shape(*b));
+            if kx != kw {
+                err(format!("affine inner dims disagree: %{x} is {m}x{kx}, %{w} is {kw}x{c}"));
+            }
+            if br != 1 || bc != c {
+                err(format!("affine bias %{b} must be 1x{c}, got {br}x{bc}"));
+            }
+            if out != (m, c) {
+                err(format!("affine output should be {m}x{c}, recorded {}x{}", out.0, out.1));
+            }
+        }
+        OpIr::Relu(a) | OpIr::Sigmoid(a) | OpIr::Tanh(a) | OpIr::Scale(a, _) => {
+            if out != shape(*a) {
+                err(format!("{} output shape drifts from input %{a}", node.op.name()));
+            }
+        }
+        OpIr::GatherRows { x, idx } => {
+            let (xr, xc) = shape(*x);
+            if let Some(bad) = idx.iter().find(|&&r| r >= xr) {
+                err(format!("gather index {bad} out of range for %{x} with {xr} rows"));
+            }
+            if out != (idx.len(), xc) {
+                err(format!(
+                    "gather_rows output should be {}x{xc}, recorded {}x{}",
+                    idx.len(),
+                    out.0,
+                    out.1
+                ));
+            }
+        }
+        OpIr::ConcatCols(parts) => {
+            if parts.is_empty() {
+                err("concat_cols of zero parts".into());
+                return;
+            }
+            let rows = shape(parts[0]).0;
+            let mut cols = 0;
+            for p in parts {
+                let (pr, pc) = shape(*p);
+                if pr != rows {
+                    err(format!("concat_cols part %{p} has {pr} rows, expected {rows}"));
+                }
+                cols += pc;
+            }
+            if out != (rows, cols) {
+                err(format!(
+                    "concat_cols output should be {rows}x{cols}, recorded {}x{}",
+                    out.0, out.1
+                ));
+            }
+        }
+        OpIr::LayerNorm { x, .. } => {
+            if out != shape(*x) {
+                err(format!("layernorm output shape drifts from input %{x}"));
+            }
+        }
+        OpIr::CausalAttn { q, k, v, seqs } => {
+            let (sq, sk, sv) = (shape(*q), shape(*k), shape(*v));
+            if sk != sq || sv != sq {
+                err(format!(
+                    "causal_attn q/k/v shapes disagree: {}x{} / {}x{} / {}x{}",
+                    sq.0, sq.1, sk.0, sk.1, sv.0, sv.1
+                ));
+            }
+            if *seqs == 0 || sq.0 % seqs != 0 {
+                err(format!("causal_attn rows {} not divisible into {seqs} sequences", sq.0));
+            }
+            if out != sq {
+                err("causal_attn output shape drifts from q".into());
+            }
+        }
+        OpIr::SoftmaxXent { logits, targets } => {
+            let (lr, lc) = shape(*logits);
+            if targets.len() != lr {
+                err(format!("softmax_xent has {} targets for {lr} logit rows", targets.len()));
+            }
+            if let Some(bad) = targets.iter().find(|&&t| t >= lc) {
+                err(format!("softmax_xent target class {bad} out of range for {lc} columns"));
+            }
+            if out != (1, 1) {
+                err("softmax_xent must produce a scalar".into());
+            }
+        }
+        OpIr::MeanAll(a) => {
+            let (ar, ac) = shape(*a);
+            if ar * ac == 0 {
+                rep.push(Severity::Warning, i, format!("mean_all over empty %{a} is NaN"));
+            }
+            if out != (1, 1) {
+                rep.push(Severity::Error, i, "mean_all must produce a scalar".into());
+            }
+        }
+        OpIr::MseLoss { diff } => {
+            let (dr, dc) = shape(*diff);
+            if dr * dc == 0 {
+                rep.push(Severity::Warning, i, format!("mse_loss over empty %{diff} is NaN"));
+            }
+            if out != (1, 1) {
+                rep.push(Severity::Error, i, "mse_loss must produce a scalar".into());
+            }
+        }
+        OpIr::BceLoss { logits, labels } => {
+            let (lr, lc) = shape(*logits);
+            if labels.len() != lr * lc {
+                err(format!(
+                    "bce_loss has {} labels for {lr}x{lc} logits",
+                    labels.len()
+                ));
+            }
+            if out != (1, 1) {
+                rep.push(Severity::Error, i, "bce_loss must produce a scalar".into());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ir::NodeIr;
+    use super::*;
+
+    fn leaf(rows: usize, cols: usize, rg: bool) -> NodeIr {
+        NodeIr { op: OpIr::Leaf, rows, cols, requires_grad: rg }
+    }
+
+    fn node(op: OpIr, rows: usize, cols: usize) -> NodeIr {
+        NodeIr { op, rows, cols, requires_grad: true }
+    }
+
+    #[test]
+    fn clean_program_has_no_errors() {
+        let prog = Program {
+            nodes: vec![
+                leaf(2, 3, false),
+                leaf(3, 4, true),
+                node(OpIr::MatMul(0, 1), 2, 4),
+                node(OpIr::SoftmaxXent { logits: 2, targets: vec![1, 3] }, 1, 1),
+            ],
+        };
+        let rep = lint(&prog, 3);
+        assert!(rep.errors().is_empty(), "{rep}");
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let prog = Program {
+            nodes: vec![
+                leaf(2, 3, true),
+                leaf(4, 2, true), // inner dim 3 != 4
+                node(OpIr::MatMul(0, 1), 2, 2),
+                node(OpIr::MeanAll(2), 1, 1),
+            ],
+        };
+        let errs = lint(&prog, 3).errors();
+        assert!(!errs.is_empty());
+        assert!(errs[0].to_string().contains("inner dims"), "{}", errs[0]);
+    }
+
+    #[test]
+    fn forward_operand_reference_is_an_error() {
+        let prog = Program {
+            nodes: vec![node(OpIr::Relu(1), 2, 2), leaf(2, 2, true)],
+        };
+        let errs = lint(&prog, 1);
+        assert!(errs.errors().iter().any(|d| d.to_string().contains("append-only")));
+    }
+
+    #[test]
+    fn dead_parameter_is_a_warning_not_error() {
+        let prog = Program {
+            nodes: vec![
+                leaf(2, 2, true),
+                leaf(2, 2, true), // dead param
+                node(OpIr::MeanAll(0), 1, 1),
+            ],
+        };
+        let rep = lint(&prog, 2);
+        assert!(rep.errors().is_empty(), "{rep}");
+        assert_eq!(rep.warnings().len(), 1);
+        assert!(rep.warnings()[0].to_string().contains("unreachable"));
+    }
+
+    #[test]
+    fn non_scalar_root_is_an_error() {
+        let prog = Program { nodes: vec![leaf(2, 2, true), node(OpIr::Relu(0), 2, 2)] };
+        let errs = lint(&prog, 1).errors();
+        assert!(errs.iter().any(|d| d.to_string().contains("scalar loss")));
+    }
+
+    #[test]
+    fn fusable_chain_reported_as_info() {
+        let prog = Program {
+            nodes: vec![
+                leaf(2, 3, false),
+                leaf(3, 4, true),
+                leaf(1, 4, true),
+                node(OpIr::MatMul(0, 1), 2, 4),
+                node(OpIr::AddRow(3, 2), 2, 4),
+                node(OpIr::Relu(4), 2, 4),
+                node(OpIr::MeanAll(5), 1, 1),
+            ],
+        };
+        let rep = lint(&prog, 6);
+        assert!(rep.errors().is_empty(), "{rep}");
+        assert!(rep.diags.iter().any(|d| {
+            d.severity == Severity::Info && d.message.contains("fusable")
+        }));
+    }
+}

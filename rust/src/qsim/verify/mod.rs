@@ -1,0 +1,35 @@
+//! `qsim::verify` — static analysis and differential verification of tape
+//! programs.
+//!
+//! The repo's central claims — `Backend::Fast` ≡ `Backend::Reference`,
+//! 1 ≡ N intra-threads, fused kernels ≡ their unfused chains — are exact
+//! bitwise contracts, which makes them *mechanically checkable*.  This
+//! module is the checker, in three parts:
+//!
+//! - [`ir`] + [`lint`]: a flat program IR exported from any recorded tape
+//!   ([`Tape::export_program`](crate::qsim::Tape::export_program)) and a
+//!   structural linter over it (shapes, DAG ordering, grad-flag
+//!   conventions, dead nodes, scalar root).  Debug builds run the linter
+//!   inside every `Tape::backward`; the `repro lint-tape` subcommand
+//!   surfaces it for each app's real training graph.
+//! - [`gen`] + [`exec`] + [`fuzz`]: an enumerative, seeded generator of
+//!   small programs over the tape vocabulary, a replayer that executes a
+//!   program under any `(policy, backend, threads)` cell, and the fuzzer
+//!   that demands bitwise parity across all cells plus dual-step
+//!   finite-difference agreement at fp32.  `repro fuzz-tape --budget N
+//!   --seed S`; every failure minimizes to a prefix and a one-line
+//!   `FUZZ-REPRO` stamp.
+//! - [`rewrite`]: the validated fusion pass (`matmul + add_row (+ relu)`
+//!   → `affine`).  A rewrite is admitted only when proven bit-identical
+//!   across the full sweep; the fuzzer re-proves every candidate it
+//!   generates, keeping `Tape::affine` pinned to unfused semantics.
+
+pub mod exec;
+pub mod fuzz;
+pub mod gen;
+mod ir;
+pub mod lint;
+pub mod rewrite;
+
+pub use ir::{NodeIr, OpIr, Program};
+pub use lint::{lint, Diag, LintReport, Severity};

@@ -1,0 +1,338 @@
+//! Pattern → fused-kernel rewriter over tape programs, with bit-identity
+//! admission.
+//!
+//! Rules (both target the tape's fused [`Affine`](OpIr::Affine) op, which
+//! folds the bias add — and optionally the relu — into the producing
+//! matmul panel so the `add_row` output round happens in-register):
+//!
+//! - `FuseAffine`:     `matmul + add_row`        → `affine(relu=false)`
+//! - `FuseAffineRelu`: `matmul + add_row + relu` → `affine(relu=true)`
+//!
+//! A candidate only *matches* when every interior node of the chain is
+//! single-use (fusing a multi-use matmul would drop a value other nodes
+//! read).  A matched rewrite is only *admitted* when [`validate`] proves
+//! the rewritten program bit-identical to the original — loss, every leaf
+//! gradient, and the final forward value — across both backends, 1 and 4
+//! intra-threads, and the format sweep.  The fuzzer runs this admission
+//! check on every generated candidate, so the `Tape::affine` fast path
+//! stays pinned to the unfused semantics it replaces.
+
+use super::exec;
+use super::ir::{NodeIr, OpIr, Program};
+use crate::precision::{BF16, E8M5, FP16, FP32};
+use crate::qsim::{Backend, QPolicy, Tensor};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    FuseAffine,
+    FuseAffineRelu,
+}
+
+impl Rule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::FuseAffine => "fuse-affine",
+            Rule::FuseAffineRelu => "fuse-affine-relu",
+        }
+    }
+}
+
+/// One matched rewrite site.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub rule: Rule,
+    pub matmul: usize,
+    pub add_row: usize,
+    pub relu: Option<usize>,
+}
+
+impl Candidate {
+    pub fn describe(&self) -> String {
+        match self.relu {
+            Some(r) => format!(
+                "%{} matmul + %{} add_row + %{r} relu -> affine(relu) [{}]",
+                self.matmul,
+                self.add_row,
+                self.rule.name()
+            ),
+            None => format!(
+                "%{} matmul + %{} add_row -> affine [{}]",
+                self.matmul,
+                self.add_row,
+                self.rule.name()
+            ),
+        }
+    }
+}
+
+/// Find every fusable chain in `prog`.
+pub fn find(prog: &Program) -> Vec<Candidate> {
+    let uses = prog.use_counts();
+    let n = prog.nodes.len();
+    let mut out = Vec::new();
+    for j in 0..n {
+        let OpIr::AddRow(m, _) = &prog.nodes[j].op else { continue };
+        let m = *m;
+        if !matches!(prog.nodes[m].op, OpIr::MatMul(..)) || uses[m] != 1 {
+            continue;
+        }
+        // Extend over a trailing relu when the add_row's one user is one.
+        let mut relu = None;
+        if uses[j] == 1 {
+            if let Some(r) =
+                (j + 1..n).find(|&r| prog.nodes[r].op.operands().contains(&j))
+            {
+                if matches!(prog.nodes[r].op, OpIr::Relu(_)) {
+                    relu = Some(r);
+                }
+            }
+        }
+        let rule = if relu.is_some() { Rule::FuseAffineRelu } else { Rule::FuseAffine };
+        out.push(Candidate { rule, matmul: m, add_row: j, relu });
+    }
+    out
+}
+
+/// Apply one candidate, producing a new program with the chain collapsed
+/// into a single `Affine` node at the chain tail's position (preserving
+/// topological order) and every other operand index remapped.
+pub fn apply(prog: &Program, cand: &Candidate) -> Program {
+    let tail = cand.relu.unwrap_or(cand.add_row);
+    let (x, w) = match &prog.nodes[cand.matmul].op {
+        OpIr::MatMul(a, b) => (*a, *b),
+        other => unreachable!("candidate matmul slot holds {}", other.name()),
+    };
+    let bias = match &prog.nodes[cand.add_row].op {
+        OpIr::AddRow(_, b) => *b,
+        other => unreachable!("candidate add_row slot holds {}", other.name()),
+    };
+    let mut map = vec![usize::MAX; prog.nodes.len()];
+    let mut nodes = Vec::with_capacity(prog.nodes.len());
+    for (i, n) in prog.nodes.iter().enumerate() {
+        if i == tail {
+            map[i] = nodes.len();
+            nodes.push(NodeIr {
+                op: OpIr::Affine {
+                    x: map[x],
+                    w: map[w],
+                    b: map[bias],
+                    relu: cand.relu.is_some(),
+                },
+                rows: n.rows,
+                cols: n.cols,
+                requires_grad: n.requires_grad,
+            });
+            continue;
+        }
+        if i == cand.matmul || i == cand.add_row {
+            continue; // interior chain nodes are absorbed by the Affine
+        }
+        map[i] = nodes.len();
+        nodes.push(NodeIr {
+            op: remap_op(&n.op, &map),
+            rows: n.rows,
+            cols: n.cols,
+            requires_grad: n.requires_grad,
+        });
+    }
+    Program { nodes }
+}
+
+fn remap_op(op: &OpIr, map: &[usize]) -> OpIr {
+    match op {
+        OpIr::Leaf => OpIr::Leaf,
+        OpIr::MatMul(a, b) => OpIr::MatMul(map[*a], map[*b]),
+        OpIr::Add(a, b) => OpIr::Add(map[*a], map[*b]),
+        OpIr::Sub(a, b) => OpIr::Sub(map[*a], map[*b]),
+        OpIr::Mul(a, b) => OpIr::Mul(map[*a], map[*b]),
+        OpIr::Relu(a) => OpIr::Relu(map[*a]),
+        OpIr::Sigmoid(a) => OpIr::Sigmoid(map[*a]),
+        OpIr::Tanh(a) => OpIr::Tanh(map[*a]),
+        OpIr::GatherRows { x, idx } => OpIr::GatherRows { x: map[*x], idx: idx.clone() },
+        OpIr::MeanAll(a) => OpIr::MeanAll(map[*a]),
+        OpIr::MseLoss { diff } => OpIr::MseLoss { diff: map[*diff] },
+        OpIr::BceLoss { logits, labels } => {
+            OpIr::BceLoss { logits: map[*logits], labels: labels.clone() }
+        }
+        OpIr::AddRow(a, b) => OpIr::AddRow(map[*a], map[*b]),
+        OpIr::Affine { x, w, b, relu } => {
+            OpIr::Affine { x: map[*x], w: map[*w], b: map[*b], relu: *relu }
+        }
+        OpIr::ConcatCols(parts) => {
+            OpIr::ConcatCols(parts.iter().map(|p| map[*p]).collect())
+        }
+        OpIr::Scale(a, c) => OpIr::Scale(map[*a], *c),
+        OpIr::MatMulNT(a, b) => OpIr::MatMulNT(map[*a], map[*b]),
+        OpIr::LayerNorm { x, eps } => OpIr::LayerNorm { x: map[*x], eps: *eps },
+        OpIr::CausalAttn { q, k, v, seqs } => {
+            OpIr::CausalAttn { q: map[*q], k: map[*k], v: map[*v], seqs: *seqs }
+        }
+        OpIr::SoftmaxXent { logits, targets } => {
+            OpIr::SoftmaxXent { logits: map[*logits], targets: targets.clone() }
+        }
+    }
+}
+
+/// The admission rule: prove `rewritten` bit-identical to `orig` on the
+/// given leaves across formats × backends × thread counts.  Returns the
+/// number of (format, backend, threads) cells checked.
+pub fn validate(
+    orig: &Program,
+    rewritten: &Program,
+    leaves: &[Tensor],
+) -> Result<u64, String> {
+    let fmts = [FP32, BF16, FP16, E8M5];
+    let combos = [(Backend::Fast, 1), (Backend::Fast, 4), (Backend::Reference, 1)];
+    let mut checks = 0u64;
+    for fmt in fmts {
+        for (backend, threads) in combos {
+            let cell = format!("{} {} t{threads}", fmt.name, backend.name());
+            let policy = QPolicy::with_backend(fmt, backend);
+            let a = exec::run(orig, leaves, policy, threads)
+                .map_err(|e| format!("original replay failed [{cell}]: {e}"))?;
+            let b = exec::run(rewritten, leaves, policy, threads)
+                .map_err(|e| format!("rewritten replay failed [{cell}]: {e}"))?;
+            if a.loss.to_bits() != b.loss.to_bits() {
+                return Err(format!(
+                    "loss differs [{cell}]: {:e} vs {:e}",
+                    a.loss, b.loss
+                ));
+            }
+            let (va, vb) = (a.values.last().unwrap(), b.values.last().unwrap());
+            if !exec::bits_equal(va, vb) {
+                return Err(format!("final forward value differs [{cell}]"));
+            }
+            let ga = leaf_grads(orig, &a);
+            let gb = leaf_grads(rewritten, &b);
+            for (k, (x, y)) in ga.iter().zip(&gb).enumerate() {
+                match (x, y) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) if exec::bits_equal(x, y) => {}
+                    _ => {
+                        return Err(format!("gradient of leaf #{k} differs [{cell}]"))
+                    }
+                }
+            }
+            checks += 1;
+        }
+    }
+    Ok(checks)
+}
+
+/// Leaf gradients in leaf order (index-stable across the rewrite, which
+/// never adds or removes leaves).
+fn leaf_grads(prog: &Program, r: &exec::Replay) -> Vec<Option<Tensor>> {
+    prog.leaf_nodes().into_iter().map(|i| r.grads[i].clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lint::lint;
+    use super::*;
+
+    fn leaf(rows: usize, cols: usize, rg: bool) -> NodeIr {
+        NodeIr { op: OpIr::Leaf, rows, cols, requires_grad: rg }
+    }
+
+    fn node(op: OpIr, rows: usize, cols: usize) -> NodeIr {
+        NodeIr { op, rows, cols, requires_grad: true }
+    }
+
+    fn chain_program(with_relu: bool) -> (Program, Vec<Tensor>) {
+        let mut nodes = vec![
+            leaf(3, 2, false),
+            leaf(2, 4, true),
+            leaf(1, 4, true),
+            node(OpIr::MatMul(0, 1), 3, 4),
+            node(OpIr::AddRow(3, 2), 3, 4),
+        ];
+        let mut tail = 4;
+        if with_relu {
+            nodes.push(node(OpIr::Relu(4), 3, 4));
+            tail = 5;
+        }
+        nodes.push(node(OpIr::MeanAll(tail), 1, 1));
+        let leaves = vec![
+            Tensor::from_vec(3, 2, vec![0.9, -1.4, 0.3, 2.0, -0.6, 0.1]),
+            Tensor::from_vec(2, 4, vec![0.5, -0.2, 1.1, 0.7, -0.9, 0.4, 0.2, -1.3]),
+            Tensor::from_vec(1, 4, vec![0.05, -0.3, 0.8, -0.01]),
+        ];
+        (Program { nodes }, leaves)
+    }
+
+    #[test]
+    fn finds_and_fuses_the_relu_chain() {
+        let (prog, leaves) = chain_program(true);
+        let cands = find(&prog);
+        assert_eq!(cands.len(), 1);
+        assert_eq!(cands[0].rule, Rule::FuseAffineRelu);
+
+        let rw = apply(&prog, &cands[0]);
+        assert_eq!(rw.nodes.len(), prog.nodes.len() - 2);
+        let root = rw.nodes.len() - 1;
+        assert!(lint(&rw, root).errors().is_empty(), "{rw}");
+        assert!(
+            rw.nodes.iter().any(|n| matches!(n.op, OpIr::Affine { relu: true, .. })),
+            "{rw}"
+        );
+        validate(&prog, &rw, &leaves).expect("fused chain must be bit-identical");
+    }
+
+    #[test]
+    fn fuses_bias_only_chain_without_relu() {
+        let (prog, leaves) = chain_program(false);
+        let cands = find(&prog);
+        assert_eq!(cands.len(), 1);
+        assert_eq!(cands[0].rule, Rule::FuseAffine);
+        let rw = apply(&prog, &cands[0]);
+        assert!(
+            rw.nodes.iter().any(|n| matches!(n.op, OpIr::Affine { relu: false, .. })),
+            "{rw}"
+        );
+        validate(&prog, &rw, &leaves).expect("bias-fold must be bit-identical");
+    }
+
+    #[test]
+    fn multi_use_matmul_is_not_a_candidate() {
+        // The matmul output feeds both the add_row and a second consumer:
+        // fusing it would erase a value the sigmoid still needs.
+        let prog = Program {
+            nodes: vec![
+                leaf(2, 2, true),
+                leaf(2, 3, true),
+                leaf(1, 3, true),
+                node(OpIr::MatMul(0, 1), 2, 3),
+                node(OpIr::AddRow(3, 2), 2, 3),
+                node(OpIr::Sigmoid(3), 2, 3),
+                node(OpIr::Add(4, 5), 2, 3),
+                node(OpIr::MeanAll(6), 1, 1),
+            ],
+        };
+        assert!(find(&prog).is_empty());
+    }
+
+    #[test]
+    fn multi_use_add_row_fuses_without_the_relu() {
+        // add_row feeds a relu AND a second consumer: only the bias fold
+        // is sound, the relu must stay a separate node.
+        let prog = Program {
+            nodes: vec![
+                leaf(2, 2, true),
+                leaf(2, 3, true),
+                leaf(1, 3, true),
+                node(OpIr::MatMul(0, 1), 2, 3),
+                node(OpIr::AddRow(3, 2), 2, 3),
+                node(OpIr::Relu(4), 2, 3),
+                node(OpIr::Add(4, 5), 2, 3),
+                node(OpIr::MeanAll(6), 1, 1),
+            ],
+        };
+        let cands = find(&prog);
+        assert_eq!(cands.len(), 1);
+        assert_eq!(cands[0].rule, Rule::FuseAffine);
+        assert_eq!(cands[0].relu, None);
+        let rw = apply(&prog, &cands[0]);
+        let root = rw.nodes.len() - 1;
+        assert!(lint(&rw, root).errors().is_empty(), "{rw}");
+    }
+}

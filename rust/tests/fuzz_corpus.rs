@@ -1,0 +1,123 @@
+//! Fuzzer corpus regression suite.
+//!
+//! Replays a checked-in corpus of `qsim::verify` fuzzer seeds on every
+//! `cargo test` run, so the differential properties the fuzzer enforces
+//! (backend parity, thread parity, finite-difference gradient agreement,
+//! rewrite bit-identity) are re-proven for a fixed, reviewed set of
+//! programs even when nobody runs `repro fuzz-tape` by hand.
+//!
+//! Corpus layout: each entry is a `(seed, case)` coordinate — exactly the
+//! `FUZZ-REPRO seed=S case=I` stamp the fuzzer prints on failure.  When
+//! the fuzzer finds a divergence during development, the fix lands
+//! together with its stamp appended to `INTERESTING`, pinning the
+//! regression forever.  (The pool-growth leak fixed in this PR —
+//! `push_scalar` retiring a fresh allocation into the free pool on every
+//! step — was found by the reset-accounting audit, not by a generated
+//! case, so its regression test lives in `qsim::tape`'s unit tests
+//! instead: `reset_pool_accounting_reaches_steady_state`.)
+
+use bf16_train::qsim::verify::{fuzz, gen, lint, rewrite};
+
+/// The standing smoke corpus: the first cases of the CI seed stream.
+/// These exercise every op in the generator vocabulary within the first
+/// few dozen indices (verified by `corpus_covers_the_op_vocabulary`).
+const SMOKE: &[(u64, u64)] = &[
+    (1, 0),
+    (1, 1),
+    (1, 2),
+    (1, 3),
+    (1, 4),
+    (1, 5),
+    (1, 6),
+    (1, 7),
+    (1, 8),
+    (1, 9),
+    (1, 10),
+    (1, 11),
+];
+
+/// Cases kept because they cover behaviour that once regressed or is
+/// structurally interesting (deep chains, attention tails, loss heads
+/// over scaled values).  Append `FUZZ-REPRO` stamps here when the fuzzer
+/// catches something.
+const INTERESTING: &[(u64, u64)] = &[
+    (2, 5),
+    (2, 17),
+    (3, 33),
+    (17, 4),
+    (0xBF16, 1),
+];
+
+#[test]
+fn smoke_corpus_replays_clean() {
+    for &(seed, case) in SMOKE {
+        let stats = fuzz::replay_one(seed, case)
+            .unwrap_or_else(|e| panic!("FUZZ-REPRO seed={seed} case={case} failed: {e}"));
+        assert!(stats.checks > 0, "FUZZ-REPRO seed={seed} case={case} ran no checks");
+    }
+}
+
+#[test]
+fn interesting_corpus_replays_clean() {
+    for &(seed, case) in INTERESTING {
+        if let Err(e) = fuzz::replay_one(seed, case) {
+            panic!("FUZZ-REPRO seed={seed} case={case} failed: {e}");
+        }
+    }
+}
+
+#[test]
+fn corpus_covers_the_op_vocabulary() {
+    // The corpus is only a meaningful regression net if it exercises the
+    // whole vocabulary; count op kinds across the corpus programs.
+    let mut names = std::collections::BTreeSet::new();
+    for &(seed, case) in SMOKE.iter().chain(INTERESTING) {
+        let c = gen::gen_case(seed, case);
+        for n in &c.program.nodes {
+            names.insert(n.op.name());
+        }
+    }
+    for required in ["leaf", "matmul", "add_row"] {
+        assert!(names.contains(required), "corpus never generates {required}; got {names:?}");
+    }
+    // The generator is biased toward fusable chains, so the corpus must
+    // hand the rewrite validator at least a few candidates.
+    let candidates: usize = SMOKE
+        .iter()
+        .chain(INTERESTING)
+        .map(|&(s, i)| rewrite::find(&gen::gen_case(s, i).program).len())
+        .sum();
+    assert!(candidates > 0, "corpus contains no fusable chains");
+}
+
+#[test]
+fn every_corpus_program_lints_clean() {
+    for &(seed, case) in SMOKE.iter().chain(INTERESTING) {
+        let c = gen::gen_case(seed, case);
+        let root = c.program.nodes.len() - 1;
+        let errs = lint(&c.program, root).errors();
+        assert!(
+            errs.is_empty(),
+            "FUZZ-REPRO seed={seed} case={case} fails lint:\n{}\n{}",
+            c.program,
+            errs.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}
+
+#[test]
+fn ci_seed_prefix_passes_at_test_budget() {
+    // A slice of the exact stream CI fuzzes (`repro fuzz-tape --seed 1`),
+    // kept small enough for `cargo test`; the CI job runs the long prefix.
+    let out = fuzz::run(1, 40);
+    assert!(
+        out.passed(),
+        "fuzz failure in the CI stream:\n{}",
+        out.failure.as_ref().unwrap().render()
+    );
+    assert_eq!(out.cases_run, 40);
+    assert!(
+        out.rewrites_validated > 0,
+        "40 cases produced no rewrite admissions — generator bias is broken"
+    );
+}

@@ -1,17 +1,23 @@
 //! Native-step bench baseline: times lsq + dlrm + gpt-nano + mlp train
-//! steps per precision mode on the vectorized `Fast` backend against the
-//! scalar `Reference` backend (the pre-optimization code path), with no
-//! PJRT artifacts needed, plus `intra_threads ∈ {1, 2, hw}` scaling sweeps
-//! of the parallel execution layer (`derived.scaling_dlrm_sr16_tN` /
+//! steps per precision mode across all three backend tiers — `Simd`
+//! (vector-wide kernels), `Fast` (tiled scalar), and `Reference` (the
+//! scalar oracle, i.e. the pre-optimization code path) — with no PJRT
+//! artifacts needed, plus `intra_threads ∈ {1, 2, hw}` scaling sweeps of
+//! the parallel execution layer (`derived.scaling_dlrm_sr16_tN` /
 //! `scaling_gpt_sr16_tN` / `scaling_mlp_sr16_tN` = t1 median / tN median;
 //! > 1.0 means the worker pool pays off at N threads).
 //!
 //! Every app runs through the generic `qsim::train` engine, so the
 //! per-app sections are one helper call each (`bench_app_modes` /
-//! `bench_app_scaling`) instead of copied loops.
+//! `bench_app_scaling`) instead of copied loops.  Per-mode derived keys:
+//! `speedup_<tag>_<mode>` (reference/fast) and `speedup_simd_<tag>_<mode>`
+//! (reference/simd).  The 2x-memory thesis is *measured*, not planned:
+//! `bytes_weights_{fp32,bf16,kahan16}` come from
+//! `Trainer::measured_weight_bytes()` over the native 16-bit storage.
 //!
-//! Emits `BENCH_qsim.json` (override the path with `QSIM_BENCH_OUT`) so
-//! future PRs have a throughput trajectory to compare against.  Set
+//! Merges into `BENCH_qsim.json` (override the path with `QSIM_BENCH_OUT`)
+//! so future PRs have a throughput trajectory to compare against and the
+//! `rounding` bench target can contribute rows to the same artifact.  Set
 //! `QSIM_BENCH_SMOKE=1` (or pass `--smoke`) for a tiny CI-sized iteration
 //! budget that only verifies the target still runs end to end (smoke
 //! scaling ratios are noise — `derived.smoke = 1` marks such runs).
@@ -22,7 +28,7 @@ use bf16_train::qsim::lsq::{self, LsqConfig, LsqData, Placement};
 use bf16_train::qsim::mlp::MlpConfig;
 use bf16_train::qsim::train::{Task, Trainer};
 use bf16_train::qsim::{Backend, Mode, Tensor};
-use bf16_train::util::bench::{bench, bench_n, black_box, write_bench_json, BenchResult};
+use bf16_train::util::bench::{bench, bench_n, black_box, merge_bench_json, BenchResult};
 use bf16_train::util::rng::Rng;
 
 fn timed(smoke: bool, name: &str, f: impl FnMut()) -> BenchResult {
@@ -34,7 +40,8 @@ fn timed(smoke: bool, name: &str, f: impl FnMut()) -> BenchResult {
 }
 
 /// Per-(mode, backend) step timings + `derived.speedup_<tag>_<mode>`
-/// (reference median / fast median) for one app.
+/// (reference median / fast median) and `speedup_simd_<tag>_<mode>`
+/// (reference median / simd median) for one app.
 #[allow(clippy::too_many_arguments)]
 fn bench_app_modes<T: Task>(
     smoke: bool,
@@ -47,8 +54,8 @@ fn bench_app_modes<T: Task>(
     derived: &mut Vec<(String, f64)>,
 ) {
     for &mode in modes {
-        let mut pair = Vec::new();
-        for backend in [Backend::Fast, Backend::Reference] {
+        let mut med = Vec::new();
+        for backend in [Backend::Fast, Backend::Reference, Backend::Simd] {
             let mut tr = Trainer::new(mk(backend), mode);
             // warm the tape arena / allocator so we time steady state
             for _ in 0..3 {
@@ -61,12 +68,18 @@ fn bench_app_modes<T: Task>(
                     black_box(tr.step(lr));
                 },
             );
-            pair.push(r.median_ns);
+            med.push(r.median_ns);
             results.push(r);
         }
-        let speedup = pair[1] / pair[0];
-        println!("  ↳ {label} {} speedup fast/reference: {speedup:.2}x", mode.name());
+        let speedup = med[1] / med[0];
+        let speedup_simd = med[1] / med[2];
+        println!(
+            "  ↳ {label} {} speedup reference/fast {speedup:.2}x, \
+             reference/simd {speedup_simd:.2}x",
+            mode.name()
+        );
         derived.push((format!("speedup_{tag}_{}", mode.name()), speedup));
+        derived.push((format!("speedup_simd_{tag}_{}", mode.name()), speedup_simd));
     }
 }
 
@@ -123,7 +136,7 @@ fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
     let mut derived: Vec<(String, f64)> = Vec::new();
 
-    // -- kernel micro-bench: tiled vs reference matmul ----------------------
+    // -- kernel micro-bench: simd vs tiled vs reference matmul --------------
     let mut rng = Rng::new(1, 0);
     let a = Tensor::randn(128, 256, 1.0, &mut rng);
     let b = Tensor::randn(256, 64, 1.0, &mut rng);
@@ -133,8 +146,31 @@ fn main() {
     let ref_mm = timed(smoke, "matmul 128x256x64 reference", || {
         black_box(a.matmul_reference(&b));
     });
-    derived.push(("speedup_matmul_128x256x64".into(), ref_mm.median_ns / fast_mm.median_ns));
-    results.extend([fast_mm, ref_mm]);
+    let mut out = Tensor::zeros(128, 64);
+    let simd_mm = timed(smoke, "matmul 128x256x64 simd", || {
+        a.matmul_into_simd(&b, &mut out, None);
+        black_box(&out);
+    });
+    derived.push(("speedup_matmul_128x256x64".into(), ref_mm.median_ns / simd_mm.median_ns));
+    derived.push((
+        "speedup_matmul_128x256x64_tiled".into(),
+        ref_mm.median_ns / fast_mm.median_ns,
+    ));
+    results.extend([fast_mm, ref_mm, simd_mm]);
+
+    // -- measured weight bytes: the paper's 2x-memory claim, as stored ------
+    // (dlrm-small; standard16/sr16 hold weights natively in 16 bits, kahan
+    // adds a 16-bit compensation buffer alongside — back to fp32's total)
+    for (mode, key) in [
+        (Mode::Fp32, "bytes_weights_fp32"),
+        (Mode::Sr16, "bytes_weights_bf16"),
+        (Mode::Kahan16, "bytes_weights_kahan16"),
+    ] {
+        let tr = Trainer::new(DlrmConfig { seed: 3, ..Default::default() }, mode);
+        let bytes = tr.measured_weight_bytes();
+        println!("{key}: {bytes} (dlrm-small, {})", mode.name());
+        derived.push((key.into(), bytes as f64));
+    }
 
     let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let mut thread_counts = vec![1usize, 2];
@@ -264,19 +300,29 @@ fn main() {
         DlrmConfig { seed: 11, backend: Backend::Reference, ..Default::default() },
         Mode::Sr16,
     );
+    let mut simd = Trainer::new(
+        DlrmConfig { seed: 11, backend: Backend::Simd, ..Default::default() },
+        Mode::Sr16,
+    );
     for s in 0..parity_steps {
         let a = fast.step(0.05);
         let b = reference.step(0.05);
+        let c = simd.step(0.05);
         assert_eq!(
             a.loss.to_bits(),
             b.loss.to_bits(),
             "fast/reference loss diverged at step {s}"
         );
+        assert_eq!(
+            c.loss.to_bits(),
+            b.loss.to_bits(),
+            "simd/reference loss diverged at step {s}"
+        );
     }
-    println!("parity: {parity_steps} sr16 steps bit-identical across backends");
+    println!("parity: {parity_steps} sr16 steps bit-identical across all three backends");
     derived.push(("parity_sr16_steps".into(), parity_steps as f64));
     derived.push(("smoke".into(), if smoke { 1.0 } else { 0.0 }));
 
-    write_bench_json(&out_path, &results, &derived).expect("writing bench json");
+    merge_bench_json(&out_path, &results, &derived).expect("writing bench json");
     println!("wrote {out_path}");
 }

@@ -1,101 +1,123 @@
 //! L3 micro-benches: the precision substrate's hot loops (rounding,
-//! Kahan accumulation, RNG).  These bound the rust-native simulator's
-//! optimizer throughput (EXPERIMENTS.md §Perf).
+//! Kahan accumulation, RNG), scalar kernels against their 8-lane SIMD
+//! counterparts.  These bound the rust-native simulator's optimizer
+//! throughput (EXPERIMENTS.md §Perf).
+//!
+//! Merges its rows into `BENCH_qsim.json` (override with `QSIM_BENCH_OUT`)
+//! alongside the `qsim_step` rows instead of discarding the timings.
+//! `QSIM_BENCH_SMOKE=1` (or `--smoke`) switches to a fixed tiny budget.
 
 use bf16_train::precision::{
-    kahan_add, round_nearest, round_nearest_slice, round_stochastic, round_stochastic_slice,
-    round_stochastic_slice_keyed, RoundMode, Rounder, BF16, E8M3, FP16,
+    kahan_add, round_nearest, round_nearest_slice, round_nearest_slice_simd,
+    round_stochastic, round_stochastic_slice, round_stochastic_slice_keyed,
+    round_stochastic_slice_keyed_simd, RoundMode, Rounder, BF16, E8M3, FP16,
 };
-use bf16_train::util::bench::{bench, black_box, throughput};
+use bf16_train::util::bench::{bench, bench_n, black_box, merge_bench_json, throughput};
 use bf16_train::util::rng::{DitherKey, Rng};
 
 fn main() {
+    let smoke = std::env::var("QSIM_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke");
+    let out_path =
+        std::env::var("QSIM_BENCH_OUT").unwrap_or_else(|_| "BENCH_qsim.json".into());
+    let mut results = Vec::new();
+    let mut run = |name: &str, n: usize, f: &mut dyn FnMut()| {
+        let r = if smoke { bench_n(name, 3, f) } else { bench(name, f) };
+        throughput(&r, n);
+        results.push(r);
+    };
+
     let mut rng = Rng::new(7, 0);
     let xs: Vec<f32> = (0..65_536).map(|_| rng.normal()).collect();
     let bits: Vec<u32> = (0..65_536).map(|_| rng.next_u32()).collect();
     let n = xs.len();
 
-    let r = bench("round_nearest/bf16 64k", || {
+    run("round_nearest/bf16 64k", n, &mut || {
         let mut acc = 0f32;
         for &x in &xs {
             acc += round_nearest(black_box(x), BF16);
         }
         black_box(acc);
     });
-    throughput(&r, n);
 
     for (name, fmt) in [("fp16", FP16), ("e8m3", E8M3)] {
-        let r = bench(&format!("round_nearest/{name} 64k"), || {
+        run(&format!("round_nearest/{name} 64k"), n, &mut || {
             let mut acc = 0f32;
             for &x in &xs {
                 acc += round_nearest(black_box(x), fmt);
             }
             black_box(acc);
         });
-        throughput(&r, n);
     }
 
-    let r = bench("round_stochastic/bf16 64k", || {
+    run("round_stochastic/bf16 64k", n, &mut || {
         let mut acc = 0f32;
         for (&x, &b) in xs.iter().zip(&bits) {
             acc += round_stochastic(black_box(x), BF16, b);
         }
         black_box(acc);
     });
-    throughput(&r, n);
 
-    let r = bench("rounder_slice/bf16-stochastic 64k", || {
+    run("rounder_slice/bf16-stochastic 64k", n, &mut || {
         let mut r = Rounder::new(BF16, RoundMode::Stochastic, 1);
         let mut v = xs.clone();
         r.round_slice(&mut v);
         black_box(v);
     });
-    throughput(&r, n);
 
     // batched slice kernels vs the scalar loops above
-    let r = bench("round_nearest_slice/bf16 64k", || {
+    run("round_nearest_slice/bf16 64k", n, &mut || {
         let mut v = xs.clone();
         round_nearest_slice(&mut v, BF16);
         black_box(v);
     });
-    throughput(&r, n);
 
-    let r = bench("round_stochastic_slice/bf16 64k", || {
+    run("round_stochastic_slice/bf16 64k", n, &mut || {
         let mut g = Rng::new(1, 0);
         let mut v = xs.clone();
         round_stochastic_slice(&mut v, BF16, &mut g);
         black_box(v);
     });
-    throughput(&r, n);
 
     // counter-keyed SR (the dither schedule the qsim trainers consume):
     // slice kernel vs the scalar per-word draws it must match bit-for-bit
     let key = DitherKey::new(7, 0x5352, 0, 0);
-    let r = bench("round_stochastic_slice_keyed/bf16 64k", || {
+    run("round_stochastic_slice_keyed/bf16 64k", n, &mut || {
         let mut v = xs.clone();
         round_stochastic_slice_keyed(&mut v, BF16, key, 0);
         black_box(v);
     });
-    throughput(&r, n);
 
-    let r = bench("dither_key/word 64k", || {
+    // 8-lane SIMD kernels (the `Backend::Simd` hot path); bit-identical to
+    // the scalar slice kernels above, so the deltas are pure speedup
+    run("round_nearest_slice_simd/bf16 64k", n, &mut || {
+        let mut v = xs.clone();
+        round_nearest_slice_simd(&mut v, BF16);
+        black_box(v);
+    });
+
+    run("round_stochastic_slice_keyed_simd/bf16 64k", n, &mut || {
+        let mut v = xs.clone();
+        round_stochastic_slice_keyed_simd(&mut v, BF16, key, 0);
+        black_box(v);
+    });
+
+    run("dither_key/word 64k", n, &mut || {
         let mut acc = 0u32;
         for i in 0..n {
             acc = acc.wrapping_add(key.word(i as u64));
         }
         black_box(acc);
     });
-    throughput(&r, n);
 
-    let r = bench("rng/fill_u32 64k", || {
+    run("rng/fill_u32 64k", n, &mut || {
         let mut g = Rng::new(3, 0);
         let mut buf = vec![0u32; n];
         g.fill_u32(&mut buf);
         black_box(buf);
     });
-    throughput(&r, n);
 
-    let r = bench("kahan_add/bf16 64k", || {
+    run("kahan_add/bf16 64k", n, &mut || {
         let mut s = 0f32;
         let mut c = 0f32;
         for &x in &xs {
@@ -105,9 +127,8 @@ fn main() {
         }
         black_box((s, c));
     });
-    throughput(&r, n);
 
-    let r = bench("rng/xoshiro u32 64k", || {
+    run("rng/xoshiro u32 64k", n, &mut || {
         let mut g = Rng::new(3, 0);
         let mut acc = 0u32;
         for _ in 0..n {
@@ -115,5 +136,7 @@ fn main() {
         }
         black_box(acc);
     });
-    throughput(&r, n);
+
+    merge_bench_json(&out_path, &results, &[]).expect("writing bench json");
+    println!("merged {} rounding rows into {out_path}", results.len());
 }

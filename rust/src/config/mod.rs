@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 use crate::precision::{Format, Policy};
+use crate::qsim::Backend;
 use crate::util::tomlmini::TomlDoc;
 
 /// Learning-rate schedule kinds (the paper's Appendix C set).
@@ -89,6 +90,11 @@ pub struct RunConfig {
     /// `--threads`, which fans *runs* out across workers — a multi-worker
     /// sweep clamps auto (`0`) cells back to `1` to avoid oversubscription.
     pub intra_threads: usize,
+    /// Kernel backend tier for the qsim-native paths (`--backend`; TOML key
+    /// `train.backend`: `fast` (default), `reference`, `simd`).  All tiers
+    /// are bit-identical, so this only trades wall-clock; the PJRT session
+    /// path ignores it (its kernels are compiled artifacts).
+    pub backend: Backend,
 }
 
 impl RunConfig {
@@ -151,6 +157,7 @@ impl RunConfig {
             artifacts_dir: "artifacts".to_string(),
             out_dir: "results".to_string(),
             intra_threads: 1,
+            backend: Backend::default(),
         }
     }
 
@@ -195,6 +202,11 @@ impl RunConfig {
         // into an astronomical thread count — treat it as auto (0)
         cfg.intra_threads =
             doc.i64_or("train.intra_threads", cfg.intra_threads as i64).max(0) as usize;
+        if let Some(b) = doc.get("train.backend").and_then(|v| v.as_str()) {
+            cfg.backend = Backend::by_name(b).with_context(|| {
+                format!("config key `train.backend` = {b:?} (expected fast, reference or simd)")
+            })?;
+        }
         if let Some(kind) = doc.get("schedule.kind").and_then(|v| v.as_str()) {
             let warmup = doc.f64_or("schedule.warmup_frac", 0.0);
             let boundaries: Vec<f64> = doc
@@ -245,6 +257,7 @@ pub struct RunSpec {
     artifacts_dir: Option<String>,
     out_dir: Option<String>,
     intra_threads: Option<usize>,
+    backend: Option<Backend>,
 }
 
 impl RunSpec {
@@ -272,6 +285,7 @@ impl RunSpec {
             artifacts_dir: None,
             out_dir: None,
             intra_threads: None,
+            backend: None,
         }
     }
 
@@ -336,6 +350,13 @@ impl RunSpec {
         self
     }
 
+    /// Kernel backend tier for the qsim-native paths.  All tiers are
+    /// bit-identical; this only trades wall-clock.
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = Some(b);
+        self
+    }
+
     /// Materialize the final [`RunConfig`].
     pub fn build(&self) -> RunConfig {
         let mut cfg = self.base.clone();
@@ -383,6 +404,9 @@ impl RunSpec {
         }
         if let Some(n) = self.intra_threads {
             cfg.intra_threads = n;
+        }
+        if let Some(b) = self.backend {
+            cfg.backend = b;
         }
         cfg
     }
@@ -505,6 +529,19 @@ warmup_frac = 0.1
         assert_eq!(cfg.intra_threads, 4);
         let spec = RunSpec::new("dlrm-small").intra_threads(2);
         assert_eq!(spec.build().intra_threads, 2);
+    }
+
+    #[test]
+    fn backend_defaults_parses_and_overrides() {
+        let cfg = RunConfig::defaults_for("dlrm-small");
+        assert_eq!(cfg.backend, Backend::Fast, "fast by default");
+        let cfg =
+            RunConfig::from_toml_text("app = \"dlrm\"\n[train]\nbackend = \"simd\"\n").unwrap();
+        assert_eq!(cfg.backend, Backend::Simd);
+        let err = RunConfig::from_toml_text("app = \"dlrm\"\n[train]\nbackend = \"avx99\"\n");
+        assert!(err.is_err(), "unknown backend names must fail at parse time");
+        let spec = RunSpec::new("mlp").backend(Backend::Reference);
+        assert_eq!(spec.build().backend, Backend::Reference);
     }
 
     #[test]

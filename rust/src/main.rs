@@ -48,14 +48,14 @@ fn main() -> Result<()> {
 const USAGE: &str = "usage: repro <command>
   list [--artifacts DIR]
   train --app APP [--mode MODE] [--fmt FMT] [--steps N] [--seed S]
-        [--lr LR] [--intra-threads T] [--config FILE.toml]
-        [--checkpoint PATH] [--resume PATH] [--native]
+        [--lr LR] [--intra-threads T] [--backend fast|reference|simd]
+        [--config FILE.toml] [--checkpoint PATH] [--resume PATH] [--native]
   exp <table1|table2|table3|table4|fig1|fig2|fig5|fig9|fig10|fig11|fig12|thm1|gpt|mlp|all>
         [--steps N] [--seeds K] [--app APP] [--threads T]
         [--intra-threads T] [--no-smooth]
   bench-step <artifact-name> [--iters N] [--intra-threads T]
   qsim-parity [--steps N] [--seed S] [--intra-threads T]
-        [--app all|dlrm|gpt|mlp] [--backend fast|reference]
+        [--app all|dlrm|gpt|mlp|lsq] [--backend fast|reference|simd]
   lint-tape [--app all|dlrm|gpt|mlp|lsq] [--seed S]
   fuzz-tape [--budget N] [--seed S] [--case I]
 
@@ -123,6 +123,11 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     let seed = args.opt_u64("seed", cfg.seed)?;
     let lr = args.opt_f64("lr", cfg.base_lr)?;
     let intra_threads = args.opt_u64("intra-threads", cfg.intra_threads as u64)? as usize;
+    let backend = match args.opt_maybe("backend") {
+        Some(b) => bf16_train::qsim::Backend::by_name(&b)
+            .with_context(|| format!("--backend {b:?} (expected fast, reference or simd)"))?,
+        None => cfg.backend,
+    };
     let artifacts_dir = args.opt("artifacts", &cfg.artifacts_dir.clone());
     let checkpoint = args.opt_maybe("checkpoint");
     let resume = args.opt_maybe("resume");
@@ -137,6 +142,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
             seed,
             lr,
             intra_threads,
+            backend,
             cfg.eval_batches,
             checkpoint,
             resume,
@@ -149,6 +155,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         .seed(seed)
         .lr(lr)
         .intra_threads(intra_threads)
+        .backend(backend)
         .artifacts_dir(&artifacts_dir);
     let cfg = spec.build();
     let runner = Runner::open(&artifacts_dir)?;
@@ -202,6 +209,7 @@ fn cmd_train_native(
     seed: u64,
     lr: f64,
     intra_threads: usize,
+    backend: bf16_train::qsim::Backend,
     eval_batches: u64,
     checkpoint: Option<String>,
     resume: Option<String>,
@@ -211,13 +219,15 @@ fn cmd_train_native(
     use bf16_train::qsim::mlp::MlpConfig;
 
     println!(
-        "train {app} (native qsim) | steps={steps} lr={lr} seed={seed} [{} on {}]",
-        policy.mode, policy.fmt.name
+        "train {app} (native qsim) | steps={steps} lr={lr} seed={seed} [{} on {}, {} backend]",
+        policy.mode,
+        policy.fmt.name,
+        backend.name()
     );
     let fmt = policy.fmt;
     match app {
         "dlrm" => run_native_train(
-            DlrmConfig { seed, fmt, intra_threads, ..Default::default() },
+            DlrmConfig { seed, fmt, intra_threads, backend, ..Default::default() },
             policy.mode,
             steps,
             lr,
@@ -226,7 +236,7 @@ fn cmd_train_native(
             resume,
         ),
         "gpt" | "gpt-nano" => run_native_train(
-            GptConfig { seed, fmt, intra_threads, ..Default::default() },
+            GptConfig { seed, fmt, intra_threads, backend, ..Default::default() },
             policy.mode,
             steps,
             lr,
@@ -235,7 +245,7 @@ fn cmd_train_native(
             resume,
         ),
         "mlp" => run_native_train(
-            MlpConfig { seed, fmt, intra_threads, ..Default::default() },
+            MlpConfig { seed, fmt, intra_threads, backend, ..Default::default() },
             policy.mode,
             steps,
             lr,
@@ -368,11 +378,13 @@ fn cmd_bench_step(args: &mut Args) -> Result<()> {
 }
 
 /// Deterministic digest of native qsim training runs (DLRM, the gpt-nano
-/// transformer LM and the spiral-MLP classifier — all through the generic
-/// `qsim::train` engine): per-step loss bit patterns and cancellation
-/// counters, plus a final eval.  Contains no timings, so the output must be
-/// byte-identical across `--intra-threads` settings *and* across
-/// `--backend fast|reference` — the CI determinism job diffs all of them.
+/// transformer LM, the spiral-MLP classifier — all through the generic
+/// `qsim::train` engine — plus the scalar least-squares probe): per-step
+/// loss bit patterns and cancellation counters, plus a final eval.
+/// Contains no timings, so the output must be byte-identical across
+/// `--intra-threads` settings *and* across
+/// `--backend fast|reference|simd` — the CI determinism and simd jobs
+/// diff all of them.
 fn cmd_qsim_parity(args: &mut Args) -> Result<()> {
     use bf16_train::qsim::dlrm::{DlrmConfig, DlrmTrainer};
     use bf16_train::qsim::gpt::{GptConfig, GptTrainer};
@@ -383,13 +395,14 @@ fn cmd_qsim_parity(args: &mut Args) -> Result<()> {
     let seed = args.opt_u64("seed", 17)?;
     let intra_threads = args.opt_u64("intra-threads", 1)? as usize;
     let app = args.opt("app", "all");
-    if !matches!(app.as_str(), "all" | "dlrm" | "gpt" | "gpt-nano" | "mlp") {
-        bail!("--app must be all, dlrm, gpt or mlp, got {app:?}");
+    if !matches!(app.as_str(), "all" | "dlrm" | "gpt" | "gpt-nano" | "mlp" | "lsq") {
+        bail!("--app must be all, dlrm, gpt, mlp or lsq, got {app:?}");
     }
     let backend = match args.opt("backend", "fast").as_str() {
         "fast" => Backend::Fast,
         "reference" => Backend::Reference,
-        other => bail!("--backend must be fast or reference, got {other:?}"),
+        "simd" => Backend::Simd,
+        other => bail!("--backend must be fast, reference or simd, got {other:?}"),
     };
     args.finish()?;
     eprintln!(
@@ -490,6 +503,35 @@ fn cmd_qsim_parity(args: &mut Args) -> Result<()> {
                 mode.name(),
                 m.loss.to_bits(),
                 m.metric.to_bits()
+            );
+        }
+    }
+    if app == "all" || app == "lsq" {
+        use bf16_train::qsim::lsq::{self, LsqConfig, LsqData, Placement};
+        // lsq trains outside the tape (hand-rolled scalar SGD), so its
+        // digest must be backend- and thread-invariant by construction —
+        // diffing it pins the shared dataset and placement sweep too.
+        let cfg = LsqConfig { seed, steps: 2_000, ..Default::default() };
+        let data = LsqData::generate(&cfg);
+        for placement in [
+            Placement::Exact,
+            Placement::WeightUpdate,
+            Placement::WeightUpdateSr,
+            Placement::ForwardBackward,
+            Placement::Everywhere,
+        ] {
+            let run = lsq::run(&cfg, &data, placement);
+            // FNV-1a over the sampled loss bit patterns
+            let mut h = 0xcbf29ce484222325u64;
+            for l in &run.losses {
+                h = (h ^ l.to_bits() as u64).wrapping_mul(0x100000001b3);
+            }
+            println!(
+                "lsq {} final: dist {:08x} halt {:08x} losses {:016x}",
+                placement.name(),
+                run.final_dist.to_bits(),
+                run.halt_frac.to_bits(),
+                h
             );
         }
     }
@@ -631,7 +673,7 @@ fn cmd_fuzz_tape(args: &mut Args) -> Result<()> {
 
     let fmt_names: Vec<&str> = fuzz::sweep_formats().iter().map(|f| f.name).collect();
     println!(
-        "fuzz-tape: seed={seed} budget={budget} formats=[{}] backends=[fast, reference] threads=[1, 4]",
+        "fuzz-tape: seed={seed} budget={budget} formats=[{}] backends=[fast, reference, simd] threads=[1, 4]",
         fmt_names.join(", ")
     );
     let out = fuzz::run(seed, budget);

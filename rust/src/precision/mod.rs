@@ -20,6 +20,7 @@ mod format;
 mod kahan;
 mod policy;
 mod round;
+mod simd;
 
 pub use format::{Format, ALL, BF16, E8M1, E8M3, E8M5, FP16, FP32};
 pub use kahan::{kahan_add, KahanAcc};
@@ -27,4 +28,8 @@ pub use policy::{Mode, Policy, PolicyParseError};
 pub use round::{
     round_nearest, round_nearest_slice, round_stochastic, round_stochastic_slice,
     round_stochastic_slice_keyed, RoundMode, Rounder,
+};
+pub use simd::{
+    round_nearest_slice_simd, round_stochastic_slice_keyed_simd, round_stochastic_slice_simd,
+    SimdRound, LANES,
 };

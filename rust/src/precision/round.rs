@@ -82,7 +82,7 @@ pub fn round_stochastic(x: f32, fmt: Format, rbits: u32) -> f32 {
 
 /// Dither words drawn per chunk by [`round_stochastic_slice`]; sized so the
 /// bit buffer lives in L1 while still amortizing the RNG call overhead.
-const SR_CHUNK: usize = 256;
+pub(crate) const SR_CHUNK: usize = 256;
 
 /// Round a slice to nearest-even in place.
 ///

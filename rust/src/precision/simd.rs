@@ -1,0 +1,484 @@
+//! 8-lane chunked rounding kernels — the `Backend::Simd` leaf tier.
+//!
+//! Every kernel here is **bit-identical** to its scalar oracle in
+//! [`super::round`]: the rounding algorithm is pure u32 bit arithmetic, the
+//! counter-keyed dither word for element `i` is a pure function of position,
+//! and lanes never interact — so processing eight elements per iteration
+//! (in `[u32; 8]` arrays the compiler autovectorizes to 256-bit ops)
+//! reproduces the scalar results exactly, including the clamp/FTZ path of
+//! sub-8-exponent formats and the pass-through of non-finite inputs.
+//!
+//! The baseline is stable Rust: fixed-width array lanes with branchless
+//! per-lane selects, which LLVM lowers to vector compares and blends on any
+//! target.  An explicit AVX2 path for the hottest kernel (nearest-rounding,
+//! fused into every matmul output row) is gated behind the
+//! `simd-intrinsics` cargo feature plus a runtime
+//! `is_x86_feature_detected!` check, and is restricted to formats that skip
+//! the clamp (8 exponent bits) so the intrinsics stay a straight
+//! add/mask/blend sequence.
+//!
+//! Non-finite handling: the scalar kernels `continue`, leaving the original
+//! bits (NaN payloads included) untouched.  The lane kernels compute the
+//! rounded candidate unconditionally and then select the *original* bits
+//! wherever the exponent field is all-ones — the same observable result,
+//! branch-free.  The clamp compares run in the bit domain: for the
+//! non-negative magnitudes involved, IEEE ordering equals integer ordering
+//! of the bit patterns, so `|y| > max` and `|y| < min_normal` become u32
+//! compares on `y & 0x7fff_ffff`.
+
+use super::format::Format;
+use super::round::{
+    round_nearest_slice, round_stochastic_slice_keyed, SR_CHUNK,
+};
+use crate::util::rng::{DitherKey, Rng};
+
+/// Lane width of the chunked kernels (8 × f32 = one 256-bit vector).
+pub const LANES: usize = 8;
+
+/// Hoisted per-format rounding constants (bit-domain clamp bounds).
+#[derive(Clone, Copy)]
+struct Consts {
+    drop: u32,
+    half_m1: u32,
+    noise_mask: u32,
+    keep_mask: u32,
+    clamp: bool,
+    max_bits: u32,
+    min_bits: u32,
+}
+
+impl Consts {
+    fn new(fmt: Format) -> Self {
+        let drop = fmt.drop_bits();
+        Consts {
+            drop,
+            half_m1: (1u32 << (drop - 1)) - 1,
+            noise_mask: (1u32 << drop) - 1,
+            keep_mask: u32::MAX << drop,
+            clamp: fmt.exp_bits < 8,
+            max_bits: fmt.max_value().to_bits(),
+            min_bits: fmt.min_normal().to_bits(),
+        }
+    }
+}
+
+/// Exponent-field mask: all-ones exponent ⇔ `!f32::is_finite()`.
+const EXP_MASK: u32 = 0x7f80_0000;
+
+/// Clamp `y` (bit pattern of a finite-or-inf, never-NaN value) to the
+/// format's range in the bit domain; identity when `c.clamp` is false.
+#[inline(always)]
+fn clamp_bits(y: u32, c: &Consts) -> u32 {
+    if !c.clamp {
+        return y;
+    }
+    let ab = y & 0x7fff_ffff;
+    let sign = y & 0x8000_0000;
+    if ab > c.max_bits {
+        EXP_MASK | sign // ±inf, sign preserved (copysign)
+    } else if ab < c.min_bits {
+        sign // FTZ preserves the sign (IEEE signed zero)
+    } else {
+        y
+    }
+}
+
+/// One lane of round-to-nearest-even: bit algorithm of
+/// [`super::round::round_nearest`], with the non-finite pass-through as a
+/// final select instead of an early `continue`.
+#[inline(always)]
+fn rn_lane(u: u32, c: &Consts) -> u32 {
+    let lsb = (u >> c.drop) & 1;
+    let y = clamp_bits(u.wrapping_add(c.half_m1 + lsb) & c.keep_mask, c);
+    if u & EXP_MASK == EXP_MASK {
+        u
+    } else {
+        y
+    }
+}
+
+/// One lane of stochastic rounding with pre-drawn dither word `rb`.
+#[inline(always)]
+fn sr_lane(u: u32, rb: u32, c: &Consts) -> u32 {
+    let y = clamp_bits(u.wrapping_add(rb & c.noise_mask) & c.keep_mask, c);
+    if u & EXP_MASK == EXP_MASK {
+        u
+    } else {
+        y
+    }
+}
+
+/// A bound 8-lane rounding helper for hot loops that interleave arithmetic
+/// with rounding (the staged SGD passes): format constants hoisted once,
+/// then [`SimdRound::nearest8`] / [`SimdRound::stochastic8`] round one lane
+/// block at a time, bit-identically to mapping the scalar kernels over it.
+/// For fp32 both calls are no-ops (exact passthrough), matching the scalar
+/// kernels' early return.
+#[derive(Clone, Copy)]
+pub struct SimdRound {
+    c: Consts,
+    exact: bool,
+}
+
+impl SimdRound {
+    pub fn new(fmt: Format) -> Self {
+        Self {
+            // the constants are never read when `exact` (fp32 has drop 0,
+            // which would shift out of range), so substitute a harmless 1
+            c: Consts::new(if fmt.is_fp32() {
+                Format { name: "fp32-lane-dummy", exp_bits: 8, mant_bits: 22 }
+            } else {
+                fmt
+            }),
+            exact: fmt.is_fp32(),
+        }
+    }
+
+    /// Round-to-nearest-even over one lane block, in place.
+    #[inline]
+    pub fn nearest8(&self, xs: &mut [f32; LANES]) {
+        if self.exact {
+            return;
+        }
+        let mut u = [0u32; LANES];
+        for l in 0..LANES {
+            u[l] = xs[l].to_bits();
+        }
+        for l in 0..LANES {
+            xs[l] = f32::from_bits(rn_lane(u[l], &self.c));
+        }
+    }
+
+    /// Stochastic rounding over one lane block with pre-drawn dither words.
+    #[inline]
+    pub fn stochastic8(&self, xs: &mut [f32; LANES], rb: &[u32; LANES]) {
+        if self.exact {
+            return;
+        }
+        let mut u = [0u32; LANES];
+        for l in 0..LANES {
+            u[l] = xs[l].to_bits();
+        }
+        for l in 0..LANES {
+            xs[l] = f32::from_bits(sr_lane(u[l], rb[l], &self.c));
+        }
+    }
+}
+
+/// Round a slice to nearest-even in place, eight lanes per iteration.
+///
+/// Bit-identical to [`round_nearest_slice`] (hence to mapping
+/// [`super::round::round_nearest`] over the slice); the ragged tail runs
+/// through the scalar slice kernel.
+pub fn round_nearest_slice_simd(xs: &mut [f32], fmt: Format) {
+    if fmt.is_fp32() {
+        return;
+    }
+    #[cfg(feature = "simd-intrinsics")]
+    if fmt.exp_bits >= 8 && avx2::available() {
+        // SAFETY: AVX2 support verified at runtime just above.
+        unsafe { avx2::round_nearest_slice_avx2(xs, fmt) };
+        return;
+    }
+    let c = Consts::new(fmt);
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for ch in &mut chunks {
+        let mut u = [0u32; LANES];
+        for l in 0..LANES {
+            u[l] = ch[l].to_bits();
+        }
+        for l in 0..LANES {
+            ch[l] = f32::from_bits(rn_lane(u[l], &c));
+        }
+    }
+    round_nearest_slice(chunks.into_remainder(), fmt);
+}
+
+/// Stochastically round a slice in place, drawing dither from `rng`,
+/// eight lanes per iteration.
+///
+/// Bit-identical to [`super::round::round_stochastic_slice`] — including
+/// RNG consumption: dither words are drawn through the same
+/// [`SR_CHUNK`]-batched [`Rng::fill_u32`] schedule (one word per element in
+/// element order, even for fp32), so the generator stays interchangeable
+/// with both scalar paths.
+pub fn round_stochastic_slice_simd(xs: &mut [f32], fmt: Format, rng: &mut Rng) {
+    let mut bits = [0u32; SR_CHUNK];
+    if fmt.is_fp32() {
+        // keep the dither stream position identical to the scalar path
+        let mut left = xs.len();
+        while left > 0 {
+            let take = left.min(SR_CHUNK);
+            rng.fill_u32(&mut bits[..take]);
+            left -= take;
+        }
+        return;
+    }
+    let c = Consts::new(fmt);
+    for chunk in xs.chunks_mut(SR_CHUNK) {
+        let b = &mut bits[..chunk.len()];
+        rng.fill_u32(b);
+        let mut lane_pairs = chunk.chunks_exact_mut(LANES);
+        let mut off = 0usize;
+        for ch in &mut lane_pairs {
+            let mut u = [0u32; LANES];
+            for l in 0..LANES {
+                u[l] = ch[l].to_bits();
+            }
+            for l in 0..LANES {
+                ch[l] = f32::from_bits(sr_lane(u[l], b[off + l], &c));
+            }
+            off += LANES;
+        }
+        for (x, &rb) in lane_pairs.into_remainder().iter_mut().zip(&b[off..]) {
+            let y = f32::from_bits(sr_lane(x.to_bits(), rb, &c));
+            *x = y;
+        }
+    }
+}
+
+/// Stochastically round a slice in place with counter-keyed dither, eight
+/// lanes per iteration.
+///
+/// Bit-identical to [`round_stochastic_slice_keyed`]: element `j` uses
+/// dither word `key.word(base + j)`, generated eight counters at a time —
+/// the splitmix mix over `key + index·golden` is lane-independent by
+/// construction, so the `[u64; 8]` counter block autovectorizes without
+/// changing a single dither bit.
+pub fn round_stochastic_slice_keyed_simd(
+    xs: &mut [f32],
+    fmt: Format,
+    key: DitherKey,
+    base: u64,
+) {
+    if fmt.is_fp32() {
+        // counter-based dither has no stream position to maintain
+        return;
+    }
+    let c = Consts::new(fmt);
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    let mut i = 0u64;
+    for ch in &mut chunks {
+        let mut rb = [0u32; LANES];
+        for l in 0..LANES {
+            rb[l] = key.word(base.wrapping_add(i + l as u64));
+        }
+        let mut u = [0u32; LANES];
+        for l in 0..LANES {
+            u[l] = ch[l].to_bits();
+        }
+        for l in 0..LANES {
+            ch[l] = f32::from_bits(sr_lane(u[l], rb[l], &c));
+        }
+        i += LANES as u64;
+    }
+    round_stochastic_slice_keyed(
+        chunks.into_remainder(),
+        fmt,
+        key,
+        base.wrapping_add(i),
+    );
+}
+
+/// Explicit AVX2 nearest-rounding path (the fused matmul output kernel),
+/// compiled only under the `simd-intrinsics` feature on x86-64 and selected
+/// only after a runtime CPU check.  Restricted to no-clamp formats
+/// (`exp_bits >= 8`), where the algorithm is a pure
+/// add/mask/non-finite-blend over the bit patterns.
+#[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+mod avx2 {
+    use super::super::format::Format;
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    pub fn available() -> bool {
+        is_x86_feature_detected!("avx2")
+    }
+
+    /// # Safety
+    /// Caller must verify AVX2 support (see [`available`]) and pass a
+    /// format with `exp_bits >= 8` (no clamp/FTZ path).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn round_nearest_slice_avx2(xs: &mut [f32], fmt: Format) {
+        debug_assert!(fmt.exp_bits >= 8 && !fmt.is_fp32());
+        let drop = fmt.drop_bits();
+        let half_m1 = _mm256_set1_epi32(((1u32 << (drop - 1)) - 1) as i32);
+        let keep = _mm256_set1_epi32((u32::MAX << drop) as i32);
+        let one = _mm256_set1_epi32(1);
+        let expm = _mm256_set1_epi32(super::EXP_MASK as i32);
+        // variable-count shift: count lives in the low 64 bits of a __m128i
+        let dropv = _mm_cvtsi32_si128(drop as i32);
+        let mut chunks = xs.chunks_exact_mut(8);
+        for ch in &mut chunks {
+            let u = _mm256_loadu_si256(ch.as_ptr() as *const __m256i);
+            let lsb = _mm256_and_si256(_mm256_srl_epi32(u, dropv), one);
+            let add = _mm256_add_epi32(half_m1, lsb);
+            let y = _mm256_and_si256(_mm256_add_epi32(u, add), keep);
+            // non-finite lanes (exponent all-ones) keep their original bits
+            let nf = _mm256_cmpeq_epi32(_mm256_and_si256(u, expm), expm);
+            let out = _mm256_blendv_epi8(y, u, nf);
+            _mm256_storeu_si256(ch.as_mut_ptr() as *mut __m256i, out);
+        }
+        super::super::round::round_nearest_slice(chunks.into_remainder(), fmt);
+    }
+}
+
+#[cfg(all(feature = "simd-intrinsics", not(target_arch = "x86_64")))]
+mod avx2 {
+    use super::super::format::Format;
+
+    pub fn available() -> bool {
+        false
+    }
+
+    /// # Safety
+    /// Never called: [`available`] is always false off x86-64.
+    pub unsafe fn round_nearest_slice_avx2(_xs: &mut [f32], _fmt: Format) {
+        unreachable!("avx2 path is x86-64 only")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::{ALL, BF16};
+    use super::super::round::{
+        round_nearest, round_stochastic, round_stochastic_slice,
+    };
+    use super::*;
+
+    /// Wide-dynamic-range value soup including zeros, subnormal-range
+    /// magnitudes, huge magnitudes (overflow for e5 formats) and specials —
+    /// the same adversarial distribution the scalar kernels are tested on.
+    fn soup(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed, 0x50);
+        (0..n)
+            .map(|i| match i % 97 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::INFINITY,
+                3 => f32::NEG_INFINITY,
+                4 => f32::NAN,
+                _ => rng.normal() * 10f32.powi(rng.below(60) as i32 - 30),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn simd_nearest_matches_scalar_all_formats_odd_lengths() {
+        for fmt in ALL {
+            for len in [0usize, 1, 7, 8, 9, 255, 256, 257, 1023] {
+                let xs = soup(len, 0x51AD ^ len as u64);
+                let mut fast = xs.clone();
+                round_nearest_slice_simd(&mut fast, fmt);
+                for (i, (&f, &x)) in fast.iter().zip(&xs).enumerate() {
+                    let want = round_nearest(x, fmt);
+                    assert_eq!(
+                        f.to_bits(),
+                        want.to_bits(),
+                        "{} len={len} i={i} x={x}",
+                        fmt.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_stochastic_matches_scalar_and_rng_state_all_formats() {
+        for fmt in ALL {
+            for len in [0usize, 1, 7, 8, 9, 255, 256, 257, 1023] {
+                let xs = soup(len, 0x51AE ^ len as u64);
+                let mut fast = xs.clone();
+                let mut rng_fast = Rng::new(4242, len as u64);
+                let mut rng_ref = rng_fast.clone();
+                round_stochastic_slice_simd(&mut fast, fmt, &mut rng_fast);
+                let mut want = xs.clone();
+                round_stochastic_slice(&mut want, fmt, &mut rng_ref);
+                for (i, (&f, &w)) in fast.iter().zip(&want).enumerate() {
+                    assert_eq!(f.to_bits(), w.to_bits(), "{} len={len} i={i}", fmt.name);
+                }
+                // generator must land exactly where the scalar kernel leaves it
+                assert_eq!(rng_fast.next_u64(), rng_ref.next_u64(), "{} len={len}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_keyed_matches_scalar_oracle_all_formats() {
+        let key = DitherKey::new(7, 0x5352, 3, 1);
+        for fmt in ALL {
+            for len in [0usize, 1, 7, 8, 9, 255, 256, 257, 1023] {
+                let xs = soup(len, 0x51AF ^ len as u64);
+                let mut fast = xs.clone();
+                round_stochastic_slice_keyed_simd(&mut fast, fmt, key, 11);
+                for (i, (&f, &x)) in fast.iter().zip(&xs).enumerate() {
+                    let want = round_stochastic(x, fmt, key.word(11 + i as u64));
+                    assert_eq!(f.to_bits(), want.to_bits(), "{} len={len} i={i}", fmt.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_round_lane_block_matches_scalar() {
+        use super::super::format::FP32;
+        let key = DitherKey::new(3, 0x5352, 1, 0);
+        for fmt in ALL {
+            let r = SimdRound::new(fmt);
+            let xs = soup(LANES * 5, 0xB10C ^ fmt.mant_bits as u64);
+            for (ci, chunk) in xs.chunks_exact(LANES).enumerate() {
+                let mut near: [f32; LANES] = chunk.try_into().unwrap();
+                r.nearest8(&mut near);
+                let mut sto: [f32; LANES] = chunk.try_into().unwrap();
+                let mut rb = [0u32; LANES];
+                for (l, slot) in rb.iter_mut().enumerate() {
+                    *slot = key.word((ci * LANES + l) as u64);
+                }
+                r.stochastic8(&mut sto, &rb);
+                for l in 0..LANES {
+                    assert_eq!(
+                        near[l].to_bits(),
+                        round_nearest(chunk[l], fmt).to_bits(),
+                        "{} nearest lane {l}",
+                        fmt.name
+                    );
+                    assert_eq!(
+                        sto[l].to_bits(),
+                        round_stochastic(chunk[l], fmt, rb[l]).to_bits(),
+                        "{} stochastic lane {l}",
+                        fmt.name
+                    );
+                }
+            }
+        }
+        // fp32 is exact passthrough in both modes
+        let r = SimdRound::new(FP32);
+        let mut xs = [1.5f32, -0.1, 1e30, f32::INFINITY, 0.0, -0.0, 2.0, 3.0];
+        let want = xs;
+        r.nearest8(&mut xs);
+        r.stochastic8(&mut xs, &[u32::MAX; LANES]);
+        for l in 0..LANES {
+            assert_eq!(xs[l].to_bits(), want[l].to_bits());
+        }
+    }
+
+    #[test]
+    fn simd_keyed_chunking_is_invariant() {
+        let key = DitherKey::new(11, 0x5352, 9, 2);
+        let xs = soup(1000, 0xC0FFEE);
+        let mut whole = xs.clone();
+        round_stochastic_slice_keyed_simd(&mut whole, BF16, key, 0);
+        for chunk in [1usize, 3, 8, 64, 97, 256, 999] {
+            let mut pieces = xs.clone();
+            let mut off = 0usize;
+            while off < pieces.len() {
+                let end = (off + chunk).min(pieces.len());
+                round_stochastic_slice_keyed_simd(&mut pieces[off..end], BF16, key, off as u64);
+                off = end;
+            }
+            for (i, (a, b)) in pieces.iter().zip(&whole).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunk={chunk} i={i}");
+            }
+        }
+    }
+}

@@ -419,8 +419,9 @@ mod tests {
             .zip(rm.param_tensors_mut())
             .enumerate()
         {
-            assert_eq!(wa.data.len(), wb.data.len());
-            for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+            let (da, db) = (wa.to_f32_vec(), wb.to_f32_vec());
+            assert_eq!(da.len(), db.len());
+            for (ei, (x, y)) in da.iter().zip(db.iter()).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "param {pi} elem {ei} after 100 steps");
             }
         }
@@ -467,7 +468,8 @@ mod tests {
                 .zip(tr.model.param_tensors_mut())
                 .enumerate()
             {
-                for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+                let (da, db) = (wa.to_f32_vec(), wb.to_f32_vec());
+                for (ei, (x, y)) in da.iter().zip(db.iter()).enumerate() {
                     assert_eq!(
                         x.to_bits(),
                         y.to_bits(),
@@ -496,7 +498,8 @@ mod tests {
         let mut fm = fast.model;
         let mut rm = reference.model;
         for (wa, wb) in fm.param_tensors_mut().into_iter().zip(rm.param_tensors_mut()) {
-            for (x, y) in wa.data.iter().zip(wb.data.iter()) {
+            let (da, db) = (wa.to_f32_vec(), wb.to_f32_vec());
+            for (x, y) in da.iter().zip(db.iter()) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
@@ -532,7 +535,8 @@ mod tests {
             .zip(without.model.param_tensors_mut())
             .enumerate()
         {
-            for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+            let (da, db) = (wa.to_f32_vec(), wb.to_f32_vec());
+            for (ei, (x, y)) in da.iter().zip(db.iter()).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "param {pi} elem {ei}");
             }
         }

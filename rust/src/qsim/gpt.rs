@@ -498,8 +498,9 @@ mod tests {
             .zip(rm.param_tensors_mut())
             .enumerate()
         {
-            assert_eq!(wa.data.len(), wb.data.len());
-            for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+            let (da, db) = (wa.to_f32_vec(), wb.to_f32_vec());
+            assert_eq!(da.len(), db.len());
+            for (ei, (x, y)) in da.iter().zip(db.iter()).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "param {pi} elem {ei} after 50 steps");
             }
         }
@@ -550,7 +551,8 @@ mod tests {
                 .zip(tr.model.param_tensors_mut())
                 .enumerate()
             {
-                for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+                let (da, db) = (wa.to_f32_vec(), wb.to_f32_vec());
+                for (ei, (x, y)) in da.iter().zip(db.iter()).enumerate() {
                     assert_eq!(
                         x.to_bits(),
                         y.to_bits(),
@@ -586,7 +588,8 @@ mod tests {
             .into_iter()
             .zip(without.model.param_tensors_mut())
         {
-            for (x, y) in wa.data.iter().zip(wb.data.iter()) {
+            let (da, db) = (wa.to_f32_vec(), wb.to_f32_vec());
+            for (x, y) in da.iter().zip(db.iter()) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }

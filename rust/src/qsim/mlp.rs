@@ -360,7 +360,8 @@ mod tests {
             .zip(reference.model.param_tensors_mut())
             .enumerate()
         {
-            for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+            let (da, db) = (wa.to_f32_vec(), wb.to_f32_vec());
+            for (ei, (x, y)) in da.iter().zip(db.iter()).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "param {pi} elem {ei}");
             }
         }
@@ -396,7 +397,8 @@ mod tests {
             .zip(tr.model.param_tensors_mut())
             .enumerate()
         {
-            for (ei, (x, y)) in wa.data.iter().zip(wb.data.iter()).enumerate() {
+            let (da, db) = (wa.to_f32_vec(), wb.to_f32_vec());
+            for (ei, (x, y)) in da.iter().zip(db.iter()).enumerate() {
                 assert_eq!(x.to_bits(), y.to_bits(), "param {pi} elem {ei}");
             }
         }

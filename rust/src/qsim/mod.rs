@@ -27,15 +27,20 @@ pub mod verify;
 
 /// Which kernel implementations the simulator runs on.
 ///
-/// Both backends are bit-identical by construction (verified by property
-/// tests and the 100-step trainer parity test); `Reference` preserves the
-/// original scalar loops and per-step allocation behaviour so the bench can
-/// measure the vectorized path against the pre-optimization baseline.
-/// `Fast` additionally fans its kernels out over a per-trainer worker
-/// [`Pool`] when `intra_threads > 1`; because SR dither is counter-keyed
-/// (a pure function of element position), results stay bit-identical at
-/// every thread count — and to `Reference`, which always runs
-/// scalar-sequential over the same dither schedule.
+/// All backends are bit-identical by construction (verified by property
+/// tests, the differential fuzzer and the 100-step trainer parity test);
+/// `Reference` preserves the original scalar loops and per-step allocation
+/// behaviour so the bench can measure the optimized paths against the
+/// pre-optimization baseline.  `Fast` and `Simd` additionally fan their
+/// kernels out over a per-trainer worker [`Pool`] when `intra_threads > 1`;
+/// because SR dither is counter-keyed (a pure function of element
+/// position), results stay bit-identical at every thread count — and to
+/// `Reference`, which always runs scalar-sequential over the same dither
+/// schedule.  `Simd` swaps the leaf kernels (rounding slices, the matmul
+/// microkernel, the staged SGD passes) for fixed-width 8-lane chunked
+/// implementations; lane order is irrelevant to the result because every
+/// per-element operation is position-keyed, so `Simd` stays on the same
+/// digest as the other two tiers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Backend {
     /// Scalar kernels, fresh tape + per-element RNG each step (the
@@ -44,6 +49,10 @@ pub enum Backend {
     /// Tiled matmul, arena-reuse tape, batched rounding (default).
     #[default]
     Fast,
+    /// `Fast` structure with 8-wide chunked-lane leaf kernels (rounding,
+    /// matmul microkernel, SGD stage passes) the compiler autovectorizes;
+    /// explicit AVX2 intrinsics behind the `simd-intrinsics` feature.
+    Simd,
 }
 
 impl Backend {
@@ -51,6 +60,29 @@ impl Backend {
         match self {
             Backend::Reference => "reference",
             Backend::Fast => "fast",
+            Backend::Simd => "simd",
+        }
+    }
+
+    /// Whether this tier uses the pooled/arena execution structure
+    /// (tape reuse, staged slice passes, worker-pool fan-out).  Only
+    /// `Reference` keeps the scalar-sequential fresh-allocation layout.
+    pub fn pooled(&self) -> bool {
+        !matches!(self, Backend::Reference)
+    }
+
+    /// Whether this tier selects the 8-lane chunked leaf kernels.
+    pub fn simd(&self) -> bool {
+        matches!(self, Backend::Simd)
+    }
+
+    /// Parse a CLI/TOML backend name ([`Backend::name`] round-trips).
+    pub fn by_name(name: &str) -> Option<Backend> {
+        match name {
+            "reference" => Some(Backend::Reference),
+            "fast" => Some(Backend::Fast),
+            "simd" => Some(Backend::Simd),
+            _ => None,
         }
     }
 }

@@ -9,15 +9,28 @@
 //!
 //! Stochastic-rounding dither is **counter-keyed**: the word for element
 //! `i` of step `t` is `DitherKey::new(seed, STREAM, t, tensor_id).word(i)` —
-//! a pure function of position, not a draw from a sequential stream.  Both
-//! backends consume the same schedule by construction, and the `Fast` path
-//! can split the update into chunks across a worker [`Pool`] without
-//! changing a single bit of the result.
+//! a pure function of position, not a draw from a sequential stream.  All
+//! backends consume the same schedule by construction, so the `Fast` path
+//! can split the update into chunks across a worker [`Pool`] and the `Simd`
+//! path can round eight elements per lane block without changing a single
+//! bit of the result.
+//!
+//! ## Native 16-bit storage
+//!
+//! Weight and Kahan tensors may live in [`Storage::Bf16`] under the 16-bit
+//! modes (`qsim::tensor`).  `step` widens narrow buffers into optimizer-held
+//! f32 scratch for the duration of the update and narrows them back after —
+//! lossless both ways, because every value the update writes was rounded
+//! onto the format grid (a subset of the bf16 grid for every `exp=8,
+//! mant<=7` format), so results are bit-identical to f32 storage.
+//!
+//! [`Storage::Bf16`]: super::tensor::Storage
 
 use std::sync::Arc;
 
 use crate::precision::{
-    round_nearest, round_nearest_slice, round_stochastic, Format, Mode, Policy, BF16,
+    round_nearest, round_nearest_slice, round_nearest_slice_simd, round_stochastic, Format, Mode,
+    Policy, SimdRound, BF16, LANES,
 };
 use crate::util::rng::DitherKey;
 
@@ -78,10 +91,16 @@ pub struct Sgd {
     tensor_id: u64,
     /// Steps taken so far — the step coordinate of the dither key.
     step_idx: u64,
-    /// Worker pool for the chunked `Fast` update (single-threaded default).
+    /// Worker pool for the chunked `Fast`/`Simd` update (single-threaded
+    /// default).
     pool: Arc<Pool>,
     /// Per-step update-magnitude scratch (stage buffer, reused across steps).
     u_buf: Vec<f32>,
+    /// Widened views of native-16-bit weight / momentum / Kahan buffers,
+    /// reused across steps.
+    w_scratch: Vec<f32>,
+    m_scratch: Vec<f32>,
+    k_scratch: Vec<f32>,
 }
 
 /// Scalar parameters of one update, copied per step so chunk workers share
@@ -96,6 +115,8 @@ struct StepParams {
     weight_decay: f32,
     lr: f32,
     key: DitherKey,
+    /// Route span updates through the 8-wide lane kernels.
+    simd: bool,
 }
 
 impl Sgd {
@@ -111,10 +132,14 @@ impl Sgd {
             step_idx: 0,
             pool: Pool::single(),
             u_buf: Vec::new(),
+            w_scratch: Vec::new(),
+            m_scratch: Vec::new(),
+            k_scratch: Vec::new(),
         }
     }
 
-    /// Builder-style backend override (the scalar reference path).
+    /// Builder-style backend override (scalar reference / tiled fast /
+    /// vector-wide simd).
     pub fn with_backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
         self
@@ -127,8 +152,8 @@ impl Sgd {
         self
     }
 
-    /// Builder-style worker pool for the chunked `Fast` update.  Results
-    /// are bit-identical at every pool size (and to `Reference`).
+    /// Builder-style worker pool for the chunked `Fast`/`Simd` update.
+    /// Results are bit-identical at every pool size (and to `Reference`).
     pub fn with_pool(mut self, pool: Arc<Pool>) -> Self {
         self.pool = pool;
         self
@@ -166,12 +191,12 @@ impl Sgd {
     /// One update of `w` from gradient `g`.  All optimizer-internal ops are
     /// nearest-rounded in the 16-bit modes (Algorithms 2 & 3).
     ///
-    /// The fast path runs as per-stage slice passes, chunked across the
-    /// worker pool when the tensor is large enough; the reference path is
-    /// the original interleaved per-element loop.  Both consume the same
-    /// counter-keyed dither schedule (word `i` of the step's key for
-    /// element `i`), so they are bit-identical — to each other and across
-    /// every thread count.
+    /// The fast and simd paths run as per-stage slice passes, chunked
+    /// across the worker pool when the tensor is large enough; the
+    /// reference path is the original interleaved per-element loop.  All
+    /// three consume the same counter-keyed dither schedule (word `i` of
+    /// the step's key for element `i`), so they are bit-identical — to
+    /// each other and across every thread count.
     pub fn step(
         &mut self,
         w: &mut Tensor,
@@ -181,25 +206,6 @@ impl Sgd {
     ) -> UpdateStats {
         let key = DitherKey::new(self.seed, SGD_DITHER_STREAM, self.step_idx, self.tensor_id);
         self.step_idx = self.step_idx.wrapping_add(1);
-        match self.backend {
-            Backend::Fast => self.step_fast(w, state, g, lr, key),
-            Backend::Reference => self.step_reference(w, state, g, lr, key),
-        }
-    }
-
-    /// Vectorized update: per-stage slice passes over `w` / `momentum` /
-    /// `kahan` with the format constants hoisted, run whole (small tensors)
-    /// or as disjoint chunks fanned out over the pool (large tensors).
-    fn step_fast(
-        &mut self,
-        w: &mut Tensor,
-        state: &mut SgdState,
-        g: &Tensor,
-        lr: f32,
-        key: DitherKey,
-    ) -> UpdateStats {
-        let n = w.data.len();
-        debug_assert_eq!(g.data.len(), n);
         let p = StepParams {
             fmt: self.fmt,
             exact: self.mode.exact_update(),
@@ -209,21 +215,71 @@ impl Sgd {
             weight_decay: self.weight_decay,
             lr,
             key,
+            simd: self.backend.simd(),
         };
+        debug_assert!(!g.is_native16(), "gradients are always f32-stored");
+
+        // Native 16-bit storage: widen narrow buffers into optimizer-held
+        // f32 scratch for the update, narrow back after.  Lossless both
+        // ways — stored values sit on the format grid — so the result is
+        // bit-identical to f32 storage.
+        let mut w_host = std::mem::take(&mut self.w_scratch);
+        let w_narrow = widen_if_native16(Some(&*w), &mut w_host);
+        let mut m_host = std::mem::take(&mut self.m_scratch);
+        let m_narrow = widen_if_native16(state.momentum.as_ref(), &mut m_host);
+        let mut k_host = std::mem::take(&mut self.k_scratch);
+        let k_narrow = widen_if_native16(state.kahan.as_ref(), &mut k_host);
+        let stats = {
+            let ws: &mut [f32] = if w_narrow { &mut w_host } else { &mut w.data };
+            let ms: Option<&mut [f32]> = if m_narrow {
+                Some(&mut m_host)
+            } else {
+                state.momentum.as_mut().map(|t| t.data.as_mut_slice())
+            };
+            let ks: Option<&mut [f32]> = if k_narrow {
+                Some(&mut k_host)
+            } else {
+                state.kahan.as_mut().map(|t| t.data.as_mut_slice())
+            };
+            match self.backend {
+                Backend::Fast | Backend::Simd => self.step_slices(p, ws, &g.data, ms, ks),
+                Backend::Reference => step_reference_slices(p, ws, &g.data, ms, ks),
+            }
+        };
+        if w_narrow {
+            w.set_from_f32(&w_host);
+        }
+        if m_narrow {
+            state.momentum.as_mut().unwrap().set_from_f32(&m_host);
+        }
+        if k_narrow {
+            state.kahan.as_mut().unwrap().set_from_f32(&k_host);
+        }
+        self.w_scratch = w_host;
+        self.m_scratch = m_host;
+        self.k_scratch = k_host;
+        stats
+    }
+
+    /// Vectorized update: per-stage slice passes over `w` / `momentum` /
+    /// `kahan` with the format constants hoisted, run whole (small tensors)
+    /// or as disjoint chunks fanned out over the pool (large tensors).
+    fn step_slices(
+        &mut self,
+        p: StepParams,
+        w: &mut [f32],
+        g: &[f32],
+        mom: Option<&mut [f32]>,
+        kahan: Option<&mut [f32]>,
+    ) -> UpdateStats {
+        let n = w.len();
+        debug_assert_eq!(g.len(), n);
         if self.u_buf.len() != n {
             self.u_buf.resize(n, 0.0);
         }
         let threads = self.pool.threads().min(n / SGD_PAR_MIN.max(1)).max(1);
         if threads <= 1 {
-            return step_span(
-                p,
-                0,
-                &mut w.data,
-                &g.data,
-                state.momentum.as_mut().map(|t| t.data.as_mut_slice()),
-                state.kahan.as_mut().map(|t| t.data.as_mut_slice()),
-                &mut self.u_buf,
-            );
+            return step_span(p, 0, w, g, mom, kahan, &mut self.u_buf);
         }
 
         /// One worker's disjoint view of every per-element array.
@@ -239,11 +295,11 @@ impl Sgd {
 
         let per = n.div_ceil(threads);
         let mut parts: Vec<Span> = Vec::with_capacity(threads);
-        let mut w_rest = w.data.as_mut_slice();
+        let mut w_rest = w;
         let mut u_rest = self.u_buf.as_mut_slice();
-        let mut g_rest: &[f32] = &g.data;
-        let mut m_rest = state.momentum.as_mut().map(|t| t.data.as_mut_slice());
-        let mut k_rest = state.kahan.as_mut().map(|t| t.data.as_mut_slice());
+        let mut g_rest = g;
+        let mut m_rest = mom;
+        let mut k_rest = kahan;
         let mut base = 0usize;
         while base < n {
             let take = per.min(n - base);
@@ -297,72 +353,99 @@ impl Sgd {
         }
         stats
     }
+}
 
-    /// The original interleaved per-element loop (pre-vectorization code),
-    /// kept as the bit-exactness oracle and bench baseline.  Always scalar
-    /// and sequential, but addressing the same counter-keyed dither.
-    fn step_reference(
-        &mut self,
-        w: &mut Tensor,
-        state: &mut SgdState,
-        g: &Tensor,
-        lr: f32,
-        key: DitherKey,
-    ) -> UpdateStats {
-        let exact = self.mode.exact_update();
-        let fmt = self.fmt;
-        let r = |x: f32| if exact { x } else { round_nearest(x, fmt) };
-        let mut stats = UpdateStats::default();
-        for i in 0..w.data.len() {
-            let mut gi = g.data[i];
-            if self.weight_decay != 0.0 {
-                gi = r(gi + r(self.weight_decay * w.data[i]));
-            }
-            let m = if let Some(mom) = &mut state.momentum {
-                let m_new = r(r(self.momentum * mom.data[i]) + gi);
-                mom.data[i] = m_new;
-                m_new
-            } else {
-                gi
-            };
-            let u = r(lr * m);
-            let wi = w.data[i];
-            let w_new = if self.mode.kahan() {
-                // srkahan16 (Fig 11): the accumulate output is SR'd
-                let c = state.kahan.as_mut().unwrap();
-                let y = r(-u - c.data[i]);
-                let s = if self.mode.stochastic() {
-                    round_stochastic(wi + y, fmt, key.word(i as u64))
-                } else {
-                    r(wi + y)
-                };
-                c.data[i] = r(r(s - wi) - y);
-                s
-            } else if exact {
-                wi - u
-            } else if self.mode.stochastic() {
-                round_stochastic(wi - u, fmt, key.word(i as u64))
-            } else {
-                r(wi - u)
-            };
-            if u != 0.0 {
-                stats.nonzero += 1;
-                if w_new == wi {
-                    stats.cancelled += 1;
-                }
-            }
-            w.data[i] = w_new;
+/// Widen a possibly-narrow tensor into `buf`; returns whether it was narrow.
+fn widen_if_native16(t: Option<&Tensor>, buf: &mut Vec<f32>) -> bool {
+    match t {
+        Some(t) if t.is_native16() => {
+            buf.resize(t.len(), 0.0);
+            t.widen_into(buf);
+            true
         }
-        stats
+        _ => false,
     }
+}
+
+/// The original interleaved per-element loop (pre-vectorization code),
+/// kept as the bit-exactness oracle and bench baseline.  Always scalar
+/// and sequential, but addressing the same counter-keyed dither.
+fn step_reference_slices(
+    p: StepParams,
+    w: &mut [f32],
+    g: &[f32],
+    mut mom: Option<&mut [f32]>,
+    mut kahan: Option<&mut [f32]>,
+) -> UpdateStats {
+    let fmt = p.fmt;
+    let r = |x: f32| if p.exact { x } else { round_nearest(x, fmt) };
+    let mut stats = UpdateStats::default();
+    for i in 0..w.len() {
+        let mut gi = g[i];
+        if p.weight_decay != 0.0 {
+            gi = r(gi + r(p.weight_decay * w[i]));
+        }
+        let m = if let Some(mom) = mom.as_deref_mut() {
+            let m_new = r(r(p.momentum * mom[i]) + gi);
+            mom[i] = m_new;
+            m_new
+        } else {
+            gi
+        };
+        let u = r(p.lr * m);
+        let wi = w[i];
+        let w_new = if p.kahan {
+            // srkahan16 (Fig 11): the accumulate output is SR'd
+            let c = kahan.as_deref_mut().expect("kahan mode without kahan state");
+            let y = r(-u - c[i]);
+            let s = if p.stochastic {
+                round_stochastic(wi + y, fmt, p.key.word(i as u64))
+            } else {
+                r(wi + y)
+            };
+            c[i] = r(r(s - wi) - y);
+            s
+        } else if p.exact {
+            wi - u
+        } else if p.stochastic {
+            round_stochastic(wi - u, fmt, p.key.word(i as u64))
+        } else {
+            r(wi - u)
+        };
+        if u != 0.0 {
+            stats.nonzero += 1;
+            if w_new == wi {
+                stats.cancelled += 1;
+            }
+        }
+        w[i] = w_new;
+    }
+    stats
 }
 
 /// The staged update over one contiguous element span starting at global
 /// offset `base`.  Every stage is element-local and the dither word for
 /// element `base + i` is `p.key.word(base + i)`, so running the spans of a
 /// partition in any order (or in parallel) reproduces the whole-tensor pass
-/// bit-for-bit.
+/// bit-for-bit.  Dispatches to the scalar or 8-wide lane body per
+/// `p.simd`; the two are bit-identical (enforced by the parity tests).
 fn step_span(
+    p: StepParams,
+    base: u64,
+    w: &mut [f32],
+    g: &[f32],
+    mom: Option<&mut [f32]>,
+    kahan: Option<&mut [f32]>,
+    u: &mut [f32],
+) -> UpdateStats {
+    if p.simd {
+        step_span_simd(p, base, w, g, mom, kahan, u)
+    } else {
+        step_span_scalar(p, base, w, g, mom, kahan, u)
+    }
+}
+
+fn step_span_scalar(
     p: StepParams,
     base: u64,
     w: &mut [f32],
@@ -484,6 +567,250 @@ fn step_span(
     stats
 }
 
+/// The `Simd`-tier span body: the same four stages as
+/// [`step_span_scalar`], with every per-element rounding routed through
+/// the 8-wide integer lane kernels ([`SimdRound`]).  Each lane computes
+/// exactly the scalar arithmetic — IEEE f32 mul/add are deterministic per
+/// element and the lane rounders are bit-identical to the scalar kernels —
+/// so the span result is bit-for-bit the scalar span's.
+fn step_span_simd(
+    p: StepParams,
+    base: u64,
+    w: &mut [f32],
+    g: &[f32],
+    mom: Option<&mut [f32]>,
+    kahan: Option<&mut [f32]>,
+    u: &mut [f32],
+) -> UpdateStats {
+    let n = w.len();
+    debug_assert_eq!(g.len(), n);
+    debug_assert_eq!(u.len(), n);
+    let fmt = p.fmt;
+    let lane = SimdRound::new(fmt);
+    let n8 = n & !(LANES - 1);
+
+    // stage 1: effective gradient (+ optional decoupled weight decay)
+    u.copy_from_slice(g);
+    if p.weight_decay != 0.0 {
+        let wd = p.weight_decay;
+        if p.exact {
+            for (ui, &wi) in u.iter_mut().zip(w.iter()) {
+                *ui += wd * wi;
+            }
+        } else {
+            let mut i = 0;
+            while i < n8 {
+                let mut t = [0f32; LANES];
+                for (tl, &wl) in t.iter_mut().zip(&w[i..i + LANES]) {
+                    *tl = wd * wl;
+                }
+                lane.nearest8(&mut t);
+                for (tl, &ul) in t.iter_mut().zip(&u[i..i + LANES]) {
+                    *tl += ul;
+                }
+                lane.nearest8(&mut t);
+                u[i..i + LANES].copy_from_slice(&t);
+                i += LANES;
+            }
+            for i in n8..n {
+                u[i] = round_nearest(u[i] + round_nearest(wd * w[i], fmt), fmt);
+            }
+        }
+    }
+
+    // stage 2: momentum accumulation
+    if let Some(mom) = mom {
+        let mu = p.momentum;
+        if p.exact {
+            for (ui, mi) in u.iter_mut().zip(mom.iter_mut()) {
+                let m_new = mu * *mi + *ui;
+                *mi = m_new;
+                *ui = m_new;
+            }
+        } else {
+            let mut i = 0;
+            while i < n8 {
+                let mut t = [0f32; LANES];
+                for (tl, &ml) in t.iter_mut().zip(&mom[i..i + LANES]) {
+                    *tl = mu * ml;
+                }
+                lane.nearest8(&mut t);
+                for (tl, &ul) in t.iter_mut().zip(&u[i..i + LANES]) {
+                    *tl += ul;
+                }
+                lane.nearest8(&mut t);
+                mom[i..i + LANES].copy_from_slice(&t);
+                u[i..i + LANES].copy_from_slice(&t);
+                i += LANES;
+            }
+            for i in n8..n {
+                let m_new = round_nearest(round_nearest(mu * mom[i], fmt) + u[i], fmt);
+                mom[i] = m_new;
+                u[i] = m_new;
+            }
+        }
+    }
+
+    // stage 3: update magnitude u = r(lr · m) via the slice kernel
+    for ui in u.iter_mut() {
+        *ui *= p.lr;
+    }
+    if !p.exact {
+        round_nearest_slice_simd(u, fmt);
+    }
+
+    // stage 4: weight accumulate + cancellation stats, lane blocks with a
+    // scalar ragged tail; dither addressed by global element position
+    let mut stats = UpdateStats::default();
+    if p.kahan {
+        let c = kahan.expect("kahan mode without kahan state");
+        let mut i = 0;
+        while i < n8 {
+            // y = r(-u - c)
+            let mut y = [0f32; LANES];
+            for (l, yl) in y.iter_mut().enumerate() {
+                *yl = -u[i + l] - c[i + l];
+            }
+            lane.nearest8(&mut y);
+            // s = SR/RN(w + y)
+            let mut s = [0f32; LANES];
+            for (l, sl) in s.iter_mut().enumerate() {
+                *sl = w[i + l] + y[l];
+            }
+            if p.stochastic {
+                let mut rb = [0u32; LANES];
+                for (l, rbl) in rb.iter_mut().enumerate() {
+                    *rbl = p.key.word(base.wrapping_add((i + l) as u64));
+                }
+                lane.stochastic8(&mut s, &rb);
+            } else {
+                lane.nearest8(&mut s);
+            }
+            // c = r(r(s - w) - y)
+            let mut t = [0f32; LANES];
+            for (l, tl) in t.iter_mut().enumerate() {
+                *tl = s[l] - w[i + l];
+            }
+            lane.nearest8(&mut t);
+            for (tl, &yl) in t.iter_mut().zip(y.iter()) {
+                *tl -= yl;
+            }
+            lane.nearest8(&mut t);
+            c[i..i + LANES].copy_from_slice(&t);
+            for (l, &sl) in s.iter().enumerate() {
+                let ui = u[i + l];
+                if ui != 0.0 {
+                    stats.nonzero += 1;
+                    if sl == w[i + l] {
+                        stats.cancelled += 1;
+                    }
+                }
+                w[i + l] = sl;
+            }
+            i += LANES;
+        }
+        for i in n8..n {
+            let ui = u[i];
+            let wi = w[i];
+            let y = round_nearest(-ui - c[i], fmt);
+            let s = if p.stochastic {
+                round_stochastic(wi + y, fmt, p.key.word(base.wrapping_add(i as u64)))
+            } else {
+                round_nearest(wi + y, fmt)
+            };
+            c[i] = round_nearest(round_nearest(s - wi, fmt) - y, fmt);
+            if ui != 0.0 {
+                stats.nonzero += 1;
+                if s == wi {
+                    stats.cancelled += 1;
+                }
+            }
+            w[i] = s;
+        }
+    } else if p.exact {
+        for (wi, &ui) in w.iter_mut().zip(u.iter()) {
+            let w_new = *wi - ui;
+            if ui != 0.0 {
+                stats.nonzero += 1;
+                if w_new == *wi {
+                    stats.cancelled += 1;
+                }
+            }
+            *wi = w_new;
+        }
+    } else if p.stochastic {
+        let mut i = 0;
+        while i < n8 {
+            let mut x = [0f32; LANES];
+            let mut rb = [0u32; LANES];
+            for (l, xl) in x.iter_mut().enumerate() {
+                *xl = w[i + l] - u[i + l];
+            }
+            for (l, rbl) in rb.iter_mut().enumerate() {
+                *rbl = p.key.word(base.wrapping_add((i + l) as u64));
+            }
+            lane.stochastic8(&mut x, &rb);
+            for (l, &xl) in x.iter().enumerate() {
+                let ui = u[i + l];
+                if ui != 0.0 {
+                    stats.nonzero += 1;
+                    if xl == w[i + l] {
+                        stats.cancelled += 1;
+                    }
+                }
+                w[i + l] = xl;
+            }
+            i += LANES;
+        }
+        for i in n8..n {
+            let ui = u[i];
+            let wi = w[i];
+            let w_new =
+                round_stochastic(wi - ui, fmt, p.key.word(base.wrapping_add(i as u64)));
+            if ui != 0.0 {
+                stats.nonzero += 1;
+                if w_new == wi {
+                    stats.cancelled += 1;
+                }
+            }
+            w[i] = w_new;
+        }
+    } else {
+        let mut i = 0;
+        while i < n8 {
+            let mut x = [0f32; LANES];
+            for (l, xl) in x.iter_mut().enumerate() {
+                *xl = w[i + l] - u[i + l];
+            }
+            lane.nearest8(&mut x);
+            for (l, &xl) in x.iter().enumerate() {
+                let ui = u[i + l];
+                if ui != 0.0 {
+                    stats.nonzero += 1;
+                    if xl == w[i + l] {
+                        stats.cancelled += 1;
+                    }
+                }
+                w[i + l] = xl;
+            }
+            i += LANES;
+        }
+        for i in n8..n {
+            let ui = u[i];
+            let wi = w[i];
+            let w_new = round_nearest(wi - ui, fmt);
+            if ui != 0.0 {
+                stats.nonzero += 1;
+                if w_new == wi {
+                    stats.cancelled += 1;
+                }
+            }
+            w[i] = w_new;
+        }
+    }
+    stats
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -557,52 +884,60 @@ mod tests {
     }
 
     #[test]
-    fn fast_step_bit_identical_to_reference_all_modes() {
+    fn fast_and_simd_steps_bit_identical_to_reference_all_modes() {
         use crate::precision::{E8M5, FP16};
         let mut rng = Rng::new(0x51, 0);
-        for mode in Mode::ALL {
-            for fmt in [BF16, FP16, E8M5] {
-                for (momentum, wd) in [(0.0, 0.0), (0.9, 0.0), (0.9, 1e-4)] {
-                    let mut fast = Sgd::new(mode, fmt, momentum, wd, 42).with_tensor_id(7);
-                    let mut reference = Sgd::new(mode, fmt, momentum, wd, 42)
-                        .with_tensor_id(7)
-                        .with_backend(Backend::Reference);
-                    // odd length exercises ragged dither chunks
-                    let len = 515;
-                    let init: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
-                    let mut wf = Tensor::vector(init.clone());
-                    let mut wr = Tensor::vector(init);
-                    let mut sf = fast.init_state(&wf);
-                    let mut sr = reference.init_state(&wr);
-                    for step in 0..20 {
-                        // occasionally-zero gradients hit the stats guard
-                        let g = Tensor::vector(
-                            (0..len)
-                                .map(|i| {
-                                    if (i + step) % 13 == 0 {
-                                        0.0
-                                    } else {
-                                        rng.normal() * 2f32.powi(-(step as i32) - 2)
-                                    }
-                                })
-                                .collect(),
-                        );
-                        let stf = fast.step(&mut wf, &mut sf, &g, 0.05);
-                        let str_ = reference.step(&mut wr, &mut sr, &g, 0.05);
-                        assert_eq!(stf, str_, "{mode:?}/{}/mu={momentum} step {step}", fmt.name);
-                        for (i, (a, b)) in wf.data.iter().zip(&wr.data).enumerate() {
+        for backend in [Backend::Fast, Backend::Simd] {
+            for mode in Mode::ALL {
+                for fmt in [BF16, FP16, E8M5] {
+                    for (momentum, wd) in [(0.0, 0.0), (0.9, 0.0), (0.9, 1e-4)] {
+                        let mut vec = Sgd::new(mode, fmt, momentum, wd, 42)
+                            .with_tensor_id(7)
+                            .with_backend(backend);
+                        let mut reference = Sgd::new(mode, fmt, momentum, wd, 42)
+                            .with_tensor_id(7)
+                            .with_backend(Backend::Reference);
+                        // odd length exercises ragged dither chunks + lane tails
+                        let len = 515;
+                        let init: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+                        let mut wf = Tensor::vector(init.clone());
+                        let mut wr = Tensor::vector(init);
+                        let mut sf = vec.init_state(&wf);
+                        let mut sr = reference.init_state(&wr);
+                        for step in 0..20 {
+                            // occasionally-zero gradients hit the stats guard
+                            let g = Tensor::vector(
+                                (0..len)
+                                    .map(|i| {
+                                        if (i + step) % 13 == 0 {
+                                            0.0
+                                        } else {
+                                            rng.normal() * 2f32.powi(-(step as i32) - 2)
+                                        }
+                                    })
+                                    .collect(),
+                            );
+                            let stf = vec.step(&mut wf, &mut sf, &g, 0.05);
+                            let str_ = reference.step(&mut wr, &mut sr, &g, 0.05);
                             assert_eq!(
-                                a.to_bits(),
-                                b.to_bits(),
-                                "{mode:?}/{}/mu={momentum} step {step} w[{i}]",
+                                stf, str_,
+                                "{backend:?}/{mode:?}/{}/mu={momentum} step {step}",
                                 fmt.name
                             );
-                        }
-                        if let (Some(mf), Some(mr)) = (&sf.momentum, &sr.momentum) {
-                            assert_eq!(mf.data, mr.data, "{mode:?} momentum state");
-                        }
-                        if let (Some(kf), Some(kr)) = (&sf.kahan, &sr.kahan) {
-                            assert_eq!(kf.data, kr.data, "{mode:?} kahan state");
+                            for (i, (a, b)) in wf.data.iter().zip(&wr.data).enumerate() {
+                                assert_eq!(
+                                    a.to_bits(),
+                                    b.to_bits(),
+                                    "{backend:?}/{mode:?}/{}/mu={momentum} step {step} w[{i}]",
+                                    fmt.name
+                                );
+                            }
+                            if let (Some(mf), Some(mr)) = (&sf.momentum, &sr.momentum) {
+                                assert_eq!(mf.data, mr.data, "{backend:?}/{mode:?} momentum");
+                            }
+                            if let (Some(kf), Some(kr)) = (&sf.kahan, &sr.kahan) {
+                                assert_eq!(kf.data, kr.data, "{backend:?}/{mode:?} kahan");
+                            }
                         }
                     }
                 }
@@ -619,35 +954,89 @@ mod tests {
         let grads: Vec<Vec<f32>> = (0..8)
             .map(|_| (0..len).map(|_| rng.normal() * 2f32.powi(-6)).collect())
             .collect();
-        for mode in [Mode::Sr16, Mode::SrKahan16, Mode::Kahan16, Mode::Standard16] {
-            let run_with = |threads: usize| {
-                let mut opt = Sgd::bf16(mode, 0.9, 1e-4, 9)
-                    .with_tensor_id(3)
-                    .with_pool(Arc::new(Pool::new(threads)));
-                let mut w = Tensor::vector(init.clone());
-                let mut st = opt.init_state(&w);
-                let mut stats = UpdateStats::default();
-                for g in &grads {
-                    stats.merge(opt.step(&mut w, &mut st, &Tensor::vector(g.clone()), 0.05));
+        for backend in [Backend::Fast, Backend::Simd] {
+            for mode in [Mode::Sr16, Mode::SrKahan16, Mode::Kahan16, Mode::Standard16] {
+                let run_with = |threads: usize| {
+                    let mut opt = Sgd::bf16(mode, 0.9, 1e-4, 9)
+                        .with_tensor_id(3)
+                        .with_backend(backend)
+                        .with_pool(Arc::new(Pool::new(threads)));
+                    let mut w = Tensor::vector(init.clone());
+                    let mut st = opt.init_state(&w);
+                    let mut stats = UpdateStats::default();
+                    for g in &grads {
+                        stats.merge(opt.step(&mut w, &mut st, &Tensor::vector(g.clone()), 0.05));
+                    }
+                    (w, st, stats)
+                };
+                let (w1, s1, st1) = run_with(1);
+                for threads in [2usize, 3, 4] {
+                    let (wt, stt, stats_t) = run_with(threads);
+                    assert_eq!(st1, stats_t, "{backend:?}/{mode:?} stats threads={threads}");
+                    for (i, (a, b)) in w1.data.iter().zip(&wt.data).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{backend:?}/{mode:?} threads={threads} w[{i}]"
+                        );
+                    }
+                    if let (Some(ma), Some(mb)) = (&s1.momentum, &stt.momentum) {
+                        assert_eq!(ma.data, mb.data, "{backend:?}/{mode:?} momentum");
+                    }
+                    if let (Some(ka), Some(kb)) = (&s1.kahan, &stt.kahan) {
+                        assert_eq!(ka.data, kb.data, "{backend:?}/{mode:?} kahan");
+                    }
                 }
-                (w, st, stats)
-            };
-            let (w1, s1, st1) = run_with(1);
-            for threads in [2usize, 3, 4] {
-                let (wt, stt, stats_t) = run_with(threads);
-                assert_eq!(st1, stats_t, "{mode:?} stats threads={threads}");
-                for (i, (a, b)) in w1.data.iter().zip(&wt.data).enumerate() {
-                    assert_eq!(
-                        a.to_bits(),
-                        b.to_bits(),
-                        "{mode:?} threads={threads} w[{i}]"
+            }
+        }
+    }
+
+    #[test]
+    fn native16_storage_step_bit_identical_to_f32_storage() {
+        let mut rng = Rng::new(0x53, 0);
+        let len = 515;
+        for mode in [Mode::Standard16, Mode::Sr16, Mode::Kahan16, Mode::SrKahan16] {
+            for backend in [Backend::Reference, Backend::Fast, Backend::Simd] {
+                // init must sit on the bf16 grid before narrowing (the
+                // trainer rounds inits onto the format via `nn::quant`)
+                let init: Vec<f32> = (0..len)
+                    .map(|_| round_nearest(rng.normal(), BF16))
+                    .collect();
+                let mut w_f32 = Tensor::vector(init.clone());
+                let mut w_n = Tensor::vector(init);
+                w_n.narrow_to_bf16();
+                let mut opt_a = Sgd::bf16(mode, 0.0, 0.0, 5)
+                    .with_tensor_id(2)
+                    .with_backend(backend);
+                let mut opt_b = Sgd::bf16(mode, 0.0, 0.0, 5)
+                    .with_tensor_id(2)
+                    .with_backend(backend);
+                let mut sa = opt_a.init_state(&w_f32);
+                let mut sb = opt_b.init_state(&w_n);
+                if let Some(k) = sb.kahan.as_mut() {
+                    k.narrow_to_bf16();
+                }
+                for step in 0..8 {
+                    let g = Tensor::vector(
+                        (0..len)
+                            .map(|i| {
+                                ((i * 31 + step * 7) % 17) as f32 * 2f32.powi(-9) - 0.03
+                            })
+                            .collect(),
                     );
+                    let sta = opt_a.step(&mut w_f32, &mut sa, &g, 0.05);
+                    let stb = opt_b.step(&mut w_n, &mut sb, &g, 0.05);
+                    assert_eq!(sta, stb, "{mode:?}/{backend:?} stats step {step}");
                 }
-                if let (Some(ma), Some(mb)) = (&s1.momentum, &stt.momentum) {
-                    assert_eq!(ma.data, mb.data, "{mode:?} momentum threads={threads}");
+                assert!(w_n.is_native16(), "storage class must persist");
+                assert_eq!(w_n.storage_bytes() * 2, w_f32.storage_bytes());
+                let wa = w_f32.to_f32_vec();
+                let wb = w_n.to_f32_vec();
+                for (i, (a, b)) in wa.iter().zip(&wb).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{mode:?}/{backend:?} w[{i}]");
                 }
-                if let (Some(ka), Some(kb)) = (&s1.kahan, &stt.kahan) {
-                    assert_eq!(ka.data, kb.data, "{mode:?} kahan threads={threads}");
+                if let (Some(ka), Some(kb)) = (&sa.kahan, &sb.kahan) {
+                    assert_eq!(ka.to_f32_vec(), kb.to_f32_vec(), "{mode:?} kahan");
                 }
             }
         }

@@ -19,10 +19,12 @@
 
 use std::sync::Arc;
 
-use crate::precision::{round_nearest, round_nearest_slice, Format, FP32};
+use crate::precision::{
+    round_nearest, round_nearest_slice, round_nearest_slice_simd, Format, FP32,
+};
 
 use super::pool::Pool;
-use super::tensor::Tensor;
+use super::tensor::{bf16_bits_to_f32, Storage, Tensor};
 use super::Backend;
 
 /// Minimum element count before an elementwise op fans out across the
@@ -55,7 +57,8 @@ impl QPolicy {
 
     /// Round a slice in place per the policy (the per-operator output
     /// rounding).  Backends are bit-identical; `Reference` keeps the
-    /// original scalar loop for baseline timing.
+    /// original scalar loop for baseline timing, `Simd` routes through the
+    /// 8-wide lane kernel.
     #[inline]
     fn q_slice(&self, xs: &mut [f32]) {
         if self.fmt.is_fp32() {
@@ -63,6 +66,7 @@ impl QPolicy {
         }
         match self.backend {
             Backend::Fast => round_nearest_slice(xs, self.fmt),
+            Backend::Simd => round_nearest_slice_simd(xs, self.fmt),
             Backend::Reference => {
                 for x in xs {
                     *x = round_nearest(*x, self.fmt);
@@ -185,7 +189,7 @@ impl FreeList {
 /// Take an empty tensor whose storage comes from the pool (no zero fill —
 /// callers extend/resize as they produce elements).
 fn pool_tensor(free: &mut FreeList) -> Tensor {
-    Tensor { rows: 0, cols: 0, data: free.take() }
+    Tensor { rows: 0, cols: 0, data: free.take(), store: Storage::F32 }
 }
 
 fn pool_zeros(free: &mut FreeList, rows: usize, cols: usize) -> Tensor {
@@ -200,7 +204,12 @@ fn pool_copy(free: &mut FreeList, src: &Tensor) -> Tensor {
     let mut t = pool_tensor(free);
     t.rows = src.rows;
     t.cols = src.cols;
-    t.data.extend_from_slice(&src.data);
+    // the tape computes in f32: a native-16-bit source (a model-owned
+    // parameter under 16-bit storage) widens on entry, bit-exactly
+    match &src.store {
+        Storage::F32 => t.data.extend_from_slice(&src.data),
+        Storage::Bf16(h) => t.data.extend(h.iter().map(|&b| bf16_bits_to_f32(b))),
+    }
     t
 }
 
@@ -533,15 +542,19 @@ impl Tape {
     }
 
     /// Register an input: no cotangent is accumulated into it during
-    /// `backward` ([`Tape::grad`] stays `None`).
-    pub fn input(&mut self, t: Tensor) -> Var {
+    /// `backward` ([`Tape::grad`] stays `None`).  Native-16-bit tensors
+    /// widen on entry — inside the tape everything is f32.
+    pub fn input(&mut self, mut t: Tensor) -> Var {
+        t.widen_to_f32();
         self.free.note_external();
         self.push(Op::Leaf, t, false)
     }
 
     /// Register a parameter (gradient collected).  The value is used as
-    /// stored — callers keep parameters in-format themselves.
-    pub fn param(&mut self, t: Tensor) -> Var {
+    /// stored — callers keep parameters in-format themselves.  Native-16-bit
+    /// tensors widen on entry (bit-exact: narrow storage holds grid values).
+    pub fn param(&mut self, mut t: Tensor) -> Var {
+        t.widen_to_f32();
         self.free.note_external();
         self.push(Op::Leaf, t, true)
     }
@@ -585,7 +598,7 @@ impl Tape {
             let av = &self.values[a.0];
             rows = av.rows;
             cols = av.cols;
-            if policy.backend == Backend::Fast
+            if policy.backend.pooled()
                 && self.pool.threads() > 1
                 && av.data.len() >= EW_PAR_MIN
             {
@@ -602,7 +615,7 @@ impl Tape {
                 policy.q_slice(&mut data);
             }
         }
-        let out = Tensor { rows, cols, data };
+        let out = Tensor { rows, cols, data, store: Storage::F32 };
         self.push(op, out, true)
     }
 
@@ -618,7 +631,7 @@ impl Tape {
             assert_eq!(av.cols, bv.cols);
             rows = av.rows;
             cols = av.cols;
-            if policy.backend == Backend::Fast
+            if policy.backend.pooled()
                 && self.pool.threads() > 1
                 && av.data.len() >= EW_PAR_MIN
             {
@@ -638,7 +651,7 @@ impl Tape {
                 policy.q_slice(&mut data);
             }
         }
-        let out = Tensor { rows, cols, data };
+        let out = Tensor { rows, cols, data, store: Storage::F32 };
         self.push(op, out, true)
     }
 
@@ -648,7 +661,7 @@ impl Tape {
     fn push_scalar(&mut self, op: Op, v: f32) -> Var {
         let mut data = self.take_buf();
         data.push(v);
-        let mut t = Tensor { rows: 1, cols: 1, data };
+        let mut t = Tensor { rows: 1, cols: 1, data, store: Storage::F32 };
         self.policy.q_slice(&mut t.data);
         self.push(op, t, true)
     }
@@ -657,15 +670,24 @@ impl Tape {
         self.check(a);
         self.check(b);
         match self.policy.backend {
-            Backend::Fast => {
-                let mut out = Tensor { rows: 0, cols: 0, data: self.take_buf() };
+            Backend::Fast | Backend::Simd => {
+                let mut out = pool_tensor(&mut self.free);
                 let fuse = self.policy.fuse_fmt();
-                self.values[a.0].matmul_into_pooled(
-                    &self.values[b.0],
-                    &mut out,
-                    fuse,
-                    &self.pool,
-                );
+                if self.policy.backend.simd() {
+                    self.values[a.0].matmul_into_pooled_simd(
+                        &self.values[b.0],
+                        &mut out,
+                        fuse,
+                        &self.pool,
+                    );
+                } else {
+                    self.values[a.0].matmul_into_pooled(
+                        &self.values[b.0],
+                        &mut out,
+                        fuse,
+                        &self.pool,
+                    );
+                }
                 self.push(Op::MatMul(a, b), out, true)
             }
             Backend::Reference => {
@@ -700,7 +722,7 @@ impl Tape {
             }
         }
         let (rows, cols) = (self.values[a.0].rows, self.values[a.0].cols);
-        let mut out = Tensor { rows, cols, data };
+        let mut out = Tensor { rows, cols, data, store: Storage::F32 };
         self.policy.q_slice(&mut out.data);
         self.push(Op::AddRow(a, bias), out, true)
     }
@@ -731,15 +753,24 @@ impl Tape {
         self.check(w);
         self.check(b);
         let mut out = match self.policy.backend {
-            Backend::Fast => {
-                let mut out = Tensor { rows: 0, cols: 0, data: self.take_buf() };
+            Backend::Fast | Backend::Simd => {
+                let mut out = pool_tensor(&mut self.free);
                 let fuse = self.policy.fuse_fmt();
-                self.values[x.0].matmul_into_pooled(
-                    &self.values[w.0],
-                    &mut out,
-                    fuse,
-                    &self.pool,
-                );
+                if self.policy.backend.simd() {
+                    self.values[x.0].matmul_into_pooled_simd(
+                        &self.values[w.0],
+                        &mut out,
+                        fuse,
+                        &self.pool,
+                    );
+                } else {
+                    self.values[x.0].matmul_into_pooled(
+                        &self.values[w.0],
+                        &mut out,
+                        fuse,
+                        &self.pool,
+                    );
+                }
                 out
             }
             Backend::Reference => {
@@ -801,7 +832,7 @@ impl Tape {
         for &i in &idx {
             data.extend_from_slice(&tv.data[i * cols..(i + 1) * cols]);
         }
-        let out = Tensor { rows: idx.len(), cols, data };
+        let out = Tensor { rows: idx.len(), cols, data, store: Storage::F32 };
         // gather is a memory op: values already in-format, no rounding
         self.push(Op::Embed { table, idx }, out, true)
     }
@@ -828,9 +859,12 @@ impl Tape {
     pub fn matmul_nt(&mut self, a: Var, b: Var) -> Var {
         self.check(a);
         self.check(b);
-        let mut out = Tensor { rows: 0, cols: 0, data: self.take_buf() };
+        let mut out = pool_tensor(&mut self.free);
         match self.policy.backend {
-            Backend::Fast => {
+            // `Simd` shares the tiled NT kernel: an 8-wide NT microkernel
+            // would need per-output partial sums in a different accumulation
+            // order, breaking bit-identity with the reference loop
+            Backend::Fast | Backend::Simd => {
                 self.values[a.0].matmul_nt_into_pooled(&self.values[b.0], &mut out, &self.pool);
             }
             Backend::Reference => {
@@ -855,7 +889,7 @@ impl Tape {
             cols = av.cols;
             data.resize(av.data.len(), 0.0);
             let src = &av.data;
-            if policy.backend == Backend::Fast
+            if policy.backend.pooled()
                 && self.pool.threads() > 1
                 && av.data.len() >= EW_PAR_MIN
             {
@@ -872,7 +906,7 @@ impl Tape {
                 layernorm_rows(src, cols, eps, &mut data, policy);
             }
         }
-        let out = Tensor { rows, cols, data };
+        let out = Tensor { rows, cols, data, store: Storage::F32 };
         self.push(Op::LayerNorm { x: a, eps }, out, true)
     }
 
@@ -907,12 +941,12 @@ impl Tape {
         data.resize(rows * d, 0.0);
         // prob storage comes from (and returns to, via reset) the pool —
         // take_buf clears, so the resize zero-fills every element
-        let mut probs = Tensor { rows, cols: t_len, data: self.take_buf() };
+        let mut probs = Tensor { rows, cols: t_len, data: self.take_buf(), store: Storage::F32 };
         probs.data.resize(rows * t_len, 0.0);
         {
             let (qd, kd, vd) =
                 (&self.values[q.0].data, &self.values[k.0].data, &self.values[v.0].data);
-            let engage = policy.backend == Backend::Fast
+            let engage = policy.backend.pooled()
                 && self.pool.threads() > 1
                 && seqs >= 2
                 && seqs * t_len * t_len * d >= ATTN_PAR_MIN;
@@ -960,7 +994,7 @@ impl Tape {
                 );
             }
         }
-        let out = Tensor { rows, cols: d, data };
+        let out = Tensor { rows, cols: d, data, store: Storage::F32 };
         self.push(Op::CausalAttn { q, k, v, seqs, probs }, out, true)
     }
 
@@ -981,7 +1015,7 @@ impl Tape {
             let cols = lv.cols;
             let src = &lv.data;
             let tg = &targets;
-            if self.policy.backend == Backend::Fast
+            if self.policy.backend.pooled()
                 && self.pool.threads() > 1
                 && lv.data.len() >= EW_PAR_MIN
             {
@@ -1027,7 +1061,7 @@ impl Tape {
             }
             off += pv.cols;
         }
-        let out = Tensor { rows, cols: total, data };
+        let out = Tensor { rows, cols: total, data, store: Storage::F32 };
         self.push(Op::ConcatCols(parts), out, true)
     }
 
@@ -1167,6 +1201,15 @@ impl Tape {
         let policy = *policy;
         let pool: &Pool = pool;
         let rg: &[bool] = requires_grad;
+        // pooled cotangent matmul with the backend's microkernel (no fused
+        // rounding in backward: `accum` rounds at the operator boundary)
+        let mm = |x: &Tensor, y: &Tensor, out: &mut Tensor| {
+            if policy.backend.simd() {
+                x.matmul_into_pooled_simd(y, out, None, pool);
+            } else {
+                x.matmul_into_pooled(y, out, None, pool);
+            }
+        };
         for i in (0..=root.0).rev() {
             let Some(g) = grads[i].take() else { continue };
             match &ops[i] {
@@ -1174,7 +1217,7 @@ impl Tape {
                 Op::MatMul(a, b) => {
                     let (a, b) = (*a, *b);
                     match policy.backend {
-                        Backend::Fast => {
+                        Backend::Fast | Backend::Simd => {
                             // da = g·bᵀ, db = aᵀ·g, transposes in pooled
                             // scratch; a no-grad operand (a tape input) skips
                             // its cotangent matmul entirely
@@ -1182,7 +1225,7 @@ impl Tape {
                                 let mut bt = pool_tensor(free);
                                 values[b.0].transpose_into(&mut bt);
                                 let mut da = pool_tensor(free);
-                                g.matmul_into_pooled(&bt, &mut da, None, pool);
+                                mm(&g, &bt, &mut da);
                                 free.put(bt.data);
                                 accum(policy, rg, grads, free, a, da);
                             }
@@ -1190,7 +1233,7 @@ impl Tape {
                                 let mut at = pool_tensor(free);
                                 values[a.0].transpose_into(&mut at);
                                 let mut db = pool_tensor(free);
-                                at.matmul_into_pooled(&g, &mut db, None, pool);
+                                mm(&at, &g, &mut db);
                                 free.put(at.data);
                                 accum(policy, rg, grads, free, b, db);
                             }
@@ -1257,12 +1300,12 @@ impl Tape {
                     }
                     accum(policy, rg, grads, free, b, db);
                     match policy.backend {
-                        Backend::Fast => {
+                        Backend::Fast | Backend::Simd => {
                             if rg[x.0] {
                                 let mut wt = pool_tensor(free);
                                 values[w.0].transpose_into(&mut wt);
                                 let mut dx = pool_tensor(free);
-                                g1.matmul_into_pooled(&wt, &mut dx, None, pool);
+                                mm(&g1, &wt, &mut dx);
                                 free.put(wt.data);
                                 accum(policy, rg, grads, free, x, dx);
                             }
@@ -1270,7 +1313,7 @@ impl Tape {
                                 let mut xt = pool_tensor(free);
                                 values[x.0].transpose_into(&mut xt);
                                 let mut dw = pool_tensor(free);
-                                xt.matmul_into_pooled(&g1, &mut dw, None, pool);
+                                mm(&xt, &g1, &mut dw);
                                 free.put(xt.data);
                                 accum(policy, rg, grads, free, w, dw);
                             }
@@ -1388,17 +1431,17 @@ impl Tape {
                     // out = a @ bᵀ  ⇒  da = g @ b,  db = gᵀ @ a
                     let (a, b) = (*a, *b);
                     match policy.backend {
-                        Backend::Fast => {
+                        Backend::Fast | Backend::Simd => {
                             if rg[a.0] {
                                 let mut da = pool_tensor(free);
-                                g.matmul_into_pooled(&values[b.0], &mut da, None, pool);
+                                mm(&g, &values[b.0], &mut da);
                                 accum(policy, rg, grads, free, a, da);
                             }
                             if rg[b.0] {
                                 let mut gt = pool_tensor(free);
                                 g.transpose_into(&mut gt);
                                 let mut db = pool_tensor(free);
-                                gt.matmul_into_pooled(&values[a.0], &mut db, None, pool);
+                                mm(&gt, &values[a.0], &mut db);
                                 free.put(gt.data);
                                 accum(policy, rg, grads, free, b, db);
                             }
@@ -2090,6 +2133,15 @@ mod tests {
         for (i, (a, b)) in gr.data.iter().zip(&g1.data).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "reference grad[{i}]");
         }
+        for threads in [1usize, 4] {
+            let pool = if threads == 1 { Pool::single() } else { Arc::new(Pool::new(threads)) };
+            let mut st = Tape::with_pool(QPolicy::with_backend(BF16, Backend::Simd), pool);
+            let (ls, gs) = build(&mut st);
+            assert_eq!(ls.to_bits(), l1.to_bits(), "simd backend loss threads={threads}");
+            for (i, (a, b)) in gs.data.iter().zip(&g1.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "simd threads={threads} grad[{i}]");
+            }
+        }
     }
 
     /// The fused affine panel must reproduce the unfused
@@ -2137,6 +2189,8 @@ mod tests {
                     (Backend::Fast, 1),
                     (Backend::Fast, 4),
                     (Backend::Reference, 1),
+                    (Backend::Simd, 1),
+                    (Backend::Simd, 4),
                 ] {
                     let pool = if threads == 1 {
                         Pool::single()

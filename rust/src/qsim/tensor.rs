@@ -3,11 +3,28 @@
 //! Deliberately minimal: the simulator exists to reproduce the paper's
 //! numerical behaviour (per-operator output rounding with fp32 FMAC
 //! accumulation), not to be a general array library.  Row-major storage.
+//!
+//! ## Native 16-bit storage
+//!
+//! Persistent training state (weights, momentum, Kahan compensation) under
+//! the 16-bit modes holds values that are *exactly representable* on the
+//! bf16 grid — the optimizer rounds every write onto the storage format and
+//! init is quantised.  [`Storage::Bf16`] stores those buffers as the top 16
+//! bits of their f32 patterns (`Vec<u16>`, half the bytes), so the paper's
+//! 2×-memory claim is measured, not modeled.  Narrowing is lossless by
+//! construction (widen-on-read reproduces the identical f32 bits), which is
+//! what keeps every backend digest unchanged when storage narrows.  Compute
+//! tensors (activations, gradients, tape arena buffers) stay [`Storage::F32`].
 
 use crate::precision::{round_nearest_slice, Format};
 use crate::util::rng::Rng;
 
 use super::pool::Pool;
+
+/// j-register-block width of the SIMD matmul microkernel: eight f32
+/// accumulators held in registers across the whole k loop (one 256-bit
+/// vector).
+const MM_SIMD_JW: usize = 8;
 
 /// k-panel height: rows of `other` streamed per tile (64 rows × ≤256 cols of
 /// f32 fits L1 alongside the output panel).
@@ -19,51 +36,182 @@ const MM_NB: usize = 256;
 /// than the whole product).
 const MM_PAR_MIN: usize = 16_384;
 
+/// Physical representation of a tensor's element buffer.
+///
+/// `F32` is the default for everything the tape computes with.  `Bf16`
+/// holds bf16 bit patterns (top 16 bits of the f32 pattern) and is used for
+/// persistent training state whose values are in-format by construction —
+/// see the module docs.  Conversion helpers: [`Tensor::narrow_to_bf16`],
+/// [`Tensor::widen_to_f32`], [`Tensor::to_f32_vec`],
+/// [`Tensor::set_from_f32`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum Storage {
+    /// Full-precision buffer — lives in [`Tensor::data`].
+    #[default]
+    F32,
+    /// Native 16-bit buffer (bf16 bit patterns); [`Tensor::data`] is empty.
+    Bf16(Vec<u16>),
+}
+
+/// Widening read: bf16 bits → the f32 whose top half they are.
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Narrowing write by truncation — lossless iff `x` is on the bf16 grid
+/// (which persistent 16-bit training state is, by construction).
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    (x.to_bits() >> 16) as u16
+}
+
 /// Dense row-major tensor, rank 1 or 2 (a rank-1 tensor has rows == 1).
+///
+/// `data` holds the elements when `store` is [`Storage::F32`] (the default
+/// everywhere except narrowed training state); direct `data` access on a
+/// narrowed tensor sees an empty buffer — go through [`Tensor::to_f32_vec`]
+/// / [`Tensor::set_from_f32`] or widen first.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub rows: usize,
     pub cols: usize,
     pub data: Vec<f32>,
+    pub store: Storage,
 }
 
 impl Tensor {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Self { rows, cols, data: vec![0.0; rows * cols] }
+        Self { rows, cols, data: vec![0.0; rows * cols], store: Storage::F32 }
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
-        Self { rows, cols, data }
+        Self { rows, cols, data, store: Storage::F32 }
     }
 
     pub fn vector(data: Vec<f32>) -> Self {
-        Self { rows: 1, cols: data.len(), data }
+        Self { rows: 1, cols: data.len(), data, store: Storage::F32 }
     }
 
     pub fn scalar(v: f32) -> Self {
-        Self { rows: 1, cols: 1, data: vec![v] }
+        Self { rows: 1, cols: 1, data: vec![v], store: Storage::F32 }
     }
 
     /// Standard-normal init scaled by `scale`.
     pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {
         let data = (0..rows * cols).map(|_| rng.normal() * scale).collect();
-        Self { rows, cols, data }
+        Self { rows, cols, data, store: Storage::F32 }
     }
 
     /// Uniform init in [lo, hi).
     pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
         let data = (0..rows * cols).map(|_| rng.uniform_in(lo, hi)).collect();
-        Self { rows, cols, data }
+        Self { rows, cols, data, store: Storage::F32 }
     }
 
     #[inline]
     pub fn len(&self) -> usize {
-        self.data.len()
+        match &self.store {
+            Storage::F32 => self.data.len(),
+            Storage::Bf16(h) => h.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
+    }
+
+    /// Whether this tensor stores its elements in a native 16-bit buffer.
+    #[inline]
+    pub fn is_native16(&self) -> bool {
+        matches!(self.store, Storage::Bf16(_))
+    }
+
+    /// Measured bytes of the element buffer as allocated — 4 per element
+    /// for [`Storage::F32`], 2 for [`Storage::Bf16`].  This is the
+    /// *measured* side of the hwcost memory model.
+    pub fn storage_bytes(&self) -> u64 {
+        match &self.store {
+            Storage::F32 => self.data.len() as u64 * 4,
+            Storage::Bf16(h) => h.len() as u64 * 2,
+        }
+    }
+
+    /// Narrow the element buffer to native bf16 storage.  Every value must
+    /// already be on the bf16 grid (debug-asserted): narrowing is a
+    /// representation change, never a rounding step — digests are invariant
+    /// under it.  No-op if already narrow.
+    pub fn narrow_to_bf16(&mut self) {
+        if self.is_native16() {
+            return;
+        }
+        let h: Vec<u16> = self
+            .data
+            .iter()
+            .map(|&x| {
+                let h = f32_to_bf16_bits(x);
+                debug_assert_eq!(
+                    bf16_bits_to_f32(h).to_bits(),
+                    x.to_bits(),
+                    "narrowing a value not on the bf16 grid: {x}"
+                );
+                h
+            })
+            .collect();
+        self.data = Vec::new();
+        self.store = Storage::Bf16(h);
+    }
+
+    /// Widen a narrow buffer back to f32 storage in place.  No-op for f32
+    /// tensors.  Lossless (bf16 is a value subset of f32).
+    pub fn widen_to_f32(&mut self) {
+        if let Storage::Bf16(h) = std::mem::take(&mut self.store) {
+            self.data = h.iter().map(|&b| bf16_bits_to_f32(b)).collect();
+        }
+    }
+
+    /// Widened copy of the element buffer regardless of storage.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match &self.store {
+            Storage::F32 => self.data.clone(),
+            Storage::Bf16(h) => h.iter().map(|&b| bf16_bits_to_f32(b)).collect(),
+        }
+    }
+
+    /// Widen the element buffer into a caller-owned scratch slice
+    /// (`dst.len()` must equal [`Tensor::len`]); allocation-free on the
+    /// steady-state optimizer path.
+    pub fn widen_into(&self, dst: &mut [f32]) {
+        match &self.store {
+            Storage::F32 => dst.copy_from_slice(&self.data),
+            Storage::Bf16(h) => {
+                for (d, &b) in dst.iter_mut().zip(h.iter()) {
+                    *d = bf16_bits_to_f32(b);
+                }
+            }
+        }
+    }
+
+    /// Storage-aware element write: copies `src` into the buffer, narrowing
+    /// by truncation when the tensor is native-16.  `src.len()` must equal
+    /// [`Tensor::len`]; values must be in-format for narrow tensors (same
+    /// losslessness contract as [`Tensor::narrow_to_bf16`]).
+    pub fn set_from_f32(&mut self, src: &[f32]) {
+        match &mut self.store {
+            Storage::F32 => self.data.copy_from_slice(src),
+            Storage::Bf16(h) => {
+                assert_eq!(h.len(), src.len(), "set_from_f32 length mismatch");
+                for (d, &x) in h.iter_mut().zip(src.iter()) {
+                    debug_assert_eq!(
+                        bf16_bits_to_f32(f32_to_bf16_bits(x)).to_bits(),
+                        x.to_bits(),
+                        "writing a value not on the bf16 grid: {x}"
+                    );
+                    *d = f32_to_bf16_bits(x);
+                }
+            }
+        }
     }
 
     #[inline]
@@ -192,6 +340,98 @@ impl Tensor {
         });
     }
 
+    /// [`Tensor::matmul_into`] through the SIMD microkernel
+    /// ([`Tensor::mm_rows_simd`]): 8-wide register-blocked j panels with the
+    /// same per-element ascending-k accumulation and zero-skip, so the
+    /// result is bit-identical to both other kernels.
+    pub fn matmul_into_simd(&self, other: &Tensor, out: &mut Tensor, round: Option<Format>) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, n) = (self.rows, other.cols);
+        out.rows = m;
+        out.cols = n;
+        out.data.clear();
+        out.data.resize(m * n, 0.0);
+        self.mm_rows_simd(other, 0, &mut out.data, round);
+    }
+
+    /// SIMD microkernel for one contiguous band of output rows: the j loop
+    /// is register-blocked [`MM_SIMD_JW`] columns wide, with the eight f32
+    /// accumulators living in one vector register across the entire k loop
+    /// (the tiled kernel re-reads its output panel from cache every k
+    /// iteration instead).  Each output element still accumulates its k
+    /// terms in strictly ascending order with the same `a == 0` skip, and
+    /// fused output rounding goes through the 8-lane rounding kernel — so
+    /// the band is bit-identical to [`Tensor::mm_rows`] and to
+    /// [`Tensor::matmul_reference`].
+    fn mm_rows_simd(&self, other: &Tensor, row0: usize, band: &mut [f32], round: Option<Format>) {
+        use crate::precision::round_nearest_slice_simd;
+        let (k, n) = (self.cols, other.cols);
+        if n == 0 {
+            return;
+        }
+        debug_assert_eq!(band.len() % n, 0);
+        for (bi, orow) in band.chunks_exact_mut(n).enumerate() {
+            let i = row0 + bi;
+            let arow = &self.data[i * k..(i + 1) * k];
+            let mut j0 = 0usize;
+            while j0 < n {
+                let jw = (n - j0).min(MM_SIMD_JW);
+                let mut acc = [0f32; MM_SIMD_JW];
+                for (kk, &a) in arow.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n + j0..kk * n + j0 + jw];
+                    for (l, &b) in brow.iter().enumerate() {
+                        acc[l] += a * b;
+                    }
+                }
+                orow[j0..j0 + jw].copy_from_slice(&acc[..jw]);
+                j0 += jw;
+            }
+            if let Some(fmt) = round {
+                round_nearest_slice_simd(orow, fmt);
+            }
+        }
+    }
+
+    /// [`Tensor::matmul_into_simd`] with the output rows fanned out across
+    /// a worker [`Pool`] in contiguous bands (same banding and threshold as
+    /// [`Tensor::matmul_into_pooled`]); bit-identical at every thread count.
+    pub fn matmul_into_pooled_simd(
+        &self,
+        other: &Tensor,
+        out: &mut Tensor,
+        round: Option<Format>,
+        pool: &Pool,
+    ) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        if pool.threads() <= 1 || m < 2 || m * k * n < MM_PAR_MIN {
+            self.matmul_into_simd(other, out, round);
+            return;
+        }
+        out.rows = m;
+        out.cols = n;
+        out.data.clear();
+        out.data.resize(m * n, 0.0);
+        let t = pool.threads().min(m);
+        let rows_per = m.div_ceil(t);
+        let mut bands: Vec<(usize, &mut [f32])> = Vec::with_capacity(t);
+        let mut rest = out.data.as_mut_slice();
+        let mut row0 = 0usize;
+        while row0 < m {
+            let take = rows_per.min(m - row0);
+            let (band, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
+            bands.push((row0, band));
+            rest = tail;
+            row0 += take;
+        }
+        pool.run_parts(bands, |(row0, band)| {
+            self.mm_rows_simd(other, *row0, &mut **band, round);
+        });
+    }
+
     /// `self @ otherᵀ` with f32 FMAC accumulation (no transposed copy):
     /// `out[i][j] = Σ_k self[i,k] · other[j,k]`.  The tied-softmax output
     /// projection (`logits = x @ embedᵀ`) runs through this so weight tying
@@ -313,6 +553,7 @@ impl Tensor {
             rows: self.rows,
             cols: self.cols,
             data: self.data.iter().map(|&x| f(x)).collect(),
+            store: Storage::F32,
         }
     }
 
@@ -329,6 +570,7 @@ impl Tensor {
                 .zip(&other.data)
                 .map(|(&a, &b)| f(a, b))
                 .collect(),
+            store: Storage::F32,
         }
     }
 }
@@ -418,6 +660,115 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn simd_matmul_bit_identical_to_reference_with_and_without_rounding() {
+        use crate::precision::BF16;
+        let mut rng = Rng::new(0x7A9, 0);
+        // odd/unaligned shapes straddling the 8-wide register block
+        for (m, k, n) in [
+            (1, 1, 1),
+            (3, 5, 7),
+            (2, 63, 65),
+            (4, 64, 256),
+            (5, 65, 257),
+            (2, 200, 300),
+            (7, 9, 8),
+        ] {
+            let mut a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            // sprinkle zeros to exercise the zero-skip path
+            for i in 0..a.data.len() {
+                if i % 7 == 0 {
+                    a.data[i] = 0.0;
+                }
+            }
+            for round in [None, Some(BF16)] {
+                let mut simd = Tensor::zeros(0, 0);
+                a.matmul_into_simd(&b, &mut simd, round);
+                let mut reference = a.matmul_reference(&b);
+                if let Some(fmt) = round {
+                    round_nearest_slice(&mut reference.data, fmt);
+                }
+                assert_eq!(simd.rows, reference.rows);
+                assert_eq!(simd.cols, reference.cols);
+                for (i, (x, y)) in simd.data.iter().zip(&reference.data).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n}) round={round:?} elem {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_simd_matmul_bit_identical_at_every_thread_count() {
+        use crate::precision::BF16;
+        let mut rng = Rng::new(0x7AA, 0);
+        for (m, k, n) in [(1, 8, 8), (3, 5, 7), (7, 64, 64), (33, 96, 50), (128, 64, 40)] {
+            let a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            for round in [None, Some(BF16)] {
+                let mut seq = Tensor::zeros(0, 0);
+                a.matmul_into_simd(&b, &mut seq, round);
+                for threads in [1usize, 2, 3, 4] {
+                    let pool = Pool::new(threads);
+                    let mut par = Tensor::zeros(0, 0);
+                    a.matmul_into_pooled_simd(&b, &mut par, round, &pool);
+                    assert_eq!(par.rows, seq.rows);
+                    assert_eq!(par.cols, seq.cols);
+                    for (i, (x, y)) in par.data.iter().zip(&seq.data).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "({m},{k},{n}) threads={threads} round={round:?} elem {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_storage_round_trip_is_lossless_for_in_format_values() {
+        use crate::precision::{round_nearest, BF16, E8M1, E8M5};
+        let mut rng = Rng::new(0x7AB, 0);
+        for fmt in [BF16, E8M5, E8M1] {
+            let mut t = Tensor::randn(7, 9, 1.0, &mut rng);
+            for x in &mut t.data {
+                *x = round_nearest(*x, fmt);
+            }
+            let want = t.data.clone();
+            assert_eq!(t.storage_bytes(), 7 * 9 * 4);
+            t.narrow_to_bf16();
+            assert!(t.is_native16());
+            assert_eq!(t.len(), 63);
+            assert_eq!(t.storage_bytes(), 7 * 9 * 2, "{}: half the bytes", fmt.name);
+            // widened reads reproduce the identical bits
+            for (i, (a, b)) in t.to_f32_vec().iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} elem {i}", fmt.name);
+            }
+            // storage-aware writes round-trip too
+            let updated: Vec<f32> =
+                want.iter().map(|&x| round_nearest(x * 0.5, fmt)).collect();
+            t.set_from_f32(&updated);
+            for (i, (a, b)) in t.to_f32_vec().iter().zip(&updated).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} write elem {i}", fmt.name);
+            }
+            t.widen_to_f32();
+            assert!(!t.is_native16());
+            assert_eq!(t.data, updated);
+        }
+    }
+
+    #[test]
+    fn widen_into_matches_to_f32_vec() {
+        let mut t = Tensor::vector(vec![1.0, -2.0, 0.5, 0.0]);
+        let mut dst = vec![0.0f32; 4];
+        t.widen_into(&mut dst);
+        assert_eq!(dst, t.to_f32_vec());
+        t.narrow_to_bf16();
+        t.widen_into(&mut dst);
+        assert_eq!(dst, t.to_f32_vec());
     }
 
     #[test]

@@ -5,8 +5,9 @@
 //! formats):
 //!
 //! 1. **Backend parity** — `Backend::Fast` at 1 thread is the baseline;
-//!    `Fast` at 4 threads, `Reference` at 1 and 4 threads must match it
-//!    bit-for-bit on every node value, every gradient, and the loss.
+//!    `Fast` at 4 threads, `Reference` at 1 and 4 threads, and `Simd` at
+//!    1 and 4 threads must match it bit-for-bit on every node value,
+//!    every gradient, and the loss.
 //! 2. **Gradient truth** — at fp32, analytic gradients must agree with
 //!    dual-step central finite differences (`h = 1e-3` and `5e-4`): a
 //!    point only *fails* when the two FD estimates agree with each other
@@ -135,9 +136,13 @@ pub fn check_case(case: &Case) -> Result<CaseStats, String> {
     for fmt in sweep_formats() {
         let base = exec::run(prog, leaves, QPolicy::with_backend(fmt, Backend::Fast), 1)
             .map_err(|e| format!("replay failed [{} fast t1]: {e}", fmt.name))?;
-        for (backend, threads) in
-            [(Backend::Fast, 4), (Backend::Reference, 1), (Backend::Reference, 4)]
-        {
+        for (backend, threads) in [
+            (Backend::Fast, 4),
+            (Backend::Reference, 1),
+            (Backend::Reference, 4),
+            (Backend::Simd, 1),
+            (Backend::Simd, 4),
+        ] {
             let cell = format!("{} {} t{threads}", fmt.name, backend.name());
             let alt = exec::run(prog, leaves, QPolicy::with_backend(fmt, backend), threads)
                 .map_err(|e| format!("replay failed [{cell}]: {e}"))?;

@@ -182,7 +182,8 @@ pub fn validate(
     leaves: &[Tensor],
 ) -> Result<u64, String> {
     let fmts = [FP32, BF16, FP16, E8M5];
-    let combos = [(Backend::Fast, 1), (Backend::Fast, 4), (Backend::Reference, 1)];
+    let combos =
+        [(Backend::Fast, 1), (Backend::Fast, 4), (Backend::Reference, 1), (Backend::Simd, 1)];
     let mut checks = 0u64;
     for fmt in fmts {
         for (backend, threads) in combos {

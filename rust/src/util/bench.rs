@@ -141,6 +141,46 @@ pub fn write_bench_json(
     std::fs::write(path, Json::Obj(root).to_string())
 }
 
+/// Merge bench results into an existing `BENCH_*.json` artifact instead of
+/// clobbering it: rows with the same `name` (and derived keys with the same
+/// key) are replaced, everything else is preserved.  Lets independent bench
+/// binaries (`qsim_step`, `rounding`) contribute to one artifact.  A
+/// missing or unparseable file degrades to a plain write.
+pub fn merge_bench_json(
+    path: impl AsRef<std::path::Path>,
+    benches: &[BenchResult],
+    derived: &[(String, f64)],
+) -> std::io::Result<()> {
+    let existing = std::fs::read_to_string(path.as_ref())
+        .ok()
+        .and_then(|text| Json::parse(&text).ok());
+    let Some(old) = existing else {
+        return write_bench_json(path, benches, derived);
+    };
+    // keep old rows that the new run did not re-measure, in their order
+    let mut rows: Vec<Json> = Vec::new();
+    if let Some(Json::Arr(old_rows)) = old.get("benches") {
+        for row in old_rows {
+            let name = row.get_str("name").unwrap_or_default();
+            if !benches.iter().any(|b| b.name == name) {
+                rows.push(row.clone());
+            }
+        }
+    }
+    rows.extend(benches.iter().map(BenchResult::to_json));
+    let mut d: BTreeMap<String, Json> = match old.get("derived") {
+        Some(Json::Obj(o)) => o.clone(),
+        _ => BTreeMap::new(),
+    };
+    for (k, v) in derived {
+        d.insert(k.clone(), Json::Num(*v));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("benches".to_string(), Json::Arr(rows));
+    root.insert("derived".to_string(), Json::Obj(d));
+    std::fs::write(path, Json::Obj(root).to_string())
+}
+
 /// Throughput helper: elements processed per iteration → Melem/s line.
 pub fn throughput(r: &BenchResult, elems_per_iter: usize) {
     let meps = elems_per_iter as f64 / r.median_ns * 1e3;
@@ -182,6 +222,46 @@ mod tests {
             parsed.get("derived").and_then(|d| d.get("speedup_x")).and_then(Json::as_f64),
             Some(2.5)
         );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn merge_replaces_same_name_rows_and_keeps_the_rest() {
+        let path = std::env::temp_dir().join("bf16_bench_merge_test.json");
+        let _ = std::fs::remove_file(&path);
+        let mk = |name: &str, ns: f64| BenchResult {
+            name: name.to_string(),
+            median_ns: ns,
+            mean_ns: ns,
+            min_ns: ns,
+            samples: 1,
+        };
+        // first write degrades to a plain write (no existing file)
+        merge_bench_json(&path, &[mk("a", 10.0), mk("b", 20.0)], &[("k1".into(), 1.0)])
+            .unwrap();
+        // second write re-measures `b`, adds `c`, and adds a derived key
+        merge_bench_json(&path, &[mk("b", 25.0), mk("c", 30.0)], &[("k2".into(), 2.0)])
+            .unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = match parsed.get("benches") {
+            Some(Json::Arr(rows)) => rows.clone(),
+            other => panic!("benches must be an array, got {other:?}"),
+        };
+        let find = |n: &str| {
+            rows.iter()
+                .find(|r| r.get_str("name") == Some(n))
+                .unwrap_or_else(|| panic!("row {n} missing"))
+                .get("median_ns")
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        assert_eq!(rows.len(), 3);
+        assert_eq!(find("a"), 10.0, "unrelated row preserved");
+        assert_eq!(find("b"), 25.0, "re-measured row replaced");
+        assert_eq!(find("c"), 30.0, "new row appended");
+        let d = parsed.get("derived").unwrap();
+        assert_eq!(d.get("k1").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(d.get("k2").and_then(Json::as_f64), Some(2.0));
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,94 @@
+//! Guards the committed `BENCH_qsim.json` artifact: the bench trajectory
+//! is only useful if the checked-in numbers are real measurements, not
+//! placeholder zeros, and the memory-footprint keys must stay equal to
+//! what the trainers actually allocate.
+//!
+//! Hot-path rows (`matmul 128x256x64 *` and every `* step *` row) must
+//! carry `samples >= 1` and a positive median; `speedup_matmul_128x256x64`
+//! (reference / simd) must exceed 1.0; and the
+//! `bytes_weights_{fp32,bf16,kahan16}` keys are re-derived from live
+//! `Trainer::measured_weight_bytes()` walks so a storage regression (e.g.
+//! weights silently widening back to fp32) fails here even if nobody
+//! re-runs the bench.
+
+use bf16_train::qsim::dlrm::DlrmConfig;
+use bf16_train::qsim::train::Trainer;
+use bf16_train::qsim::Mode;
+use bf16_train::util::json::Json;
+
+fn artifact() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_qsim.json");
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {path}: {e}"));
+    Json::parse(&text).unwrap_or_else(|e| panic!("parsing {path}: {e:?}"))
+}
+
+fn derived(doc: &Json, key: &str) -> f64 {
+    doc.get("derived")
+        .and_then(|d| d.get(key))
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("derived.{key} missing from BENCH_qsim.json"))
+}
+
+#[test]
+fn hot_path_rows_are_measured_not_placeholders() {
+    let doc = artifact();
+    let rows = doc
+        .get("benches")
+        .and_then(Json::as_arr)
+        .expect("benches array missing from BENCH_qsim.json");
+    assert!(!rows.is_empty(), "artifact has no bench rows");
+    let mut guarded = 0usize;
+    for row in rows {
+        let name = row.get_str("name").expect("bench row without a name");
+        if !(name.contains("matmul 128x256x64") || name.contains(" step ")) {
+            continue;
+        }
+        let samples = row.get_usize("samples").unwrap_or(0);
+        let median = row.get("median_ns").and_then(Json::as_f64).unwrap_or(0.0);
+        assert!(samples >= 1, "row {name:?} has samples == 0 (placeholder artifact)");
+        assert!(median > 0.0, "row {name:?} has median_ns == 0 (placeholder artifact)");
+        guarded += 1;
+    }
+    assert!(
+        guarded >= 10,
+        "only {guarded} matmul/step rows found; artifact looks truncated"
+    );
+}
+
+#[test]
+fn simd_matmul_beats_the_scalar_reference() {
+    let doc = artifact();
+    let speedup = derived(&doc, "speedup_matmul_128x256x64");
+    assert!(
+        speedup > 1.0,
+        "simd matmul must beat the scalar reference kernel, got {speedup}x"
+    );
+}
+
+#[test]
+fn committed_weight_bytes_match_live_measurement() {
+    let doc = artifact();
+    for (mode, key) in [
+        (Mode::Fp32, "bytes_weights_fp32"),
+        (Mode::Sr16, "bytes_weights_bf16"),
+        (Mode::Kahan16, "bytes_weights_kahan16"),
+    ] {
+        let tr = Trainer::new(DlrmConfig { seed: 3, ..Default::default() }, mode);
+        let live = tr.measured_weight_bytes() as f64;
+        let committed = derived(&doc, key);
+        assert_eq!(
+            committed,
+            live,
+            "derived.{key} ({committed}) != live measured bytes ({live}) for {}",
+            mode.name()
+        );
+    }
+    // the paper's thesis, as stored: native 16-bit weights are half of
+    // fp32, and a 16-bit Kahan buffer brings kahan16 back to fp32's total
+    let fp32 = derived(&doc, "bytes_weights_fp32");
+    let bf16 = derived(&doc, "bytes_weights_bf16");
+    let kahan = derived(&doc, "bytes_weights_kahan16");
+    assert_eq!(bf16 * 2.0, fp32, "bf16 weight bytes must be half of fp32");
+    assert_eq!(kahan, fp32, "kahan16 = bf16 weights + bf16 compensation = fp32 total");
+}

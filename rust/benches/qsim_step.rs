@@ -27,7 +27,7 @@ use bf16_train::qsim::gpt::GptConfig;
 use bf16_train::qsim::lsq::{self, LsqConfig, LsqData, Placement};
 use bf16_train::qsim::mlp::MlpConfig;
 use bf16_train::qsim::train::{Task, Trainer};
-use bf16_train::qsim::{Backend, Mode, Tensor};
+use bf16_train::qsim::{Backend, Mode, ShardOptions, ShardedTrainer, Tensor};
 use bf16_train::util::bench::{bench, bench_n, black_box, merge_bench_json, BenchResult};
 use bf16_train::util::rng::Rng;
 
@@ -276,6 +276,63 @@ fn main() {
         &mut results,
         &mut derived,
     );
+
+    // -- shard-count sweep: the data-parallel engine over one full step -----
+    // (every shard count runs the identical fixed M=4 microbatch grid, so
+    // `derived.scaling_shards_sr16_sN` = s1 median / sN median isolates the
+    // worker fan-out win at bit-identical arithmetic; s1 pays the same
+    // framing + channel cost, which keeps the ratio honest about transport
+    // overhead rather than comparing against the in-process trainer)
+    {
+        let mk = || DlrmConfig {
+            seed: 3,
+            table_size: 2000,
+            embed_dim: 32,
+            dense_dim: 32,
+            hidden: 256,
+            batch: if smoke { 32 } else { 128 },
+            ..Default::default()
+        };
+        let sharded = |shards| {
+            ShardedTrainer::new(
+                mk(),
+                Mode::Sr16,
+                ShardOptions { shards, microbatches: 4, ..Default::default() },
+            )
+            .expect("bench shard geometry is valid")
+        };
+        let mut s1_median = None;
+        for shards in [1usize, 2, 4] {
+            let mut tr = sharded(shards);
+            // warm the workers' tape arenas and the channel path
+            for _ in 0..2 {
+                tr.step(0.05);
+            }
+            let r = timed(smoke, &format!("dlrm-shard step sr16 s{shards}"), || {
+                black_box(tr.step(0.05));
+            });
+            match s1_median {
+                None => s1_median = Some(r.median_ns),
+                Some(s1) => {
+                    let scaling = s1 / r.median_ns;
+                    println!("  ↳ dlrm-shard sr16 scaling s{shards} vs s1: {scaling:.2}x");
+                    derived.push((format!("scaling_shards_sr16_s{shards}"), scaling));
+                }
+            }
+            results.push(r);
+        }
+        // s1-vs-s4 bit-identity spot check over fresh trainers (the test
+        // suite asserts the full contract; this guards the bench configs)
+        let mut a = sharded(1);
+        let mut b = sharded(4);
+        for s in 0..3 {
+            let la = a.step(0.05).loss;
+            let lb = b.step(0.05).loss;
+            assert_eq!(la.to_bits(), lb.to_bits(), "dlrm-shard s1/s4 loss diverged at step {s}");
+        }
+        assert_eq!(a.param_digest(), b.param_digest(), "dlrm-shard s1/s4 params diverged");
+        println!("parity: dlrm-shard sr16 bit-identical at 1 vs 4 shards");
+    }
 
     // -- lsq theory loop, per rounding placement ----------------------------
     let steps = if smoke { 50 } else { 1000 };

@@ -95,6 +95,25 @@ pub struct RunConfig {
     /// are bit-identical, so this only trades wall-clock; the PJRT session
     /// path ignores it (its kernels are compiled artifacts).
     pub backend: Backend,
+    /// Data-parallel worker shards for the qsim-native trainer (`--shards`;
+    /// TOML key `train.shards`).  `0` (default) runs the legacy in-process
+    /// loop; `N >= 1` routes through [`crate::qsim::ShardedTrainer`], which
+    /// is bit-identical to the single-process loop at every power-of-two
+    /// shard count (the step's microbatch gradients reduce over a fixed
+    /// tree regardless of which shard computed them).
+    pub shards: usize,
+    /// Microbatches accumulated per optimizer step on the sharded path
+    /// (`--grad-accum`; TOML key `train.grad_accum`).  Must be a power of
+    /// two and a multiple of `shards`.  `1` reproduces the unsharded
+    /// single-batch step bit-for-bit.
+    pub grad_accum: usize,
+    /// Deterministic fault-injection spec for the sharded path (`--chaos`;
+    /// TOML key `train.chaos`), parsed by
+    /// [`crate::qsim::ChaosConfig::parse`] — e.g. `"light"`, `"heavy"`, or
+    /// pinned events like `"crash@2.1,stall@4.3:80"`.  `None` disables
+    /// injection.  Any schedule yields bit-identical training results;
+    /// chaos only perturbs timing and the recovery counters.
+    pub chaos: Option<String>,
 }
 
 impl RunConfig {
@@ -158,6 +177,9 @@ impl RunConfig {
             out_dir: "results".to_string(),
             intra_threads: 1,
             backend: Backend::default(),
+            shards: 0,
+            grad_accum: 1,
+            chaos: None,
         }
     }
 
@@ -206,6 +228,16 @@ impl RunConfig {
             cfg.backend = Backend::by_name(b).with_context(|| {
                 format!("config key `train.backend` = {b:?} (expected fast, reference or simd)")
             })?;
+        }
+        // .max(0): negative values must not wrap through `as usize`
+        cfg.shards = doc.i64_or("train.shards", cfg.shards as i64).max(0) as usize;
+        cfg.grad_accum = doc.i64_or("train.grad_accum", cfg.grad_accum as i64).max(1) as usize;
+        if let Some(c) = doc.get("train.chaos").and_then(|v| v.as_str()) {
+            // validate eagerly so a typo'd schedule fails at config parse
+            // time, not steps into the run
+            crate::qsim::ChaosConfig::parse(c)
+                .with_context(|| format!("config key `train.chaos` = {c:?}"))?;
+            cfg.chaos = Some(c.to_string());
         }
         if let Some(kind) = doc.get("schedule.kind").and_then(|v| v.as_str()) {
             let warmup = doc.f64_or("schedule.warmup_frac", 0.0);
@@ -258,6 +290,9 @@ pub struct RunSpec {
     out_dir: Option<String>,
     intra_threads: Option<usize>,
     backend: Option<Backend>,
+    shards: Option<usize>,
+    grad_accum: Option<usize>,
+    chaos: Option<Option<String>>,
 }
 
 impl RunSpec {
@@ -286,6 +321,9 @@ impl RunSpec {
             out_dir: None,
             intra_threads: None,
             backend: None,
+            shards: None,
+            grad_accum: None,
+            chaos: None,
         }
     }
 
@@ -357,6 +395,25 @@ impl RunSpec {
         self
     }
 
+    /// Data-parallel worker shards (0 = legacy in-process loop).  Results
+    /// are bit-identical at every power-of-two shard count.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = Some(n);
+        self
+    }
+
+    /// Microbatches accumulated per optimizer step on the sharded path.
+    pub fn grad_accum(mut self, n: usize) -> Self {
+        self.grad_accum = Some(n);
+        self
+    }
+
+    /// Deterministic chaos schedule for the sharded path (`None` disables).
+    pub fn chaos(mut self, spec: Option<String>) -> Self {
+        self.chaos = Some(spec);
+        self
+    }
+
     /// Materialize the final [`RunConfig`].
     pub fn build(&self) -> RunConfig {
         let mut cfg = self.base.clone();
@@ -407,6 +464,15 @@ impl RunSpec {
         }
         if let Some(b) = self.backend {
             cfg.backend = b;
+        }
+        if let Some(n) = self.shards {
+            cfg.shards = n;
+        }
+        if let Some(n) = self.grad_accum {
+            cfg.grad_accum = n;
+        }
+        if let Some(c) = &self.chaos {
+            cfg.chaos = c.clone();
         }
         cfg
     }
@@ -542,6 +608,24 @@ warmup_frac = 0.1
         assert!(err.is_err(), "unknown backend names must fail at parse time");
         let spec = RunSpec::new("mlp").backend(Backend::Reference);
         assert_eq!(spec.build().backend, Backend::Reference);
+    }
+
+    #[test]
+    fn shard_keys_default_parse_and_override() {
+        let cfg = RunConfig::defaults_for("dlrm");
+        assert_eq!((cfg.shards, cfg.grad_accum, cfg.chaos.as_deref()), (0, 1, None));
+        let cfg = RunConfig::from_toml_text(
+            "app = \"dlrm\"\n[train]\nshards = 2\ngrad_accum = 4\nchaos = \"light\"\n",
+        )
+        .unwrap();
+        assert_eq!((cfg.shards, cfg.grad_accum, cfg.chaos.as_deref()), (2, 4, Some("light")));
+        // a malformed chaos schedule fails at config parse time
+        let err =
+            RunConfig::from_toml_text("app = \"dlrm\"\n[train]\nchaos = \"explode@x\"\n");
+        assert!(err.is_err(), "bad chaos spec must be rejected");
+        let spec = RunSpec::new("mlp").shards(4).grad_accum(8).chaos(Some("heavy".into()));
+        let cfg = spec.build();
+        assert_eq!((cfg.shards, cfg.grad_accum, cfg.chaos.as_deref()), (4, 8, Some("heavy")));
     }
 
     #[test]

@@ -183,9 +183,11 @@ impl<'e> Trainer<'e> {
     ///
     /// Format (`BF16CKP2`, shared framing in [`crate::util::ckpt`]): magic,
     /// artifact-name length + bytes, step counter, tensor count, then per
-    /// tensor `len:u64, f32-LE data`.  Layout order is the manifest state
-    /// order.  Byte-identical to the pre-refactor writer, so existing
-    /// checkpoints stay loadable.
+    /// tensor `len:u64, f32-LE data`, then the shared CRC-32 footer.
+    /// Layout order is the manifest state order.  Footer-less checkpoints
+    /// from older writers stay loadable.  The write goes through a sibling
+    /// temp file + rename so a crash mid-write can never leave a truncated
+    /// file at the checkpoint path.
     pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut w = ckpt::Writer::new();
         w.str(&self.cfg.artifact_name());
@@ -195,7 +197,7 @@ impl<'e> Trainer<'e> {
         for i in 0..n {
             w.f32s(&self.session.state_host(i)?);
         }
-        std::fs::write(path.as_ref(), w.into_bytes())
+        ckpt::write_atomic(path.as_ref(), &w.into_bytes())
             .with_context(|| format!("writing checkpoint {:?}", path.as_ref()))?;
         Ok(())
     }
@@ -223,6 +225,8 @@ impl<'e> Trainer<'e> {
             let vals = r.f32s()?;
             self.session.set_state(i, &vals)?;
         }
+        r.expect_end()
+            .with_context(|| format!("checkpoint {:?}", path.as_ref()))?;
         self.session.steps_done = steps;
         // Reposition the training stream: generators are sequential, so a
         // resumed run must consume the same prefix the original run did to

@@ -50,12 +50,14 @@ const USAGE: &str = "usage: repro <command>
   train --app APP [--mode MODE] [--fmt FMT] [--steps N] [--seed S]
         [--lr LR] [--intra-threads T] [--backend fast|reference|simd]
         [--config FILE.toml] [--checkpoint PATH] [--resume PATH] [--native]
+        [--shards N] [--grad-accum M] [--chaos SPEC]
   exp <table1|table2|table3|table4|fig1|fig2|fig5|fig9|fig10|fig11|fig12|thm1|gpt|mlp|all>
         [--steps N] [--seeds K] [--app APP] [--threads T]
         [--intra-threads T] [--no-smooth]
   bench-step <artifact-name> [--iters N] [--intra-threads T]
   qsim-parity [--steps N] [--seed S] [--intra-threads T]
         [--app all|dlrm|gpt|mlp|lsq] [--backend fast|reference|simd]
+        [--shards N] [--grad-accum M] [--chaos SPEC]
   lint-tape [--app all|dlrm|gpt|mlp|lsq] [--seed S]
   fuzz-tape [--budget N] [--seed S] [--case I]
 
@@ -84,7 +86,18 @@ failure prints a minimized repro replayable with --case.
 within one train step (bit-identical results at every setting).  Today the
 intra-step pool drives the qsim-native kernels (fig5/fig9, qsim-parity, the
 native benches); the PJRT session path records the setting but still runs
-its lowered executables as compiled.";
+its lowered executables as compiled.
+
+--shards N (with --native, or on qsim-parity) runs the data-parallel
+`qsim::shard` engine: each optimizer step splits --grad-accum M
+microbatches (power of two, default 4) across N worker shards (power of
+two <= M) and reduces their gradients over a fixed pairwise tree, so the
+trajectory is bit-identical at every shard count — including N=1 — and
+checkpoints resume across shard counts.  --chaos injects a deterministic
+fault schedule (crashes, stalls, dropped/corrupted messages; presets
+`light`/`heavy`, rates like `crash=0.05`, pinned events like
+`crash@3.1,stall@5.0:80`); recovery is bit-exact, so qsim-parity digests
+stay byte-identical under any schedule.  Recovery counters go to stderr.";
 
 fn cmd_list(args: &mut Args) -> Result<()> {
     let dir = args.opt("artifacts", "artifacts");
@@ -131,21 +144,37 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     let artifacts_dir = args.opt("artifacts", &cfg.artifacts_dir.clone());
     let checkpoint = args.opt_maybe("checkpoint");
     let resume = args.opt_maybe("resume");
+    let shards = args.opt_u64("shards", cfg.shards as u64)? as usize;
+    let grad_accum = args.opt_u64("grad-accum", cfg.grad_accum.max(1) as u64)? as usize;
+    let chaos = args.opt_maybe("chaos").or_else(|| cfg.chaos.clone());
     let native = args.flag("native");
     args.finish()?;
+
+    if !native && (shards > 0 || chaos.is_some() || grad_accum > 1) {
+        bail!("--shards / --grad-accum / --chaos drive the qsim-native engine; add --native");
+    }
+    if chaos.is_some() && shards == 0 {
+        bail!("--chaos injects faults into shard workers; add --shards N");
+    }
 
     if native {
         return cmd_train_native(
             &cfg.app,
-            policy,
-            steps,
-            seed,
-            lr,
-            intra_threads,
-            backend,
-            cfg.eval_batches,
-            checkpoint,
-            resume,
+            NativeRun {
+                mode: policy.mode,
+                fmt: policy.fmt,
+                steps,
+                seed,
+                lr,
+                intra_threads,
+                backend,
+                eval_batches: cfg.eval_batches,
+                checkpoint,
+                resume,
+                shards,
+                grad_accum,
+                chaos,
+            },
         );
     }
 
@@ -198,13 +227,11 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// `train --native`: run one app on the generic `qsim::train` engine (no
-/// PJRT artifacts), with native BF16CKP2 checkpoint/resume.  Constant lr —
-/// the native engine leaves scheduling to the experiment harness.
-#[allow(clippy::too_many_arguments)]
-fn cmd_train_native(
-    app: &str,
-    policy: Policy,
+/// Everything `train --native` needs beyond the app name (bundled so the
+/// sharded variant doesn't push the parameter list into the teens).
+struct NativeRun {
+    mode: Mode,
+    fmt: Format,
     steps: u64,
     seed: u64,
     lr: f64,
@@ -213,45 +240,55 @@ fn cmd_train_native(
     eval_batches: u64,
     checkpoint: Option<String>,
     resume: Option<String>,
-) -> Result<()> {
+    /// 0 = single-process loop; N >= 1 = the `qsim::shard` engine.
+    shards: usize,
+    grad_accum: usize,
+    chaos: Option<String>,
+}
+
+/// Build the chaos plan from a `--chaos` spec (None when the schedule can
+/// never fire, so clean runs skip the injection hooks entirely).
+fn chaos_plan(spec: Option<&str>) -> Result<Option<std::sync::Arc<bf16_train::qsim::ChaosPlan>>> {
+    use bf16_train::qsim::{ChaosConfig, ChaosPlan};
+    match spec {
+        None => Ok(None),
+        Some(s) => {
+            let cfg = ChaosConfig::parse(s).with_context(|| format!("--chaos {s:?}"))?;
+            Ok(if cfg.is_quiet() { None } else { Some(std::sync::Arc::new(ChaosPlan::new(cfg))) })
+        }
+    }
+}
+
+/// `train --native`: run one app on the generic `qsim::train` engine (no
+/// PJRT artifacts), with native BF16CKP2 checkpoint/resume.  Constant lr —
+/// the native engine leaves scheduling to the experiment harness.
+fn cmd_train_native(app: &str, run: NativeRun) -> Result<()> {
     use bf16_train::qsim::dlrm::DlrmConfig;
     use bf16_train::qsim::gpt::GptConfig;
     use bf16_train::qsim::mlp::MlpConfig;
 
     println!(
-        "train {app} (native qsim) | steps={steps} lr={lr} seed={seed} [{} on {}, {} backend]",
-        policy.mode,
-        policy.fmt.name,
-        backend.name()
+        "train {app} (native qsim) | steps={} lr={} seed={} [{} on {}, {} backend]",
+        run.steps,
+        run.lr,
+        run.seed,
+        run.mode,
+        run.fmt.name,
+        run.backend.name()
     );
-    let fmt = policy.fmt;
+    let (seed, fmt, intra_threads, backend) = (run.seed, run.fmt, run.intra_threads, run.backend);
     match app {
         "dlrm" => run_native_train(
             DlrmConfig { seed, fmt, intra_threads, backend, ..Default::default() },
-            policy.mode,
-            steps,
-            lr,
-            eval_batches,
-            checkpoint,
-            resume,
+            run,
         ),
         "gpt" | "gpt-nano" => run_native_train(
             GptConfig { seed, fmt, intra_threads, backend, ..Default::default() },
-            policy.mode,
-            steps,
-            lr,
-            eval_batches,
-            checkpoint,
-            resume,
+            run,
         ),
         "mlp" => run_native_train(
             MlpConfig { seed, fmt, intra_threads, backend, ..Default::default() },
-            policy.mode,
-            steps,
-            lr,
-            eval_batches,
-            checkpoint,
-            resume,
+            run,
         ),
         other => bail!("--native supports apps dlrm, gpt-nano and mlp, got {other:?}"),
     }
@@ -259,28 +296,27 @@ fn cmd_train_native(
 
 /// The app-generic body of `train --native` — one function for every
 /// [`Task`](bf16_train::qsim::Task), which is the point of the engine.
-fn run_native_train<T: bf16_train::qsim::Task>(
-    task: T,
-    mode: Mode,
-    steps: u64,
-    lr: f64,
-    eval_batches: u64,
-    checkpoint: Option<String>,
-    resume: Option<String>,
-) -> Result<()> {
-    let mut tr = bf16_train::qsim::train::Trainer::new(task, mode);
-    if let Some(path) = &resume {
+fn run_native_train<T>(task: T, run: NativeRun) -> Result<()>
+where
+    T: bf16_train::qsim::Task + Clone + Send + 'static,
+{
+    if run.shards > 0 {
+        return run_native_train_sharded(task, run);
+    }
+    let mut tr = bf16_train::qsim::train::Trainer::new(task, run.mode)
+        .with_grad_accum(run.grad_accum.max(1));
+    if let Some(path) = &run.resume {
         tr.load_checkpoint(path)?;
         println!("resumed from {path} at step {}", tr.steps_done());
     }
-    let remaining = steps.saturating_sub(tr.steps_done());
+    let remaining = run.steps.saturating_sub(tr.steps_done());
     let t0 = std::time::Instant::now();
     let mut last_loss = f32::NAN;
     for _ in 0..remaining {
-        last_loss = tr.step(lr as f32).loss;
+        last_loss = tr.step(run.lr as f32).loss;
     }
     let dt = t0.elapsed().as_secs_f64();
-    let m = tr.eval(eval_batches as usize);
+    let m = tr.eval(run.eval_batches as usize);
     println!(
         "done: eval loss={:.4} {}={:.4}  train-loss={:.4}  ({} steps, {:.1} steps/s)",
         m.loss,
@@ -290,7 +326,67 @@ fn run_native_train<T: bf16_train::qsim::Task>(
         remaining,
         if dt > 0.0 { remaining as f64 / dt } else { 0.0 }
     );
-    if let Some(path) = &checkpoint {
+    if let Some(path) = &run.checkpoint {
+        tr.save_checkpoint(path)?;
+        println!("checkpoint: {path} (step {})", tr.steps_done());
+    }
+    Ok(())
+}
+
+/// `train --native --shards N`: the same run on the data-parallel
+/// `qsim::shard` engine — bit-identical results at every power-of-two
+/// shard count and under any `--chaos` schedule; recovery counters are
+/// reported on stderr.
+fn run_native_train_sharded<T>(task: T, run: NativeRun) -> Result<()>
+where
+    T: bf16_train::qsim::Task + Clone + Send + 'static,
+{
+    use bf16_train::qsim::{ShardOptions, ShardedTrainer};
+
+    let opts = ShardOptions {
+        shards: run.shards,
+        microbatches: run.grad_accum,
+        chaos: chaos_plan(run.chaos.as_deref())?,
+        ..Default::default()
+    };
+    let mut tr = ShardedTrainer::new(task, run.mode, opts)?;
+    if let Some(path) = &run.resume {
+        tr.load_checkpoint(path)?;
+        println!("resumed from {path} at step {}", tr.steps_done());
+    }
+    let remaining = run.steps.saturating_sub(tr.steps_done());
+    let t0 = std::time::Instant::now();
+    let mut last_loss = f32::NAN;
+    for _ in 0..remaining {
+        last_loss = tr.step(run.lr as f32).loss;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = tr.eval(run.eval_batches as usize);
+    println!(
+        "done: eval loss={:.4} {}={:.4}  train-loss={:.4}  ({} steps x {} microbatches, {:.1} steps/s)",
+        m.loss,
+        m.metric_name,
+        m.metric,
+        last_loss,
+        remaining,
+        tr.microbatches(),
+        if dt > 0.0 { remaining as f64 / dt } else { 0.0 }
+    );
+    let st = tr.stats();
+    eprintln!(
+        "shards {}: retries {} respawns {} crc-rejects {} stale {} nacks {} \
+         drift-resyncs {} updates-dropped {} stragglers {}",
+        tr.shards(),
+        st.retries,
+        st.respawns,
+        st.crc_rejects,
+        st.stale_frames,
+        st.nacks,
+        st.drift_resyncs,
+        st.updates_dropped,
+        st.stragglers
+    );
+    if let Some(path) = &run.checkpoint {
         tr.save_checkpoint(path)?;
         println!("checkpoint: {path} (step {})", tr.steps_done());
     }
@@ -404,7 +500,19 @@ fn cmd_qsim_parity(args: &mut Args) -> Result<()> {
         "simd" => Backend::Simd,
         other => bail!("--backend must be fast, reference or simd, got {other:?}"),
     };
+    let shards = args.opt_u64("shards", 0)? as usize;
+    let grad_accum = args.opt_u64("grad-accum", 4)? as usize;
+    let chaos = args.opt_maybe("chaos");
     args.finish()?;
+    if shards > 0 {
+        if app == "lsq" {
+            bail!("the sharded engine drives the Task apps; --app lsq has no shard path");
+        }
+        return qsim_parity_sharded(&app, steps, seed, shards, grad_accum, chaos.as_deref());
+    }
+    if chaos.is_some() {
+        bail!("--chaos injects faults into shard workers; add --shards N");
+    }
     eprintln!(
         "qsim-parity: {steps} steps, seed {seed}, {intra_threads} intra-threads, {} backend",
         backend.name()
@@ -535,6 +643,127 @@ fn cmd_qsim_parity(args: &mut Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// The sharded branch of `qsim-parity`: the same digest discipline (per
+/// step loss bit patterns + cancellation counters + a final eval, no
+/// timings) over the `qsim::shard` engine.  Crucially the output contains
+/// neither the shard count nor the chaos schedule, because the whole
+/// contract is that they cannot change a bit of it: CI diffs this digest
+/// across `--shards 1|2|4` and with `--chaos heavy` injected.  Recovery
+/// counters go to stderr.
+fn qsim_parity_sharded(
+    app: &str,
+    steps: u64,
+    seed: u64,
+    shards: usize,
+    grad_accum: usize,
+    chaos: Option<&str>,
+) -> Result<()> {
+    use bf16_train::qsim::dlrm::DlrmConfig;
+    use bf16_train::qsim::gpt::GptConfig;
+    use bf16_train::qsim::mlp::MlpConfig;
+
+    eprintln!(
+        "qsim-parity (sharded): {steps} steps x {grad_accum} microbatches, seed {seed}, \
+         {shards} shards, chaos {}",
+        chaos.unwrap_or("none")
+    );
+    if app == "all" || app == "dlrm" {
+        for mode in [Mode::Sr16, Mode::SrKahan16] {
+            let cfg = DlrmConfig {
+                seed,
+                table_size: 600,
+                embed_dim: 16,
+                hidden: 64,
+                batch: 48,
+                ..Default::default()
+            };
+            sharded_parity_run("dlrm", cfg, mode, steps, 0.05, shards, grad_accum, chaos)?;
+        }
+    }
+    if app == "all" || app == "gpt" || app == "gpt-nano" {
+        let cfg = GptConfig {
+            seed,
+            vocab: 64,
+            seq_len: 16,
+            dim: 32,
+            hidden: 64,
+            batch: 8,
+            ..Default::default()
+        };
+        sharded_parity_run("gpt-nano", cfg, Mode::Sr16, steps, 0.1, shards, grad_accum, chaos)?;
+    }
+    if app == "all" || app == "mlp" {
+        for mode in [Mode::Sr16, Mode::Kahan16] {
+            let cfg = MlpConfig { seed, hidden: 96, batch: 64, ..Default::default() };
+            sharded_parity_run("mlp", cfg, mode, steps, 0.1, shards, grad_accum, chaos)?;
+        }
+    }
+    Ok(())
+}
+
+/// One (app, mode) sharded parity run.  A fresh [`ChaosPlan`] per run so
+/// the schedule a cell hosts is a pure function of the spec, never of
+/// which apps ran before it.
+#[allow(clippy::too_many_arguments)]
+fn sharded_parity_run<T>(
+    label: &str,
+    task: T,
+    mode: Mode,
+    steps: u64,
+    lr: f32,
+    shards: usize,
+    grad_accum: usize,
+    chaos: Option<&str>,
+) -> Result<()>
+where
+    T: bf16_train::qsim::Task + Clone + Send + 'static,
+{
+    use bf16_train::qsim::{ShardOptions, ShardedTrainer};
+
+    let opts = ShardOptions {
+        shards,
+        microbatches: grad_accum,
+        chaos: chaos_plan(chaos)?,
+        ..Default::default()
+    };
+    let mut tr = ShardedTrainer::new(task, mode, opts)?;
+    for step in 0..steps {
+        let tel = tr.step(lr);
+        println!(
+            "{label} {} step {step}: loss {:08x} embed {}/{} mlp {}/{}",
+            mode.name(),
+            tel.loss.to_bits(),
+            tel.embed.cancelled,
+            tel.embed.nonzero,
+            tel.mlp.cancelled,
+            tel.mlp.nonzero
+        );
+    }
+    let m = tr.eval(4);
+    println!(
+        "{label} {} final: eval-loss {:08x} {} {:08x}",
+        mode.name(),
+        m.loss.to_bits(),
+        m.metric_name,
+        m.metric.to_bits()
+    );
+    let st = tr.stats();
+    eprintln!(
+        "{label} {}: retries {} respawns {} crc-rejects {} stale {} nacks {} \
+         drift-resyncs {} updates-dropped {} stragglers {}",
+        mode.name(),
+        st.retries,
+        st.respawns,
+        st.crc_rejects,
+        st.stale_frames,
+        st.nacks,
+        st.drift_resyncs,
+        st.updates_dropped,
+        st.stragglers
+    );
     Ok(())
 }
 

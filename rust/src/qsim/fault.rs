@@ -1,0 +1,390 @@
+//! `qsim::fault` — deterministic chaos injection for the sharded trainer.
+//!
+//! Every fault is decided by a pure function of `(chaos_seed, step, shard)`
+//! through the same counter-keyed [`DitherKey`] machinery the SR dither
+//! uses, so a chaos schedule is exactly reproducible from its spec string:
+//! `repro qsim-parity --shards 4 --chaos heavy` injects the identical
+//! crashes, stalls and corruptions on every run and every machine.  A
+//! schedule can also pin explicit events (`crash@3.1` = crash shard 1 when
+//! it is asked for step 3's gradients).
+//!
+//! Each `(step, shard)` cell hosts at most one event, and events are
+//! **fire-once**: a shard that crashes at step 3 is respawned from the
+//! coordinator's snapshot and asked for step 3 again — the retry must
+//! compute, not crash forever, so the plan records consumption.  That
+//! consumption is the only mutable state; which event a cell hosts never
+//! depends on timing.
+//!
+//! The injected faults (and who injects them):
+//! * [`ChaosKind::Crash`] — the worker thread exits on receipt of a step
+//!   request (recovery: respawn from snapshot + data-stream fast-forward);
+//! * [`ChaosKind::Stall`] — the worker sleeps `stall_ms` before computing
+//!   (recovery: bounded wait + straggler accounting, retransmit request);
+//! * [`ChaosKind::DropGrad`] — the worker computes but never sends its
+//!   gradient message (recovery: timeout + retransmit of the cached frame);
+//! * [`ChaosKind::CorruptGrad`] — a bit of the gradient frame is flipped on
+//!   the wire *after* the CRC is computed (recovery: receiver CRC reject +
+//!   retransmit);
+//! * [`ChaosKind::DropUpdate`] — the coordinator's update broadcast to one
+//!   shard is dropped, silently desynchronising the replica (recovery: the
+//!   param digest carried by the replica's next gradient message exposes
+//!   the drift; snapshot re-sync + recompute).
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::DitherKey;
+
+/// Stream tag separating chaos draws from every other keyed consumer.
+pub const CHAOS_STREAM: u64 = 0xFA_07;
+
+/// The failure injected at one `(step, shard)` cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosKind {
+    Crash,
+    Stall,
+    DropGrad,
+    CorruptGrad,
+    DropUpdate,
+}
+
+impl ChaosKind {
+    fn parse(s: &str) -> Result<ChaosKind> {
+        Ok(match s {
+            "crash" => ChaosKind::Crash,
+            "stall" => ChaosKind::Stall,
+            "drop" => ChaosKind::DropGrad,
+            "corrupt" => ChaosKind::CorruptGrad,
+            "drop-update" => ChaosKind::DropUpdate,
+            other => bail!(
+                "unknown chaos kind {other:?} (expected crash, stall, drop, corrupt \
+                 or drop-update)"
+            ),
+        })
+    }
+}
+
+/// One concrete injected event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosEvent {
+    pub kind: ChaosKind,
+    /// Sleep duration for [`ChaosKind::Stall`] (ignored by other kinds).
+    pub stall_ms: u64,
+}
+
+/// A chaos schedule: per-kind probabilities (drawn per `(step, shard)`
+/// cell) plus explicitly pinned events.  Parsed from the `--chaos` spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    pub crash_p: f64,
+    pub stall_p: f64,
+    pub drop_grad_p: f64,
+    pub corrupt_grad_p: f64,
+    pub drop_update_p: f64,
+    /// Default stall duration for probabilistic stall events.
+    pub stall_ms: u64,
+    /// Pinned events: `(step, shard, event)`; these take precedence over
+    /// the probabilistic draw for their cell.
+    pub events: Vec<(u64, u32, ChaosEvent)>,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0,
+            crash_p: 0.0,
+            stall_p: 0.0,
+            drop_grad_p: 0.0,
+            corrupt_grad_p: 0.0,
+            drop_update_p: 0.0,
+            stall_ms: 40,
+            events: Vec::new(),
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Parse a `--chaos` spec.  Grammar (comma-separated, spaces ignored):
+    ///
+    /// * a preset: `none` | `light` | `heavy` (may appear first, then be
+    ///   overridden by later items);
+    /// * a rate: `crash=0.05`, `stall=0.1`, `drop=0.05`, `corrupt=0.1`,
+    ///   `drop-update=0.05`, plus `seed=N` and `stall-ms=N`;
+    /// * a pinned event: `kind@step.shard`, e.g. `crash@3.1`, with an
+    ///   optional stall duration `stall@5.0:80` (80 ms).
+    pub fn parse(spec: &str) -> Result<ChaosConfig> {
+        let mut cfg = ChaosConfig::default();
+        for (i, raw) in spec.split(',').enumerate() {
+            let item = raw.trim();
+            if item.is_empty() {
+                continue;
+            }
+            match item {
+                "none" | "off" => {
+                    if i != 0 {
+                        bail!("chaos preset {item:?} must be the first item in the spec");
+                    }
+                    continue;
+                }
+                "light" | "heavy" => {
+                    if i != 0 {
+                        bail!("chaos preset {item:?} must be the first item in the spec");
+                    }
+                    let scale = if item == "heavy" { 2.0 } else { 1.0 };
+                    cfg.crash_p = 0.025 * scale;
+                    cfg.stall_p = 0.04 * scale;
+                    cfg.drop_grad_p = 0.025 * scale;
+                    cfg.corrupt_grad_p = 0.04 * scale;
+                    cfg.drop_update_p = 0.025 * scale;
+                    continue;
+                }
+                _ => {}
+            }
+            if let Some((kind, at)) = item.split_once('@') {
+                let (at, ms) = match at.split_once(':') {
+                    Some((at, ms)) => (
+                        at,
+                        ms.parse::<u64>()
+                            .with_context(|| format!("chaos event {item:?}: bad duration"))?,
+                    ),
+                    None => (at, cfg.stall_ms),
+                };
+                let (step, shard) = at
+                    .split_once('.')
+                    .with_context(|| format!("chaos event {item:?}: expected kind@step.shard"))?;
+                let step = step
+                    .parse::<u64>()
+                    .with_context(|| format!("chaos event {item:?}: bad step"))?;
+                let shard = shard
+                    .parse::<u32>()
+                    .with_context(|| format!("chaos event {item:?}: bad shard"))?;
+                let kind = ChaosKind::parse(kind)?;
+                cfg.events.push((step, shard, ChaosEvent { kind, stall_ms: ms }));
+            } else if let Some((key, val)) = item.split_once('=') {
+                let num = || {
+                    val.parse::<f64>()
+                        .with_context(|| format!("chaos rate {item:?}: bad number"))
+                };
+                match key.trim() {
+                    "seed" => {
+                        cfg.seed = val
+                            .parse()
+                            .with_context(|| format!("chaos seed {item:?}: bad integer"))?
+                    }
+                    "stall-ms" => {
+                        cfg.stall_ms = val
+                            .parse()
+                            .with_context(|| format!("chaos stall-ms {item:?}: bad integer"))?
+                    }
+                    "crash" => cfg.crash_p = num()?,
+                    "stall" => cfg.stall_p = num()?,
+                    "drop" => cfg.drop_grad_p = num()?,
+                    "corrupt" => cfg.corrupt_grad_p = num()?,
+                    "drop-update" => cfg.drop_update_p = num()?,
+                    other => bail!("unknown chaos parameter {other:?} in {spec:?}"),
+                }
+            } else {
+                bail!("cannot parse chaos spec item {item:?} (in {spec:?})");
+            }
+        }
+        let total = cfg.crash_p
+            + cfg.stall_p
+            + cfg.drop_grad_p
+            + cfg.corrupt_grad_p
+            + cfg.drop_update_p;
+        if !(0.0..=1.0).contains(&total) || [
+            cfg.crash_p,
+            cfg.stall_p,
+            cfg.drop_grad_p,
+            cfg.corrupt_grad_p,
+            cfg.drop_update_p,
+        ]
+        .iter()
+        .any(|p| !(0.0..=1.0).contains(p))
+        {
+            bail!("chaos rates must be in [0, 1] and sum to at most 1 (got total {total})");
+        }
+        Ok(cfg)
+    }
+
+    /// True when this schedule can never inject anything.
+    pub fn is_quiet(&self) -> bool {
+        self.events.is_empty()
+            && self.crash_p == 0.0
+            && self.stall_p == 0.0
+            && self.drop_grad_p == 0.0
+            && self.corrupt_grad_p == 0.0
+            && self.drop_update_p == 0.0
+    }
+}
+
+/// A live chaos schedule: the pure event function plus the fire-once
+/// consumption set.  Shared (`Arc`) between the coordinator and every
+/// worker thread.
+pub struct ChaosPlan {
+    cfg: ChaosConfig,
+    fired: Mutex<HashSet<(u64, u32)>>,
+}
+
+impl ChaosPlan {
+    pub fn new(cfg: ChaosConfig) -> ChaosPlan {
+        ChaosPlan { cfg, fired: Mutex::new(HashSet::new()) }
+    }
+
+    pub fn config(&self) -> &ChaosConfig {
+        &self.cfg
+    }
+
+    /// The event hosted by cell `(step, shard)`, independent of whether it
+    /// has fired: pinned events first, then the probabilistic draw.  Pure.
+    pub fn peek(&self, step: u64, shard: u32) -> Option<ChaosEvent> {
+        if let Some((_, _, ev)) =
+            self.cfg.events.iter().find(|(s, w, _)| *s == step && *w == shard)
+        {
+            return Some(*ev);
+        }
+        let word = DitherKey::new(self.cfg.seed, CHAOS_STREAM, step, shard as u64).word(0);
+        let u = word as f64 / (1u64 << 32) as f64;
+        let mut acc = 0.0;
+        for (p, kind) in [
+            (self.cfg.crash_p, ChaosKind::Crash),
+            (self.cfg.stall_p, ChaosKind::Stall),
+            (self.cfg.drop_grad_p, ChaosKind::DropGrad),
+            (self.cfg.corrupt_grad_p, ChaosKind::CorruptGrad),
+            (self.cfg.drop_update_p, ChaosKind::DropUpdate),
+        ] {
+            acc += p;
+            if u < acc {
+                return Some(ChaosEvent { kind, stall_ms: self.cfg.stall_ms });
+            }
+        }
+        None
+    }
+
+    /// Fire-once draw for the given site.  Worker sites consume every kind
+    /// except [`ChaosKind::DropUpdate`] (which belongs to the coordinator's
+    /// broadcast site); each cell fires at most once globally.
+    fn take(&self, step: u64, shard: u32, want_update_site: bool) -> Option<ChaosEvent> {
+        let ev = self.peek(step, shard)?;
+        if (ev.kind == ChaosKind::DropUpdate) != want_update_site {
+            return None;
+        }
+        let mut fired = self.fired.lock().expect("chaos fired-set poisoned");
+        if !fired.insert((step, shard)) {
+            return None; // already consumed: retries run clean
+        }
+        Some(ev)
+    }
+
+    /// Worker-side draw at step-request time (crash / stall / drop /
+    /// corrupt).
+    pub fn take_worker(&self, step: u64, shard: u32) -> Option<ChaosEvent> {
+        self.take(step, shard, false)
+    }
+
+    /// Coordinator-side draw at update-broadcast time.
+    pub fn take_drop_update(&self, step: u64, shard: u32) -> bool {
+        self.take(step, shard, true).is_some()
+    }
+
+    /// Deterministically flip one payload bit of an encoded frame —
+    /// *after* its CRC was computed, so the receiver's CRC check must
+    /// reject it.  `header_len` protects the frame header so the flip
+    /// always lands in the payload region.
+    pub fn corrupt_frame(&self, frame: &mut [u8], header_len: usize, step: u64, shard: u32) {
+        debug_assert!(frame.len() > header_len + 4, "frame too small to corrupt");
+        let span = frame.len() - header_len - 4; // keep the trailing CRC intact too
+        let word = DitherKey::new(self.cfg.seed, CHAOS_STREAM ^ 0xBAD, step, shard as u64).word(1);
+        let byte = header_len + (word as usize % span);
+        let bit = (word >> 13 & 7) as u8;
+        frame[byte] ^= 1 << bit;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_presets_rates_and_events() {
+        assert!(ChaosConfig::parse("none").unwrap().is_quiet());
+        assert!(ChaosConfig::parse("").unwrap().is_quiet());
+        let light = ChaosConfig::parse("light").unwrap();
+        let heavy = ChaosConfig::parse("heavy").unwrap();
+        assert!(heavy.crash_p > light.crash_p && !heavy.is_quiet());
+
+        let cfg = ChaosConfig::parse("seed=9, crash=0.1, stall-ms=75, drop-update=0.05").unwrap();
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.crash_p, 0.1);
+        assert_eq!(cfg.stall_ms, 75);
+        assert_eq!(cfg.drop_update_p, 0.05);
+
+        let cfg = ChaosConfig::parse("crash@3.1,stall@5.0:80,corrupt@2.2").unwrap();
+        assert_eq!(cfg.events.len(), 3);
+        assert_eq!(cfg.events[0], (3, 1, ChaosEvent { kind: ChaosKind::Crash, stall_ms: 40 }));
+        assert_eq!(cfg.events[1], (5, 0, ChaosEvent { kind: ChaosKind::Stall, stall_ms: 80 }));
+
+        let cfg = ChaosConfig::parse("heavy,seed=3").unwrap();
+        assert_eq!(cfg.seed, 3);
+        assert!(cfg.crash_p > 0.0, "preset rates survive the override");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "explode=0.1",
+            "crash=oops",
+            "crash@x.y",
+            "crash@3",
+            "sideways",
+            "crash=0.9,stall=0.9",
+            "drop=1.5",
+            "crash=0.1,heavy",
+        ] {
+            assert!(ChaosConfig::parse(bad).is_err(), "spec {bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_fire_once() {
+        let cfg = ChaosConfig::parse("seed=4,crash=0.2,stall=0.2,corrupt=0.2").unwrap();
+        let a = ChaosPlan::new(cfg.clone());
+        let b = ChaosPlan::new(cfg);
+        let mut hosted = 0;
+        for step in 0..64u64 {
+            for shard in 0..4u32 {
+                assert_eq!(a.peek(step, shard), b.peek(step, shard), "cell ({step},{shard})");
+                if a.peek(step, shard).is_some() {
+                    hosted += 1;
+                }
+            }
+        }
+        // 256 cells at total rate 0.6: the draw must actually fire
+        assert!(hosted > 64, "only {hosted} cells host events at rate 0.6");
+
+        // fire-once: the first consuming site gets the event, retries don't
+        let cfg = ChaosConfig::parse("crash@2.1,drop-update@2.0").unwrap();
+        let plan = ChaosPlan::new(cfg);
+        assert!(plan.take_worker(2, 1).is_some());
+        assert!(plan.take_worker(2, 1).is_none(), "respawned shard must not re-crash");
+        // a worker-site draw must not consume an update-site event
+        assert!(plan.take_worker(2, 0).is_none());
+        assert!(plan.take_drop_update(2, 0));
+        assert!(!plan.take_drop_update(2, 0));
+    }
+
+    #[test]
+    fn corrupt_frame_flips_exactly_one_payload_bit() {
+        let plan = ChaosPlan::new(ChaosConfig::default());
+        let base = vec![0u8; 64];
+        let mut frame = base.clone();
+        plan.corrupt_frame(&mut frame, 16, 7, 2);
+        let flipped: Vec<usize> = (0..base.len()).filter(|&i| frame[i] != base[i]).collect();
+        assert_eq!(flipped.len(), 1);
+        assert!(flipped[0] >= 16 && flipped[0] < 60, "flip must land in the payload");
+        assert_eq!((frame[flipped[0]] ^ base[flipped[0]]).count_ones(), 1);
+    }
+}

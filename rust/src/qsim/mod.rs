@@ -14,12 +14,14 @@
 //! full-scale applications run through the PJRT runtime instead.
 
 pub mod dlrm;
+pub mod fault;
 pub mod gpt;
 pub mod lsq;
 pub mod mlp;
 pub mod nn;
 pub mod optim;
 pub mod pool;
+pub mod shard;
 pub mod tape;
 pub mod tensor;
 pub mod train;
@@ -88,9 +90,11 @@ impl Backend {
 }
 
 pub use crate::precision::Mode;
+pub use fault::{ChaosConfig, ChaosKind, ChaosPlan};
 pub use nn::Module;
 pub use optim::{Sgd, SgdState, UpdateStats};
 pub use pool::Pool;
+pub use shard::{ShardOptions, ShardStats, ShardedTrainer};
 pub use tape::{QPolicy, Tape, Var};
 pub use tensor::Tensor;
 pub use train::{EvalMetrics, StepTelemetry, Task, TensorClass};

@@ -1,0 +1,1076 @@
+//! `qsim::shard` — deterministic data-parallel sharded training with
+//! bit-identical fault recovery.
+//!
+//! ## Why this can be exact
+//!
+//! Two properties of the engine make data parallelism *bit-exact* instead
+//! of merely statistically equivalent:
+//!
+//! 1. Forward/backward rounding is deterministic round-to-nearest — only
+//!    the optimizer update consumes keyed SR dither — so a microbatch
+//!    gradient is a pure function of (parameters, batch).
+//! 2. The SR dither is counter-keyed by `(seed, stream, step, tensor_id,
+//!    element)`, so *who* applies an update doesn't matter, only *which*
+//!    update it is.
+//!
+//! The remaining hazard is f32 addition's non-associativity: summing shard
+//! partials naively would change bits with the shard count.  So a step is
+//! defined over a fixed grid of `M` microbatches (`M` a power of two,
+//! constant across shard counts) reduced by a **fixed pairwise tree**
+//! ([`tree_reduce`]).  Shard `i` of `N` owns the aligned contiguous block
+//! of `M/N` microbatches — a complete subtree — computes the block's
+//! partial with the same tree, and the coordinator combines the `N` block
+//! roots with the tree's upper levels.  The result is bit-identical for
+//! every power-of-two `N <= M`, including `N = 1`.
+//!
+//! ## Topology and recovery
+//!
+//! [`ShardedTrainer`] owns the authoritative [`Trainer`] (one keyed-SR
+//! update per step, checkpointing, eval) and `N` worker threads, each
+//! holding a deterministic replica trainer and its own slice of the data
+//! stream (skip `lo`, draw `M/N`, skip the rest — exactly `M` draws per
+//! step, so a respawned worker fast-forwards by `steps × M`).  Transport
+//! is an in-process channel carrying *encoded byte frames* (magic, source,
+//! epoch, sequence number, payload, CRC-32), so the message layer is
+//! process/socket-ready and every fault a real wire could inject is
+//! detectable here.
+//!
+//! Recovery machinery, exercised by `qsim::fault`:
+//! * CRC + sequence + epoch validation on every frame; stale or replayed
+//!   frames are discarded (epochs fence out zombie incarnations);
+//! * timeout with exponential backoff and bounded retries; a retry is a
+//!   duplicate step request, which a live worker answers from its cached
+//!   gradient frame without recomputing (and without re-drawing data);
+//! * crash detection (send failure or retry exhaustion) → respawn from the
+//!   coordinator's in-memory `BF16CKP2` snapshot + stream fast-forward;
+//! * replica drift detection: every gradient message carries an FNV-1a
+//!   digest of the replica's parameters; a mismatch (e.g. after a dropped
+//!   update broadcast) triggers snapshot re-sync and recompute;
+//! * straggler accounting with bounded wait (latency beyond
+//!   `straggler_factor ×` the step median is recorded, never trusted
+//!   less — values are validated by construction, not by timing).
+//!
+//! None of the recovery paths can change a single bit of the trajectory:
+//! accepted gradients are validated against the coordinator's parameter
+//! digest, the reduction topology is fixed, and the one keyed update per
+//! step is applied by the coordinator alone.  Timing changes only the
+//! [`ShardStats`] — which is why parity digests never include them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::precision::Mode;
+use crate::util::ckpt;
+use crate::util::crc::crc32;
+
+use super::fault::{ChaosKind, ChaosPlan};
+use super::train::{EvalMetrics, StepTelemetry, Task, Trainer};
+
+// ---------------------------------------------------------------------------
+// fixed-topology reduction
+// ---------------------------------------------------------------------------
+
+/// Flat per-parameter gradients plus the (tree-summed) loss.
+pub type GradPartial = (f32, Vec<Vec<f32>>);
+
+/// Pairwise reduction over a power-of-two number of partials with a fixed
+/// tree topology: round 1 combines (0,1), (2,3), …; round 2 combines the
+/// round-1 roots pairwise; and so on.  Because the tree shape depends only
+/// on the leaf count, reducing `M` leaves directly equals reducing `N`
+/// aligned block-partials of `M/N` leaves each — the associativity
+/// schedule that makes shard counts interchangeable at the bit level.
+pub fn tree_reduce(mut parts: Vec<GradPartial>) -> GradPartial {
+    assert!(
+        !parts.is_empty() && parts.len().is_power_of_two(),
+        "tree_reduce needs a power-of-two leaf count, got {}",
+        parts.len()
+    );
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len() / 2);
+        let mut it = parts.into_iter();
+        while let (Some((la, mut ga)), Some((lb, gb))) = (it.next(), it.next()) {
+            debug_assert_eq!(ga.len(), gb.len(), "partials disagree on tensor count");
+            for (a, b) in ga.iter_mut().zip(&gb) {
+                debug_assert_eq!(a.len(), b.len(), "partials disagree on tensor shape");
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += *y;
+                }
+            }
+            next.push((la + lb, ga));
+        }
+        parts = next;
+    }
+    parts.pop().expect("non-empty by the assert above")
+}
+
+/// Scale every gradient element by `s` (the `1/M` mean normalisation,
+/// applied once after the reduction).
+pub fn scale_grads(grads: &mut [Vec<f32>], s: f32) {
+    for g in grads {
+        for x in g.iter_mut() {
+            *x *= s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wire format
+// ---------------------------------------------------------------------------
+
+/// Frame magic: "QSF1".
+pub const FRAME_MAGIC: u32 = 0x3146_5351;
+/// `src` value identifying the coordinator.
+pub const COORD_SRC: u32 = u32::MAX;
+/// Bytes before the payload: magic, src, epoch, kind, seq, payload length.
+pub const FRAME_HEADER_LEN: usize = 4 + 4 + 4 + 1 + 8 + 8;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    StepReq = 0,
+    Grad = 1,
+    Update = 2,
+    Snapshot = 3,
+    Nack = 4,
+    Shutdown = 5,
+}
+
+impl MsgKind {
+    fn parse(v: u8) -> Result<MsgKind> {
+        Ok(match v {
+            0 => MsgKind::StepReq,
+            1 => MsgKind::Grad,
+            2 => MsgKind::Update,
+            3 => MsgKind::Snapshot,
+            4 => MsgKind::Nack,
+            5 => MsgKind::Shutdown,
+            other => bail!("unknown frame kind {other}"),
+        })
+    }
+}
+
+/// One decoded wire frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub src: u32,
+    pub epoch: u32,
+    pub seq: u64,
+    pub kind: MsgKind,
+    pub payload: Vec<u8>,
+}
+
+/// Encode a frame: header, payload, trailing CRC-32 over everything
+/// before it.
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    let mut b = Vec::with_capacity(FRAME_HEADER_LEN + f.payload.len() + 4);
+    b.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    b.extend_from_slice(&f.src.to_le_bytes());
+    b.extend_from_slice(&f.epoch.to_le_bytes());
+    b.push(f.kind as u8);
+    b.extend_from_slice(&f.seq.to_le_bytes());
+    b.extend_from_slice(&(f.payload.len() as u64).to_le_bytes());
+    b.extend_from_slice(&f.payload);
+    let crc = crc32(&b);
+    b.extend_from_slice(&crc.to_le_bytes());
+    b
+}
+
+/// Decode and validate a frame (CRC first — a flipped bit anywhere is
+/// rejected here, which is what turns `fault`'s corrupt-message chaos into
+/// a retransmit instead of silent garbage).
+pub fn decode_frame(b: &[u8]) -> Result<Frame> {
+    if b.len() < FRAME_HEADER_LEN + 4 {
+        bail!("frame truncated: {} bytes", b.len());
+    }
+    let (body, tail) = b.split_at(b.len() - 4);
+    let stored = u32::from_le_bytes(tail.try_into().unwrap());
+    let actual = crc32(body);
+    if stored != actual {
+        bail!("frame failed CRC-32 validation (stored {stored:08x}, computed {actual:08x})");
+    }
+    let magic = u32::from_le_bytes(body[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        bail!("bad frame magic {magic:08x}");
+    }
+    let src = u32::from_le_bytes(body[4..8].try_into().unwrap());
+    let epoch = u32::from_le_bytes(body[8..12].try_into().unwrap());
+    let kind = MsgKind::parse(body[12])?;
+    let seq = u64::from_le_bytes(body[13..21].try_into().unwrap());
+    let payload_len = u64::from_le_bytes(body[21..29].try_into().unwrap()) as usize;
+    if payload_len != body.len() - FRAME_HEADER_LEN {
+        bail!(
+            "frame payload length mismatch: header says {payload_len}, got {}",
+            body.len() - FRAME_HEADER_LEN
+        );
+    }
+    Ok(Frame { src, epoch, seq, kind, payload: body[FRAME_HEADER_LEN..].to_vec() })
+}
+
+/// Decoded message payloads.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Coordinator → worker: compute gradients for `step`.
+    StepReq { step: u64 },
+    /// Worker → coordinator: block partial for `step`, with the replica's
+    /// parameter digest for drift detection.
+    Grad { step: u64, loss_sum: f32, digest: u64, grads: Vec<Vec<f32>> },
+    /// Coordinator → worker: reduced, 1/M-scaled gradients to apply as
+    /// step `step`'s single keyed update.
+    Update { step: u64, lr: f32, grads: Vec<Vec<f32>> },
+    /// Coordinator → worker: full state image (`BF16CKP2` bytes) to load.
+    Snapshot { ckpt: Vec<u8> },
+    /// Worker → coordinator: out of sync (`have_steps` applied), needs a
+    /// snapshot.
+    Nack { have_steps: u64 },
+    /// Coordinator → worker: exit cleanly.
+    Shutdown,
+}
+
+impl Msg {
+    pub fn kind(&self) -> MsgKind {
+        match self {
+            Msg::StepReq { .. } => MsgKind::StepReq,
+            Msg::Grad { .. } => MsgKind::Grad,
+            Msg::Update { .. } => MsgKind::Update,
+            Msg::Snapshot { .. } => MsgKind::Snapshot,
+            Msg::Nack { .. } => MsgKind::Nack,
+            Msg::Shutdown => MsgKind::Shutdown,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ckpt::Writer::bare();
+        match self {
+            Msg::StepReq { step } => w.u64(*step),
+            Msg::Grad { step, loss_sum, digest, grads } => {
+                w.u64(*step);
+                w.f32(*loss_sum);
+                w.u64(*digest);
+                encode_grads(&mut w, grads);
+            }
+            Msg::Update { step, lr, grads } => {
+                w.u64(*step);
+                w.f32(*lr);
+                encode_grads(&mut w, grads);
+            }
+            Msg::Snapshot { ckpt } => w.blob(ckpt),
+            Msg::Nack { have_steps } => w.u64(*have_steps),
+            Msg::Shutdown => {}
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(kind: MsgKind, payload: &[u8]) -> Result<Msg> {
+        let mut r = ckpt::Reader::bare(payload);
+        let msg = match kind {
+            MsgKind::StepReq => Msg::StepReq { step: r.u64()? },
+            MsgKind::Grad => Msg::Grad {
+                step: r.u64()?,
+                loss_sum: r.f32()?,
+                digest: r.u64()?,
+                grads: decode_grads(&mut r)?,
+            },
+            MsgKind::Update => {
+                Msg::Update { step: r.u64()?, lr: r.f32()?, grads: decode_grads(&mut r)? }
+            }
+            MsgKind::Snapshot => Msg::Snapshot { ckpt: r.blob()? },
+            MsgKind::Nack => Msg::Nack { have_steps: r.u64()? },
+            MsgKind::Shutdown => Msg::Shutdown,
+        };
+        r.expect_end().context("trailing bytes after message payload")?;
+        Ok(msg)
+    }
+}
+
+fn encode_grads(w: &mut ckpt::Writer, grads: &[Vec<f32>]) {
+    w.u64(grads.len() as u64);
+    for g in grads {
+        w.f32s(g);
+    }
+}
+
+fn decode_grads(r: &mut ckpt::Reader<'_>) -> Result<Vec<Vec<f32>>> {
+    let n = r.u64()? as usize;
+    // bound by the payload that actually arrived, so a corrupt count can't
+    // balloon the allocation
+    let mut grads = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        grads.push(r.f32s()?);
+    }
+    Ok(grads)
+}
+
+// ---------------------------------------------------------------------------
+// configuration + stats
+// ---------------------------------------------------------------------------
+
+/// Knobs for [`ShardedTrainer`].
+#[derive(Clone)]
+pub struct ShardOptions {
+    /// Worker shard count; power of two, `<= microbatches`.
+    pub shards: usize,
+    /// Microbatches per optimizer step (`M`); power of two.  Must be held
+    /// constant to compare digests across shard counts.
+    pub microbatches: usize,
+    /// Deterministic fault schedule (None = clean run).
+    pub chaos: Option<Arc<ChaosPlan>>,
+    /// First wait window for shard gradient responses; doubles per retry.
+    pub timeout: Duration,
+    /// Retransmit attempts per step before a shard is declared dead and
+    /// respawned from snapshot.
+    pub max_retries: u32,
+    /// A shard slower than `factor × median` step latency (and above
+    /// `straggler_floor`) is counted in [`ShardStats::stragglers`].
+    pub straggler_factor: f64,
+    /// Absolute latency floor below which nothing is a straggler.
+    pub straggler_floor: Duration,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        ShardOptions {
+            shards: 1,
+            microbatches: 4,
+            chaos: None,
+            timeout: Duration::from_millis(300),
+            max_retries: 3,
+            straggler_factor: 4.0,
+            straggler_floor: Duration::from_millis(25),
+        }
+    }
+}
+
+impl ShardOptions {
+    fn validate(&self) -> Result<()> {
+        if self.shards == 0 || !self.shards.is_power_of_two() {
+            bail!("--shards must be a power of two >= 1, got {}", self.shards);
+        }
+        if !self.microbatches.is_power_of_two() {
+            bail!("microbatches (--grad-accum) must be a power of two, got {}", self.microbatches);
+        }
+        if self.shards > self.microbatches {
+            bail!(
+                "{} shards need at least {} microbatches (one aligned block each); \
+                 got --grad-accum {}",
+                self.shards,
+                self.shards,
+                self.microbatches
+            );
+        }
+        if self.max_retries == 0 {
+            bail!("max_retries must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Fault/recovery counters.  Timing-dependent by design, which is exactly
+/// why they are *not* part of any parity digest.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Retransmit requests sent after a wait window expired.
+    pub retries: u64,
+    /// Workers declared dead and respawned from snapshot.
+    pub respawns: u64,
+    /// Frames rejected by CRC/format validation.
+    pub crc_rejects: u64,
+    /// Frames discarded as stale (old epoch, replayed seq, wrong step, or
+    /// duplicate gradients).
+    pub stale_frames: u64,
+    /// Out-of-sync notices from workers (each triggers a snapshot).
+    pub nacks: u64,
+    /// Replica param-digest mismatches healed by snapshot re-sync.
+    pub drift_resyncs: u64,
+    /// Update broadcasts dropped by chaos injection.
+    pub updates_dropped: u64,
+    /// Step responses that arrived but beyond the straggler threshold.
+    pub stragglers: u64,
+}
+
+impl ShardStats {
+    /// Total injected-or-detected fault events (for "the schedule actually
+    /// fired" assertions).
+    pub fn total_events(&self) -> u64 {
+        self.retries
+            + self.respawns
+            + self.crc_rejects
+            + self.nacks
+            + self.drift_resyncs
+            + self.updates_dropped
+            + self.stragglers
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker
+// ---------------------------------------------------------------------------
+
+struct WorkerSpec<T: Task> {
+    task: T,
+    modes: Vec<Mode>,
+    id: u32,
+    epoch: u32,
+    shards: usize,
+    microbatches: usize,
+    rx: Receiver<Vec<u8>>,
+    tx: Sender<Vec<u8>>,
+    chaos: Option<Arc<ChaosPlan>>,
+}
+
+/// Worker main loop: a replica trainer answering step requests with block
+/// partials and applying broadcast updates.  Exits on `Shutdown`, channel
+/// disconnect, injected crash, or an unloadable snapshot.
+fn worker_loop<T: Task>(spec: WorkerSpec<T>) {
+    let WorkerSpec { task, modes, id, epoch, shards, microbatches, rx, tx, chaos } = spec;
+    let mut tr = Trainer::new_mixed(task, modes).with_grad_accum(microbatches);
+    let per = microbatches / shards;
+    let lo = id as usize * per;
+    let mut seq = 0u64;
+    // the last computed gradient frame: duplicate step requests (the
+    // coordinator's retransmit mechanism) are answered from here, never by
+    // recomputing — the data stream has already advanced past this step
+    let mut cached: Option<(u64, Vec<u8>)> = None;
+    let mut send = |seq: &mut u64, kind: MsgKind, payload: Vec<u8>| -> bool {
+        *seq += 1;
+        let frame = Frame { src: id, epoch, seq: *seq, kind, payload };
+        tx.send(encode_frame(&frame)).is_ok()
+    };
+    for buf in rx.iter() {
+        let Ok(frame) = decode_frame(&buf) else {
+            continue; // corrupt inbound frame: the coordinator will retry
+        };
+        let Ok(msg) = Msg::decode(frame.kind, &frame.payload) else {
+            continue;
+        };
+        match msg {
+            Msg::StepReq { step } => {
+                if let Some((s, payload)) = &cached {
+                    if *s == step {
+                        if !send(&mut seq, MsgKind::Grad, payload.clone()) {
+                            return;
+                        }
+                        continue;
+                    }
+                }
+                if step != tr.steps_done() {
+                    // missed an update (or got a request from the future):
+                    // ask for a snapshot instead of computing from stale
+                    // parameters
+                    if !send(&mut seq, MsgKind::Nack, Msg::Nack { have_steps: tr.steps_done() }
+                        .encode())
+                    {
+                        return;
+                    }
+                    continue;
+                }
+                let mut drop_grad = false;
+                let mut corrupt_grad = false;
+                if let Some(plan) = &chaos {
+                    if let Some(ev) = plan.take_worker(step, id) {
+                        match ev.kind {
+                            ChaosKind::Crash => return,
+                            ChaosKind::Stall => {
+                                std::thread::sleep(Duration::from_millis(ev.stall_ms))
+                            }
+                            ChaosKind::DropGrad => drop_grad = true,
+                            ChaosKind::CorruptGrad => corrupt_grad = true,
+                            ChaosKind::DropUpdate => unreachable!("coordinator-site event"),
+                        }
+                    }
+                }
+                // exactly M draws per step: skip the blocks other shards
+                // own, draw our aligned block
+                tr.skip_batches(lo as u64);
+                let mut parts = Vec::with_capacity(per);
+                for _ in 0..per {
+                    let batch = tr.draw_batch();
+                    parts.push(tr.grad_batch(&batch));
+                }
+                tr.skip_batches((microbatches - lo - per) as u64);
+                let (loss_sum, grads) = tree_reduce(parts);
+                let digest = tr.param_digest();
+                let payload = Msg::Grad { step, loss_sum, digest, grads }.encode();
+                cached = Some((step, payload.clone()));
+                if drop_grad {
+                    continue; // computed and cached, never sent: retransmit will deliver
+                }
+                seq += 1;
+                let mut bytes =
+                    encode_frame(&Frame { src: id, epoch, seq, kind: MsgKind::Grad, payload });
+                if corrupt_grad {
+                    if let Some(plan) = &chaos {
+                        plan.corrupt_frame(&mut bytes, FRAME_HEADER_LEN, step, id);
+                    }
+                }
+                if tx.send(bytes).is_err() {
+                    return;
+                }
+            }
+            Msg::Update { step, lr, grads } => {
+                if step != tr.steps_done() {
+                    continue; // stale broadcast for a step we already applied
+                }
+                tr.apply_update(0.0, grads, lr);
+                cached = None;
+            }
+            Msg::Snapshot { ckpt } => {
+                if tr.load_checkpoint_bytes(&ckpt).is_err() {
+                    return; // unloadable state: die, the coordinator respawns us
+                }
+                cached = None;
+            }
+            Msg::Shutdown => return,
+            Msg::Grad { .. } | Msg::Nack { .. } => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator
+// ---------------------------------------------------------------------------
+
+struct WorkerHandle {
+    epoch: u32,
+    tx: Sender<Vec<u8>>,
+    last_seq: u64,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Data-parallel trainer: `N` worker shards over the checksummed frame
+/// transport, one authoritative keyed-SR update per step.  Bit-identical
+/// to [`Trainer`] with `grad_accum = microbatches` at every power-of-two
+/// shard count, under any `qsim::fault` schedule.
+pub struct ShardedTrainer<T: Task + Clone + Send + 'static> {
+    inner: Trainer<T>,
+    task: T,
+    modes: Vec<Mode>,
+    opts: ShardOptions,
+    workers: Vec<WorkerHandle>,
+    rx: Receiver<Vec<u8>>,
+    tx: Sender<Vec<u8>>,
+    send_seq: u64,
+    stats: ShardStats,
+    /// Monotone epoch source for respawns (shared with nothing; atomic so
+    /// `&mut self` borrows stay simple).
+    next_epoch: AtomicU64,
+}
+
+impl<T: Task + Clone + Send + 'static> ShardedTrainer<T> {
+    /// All parameter tensors share one precision mode.
+    pub fn new(task: T, mode: Mode, opts: ShardOptions) -> Result<Self> {
+        let n = task.num_tensors();
+        Self::new_mixed(task, vec![mode; n], opts)
+    }
+
+    /// Per-tensor precision modes, as [`Trainer::new_mixed`].
+    pub fn new_mixed(task: T, modes: Vec<Mode>, opts: ShardOptions) -> Result<Self> {
+        opts.validate()?;
+        let inner =
+            Trainer::new_mixed(task.clone(), modes.clone()).with_grad_accum(opts.microbatches);
+        let (tx, rx) = mpsc::channel();
+        let mut st = ShardedTrainer {
+            inner,
+            task,
+            modes,
+            opts,
+            workers: Vec::new(),
+            rx,
+            tx,
+            send_seq: 0,
+            stats: ShardStats::default(),
+            next_epoch: AtomicU64::new(1),
+        };
+        for id in 0..st.opts.shards {
+            let w = st.spawn_worker(id as u32)?;
+            st.workers.push(w);
+        }
+        Ok(st)
+    }
+
+    fn spawn_worker(&self, id: u32) -> Result<WorkerHandle> {
+        let epoch = self.next_epoch.fetch_add(1, Ordering::Relaxed) as u32;
+        let (tx, rx) = mpsc::channel();
+        let spec = WorkerSpec {
+            task: self.task.clone(),
+            modes: self.modes.clone(),
+            id,
+            epoch,
+            shards: self.opts.shards,
+            microbatches: self.opts.microbatches,
+            rx,
+            tx: self.tx.clone(),
+            chaos: self.opts.chaos.clone(),
+        };
+        let join = std::thread::Builder::new()
+            .name(format!("qsim-shard-{id}"))
+            .spawn(move || worker_loop(spec))
+            .context("spawning shard worker thread")?;
+        Ok(WorkerHandle { epoch, tx, last_seq: 0, join: Some(join) })
+    }
+
+    fn send_to(&mut self, id: usize, msg: &Msg) -> bool {
+        self.send_seq += 1;
+        let frame = Frame {
+            src: COORD_SRC,
+            epoch: self.workers[id].epoch,
+            seq: self.send_seq,
+            kind: msg.kind(),
+            payload: msg.encode(),
+        };
+        self.workers[id].tx.send(encode_frame(&frame)).is_ok()
+    }
+
+    /// Replace worker `id` with a fresh incarnation (new epoch — frames
+    /// from the old thread are fenced out) and stream it the last good
+    /// checkpoint.  The replica loads it and fast-forwards its data stream
+    /// by `steps × M` batches.
+    fn respawn(&mut self, id: usize) {
+        self.stats.respawns += 1;
+        let fresh = self.spawn_worker(id as u32).expect("respawning shard worker");
+        // old thread: drop its sender; it exits on channel disconnect (or
+        // already has).  Detach the old join handle.
+        self.workers[id] = fresh;
+        let snap = Msg::Snapshot { ckpt: self.inner.checkpoint_bytes() };
+        let _ = self.send_to(id, &snap);
+    }
+
+    /// Send the current snapshot to a live-but-drifted worker; respawn it
+    /// if even that send fails.
+    fn resync(&mut self, id: usize) {
+        let snap = Msg::Snapshot { ckpt: self.inner.checkpoint_bytes() };
+        if !self.send_to(id, &snap) {
+            self.respawn(id);
+        }
+    }
+
+    fn send_step_req(&mut self, id: usize, step: u64) {
+        if !self.send_to(id, &Msg::StepReq { step }) {
+            // dead channel: the worker crashed since its last reply
+            self.respawn(id);
+            let _ = self.send_to(id, &Msg::StepReq { step });
+        }
+    }
+
+    /// One data-parallel optimizer step.  Survives any `qsim::fault`
+    /// schedule with the exact bits of the clean single-shard run; panics
+    /// only if shards stay unresponsive long past the retry budget (a bug,
+    /// not an injected fault — every injected fault is recoverable).
+    pub fn step(&mut self, lr: f32) -> StepTelemetry {
+        let step = self.inner.steps_done();
+        let n = self.opts.shards;
+        let m = self.opts.microbatches;
+        let expected_digest = self.inner.param_digest();
+        for id in 0..n {
+            self.send_step_req(id, step);
+        }
+        let mut partials: Vec<Option<GradPartial>> = (0..n).map(|_| None).collect();
+        let mut latency: Vec<Duration> = vec![Duration::ZERO; n];
+        let t0 = Instant::now();
+        let mut window = self.opts.timeout;
+        let mut timeouts = 0u32;
+        // a respawn resets the budget once; beyond that, something is wrong
+        let budget = self.opts.max_retries * 2 + 2;
+        while partials.iter().any(Option::is_none) {
+            match self.rx.recv_timeout(window) {
+                Err(RecvTimeoutError::Disconnected) => {
+                    unreachable!("coordinator holds a sender clone; channel cannot disconnect")
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    timeouts += 1;
+                    assert!(
+                        timeouts <= budget,
+                        "step {step}: shards unresponsive after {timeouts} wait windows \
+                         (respawns {}, retries {}) — transport bug, not an injected fault",
+                        self.stats.respawns,
+                        self.stats.retries
+                    );
+                    for id in 0..n {
+                        if partials[id].is_some() {
+                            continue;
+                        }
+                        if timeouts > self.opts.max_retries {
+                            self.respawn(id);
+                            self.send_step_req(id, step);
+                        } else {
+                            self.stats.retries += 1;
+                            self.send_step_req(id, step);
+                        }
+                    }
+                    // exponential backoff, bounded
+                    window = (window * 2).min(self.opts.timeout * 16);
+                }
+                Ok(buf) => {
+                    let frame = match decode_frame(&buf) {
+                        Ok(f) => f,
+                        Err(_) => {
+                            // CRC/format reject: the source is unreadable,
+                            // so re-request from every shard still missing
+                            self.stats.crc_rejects += 1;
+                            for id in 0..n {
+                                if partials[id].is_none() {
+                                    self.stats.retries += 1;
+                                    self.send_step_req(id, step);
+                                }
+                            }
+                            continue;
+                        }
+                    };
+                    let id = frame.src as usize;
+                    if id >= n
+                        || frame.epoch != self.workers[id].epoch
+                        || frame.seq <= self.workers[id].last_seq
+                    {
+                        // zombie incarnation or replayed frame
+                        self.stats.stale_frames += 1;
+                        continue;
+                    }
+                    self.workers[id].last_seq = frame.seq;
+                    let msg = match Msg::decode(frame.kind, &frame.payload) {
+                        Ok(m) => m,
+                        Err(_) => {
+                            self.stats.crc_rejects += 1;
+                            self.stats.retries += 1;
+                            self.send_step_req(id, step);
+                            continue;
+                        }
+                    };
+                    match msg {
+                        Msg::Grad { step: s, loss_sum, digest, grads } => {
+                            if s != step || partials[id].is_some() {
+                                self.stats.stale_frames += 1;
+                                continue;
+                            }
+                            if digest != expected_digest {
+                                // replica drift (e.g. lost update): heal
+                                // and recompute; never accept the values
+                                self.stats.drift_resyncs += 1;
+                                self.resync(id);
+                                self.send_step_req(id, step);
+                                continue;
+                            }
+                            latency[id] = t0.elapsed();
+                            partials[id] = Some((loss_sum, grads));
+                        }
+                        Msg::Nack { .. } => {
+                            self.stats.nacks += 1;
+                            self.resync(id);
+                            self.send_step_req(id, step);
+                        }
+                        _ => {
+                            self.stats.stale_frames += 1;
+                        }
+                    }
+                }
+            }
+        }
+        // straggler accounting: responders far beyond the step median
+        if n > 1 {
+            let mut sorted = latency.clone();
+            sorted.sort();
+            let median = sorted[n / 2];
+            let threshold = self
+                .opts
+                .straggler_floor
+                .max(median.mul_f64(self.opts.straggler_factor));
+            self.stats.stragglers += latency.iter().filter(|&&l| l > threshold).count() as u64;
+        }
+        // combine the N block roots with the tree's upper levels, scale by
+        // 1/M, apply the single keyed update — identical arithmetic to
+        // Trainer::step_accum
+        let (loss_sum, mut grads) =
+            tree_reduce(partials.into_iter().map(|p| p.expect("all present")).collect());
+        let inv = 1.0 / m as f32;
+        scale_grads(&mut grads, inv);
+        let update = Msg::Update { step, lr, grads: grads.clone() };
+        let tel = self.inner.apply_update(loss_sum * inv, grads, lr);
+        for id in 0..n {
+            let dropped = self
+                .opts
+                .chaos
+                .as_ref()
+                .map(|p| p.take_drop_update(step, id as u32))
+                .unwrap_or(false);
+            if dropped {
+                self.stats.updates_dropped += 1;
+                continue; // the replica drifts; its next digest exposes it
+            }
+            let _ = self.send_to(id, &update); // send failure ⇒ next step respawns
+        }
+        tel
+    }
+
+    /// Evaluate on the coordinator's dedicated eval fork (identical to the
+    /// single-process trainer's).
+    pub fn eval(&mut self, n: usize) -> EvalMetrics {
+        self.inner.eval(n)
+    }
+
+    pub fn steps_done(&self) -> u64 {
+        self.inner.steps_done()
+    }
+
+    pub fn stats(&self) -> ShardStats {
+        self.stats
+    }
+
+    pub fn shards(&self) -> usize {
+        self.opts.shards
+    }
+
+    pub fn microbatches(&self) -> usize {
+        self.opts.microbatches
+    }
+
+    /// The authoritative trainer (parameters, telemetry accounting, byte
+    /// measurement).
+    pub fn trainer(&self) -> &Trainer<T> {
+        &self.inner
+    }
+
+    pub fn param_digest(&self) -> u64 {
+        self.inner.param_digest()
+    }
+
+    /// Save the authoritative state (atomic, CRC-footed `BF16CKP2`).
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.inner.save_checkpoint(path)
+    }
+
+    /// Load a checkpoint (any shard count may resume it — the fingerprint
+    /// records `M`, not `N`) and re-sync every worker replica to it.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.inner.load_checkpoint(path)?;
+        for id in 0..self.opts.shards {
+            self.resync(id);
+        }
+        Ok(())
+    }
+}
+
+impl<T: Task + Clone + Send + 'static> Drop for ShardedTrainer<T> {
+    fn drop(&mut self) {
+        for id in 0..self.workers.len() {
+            let _ = self.send_to(id, &Msg::Shutdown);
+        }
+        for w in &mut self.workers {
+            // dropping the sender guarantees the worker's recv loop ends
+            // even if the shutdown frame raced a full queue
+            let (dead_tx, _) = mpsc::channel();
+            w.tx = dead_tx;
+            if let Some(join) = w.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::Mode;
+    use crate::qsim::dlrm::DlrmConfig;
+    use crate::qsim::fault::ChaosConfig;
+    use crate::qsim::mlp::MlpConfig;
+
+    fn opts(shards: usize, microbatches: usize) -> ShardOptions {
+        ShardOptions { shards, microbatches, ..Default::default() }
+    }
+
+    fn chaos(spec: &str) -> Option<Arc<ChaosPlan>> {
+        Some(Arc::new(ChaosPlan::new(ChaosConfig::parse(spec).unwrap())))
+    }
+
+    #[test]
+    fn frame_roundtrip_and_corruption_detection() {
+        let f = Frame {
+            src: 3,
+            epoch: 7,
+            seq: 42,
+            kind: MsgKind::Grad,
+            payload: vec![1, 2, 3, 4, 5],
+        };
+        let bytes = encode_frame(&f);
+        assert_eq!(decode_frame(&bytes).unwrap(), f);
+        // a flipped bit anywhere in the frame — header, payload or CRC —
+        // must be rejected (CRC-32 catches every single-bit error)
+        for byte in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[byte] ^= 1;
+            assert!(decode_frame(&m).is_err(), "flip at byte {byte} went undetected");
+        }
+        // message payloads round-trip through the bare framing
+        let msg = Msg::Grad {
+            step: 9,
+            loss_sum: 1.25,
+            digest: 0xdead_beef,
+            grads: vec![vec![1.0, -2.0], vec![0.5]],
+        };
+        assert_eq!(Msg::decode(MsgKind::Grad, &msg.encode()).unwrap(), msg);
+        let upd = Msg::Update { step: 3, lr: 0.1, grads: vec![vec![0.25; 4]] };
+        assert_eq!(Msg::decode(MsgKind::Update, &upd.encode()).unwrap(), upd);
+    }
+
+    /// The associativity schedule behind everything: reducing M leaves
+    /// directly equals reducing N aligned block-partials of M/N leaves,
+    /// for every power-of-two N — at the bit level.
+    #[test]
+    fn tree_reduce_is_block_composable() {
+        let m = 8usize;
+        let leaves: Vec<GradPartial> = (0..m)
+            .map(|i| {
+                let x = i as f32 * 0.37 + 1.0;
+                (x * 0.25, vec![vec![x, -x, x * 0.513], vec![1.0 / x]])
+            })
+            .collect();
+        let direct = tree_reduce(leaves.clone());
+        for n in [1usize, 2, 4, 8] {
+            let per = m / n;
+            let blocks: Vec<GradPartial> = (0..n)
+                .map(|b| tree_reduce(leaves[b * per..(b + 1) * per].to_vec()))
+                .collect();
+            let combined = tree_reduce(blocks);
+            assert_eq!(combined.0.to_bits(), direct.0.to_bits(), "loss bits at n={n}");
+            for (a, b) in combined.1.iter().zip(&direct.1) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "grad bits at n={n}");
+                }
+            }
+        }
+    }
+
+    /// Tentpole: the sharded engine IS the single-process accumulation
+    /// trainer, bit for bit — losses, telemetry and final parameters.
+    #[test]
+    fn sharded_matches_single_process_accum_bit_for_bit() {
+        let task = MlpConfig { seed: 13, ..Default::default() };
+        let mut solo = Trainer::new(task.clone(), Mode::Sr16).with_grad_accum(4);
+        let mut sharded = ShardedTrainer::new(task, Mode::Sr16, opts(2, 4)).unwrap();
+        for step in 0..8 {
+            let a = solo.step(0.1);
+            let b = sharded.step(0.1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged at step {step}");
+            assert_eq!(a.embed, b.embed, "embed stats, step {step}");
+            assert_eq!(a.mlp, b.mlp, "mlp stats, step {step}");
+        }
+        assert_eq!(solo.param_digest(), sharded.param_digest());
+        assert_eq!(sharded.stats().total_events(), 0, "clean run must record no fault events");
+    }
+
+    /// Same contract on the embedding-heavy app (sparse rows + dense MLP,
+    /// Kahan state in flight).
+    #[test]
+    fn dlrm_sharded_matches_single_process() {
+        let task = DlrmConfig { seed: 3, ..Default::default() };
+        let mut solo = Trainer::new(task.clone(), Mode::SrKahan16).with_grad_accum(4);
+        let mut sharded = ShardedTrainer::new(task, Mode::SrKahan16, opts(4, 4)).unwrap();
+        for step in 0..4 {
+            let a = solo.step(0.05);
+            let b = sharded.step(0.05);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged at step {step}");
+        }
+        assert_eq!(solo.param_digest(), sharded.param_digest());
+    }
+
+    /// The shard count is a pure deployment knob: 1, 2 and 4 shards over
+    /// the same microbatch grid produce identical bits.
+    #[test]
+    fn shard_counts_are_interchangeable() {
+        let run = |n: usize| {
+            let task = MlpConfig { seed: 29, ..Default::default() };
+            let mut tr = ShardedTrainer::new(task, Mode::Sr16, opts(n, 4)).unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..6 {
+                losses.push(tr.step(0.1).loss.to_bits());
+            }
+            (losses, tr.param_digest())
+        };
+        let base = run(1);
+        assert_eq!(run(2), base, "2 shards diverged from 1");
+        assert_eq!(run(4), base, "4 shards diverged from 1");
+    }
+
+    /// Every injected fault kind recovers to the exact clean-run bits, and
+    /// the matching recovery counter proves the fault actually fired.
+    #[test]
+    fn every_chaos_kind_recovers_bit_identically() {
+        let clean = {
+            let task = MlpConfig { seed: 5, ..Default::default() };
+            let mut tr = ShardedTrainer::new(task, Mode::Sr16, opts(4, 4)).unwrap();
+            for _ in 0..6 {
+                tr.step(0.1);
+            }
+            tr.param_digest()
+        };
+        for spec in
+            ["crash@2.1", "drop@1.3", "corrupt@3.0", "drop-update@2.2", "stall@4.3:150"]
+        {
+            let task = MlpConfig { seed: 5, ..Default::default() };
+            let mut o = opts(4, 4);
+            o.chaos = chaos(spec);
+            if spec.starts_with("stall") {
+                // make the stalled shard an unambiguous straggler
+                o.straggler_floor = Duration::from_millis(50);
+                o.straggler_factor = 1.5;
+            }
+            let mut tr = ShardedTrainer::new(task, Mode::Sr16, o).unwrap();
+            for _ in 0..6 {
+                tr.step(0.1);
+            }
+            assert_eq!(tr.param_digest(), clean, "chaos {spec} changed the trajectory");
+            let st = tr.stats();
+            match spec.split('@').next().unwrap() {
+                "crash" => assert!(st.respawns >= 1, "{spec}: {st:?}"),
+                "drop" => assert!(st.retries >= 1, "{spec}: {st:?}"),
+                "corrupt" => assert!(st.crc_rejects >= 1, "{spec}: {st:?}"),
+                "drop-update" => assert!(
+                    st.updates_dropped >= 1 && st.nacks + st.drift_resyncs >= 1,
+                    "{spec}: {st:?}"
+                ),
+                "stall" => assert!(st.stragglers >= 1, "{spec}: {st:?}"),
+                other => unreachable!("unknown spec prefix {other}"),
+            }
+        }
+    }
+
+    /// Checkpoints are shard-count-portable: save from a 2-shard run,
+    /// resume into a 4-shard run, continue bit-identically (the
+    /// fingerprint records the microbatch grid M, never N).
+    #[test]
+    fn sharded_checkpoint_resumes_at_any_shard_count() {
+        let dir = std::env::temp_dir().join("bf16_qsim_shard_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard_resume.ckpt");
+        let task = MlpConfig { seed: 17, ..Default::default() };
+        let mut full = ShardedTrainer::new(task.clone(), Mode::Sr16, opts(2, 4)).unwrap();
+        let mut interrupted =
+            ShardedTrainer::new(task.clone(), Mode::Sr16, opts(2, 4)).unwrap();
+        for _ in 0..4 {
+            full.step(0.1);
+            interrupted.step(0.1);
+        }
+        interrupted.save_checkpoint(&path).unwrap();
+        drop(interrupted);
+        let mut resumed = ShardedTrainer::new(task, Mode::Sr16, opts(4, 4)).unwrap();
+        resumed.load_checkpoint(&path).unwrap();
+        assert_eq!(resumed.steps_done(), 4);
+        for step in 0..4 {
+            let a = full.step(0.1);
+            let b = resumed.step(0.1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "post-resume step {step}");
+        }
+        assert_eq!(full.param_digest(), resumed.param_digest());
+    }
+
+    #[test]
+    fn invalid_shard_geometry_is_rejected() {
+        let mk = |n, m| ShardedTrainer::new(MlpConfig::default(), Mode::Sr16, opts(n, m));
+        assert!(mk(0, 4).is_err(), "zero shards");
+        assert!(mk(3, 4).is_err(), "non-power-of-two shards");
+        assert!(mk(1, 3).is_err(), "non-power-of-two microbatches");
+        assert!(mk(8, 4).is_err(), "more shards than microbatches");
+    }
+}

@@ -40,6 +40,7 @@ use crate::util::ckpt;
 
 use super::optim::{Sgd, SgdState, UpdateStats};
 use super::pool::Pool;
+use super::shard::{scale_grads, tree_reduce};
 use super::tape::{QPolicy, Tape, Var};
 use super::tensor::{Storage, Tensor};
 use super::Backend;
@@ -197,6 +198,15 @@ pub struct Trainer<T: Task> {
     /// every optimizer hold clones of this handle).
     pool: Arc<Pool>,
     steps_done: u64,
+    /// Microbatches per optimizer step (gradient accumulation).  1 keeps
+    /// the original single-batch step byte-for-byte; >1 draws this many
+    /// batches per step, combines their gradients with the fixed pairwise
+    /// reduction tree of [`tree_reduce`], scales by `1/M`, and applies one
+    /// keyed-SR update.  Must be a power of two: the fixed tree topology is
+    /// what makes an `N`-shard data-parallel run (shard = an aligned block
+    /// of microbatches = a complete subtree) bit-identical to this
+    /// single-process trainer for every power-of-two `N <= M`.
+    grad_accum: usize,
 }
 
 impl<T: Task> Trainer<T> {
@@ -257,7 +267,38 @@ impl<T: Task> Trainer<T> {
         let gen = task.make_gen();
         let eval_gen = T::fork_gen(&gen, T::EVAL_STREAM);
         let tape = Tape::with_pool(policy, Arc::clone(&pool));
-        Self { task, model, modes, opts, states, gen, eval_gen, policy, tape, pool, steps_done: 0 }
+        Self {
+            task,
+            model,
+            modes,
+            opts,
+            states,
+            gen,
+            eval_gen,
+            policy,
+            tape,
+            pool,
+            steps_done: 0,
+            grad_accum: 1,
+        }
+    }
+
+    /// Train with `m` microbatches per optimizer step (gradient
+    /// accumulation over the fixed reduction tree).  Must be called before
+    /// any step runs, and `m` must be a power of two — see the field docs.
+    pub fn with_grad_accum(mut self, m: usize) -> Self {
+        assert!(
+            m >= 1 && m.is_power_of_two(),
+            "grad_accum must be a power of two (fixed reduction-tree topology), got {m}"
+        );
+        assert_eq!(self.steps_done, 0, "set grad_accum before training, not mid-run");
+        self.grad_accum = m;
+        self
+    }
+
+    /// Microbatches per optimizer step (1 = plain single-batch training).
+    pub fn grad_accum(&self) -> usize {
+        self.grad_accum
     }
 
     /// Effective intra-step worker count (1 unless configured otherwise).
@@ -288,6 +329,9 @@ impl<T: Task> Trainer<T> {
     /// allocation-free.  `Reference` backend: a fresh tape per step,
     /// reproducing the pre-optimization allocation pattern.
     pub fn step(&mut self, lr: f32) -> StepTelemetry {
+        if self.grad_accum > 1 {
+            return self.step_accum(lr);
+        }
         let batch = T::next_batch(&mut self.gen);
         if self.policy.backend.pooled() {
             self.tape.reset();
@@ -320,6 +364,99 @@ impl<T: Task> Trainer<T> {
         }
         self.steps_done += 1;
         tel
+    }
+
+    /// One optimizer step over `grad_accum` microbatches: the reference
+    /// semantics that `qsim::shard`'s data-parallel engine must reproduce
+    /// bit-for-bit at every shard count.
+    fn step_accum(&mut self, lr: f32) -> StepTelemetry {
+        let m = self.grad_accum;
+        let mut parts = Vec::with_capacity(m);
+        for _ in 0..m {
+            let batch = T::next_batch(&mut self.gen);
+            parts.push(self.grad_batch(&batch));
+        }
+        let (loss_sum, mut grads) = tree_reduce(parts);
+        let inv = 1.0 / m as f32;
+        scale_grads(&mut grads, inv);
+        self.apply_update(loss_sum * inv, grads, lr)
+    }
+
+    /// Forward + backward over one caller-supplied batch, returning the
+    /// loss and per-parameter flat gradients (f32 bit patterns, walk
+    /// order).  Because compute-path rounding is deterministic
+    /// round-to-nearest — only the optimizer update consumes keyed dither —
+    /// this is a pure function of (parameters, batch), which is what lets
+    /// shards compute gradients independently yet bit-identically.  Does
+    /// not advance the step counter.
+    pub fn grad_batch(&mut self, batch: &T::Batch) -> (f32, Vec<Vec<f32>>) {
+        if self.policy.backend.pooled() {
+            self.tape.reset();
+        } else {
+            self.tape = Tape::new(self.policy);
+        }
+        let (loss, param_vars) = T::forward_into(&self.model, &mut self.tape, batch);
+        self.tape.backward(loss);
+        let loss_val = self.tape.value(loss).item();
+        let tape = &self.tape;
+        let grads = T::param_tensors(&self.model)
+            .iter()
+            .zip(&param_vars)
+            .map(|(w, var)| match tape.grad(*var) {
+                Some(g) => g.data.clone(),
+                None => vec![0.0; w.len()],
+            })
+            .collect();
+        (loss_val, grads)
+    }
+
+    /// Apply one optimizer update from pre-reduced flat gradients (walk
+    /// order; already scaled by the caller).  Advances the step counter —
+    /// the SR dither step coordinate — exactly once, which is how one
+    /// coordinator update and N replica updates stay bit-identical.
+    /// `loss` is recorded in the returned telemetry verbatim.
+    pub fn apply_update(&mut self, loss: f32, grads: Vec<Vec<f32>>, lr: f32) -> StepTelemetry {
+        assert_eq!(grads.len(), self.modes.len(), "one gradient per parameter tensor");
+        let mut tel = StepTelemetry { loss, ..Default::default() };
+        let params = T::param_tensors_mut(&mut self.model);
+        for (i, (w, g)) in params.into_iter().zip(grads).enumerate() {
+            assert_eq!(g.len(), w.len(), "gradient {i} length mismatch");
+            let gt = Tensor::from_vec(w.rows, w.cols, g);
+            let stats = self.opts[i].step(w, &mut self.states[i], &gt, lr);
+            match self.task.tensor_class(i) {
+                TensorClass::Embed => tel.embed.merge(stats),
+                TensorClass::Dense => tel.mlp.merge(stats),
+            }
+        }
+        self.steps_done += 1;
+        tel
+    }
+
+    /// Draw the next training batch (shard workers pull their microbatch
+    /// block through this).
+    pub fn draw_batch(&mut self) -> T::Batch {
+        T::next_batch(&mut self.gen)
+    }
+
+    /// Fast-forward the training stream past `n` batches (shard workers
+    /// skip the microbatches other shards own).
+    pub fn skip_batches(&mut self, n: u64) {
+        T::skip_batches(&mut self.gen, n);
+    }
+
+    /// FNV-1a digest over the exact bit patterns of every parameter, in
+    /// walk order.  Shard replicas include this in every gradient message;
+    /// a mismatch against the coordinator's own digest means the replica
+    /// drifted (e.g. a lost update broadcast) and triggers a snapshot
+    /// re-sync instead of a silent divergence.
+    pub fn param_digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for t in T::param_tensors(&self.model) {
+            for v in t.to_f32_vec() {
+                h = (h ^ v.to_bits() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
     }
 
     /// Evaluate over `n` fresh batches from the dedicated eval stream.
@@ -375,6 +512,22 @@ impl<T: Task> Trainer<T> {
         format!("qsim/{}", T::NAME)
     }
 
+    /// Config fingerprint as recorded in checkpoints: the task fingerprint,
+    /// plus the microbatch count when it differs from the default — `M`
+    /// changes what a "step" means (M batches, 1/M-scaled tree-reduced
+    /// gradients), so resuming across an accumulation mismatch must fail
+    /// loudly.  Plain trainers keep the bare task fingerprint, so existing
+    /// checkpoints stay loadable.  The shard count is deliberately *not*
+    /// recorded: results are bit-identical across shard counts, so resuming
+    /// at a different N is legitimate.
+    fn ckpt_fingerprint(&self) -> String {
+        if self.grad_accum == 1 {
+            self.task.config_fingerprint()
+        } else {
+            format!("{}|accum={}", self.task.config_fingerprint(), self.grad_accum)
+        }
+    }
+
     /// Save all training state to a binary checkpoint (`BF16CKP2`, the
     /// same format family as the PJRT coordinator path).
     ///
@@ -388,10 +541,18 @@ impl<T: Task> Trainer<T> {
     /// and the training stream is fast-forwarded past the consumed batches
     /// on load.
     pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        ckpt::write_atomic(path.as_ref(), &self.checkpoint_bytes())
+            .with_context(|| format!("writing checkpoint {:?}", path.as_ref()))
+    }
+
+    /// The checkpoint image as bytes (CRC-32-footed `BF16CKP2`), without
+    /// touching the filesystem — this is also the snapshot the sharded
+    /// coordinator streams to a respawned or drifted shard replica.
+    pub fn checkpoint_bytes(&self) -> Vec<u8> {
         let mut w = ckpt::Writer::new();
         w.str(&self.ckpt_name());
         w.str(self.task.fmt().name);
-        w.str(&self.task.config_fingerprint());
+        w.str(&self.ckpt_fingerprint());
         w.u64(self.modes.len() as u64);
         for m in &self.modes {
             w.str(m.name());
@@ -413,9 +574,7 @@ impl<T: Task> Trainer<T> {
             let kah = st.kahan.as_ref().map(|k| k.to_f32_vec());
             w.opt_f32s(kah.as_deref());
         }
-        std::fs::write(path.as_ref(), w.into_bytes())
-            .with_context(|| format!("writing checkpoint {:?}", path.as_ref()))?;
-        Ok(())
+        w.into_bytes()
     }
 
     /// Restore training state from a checkpoint written by
@@ -434,8 +593,14 @@ impl<T: Task> Trainer<T> {
     pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
         let buf = std::fs::read(path.as_ref())
             .with_context(|| format!("reading checkpoint {:?}", path.as_ref()))?;
-        let mut r = ckpt::Reader::new(&buf)
-            .with_context(|| format!("checkpoint {:?}", path.as_ref()))?;
+        self.load_checkpoint_bytes(&buf)
+            .with_context(|| format!("checkpoint {:?}", path.as_ref()))
+    }
+
+    /// Restore from an in-memory checkpoint image (shard replicas apply
+    /// coordinator snapshots through this).
+    pub fn load_checkpoint_bytes(&mut self, buf: &[u8]) -> Result<()> {
+        let mut r = ckpt::Reader::new(buf)?;
         self.load_checkpoint_reader(&mut r)
     }
 
@@ -456,7 +621,7 @@ impl<T: Task> Trainer<T> {
             );
         }
         let fingerprint = r.str()?;
-        let expected_fp = self.task.config_fingerprint();
+        let expected_fp = self.ckpt_fingerprint();
         if fingerprint != expected_fp {
             bail!(
                 "checkpoint was saved from a differently-configured trainer \
@@ -509,6 +674,9 @@ impl<T: Task> Trainer<T> {
             }
             loaded.push((w, mom, kah));
         }
+        // every field consumed: trailing bytes mean corruption (or a newer
+        // writer), not something to silently ignore
+        r.expect_end()?;
         // Phase 2: apply — nothing below can fail (lengths were validated
         // above, and `set_from_f32` re-narrows native 16-bit buffers).
         for ((t, st), (w, mom, kah)) in T::param_tensors_mut(&mut self.model)
@@ -531,10 +699,11 @@ impl<T: Task> Trainer<T> {
         }
         // Reposition the training stream: generators are sequential, so a
         // resumed run must consume the same prefix the original run did to
-        // replay the remaining batches exactly.  The eval fork is rebuilt
-        // fresh (eval draws never influence training).
+        // replay the remaining batches exactly (each step consumed
+        // `grad_accum` batches).  The eval fork is rebuilt fresh (eval
+        // draws never influence training).
         let mut gen = self.task.make_gen();
-        T::skip_batches(&mut gen, steps);
+        T::skip_batches(&mut gen, steps.saturating_mul(self.grad_accum as u64));
         self.eval_gen = T::fork_gen(&gen, T::EVAL_STREAM);
         self.gen = gen;
         Ok(())
@@ -877,5 +1046,84 @@ mod tests {
         assert_eq!(dlrm.measured_weight_bytes(), dlrm.weight_bytes());
         let gpt = GptTrainer::new(GptConfig::default(), Mode::Standard16);
         assert_eq!(gpt.measured_weight_bytes(), gpt.weight_bytes());
+    }
+
+    /// Gradient accumulation: a resumed accum-4 run is bit-identical to an
+    /// uninterrupted one (the generator fast-forward must account for M
+    /// batches per step), and a checkpoint written at a different accum
+    /// count refuses to load (a "step" means something else there).
+    #[test]
+    fn grad_accum_resume_is_bit_identical_and_mismatch_fails() {
+        let mk = || {
+            MlpTrainer::new(MlpConfig { seed: 13, ..Default::default() }, Mode::Sr16)
+                .with_grad_accum(4)
+        };
+        let path = tmp("mlp_accum4.ckpt");
+        let mut full = mk();
+        let mut interrupted = mk();
+        for _ in 0..6 {
+            full.step(0.1);
+            interrupted.step(0.1);
+        }
+        interrupted.save_checkpoint(&path).unwrap();
+        let mut resumed = mk();
+        resumed.load_checkpoint(&path).unwrap();
+        for step in 0..6 {
+            let a = full.step(0.1);
+            let b = resumed.step(0.1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "post-resume step {step}");
+            assert_eq!(a.embed, b.embed, "embed stats, step {step}");
+            assert_eq!(a.mlp, b.mlp, "mlp stats, step {step}");
+        }
+        assert_params_bit_identical(&mut full, &mut resumed, "accum resume");
+
+        let mut plain = MlpTrainer::new(MlpConfig { seed: 13, ..Default::default() }, Mode::Sr16);
+        let err = plain.load_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("accum=4"), "accum mismatch must be loud: {err}");
+    }
+
+    /// grad_accum=1 must stay byte-for-byte the original single-batch
+    /// engine: an explicit `.with_grad_accum(1)` changes nothing, including
+    /// the checkpoint bytes (no fingerprint suffix).
+    #[test]
+    fn grad_accum_one_is_the_identity() {
+        let mk = || MlpTrainer::new(MlpConfig { seed: 5, ..Default::default() }, Mode::SrKahan16);
+        let mut plain = mk();
+        let mut explicit = mk().with_grad_accum(1);
+        for step in 0..8 {
+            let a = plain.step(0.1);
+            let b = explicit.step(0.1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step}");
+        }
+        assert_eq!(plain.checkpoint_bytes(), explicit.checkpoint_bytes());
+    }
+
+    /// Satellite: flipping a bit anywhere in a saved checkpoint must make
+    /// the load fail loudly (CRC-32 footer), and the failed load leaves
+    /// the trainer untouched.
+    #[test]
+    fn corrupted_checkpoint_bytes_fail_loudly_at_any_offset() {
+        let mut src = MlpTrainer::new(MlpConfig { seed: 21, ..Default::default() }, Mode::Sr16);
+        for _ in 0..3 {
+            src.step(0.1);
+        }
+        let bytes = src.checkpoint_bytes();
+        let mut fresh = MlpTrainer::new(MlpConfig { seed: 21, ..Default::default() }, Mode::Sr16);
+        fresh.load_checkpoint_bytes(&bytes).unwrap();
+
+        let mut x = 0x2545_F491_4F6C_DD1Du64;
+        for trial in 0..48 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let off = (x >> 33) as usize % bytes.len();
+            let bit = (x >> 29 & 7) as u8;
+            let mut m = bytes.clone();
+            m[off] ^= 1 << bit;
+            let mut tr = MlpTrainer::new(MlpConfig { seed: 21, ..Default::default() }, Mode::Sr16);
+            assert!(
+                tr.load_checkpoint_bytes(&m).is_err(),
+                "trial {trial}: corruption at byte {off} bit {bit} loaded silently"
+            );
+            assert_eq!(tr.steps_done(), 0, "failed load must leave the trainer untouched");
+        }
     }
 }

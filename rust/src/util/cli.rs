@@ -28,12 +28,7 @@ impl Args {
                 }
                 if let Some((k, v)) = rest.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
                     args.options.insert(rest.to_string(), v);
                 } else {
                     args.flags.push(rest.to_string());

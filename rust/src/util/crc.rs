@@ -1,0 +1,57 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), table-driven.
+//!
+//! Used as the integrity check on two wire-adjacent surfaces: the trailing
+//! footer of `BF16CKP2` checkpoint files and the per-frame checksum of the
+//! `qsim::shard` message layer.  The table is built at compile time so the
+//! hot path is a single lookup per byte.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `bytes` (IEEE: init all-ones, final complement).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    !bytes
+        .iter()
+        .fold(!0u32, |c, &b| (c >> 8) ^ TABLE[((c ^ b as u32) & 0xFF) as usize])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // canonical check value for the IEEE polynomial
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn single_bit_flip_changes_crc() {
+        let base = b"the quick brown fox jumps over the lazy dog".to_vec();
+        let c0 = crc32(&base);
+        for byte in 0..base.len() {
+            for bit in 0..8 {
+                let mut m = base.clone();
+                m[byte] ^= 1 << bit;
+                assert_ne!(crc32(&m), c0, "flip at byte {byte} bit {bit} undetected");
+            }
+        }
+    }
+}

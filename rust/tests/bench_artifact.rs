@@ -67,6 +67,30 @@ fn simd_matmul_beats_the_scalar_reference() {
 }
 
 #[test]
+fn shard_scaling_rows_and_keys_are_present() {
+    let doc = artifact();
+    let rows = doc
+        .get("benches")
+        .and_then(Json::as_arr)
+        .expect("benches array missing from BENCH_qsim.json");
+    for shards in [1usize, 2, 4] {
+        let name = format!("dlrm-shard step sr16 s{shards}");
+        let row = rows
+            .iter()
+            .find(|r| r.get_str("name") == Some(name.as_str()))
+            .unwrap_or_else(|| panic!("bench row {name:?} missing from BENCH_qsim.json"));
+        let median = row.get("median_ns").and_then(Json::as_f64).unwrap_or(0.0);
+        assert!(median > 0.0, "row {name:?} has median_ns == 0 (placeholder artifact)");
+    }
+    let s2 = derived(&doc, "scaling_shards_sr16_s2");
+    let s4 = derived(&doc, "scaling_shards_sr16_s4");
+    assert!(
+        s2 > 1.0 && s4 > s2,
+        "shard fan-out must pay off monotonically (s2 {s2}x, s4 {s4}x)"
+    );
+}
+
+#[test]
 fn committed_weight_bytes_match_live_measurement() {
     let doc = artifact();
     for (mode, key) in [

@@ -1,0 +1,144 @@
+//! Chaos-schedule corpus: checked-in fault schedules replayed against the
+//! sharded trainer on every `cargo test` run.
+//!
+//! Each spec in [`CORPUS`] drives a 4-shard run of the spiral-MLP task and
+//! must reproduce the clean 1-shard run bit for bit — per-step loss bits,
+//! the final parameter digest and the eval loss.  The corpus pins the
+//! schedules that have historically been the nastiest shapes (every shard
+//! crashing in the same step, every update broadcast dropped at once, the
+//! CI acceptance combo), so a recovery-path regression fails here with the
+//! exact offending spec string in the assert message.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bf16_train::precision::Mode;
+use bf16_train::qsim::mlp::MlpConfig;
+use bf16_train::qsim::{ChaosConfig, ChaosPlan, ShardOptions, ShardedTrainer};
+
+const STEPS: usize = 10;
+const LR: f32 = 0.1;
+const SEED: u64 = 21;
+
+/// Pinned schedules: every recovery path, alone and combined.  These must
+/// inject at least one event within [`STEPS`] steps on 4 shards.
+const CORPUS: &[&str] = &[
+    // the CI acceptance schedule: crash + straggler + corrupt message,
+    // plus a dropped gradient and a dropped update broadcast
+    "crash@2.1,stall@4.3:80,corrupt@6.0,drop@8.2,drop-update@5.1",
+    // every shard crashes while computing the same step
+    "crash@1.0,crash@1.1,crash@1.2,crash@1.3",
+    // every update broadcast for one step is dropped: all four replicas
+    // drift silently and must be healed by digest-triggered resync
+    "drop-update@3.0,drop-update@3.1,drop-update@3.2,drop-update@3.3",
+    // repeated faults on one shard across consecutive steps
+    "crash@1.2,drop@2.2,corrupt@3.2,drop-update@4.2,stall@5.2:60",
+    // corruption storm: every shard's gradient frame flipped in one step
+    "corrupt@2.0,corrupt@2.1,corrupt@2.2,corrupt@2.3",
+    // crash immediately at step 0, before any update was ever applied
+    "crash@0.0,drop@0.3",
+];
+
+/// Probabilistic schedules (deterministic per seed via the keyed counter
+/// RNG, so these are replays, not flakes).  Event counts are not asserted:
+/// a quiet draw is a valid schedule.
+const RATE_CORPUS: &[&str] = &[
+    "heavy",
+    "heavy,seed=7",
+    "seed=11,crash=0.08,stall=0.04,drop=0.08,corrupt=0.08,drop-update=0.08",
+    "seed=23,crash=0.08,stall=0.04,drop=0.08,corrupt=0.08,drop-update=0.08",
+    "seed=47,crash=0.15,drop-update=0.15",
+];
+
+fn opts(shards: usize, chaos: Option<Arc<ChaosPlan>>) -> ShardOptions {
+    ShardOptions {
+        shards,
+        microbatches: 4,
+        chaos,
+        // short windows keep crash recovery fast in tests; spurious
+        // timeouts only exercise the (idempotent) retransmit path harder
+        timeout: Duration::from_millis(120),
+        ..Default::default()
+    }
+}
+
+/// Per-step loss bits, final parameter digest, eval-loss bits.
+fn run(shards: usize, chaos: Option<Arc<ChaosPlan>>) -> (Vec<u32>, u64, u32) {
+    let task = MlpConfig { seed: SEED, ..Default::default() };
+    let mut tr = ShardedTrainer::new(task, Mode::Sr16, opts(shards, chaos))
+        .expect("shard geometry is valid");
+    let mut losses = Vec::with_capacity(STEPS);
+    for _ in 0..STEPS {
+        losses.push(tr.step(LR).loss.to_bits());
+    }
+    let digest = tr.param_digest();
+    let eval = tr.eval(4).loss.to_bits();
+    (losses, digest, eval)
+}
+
+fn plan(spec: &str) -> Arc<ChaosPlan> {
+    Arc::new(ChaosPlan::new(
+        ChaosConfig::parse(spec).unwrap_or_else(|e| panic!("corpus spec {spec:?}: {e}")),
+    ))
+}
+
+#[test]
+fn pinned_corpus_replays_bit_identically() {
+    let clean = run(1, None);
+    for spec in CORPUS {
+        let chaos = plan(spec);
+        let task = MlpConfig { seed: SEED, ..Default::default() };
+        let mut tr = ShardedTrainer::new(task, Mode::Sr16, opts(4, Some(chaos)))
+            .expect("shard geometry is valid");
+        let mut losses = Vec::with_capacity(STEPS);
+        for _ in 0..STEPS {
+            losses.push(tr.step(LR).loss.to_bits());
+        }
+        assert_eq!(losses, clean.0, "loss trajectory diverged under chaos {spec:?}");
+        assert_eq!(tr.param_digest(), clean.1, "param digest diverged under chaos {spec:?}");
+        assert_eq!(tr.eval(4).loss.to_bits(), clean.2, "eval diverged under chaos {spec:?}");
+        let st = tr.stats();
+        assert!(st.total_events() >= 1, "pinned schedule {spec:?} never fired: {st:?}");
+    }
+}
+
+#[test]
+fn rate_corpus_replays_bit_identically() {
+    let clean = run(1, None);
+    for spec in RATE_CORPUS {
+        let got = run(4, Some(plan(spec)));
+        assert_eq!(got, clean, "run diverged under chaos {spec:?}");
+    }
+}
+
+/// Property sweep: the invariant holds across data seeds × chaos seeds,
+/// not just the corpus's fixed pairing.
+#[test]
+fn seed_cross_chaos_property() {
+    for task_seed in [3u64, 91] {
+        let clean = {
+            let task = MlpConfig { seed: task_seed, ..Default::default() };
+            let mut tr = ShardedTrainer::new(task, Mode::Sr16, opts(1, None)).unwrap();
+            for _ in 0..6 {
+                tr.step(LR);
+            }
+            tr.param_digest()
+        };
+        for chaos_seed in [5u64, 17] {
+            let spec = format!(
+                "seed={chaos_seed},crash=0.08,stall=0.05,drop=0.08,corrupt=0.08,drop-update=0.08"
+            );
+            let task = MlpConfig { seed: task_seed, ..Default::default() };
+            let mut tr =
+                ShardedTrainer::new(task, Mode::Sr16, opts(4, Some(plan(&spec)))).unwrap();
+            for _ in 0..6 {
+                tr.step(LR);
+            }
+            assert_eq!(
+                tr.param_digest(),
+                clean,
+                "seed {task_seed} diverged under chaos seed {chaos_seed}"
+            );
+        }
+    }
+}

@@ -37,6 +37,7 @@ fn main() -> Result<()> {
         "qsim-parity" => cmd_qsim_parity(&mut args),
         "lint-tape" => cmd_lint_tape(&mut args),
         "fuzz-tape" => cmd_fuzz_tape(&mut args),
+        "synth-rules" => cmd_synth_rules(&mut args),
         "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -60,6 +61,7 @@ const USAGE: &str = "usage: repro <command>
         [--shards N] [--grad-accum M] [--chaos SPEC]
   lint-tape [--app all|dlrm|gpt|mlp|lsq] [--seed S]
   fuzz-tape [--budget N] [--seed S] [--case I]
+  synth-rules [--depth D] [--seed S] [--check] [--write]
 
 modes: fp32 standard16 mixed16 sr16 kahan16 srkahan16
 fmts:  bf16 (default) fp16 e8m5 e8m3 e8m1
@@ -75,12 +77,26 @@ bit-identical to an uninterrupted one.
 
 `lint-tape` records one real training step per app, exports the tape
 graph as a program IR and runs the `qsim::verify` structural linter over
-it (shapes, grad flow, dead nodes, fusable chains), then resets the tape
-and audits free-pool accounting.  `fuzz-tape` runs the enumerative
-differential fuzzer: seeded random tape programs checked for bitwise
-parity across backends, thread counts and every policy format, against
-finite-difference gradients, and through the validated rewrite pass; a
-failure prints a minimized repro replayable with --case.
+it (shapes, grad flow, dead nodes, replayability, chains fusable by the
+admitted ruleset), checks the app's stochastic-rounding dither
+coordinates for collisions, then resets the tape and audits free-pool
+accounting.  `fuzz-tape` runs the enumerative differential fuzzer:
+seeded random tape programs checked for bitwise parity across backends,
+thread counts and every policy format, against finite-difference
+gradients, and through the admitted rewrite ruleset applied to fixpoint;
+a failure prints a minimized repro replayable with --case.
+
+`synth-rules` runs Ruler-style rewrite synthesis over the tape IR:
+enumerate small op patterns, cluster them by bitwise cvec fingerprints
+(shared seeded inputs, both backends, fp32/bf16/fp16/e8m5), and admit
+candidate rules only when loss, forward and every leaf gradient are
+bit-identical across formats x {fast,reference,simd} x {1,4} threads.
+--depth/--seed default to the checked-in corpus coordinates
+(rust/tests/data/synth_rules.txt).  The corpus is the pinned, reviewed
+subset of what synthesis admits; --check re-proves every checked-in rule,
+fails if any stops proving or stops being synthesized, and lists newly
+admitted rules for review; --write rewrites the corpus from a fresh run
+(review before committing).
 
 --threads fans runs out across sweep workers; --intra-threads parallelizes
 within one train step (bit-identical results at every setting).  Today the
@@ -802,9 +818,37 @@ fn report_tape_lint(
     errors > 0 || outstanding != 0
 }
 
-/// Build + backward one real training step for a [`Task`] app and lint it.
+/// Run the static dither-key collision lint over one app's coordinates.
+fn report_dither_lint(name: &str, coords: &[bf16_train::qsim::verify::DitherCoord]) -> bool {
+    use bf16_train::qsim::verify;
+
+    let rep = verify::lint_dither_coords(coords);
+    let errors = rep.errors().len();
+    println!("{name}: {} dither coordinates, {errors} collisions", coords.len());
+    if !rep.is_clean() {
+        print!("{rep}");
+    }
+    errors > 0
+}
+
+/// Build + backward one real training step for a [`Task`] app and lint it,
+/// plus the app's real optimizer-bank dither coordinates.
 fn lint_task_graph<T: bf16_train::qsim::Task>(task: T) -> bool {
+    use bf16_train::precision::Mode as PMode;
+    use bf16_train::qsim::train::Trainer;
+    use bf16_train::qsim::verify::DitherCoord;
     use bf16_train::qsim::{QPolicy, Tape};
+
+    // The coordinates come from the real optimizer bank the trainer
+    // builds (one SGD per tensor), not a re-derivation of its layout.
+    let tr = Trainer::new(task, PMode::Sr16);
+    let coords: Vec<DitherCoord> = tr
+        .dither_coords()
+        .into_iter()
+        .enumerate()
+        .map(|(i, (stream, tid))| DitherCoord::new(format!("sgd:w{i}"), stream, tid))
+        .collect();
+    let task = tr.task;
 
     let policy = QPolicy::with_backend(task.fmt(), task.backend());
     let model = task.init_model();
@@ -813,7 +857,7 @@ fn lint_task_graph<T: bf16_train::qsim::Task>(task: T) -> bool {
     let mut t = Tape::new(policy);
     let (loss, params) = T::forward_into(&model, &mut t, &batch);
     t.backward(loss);
-    report_tape_lint(T::NAME, &mut t, loss, params.len())
+    report_tape_lint(T::NAME, &mut t, loss, params.len()) | report_dither_lint(T::NAME, &coords)
 }
 
 /// `lsq` trains outside the tape (hand-rolled SGD over `w`), so lint the
@@ -833,7 +877,9 @@ fn lint_lsq_graph(seed: u64) -> bool {
     let pred = t.matmul(x, w);
     let loss = t.mse_loss(pred, y);
     t.backward(loss);
-    report_tape_lint("lsq", &mut t, loss, 1)
+    let (stream, tid) = bf16_train::qsim::lsq::dither_coord();
+    let coords = vec![bf16_train::qsim::verify::DitherCoord::new("lsq:w", stream, tid)];
+    report_tape_lint("lsq", &mut t, loss, 1) | report_dither_lint("lsq", &coords)
 }
 
 /// `repro lint-tape` — static analysis of each app's real training graph.
@@ -920,4 +966,113 @@ fn cmd_fuzz_tape(args: &mut Args) -> Result<()> {
                 f.seed, f.case)
         }
     }
+}
+
+/// `repro synth-rules` — Ruler-style rewrite-rule synthesis over the tape
+/// IR, plus corpus regeneration (`--write`) and drift-checking (`--check`).
+fn cmd_synth_rules(args: &mut Args) -> Result<()> {
+    use std::collections::BTreeSet;
+
+    use bf16_train::qsim::verify::rewrite;
+    use bf16_train::qsim::verify::synth::{self, SynthConfig};
+
+    let check = args.flag("check");
+    let write = args.flag("write");
+    let corpus = rewrite::corpus_doc()
+        .map_err(|e| anyhow::anyhow!("checked-in synth_rules.txt is invalid: {e}"))?;
+    let depth = args.opt_u64("depth", corpus.depth as u64)? as usize;
+    let seed = args.opt_u64("seed", corpus.seed)?;
+    args.finish()?;
+    if check && (depth != corpus.depth || seed != corpus.seed) {
+        bail!(
+            "--check re-synthesizes at the corpus coordinates (depth={} seed={}); \
+             drop --depth/--seed or regenerate with --write first",
+            corpus.depth,
+            corpus.seed
+        );
+    }
+    let cfg = SynthConfig::at(depth, seed);
+    println!(
+        "synth-rules: depth={depth} seed={seed} vars={} cvec-valuations={} \
+         admission={{fp32,bf16,fp16,e8m5}} x {{fast,reference,simd}} x {{1,4}} threads \
+         x {} fresh valuations",
+        synth::VAR_SHAPES.len(),
+        cfg.cvec_valuations,
+        cfg.admit_valuations
+    );
+    let report = synth::synthesize(&cfg);
+    println!(
+        "enumerated {} terms ({} dropped by the per-level cap, {} failed evaluation) \
+         -> {} non-trivial clusters -> {} candidate rules ({} over per-cluster/ruleset caps)",
+        report.enumerated,
+        report.dropped,
+        report.eval_failed,
+        report.clusters,
+        report.candidates,
+        report.capped
+    );
+    for (rule, why) in &report.rejected {
+        println!("rejected: {rule}\n          {why}");
+    }
+    for rule in &report.derived {
+        println!("derived (instance of smaller admitted rules, skipped): {rule}");
+    }
+    println!(
+        "admitted {} rules ({} bit-identity cells proven):",
+        report.admitted.len(),
+        report.admission_cells
+    );
+    for r in &report.admitted {
+        println!("  {}", r.render());
+    }
+
+    if write {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/synth_rules.txt");
+        std::fs::write(path, report.corpus().render())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {} rules to {path}", report.admitted.len());
+        return Ok(());
+    }
+
+    if check {
+        // 1. Every checked-in rule must still prove at the admission seed.
+        for r in &corpus.rules {
+            rewrite::validate_rule(r, synth::admission_seed(corpus.seed), cfg.admit_valuations)
+                .map_err(|e| anyhow::anyhow!("corpus rule `{}` no longer proves: {e}", r.name))?;
+        }
+        println!("corpus: all {} checked-in rules re-proven", corpus.rules.len());
+        // 2. Containment drift gate: the corpus is the *pinned, reviewed*
+        //    subset of what synthesis admits, so every pinned rule must
+        //    still come out of a fresh run.  Extra fresh rules are not
+        //    drift — they are surfaced for review and land via --write.
+        let fresh: BTreeSet<String> = report.admitted.iter().map(|r| r.render()).collect();
+        let pinned: BTreeSet<String> = corpus.rules.iter().map(|r| r.render()).collect();
+        let lost: Vec<&String> = pinned.difference(&fresh).collect();
+        if !lost.is_empty() {
+            for r in lost {
+                println!("drift: checked-in rule no longer synthesized: {r}");
+            }
+            bail!("synth-rules --check: ruleset drift (regenerate with --write and review)");
+        }
+        for r in fresh.difference(&pinned) {
+            println!("unpinned (admitted fresh, not in corpus; vet and --write to pin): {r}");
+        }
+        // 3. Regression gate: the hand-written PR-6 rules must be
+        //    rediscovered, alongside at least two genuinely new ones.
+        for name in ["fuse-affine", "fuse-affine-relu"] {
+            if !report.admitted.iter().any(|r| r.name == name) {
+                bail!("synth-rules --check: canonical rule `{name}` was not rediscovered");
+            }
+        }
+        if report.admitted.len() < 4 {
+            bail!(
+                "synth-rules --check: only {} admitted rules (need the 2 canonical + >=2 new)",
+                report.admitted.len()
+            );
+        }
+        println!(
+            "synth-rules --check: corpus re-proven, every pinned rule re-synthesized, no drift"
+        );
+    }
+    Ok(())
 }

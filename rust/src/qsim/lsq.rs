@@ -24,6 +24,13 @@ use crate::util::rng::{DitherKey, Rng};
 /// draws) and chunked/parallel evaluation would be bit-identical.
 const LSQ_DITHER_STREAM: u64 = 0x5352;
 
+/// The LSQ sweep's one `(stream, tensor_id)` dither coordinate, for the
+/// static collision lint (`verify::lint_dither_coords`) — it must never
+/// collide with the SGD optimizers' per-tensor coordinates.
+pub fn dither_coord() -> (u64, u64) {
+    (LSQ_DITHER_STREAM, 0)
+}
+
 /// Where rounding is applied in the SGD loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Placement {

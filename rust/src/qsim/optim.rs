@@ -152,6 +152,13 @@ impl Sgd {
         self
     }
 
+    /// This optimizer's `(stream, tensor_id)` dither coordinate, for the
+    /// static collision lint (`verify::lint_dither_coords`): two live
+    /// optimizers sharing a coordinate draw correlated rounding noise.
+    pub fn dither_coord(&self) -> (u64, u64) {
+        (SGD_DITHER_STREAM, self.tensor_id)
+    }
+
     /// Builder-style worker pool for the chunked `Fast`/`Simd` update.
     /// Results are bit-identical at every pool size (and to `Reference`).
     pub fn with_pool(mut self, pool: Arc<Pool>) -> Self {

@@ -1075,6 +1075,15 @@ impl Tape {
     /// Fused 0.5·mean((a-b)²) — one output rounding, like qops.mse_loss.
     pub fn mse_loss(&mut self, a: Var, b: Var) -> Var {
         let d = self.sub(a, b);
+        self.mse_of(d)
+    }
+
+    /// The standalone form of [`Tape::mse_loss`]'s head: 0.5·mean(d²) over
+    /// an already-recorded difference node.  Exported programs carry the
+    /// fused head as `MseLoss { diff }`, so replaying them needs this
+    /// entry point; it records exactly what `mse_loss` records.
+    pub fn mse_of(&mut self, d: Var) -> Var {
+        self.check(d);
         let dv = &self.values[d.0];
         let m =
             dv.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / dv.len() as f64;

@@ -321,6 +321,13 @@ impl<T: Task> Trainer<T> {
         self.policy
     }
 
+    /// Every optimizer's `(stream, tensor_id)` dither coordinate, in
+    /// parameter walk order — the input to the static collision lint
+    /// (`verify::lint_dither_coords`).
+    pub fn dither_coords(&self) -> Vec<(u64, u64)> {
+        self.opts.iter().map(|o| o.dither_coord()).collect()
+    }
+
     /// One SGD step over a fresh synthetic batch.
     ///
     /// Pooled backends (`Fast`, `Simd`): the retained tape is `reset`

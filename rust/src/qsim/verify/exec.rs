@@ -71,12 +71,7 @@ pub fn run(
             OpIr::Tanh(a) => t.tanh(at(a)),
             OpIr::GatherRows { x, idx } => t.gather_rows(at(x), idx.clone()),
             OpIr::MeanAll(a) => t.mean_all(at(a)),
-            OpIr::MseLoss { .. } => {
-                return Err(format!(
-                    "node %{i}: mse_loss is recorded fused over a diff node and \
-                     cannot be replayed standalone"
-                ));
-            }
+            OpIr::MseLoss { diff } => t.mse_of(at(diff)),
             OpIr::BceLoss { logits, labels } => {
                 let ln = &prog.nodes[*logits];
                 let lt = Tensor::from_vec(ln.rows, ln.cols, labels.clone());

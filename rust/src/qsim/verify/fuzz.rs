@@ -13,9 +13,12 @@
 //!    point only *fails* when the two FD estimates agree with each other
 //!    but not with the tape (points straddling a relu kink make the two
 //!    estimates disagree and are skipped, not failed).
-//! 3. **Rewrite admission** — every fusable chain the rewriter matches is
-//!    applied and must pass [`super::rewrite::validate`]'s bit-identity
-//!    sweep.
+//! 3. **Ruleset admission** — the whole synthesized ruleset
+//!    ([`super::rewrite::admitted_ruleset`]) is applied to fixpoint, and
+//!    whenever it changes the program the rewritten form must pass
+//!    [`super::rewrite::validate`]'s bit-identity sweep.  Every fuzz run
+//!    thus re-proves the checked-in rules on programs the synthesizer
+//!    never enumerated.
 //!
 //! Failures minimize to the shortest failing program prefix and carry a
 //! one-line `FUZZ-REPRO seed=S case=I` stamp that replays exactly.
@@ -155,12 +158,13 @@ pub fn check_case(case: &Case) -> Result<CaseStats, String> {
 
     stats.checks += fd_check(case)?;
 
-    for cand in rewrite::find(prog) {
-        let rw = rewrite::apply(prog, &cand);
+    let rules = rewrite::admitted_ruleset();
+    let (rw, applied) = rewrite::rewrite_fixpoint(prog, rules);
+    if !applied.is_empty() {
         let cells = rewrite::validate(prog, &rw, leaves)
-            .map_err(|e| format!("rewrite {} rejected: {e}", cand.describe()))?;
+            .map_err(|e| format!("ruleset rewrite [{}] rejected: {e}", applied.join("; ")))?;
         stats.checks += cells;
-        stats.rewrites += 1;
+        stats.rewrites += applied.len() as u64;
     }
 
     Ok(stats)
@@ -307,8 +311,9 @@ mod tests {
 
     #[test]
     fn minimizer_finds_shortest_failing_prefix() {
-        // A case that fails in check_case by construction: a program whose
-        // replay errors (mse_loss is not replayable) after a valid prelude.
+        // A case that fails in check_case by construction: the supplied
+        // leaf tensor is the wrong shape, so every prefix containing the
+        // leaf fails to replay — the minimizer must stop at 1 node.
         use super::super::ir::{NodeIr, Program};
         let case = Case {
             seed: 0,
@@ -317,23 +322,19 @@ mod tests {
                 nodes: vec![
                     NodeIr { op: OpIr::Leaf, rows: 2, cols: 2, requires_grad: true },
                     NodeIr { op: OpIr::Relu(0), rows: 2, cols: 2, requires_grad: true },
-                    NodeIr {
-                        op: OpIr::MseLoss { diff: 1 },
-                        rows: 1,
-                        cols: 1,
-                        requires_grad: true,
-                    },
+                    NodeIr { op: OpIr::MeanAll(1), rows: 1, cols: 1, requires_grad: true },
                 ],
             },
             leaves: vec![crate::qsim::Tensor::from_vec(
-                2,
-                2,
-                vec![0.5, -0.5, 1.5, -1.5],
+                3,
+                3,
+                vec![0.5, -0.5, 1.5, -1.5, 0.1, 0.2, 0.3, 0.4, 0.5],
             )],
         };
         let check = check_case(&case).unwrap_err();
         let fail = minimize(&case, check);
-        assert_eq!(fail.minimized_nodes, 3, "{}", fail.render());
+        assert_eq!(fail.minimized_nodes, 1, "{}", fail.render());
         assert!(fail.repro_line().contains("seed=0 case=0"));
     }
+
 }

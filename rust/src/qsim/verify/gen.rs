@@ -6,7 +6,8 @@
 //! Programs are built over the public tape vocabulary (elementwise
 //! unary/binary, matmul / matmul_nt, add_row, gather_rows, layernorm,
 //! concat_cols, causal_attention) and closed with one of the fused loss
-//! heads (softmax_xent, bce_loss) or a mean cap; the generator is biased
+//! heads (softmax_xent, bce_loss, mse over a recorded difference) or a
+//! mean cap; the generator is biased
 //! toward `matmul + add_row (+ relu)` chains so the rewrite pass always
 //! has candidates to validate.
 
@@ -167,7 +168,7 @@ pub fn gen_case(seed: u64, index: u64) -> Case {
     // Loss head over the last computed node (keeps the tail live).
     let tail = *avail.last().unwrap();
     let (tr, tc) = b.shape(tail);
-    match b.rng.below(3) {
+    match b.rng.below(4) {
         0 if tc >= 2 => {
             let targets: Vec<usize> = (0..tr).map(|_| b.rng.below(tc)).collect();
             b.push(OpIr::SoftmaxXent { logits: tail, targets }, 1, 1);
@@ -176,6 +177,14 @@ pub fn gen_case(seed: u64, index: u64) -> Case {
             let labels: Vec<f32> =
                 (0..tr * tc).map(|_| b.rng.below(2) as f32).collect();
             b.push(OpIr::BceLoss { logits: tail, labels }, 1, 1);
+        }
+        2 => {
+            // Fused MSE head (`Tape::mse_of` over a recorded difference):
+            // replayable since the MseLoss standalone fix, so the fuzzer
+            // covers the regression-loss path the MLP app trains with.
+            let target = b.leaf(tr, tc, false);
+            let d = b.push(OpIr::Sub(tail, target), tr, tc);
+            b.push(OpIr::MseLoss { diff: d }, 1, 1);
         }
         _ => {
             b.push(OpIr::MeanAll(tail), 1, 1);

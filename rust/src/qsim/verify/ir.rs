@@ -25,8 +25,8 @@ pub enum OpIr {
     /// Row gather (`Op::Embed` exports as this): out[r] = x[idx[r]].
     GatherRows { x: usize, idx: Vec<usize> },
     MeanAll(usize),
-    /// Fused `0.5 * mean(d^2)` over a difference node (not replayable
-    /// standalone — the tape only records it via `mse_loss`).
+    /// Fused `0.5 * mean(d^2)` over a difference node (replayable
+    /// standalone via `Tape::mse_of`).
     MseLoss { diff: usize },
     BceLoss { logits: usize, labels: Vec<f32> },
     AddRow(usize, usize),
@@ -64,6 +64,16 @@ impl OpIr {
             OpIr::CausalAttn { .. } => "causal_attn",
             OpIr::SoftmaxXent { .. } => "softmax_xent",
         }
+    }
+
+    /// Whether [`super::exec::run`] can rebuild this op on a fresh tape
+    /// from the exported payload alone.  Every op must stay replayable —
+    /// a non-replayable export silently shrinks the fuzzer's and the
+    /// synthesizer's reachable pattern space, so the linter reports any
+    /// such node as an error.  (MseLoss was the one historical offender,
+    /// fixed by `Tape::mse_of`.)
+    pub fn replayable(&self) -> bool {
+        true
     }
 
     /// Operand node indices, in the order backward visits them.

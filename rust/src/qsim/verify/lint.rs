@@ -128,6 +128,18 @@ pub fn lint(prog: &Program, root: usize) -> LintReport {
         if !ordered {
             continue;
         }
+        if !node.op.replayable() {
+            rep.push(
+                Severity::Error,
+                i,
+                format!(
+                    "{} node is not replayable standalone: the exported payload \
+                     cannot rebuild it on a fresh tape, which silently shrinks \
+                     the fuzzer's and synthesizer's reachable pattern space",
+                    node.op.name()
+                ),
+            );
+        }
         if !matches!(node.op, OpIr::Leaf) && !node.requires_grad {
             rep.push(
                 Severity::Error,
@@ -189,12 +201,69 @@ pub fn lint(prog: &Program, root: usize) -> LintReport {
         }
     }
 
-    // Fusion opportunities (actioned by the rewrite pass, reported here so
-    // `lint-tape` surfaces what the fuzzer-validated rewriter would do).
-    for cand in rewrite::find(prog) {
-        rep.push(Severity::Info, cand.add_row, format!("fusable chain: {}", cand.describe()));
+    // Rewrite opportunities (actioned by the synthesized, bit-proven
+    // ruleset; reported here so `lint-tape` surfaces what the rewriter
+    // would do to the real training graph).
+    let rules = rewrite::admitted_ruleset();
+    for cand in rewrite::find(prog, rules) {
+        rep.push(
+            Severity::Info,
+            cand.root,
+            format!("fusable by admitted ruleset: {}", cand.describe(rules)),
+        );
     }
 
+    rep
+}
+
+/// One counter-keyed stochastic-rounding dither coordinate an app
+/// registers: the `(stream, tensor_id)` pair that, together with the run
+/// seed and step counter, keys its rounding-noise stream.
+#[derive(Debug, Clone)]
+pub struct DitherCoord {
+    /// Human-readable owner (e.g. `sgd:w0`, `lsq:scales`).
+    pub label: String,
+    pub stream: u64,
+    pub tensor_id: u64,
+}
+
+impl DitherCoord {
+    pub fn new(label: impl Into<String>, stream: u64, tensor_id: u64) -> Self {
+        DitherCoord { label: label.into(), stream, tensor_id }
+    }
+}
+
+/// Static dither-key collision lint.
+///
+/// Two tensors sharing a `(stream, tensor_id)` coordinate draw the *same*
+/// rounding-noise sequence every step — correlated dither that silently
+/// voids the unbiased-rounding argument and, worse, makes two optimizers'
+/// updates statistically dependent.  Duplicate coordinates are therefore
+/// errors; the diagnostic's node index is the offending coordinate's
+/// position in `coords`.
+pub fn lint_dither_coords(coords: &[DitherCoord]) -> LintReport {
+    let mut rep = LintReport::default();
+    let mut seen: std::collections::HashMap<(u64, u64), usize> = std::collections::HashMap::new();
+    for (i, c) in coords.iter().enumerate() {
+        match seen.entry((c.stream, c.tensor_id)) {
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(i);
+            }
+            std::collections::hash_map::Entry::Occupied(e) => {
+                let first = &coords[*e.get()];
+                rep.push(
+                    Severity::Error,
+                    i,
+                    format!(
+                        "dither-key collision: `{}` and `{}` both key their SR \
+                         noise at (stream={:#x}, tensor_id={}) — their rounding \
+                         dither is bit-for-bit correlated",
+                        first.label, c.label, c.stream, c.tensor_id
+                    ),
+                );
+            }
+        }
+    }
     rep
 }
 
@@ -460,5 +529,31 @@ mod tests {
         assert!(rep.diags.iter().any(|d| {
             d.severity == Severity::Info && d.message.contains("fusable")
         }));
+    }
+
+    #[test]
+    fn dither_coord_collision_is_an_error() {
+        let coords = vec![
+            DitherCoord::new("sgd:w0", 0x0907, 0),
+            DitherCoord::new("sgd:w1", 0x0907, 1),
+            DitherCoord::new("lsq:scales", 0x5352, 0),
+            DitherCoord::new("rogue", 0x0907, 1),
+        ];
+        let rep = lint_dither_coords(&coords);
+        let errs = rep.errors();
+        assert_eq!(errs.len(), 1, "{rep}");
+        assert_eq!(errs[0].node, 3);
+        assert!(errs[0].message.contains("sgd:w1"), "{}", errs[0]);
+        assert!(errs[0].message.contains("rogue"), "{}", errs[0]);
+    }
+
+    #[test]
+    fn unique_dither_coords_are_clean() {
+        let coords = vec![
+            DitherCoord::new("sgd:w0", 0x0907, 0),
+            DitherCoord::new("sgd:b0", 0x0907, 1),
+            DitherCoord::new("lsq:scales", 0x5352, 0),
+        ];
+        assert!(lint_dither_coords(&coords).is_clean());
     }
 }

@@ -19,10 +19,16 @@
 //!   finite-difference agreement at fp32.  `repro fuzz-tape --budget N
 //!   --seed S`; every failure minimizes to a prefix and a one-line
 //!   `FUZZ-REPRO` stamp.
-//! - [`rewrite`]: the validated fusion pass (`matmul + add_row (+ relu)`
-//!   → `affine`).  A rewrite is admitted only when proven bit-identical
-//!   across the full sweep; the fuzzer re-proves every candidate it
-//!   generates, keeping `Tape::affine` pinned to unfused semantics.
+//! - [`rewrite`]: the generalized pattern-matching rewrite engine, driven
+//!   by the synthesized ruleset versioned at
+//!   `rust/tests/data/synth_rules.txt`.  A rule is admitted only when
+//!   proven bit-identical across the full sweep (formats × backends ×
+//!   threads); the fuzzer re-applies the whole ruleset to every program
+//!   it generates and re-proves bit-parity.
+//! - [`synth`]: Ruler-style rewrite-rule *synthesis* — enumerate small
+//!   patterns, cluster by bitwise cvec fingerprints, admit candidates
+//!   through the validator.  `repro synth-rules` regenerates and
+//!   drift-checks the ruleset.
 
 pub mod exec;
 pub mod fuzz;
@@ -30,6 +36,7 @@ pub mod gen;
 mod ir;
 pub mod lint;
 pub mod rewrite;
+pub mod synth;
 
 pub use ir::{NodeIr, OpIr, Program};
-pub use lint::{lint, Diag, LintReport, Severity};
+pub use lint::{lint, lint_dither_coords, Diag, DitherCoord, LintReport, Severity};

@@ -1,131 +1,699 @@
-//! Pattern → fused-kernel rewriter over tape programs, with bit-identity
+//! Pattern-driven rewrite engine over tape programs, with bit-identity
 //! admission.
 //!
-//! Rules (both target the tape's fused [`Affine`](OpIr::Affine) op, which
-//! folds the bias add — and optionally the relu — into the producing
-//! matmul panel so the `add_row` output round happens in-register):
+//! PR 6 shipped this pass with two hard-coded matchers (`matmul +
+//! add_row (+ relu)` → [`Affine`](OpIr::Affine)).  It is now a general
+//! engine driven by a ruleset: a [`Rule`] is a pair of op [`Pattern`]s
+//! over pattern variables (`(relu (add_row (matmul ?a ?b) ?c)) =>
+//! (affine_relu ?a ?b ?c)`), and the engine matches any rule's left-hand
+//! side anywhere in a program and splices in the right-hand side.  The
+//! shipped ruleset is *synthesized* by [`super::synth`] (enumerate →
+//! cvec-cluster → bit-prove) and checked in at
+//! `rust/tests/data/synth_rules.txt`; [`admitted_ruleset`] embeds that
+//! corpus at compile time.
 //!
-//! - `FuseAffine`:     `matmul + add_row`        → `affine(relu=false)`
-//! - `FuseAffineRelu`: `matmul + add_row + relu` → `affine(relu=true)`
+//! Soundness preconditions are static:
 //!
-//! A candidate only *matches* when every interior node of the chain is
-//! single-use (fusing a multi-use matmul would drop a value other nodes
-//! read).  A matched rewrite is only *admitted* when [`validate`] proves
-//! the rewritten program bit-identical to the original — loss, every leaf
-//! gradient, and the final forward value — across both backends, 1 and 4
-//! intra-threads, and the format sweep.  The fuzzer runs this admission
-//! check on every generated candidate, so the `Tape::affine` fast path
-//! stays pinned to the unfused semantics it replaces.
+//! - every *interior* node of a match (an op node matched below the lhs
+//!   root) must be single-use — rewriting a multi-use node would drop a
+//!   value other nodes read;
+//! - a pattern variable occurring twice only matches when both positions
+//!   bind the *same* node (`(add ?a ?a)` matches `add(%3, %3)` only);
+//! - admitted rules are strictly shrinking (lhs has more op nodes than
+//!   rhs), so [`rewrite_fixpoint`] terminates.
+//!
+//! A matched rewrite is only *admitted* when [`validate`] proves the
+//! rewritten program bit-identical to the original — loss, every leaf
+//! gradient, and the final forward value — across
+//! {fast, reference, simd} × {1, 4} intra-threads × the format sweep.
+//! [`validate_rule`] runs the same sweep on a rule in isolation (fresh
+//! seeded valuations of its pattern variables); the synthesizer admits
+//! through it, `cargo test` and `repro synth-rules --check` re-prove the
+//! corpus through it, and the fuzzer re-proves the ruleset end-to-end on
+//! every generated program.
+
+use std::collections::HashSet;
+use std::fmt;
+use std::sync::OnceLock;
 
 use super::exec;
 use super::ir::{NodeIr, OpIr, Program};
 use crate::precision::{BF16, E8M5, FP16, FP32};
 use crate::qsim::{Backend, QPolicy, Tensor};
+use crate::util::rng::Rng;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Rule {
-    FuseAffine,
-    FuseAffineRelu,
+/// The checked-in synthesized ruleset (regenerate with
+/// `repro synth-rules --write`).
+const CORPUS: &str = include_str!("../../../tests/data/synth_rules.txt");
+
+// ---------------------------------------------------------------------------
+// Pattern vocabulary
+// ---------------------------------------------------------------------------
+
+/// Ops a pattern can range over: the payload-free tape vocabulary, plus
+/// `scale` / `layernorm` whose constants are part of the pattern and must
+/// match bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PatOp {
+    MatMul,
+    MatMulNT,
+    Add,
+    Sub,
+    Mul,
+    Relu,
+    Sigmoid,
+    Tanh,
+    AddRow,
+    Affine { relu: bool },
+    Scale(f32),
+    LayerNorm(f32),
+    MeanAll,
+}
+
+impl PatOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PatOp::MatMul => "matmul",
+            PatOp::MatMulNT => "matmul_nt",
+            PatOp::Add => "add",
+            PatOp::Sub => "sub",
+            PatOp::Mul => "mul",
+            PatOp::Relu => "relu",
+            PatOp::Sigmoid => "sigmoid",
+            PatOp::Tanh => "tanh",
+            PatOp::AddRow => "add_row",
+            PatOp::Affine { relu: false } => "affine",
+            PatOp::Affine { relu: true } => "affine_relu",
+            PatOp::Scale(_) => "scale",
+            PatOp::LayerNorm(_) => "layernorm",
+            PatOp::MeanAll => "mean_all",
+        }
+    }
+
+    pub fn arity(&self) -> usize {
+        match self {
+            PatOp::Relu
+            | PatOp::Sigmoid
+            | PatOp::Tanh
+            | PatOp::Scale(_)
+            | PatOp::LayerNorm(_)
+            | PatOp::MeanAll => 1,
+            PatOp::MatMul
+            | PatOp::MatMulNT
+            | PatOp::Add
+            | PatOp::Sub
+            | PatOp::Mul
+            | PatOp::AddRow => 2,
+            PatOp::Affine { .. } => 3,
+        }
+    }
+
+    /// If `op` is an instance of this pattern op (constants compared by
+    /// bit pattern), its operand node indices.
+    fn match_op(&self, op: &OpIr) -> Option<Vec<usize>> {
+        match (self, op) {
+            (PatOp::MatMul, OpIr::MatMul(a, b))
+            | (PatOp::MatMulNT, OpIr::MatMulNT(a, b))
+            | (PatOp::Add, OpIr::Add(a, b))
+            | (PatOp::Sub, OpIr::Sub(a, b))
+            | (PatOp::Mul, OpIr::Mul(a, b))
+            | (PatOp::AddRow, OpIr::AddRow(a, b)) => Some(vec![*a, *b]),
+            (PatOp::Relu, OpIr::Relu(a))
+            | (PatOp::Sigmoid, OpIr::Sigmoid(a))
+            | (PatOp::Tanh, OpIr::Tanh(a))
+            | (PatOp::MeanAll, OpIr::MeanAll(a)) => Some(vec![*a]),
+            (PatOp::Scale(c), OpIr::Scale(a, k)) if c.to_bits() == k.to_bits() => {
+                Some(vec![*a])
+            }
+            (PatOp::LayerNorm(e), OpIr::LayerNorm { x, eps })
+                if e.to_bits() == eps.to_bits() =>
+            {
+                Some(vec![*x])
+            }
+            (PatOp::Affine { relu }, OpIr::Affine { x, w, b, relu: r }) if relu == r => {
+                Some(vec![*x, *w, *b])
+            }
+            _ => None,
+        }
+    }
+
+    /// The concrete op over the given operand node indices.
+    fn build(&self, k: &[usize]) -> OpIr {
+        match self {
+            PatOp::MatMul => OpIr::MatMul(k[0], k[1]),
+            PatOp::MatMulNT => OpIr::MatMulNT(k[0], k[1]),
+            PatOp::Add => OpIr::Add(k[0], k[1]),
+            PatOp::Sub => OpIr::Sub(k[0], k[1]),
+            PatOp::Mul => OpIr::Mul(k[0], k[1]),
+            PatOp::AddRow => OpIr::AddRow(k[0], k[1]),
+            PatOp::Relu => OpIr::Relu(k[0]),
+            PatOp::Sigmoid => OpIr::Sigmoid(k[0]),
+            PatOp::Tanh => OpIr::Tanh(k[0]),
+            PatOp::MeanAll => OpIr::MeanAll(k[0]),
+            PatOp::Scale(c) => OpIr::Scale(k[0], *c),
+            PatOp::LayerNorm(e) => OpIr::LayerNorm { x: k[0], eps: *e },
+            PatOp::Affine { relu } => {
+                OpIr::Affine { x: k[0], w: k[1], b: k[2], relu: *relu }
+            }
+        }
+    }
+
+    /// Output shape from operand shapes, or `None` on a type error.
+    pub fn infer_shape(&self, s: &[(usize, usize)]) -> Option<(usize, usize)> {
+        match self {
+            PatOp::MatMul => (s[0].1 == s[1].0).then_some((s[0].0, s[1].1)),
+            PatOp::MatMulNT => (s[0].1 == s[1].1).then_some((s[0].0, s[1].0)),
+            PatOp::Add | PatOp::Sub | PatOp::Mul => (s[0] == s[1]).then_some(s[0]),
+            PatOp::AddRow => (s[1] == (1, s[0].1)).then_some(s[0]),
+            PatOp::Relu
+            | PatOp::Sigmoid
+            | PatOp::Tanh
+            | PatOp::Scale(_)
+            | PatOp::LayerNorm(_) => Some(s[0]),
+            PatOp::MeanAll => Some((1, 1)),
+            PatOp::Affine { .. } => {
+                (s[0].1 == s[1].0 && s[2] == (1, s[1].1)).then_some((s[0].0, s[1].1))
+            }
+        }
+    }
+
+    fn parse(name: &str, consts: &[f32]) -> Result<PatOp, String> {
+        let want = |n: usize| {
+            if consts.len() == n {
+                Ok(())
+            } else {
+                Err(format!("op {name} takes {n} constant(s), got {}", consts.len()))
+            }
+        };
+        match name {
+            "matmul" => want(0).map(|_| PatOp::MatMul),
+            "matmul_nt" => want(0).map(|_| PatOp::MatMulNT),
+            "add" => want(0).map(|_| PatOp::Add),
+            "sub" => want(0).map(|_| PatOp::Sub),
+            "mul" => want(0).map(|_| PatOp::Mul),
+            "relu" => want(0).map(|_| PatOp::Relu),
+            "sigmoid" => want(0).map(|_| PatOp::Sigmoid),
+            "tanh" => want(0).map(|_| PatOp::Tanh),
+            "add_row" => want(0).map(|_| PatOp::AddRow),
+            "affine" => want(0).map(|_| PatOp::Affine { relu: false }),
+            "affine_relu" => want(0).map(|_| PatOp::Affine { relu: true }),
+            "mean_all" => want(0).map(|_| PatOp::MeanAll),
+            "scale" => want(1).map(|_| PatOp::Scale(consts[0])),
+            "layernorm" => want(1).map(|_| PatOp::LayerNorm(consts[0])),
+            other => Err(format!("unknown pattern op '{other}'")),
+        }
+    }
+
+    fn consts(&self) -> Vec<f32> {
+        match self {
+            PatOp::Scale(c) | PatOp::LayerNorm(c) => vec![*c],
+            _ => vec![],
+        }
+    }
+}
+
+/// A pattern term: a variable or an op over sub-patterns.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Pattern {
+    Var(usize),
+    Op(PatOp, Vec<Pattern>),
+}
+
+impl Pattern {
+    /// Number of op nodes (variables are free).
+    pub fn op_count(&self) -> usize {
+        match self {
+            Pattern::Var(_) => 0,
+            Pattern::Op(_, kids) => 1 + kids.iter().map(Pattern::op_count).sum::<usize>(),
+        }
+    }
+
+    /// Sorted, deduplicated variable indices.
+    pub fn vars(&self) -> Vec<usize> {
+        let mut v = Vec::new();
+        self.collect_vars(&mut v);
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    fn collect_vars(&self, out: &mut Vec<usize>) {
+        match self {
+            Pattern::Var(v) => out.push(*v),
+            Pattern::Op(_, kids) => kids.iter().for_each(|k| k.collect_vars(out)),
+        }
+    }
+
+    /// Variables in first-occurrence (left-to-right) order.
+    pub fn vars_in_order(&self) -> Vec<usize> {
+        let mut v = Vec::new();
+        self.collect_vars(&mut v);
+        let mut seen = HashSet::new();
+        v.retain(|x| seen.insert(*x));
+        v
+    }
+
+    /// Rename variables via `map[old] = new`.
+    pub fn rename_vars(&self, map: &[usize]) -> Pattern {
+        match self {
+            Pattern::Var(v) => Pattern::Var(map[*v]),
+            Pattern::Op(op, kids) => {
+                Pattern::Op(*op, kids.iter().map(|k| k.rename_vars(map)).collect())
+            }
+        }
+    }
+
+    /// Output shape given per-variable shapes, or `None` on a type error.
+    pub fn infer_shape(&self, var_shapes: &[(usize, usize)]) -> Option<(usize, usize)> {
+        match self {
+            Pattern::Var(v) => var_shapes.get(*v).copied(),
+            Pattern::Op(op, kids) => {
+                let ks: Option<Vec<_>> =
+                    kids.iter().map(|k| k.infer_shape(var_shapes)).collect();
+                op.infer_shape(&ks?)
+            }
+        }
+    }
+
+    /// Parse a s-expression like `(relu (add_row (matmul ?a ?b) ?c))`.
+    pub fn parse(s: &str) -> Result<Pattern, String> {
+        let toks = tokenize(s);
+        let mut pos = 0usize;
+        let pat = parse_sexpr(&toks, &mut pos)?;
+        if pos != toks.len() {
+            return Err(format!("trailing tokens after pattern in '{s}'"));
+        }
+        Ok(pat)
+    }
+}
+
+impl fmt::Display for Pattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Pattern::Var(v) => write!(f, "?{}", var_letter(*v)),
+            Pattern::Op(op, kids) => {
+                write!(f, "({}", op.name())?;
+                for k in kids {
+                    write!(f, " {k}")?;
+                }
+                for c in op.consts() {
+                    write!(f, " {c}")?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+fn var_letter(v: usize) -> char {
+    (b'a' + (v as u8) % 26) as char
+}
+
+fn tokenize(s: &str) -> Vec<String> {
+    let mut toks = Vec::new();
+    let mut cur = String::new();
+    for ch in s.chars() {
+        match ch {
+            '(' | ')' => {
+                if !cur.is_empty() {
+                    toks.push(std::mem::take(&mut cur));
+                }
+                toks.push(ch.to_string());
+            }
+            c if c.is_whitespace() => {
+                if !cur.is_empty() {
+                    toks.push(std::mem::take(&mut cur));
+                }
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        toks.push(cur);
+    }
+    toks
+}
+
+fn parse_sexpr(toks: &[String], pos: &mut usize) -> Result<Pattern, String> {
+    let Some(t) = toks.get(*pos) else {
+        return Err("unexpected end of pattern".into());
+    };
+    *pos += 1;
+    if let Some(v) = t.strip_prefix('?') {
+        let c = v.chars().next().ok_or("empty variable name")?;
+        if v.len() != 1 || !c.is_ascii_lowercase() {
+            return Err(format!("variable '?{v}' must be a single letter a-z"));
+        }
+        return Ok(Pattern::Var((c as u8 - b'a') as usize));
+    }
+    if t != "(" {
+        return Err(format!("expected '(' or variable, got '{t}'"));
+    }
+    let name = toks.get(*pos).ok_or("missing op name")?.clone();
+    *pos += 1;
+    let mut kids = Vec::new();
+    let mut consts = Vec::new();
+    loop {
+        let Some(t) = toks.get(*pos) else {
+            return Err("unclosed '(' in pattern".into());
+        };
+        if t == ")" {
+            *pos += 1;
+            break;
+        }
+        // A bare number atom is an op constant, anything else a sub-pattern.
+        if t != "(" && !t.starts_with('?') {
+            let c: f32 = t
+                .parse()
+                .map_err(|_| format!("bad constant '{t}' in pattern op {name}"))?;
+            consts.push(c);
+            *pos += 1;
+            continue;
+        }
+        kids.push(parse_sexpr(toks, pos)?);
+    }
+    let op = PatOp::parse(&name, &consts)?;
+    if op.arity() != kids.len() {
+        return Err(format!(
+            "op {name} takes {} operand(s), got {}",
+            op.arity(),
+            kids.len()
+        ));
+    }
+    Ok(Pattern::Op(op, kids))
+}
+
+// ---------------------------------------------------------------------------
+// Rules and the corpus
+// ---------------------------------------------------------------------------
+
+/// One admitted rewrite rule: `lhs => rhs` over shared pattern variables,
+/// with the witness shapes its admission proof ran at.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rule {
+    pub name: String,
+    pub lhs: Pattern,
+    pub rhs: Pattern,
+    /// Shape of each pattern variable `0..n` in the admission proof.
+    /// Matching is shape-agnostic; the proof is at these witnesses (and
+    /// re-proven by the fuzzer on every program the ruleset fires in).
+    pub shapes: Vec<(usize, usize)>,
 }
 
 impl Rule {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Rule::FuseAffine => "fuse-affine",
-            Rule::FuseAffineRelu => "fuse-affine-relu",
+    /// Structural well-formedness: same non-empty variable set on both
+    /// sides, every variable witnessed, both sides type-check to the same
+    /// root shape, and the rule strictly shrinks.
+    pub fn check(&self) -> Result<(), String> {
+        let (lv, rv) = (self.lhs.vars(), self.rhs.vars());
+        if lv.is_empty() {
+            return Err(format!("rule {}: lhs has no variables", self.name));
         }
+        if lv != rv {
+            return Err(format!("rule {}: lhs/rhs variable sets differ", self.name));
+        }
+        if lv != (0..self.shapes.len()).collect::<Vec<_>>() {
+            return Err(format!(
+                "rule {}: variables must be dense 0..{} matching the witness shapes",
+                self.name,
+                self.shapes.len()
+            ));
+        }
+        if self.lhs.op_count() <= self.rhs.op_count() {
+            return Err(format!(
+                "rule {}: not strictly shrinking ({} -> {} ops)",
+                self.name,
+                self.lhs.op_count(),
+                self.rhs.op_count()
+            ));
+        }
+        let ls = self.lhs.infer_shape(&self.shapes);
+        let rs = self.rhs.infer_shape(&self.shapes);
+        match (ls, rs) {
+            (Some(a), Some(b)) if a == b => Ok(()),
+            (Some(a), Some(b)) => Err(format!(
+                "rule {}: sides disagree on root shape ({}x{} vs {}x{})",
+                self.name, a.0, a.1, b.0, b.1
+            )),
+            _ => Err(format!("rule {}: a side fails shape inference", self.name)),
+        }
+    }
+
+    /// One corpus line: `name: lhs => rhs ; a=RxC b=RxC ...`
+    pub fn render(&self) -> String {
+        let shapes = self
+            .shapes
+            .iter()
+            .enumerate()
+            .map(|(v, (r, c))| format!("{}={r}x{c}", var_letter(v)))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!("{}: {} => {} ; {}", self.name, self.lhs, self.rhs, shapes)
+    }
+
+    pub fn parse(line: &str) -> Result<Rule, String> {
+        let (name, rest) =
+            line.split_once(':').ok_or_else(|| format!("missing rule name: '{line}'"))?;
+        let (body, shapes_s) =
+            rest.split_once(';').ok_or_else(|| format!("missing witness shapes: '{line}'"))?;
+        let (lhs_s, rhs_s) =
+            body.split_once("=>").ok_or_else(|| format!("missing '=>': '{line}'"))?;
+        let lhs = Pattern::parse(lhs_s.trim())?;
+        let rhs = Pattern::parse(rhs_s.trim())?;
+        let mut shapes: Vec<Option<(usize, usize)>> = Vec::new();
+        for part in shapes_s.split_whitespace() {
+            let (v, sh) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad shape entry '{part}'"))?;
+            let c = v.chars().next().ok_or("empty shape variable")?;
+            let vi = (c as u8).wrapping_sub(b'a') as usize;
+            let (r, cc) =
+                sh.split_once('x').ok_or_else(|| format!("bad shape '{sh}'"))?;
+            let dim = |s: &str| {
+                s.parse::<usize>().map_err(|_| format!("bad dimension '{s}' in '{part}'"))
+            };
+            if shapes.len() <= vi {
+                shapes.resize(vi + 1, None);
+            }
+            shapes[vi] = Some((dim(r)?, dim(cc)?));
+        }
+        let shapes: Vec<(usize, usize)> = shapes
+            .into_iter()
+            .enumerate()
+            .map(|(v, s)| s.ok_or(format!("missing shape for ?{}", var_letter(v))))
+            .collect::<Result<_, _>>()?;
+        let rule = Rule { name: name.trim().to_string(), lhs, rhs, shapes };
+        rule.check()?;
+        Ok(rule)
     }
 }
 
-/// One matched rewrite site.
+/// The parsed checked-in corpus: the synthesis coordinates it was grown
+/// at plus every admitted rule.
 #[derive(Debug, Clone)]
-pub struct Candidate {
-    pub rule: Rule,
-    pub matmul: usize,
-    pub add_row: usize,
-    pub relu: Option<usize>,
+pub struct CorpusDoc {
+    pub depth: usize,
+    pub seed: u64,
+    pub rules: Vec<Rule>,
 }
 
-impl Candidate {
-    pub fn describe(&self) -> String {
-        match self.relu {
-            Some(r) => format!(
-                "%{} matmul + %{} add_row + %{r} relu -> affine(relu) [{}]",
-                self.matmul,
-                self.add_row,
-                self.rule.name()
-            ),
-            None => format!(
-                "%{} matmul + %{} add_row -> affine [{}]",
-                self.matmul,
-                self.add_row,
-                self.rule.name()
-            ),
+impl CorpusDoc {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "# Synthesized tape rewrite ruleset (qsim::verify::synth).\n\
+             # Every rule is bit-proven: loss, forward root and every leaf gradient\n\
+             # identical across {fp32,bf16,fp16,e8m5} x {fast,reference,simd} x {1,4}\n\
+             # intra-threads at the witness shapes, re-proven by `cargo test` and\n\
+             # continuously by `repro fuzz-tape` on generated programs.\n\
+             #\n\
+             # This file is the *pinned* subset of what synthesis admits: rules the\n\
+             # fuzzer is allowed to apply to arbitrary generated programs.  `repro\n\
+             # synth-rules --check` fails if any pinned rule stops proving or stops\n\
+             # being synthesized; newly admitted rules are listed for review and land\n\
+             # here via `repro synth-rules --write` once vetted.\n",
+        );
+        out.push_str(&format!("@synth depth={} seed={}\n", self.depth, self.seed));
+        for r in &self.rules {
+            out.push_str(&r.render());
+            out.push('\n');
         }
+        out
+    }
+
+    pub fn parse(text: &str) -> Result<CorpusDoc, String> {
+        let mut doc = CorpusDoc { depth: 0, seed: 0, rules: Vec::new() };
+        let mut saw_header = false;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(hdr) = line.strip_prefix("@synth") {
+                for kv in hdr.split_whitespace() {
+                    match kv.split_once('=') {
+                        Some(("depth", d)) => {
+                            doc.depth =
+                                d.parse().map_err(|_| format!("bad depth '{d}'"))?
+                        }
+                        Some(("seed", s)) => {
+                            doc.seed = s.parse().map_err(|_| format!("bad seed '{s}'"))?
+                        }
+                        _ => return Err(format!("bad @synth entry '{kv}'")),
+                    }
+                }
+                saw_header = true;
+                continue;
+            }
+            doc.rules.push(Rule::parse(line)?);
+        }
+        if !saw_header {
+            return Err("corpus is missing its '@synth depth=.. seed=..' header".into());
+        }
+        let mut names: Vec<&str> = doc.rules.iter().map(|r| r.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != doc.rules.len() {
+            return Err("duplicate rule names in corpus".into());
+        }
+        Ok(doc)
     }
 }
 
-/// Find every fusable chain in `prog`.
-pub fn find(prog: &Program) -> Vec<Candidate> {
+/// The checked-in corpus, parsed once.  Panics only if the embedded
+/// `tests/data/synth_rules.txt` is malformed, which `cargo test` and the
+/// `qsim-synth` CI job both gate.
+pub fn admitted_ruleset() -> &'static [Rule] {
+    static RULES: OnceLock<Vec<Rule>> = OnceLock::new();
+    RULES.get_or_init(|| {
+        let mut doc = CorpusDoc::parse(CORPUS)
+            .unwrap_or_else(|e| panic!("embedded synth_rules.txt corpus is invalid: {e}"));
+        // Match priority: biggest lhs first, so the classic three-node
+        // chain collapses in one step instead of two.
+        doc.rules.sort_by(|a, b| {
+            b.lhs.op_count().cmp(&a.lhs.op_count()).then(a.name.cmp(&b.name))
+        });
+        doc.rules
+    })
+}
+
+/// The embedded corpus, unsorted, with its synthesis coordinates.
+pub fn corpus_doc() -> Result<CorpusDoc, String> {
+    CorpusDoc::parse(CORPUS)
+}
+
+// ---------------------------------------------------------------------------
+// Matching and application
+// ---------------------------------------------------------------------------
+
+/// One matched rewrite site: `rule` (index into the ruleset passed to
+/// [`find`]) matched with its lhs root at node `root`, pattern variables
+/// bound to `bindings` (by variable index).
+#[derive(Debug, Clone)]
+pub struct Found {
+    pub rule: usize,
+    pub root: usize,
+    pub bindings: Vec<usize>,
+}
+
+impl Found {
+    pub fn describe(&self, rules: &[Rule]) -> String {
+        format!("rule {} matches at %{}", rules[self.rule].name, self.root)
+    }
+}
+
+/// Every sound match of any rule in `prog`, scanning nodes in program
+/// order and rules in ruleset order (deterministic).
+pub fn find(prog: &Program, rules: &[Rule]) -> Vec<Found> {
     let uses = prog.use_counts();
-    let n = prog.nodes.len();
     let mut out = Vec::new();
-    for j in 0..n {
-        let OpIr::AddRow(m, _) = &prog.nodes[j].op else { continue };
-        let m = *m;
-        if !matches!(prog.nodes[m].op, OpIr::MatMul(..)) || uses[m] != 1 {
-            continue;
-        }
-        // Extend over a trailing relu when the add_row's one user is one.
-        let mut relu = None;
-        if uses[j] == 1 {
-            if let Some(r) =
-                (j + 1..n).find(|&r| prog.nodes[r].op.operands().contains(&j))
-            {
-                if matches!(prog.nodes[r].op, OpIr::Relu(_)) {
-                    relu = Some(r);
-                }
+    for root in 0..prog.nodes.len() {
+        for (ri, rule) in rules.iter().enumerate() {
+            if let Some(bindings) = match_rule(prog, &uses, rule, root) {
+                out.push(Found { rule: ri, root, bindings });
             }
         }
-        let rule = if relu.is_some() { Rule::FuseAffineRelu } else { Rule::FuseAffine };
-        out.push(Candidate { rule, matmul: m, add_row: j, relu });
     }
     out
 }
 
-/// Apply one candidate, producing a new program with the chain collapsed
-/// into a single `Affine` node at the chain tail's position (preserving
-/// topological order) and every other operand index remapped.
-pub fn apply(prog: &Program, cand: &Candidate) -> Program {
-    let tail = cand.relu.unwrap_or(cand.add_row);
-    let (x, w) = match &prog.nodes[cand.matmul].op {
-        OpIr::MatMul(a, b) => (*a, *b),
-        other => unreachable!("candidate matmul slot holds {}", other.name()),
-    };
-    let bias = match &prog.nodes[cand.add_row].op {
-        OpIr::AddRow(_, b) => *b,
-        other => unreachable!("candidate add_row slot holds {}", other.name()),
-    };
+/// Try to match `rule.lhs` with its root at `root`.  Returns the
+/// variable bindings on success.
+fn match_rule(
+    prog: &Program,
+    uses: &[usize],
+    rule: &Rule,
+    root: usize,
+) -> Option<Vec<usize>> {
+    let mut bind: Vec<Option<usize>> = vec![None; rule.shapes.len()];
+    let mut interior = Vec::new();
+    if !match_pattern(prog, &rule.lhs, root, &mut bind, &mut interior, true) {
+        return None;
+    }
+    // Static interference analysis: interior nodes (matched op nodes below
+    // the root) are deleted by the rewrite, so each must be single-use.
+    if interior.iter().any(|&n| uses[n] != 1) {
+        return None;
+    }
+    bind.into_iter().collect()
+}
+
+fn match_pattern(
+    prog: &Program,
+    pat: &Pattern,
+    node: usize,
+    bind: &mut Vec<Option<usize>>,
+    interior: &mut Vec<usize>,
+    is_root: bool,
+) -> bool {
+    match pat {
+        Pattern::Var(v) => match bind[*v] {
+            Some(b) => b == node,
+            None => {
+                bind[*v] = Some(node);
+                true
+            }
+        },
+        Pattern::Op(op, kids) => {
+            let Some(operands) = op.match_op(&prog.nodes[node].op) else {
+                return false;
+            };
+            if !is_root {
+                interior.push(node);
+            }
+            operands.len() == kids.len()
+                && kids
+                    .iter()
+                    .zip(&operands)
+                    .all(|(k, &o)| match_pattern(prog, k, o, bind, interior, false))
+        }
+    }
+}
+
+/// Apply one match: delete the lhs interior, splice the rhs tree in at
+/// the root's position (preserving topological order), remap every other
+/// operand index.
+pub fn apply(prog: &Program, rule: &Rule, f: &Found) -> Program {
+    let mut bind: Vec<Option<usize>> = vec![None; rule.shapes.len()];
+    let mut interior = Vec::new();
+    let ok = match_pattern(prog, &rule.lhs, f.root, &mut bind, &mut interior, true);
+    debug_assert!(ok, "apply called with a stale match");
+    let removed: HashSet<usize> = interior.into_iter().collect();
+
     let mut map = vec![usize::MAX; prog.nodes.len()];
-    let mut nodes = Vec::with_capacity(prog.nodes.len());
+    let mut nodes: Vec<NodeIr> = Vec::with_capacity(prog.nodes.len());
     for (i, n) in prog.nodes.iter().enumerate() {
-        if i == tail {
-            map[i] = nodes.len();
-            nodes.push(NodeIr {
-                op: OpIr::Affine {
-                    x: map[x],
-                    w: map[w],
-                    b: map[bias],
-                    relu: cand.relu.is_some(),
-                },
-                rows: n.rows,
-                cols: n.cols,
-                requires_grad: n.requires_grad,
-            });
+        if i == f.root {
+            map[i] = emit_rhs(&rule.rhs, &f.bindings, &map, &mut nodes);
+            debug_assert_eq!(
+                (nodes[map[i]].rows, nodes[map[i]].cols),
+                (n.rows, n.cols),
+                "rhs root shape drifts from the node it replaces"
+            );
             continue;
         }
-        if i == cand.matmul || i == cand.add_row {
-            continue; // interior chain nodes are absorbed by the Affine
+        if removed.contains(&i) {
+            continue;
         }
         map[i] = nodes.len();
         nodes.push(NodeIr {
@@ -136,6 +704,30 @@ pub fn apply(prog: &Program, cand: &Candidate) -> Program {
         });
     }
     Program { nodes }
+}
+
+/// Emit the rhs tree bottom-up, returning the new index of its root.  A
+/// bare-variable rhs emits nothing and redirects to the bound node.
+fn emit_rhs(
+    pat: &Pattern,
+    bindings: &[usize],
+    map: &[usize],
+    nodes: &mut Vec<NodeIr>,
+) -> usize {
+    match pat {
+        Pattern::Var(v) => map[bindings[*v]],
+        Pattern::Op(op, kids) => {
+            let ks: Vec<usize> =
+                kids.iter().map(|k| emit_rhs(k, bindings, map, nodes)).collect();
+            let shapes: Vec<(usize, usize)> =
+                ks.iter().map(|&k| (nodes[k].rows, nodes[k].cols)).collect();
+            let (rows, cols) = op
+                .infer_shape(&shapes)
+                .expect("admitted rule rhs must type-check at matched shapes");
+            nodes.push(NodeIr { op: op.build(&ks), rows, cols, requires_grad: true });
+            nodes.len() - 1
+        }
+    }
 }
 
 fn remap_op(op: &OpIr, map: &[usize]) -> OpIr {
@@ -173,6 +765,36 @@ fn remap_op(op: &OpIr, map: &[usize]) -> OpIr {
     }
 }
 
+/// Rewrite to fixpoint: repeatedly apply the first (deterministic) match
+/// until none fire.  Terminates because every admitted rule strictly
+/// shrinks the program.  Returns the rewritten program and the names of
+/// the rules applied, in order.
+pub fn rewrite_fixpoint(prog: &Program, rules: &[Rule]) -> (Program, Vec<String>) {
+    let mut cur = prog.clone();
+    let mut applied = Vec::new();
+    loop {
+        let found = find(&cur, rules);
+        let Some(f) = found.first() else { break };
+        applied.push(rules[f.rule].name.clone());
+        cur = apply(&cur, &rules[f.rule], f);
+    }
+    (cur, applied)
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identity admission
+// ---------------------------------------------------------------------------
+
+/// The admission sweep cells: every backend at 1 and 4 intra-threads.
+const ADMIT_COMBOS: [(Backend, usize); 6] = [
+    (Backend::Fast, 1),
+    (Backend::Fast, 4),
+    (Backend::Reference, 1),
+    (Backend::Reference, 4),
+    (Backend::Simd, 1),
+    (Backend::Simd, 4),
+];
+
 /// The admission rule: prove `rewritten` bit-identical to `orig` on the
 /// given leaves across formats × backends × thread counts.  Returns the
 /// number of (format, backend, threads) cells checked.
@@ -182,11 +804,9 @@ pub fn validate(
     leaves: &[Tensor],
 ) -> Result<u64, String> {
     let fmts = [FP32, BF16, FP16, E8M5];
-    let combos =
-        [(Backend::Fast, 1), (Backend::Fast, 4), (Backend::Reference, 1), (Backend::Simd, 1)];
     let mut checks = 0u64;
     for fmt in fmts {
-        for (backend, threads) in combos {
+        for (backend, threads) in ADMIT_COMBOS {
             let cell = format!("{} {} t{threads}", fmt.name, backend.name());
             let policy = QPolicy::with_backend(fmt, backend);
             let a = exec::run(orig, leaves, policy, threads)
@@ -218,6 +838,91 @@ pub fn validate(
         }
     }
     Ok(checks)
+}
+
+/// Build a rule side as a standalone program: one trainable leaf per
+/// pattern variable (in variable order), then the op tree.
+pub fn pattern_program(
+    pat: &Pattern,
+    shapes: &[(usize, usize)],
+) -> Result<Program, String> {
+    if matches!(pat, Pattern::Var(_)) {
+        // The replayer roots at the *last* node, which for a leaf-only
+        // program would be the wrong leaf — and no such rule can be
+        // admitted anyway (leaves hold raw values, op outputs are
+        // format-rounded, so an op tree is never bit-equal to a leaf).
+        return Err("bare-variable pattern has no op root to validate".into());
+    }
+    let mut nodes: Vec<NodeIr> = shapes
+        .iter()
+        .map(|&(rows, cols)| NodeIr { op: OpIr::Leaf, rows, cols, requires_grad: true })
+        .collect();
+    fn emit(
+        pat: &Pattern,
+        shapes: &[(usize, usize)],
+        nodes: &mut Vec<NodeIr>,
+    ) -> Result<usize, String> {
+        match pat {
+            Pattern::Var(v) => {
+                if *v >= shapes.len() {
+                    return Err(format!("variable ?{} has no shape", var_letter(*v)));
+                }
+                Ok(*v)
+            }
+            Pattern::Op(op, kids) => {
+                let ks: Vec<usize> = kids
+                    .iter()
+                    .map(|k| emit(k, shapes, nodes))
+                    .collect::<Result<_, _>>()?;
+                let kshapes: Vec<(usize, usize)> =
+                    ks.iter().map(|&k| (nodes[k].rows, nodes[k].cols)).collect();
+                let (rows, cols) = op.infer_shape(&kshapes).ok_or_else(|| {
+                    format!("pattern {pat} fails shape inference at {}", op.name())
+                })?;
+                nodes.push(NodeIr { op: op.build(&ks), rows, cols, requires_grad: true });
+                Ok(nodes.len() - 1)
+            }
+        }
+    }
+    emit(pat, shapes, &mut nodes)?;
+    Ok(Program { nodes })
+}
+
+/// Seeded leaf tensors for one valuation of a rule's variables
+/// (occasionally scaled up to poke the narrow formats, like the fuzzer's
+/// leaf generator).
+pub fn valuation_leaves(
+    shapes: &[(usize, usize)],
+    seed: u64,
+    valuation: u64,
+) -> Vec<Tensor> {
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(v, &(rows, cols))| {
+            let mut rng =
+                Rng::new(seed ^ (v as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15), valuation);
+            let scale = if rng.below(4) == 0 { 4.0 } else { 1.0 };
+            let data = (0..rows * cols).map(|_| rng.normal() * scale).collect();
+            Tensor::from_vec(rows, cols, data)
+        })
+        .collect()
+}
+
+/// Re-prove a rule's admission: both sides as standalone programs at the
+/// witness shapes, `valuations` fresh seeded variable assignments, the
+/// full [`validate`] sweep on each.  Returns cells checked.
+pub fn validate_rule(rule: &Rule, seed: u64, valuations: usize) -> Result<u64, String> {
+    rule.check()?;
+    let lhs = pattern_program(&rule.lhs, &rule.shapes)?;
+    let rhs = pattern_program(&rule.rhs, &rule.shapes)?;
+    let mut cells = 0u64;
+    for v in 0..valuations {
+        let leaves = valuation_leaves(&rule.shapes, seed, v as u64);
+        cells += validate(&lhs, &rhs, &leaves)
+            .map_err(|e| format!("rule {} valuation {v}: {e}", rule.name))?;
+    }
+    Ok(cells)
 }
 
 /// Leaf gradients in leaf order (index-stable across the rewrite, which
@@ -262,14 +967,58 @@ mod tests {
     }
 
     #[test]
-    fn finds_and_fuses_the_relu_chain() {
-        let (prog, leaves) = chain_program(true);
-        let cands = find(&prog);
-        assert_eq!(cands.len(), 1);
-        assert_eq!(cands[0].rule, Rule::FuseAffineRelu);
+    fn pattern_parse_roundtrips() {
+        for s in [
+            "(relu (add_row (matmul ?a ?b) ?c))",
+            "(affine_relu ?a ?b ?c)",
+            "(scale ?a 2)",
+            "(mean_all (mean_all ?a))",
+            "(add ?a ?a)",
+        ] {
+            let p = Pattern::parse(s).unwrap();
+            assert_eq!(p.to_string(), s);
+        }
+        assert!(Pattern::parse("(bogus ?a)").is_err());
+        assert!(Pattern::parse("(relu ?a ?b)").is_err());
+        assert!(Pattern::parse("(scale ?a)").is_err());
+    }
 
-        let rw = apply(&prog, &cands[0]);
-        assert_eq!(rw.nodes.len(), prog.nodes.len() - 2);
+    #[test]
+    fn rule_line_roundtrips_and_checks() {
+        let line = "fuse-affine: (add_row (matmul ?a ?b) ?c) => (affine ?a ?b ?c) ; a=3x4 b=4x2 c=1x2";
+        let r = Rule::parse(line).unwrap();
+        assert_eq!(r.render(), line);
+        // Growing rules are rejected.
+        assert!(Rule::parse(
+            "grow: (relu ?a) => (relu (relu ?a)) ; a=2x2"
+        )
+        .is_err());
+        // Variable-set mismatch is rejected.
+        assert!(Rule::parse(
+            "drop: (mul ?a ?b) => (relu ?a) ; a=2x2 b=2x2"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn embedded_corpus_parses_and_contains_the_pr6_rules() {
+        let rules = admitted_ruleset();
+        assert!(rules.iter().any(|r| r.name == "fuse-affine"));
+        assert!(rules.iter().any(|r| r.name == "fuse-affine-relu"));
+        for r in rules {
+            r.check().unwrap();
+        }
+    }
+
+    #[test]
+    fn finds_and_fuses_the_relu_chain_in_one_step() {
+        let (prog, leaves) = chain_program(true);
+        let rules = admitted_ruleset();
+        let (rw, applied) = rewrite_fixpoint(&prog, rules);
+        assert!(
+            applied.contains(&"fuse-affine-relu".to_string()),
+            "applied: {applied:?}"
+        );
         let root = rw.nodes.len() - 1;
         assert!(lint(&rw, root).errors().is_empty(), "{rw}");
         assert!(
@@ -282,10 +1031,8 @@ mod tests {
     #[test]
     fn fuses_bias_only_chain_without_relu() {
         let (prog, leaves) = chain_program(false);
-        let cands = find(&prog);
-        assert_eq!(cands.len(), 1);
-        assert_eq!(cands[0].rule, Rule::FuseAffine);
-        let rw = apply(&prog, &cands[0]);
+        let (rw, applied) = rewrite_fixpoint(&prog, admitted_ruleset());
+        assert!(applied.contains(&"fuse-affine".to_string()), "applied: {applied:?}");
         assert!(
             rw.nodes.iter().any(|n| matches!(n.op, OpIr::Affine { relu: false, .. })),
             "{rw}"
@@ -309,7 +1056,12 @@ mod tests {
                 node(OpIr::MeanAll(6), 1, 1),
             ],
         };
-        assert!(find(&prog).is_empty());
+        let fuse: Vec<Rule> = admitted_ruleset()
+            .iter()
+            .filter(|r| r.name.starts_with("fuse-affine"))
+            .cloned()
+            .collect();
+        assert!(find(&prog, &fuse).is_empty());
     }
 
     #[test]
@@ -328,12 +1080,99 @@ mod tests {
                 node(OpIr::MeanAll(6), 1, 1),
             ],
         };
-        let cands = find(&prog);
-        assert_eq!(cands.len(), 1);
-        assert_eq!(cands[0].rule, Rule::FuseAffine);
-        assert_eq!(cands[0].relu, None);
-        let rw = apply(&prog, &cands[0]);
+        let fuse: Vec<Rule> = admitted_ruleset()
+            .iter()
+            .filter(|r| r.name.starts_with("fuse-affine"))
+            .cloned()
+            .collect();
+        let found = find(&prog, &fuse);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(fuse[found[0].rule].name, "fuse-affine");
+        let rw = apply(&prog, &fuse[found[0].rule], &found[0]);
         let root = rw.nodes.len() - 1;
         assert!(lint(&rw, root).errors().is_empty(), "{rw}");
+        assert!(rw.nodes.iter().any(|n| matches!(n.op, OpIr::Relu(_))), "{rw}");
+    }
+
+    #[test]
+    fn repeated_variable_only_binds_one_node() {
+        let rule = Rule::parse("double: (add ?a ?a) => (scale ?a 2) ; a=2x2").unwrap();
+        // add(%1, %1) matches; add(%1, %2) must not.
+        let same = Program {
+            nodes: vec![
+                leaf(2, 2, true),
+                node(OpIr::Relu(0), 2, 2),
+                node(OpIr::Add(1, 1), 2, 2),
+                node(OpIr::MeanAll(2), 1, 1),
+            ],
+        };
+        let diff = Program {
+            nodes: vec![
+                leaf(2, 2, true),
+                leaf(2, 2, true),
+                node(OpIr::Add(0, 1), 2, 2),
+                node(OpIr::MeanAll(2), 1, 1),
+            ],
+        };
+        let rules = [rule];
+        assert_eq!(find(&same, &rules).len(), 1);
+        assert!(find(&diff, &rules).is_empty());
+        let f = &find(&same, &rules)[0];
+        let rw = apply(&same, &rules[f.rule], f);
+        assert!(rw.nodes.iter().any(|n| matches!(n.op, OpIr::Scale(_, c) if c == 2.0)));
+        assert!(lint(&rw, rw.nodes.len() - 1).errors().is_empty(), "{rw}");
+    }
+
+    #[test]
+    fn bare_variable_rhs_redirects_users() {
+        // Not admissible numerically (a raw leaf is not rounded like an op
+        // output), but the splice mechanics must handle a Var rhs: the
+        // root's users are redirected to the bound node.
+        let rule = Rule {
+            name: "erase".into(),
+            lhs: Pattern::parse("(relu (relu ?a))").unwrap(),
+            rhs: Pattern::Var(0),
+            shapes: vec![(2, 2)],
+        };
+        rule.check().unwrap();
+        let prog = Program {
+            nodes: vec![
+                leaf(2, 2, true),
+                node(OpIr::Relu(0), 2, 2),
+                node(OpIr::Relu(1), 2, 2),
+                node(OpIr::MeanAll(2), 1, 1),
+            ],
+        };
+        let rules = [rule];
+        let (rw, applied) = rewrite_fixpoint(&prog, &rules);
+        assert_eq!(applied, vec!["erase".to_string()]);
+        assert_eq!(rw.nodes.len(), 2);
+        assert!(matches!(rw.nodes[1].op, OpIr::MeanAll(0)), "{rw}");
+        assert!(lint(&rw, 1).errors().is_empty(), "{rw}");
+    }
+
+    #[test]
+    fn validate_rule_reproves_the_pr6_rules_on_fresh_valuations() {
+        for name in ["fuse-affine", "fuse-affine-relu"] {
+            let rule = admitted_ruleset().iter().find(|r| r.name == name).unwrap();
+            let cells = validate_rule(rule, 0xD1CE, 2).expect(name);
+            assert!(cells > 0);
+        }
+    }
+
+    #[test]
+    fn validate_rule_rejects_a_numerically_false_rule() {
+        // Distributivity holds in the reals but not under per-op rounding
+        // (a*b + a*c rounds three times, a*(b+c) rounds twice and in a
+        // different order) — exactly the kind of plausible candidate the
+        // admission sweep exists to reject.
+        let rule = Rule {
+            name: "unsound-distribute".into(),
+            lhs: Pattern::parse("(add (mul ?a ?b) (mul ?a ?c))").unwrap(),
+            rhs: Pattern::parse("(mul ?a (add ?b ?c))").unwrap(),
+            shapes: vec![(2, 3), (2, 3), (2, 3)],
+        };
+        rule.check().unwrap();
+        assert!(validate_rule(&rule, 7, 3).is_err());
     }
 }

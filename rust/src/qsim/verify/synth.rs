@@ -1,0 +1,617 @@
+//! Ruler-style enumerative rewrite-rule synthesis over the tape IR.
+//!
+//! The pipeline (after `ruler`/`enumo`, adapted to a *bitwise* equivalence
+//! relation instead of a semantic one):
+//!
+//! 1. **Enumerate** — grow all small op patterns over the
+//!    [`PatOp`](rewrite::PatOp) vocabulary from a seeded variable workload
+//!    ([`VAR_SHAPES`]), level `k` holding terms with exactly `k` op nodes,
+//!    up to `--depth`.  Growth is *representative-based*: a term whose
+//!    cvec collides with an earlier term joins that cluster but is not
+//!    grown further (any rule through it is reachable via the
+//!    representative).  The classic `matmul + add_row (+ relu)` chain is
+//!    seeded eagerly (when an `add_row(matmul(..), _)` term is built its
+//!    relu-wrapped form is emitted at the same level), mirroring the
+//!    fuzzer generator's chain bias.
+//! 2. **cvec fingerprint** — evaluate every term on shared seeded input
+//!    vectors (the same leaf data for variable `v` in every term) across
+//!    both backends (fast, reference) and the compute-format sweep
+//!    (fp32 / bf16 / fp16 / e8m5), forward *and* leaf gradients, and
+//!    fingerprint the bit patterns.  Terms whose fingerprints collide
+//!    bit-for-bit cluster together.
+//! 3. **Candidates** — each non-trivial cluster proposes rules
+//!    `lhs => rhs` with the smallest member as rhs.  Only strictly
+//!    shrinking candidates with equal variable sets survive (a bare
+//!    variable can never be a side: leaves carry raw values, op outputs
+//!    are rounded onto the compute format, so no op tree is bit-equal to
+//!    a leaf).
+//! 4. **Derivability filter** — a candidate whose lhs already rewrites to
+//!    its rhs under the rules admitted so far proves nothing new (it is
+//!    an *instance* of smaller rules, like
+//!    `add_row(matmul(relu ?a) ?b) ?c → affine(relu ?a) ?b ?c` once the
+//!    general bias fold is in) and is skipped, Ruler-fashion.  The two
+//!    historical hot-path rules (`fuse-affine`, `fuse-affine-relu`) are
+//!    exempt: they stay pinned explicitly even though the smaller folds
+//!    compose to subsume the three-node chain, because match priority
+//!    (biggest lhs first) wants the one-step collapse.
+//! 5. **Admit** — every surviving candidate goes through
+//!    [`rewrite::validate_rule`]: *fresh* seeded valuations (a different
+//!    stream than the cvecs), and bit-identity of loss, root forward and
+//!    every leaf gradient across {fp32, bf16, fp16, e8m5} ×
+//!    {fast, reference, simd} × {1, 4} intra-threads.
+//!
+//! The admitted ruleset is versioned at `rust/tests/data/synth_rules.txt`
+//! (`repro synth-rules --write` regenerates it; `--check` re-proves every
+//! checked-in rule *and* re-synthesizes, failing if any pinned rule is no
+//! longer admitted) and drives the generalized [`rewrite`](super::rewrite)
+//! engine; the fuzzer re-proves it on every generated program.
+//!
+//! Caps are never silent: per-level truncation (deterministic stride
+//! sampling over the sorted candidate list, so the survivors stay
+//! diverse) and the admitted-rule cap are both reported in
+//! [`SynthReport`].
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use super::exec;
+use super::rewrite::{self, PatOp, Pattern, Rule};
+use crate::precision::{BF16, E8M5, FP16, FP32};
+use crate::qsim::{Backend, QPolicy};
+
+/// The seeded variable workload: pattern variables `?a..?e` with the
+/// shapes every enumerated term is typed (and every cvec evaluated) at.
+/// Two same-shaped activations, a weight, a bias row and a thin row
+/// vector cover every operand role the vocabulary has.
+pub const VAR_SHAPES: [(usize, usize); 5] = [(3, 4), (3, 4), (4, 2), (1, 2), (1, 4)];
+
+/// Scale constants the enumerator ranges over.
+const SCALE_CONSTS: [f32; 3] = [2.0, 0.5, -1.0];
+
+/// The one layernorm epsilon every app records.
+const LN_EPS: f32 = 1e-5;
+
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    /// Maximum pattern size in op nodes (the PR-6 relu chain is 3; its
+    /// chain-bias seeding makes it reachable from depth 2).
+    pub depth: usize,
+    /// Seed for the shared cvec valuations and the (derived, distinct)
+    /// admission valuations.
+    pub seed: u64,
+    /// Per-level term cap; overflow is stride-sampled and reported.
+    pub max_terms_per_level: usize,
+    /// Seeded valuations per cvec fingerprint.
+    pub cvec_valuations: usize,
+    /// Fresh seeded valuations per admission proof.
+    pub admit_valuations: usize,
+    /// Largest-lhs candidates taken per cluster (reported when exceeded).
+    pub max_lhs_per_cluster: usize,
+    /// Admitted-ruleset cap (reported when hit).
+    pub max_rules: usize,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            depth: 3,
+            seed: 7,
+            // Level 2 of the default workload holds ~2.5k well-typed
+            // terms; the cap must clear it so every size-2 lhs is
+            // enumerated, and only the (much larger) deeper levels get
+            // stride-sampled.
+            max_terms_per_level: 4000,
+            cvec_valuations: 3,
+            admit_valuations: 3,
+            max_lhs_per_cluster: 4,
+            max_rules: 24,
+        }
+    }
+}
+
+impl SynthConfig {
+    pub fn at(depth: usize, seed: u64) -> Self {
+        SynthConfig { depth, seed, ..SynthConfig::default() }
+    }
+}
+
+/// Everything one synthesis run observed, caps included.
+#[derive(Debug, Clone)]
+pub struct SynthReport {
+    pub depth: usize,
+    pub seed: u64,
+    /// Terms enumerated and cvec-evaluated.
+    pub enumerated: usize,
+    /// Terms dropped by the per-level cap (deterministic stride sample).
+    pub dropped: usize,
+    /// Terms whose cvec evaluation failed (skipped, not clustered).
+    pub eval_failed: usize,
+    /// Clusters with at least two members.
+    pub clusters: usize,
+    /// Candidate rules extracted from clusters (post dedup).
+    pub candidates: usize,
+    /// Candidates dropped by `max_lhs_per_cluster` / `max_rules`.
+    pub capped: usize,
+    /// Renders of candidates skipped because the already-admitted rules
+    /// rewrite their lhs to their rhs (instances of smaller rules).
+    pub derived: Vec<String>,
+    /// Rules that survived the bit-identity admission sweep.
+    pub admitted: Vec<Rule>,
+    /// `(rule, first divergence)` for every rejected candidate.
+    pub rejected: Vec<(String, String)>,
+    /// Total (format × backend × threads × valuation) admission cells.
+    pub admission_cells: u64,
+}
+
+impl SynthReport {
+    /// The corpus document this run produces.
+    pub fn corpus(&self) -> rewrite::CorpusDoc {
+        rewrite::CorpusDoc {
+            depth: self.depth,
+            seed: self.seed,
+            rules: self.admitted.clone(),
+        }
+    }
+}
+
+/// The admission valuations must be fresh relative to the cvec stream —
+/// a candidate must survive data it was not clustered on.
+pub fn admission_seed(seed: u64) -> u64 {
+    seed ^ 0xAD31_55ED
+}
+
+struct Term {
+    pat: Pattern,
+    /// Op-node count (true size; chain-bias terms exceed their intro level).
+    size: usize,
+    shape: (usize, usize),
+    key: String,
+}
+
+/// Run the full enumerate → cvec-cluster → admit pipeline.
+pub fn synthesize(cfg: &SynthConfig) -> SynthReport {
+    let mut report = SynthReport {
+        depth: cfg.depth,
+        seed: cfg.seed,
+        enumerated: 0,
+        dropped: 0,
+        eval_failed: 0,
+        clusters: 0,
+        candidates: 0,
+        capped: 0,
+        derived: Vec::new(),
+        admitted: Vec::new(),
+        rejected: Vec::new(),
+        admission_cells: 0,
+    };
+
+    let var_shapes: Vec<(usize, usize)> = VAR_SHAPES.to_vec();
+    let mut terms: Vec<Term> = Vec::new();
+    let mut seen: HashSet<String> = HashSet::new();
+    // fingerprint -> term ids, insertion-ordered; BTreeMap for determinism.
+    let mut clusters: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    // Term ids that grow at the next levels (cluster representatives).
+    let mut reps: Vec<usize> = Vec::new();
+
+    // Level 0: the variables themselves (growth seeds, never clustered —
+    // no admissible rule can have a bare-variable side, see module docs).
+    for (v, &shape) in var_shapes.iter().enumerate() {
+        let pat = Pattern::Var(v);
+        let key = pat.to_string();
+        seen.insert(key.clone());
+        terms.push(Term { pat, size: 0, shape, key });
+        reps.push(terms.len() - 1);
+    }
+
+    // Pre-compute the shared cvec valuations once.
+    let valuations: Vec<Vec<crate::qsim::Tensor>> = (0..cfg.cvec_valuations)
+        .map(|v| rewrite::valuation_leaves(&var_shapes, cfg.seed, v as u64))
+        .collect();
+
+    // Hard generation valve: pattern counts explode combinatorially with
+    // depth, so a level stops *generating* (not just sampling) well above
+    // the keep cap.  Seeded chain terms bypass it — they are the workload.
+    let valve = cfg.max_terms_per_level.saturating_mul(50);
+
+    for level in 1..=cfg.depth {
+        let mut cands: Vec<(Pattern, usize, (usize, usize), bool)> = Vec::new();
+        let mut valve_dropped = 0usize;
+        let push_cand =
+            |cands: &mut Vec<(Pattern, usize, (usize, usize), bool)>,
+             seen: &mut HashSet<String>,
+             valve_dropped: &mut usize,
+             pat: Pattern,
+             size: usize,
+             shape: (usize, usize),
+             seeded: bool| {
+                let key = pat.to_string();
+                if seen.insert(key) {
+                    if seeded || cands.len() < valve {
+                        cands.push((pat, size, shape, seeded));
+                    } else {
+                        *valve_dropped += 1;
+                    }
+                }
+            };
+
+        // Unary ops over size-(level-1) representatives.
+        let unary: Vec<PatOp> = {
+            let mut u = vec![
+                PatOp::Relu,
+                PatOp::Sigmoid,
+                PatOp::Tanh,
+                PatOp::MeanAll,
+                PatOp::LayerNorm(LN_EPS),
+            ];
+            u.extend(SCALE_CONSTS.iter().map(|&c| PatOp::Scale(c)));
+            u
+        };
+        for &t in &reps {
+            if terms[t].size != level - 1 {
+                continue;
+            }
+            for op in &unary {
+                if let Some(shape) = op.infer_shape(&[terms[t].shape]) {
+                    let pat = Pattern::Op(*op, vec![terms[t].pat.clone()]);
+                    push_cand(
+                        &mut cands,
+                        &mut seen,
+                        &mut valve_dropped,
+                        pat,
+                        level,
+                        shape,
+                        false,
+                    );
+                }
+            }
+        }
+
+        // Binary ops over representative pairs with sizes summing level-1.
+        let binary =
+            [PatOp::Add, PatOp::Sub, PatOp::Mul, PatOp::MatMul, PatOp::MatMulNT, PatOp::AddRow];
+        for &t1 in &reps {
+            for &t2 in &reps {
+                if terms[t1].size + terms[t2].size != level - 1 {
+                    continue;
+                }
+                for op in &binary {
+                    let Some(shape) = op.infer_shape(&[terms[t1].shape, terms[t2].shape])
+                    else {
+                        continue;
+                    };
+                    let pat = Pattern::Op(
+                        *op,
+                        vec![terms[t1].pat.clone(), terms[t2].pat.clone()],
+                    );
+                    // Chain-bias seeding: the classic fusable chain gets its
+                    // relu-wrapped form at the same level (size level+1), so
+                    // depth-2 synthesis already sees the PR-6 relu chain.
+                    let bias = *op == PatOp::AddRow
+                        && matches!(&terms[t1].pat, Pattern::Op(PatOp::MatMul, _));
+                    if bias {
+                        let wrapped = Pattern::Op(PatOp::Relu, vec![pat.clone()]);
+                        push_cand(
+                            &mut cands,
+                            &mut seen,
+                            &mut valve_dropped,
+                            wrapped,
+                            level + 1,
+                            shape,
+                            true,
+                        );
+                    }
+                    push_cand(&mut cands, &mut seen, &mut valve_dropped, pat, level, shape, bias);
+                }
+            }
+        }
+
+        // Affine (3-ary): x ranges over representatives, w/b over variables
+        // (pattern matching is structural, so variable operands already
+        // generalize to arbitrary subgraphs at match time).
+        for &tx in &reps {
+            if terms[tx].size != level - 1 {
+                continue;
+            }
+            for w in 0..var_shapes.len() {
+                for b in 0..var_shapes.len() {
+                    for relu in [false, true] {
+                        let op = PatOp::Affine { relu };
+                        let Some(shape) = op.infer_shape(&[
+                            terms[tx].shape,
+                            var_shapes[w],
+                            var_shapes[b],
+                        ]) else {
+                            continue;
+                        };
+                        let pat = Pattern::Op(
+                            op,
+                            vec![
+                                terms[tx].pat.clone(),
+                                Pattern::Var(w),
+                                Pattern::Var(b),
+                            ],
+                        );
+                        push_cand(
+                            &mut cands,
+                            &mut seen,
+                            &mut valve_dropped,
+                            pat,
+                            level,
+                            shape,
+                            false,
+                        );
+                    }
+                }
+            }
+        }
+
+        // Deterministic order, then a deterministic stride sample if the
+        // level overflows its cap (keeps the survivors spread over the
+        // whole op alphabet instead of whatever sorts first).  Seeded
+        // chain terms always survive — they are the workload.
+        report.dropped += valve_dropped;
+        cands.sort_by(|a, b| a.1.cmp(&b.1).then_with(|| a.0.to_string().cmp(&b.0.to_string())));
+        let kept: Vec<(Pattern, usize, (usize, usize), bool)> =
+            if cands.len() > cfg.max_terms_per_level {
+                let total = cands.len();
+                let stride = total.div_ceil(cfg.max_terms_per_level);
+                let sampled: Vec<_> = cands
+                    .into_iter()
+                    .enumerate()
+                    .filter(|(i, c)| c.3 || i % stride == 0)
+                    .map(|(_, c)| c)
+                    .collect();
+                report.dropped += total - sampled.len();
+                sampled
+            } else {
+                cands
+            };
+
+        // cvec-evaluate and cluster; first member of a new cluster becomes
+        // a growth representative.
+        for (pat, size, shape, _) in kept {
+            report.enumerated += 1;
+            let key = pat.to_string();
+            let id = terms.len();
+            let fp = fingerprint(&pat, &var_shapes, &valuations);
+            terms.push(Term { pat, size, shape, key });
+            match fp {
+                None => report.eval_failed += 1,
+                Some(fp) => {
+                    let members = clusters.entry(fp).or_default();
+                    if members.is_empty() {
+                        reps.push(id);
+                    }
+                    members.push(id);
+                }
+            }
+        }
+    }
+
+    // Candidate extraction: smallest member rewrites to, larger members
+    // rewrite from.  Clusters are visited in *enumeration* order (their
+    // earliest member's term id), not fingerprint order, so which
+    // witness-shape instance of a rule wins the cross-cluster dedup below
+    // is stable and predictable (the earliest-enumerated variables).
+    let mut groups: Vec<Vec<usize>> =
+        clusters.into_values().filter(|m| m.len() >= 2).collect();
+    groups.sort_by_key(|m| m[0]);
+    let mut cand_rules: Vec<Rule> = Vec::new();
+    let mut names: HashMap<String, usize> = HashMap::new();
+    for members in &groups {
+        report.clusters += 1;
+        let mut sorted = members.clone();
+        sorted.sort_by(|&a, &b| {
+            terms[a].size.cmp(&terms[b].size).then_with(|| terms[a].key.cmp(&terms[b].key))
+        });
+        let rhs_id = sorted[0];
+        let mut taken = 0usize;
+        for &lhs_id in &sorted[1..] {
+            if terms[lhs_id].size <= terms[rhs_id].size
+                || terms[lhs_id].pat.vars() != terms[rhs_id].pat.vars()
+            {
+                continue;
+            }
+            if taken >= cfg.max_lhs_per_cluster {
+                report.capped += 1;
+                continue;
+            }
+            taken += 1;
+            // Renumber variables densely by lhs first-occurrence order and
+            // record the witness shapes.
+            let order = terms[lhs_id].pat.vars_in_order();
+            let mut map = vec![usize::MAX; var_shapes.len()];
+            for (new, &old) in order.iter().enumerate() {
+                map[old] = new;
+            }
+            let lhs = terms[lhs_id].pat.rename_vars(&map);
+            let rhs = terms[rhs_id].pat.rename_vars(&map);
+            let shapes: Vec<(usize, usize)> =
+                order.iter().map(|&v| var_shapes[v]).collect();
+            if cand_rules.iter().any(|r| r.lhs == lhs && r.rhs == rhs) {
+                continue; // same rule from another witness-shape cluster
+            }
+            let base = rule_name(&lhs, &rhs);
+            let n = names.entry(base.clone()).or_insert(0);
+            *n += 1;
+            let name = if *n == 1 { base } else { format!("{base}-{n}") };
+            let rule = Rule { name, lhs, rhs, shapes };
+            if rule.check().is_ok() {
+                cand_rules.push(rule);
+            }
+        }
+    }
+    cand_rules.sort_by(|a, b| {
+        a.lhs.op_count().cmp(&b.lhs.op_count()).then_with(|| a.name.cmp(&b.name))
+    });
+    report.candidates = cand_rules.len();
+
+    // Admission: smallest lhs first, so the derivability filter sees the
+    // general rules before their instances; then the hardened PR-6
+    // validator on fresh valuations.
+    let admit_seed = admission_seed(cfg.seed);
+    for rule in cand_rules {
+        if report.admitted.len() >= cfg.max_rules {
+            report.capped += 1;
+            continue;
+        }
+        let pinned = matches!(rule.name.as_str(), "fuse-affine" | "fuse-affine-relu");
+        if !pinned && derivable(&rule, &report.admitted) {
+            report.derived.push(rule.render());
+            continue;
+        }
+        match rewrite::validate_rule(&rule, admit_seed, cfg.admit_valuations) {
+            Ok(cells) => {
+                report.admission_cells += cells;
+                report.admitted.push(rule);
+            }
+            Err(e) => report.rejected.push((rule.render(), e)),
+        }
+    }
+    report
+}
+
+/// Ruler's redundancy filter: a candidate is *derived* when rewriting its
+/// lhs program to fixpoint under the already-admitted rules yields
+/// exactly its rhs program — it is an instance of smaller proven rules
+/// and admitting it would only bloat the corpus.
+fn derivable(rule: &Rule, admitted: &[Rule]) -> bool {
+    let (Ok(lhs), Ok(rhs)) = (
+        rewrite::pattern_program(&rule.lhs, &rule.shapes),
+        rewrite::pattern_program(&rule.rhs, &rule.shapes),
+    ) else {
+        return false;
+    };
+    let (rw, applied) = rewrite::rewrite_fixpoint(&lhs, admitted);
+    !applied.is_empty() && rw == rhs
+}
+
+/// Bitwise characteristic vector of `pat`, folded to a 64-bit FNV-1a
+/// fingerprint: root shape, then for every (valuation × format × backend)
+/// cell the loss bits, the root forward bits and every per-variable leaf
+/// gradient (presence plus bits).  `None` when any cell fails to replay.
+fn fingerprint(
+    pat: &Pattern,
+    var_shapes: &[(usize, usize)],
+    valuations: &[Vec<crate::qsim::Tensor>],
+) -> Option<u64> {
+    let prog = rewrite::pattern_program(pat, var_shapes).ok()?;
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    let eat = |h: &mut u64, bytes: &[u8]| {
+        for &b in bytes {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    let root = prog.nodes.len() - 1;
+    eat(&mut h, &(prog.nodes[root].rows as u64).to_le_bytes());
+    eat(&mut h, &(prog.nodes[root].cols as u64).to_le_bytes());
+    for leaves in valuations {
+        for fmt in [FP32, BF16, FP16, E8M5] {
+            for backend in [Backend::Fast, Backend::Reference] {
+                let rep =
+                    exec::run(&prog, leaves, QPolicy::with_backend(fmt, backend), 1).ok()?;
+                eat(&mut h, &rep.loss.to_bits().to_le_bytes());
+                for x in &rep.values[root].data {
+                    eat(&mut h, &x.to_bits().to_le_bytes());
+                }
+                for v in 0..var_shapes.len() {
+                    match &rep.grads[v] {
+                        None => eat(&mut h, &[0xFF]),
+                        Some(g) => {
+                            eat(&mut h, &[0x01]);
+                            for x in &g.data {
+                                eat(&mut h, &x.to_bits().to_le_bytes());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Some(h)
+}
+
+/// Stable, readable rule names: the two PR-6 rules keep their historical
+/// names, everything else is `lhs-spine~rhs-spine`.
+fn rule_name(lhs: &Pattern, rhs: &Pattern) -> String {
+    let fuse_affine = Pattern::parse("(add_row (matmul ?a ?b) ?c)").unwrap();
+    let affine = Pattern::parse("(affine ?a ?b ?c)").unwrap();
+    let fuse_affine_relu = Pattern::parse("(relu (add_row (matmul ?a ?b) ?c))").unwrap();
+    let affine_relu = Pattern::parse("(affine_relu ?a ?b ?c)").unwrap();
+    if *lhs == fuse_affine && *rhs == affine {
+        return "fuse-affine".into();
+    }
+    if *lhs == fuse_affine_relu && *rhs == affine_relu {
+        return "fuse-affine-relu".into();
+    }
+    format!("{}~{}", spine(lhs), spine(rhs))
+}
+
+/// Prefix-order op names of a pattern, joined with `-`.
+fn spine(p: &Pattern) -> String {
+    fn walk(p: &Pattern, out: &mut Vec<&'static str>) {
+        if let Pattern::Op(op, kids) = p {
+            out.push(op.name());
+            kids.iter().for_each(|k| walk(k, out));
+        }
+    }
+    let mut ops = Vec::new();
+    walk(p, &mut ops);
+    if ops.is_empty() {
+        "id".into()
+    } else {
+        ops.join("-")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth1_admits_nothing() {
+        // Every level-1 term has exactly one op node, so no cluster can
+        // contain a strictly-shrinking pair; the run must come back empty
+        // without erroring.
+        let report = synthesize(&SynthConfig {
+            depth: 1,
+            seed: 7,
+            max_terms_per_level: 400,
+            cvec_valuations: 2,
+            admit_valuations: 2,
+            ..SynthConfig::default()
+        });
+        assert!(report.enumerated > 0);
+        // Size-1 terms only: every cluster member has one op, so no
+        // strictly-shrinking rule can exist.
+        assert!(report.admitted.is_empty(), "{:?}", report.admitted);
+    }
+
+    #[test]
+    fn rule_names_are_stable_and_special_cased() {
+        let lhs = Pattern::parse("(relu (add_row (matmul ?a ?b) ?c))").unwrap();
+        let rhs = Pattern::parse("(affine_relu ?a ?b ?c)").unwrap();
+        assert_eq!(rule_name(&lhs, &rhs), "fuse-affine-relu");
+        let lhs = Pattern::parse("(relu (relu ?a))").unwrap();
+        let rhs = Pattern::parse("(relu ?a)").unwrap();
+        assert_eq!(rule_name(&lhs, &rhs), "relu-relu~relu");
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let cfg = SynthConfig {
+            depth: 2,
+            seed: 11,
+            max_terms_per_level: 200,
+            cvec_valuations: 2,
+            admit_valuations: 1,
+            ..SynthConfig::default()
+        };
+        let a = synthesize(&cfg);
+        let b = synthesize(&cfg);
+        assert_eq!(a.admitted, b.admitted);
+        assert_eq!(a.enumerated, b.enumerated);
+        assert_eq!(a.candidates, b.candidates);
+        assert_eq!(a.derived, b.derived);
+    }
+}

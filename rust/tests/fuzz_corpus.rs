@@ -85,7 +85,9 @@ fn corpus_covers_the_op_vocabulary() {
     let candidates: usize = SMOKE
         .iter()
         .chain(INTERESTING)
-        .map(|&(s, i)| rewrite::find(&gen::gen_case(s, i).program).len())
+        .map(|&(s, i)| {
+            rewrite::find(&gen::gen_case(s, i).program, rewrite::admitted_ruleset()).len()
+        })
         .sum();
     assert!(candidates > 0, "corpus contains no fusable chains");
 }

@@ -1,0 +1,108 @@
+//! Tier-1 guard on the checked-in synthesized ruleset
+//! (`tests/data/synth_rules.txt`): every pinned rule's bit-identity
+//! admission proof re-runs on every `cargo test` — at the pinned
+//! admission seed *and* at a fresh one the synthesizer never saw — and a
+//! bounded depth-2 synthesis run must rediscover both hand-written PR-6
+//! fusion rules from the raw op vocabulary.
+
+use bf16_train::qsim::verify::rewrite::{self, Pattern};
+use bf16_train::qsim::verify::OpIr;
+use bf16_train::qsim::verify::synth::{self, SynthConfig};
+
+#[test]
+fn corpus_parses_with_canonical_and_new_rules() {
+    let doc = rewrite::corpus_doc().expect("synth_rules.txt must parse");
+    for rule in &doc.rules {
+        rule.check().unwrap_or_else(|e| panic!("malformed corpus rule: {e}"));
+    }
+    let names: Vec<&str> = doc.rules.iter().map(|r| r.name.as_str()).collect();
+    assert!(names.contains(&"fuse-affine"), "corpus lost fuse-affine: {names:?}");
+    assert!(
+        names.contains(&"fuse-affine-relu"),
+        "corpus lost fuse-affine-relu: {names:?}"
+    );
+    let new = names
+        .iter()
+        .filter(|n| !matches!(**n, "fuse-affine" | "fuse-affine-relu"))
+        .count();
+    assert!(
+        new >= 2,
+        "corpus must carry at least two synthesized rules beyond the \
+         hand-written fusions, found {new}: {names:?}"
+    );
+}
+
+#[test]
+fn every_corpus_rule_reproves_at_the_pinned_admission_seed() {
+    let doc = rewrite::corpus_doc().expect("synth_rules.txt must parse");
+    let seed = synth::admission_seed(doc.seed);
+    for rule in &doc.rules {
+        let cells = rewrite::validate_rule(rule, seed, 2).unwrap_or_else(|e| {
+            panic!("pinned admission proof broke for {}: {e}", rule.name)
+        });
+        assert!(cells > 0, "rule {} proved zero cells", rule.name);
+    }
+}
+
+#[test]
+fn every_corpus_rule_reproves_at_a_fresh_seed() {
+    // Data the synthesizer never clustered or admitted on: a pinned rule
+    // must be an identity of the ops, not of its witness valuations.
+    let doc = rewrite::corpus_doc().expect("synth_rules.txt must parse");
+    for rule in &doc.rules {
+        rewrite::validate_rule(rule, 0xC0FFEE, 2).unwrap_or_else(|e| {
+            panic!("fresh-seed proof broke for {}: {e}", rule.name)
+        });
+    }
+}
+
+#[test]
+fn bounded_depth2_synthesis_rediscovers_the_fusion_rules() {
+    // Reduced valuation counts keep this inside a test budget; the relu
+    // chain (size 3) is reachable at depth 2 via chain-bias seeding.
+    let cfg = SynthConfig { cvec_valuations: 2, admit_valuations: 1, ..SynthConfig::at(2, 7) };
+    let report = synth::synthesize(&cfg);
+    let affine = (
+        Pattern::parse("(add_row (matmul ?a ?b) ?c)").unwrap(),
+        Pattern::parse("(affine ?a ?b ?c)").unwrap(),
+    );
+    let affine_relu = (
+        Pattern::parse("(relu (add_row (matmul ?a ?b) ?c))").unwrap(),
+        Pattern::parse("(affine_relu ?a ?b ?c)").unwrap(),
+    );
+    for (tag, (lhs, rhs)) in [("fuse-affine", affine), ("fuse-affine-relu", affine_relu)] {
+        assert!(
+            report.admitted.iter().any(|r| r.lhs == lhs && r.rhs == rhs),
+            "depth-2 synthesis failed to rediscover {tag}; admitted: {:?}",
+            report.admitted.iter().map(|r| r.render()).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn ruleset_collapses_the_classic_chain_and_validates() {
+    // The PR-6 motivating program — relu(add_row(matmul x w, b)) — must
+    // fully fuse under the pinned ruleset and pass the admission sweep.
+    let doc = rewrite::corpus_doc().expect("synth_rules.txt must parse");
+    let far = doc
+        .rules
+        .iter()
+        .find(|r| r.name == "fuse-affine-relu")
+        .expect("fuse-affine-relu pinned");
+    let prog = rewrite::pattern_program(&far.lhs, &far.shapes).unwrap();
+    let (rw, applied) = rewrite::rewrite_fixpoint(&prog, rewrite::admitted_ruleset());
+    assert!(!applied.is_empty(), "ruleset did not fire on the classic chain");
+    assert_eq!(
+        rw.nodes.len(),
+        far.shapes.len() + 1,
+        "chain must collapse to leaves + one fused op, got:\n{rw}"
+    );
+    assert!(
+        matches!(rw.nodes.last().unwrap().op, OpIr::Affine { relu: true, .. }),
+        "fused root must be affine_relu, got:\n{rw}"
+    );
+    let leaves = rewrite::valuation_leaves(&far.shapes, 0xBEEF, 0);
+    let cells = rewrite::validate(&prog, &rw, &leaves)
+        .unwrap_or_else(|e| panic!("fused chain diverged: {e}"));
+    assert!(cells > 0);
+}

@@ -114,6 +114,12 @@ pub struct RunConfig {
     /// injection.  Any schedule yields bit-identical training results;
     /// chaos only perturbs timing and the recovery counters.
     pub chaos: Option<String>,
+    /// Inference-serving knobs for `repro serve` (`[serve]` TOML table:
+    /// `serve.addr`, `serve.batch_window_us`, `serve.max_batch`,
+    /// `serve.backend`), validated at parse time like every other key.
+    /// The window/batch knobs only shape latency — batching never changes
+    /// a scored bit, so they need no fingerprint or parity coverage.
+    pub serve: crate::qsim::ServeConfig,
 }
 
 impl RunConfig {
@@ -180,6 +186,7 @@ impl RunConfig {
             shards: 0,
             grad_accum: 1,
             chaos: None,
+            serve: crate::qsim::ServeConfig::default(),
         }
     }
 
@@ -238,6 +245,23 @@ impl RunConfig {
             crate::qsim::ChaosConfig::parse(c)
                 .with_context(|| format!("config key `train.chaos` = {c:?}"))?;
             cfg.chaos = Some(c.to_string());
+        }
+        cfg.serve.addr = doc.str_or("serve.addr", &cfg.serve.addr).to_string();
+        if !cfg.serve.addr.contains(':') {
+            bail!("config key `serve.addr` = {:?} must be host:port", cfg.serve.addr);
+        }
+        // .max(0): negative values must not wrap through `as u64`
+        cfg.serve.batch_window_us =
+            doc.i64_or("serve.batch_window_us", cfg.serve.batch_window_us as i64).max(0) as u64;
+        let max_batch = doc.i64_or("serve.max_batch", cfg.serve.max_batch as i64);
+        if max_batch < 1 {
+            bail!("config key `serve.max_batch` = {max_batch} must be >= 1");
+        }
+        cfg.serve.max_batch = max_batch as usize;
+        if let Some(b) = doc.get("serve.backend").and_then(|v| v.as_str()) {
+            cfg.serve.backend = Backend::by_name(b).with_context(|| {
+                format!("config key `serve.backend` = {b:?} (expected fast, reference or simd)")
+            })?;
         }
         if let Some(kind) = doc.get("schedule.kind").and_then(|v| v.as_str()) {
             let warmup = doc.f64_or("schedule.warmup_frac", 0.0);
@@ -626,6 +650,30 @@ warmup_frac = 0.1
         let spec = RunSpec::new("mlp").shards(4).grad_accum(8).chaos(Some("heavy".into()));
         let cfg = spec.build();
         assert_eq!((cfg.shards, cfg.grad_accum, cfg.chaos.as_deref()), (4, 8, Some("heavy")));
+    }
+
+    #[test]
+    fn serve_keys_default_parse_and_validate() {
+        use crate::qsim::ServeConfig;
+        let cfg = RunConfig::defaults_for("dlrm");
+        assert_eq!(cfg.serve, ServeConfig::default());
+        let cfg = RunConfig::from_toml_text(
+            "app = \"dlrm\"\n[serve]\naddr = \"0.0.0.0:9100\"\nbatch_window_us = 500\n\
+             max_batch = 64\nbackend = \"simd\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.addr, "0.0.0.0:9100");
+        assert_eq!(cfg.serve.batch_window_us, 500);
+        assert_eq!(cfg.serve.max_batch, 64);
+        assert_eq!(cfg.serve.backend, Backend::Simd);
+        // every serve key is validated at parse time, not at bind time
+        for bad in [
+            "app = \"dlrm\"\n[serve]\naddr = \"noport\"\n",
+            "app = \"dlrm\"\n[serve]\nmax_batch = 0\n",
+            "app = \"dlrm\"\n[serve]\nbackend = \"cuda\"\n",
+        ] {
+            assert!(RunConfig::from_toml_text(bad).is_err(), "must reject {bad:?}");
+        }
     }
 
     #[test]

@@ -38,6 +38,8 @@ fn main() -> Result<()> {
         "lint-tape" => cmd_lint_tape(&mut args),
         "fuzz-tape" => cmd_fuzz_tape(&mut args),
         "synth-rules" => cmd_synth_rules(&mut args),
+        "serve" => cmd_serve(&mut args),
+        "serve-bench" => cmd_serve_bench(&mut args),
         "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -62,6 +64,14 @@ const USAGE: &str = "usage: repro <command>
   lint-tape [--app all|dlrm|gpt|mlp|lsq] [--seed S]
   fuzz-tape [--budget N] [--seed S] [--case I]
   synth-rules [--depth D] [--seed S] [--check] [--write]
+  serve --ckpt FILE [--addr HOST:PORT] [--batch-window US] [--max-batch N]
+        [--backend fast|reference|simd] [--mode MODE] [--fmt FMT] [--seed S]
+        [--config FILE.toml]
+  serve-bench [--iters N] [--requests N] [--out FILE]
+  serve-bench --connect ADDR --app dlrm|gpt-nano --corpus FILE
+        [--clients C] [--shutdown]
+  serve-bench --oracle --ckpt FILE --corpus FILE [--mode MODE] [--fmt FMT]
+        [--seed S]
 
 modes: fp32 standard16 mixed16 sr16 kahan16 srkahan16
 fmts:  bf16 (default) fp16 e8m5 e8m3 e8m1
@@ -103,6 +113,23 @@ within one train step (bit-identical results at every setting).  Today the
 intra-step pool drives the qsim-native kernels (fig5/fig9, qsim-parity, the
 native benches); the PJRT session path records the setting but still runs
 its lowered executables as compiled.
+
+`serve` loads a BF16CKP2 checkpoint (app auto-detected from the header)
+into a frozen model and scores it through the tape-free compiled
+inference plan: one line per request over TCP (`dlrm <dense..> | <idx..>`
+or `gpt <tok..>`), replies carry the logit bit pattern, and concurrent
+requests are coalesced for up to --batch-window microseconds (up to
+--max-batch rows) and scored as one padded batch — batching and padding
+never change a scored bit, so replies are bit-identical to a per-request
+tape eval.  --mode/--fmt/--seed must match the training run (the
+checkpoint validates them); checkpoints from custom-sized configs load
+via the same --config used to train.  Send the line `shutdown` to stop
+the server.  `serve-bench` with no flags runs the in-process suite and
+writes BENCH_serve.json (p50/p99/QPS per backend x batch window, plus
+infer-plan vs tape-eval speedups); --connect drives a corpus file
+against a running server and prints a reply digest that must equal the
+digest `--oracle` computes from the checkpoint via per-request tape
+evals.
 
 --shards N (with --native, or on qsim-parity) runs the data-parallel
 `qsim::shard` engine: each optimizer step splits --grad-accum M
@@ -1074,5 +1101,328 @@ fn cmd_synth_rules(args: &mut Args) -> Result<()> {
             "synth-rules --check: corpus re-proven, every pinned rule re-synthesized, no drift"
         );
     }
+    Ok(())
+}
+
+/// `repro serve` — load a checkpoint into a frozen model and serve it
+/// through the tape-free compiled inference plan with async dynamic
+/// micro-batching (`qsim::infer`).
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    let ckpt_path = args.opt_maybe("ckpt");
+    let file_cfg = args
+        .opt_maybe("config")
+        .map(|p| RunConfig::from_toml_file(&p))
+        .transpose()?;
+    let mut serve = file_cfg.as_ref().map(|c| c.serve.clone()).unwrap_or_default();
+    let mut policy = file_cfg.as_ref().map(|c| c.policy).unwrap_or_default();
+    if let Some(m) = args.opt_maybe("mode") {
+        policy = Policy::new(m.parse::<Mode>()?, policy.fmt);
+    }
+    if let Some(f) = args.opt_maybe("fmt") {
+        let fmt = Format::by_name(&f).with_context(|| format!("--fmt {f:?} is not a known format"))?;
+        policy = Policy::new(policy.mode, fmt);
+    }
+    let seed = args.opt_u64("seed", file_cfg.as_ref().map(|c| c.seed).unwrap_or(0))?;
+    if let Some(a) = args.opt_maybe("addr") {
+        if !a.contains(':') {
+            bail!("--addr {a:?} must be host:port");
+        }
+        serve.addr = a;
+    }
+    serve.batch_window_us = args.opt_u64("batch-window", serve.batch_window_us)?;
+    let max_batch = args.opt_u64("max-batch", serve.max_batch as u64)?;
+    if max_batch < 1 {
+        bail!("--max-batch must be >= 1, got {max_batch}");
+    }
+    serve.max_batch = max_batch as usize;
+    if let Some(b) = args.opt_maybe("backend") {
+        serve.backend = bf16_train::qsim::Backend::by_name(&b)
+            .with_context(|| format!("--backend {b:?} (expected fast, reference or simd)"))?;
+    }
+    args.finish()?;
+    let ckpt_path = ckpt_path.context("serve needs --ckpt FILE (a BF16CKP2 checkpoint)")?;
+
+    let bytes = std::fs::read(&ckpt_path)
+        .with_context(|| format!("reading checkpoint {ckpt_path:?}"))?;
+    let app_name = bf16_train::util::ckpt::peek_app_name(&bytes)
+        .with_context(|| format!("checkpoint {ckpt_path:?}"))?;
+    let (app, qpolicy) =
+        load_serve_app(&app_name, &bytes, policy.mode, policy.fmt, seed, serve.backend)
+            .with_context(|| format!("checkpoint {ckpt_path:?}"))?;
+    println!(
+        "serve {app_name} | window {}us max-batch {} [{} {} on {} backend]",
+        serve.batch_window_us,
+        serve.max_batch,
+        policy.mode,
+        policy.fmt.name,
+        serve.backend.name()
+    );
+    let handle = bf16_train::qsim::infer::spawn_server(app, qpolicy, &serve)?;
+    println!("serving {app_name} at {} (send `shutdown` to stop)", handle.addr());
+    handle.join();
+    println!("server stopped");
+    Ok(())
+}
+
+/// Rebuild the trainer a checkpoint came from and freeze its model for
+/// serving.  Configs are constructed exactly as `train --native` builds
+/// them, so a checkpoint saved there passes the fingerprint check here;
+/// custom-sized runs load through the same `--config` they trained with.
+fn load_serve_app(
+    app: &str,
+    ckpt: &[u8],
+    mode: Mode,
+    fmt: Format,
+    seed: u64,
+    backend: bf16_train::qsim::Backend,
+) -> Result<(bf16_train::qsim::ServeApp, bf16_train::qsim::QPolicy)> {
+    use bf16_train::qsim::dlrm::DlrmConfig;
+    use bf16_train::qsim::gpt::GptConfig;
+    use bf16_train::qsim::train::Trainer;
+    use bf16_train::qsim::ServeApp;
+
+    let intra_threads = 1usize;
+    match app {
+        "dlrm" => {
+            let cfg = DlrmConfig { seed, fmt, intra_threads, backend, ..Default::default() };
+            let mut tr = Trainer::new(cfg, mode);
+            tr.load_checkpoint_bytes(ckpt)?;
+            let policy = tr.policy();
+            Ok((ServeApp::Dlrm(Box::new(tr.model)), policy))
+        }
+        "gpt-nano" => {
+            let cfg = GptConfig { seed, fmt, intra_threads, backend, ..Default::default() };
+            let mut tr = Trainer::new(cfg, mode);
+            tr.load_checkpoint_bytes(ckpt)?;
+            let policy = tr.policy();
+            Ok((ServeApp::Gpt(Box::new(tr.model)), policy))
+        }
+        other => bail!("serve supports dlrm and gpt-nano checkpoints, got {other:?}"),
+    }
+}
+
+fn read_corpus(path: &str) -> Result<Vec<String>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading corpus {path:?}"))?;
+    let lines: Vec<String> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .map(|l| l.to_string())
+        .collect();
+    if lines.is_empty() {
+        bail!("corpus {path:?} has no request lines");
+    }
+    Ok(lines)
+}
+
+/// `repro serve-bench` — three modes: the default in-process suite
+/// (writes `BENCH_serve.json`), `--connect` (drive a corpus against a
+/// running server, print its reply digest), and `--oracle` (compute the
+/// same digest from the checkpoint via per-request tape evals; CI diffs
+/// the two).
+fn cmd_serve_bench(args: &mut Args) -> Result<()> {
+    use bf16_train::qsim::infer;
+
+    if let Some(addr) = args.opt_maybe("connect") {
+        let app = args.opt("app", "dlrm");
+        let corpus_path = args.opt_maybe("corpus").context("--connect needs --corpus FILE")?;
+        let clients = (args.opt_u64("clients", 4)? as usize).max(1);
+        let shutdown = args.flag("shutdown");
+        args.finish()?;
+        let corpus = read_corpus(&corpus_path)?;
+        let report = infer::run_load(&addr, &corpus, clients)?;
+        println!(
+            "serve-load {app}: {} requests x {clients} clients  p50 {:.3} ms  p99 {:.3} ms  \
+             {:.1} qps",
+            corpus.len(),
+            report.percentile_ns(0.50) as f64 / 1e6,
+            report.percentile_ns(0.99) as f64 / 1e6,
+            report.qps()
+        );
+        println!("digest {app} {:016x}", report.digest());
+        if shutdown {
+            use std::io::{BufRead, BufReader, Write};
+            let mut s = infer::connect_retry(&addr)?;
+            s.write_all(b"shutdown\n")?;
+            let mut reply = String::new();
+            BufReader::new(&mut s).read_line(&mut reply)?;
+            println!("shutdown: {}", reply.trim_end());
+        }
+        return Ok(());
+    }
+
+    if args.flag("oracle") {
+        let ckpt_path = args.opt_maybe("ckpt").context("--oracle needs --ckpt FILE")?;
+        let corpus_path = args.opt_maybe("corpus").context("--oracle needs --corpus FILE")?;
+        let mut policy = Policy::default();
+        if let Some(m) = args.opt_maybe("mode") {
+            policy = Policy::new(m.parse::<Mode>()?, policy.fmt);
+        }
+        if let Some(f) = args.opt_maybe("fmt") {
+            let fmt =
+                Format::by_name(&f).with_context(|| format!("--fmt {f:?} is not a known format"))?;
+            policy = Policy::new(policy.mode, fmt);
+        }
+        let seed = args.opt_u64("seed", 0)?;
+        args.finish()?;
+        let bytes = std::fs::read(&ckpt_path)
+            .with_context(|| format!("reading checkpoint {ckpt_path:?}"))?;
+        let app_name = bf16_train::util::ckpt::peek_app_name(&bytes)?;
+        let (app, qpolicy) = load_serve_app(
+            &app_name,
+            &bytes,
+            policy.mode,
+            policy.fmt,
+            seed,
+            bf16_train::qsim::Backend::Fast,
+        )?;
+        let corpus = read_corpus(&corpus_path)?;
+        let replies = infer::tape_oracle_replies(&app, qpolicy, &corpus);
+        println!("digest {app_name} {:016x}", infer::reply_digest(&replies));
+        return Ok(());
+    }
+
+    let smoke = std::env::var("QSIM_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let iters = args.opt_u64("iters", if smoke { 20 } else { 150 })? as usize;
+    let requests = (args.opt_u64("requests", if smoke { 32 } else { 96 })? as usize).max(1);
+    let out = args.opt("out", "BENCH_serve.json");
+    args.finish()?;
+    serve_bench_suite(iters.max(1), requests, &out)
+}
+
+/// The in-process serve-bench suite: compiled-plan vs tape-eval latency
+/// per backend, then end-to-end serve p50/p99/QPS per backend x batch
+/// window over a loopback server.
+fn serve_bench_suite(iters: usize, requests: usize, out: &str) -> Result<()> {
+    use bf16_train::qsim::dlrm::{CtrBatch, CtrGen, DlrmConfig, DlrmModel};
+    use bf16_train::qsim::gpt::{GptConfig, GptModel, LmBatch, MarkovGen};
+    use bf16_train::qsim::infer::{self, DlrmPlan, GptPlan, ServeApp, ServeConfig};
+    use bf16_train::qsim::{Backend, QPolicy};
+    use bf16_train::util::bench::{bench_n, black_box, write_bench_json, BenchResult};
+
+    fn ctr_corpus(batch: &CtrBatch, n: usize, dd: usize) -> Vec<String> {
+        (0..n)
+            .map(|i| {
+                let r = i % batch.dense.rows;
+                let dense: Vec<String> =
+                    batch.dense.data[r * dd..(r + 1) * dd].iter().map(|v| v.to_string()).collect();
+                let cat: Vec<String> = batch.cat.iter().map(|c| c[r].to_string()).collect();
+                format!("dlrm {} | {}", dense.join(" "), cat.join(" "))
+            })
+            .collect()
+    }
+    fn lm_corpus(batch: &LmBatch, n: usize, t_len: usize) -> Vec<String> {
+        let seqs = batch.tokens.len() / t_len.max(1);
+        (0..n)
+            .map(|i| {
+                let s = i % seqs.max(1);
+                let len = 1 + (i * 7) % t_len;
+                let toks: Vec<String> = batch.tokens[s * t_len..s * t_len + len]
+                    .iter()
+                    .map(|t| t.to_string())
+                    .collect();
+                format!("gpt {}", toks.join(" "))
+            })
+            .collect()
+    }
+    fn serve_rows(
+        results: &mut Vec<BenchResult>,
+        derived: &mut Vec<(String, f64)>,
+        app: &str,
+        backend: Backend,
+        window: u64,
+        report: &infer::LoadReport,
+    ) {
+        let n = report.latencies_ns.len().max(1);
+        let p50 = report.percentile_ns(0.50) as f64;
+        let row = BenchResult {
+            name: format!("serve {app} {} w{window}", backend.name()),
+            median_ns: p50,
+            mean_ns: report.latencies_ns.iter().sum::<u64>() as f64 / n as f64,
+            min_ns: report.latencies_ns.iter().copied().min().unwrap_or(0) as f64,
+            samples: report.latencies_ns.len(),
+        };
+        println!("{}", row.report());
+        let tag = format!("{app}_{}_w{window}", backend.name());
+        derived.push((format!("p50_serve_{tag}_ns"), p50));
+        derived.push((format!("p99_serve_{tag}_ns"), report.percentile_ns(0.99) as f64));
+        derived.push((format!("qps_serve_{tag}"), report.qps()));
+        results.push(row);
+    }
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    // compiled plan vs per-call tape eval (same batch, same policy)
+    let dcfg = DlrmConfig { seed: 11, ..Default::default() };
+    let dmodel = DlrmModel::init(&dcfg);
+    let dbatch = CtrGen::new(&dcfg).next_batch();
+    for backend in [Backend::Fast, Backend::Simd] {
+        let policy = QPolicy::with_backend(dcfg.fmt, backend);
+        let tape = bench_n(&format!("dlrm tape-eval {}", backend.name()), iters, || {
+            black_box(dmodel.eval_scores(&dbatch, policy));
+        });
+        let mut plan = DlrmPlan::compile(&dmodel, &dbatch, policy);
+        let fast = bench_n(&format!("dlrm infer-plan {}", backend.name()), iters, || {
+            black_box(plan.score(&dbatch));
+        });
+        let key = match backend {
+            Backend::Fast => "speedup_infer_vs_tape_dlrm".to_string(),
+            _ => format!("speedup_infer_vs_tape_dlrm_{}", backend.name()),
+        };
+        derived.push((key, tape.median_ns / fast.median_ns.max(1.0)));
+        results.push(tape);
+        results.push(fast);
+    }
+
+    let gcfg = GptConfig { seed: 11, ..Default::default() };
+    let gmodel = GptModel::init(&gcfg);
+    let gbatch = MarkovGen::new(&gcfg).next_batch();
+    for backend in [Backend::Fast, Backend::Simd] {
+        let policy = QPolicy::with_backend(gcfg.fmt, backend);
+        let tape = bench_n(&format!("gpt-nano tape-eval {}", backend.name()), iters, || {
+            black_box(gmodel.eval_loss(&gbatch, policy));
+        });
+        let mut plan = GptPlan::compile(&gmodel, &gbatch, policy);
+        let fast = bench_n(&format!("gpt-nano infer-plan {}", backend.name()), iters, || {
+            black_box(plan.score(&gbatch));
+        });
+        let key = match backend {
+            Backend::Fast => "speedup_infer_vs_tape_gpt".to_string(),
+            _ => format!("speedup_infer_vs_tape_gpt_{}", backend.name()),
+        };
+        derived.push((key, tape.median_ns / fast.median_ns.max(1.0)));
+        results.push(tape);
+        results.push(fast);
+    }
+
+    // end-to-end serve latency over a loopback server
+    let d_corpus = ctr_corpus(&dbatch, requests, dcfg.dense_dim);
+    let g_corpus = lm_corpus(&gbatch, requests, gcfg.seq_len);
+    for backend in [Backend::Fast, Backend::Simd] {
+        for window in [0u64, 200] {
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                batch_window_us: window,
+                max_batch: 16,
+                backend,
+            };
+            let policy = QPolicy::with_backend(dcfg.fmt, backend);
+            let app = ServeApp::Dlrm(Box::new(DlrmModel::init(&dcfg)));
+            let handle = infer::spawn_server(app, policy, &cfg)?;
+            let report = infer::run_load(&handle.addr().to_string(), &d_corpus, 4)?;
+            handle.shutdown()?;
+            serve_rows(&mut results, &mut derived, "dlrm", backend, window, &report);
+
+            let policy = QPolicy::with_backend(gcfg.fmt, backend);
+            let app = ServeApp::Gpt(Box::new(GptModel::init(&gcfg)));
+            let handle = infer::spawn_server(app, policy, &cfg)?;
+            let report = infer::run_load(&handle.addr().to_string(), &g_corpus, 4)?;
+            handle.shutdown()?;
+            serve_rows(&mut results, &mut derived, "gpt-nano", backend, window, &report);
+        }
+    }
+
+    write_bench_json(out, &results, &derived).with_context(|| format!("writing {out}"))?;
+    println!("wrote {} bench rows + {} derived keys to {out}", results.len(), derived.len());
     Ok(())
 }

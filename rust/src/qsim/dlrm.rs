@@ -133,6 +133,16 @@ impl CtrGen {
     }
 }
 
+/// Batch-payload and output node ids of one frozen DLRM graph — what
+/// `qsim::infer` rebinds per request batch (per-table gathers, the dense
+/// leaf, BCE labels) and reads back (per-example logits, mean loss).
+pub struct DlrmFrozenVars {
+    pub gathers: Vec<Var>,
+    pub dense: Var,
+    pub logits: Var,
+    pub loss: Var,
+}
+
 /// The model, composed from `qsim::nn` layers (the layer logic that used to
 /// be hand-rolled here).  Parameter tensors live inside the layers, kept
 /// in-format by the optimizer; the graph shape and the init draw order are
@@ -204,19 +214,33 @@ impl DlrmModel {
     /// the reported eval loss is unchanged.
     pub fn eval_scores(&self, batch: &CtrBatch, policy: QPolicy) -> (f32, Vec<f32>) {
         let mut t2 = Tape::new(policy);
+        let v = self.frozen_graph_into(&mut t2, batch);
+        let scores = t2.value(v.logits).data.clone();
+        (t2.value(v.loss).item(), scores)
+    }
+
+    /// Build the frozen (no-grad) forward graph into a caller-owned tape
+    /// — the single source of truth for the inference graph shape, shared
+    /// by the per-batch eval path and `qsim::infer` plan compilation
+    /// (which needs the batch-payload node ids to rebind per request).
+    /// Op order matches the historical eval body exactly, so eval values
+    /// are bit-identical across the refactor.
+    pub fn frozen_graph_into(&self, t: &mut Tape, batch: &CtrBatch) -> DlrmFrozenVars {
+        let mut gathers: Vec<Var> = Vec::with_capacity(self.tables.len());
         let mut feats: Vec<Var> = Vec::new();
         for (ti, table) in self.tables.iter().enumerate() {
-            feats.push(table.forward_frozen(&mut t2, batch.cat[ti].clone()));
+            let e = table.forward_frozen(t, batch.cat[ti].clone());
+            gathers.push(e);
+            feats.push(e);
         }
-        let x = t2.input(batch.dense.clone());
-        let z = self.bot.forward_relu_frozen(&mut t2, x);
+        let dense = t.input(batch.dense.clone());
+        let z = self.bot.forward_relu_frozen(t, dense);
         feats.push(z);
-        let cat = t2.concat_cols(feats);
-        let h = self.top.forward_relu_frozen(&mut t2, cat);
-        let logits2d = self.head.forward_frozen(&mut t2, h);
-        let loss = t2.bce_loss_from(logits2d, &batch.labels);
-        let scores = t2.value(logits2d).data.clone();
-        (t2.value(loss).item(), scores)
+        let cat = t.concat_cols(feats);
+        let h = self.top.forward_relu_frozen(t, cat);
+        let logits = self.head.forward_frozen(t, h);
+        let loss = t.bce_loss_from(logits, &batch.labels);
+        DlrmFrozenVars { gathers, dense, logits, loss }
     }
 
     /// All parameter tensors, in forward registration order.
@@ -324,15 +348,25 @@ impl Task for DlrmConfig {
 
     /// Mean loss and AUC over `n` fresh batches.  `n == 0` is defined as
     /// `(0.0, 0.5)` — no data, chance AUC — instead of 0/0 NaN.
+    ///
+    /// Scored through a [`DlrmPlan`](crate::qsim::infer::DlrmPlan)
+    /// compiled from the first batch and rebound for the rest — the plan
+    /// replay is bit-identical to the per-batch tape rebuild it replaced
+    /// (pinned by the `qsim-parity` digests), just without paying the
+    /// tape.
     fn eval(model: &DlrmModel, gen: &mut CtrGen, n: usize, policy: QPolicy) -> EvalMetrics {
         if n == 0 {
             return EvalMetrics { loss: 0.0, metric: 0.5, metric_name: "auc" };
         }
+        let mut plan: Option<crate::qsim::infer::DlrmPlan> = None;
         let mut loss_acc = 0f64;
         let mut scored: Vec<(f32, bool)> = Vec::new();
         for _ in 0..n {
             let batch = gen.next_batch();
-            let (loss, logits) = model.eval_scores(&batch, policy);
+            let p = plan.get_or_insert_with(|| {
+                crate::qsim::infer::DlrmPlan::compile(model, &batch, policy)
+            });
+            let (loss, logits) = p.score(&batch);
             loss_acc += loss as f64;
             for (z, &y) in logits.iter().zip(&batch.labels.data) {
                 scored.push((*z, y > 0.5));

@@ -182,6 +182,16 @@ impl Module for GptBlock {
     }
 }
 
+/// Batch-payload and output node ids of one frozen gpt-nano graph — what
+/// `qsim::infer` rebinds per request batch (token gather, xent targets)
+/// and reads back (next-token logits, mean loss).
+pub struct GptFrozenVars {
+    pub tok_gather: Var,
+    pub pos_gather: Var,
+    pub logits: Var,
+    pub loss: Var,
+}
+
 /// The model: embeddings + blocks + tied softmax head, built from `qsim::nn`
 /// layers.
 pub struct GptModel {
@@ -273,10 +283,13 @@ impl GptModel {
         (loss, params)
     }
 
-    /// Forward-only mean loss over one batch (all tensors as no-grad
-    /// inputs; same rounding policy as training forward).
-    pub fn eval_loss(&self, batch: &LmBatch, policy: QPolicy) -> f32 {
-        let mut t = Tape::new(policy);
+    /// Build the frozen (no-grad) forward graph into a caller-owned tape
+    /// — the single source of truth for the inference graph shape, shared
+    /// by the per-batch eval path and `qsim::infer` plan compilation
+    /// (which needs the batch-payload node ids to rebind per request).
+    /// Op order matches the historical eval body exactly, so eval values
+    /// are bit-identical across the refactor.
+    pub fn frozen_graph_into(&self, t: &mut Tape, batch: &LmBatch) -> GptFrozenVars {
         let t_len = self.cfg.seq_len;
         let seqs = batch.tokens.len() / t_len;
         let tokv = t.input(self.tok.table.clone());
@@ -285,23 +298,31 @@ impl GptModel {
         let x_pos = t.gather_rows(posv, self.pos_ids(seqs));
         let mut x = t.add(x_tok, x_pos);
         for blk in &self.blocks {
-            let h = blk.ln1.forward(&mut t, x);
-            let q = blk.wq.forward_frozen(&mut t, h);
-            let k = blk.wk.forward_frozen(&mut t, h);
-            let v = blk.wv.forward_frozen(&mut t, h);
+            let h = blk.ln1.forward(t, x);
+            let q = blk.wq.forward_frozen(t, h);
+            let k = blk.wk.forward_frozen(t, h);
+            let v = blk.wv.forward_frozen(t, h);
             let a = t.causal_attention(q, k, v, seqs);
-            let o = blk.wo.forward_frozen(&mut t, a);
+            let o = blk.wo.forward_frozen(t, a);
             let o = t.scale(o, self.res_scale);
             x = t.add(x, o);
-            let h2 = blk.ln2.forward(&mut t, x);
-            let m = blk.mlp.forward_frozen(&mut t, h2);
+            let h2 = blk.ln2.forward(t, x);
+            let m = blk.mlp.forward_frozen(t, h2);
             let m = t.scale(m, self.res_scale);
             x = t.add(x, m);
         }
-        let xf = self.ln_f.forward(&mut t, x);
+        let xf = self.ln_f.forward(t, x);
         let logits = t.matmul_nt(xf, tokv);
         let loss = t.softmax_xent(logits, batch.targets.clone());
-        t.value(loss).item()
+        GptFrozenVars { tok_gather: x_tok, pos_gather: x_pos, logits, loss }
+    }
+
+    /// Forward-only mean loss over one batch (all tensors as no-grad
+    /// inputs; same rounding policy as training forward).
+    pub fn eval_loss(&self, batch: &LmBatch, policy: QPolicy) -> f32 {
+        let mut t = Tape::new(policy);
+        let v = self.frozen_graph_into(&mut t, batch);
+        t.value(v.loss).item()
     }
 
     /// All parameter tensors, in forward registration order.
@@ -406,14 +427,22 @@ impl Task for GptConfig {
 
     /// Mean eval loss (natural log) and perplexity (`exp(loss)`) over `n`
     /// fresh batches.  `n == 0` is defined as zero loss / unit perplexity.
+    ///
+    /// Scored through a [`GptPlan`](crate::qsim::infer::GptPlan) compiled
+    /// from the first batch and rebound for the rest — the plan replay is
+    /// bit-identical to the per-batch tape rebuild it replaced (pinned by
+    /// the `qsim-parity` digests), just without paying the tape.
     fn eval(model: &GptModel, gen: &mut MarkovGen, n: usize, policy: QPolicy) -> EvalMetrics {
         if n == 0 {
             return EvalMetrics { loss: 0.0, metric: 1.0, metric_name: "ppl" };
         }
+        let mut plan: Option<crate::qsim::infer::GptPlan> = None;
         let mut acc = 0f64;
         for _ in 0..n {
             let batch = gen.next_batch();
-            acc += model.eval_loss(&batch, policy) as f64;
+            let p = plan
+                .get_or_insert_with(|| crate::qsim::infer::GptPlan::compile(model, &batch, policy));
+            acc += p.score(&batch) as f64;
         }
         let loss = (acc / n as f64) as f32;
         EvalMetrics { loss, metric: loss.exp(), metric_name: "ppl" }

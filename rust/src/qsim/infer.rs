@@ -1,0 +1,1406 @@
+//! `qsim::infer` — tape-free inference executor and the `repro serve` stack.
+//!
+//! Training pays for its tape: every forward op records a node, reserves
+//! gradient storage, and rebuilds the graph object per batch.  A frozen
+//! forward needs none of that — the graph is static, the weights are
+//! constant, and only the batch payloads (dense rows, gather indices,
+//! targets, labels) change between requests.  This module compiles a
+//! frozen graph **once** into an [`InferPlan`]:
+//!
+//! * [`Tape::export_program`] lifts the recorded graph to the
+//!   [`verify`](super::verify) IR — the same IR the linter and fuzzer
+//!   already pin against the tape, so the plan replays a *validated*
+//!   program, not a re-derivation of the model;
+//! * [`Tape::export_values`] seeds the arena: one buffer per node, leaf
+//!   buffers holding the weights (native-16 tensors widen exactly once
+//!   here, on tape entry — read-only serving never re-widens), interior
+//!   buffers pre-sized to their activation shapes;
+//! * [`InferPlan::run`] replays the program through the same Fast/Simd
+//!   kernels (fused affine / attention / losses included) writing into the
+//!   arena in place — zero tape nodes, zero grad buffers, and no per-batch
+//!   allocation in steady state (the `Reference` backend's matmul
+//!   allocates fresh outputs, exactly as it does under the tape).
+//!
+//! **Bit-identity contract**: for every op the plan executes the same
+//! kernel the tape's forward executes, with the same one-rounding-per-op
+//! policy, over the same fp32 buffers.  The unit tests pin plan-vs-tape
+//! equality for every `OpIr` variant on every backend, and the serve
+//! golden tests extend that to checkpointed models end-to-end.
+//!
+//! On top of the executor sits `repro serve`: a line-oriented TCP scoring
+//! server with **dynamic micro-batching**.  Connections enqueue requests;
+//! a single batcher thread coalesces the queue for at most
+//! `batch_window_us` (or until `max_batch` requests are waiting), binds
+//! the whole group into the plan as one padded batch, runs it, and fans
+//! the per-row results back to the waiting connections.  Because every
+//! scored row is row-local (DLRM) or sequence-local (gpt-nano causal
+//! attention), padding a partial batch to plan capacity cannot change any
+//! real row's bits — batching is a latency/throughput knob, never a
+//! numerics knob.  [`tape_oracle_replies`] recomputes each request
+//! one-at-a-time on a fresh tape and must agree bit-for-bit; CI diffs the
+//! two digests on a pinned corpus.
+//!
+//! Wire protocol (UTF-8 lines, one request per line, one reply per line):
+//!
+//! ```text
+//! dlrm <f0> .. <f{D-1}> | <i0> .. <i{T-1}>   ->  ctr <logit-bits:08x> <logit>
+//! gpt <t0> <t1> ..                           ->  lm <next-token> <logit-bits:08x>
+//! shutdown                                   ->  ok shutting down
+//! anything else                              ->  err <reason>
+//! ```
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::dlrm::{CtrBatch, DlrmModel};
+use super::gpt::{GptModel, LmBatch};
+use super::mlp::{MlpModel, SpiralBatch};
+use super::pool::Pool;
+use super::tape::{attn_forward_seqs, layernorm_rows, xent_row, QPolicy, Tape};
+use super::tensor::Tensor;
+use super::verify::{OpIr, Program};
+use super::Backend;
+
+// ---------------------------------------------------------------------------
+// The compiled plan
+// ---------------------------------------------------------------------------
+
+/// A frozen graph compiled to an arena of per-node buffers plus the IR
+/// program that fills them.  Weights live in leaf buffers (widened from
+/// native-16 storage exactly once, at compile); batch payloads are rebound
+/// through [`InferPlan::set_leaf`] / [`InferPlan::set_gather_idx`] /
+/// [`InferPlan::set_xent_targets`] / [`InferPlan::set_bce_labels`]; and
+/// [`InferPlan::run`] replays every interior node in place.
+pub struct InferPlan {
+    prog: Program,
+    bufs: Vec<Tensor>,
+    /// Attention probability scratch, per node (empty for non-attention
+    /// nodes) — the tape keeps these for backward; the plan only needs
+    /// them as kernel workspace, but pre-sizes them all the same so `run`
+    /// never allocates.
+    probs: Vec<Vec<f32>>,
+    policy: QPolicy,
+    pool: Arc<Pool>,
+}
+
+impl InferPlan {
+    /// Snapshot a recorded frozen graph into a replayable plan.  The tape
+    /// is only read; callers typically drop it immediately after.
+    pub fn compile(tape: &Tape, policy: QPolicy) -> Self {
+        let prog = tape.export_program();
+        let bufs = tape.export_values();
+        let mut probs = vec![Vec::new(); prog.nodes.len()];
+        for (i, node) in prog.nodes.iter().enumerate() {
+            if let OpIr::CausalAttn { seqs, .. } = &node.op {
+                let t_len = node.rows / (*seqs).max(1);
+                probs[i] = vec![0.0; node.rows * t_len];
+            }
+        }
+        Self { prog, bufs, probs, policy, pool: Pool::single() }
+    }
+
+    pub fn policy(&self) -> QPolicy {
+        self.policy
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.prog.nodes.len()
+    }
+
+    /// The current value buffer of a node (by tape [`Var`](super::Var)
+    /// index).  Valid after [`InferPlan::run`]; before the first run it
+    /// holds the compile-time snapshot.
+    pub fn value(&self, node: usize) -> &Tensor {
+        &self.bufs[node]
+    }
+
+    /// Rebind a leaf's payload (e.g. the dense feature block).  Shapes are
+    /// frozen at compile: the payload must match the leaf's length.
+    pub fn set_leaf(&mut self, node: usize, data: &[f32]) {
+        assert!(
+            matches!(self.prog.nodes[node].op, OpIr::Leaf),
+            "set_leaf on a non-leaf node"
+        );
+        let buf = &mut self.bufs[node];
+        assert_eq!(buf.data.len(), data.len(), "leaf payload length changed");
+        buf.data.copy_from_slice(data);
+    }
+
+    /// Rebind a gather's row indices (token ids, embedding lookups).
+    pub fn set_gather_idx(&mut self, node: usize, idx: &[usize]) {
+        match &mut self.prog.nodes[node].op {
+            OpIr::GatherRows { idx: slot, .. } => {
+                assert_eq!(slot.len(), idx.len(), "gather index count changed");
+                slot.copy_from_slice(idx);
+            }
+            _ => panic!("set_gather_idx on a non-gather node"),
+        }
+    }
+
+    /// Rebind a softmax-xent node's per-row target classes.
+    pub fn set_xent_targets(&mut self, node: usize, targets: &[usize]) {
+        match &mut self.prog.nodes[node].op {
+            OpIr::SoftmaxXent { targets: slot, .. } => {
+                assert_eq!(slot.len(), targets.len(), "target count changed");
+                slot.copy_from_slice(targets);
+            }
+            _ => panic!("set_xent_targets on a non-xent node"),
+        }
+    }
+
+    /// Rebind a BCE node's labels.
+    pub fn set_bce_labels(&mut self, node: usize, labels: &[f32]) {
+        match &mut self.prog.nodes[node].op {
+            OpIr::BceLoss { labels: slot, .. } => {
+                assert_eq!(slot.len(), labels.len(), "label count changed");
+                slot.copy_from_slice(labels);
+            }
+            _ => panic!("set_bce_labels on a non-bce node"),
+        }
+    }
+
+    /// Replay every interior node into the arena.  Each arm mirrors the
+    /// corresponding `Tape` forward op exactly — same kernel, same
+    /// rounding placement — so the filled buffers are bit-identical to
+    /// what a fresh tape would record for the same leaf payloads.
+    pub fn run(&mut self) {
+        let policy = self.policy;
+        for i in 0..self.prog.nodes.len() {
+            let (prev, rest) = self.bufs.split_at_mut(i);
+            let out = &mut rest[0];
+            match &self.prog.nodes[i].op {
+                OpIr::Leaf => {}
+                OpIr::MatMul(a, b) => {
+                    matmul_into(&prev[*a], &prev[*b], out, policy, &self.pool);
+                }
+                OpIr::Add(a, b) => binary_into(&prev[*a], &prev[*b], out, policy, |x, y| x + y),
+                OpIr::Sub(a, b) => binary_into(&prev[*a], &prev[*b], out, policy, |x, y| x - y),
+                OpIr::Mul(a, b) => binary_into(&prev[*a], &prev[*b], out, policy, |x, y| x * y),
+                OpIr::Relu(a) => unary_into(&prev[*a], out, policy, |x| x.max(0.0)),
+                OpIr::Sigmoid(a) => {
+                    unary_into(&prev[*a], out, policy, |x| 1.0 / (1.0 + (-x).exp()));
+                }
+                OpIr::Tanh(a) => unary_into(&prev[*a], out, policy, f32::tanh),
+                OpIr::Scale(a, c) => {
+                    let c = *c;
+                    unary_into(&prev[*a], out, policy, move |x| c * x);
+                }
+                OpIr::GatherRows { x, idx } => {
+                    let tv = &prev[*x];
+                    let cols = tv.cols;
+                    out.rows = idx.len();
+                    out.cols = cols;
+                    out.data.clear();
+                    out.data.reserve(idx.len() * cols);
+                    for &r in idx {
+                        out.data.extend_from_slice(&tv.data[r * cols..(r + 1) * cols]);
+                    }
+                    // gather is a memory op: values already in-format
+                }
+                OpIr::AddRow(a, b) => {
+                    let (av, bv) = (&prev[*a], &prev[*b]);
+                    out.rows = av.rows;
+                    out.cols = av.cols;
+                    out.data.clear();
+                    out.data.reserve(av.data.len());
+                    if av.cols > 0 {
+                        for arow in av.data.chunks_exact(av.cols) {
+                            out.data.extend(arow.iter().zip(&bv.data).map(|(&x, &b)| x + b));
+                        }
+                    }
+                    policy.q_slice(&mut out.data);
+                }
+                OpIr::Affine { x, w, b, relu } => {
+                    matmul_into(&prev[*x], &prev[*w], out, policy, &self.pool);
+                    let bv = &prev[*b];
+                    if out.cols > 0 {
+                        for orow in out.data.chunks_exact_mut(out.cols) {
+                            for (o, &bx) in orow.iter_mut().zip(&bv.data) {
+                                *o += bx;
+                            }
+                        }
+                    }
+                    policy.q_slice(&mut out.data);
+                    if *relu {
+                        for o in &mut out.data {
+                            *o = o.max(0.0);
+                        }
+                        policy.q_slice(&mut out.data);
+                    }
+                }
+                OpIr::ConcatCols(parts) => {
+                    let rows = prev[parts[0]].rows;
+                    let total: usize = parts.iter().map(|&p| prev[p].cols).sum();
+                    out.rows = rows;
+                    out.cols = total;
+                    out.data.clear();
+                    out.data.resize(rows * total, 0.0);
+                    let mut off = 0;
+                    for &p in parts {
+                        let pv = &prev[p];
+                        debug_assert_eq!(pv.rows, rows, "concat row mismatch");
+                        for r in 0..rows {
+                            out.data[r * total + off..r * total + off + pv.cols]
+                                .copy_from_slice(&pv.data[r * pv.cols..(r + 1) * pv.cols]);
+                        }
+                        off += pv.cols;
+                    }
+                }
+                OpIr::MatMulNT(a, b) => {
+                    match policy.backend {
+                        Backend::Fast | Backend::Simd => {
+                            prev[*a].matmul_nt_into_pooled(&prev[*b], out, &self.pool);
+                        }
+                        Backend::Reference => prev[*a].matmul_nt_into(&prev[*b], out),
+                    }
+                    policy.q_slice(&mut out.data);
+                }
+                OpIr::LayerNorm { x, eps } => {
+                    let av = &prev[*x];
+                    out.rows = av.rows;
+                    out.cols = av.cols;
+                    out.data.clear();
+                    out.data.resize(av.data.len(), 0.0);
+                    layernorm_rows(&av.data, av.cols, *eps, &mut out.data, policy);
+                }
+                OpIr::CausalAttn { q, k, v, seqs } => {
+                    let (qv, kv, vv) = (&prev[*q], &prev[*k], &prev[*v]);
+                    let (rows, d) = (qv.rows, qv.cols);
+                    let t_len = rows / (*seqs).max(1);
+                    let alpha = 1.0 / (d.max(1) as f32).sqrt();
+                    out.rows = rows;
+                    out.cols = d;
+                    out.data.clear();
+                    out.data.resize(rows * d, 0.0);
+                    let probs = &mut self.probs[i];
+                    probs.clear();
+                    probs.resize(rows * t_len, 0.0);
+                    attn_forward_seqs(
+                        &qv.data, &kv.data, &vv.data, t_len, d, alpha, 0, &mut out.data, probs,
+                        policy,
+                    );
+                }
+                OpIr::SoftmaxXent { logits, targets } => {
+                    let lv = &prev[*logits];
+                    let cols = lv.cols;
+                    let mut acc = 0f64;
+                    for (r, &tg) in targets.iter().enumerate() {
+                        acc += xent_row(&lv.data[r * cols..(r + 1) * cols], tg) as f64;
+                    }
+                    scalar_into(out, (acc / lv.rows.max(1) as f64) as f32, policy);
+                }
+                OpIr::MeanAll(a) => {
+                    let v = &prev[*a];
+                    let m = v.data.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+                    scalar_into(out, m as f32, policy);
+                }
+                OpIr::MseLoss { diff } => {
+                    let dv = &prev[*diff];
+                    let m = dv.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+                        / dv.len() as f64;
+                    scalar_into(out, 0.5 * m as f32, policy);
+                }
+                OpIr::BceLoss { logits, labels } => {
+                    let lv = &prev[*logits];
+                    let mut acc = 0f64;
+                    for (&z, &y) in lv.data.iter().zip(labels) {
+                        let l = z.max(0.0) - z * y + (1.0 + (-z.abs()).exp()).ln();
+                        acc += l as f64;
+                    }
+                    scalar_into(out, (acc / lv.len() as f64) as f32, policy);
+                }
+            }
+        }
+    }
+}
+
+/// Backend-dispatched matmul into an arena buffer — the exact dispatch
+/// `Tape::matmul` / the matmul half of `Tape::affine` performs: Fast/Simd
+/// round inside the producing kernel (`fuse_fmt`), Reference rounds in a
+/// post-pass (fuzzer-pinned bit-identical).
+fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor, policy: QPolicy, pool: &Pool) {
+    match policy.backend {
+        Backend::Fast => a.matmul_into_pooled(b, out, policy.fuse_fmt(), pool),
+        Backend::Simd => a.matmul_into_pooled_simd(b, out, policy.fuse_fmt(), pool),
+        Backend::Reference => {
+            *out = a.matmul_reference(b);
+            policy.q_slice(&mut out.data);
+        }
+    }
+}
+
+fn unary_into(a: &Tensor, out: &mut Tensor, policy: QPolicy, f: impl Fn(f32) -> f32) {
+    out.rows = a.rows;
+    out.cols = a.cols;
+    out.data.clear();
+    out.data.extend(a.data.iter().map(|&x| f(x)));
+    policy.q_slice(&mut out.data);
+}
+
+fn binary_into(
+    a: &Tensor,
+    b: &Tensor,
+    out: &mut Tensor,
+    policy: QPolicy,
+    f: impl Fn(f32, f32) -> f32,
+) {
+    out.rows = a.rows;
+    out.cols = a.cols;
+    out.data.clear();
+    out.data.extend(a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)));
+    policy.q_slice(&mut out.data);
+}
+
+fn scalar_into(out: &mut Tensor, v: f32, policy: QPolicy) {
+    out.rows = 1;
+    out.cols = 1;
+    out.data.clear();
+    out.data.push(v);
+    policy.q_slice(&mut out.data);
+}
+
+// ---------------------------------------------------------------------------
+// Per-app plans: the frozen graph + the node ids that change per batch
+// ---------------------------------------------------------------------------
+
+/// Compiled DLRM CTR scorer.  Capacity (batch rows) is fixed at compile;
+/// partial batches are padded by the caller (row-local graph: padding
+/// never changes a real row's bits).
+pub struct DlrmPlan {
+    plan: InferPlan,
+    gathers: Vec<usize>,
+    dense: usize,
+    logits: usize,
+    loss: usize,
+    capacity: usize,
+    dense_dim: usize,
+}
+
+impl DlrmPlan {
+    /// Compile from any representative batch — only its shape matters.
+    pub fn compile(model: &DlrmModel, batch: &CtrBatch, policy: QPolicy) -> Self {
+        let mut t = Tape::new(policy);
+        let v = model.frozen_graph_into(&mut t, batch);
+        Self {
+            plan: InferPlan::compile(&t, policy),
+            gathers: v.gathers.iter().map(|g| g.0).collect(),
+            dense: v.dense.0,
+            logits: v.logits.0,
+            loss: v.loss.0,
+            capacity: batch.dense.rows,
+            dense_dim: batch.dense.cols,
+        }
+    }
+
+    /// Batch rows the plan was compiled for.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Rebind one batch's payloads without running.
+    pub fn bind(&mut self, dense: &[f32], cat: &[Vec<usize>], labels: &[f32]) {
+        assert_eq!(dense.len(), self.capacity * self.dense_dim, "dense payload shape changed");
+        assert_eq!(cat.len(), self.gathers.len(), "categorical table count changed");
+        self.plan.set_leaf(self.dense, dense);
+        for (&g, idx) in self.gathers.iter().zip(cat) {
+            self.plan.set_gather_idx(g, idx);
+        }
+        self.plan.set_bce_labels(self.loss, labels);
+    }
+
+    pub fn run(&mut self) {
+        self.plan.run();
+    }
+
+    pub fn loss(&self) -> f32 {
+        self.plan.value(self.loss).item()
+    }
+
+    /// Per-example logits, shape (capacity, 1).
+    pub fn logits(&self) -> &Tensor {
+        self.plan.value(self.logits)
+    }
+
+    /// One-call eval replacement for [`DlrmModel::eval_scores`] —
+    /// bit-identical output, no tape.
+    pub fn score(&mut self, batch: &CtrBatch) -> (f32, Vec<f32>) {
+        self.bind(&batch.dense.data, &batch.cat, &batch.labels.data);
+        self.run();
+        (self.loss(), self.logits().data.clone())
+    }
+}
+
+/// Compiled gpt-nano scorer over `seqs` packed sequences of the model's
+/// full context length.
+pub struct GptPlan {
+    plan: InferPlan,
+    tok_gather: usize,
+    logits: usize,
+    loss: usize,
+    seqs: usize,
+    t_len: usize,
+}
+
+impl GptPlan {
+    pub fn compile(model: &GptModel, batch: &LmBatch, policy: QPolicy) -> Self {
+        let mut t = Tape::new(policy);
+        let v = model.frozen_graph_into(&mut t, batch);
+        let t_len = model.cfg.seq_len;
+        Self {
+            plan: InferPlan::compile(&t, policy),
+            tok_gather: v.tok_gather.0,
+            logits: v.logits.0,
+            loss: v.loss.0,
+            seqs: batch.tokens.len() / t_len.max(1),
+            t_len,
+        }
+    }
+
+    pub fn capacity_seqs(&self) -> usize {
+        self.seqs
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.t_len
+    }
+
+    /// Rebind tokens only (serving: targets stay at their compile-time
+    /// zeros — the loss node is computed but unused).
+    pub fn bind_tokens(&mut self, tokens: &[usize]) {
+        self.plan.set_gather_idx(self.tok_gather, tokens);
+    }
+
+    pub fn bind(&mut self, tokens: &[usize], targets: &[usize]) {
+        self.plan.set_gather_idx(self.tok_gather, tokens);
+        self.plan.set_xent_targets(self.loss, targets);
+    }
+
+    pub fn run(&mut self) {
+        self.plan.run();
+    }
+
+    pub fn loss(&self) -> f32 {
+        self.plan.value(self.loss).item()
+    }
+
+    /// Next-token logits, shape (seqs·T, vocab): row `s·T + p` scores
+    /// position `p+1` of sequence `s`.
+    pub fn logits(&self) -> &Tensor {
+        self.plan.value(self.logits)
+    }
+
+    /// One-call eval replacement for [`GptModel::eval_loss`] —
+    /// bit-identical loss, no tape.
+    pub fn score(&mut self, batch: &LmBatch) -> f32 {
+        self.bind(&batch.tokens, &batch.targets);
+        self.run();
+        self.loss()
+    }
+}
+
+/// Compiled spiral-MLP scorer.
+pub struct MlpPlan {
+    plan: InferPlan,
+    x: usize,
+    logits: usize,
+    loss: usize,
+}
+
+impl MlpPlan {
+    pub fn compile(model: &MlpModel, batch: &SpiralBatch, policy: QPolicy) -> Self {
+        let mut t = Tape::new(policy);
+        let v = model.frozen_graph_into(&mut t, batch);
+        Self {
+            plan: InferPlan::compile(&t, policy),
+            x: v.x.0,
+            logits: v.logits.0,
+            loss: v.loss.0,
+        }
+    }
+
+    /// One-call eval replacement for [`MlpModel::eval_scores`] —
+    /// bit-identical output, no tape.
+    pub fn score(&mut self, batch: &SpiralBatch) -> (f32, Tensor) {
+        self.plan.set_leaf(self.x, &batch.x.data);
+        self.plan.set_xent_targets(self.loss, &batch.y);
+        self.plan.run();
+        (self.plan.value(self.loss).item(), self.plan.value(self.logits).clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The serving loop: TCP line protocol + dynamic micro-batching
+// ---------------------------------------------------------------------------
+
+/// Serving knobs — the `serve.*` TOML table and the `repro serve` flags.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Listen address; port 0 picks a free port (tests).
+    pub addr: String,
+    /// Micro-batch coalescing window in microseconds: after the first
+    /// request of a batch arrives, the batcher waits at most this long
+    /// for more before scoring.  0 scores each queue drain immediately.
+    pub batch_window_us: u64,
+    /// Hard batch-size cap (also the compiled plan's capacity).
+    pub max_batch: usize,
+    /// Kernel backend requests are scored on.
+    pub backend: Backend,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".to_string(),
+            batch_window_us: 200,
+            max_batch: 32,
+            backend: Backend::Fast,
+        }
+    }
+}
+
+/// A frozen model behind the server — the two serving workloads.
+pub enum ServeApp {
+    Dlrm(Box<DlrmModel>),
+    Gpt(Box<GptModel>),
+}
+
+impl ServeApp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeApp::Dlrm(_) => "dlrm",
+            ServeApp::Gpt(_) => "gpt-nano",
+        }
+    }
+
+    fn spec(&self) -> AppSpec {
+        match self {
+            ServeApp::Dlrm(m) => AppSpec::Ctr {
+                dense_dim: m.cfg.dense_dim,
+                tables: m.cfg.num_tables,
+                table_size: m.cfg.table_size,
+            },
+            ServeApp::Gpt(m) => AppSpec::Lm { vocab: m.cfg.vocab, t_len: m.cfg.seq_len },
+        }
+    }
+}
+
+/// Request-shape metadata shared by the parser, the batcher and the
+/// oracle — everything needed to validate a line without the model.
+#[derive(Clone, Copy)]
+enum AppSpec {
+    Ctr { dense_dim: usize, tables: usize, table_size: usize },
+    Lm { vocab: usize, t_len: usize },
+}
+
+/// One parsed request line.
+enum ParsedLine {
+    Ctr { dense: Vec<f32>, cat: Vec<usize> },
+    Lm { tokens: Vec<usize> },
+    Shutdown,
+}
+
+/// Parse + validate one request line against the served app's shape.
+/// Errors are returned as client-facing strings (the `err ` reply body).
+fn parse_line(line: &str, spec: AppSpec) -> std::result::Result<ParsedLine, String> {
+    if line == "shutdown" {
+        return Ok(ParsedLine::Shutdown);
+    }
+    let (tag, rest) = line.split_once(' ').ok_or_else(|| format!("bare request {line:?}"))?;
+    match (tag, spec) {
+        ("dlrm", AppSpec::Ctr { dense_dim, tables, table_size }) => {
+            let (d, c) = rest
+                .split_once('|')
+                .ok_or_else(|| "dlrm request needs `<dense..> | <cat..>`".to_string())?;
+            let dense = d
+                .split_whitespace()
+                .map(|s| s.parse::<f32>().map_err(|_| format!("bad dense value {s:?}")))
+                .collect::<std::result::Result<Vec<f32>, String>>()?;
+            let cat = c
+                .split_whitespace()
+                .map(|s| s.parse::<usize>().map_err(|_| format!("bad cat index {s:?}")))
+                .collect::<std::result::Result<Vec<usize>, String>>()?;
+            if dense.len() != dense_dim {
+                return Err(format!("want {dense_dim} dense features, got {}", dense.len()));
+            }
+            if cat.len() != tables {
+                return Err(format!("want {tables} cat indices, got {}", cat.len()));
+            }
+            if let Some(&ix) = cat.iter().find(|&&ix| ix >= table_size) {
+                return Err(format!("cat index {ix} out of range ({table_size} rows)"));
+            }
+            Ok(ParsedLine::Ctr { dense, cat })
+        }
+        ("gpt", AppSpec::Lm { vocab, t_len }) => {
+            let tokens = rest
+                .split_whitespace()
+                .map(|s| s.parse::<usize>().map_err(|_| format!("bad token {s:?}")))
+                .collect::<std::result::Result<Vec<usize>, String>>()?;
+            if tokens.is_empty() || tokens.len() > t_len {
+                return Err(format!("want 1..={t_len} tokens, got {}", tokens.len()));
+            }
+            if let Some(&tk) = tokens.iter().find(|&&tk| tk >= vocab) {
+                return Err(format!("token {tk} out of range (vocab {vocab})"));
+            }
+            Ok(ParsedLine::Lm { tokens })
+        }
+        (other, _) => Err(format!("request tag {other:?} does not match the served app")),
+    }
+}
+
+/// Reply line for one scored CTR row: the logit as exact bits + decimal.
+fn ctr_reply(z: f32) -> String {
+    format!("ctr {:08x} {z}", z.to_bits())
+}
+
+/// Reply line for one scored LM request: greedy next token + its logit
+/// bits (the argmax of the last real position's next-token row).
+fn lm_reply(best: usize, z: f32) -> String {
+    format!("lm {best} {:08x}", z.to_bits())
+}
+
+/// First-max argmax over row `row` of `t` — ties resolve to the lowest
+/// column, matching the mlp eval's accuracy rule.
+fn argmax_row(t: &Tensor, row: usize) -> (usize, f32) {
+    let r = &t.data[row * t.cols..(row + 1) * t.cols];
+    let mut best = 0usize;
+    for (c, &v) in r.iter().enumerate() {
+        if v > r[best] {
+            best = c;
+        }
+    }
+    (best, r[best])
+}
+
+/// The batcher's compiled plan plus its padded staging buffers (reused
+/// every round — no per-batch allocation).
+enum AppPlan {
+    Ctr {
+        plan: DlrmPlan,
+        dense: Vec<f32>,
+        cat: Vec<Vec<usize>>,
+        labels: Vec<f32>,
+        dense_dim: usize,
+    },
+    Lm {
+        plan: GptPlan,
+        tokens: Vec<usize>,
+        t_len: usize,
+    },
+}
+
+impl AppPlan {
+    fn compile(app: ServeApp, policy: QPolicy, max_batch: usize) -> AppPlan {
+        match app {
+            ServeApp::Dlrm(model) => {
+                let cfg = &model.cfg;
+                let shape = CtrBatch {
+                    dense: Tensor::zeros(max_batch, cfg.dense_dim),
+                    cat: vec![vec![0; max_batch]; cfg.num_tables],
+                    labels: Tensor::zeros(1, max_batch),
+                };
+                AppPlan::Ctr {
+                    plan: DlrmPlan::compile(&model, &shape, policy),
+                    dense: vec![0.0; max_batch * cfg.dense_dim],
+                    cat: vec![vec![0; max_batch]; cfg.num_tables],
+                    labels: vec![0.0; max_batch],
+                    dense_dim: cfg.dense_dim,
+                }
+            }
+            ServeApp::Gpt(model) => {
+                let t_len = model.cfg.seq_len;
+                let shape = LmBatch {
+                    tokens: vec![0; max_batch * t_len],
+                    targets: vec![0; max_batch * t_len],
+                };
+                AppPlan::Lm {
+                    plan: GptPlan::compile(&model, &shape, policy),
+                    tokens: vec![0; max_batch * t_len],
+                    t_len,
+                }
+            }
+        }
+    }
+
+    /// Score every parsed request as one padded batch and write each
+    /// reply into its job's slot.  Padding rows/sequences are zeros;
+    /// row/sequence locality makes them invisible to the real slots.
+    fn score_into(&mut self, rows: &[(usize, ParsedLine)], replies: &mut [Option<String>]) {
+        match self {
+            AppPlan::Ctr { plan, dense, cat, labels, dense_dim } => {
+                for d in dense.iter_mut() {
+                    *d = 0.0;
+                }
+                for col in cat.iter_mut() {
+                    col.iter_mut().for_each(|ix| *ix = 0);
+                }
+                for (slot, (_, p)) in rows.iter().enumerate() {
+                    let ParsedLine::Ctr { dense: rd, cat: rc } = p else { continue };
+                    dense[slot * *dense_dim..(slot + 1) * *dense_dim].copy_from_slice(rd);
+                    for (t, &ix) in rc.iter().enumerate() {
+                        cat[t][slot] = ix;
+                    }
+                }
+                plan.bind(dense, cat, labels);
+                plan.run();
+                let lg = plan.logits();
+                for (slot, (ji, _)) in rows.iter().enumerate() {
+                    replies[*ji] = Some(ctr_reply(lg.data[slot]));
+                }
+            }
+            AppPlan::Lm { plan, tokens, t_len } => {
+                for tk in tokens.iter_mut() {
+                    *tk = 0;
+                }
+                let mut lens = Vec::with_capacity(rows.len());
+                for (slot, (_, p)) in rows.iter().enumerate() {
+                    let ParsedLine::Lm { tokens: rt } = p else { continue };
+                    tokens[slot * *t_len..slot * *t_len + rt.len()].copy_from_slice(rt);
+                    lens.push(rt.len());
+                }
+                plan.bind_tokens(tokens);
+                plan.run();
+                let lg = plan.logits();
+                for ((slot, (ji, _)), len) in rows.iter().enumerate().zip(lens) {
+                    let (best, z) = argmax_row(lg, slot * *t_len + (len - 1));
+                    replies[*ji] = Some(lm_reply(best, z));
+                }
+            }
+        }
+    }
+}
+
+/// One queued request: the raw line and where to send the reply.
+struct Job {
+    line: String,
+    reply: mpsc::Sender<String>,
+}
+
+/// Handle to a running server: the bound address (useful with port 0)
+/// and the accept thread.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    accept: thread::JoinHandle<()>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the server exits (a client sent `shutdown`).
+    pub fn join(self) {
+        let _ = self.accept.join();
+    }
+
+    /// Send `shutdown` ourselves and wait for a clean exit.
+    pub fn shutdown(self) -> Result<()> {
+        let stream = connect_retry(&self.addr.to_string())?;
+        let mut writer = BufWriter::new(stream.try_clone().context("cloning shutdown stream")?);
+        writeln!(writer, "shutdown").context("sending shutdown")?;
+        writer.flush().context("flushing shutdown")?;
+        let mut reply = String::new();
+        let _ = BufReader::new(stream).read_line(&mut reply);
+        self.join();
+        Ok(())
+    }
+}
+
+/// Start the scoring server: bind, compile the plan once, then accept
+/// connections forever (until a `shutdown` request).  One thread per
+/// connection feeds a single batcher thread over a channel; the batcher
+/// owns the plan, so scoring is strictly serialized — batching, not
+/// locking, is the concurrency story.
+pub fn spawn_server(app: ServeApp, policy: QPolicy, cfg: &ServeConfig) -> Result<ServerHandle> {
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr().context("server local addr")?;
+    let spec = app.spec();
+    let window = Duration::from_micros(cfg.batch_window_us);
+    let max_batch = cfg.max_batch.max(1);
+    let plan = AppPlan::compile(app, policy, max_batch);
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<Job>();
+    {
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || batcher_loop(plan, spec, rx, window, max_batch, stop, addr));
+    }
+    let accept = {
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            for stream in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let tx = tx.clone();
+                thread::spawn(move || conn_loop(stream, tx));
+            }
+        })
+    };
+    Ok(ServerHandle { addr, accept })
+}
+
+/// Per-connection pump: read request lines, enqueue them, write replies
+/// back in request order.  Exits when the client hangs up or the server
+/// stops.
+fn conn_loop(stream: TcpStream, tx: mpsc::Sender<Job>) {
+    stream.set_nodelay(true).ok();
+    let Ok(rd) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(rd);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send(Job { line: trimmed.to_string(), reply: rtx }).is_err() {
+            return;
+        }
+        let Ok(reply) = rrx.recv() else { return };
+        if writeln!(writer, "{reply}").and_then(|()| writer.flush()).is_err() {
+            return;
+        }
+    }
+}
+
+/// The micro-batching core: block for the first request, then coalesce
+/// the queue for at most `window` (or until `max_batch`), score the
+/// group as one padded batch, fan replies back.
+fn batcher_loop(
+    mut plan: AppPlan,
+    spec: AppSpec,
+    rx: mpsc::Receiver<Job>,
+    window: Duration,
+    max_batch: usize,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+) {
+    loop {
+        let Ok(first) = rx.recv() else { return };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + window;
+        while jobs.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(_) => break,
+            }
+        }
+        let mut rows: Vec<(usize, ParsedLine)> = Vec::new();
+        let mut replies: Vec<Option<String>> = vec![None; jobs.len()];
+        let mut shutdown = false;
+        for (ji, job) in jobs.iter().enumerate() {
+            match parse_line(&job.line, spec) {
+                Ok(ParsedLine::Shutdown) => {
+                    replies[ji] = Some("ok shutting down".to_string());
+                    shutdown = true;
+                }
+                Ok(p) => rows.push((ji, p)),
+                Err(e) => replies[ji] = Some(format!("err {e}")),
+            }
+        }
+        if !rows.is_empty() {
+            plan.score_into(&rows, &mut replies);
+        }
+        for (job, reply) in jobs.iter().zip(replies) {
+            let _ = job.reply.send(reply.unwrap_or_else(|| "err internal".to_string()));
+        }
+        if shutdown {
+            stop.store(true, Ordering::SeqCst);
+            // unblock the accept loop so it observes the stop flag
+            let _ = TcpStream::connect(addr);
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Load generation + the single-request tape oracle
+// ---------------------------------------------------------------------------
+
+/// What one load run measured: replies in corpus order (for digesting),
+/// per-request round-trip latencies, and the wall time of the whole run.
+pub struct LoadReport {
+    pub replies: Vec<String>,
+    pub latencies_ns: Vec<u64>,
+    pub wall_ns: u64,
+}
+
+impl LoadReport {
+    /// FNV-1a over the reply lines — the scoring digest CI pins.
+    pub fn digest(&self) -> u64 {
+        reply_digest(&self.replies)
+    }
+
+    /// Latency percentile in ns (q in 0..=1; nearest-rank on the sorted
+    /// sample).
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        if self.latencies_ns.is_empty() {
+            return 0;
+        }
+        let mut s = self.latencies_ns.clone();
+        s.sort_unstable();
+        let pos = (s.len() - 1) as f64 * q.clamp(0.0, 1.0);
+        s[pos.round() as usize]
+    }
+
+    /// Completed requests per second over the run's wall time.
+    pub fn qps(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.replies.len() as f64 * 1e9 / self.wall_ns as f64
+    }
+}
+
+/// FNV-1a (64-bit) over reply lines, newline-terminated — the same digest
+/// whether replies came off the wire or out of the oracle.
+pub fn reply_digest(lines: &[String]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for line in lines {
+        for &b in line.as_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h = (h ^ b'\n' as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Connect with retry — the server may still be binding when the load
+/// generator starts (CI races the two processes).
+pub fn connect_retry(addr: &str) -> Result<TcpStream> {
+    let mut last: Option<std::io::Error> = None;
+    for _ in 0..100 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(e) => {
+                last = Some(e);
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    bail!("connecting to {addr}: {last:?}")
+}
+
+/// Drive `requests` against a running server from `clients` concurrent
+/// connections (requests dealt round-robin), collecting replies back
+/// into corpus order.
+pub fn run_load(addr: &str, requests: &[String], clients: usize) -> Result<LoadReport> {
+    if requests.is_empty() {
+        return Ok(LoadReport { replies: Vec::new(), latencies_ns: Vec::new(), wall_ns: 0 });
+    }
+    let clients = clients.clamp(1, requests.len());
+    let mut lanes: Vec<Vec<(usize, &str)>> = vec![Vec::new(); clients];
+    for (i, line) in requests.iter().enumerate() {
+        lanes[i % clients].push((i, line.as_str()));
+    }
+    let t0 = Instant::now();
+    let lane_results: Vec<Result<Vec<(usize, String, u64)>>> = thread::scope(|s| {
+        let handles: Vec<_> =
+            lanes.iter().map(|lane| s.spawn(move || drive_client(addr, lane))).collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow!("load client panicked")).and_then(|r| r))
+            .collect()
+    });
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let mut rows: Vec<(usize, String, u64)> = Vec::with_capacity(requests.len());
+    for lane in lane_results {
+        rows.extend(lane?);
+    }
+    rows.sort_by_key(|r| r.0);
+    Ok(LoadReport {
+        replies: rows.iter().map(|r| r.1.clone()).collect(),
+        latencies_ns: rows.iter().map(|r| r.2).collect(),
+        wall_ns,
+    })
+}
+
+/// One load-generator connection: send each assigned request, wait for
+/// its reply, record the round trip.
+fn drive_client(addr: &str, lane: &[(usize, &str)]) -> Result<Vec<(usize, String, u64)>> {
+    let stream = connect_retry(addr)?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning load stream")?);
+    let mut writer = BufWriter::new(stream);
+    let mut out = Vec::with_capacity(lane.len());
+    for &(idx, line) in lane {
+        let t0 = Instant::now();
+        writeln!(writer, "{line}").context("sending request")?;
+        writer.flush().context("flushing request")?;
+        let mut reply = String::new();
+        let n = reader.read_line(&mut reply).context("reading reply")?;
+        if n == 0 {
+            bail!("server closed the connection mid-load");
+        }
+        out.push((idx, reply.trim_end().to_string(), t0.elapsed().as_nanos() as u64));
+    }
+    Ok(out)
+}
+
+/// Score a request corpus one line at a time on a fresh tape per request
+/// — the slow, unbatched, autograd-era path.  The serve golden tests and
+/// CI pin that the batched plan's replies match these bit-for-bit: DLRM
+/// rows are row-local and gpt sequences are sequence-local, so neither
+/// batching nor padding may change a single scored bit.
+pub fn tape_oracle_replies(app: &ServeApp, policy: QPolicy, lines: &[String]) -> Vec<String> {
+    let spec = app.spec();
+    let mut out = Vec::with_capacity(lines.len());
+    for line in lines {
+        match parse_line(line.trim(), spec) {
+            Err(e) => out.push(format!("err {e}")),
+            Ok(ParsedLine::Shutdown) => out.push("ok shutting down".to_string()),
+            Ok(ParsedLine::Ctr { dense, cat }) => {
+                let ServeApp::Dlrm(model) = app else { unreachable!("spec gates the app") };
+                let n = dense.len();
+                let batch = CtrBatch {
+                    dense: Tensor::from_vec(1, n, dense),
+                    cat: cat.iter().map(|&ix| vec![ix]).collect(),
+                    labels: Tensor::zeros(1, 1),
+                };
+                let (_, scores) = model.eval_scores(&batch, policy);
+                out.push(ctr_reply(scores[0]));
+            }
+            Ok(ParsedLine::Lm { tokens }) => {
+                let ServeApp::Gpt(model) = app else { unreachable!("spec gates the app") };
+                let t_len = model.cfg.seq_len;
+                let len = tokens.len();
+                let mut toks = tokens;
+                toks.resize(t_len, 0);
+                let batch = LmBatch { tokens: toks, targets: vec![0; t_len] };
+                let mut t = Tape::new(policy);
+                let v = model.frozen_graph_into(&mut t, &batch);
+                let (best, z) = argmax_row(t.value(v.logits), len - 1);
+                out.push(lm_reply(best, z));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeSet;
+
+    use super::*;
+    use crate::precision::BF16;
+    use crate::qsim::dlrm::{CtrGen, DlrmConfig};
+    use crate::qsim::gpt::{GptConfig, MarkovGen};
+    use crate::qsim::mlp::{MlpConfig, SpiralGen};
+    use crate::qsim::Var;
+    use crate::util::rng::Rng;
+
+    /// Per-variant payloads of the op-soup graph: gather indices, xent
+    /// targets, BCE labels (the mutable, non-leaf request payloads).
+    fn soup_payloads(variant: usize) -> (Vec<usize>, Vec<usize>, Vec<f32>) {
+        let idx = if variant == 0 { vec![2, 0, 3, 1] } else { vec![1, 1, 0, 2] };
+        let targets = if variant == 0 { vec![0, 3, 1, 2] } else { vec![3, 0, 0, 1] };
+        let labels = (0..16).map(|i| ((i * 7 + variant) % 2) as f32).collect();
+        (idx, targets, labels)
+    }
+
+    /// A graph touching every `OpIr` variant once; returns the payload-
+    /// carrying vars (gather, softmax-xent, bce).
+    fn build_soup(t: &mut Tape, seed: u64, variant: usize) -> (Var, Var, Var) {
+        let mut rng = Rng::new(seed, 0x50);
+        let mut mk = |r: usize, c: usize| -> Tensor {
+            let data = (0..r * c).map(|_| rng.normal()).collect();
+            Tensor::from_vec(r, c, data)
+        };
+        let (idx, targets, labels) = soup_payloads(variant);
+        let a = t.input(mk(4, 6));
+        let b = t.input(mk(6, 5));
+        let mm = t.matmul(a, b); // (4,5)
+        let w = t.input(mk(5, 3));
+        let bias = t.input(mk(1, 3));
+        let af = t.affine(mm, w, bias, false); // (4,3)
+        let afr = t.affine(mm, w, bias, true);
+        let ar = t.add_row(af, bias);
+        let sg = t.sigmoid(ar);
+        let th = t.tanh(sg);
+        let sc = t.scale(th, 1.25);
+        let g = t.gather_rows(sc, idx);
+        let ad = t.add(g, afr);
+        let sb = t.sub(ad, g);
+        let ml = t.mul(sb, ad);
+        let rl = t.relu(ml);
+        let cc = t.concat_cols(vec![rl, g]); // (4,6)
+        let ln = t.layernorm(cc, 1e-5);
+        let at = t.causal_attention(ln, ln, ln, 2); // 2 seqs of T=2
+        let nt = t.matmul_nt(at, cc); // (4,4)
+        let xe = t.softmax_xent(nt, targets);
+        let _ = t.mean_all(cc);
+        let _ = t.mse_loss(ad, g);
+        let labels_t = Tensor::from_vec(1, 16, labels);
+        let bc = t.bce_loss_from(nt, &labels_t);
+        (g, xe, bc)
+    }
+
+    fn assert_all_nodes_match(plan: &InferPlan, want: &[Tensor], ctx: &str) {
+        assert_eq!(plan.node_count(), want.len(), "{ctx}: node count");
+        for (i, w) in want.iter().enumerate() {
+            let got = plan.value(i);
+            assert_eq!(got.rows, w.rows, "{ctx}: node {i} rows");
+            assert_eq!(got.cols, w.cols, "{ctx}: node {i} cols");
+            assert_eq!(got.data.len(), w.data.len(), "{ctx}: node {i} len");
+            for (x, y) in got.data.iter().zip(&w.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: node {i} bits");
+            }
+        }
+    }
+
+    fn assert_plan_matches_tape(policy: QPolicy) {
+        let mut t = Tape::new(policy);
+        build_soup(&mut t, 7, 0);
+        let want = t.export_values();
+        let mut plan = InferPlan::compile(&t, policy);
+        // the soup must exercise the full executor: every OpIr variant
+        let kinds: BTreeSet<&str> = plan.prog.nodes.iter().map(|n| n.op.name()).collect();
+        assert_eq!(kinds.len(), 20, "op soup should cover every OpIr variant: {kinds:?}");
+        plan.run();
+        assert_all_nodes_match(&plan, &want, policy.backend.name());
+    }
+
+    #[test]
+    fn plan_matches_tape_exact() {
+        assert_plan_matches_tape(QPolicy::exact());
+    }
+
+    #[test]
+    fn plan_matches_tape_bf16_fast() {
+        assert_plan_matches_tape(QPolicy::with_backend(BF16, Backend::Fast));
+    }
+
+    #[test]
+    fn plan_matches_tape_bf16_simd() {
+        assert_plan_matches_tape(QPolicy::with_backend(BF16, Backend::Simd));
+    }
+
+    #[test]
+    fn plan_matches_tape_bf16_reference() {
+        assert_plan_matches_tape(QPolicy::with_backend(BF16, Backend::Reference));
+    }
+
+    /// Rebinding every request payload (leaves, gather indices, targets,
+    /// labels) and re-running must reproduce a fresh tape on the new
+    /// batch bit-for-bit — twice, so no stale arena state can leak
+    /// between runs.
+    #[test]
+    fn rebound_plan_matches_fresh_tape() {
+        for backend in [Backend::Fast, Backend::Simd] {
+            let policy = QPolicy::with_backend(BF16, backend);
+            let mut t1 = Tape::new(policy);
+            build_soup(&mut t1, 7, 0);
+            let mut plan = InferPlan::compile(&t1, policy);
+
+            let mut t2 = Tape::new(policy);
+            let (g, xe, bc) = build_soup(&mut t2, 11, 1);
+            let want = t2.export_values();
+            let (idx, targets, labels) = soup_payloads(1);
+            for (i, w) in want.iter().enumerate() {
+                if matches!(plan.prog.nodes[i].op, OpIr::Leaf) {
+                    plan.set_leaf(i, &w.data);
+                }
+            }
+            plan.set_gather_idx(g.0, &idx);
+            plan.set_xent_targets(xe.0, &targets);
+            plan.set_bce_labels(bc.0, &labels);
+            for pass in 0..2 {
+                plan.run();
+                assert_all_nodes_match(&plan, &want, &format!("{backend:?} pass {pass}"));
+            }
+        }
+    }
+
+    #[test]
+    fn dlrm_plan_matches_tape_eval_scores() {
+        let cfg = DlrmConfig { seed: 5, ..Default::default() };
+        let model = DlrmModel::init(&cfg);
+        let gen = CtrGen::new(&cfg);
+        for backend in [Backend::Fast, Backend::Simd, Backend::Reference] {
+            let policy = QPolicy::with_backend(cfg.fmt, backend);
+            let mut g = gen.fork(0x11);
+            let mut plan: Option<DlrmPlan> = None;
+            for _ in 0..3 {
+                let batch = g.next_batch();
+                let (want_loss, want_scores) = model.eval_scores(&batch, policy);
+                let p = plan.get_or_insert_with(|| DlrmPlan::compile(&model, &batch, policy));
+                let (loss, scores) = p.score(&batch);
+                assert_eq!(loss.to_bits(), want_loss.to_bits(), "{backend:?} loss");
+                assert_eq!(scores.len(), want_scores.len());
+                for (x, y) in scores.iter().zip(&want_scores) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{backend:?} score");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gpt_plan_matches_tape_eval_loss() {
+        let cfg = GptConfig { seed: 4, ..Default::default() };
+        let model = GptModel::init(&cfg);
+        let gen = MarkovGen::new(&cfg);
+        for backend in [Backend::Fast, Backend::Simd] {
+            let policy = QPolicy::with_backend(cfg.fmt, backend);
+            let mut g = gen.fork(0x22);
+            let mut plan: Option<GptPlan> = None;
+            for _ in 0..2 {
+                let batch = g.next_batch();
+                let want = model.eval_loss(&batch, policy);
+                let p = plan.get_or_insert_with(|| GptPlan::compile(&model, &batch, policy));
+                assert_eq!(p.score(&batch).to_bits(), want.to_bits(), "{backend:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_plan_matches_tape_eval_scores() {
+        let cfg = MlpConfig::default();
+        let model = MlpModel::init(&cfg);
+        let mut gen = SpiralGen::new(&cfg);
+        let policy = QPolicy::with_backend(cfg.fmt, Backend::Fast);
+        let mut plan: Option<MlpPlan> = None;
+        for _ in 0..2 {
+            let batch = gen.next_batch();
+            let (want_loss, want_scores) = model.eval_scores(&batch, policy);
+            let p = plan.get_or_insert_with(|| MlpPlan::compile(&model, &batch, policy));
+            let (loss, scores) = p.score(&batch);
+            assert_eq!(loss.to_bits(), want_loss.to_bits());
+            for (x, y) in scores.data.iter().zip(&want_scores.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    /// A batch padded out to plan capacity must score its real rows
+    /// bit-identically to each row evaluated alone on a tape — the
+    /// property that makes dynamic micro-batching numerics-free.
+    #[test]
+    fn dlrm_padding_never_changes_scored_bits() {
+        let cfg = DlrmConfig { seed: 9, ..Default::default() };
+        let model = DlrmModel::init(&cfg);
+        let mut gen = CtrGen::new(&cfg);
+        let batch = gen.next_batch();
+        let policy = QPolicy::with_backend(cfg.fmt, Backend::Fast);
+        let (cap, real, dd) = (8usize, 3usize, cfg.dense_dim);
+        let shape = CtrBatch {
+            dense: Tensor::zeros(cap, dd),
+            cat: vec![vec![0; cap]; cfg.num_tables],
+            labels: Tensor::zeros(1, cap),
+        };
+        let mut plan = DlrmPlan::compile(&model, &shape, policy);
+        let mut dense = vec![0.0; cap * dd];
+        dense[..real * dd].copy_from_slice(&batch.dense.data[..real * dd]);
+        let mut cat = vec![vec![0usize; cap]; cfg.num_tables];
+        for (t, col) in cat.iter_mut().enumerate() {
+            col[..real].copy_from_slice(&batch.cat[t][..real]);
+        }
+        let labels = vec![0.0; cap];
+        plan.bind(&dense, &cat, &labels);
+        plan.run();
+        let padded = plan.logits().data.clone();
+        for r in 0..real {
+            let one = CtrBatch {
+                dense: Tensor::from_vec(1, dd, batch.dense.data[r * dd..(r + 1) * dd].to_vec()),
+                cat: (0..cfg.num_tables).map(|t| vec![batch.cat[t][r]]).collect(),
+                labels: Tensor::zeros(1, 1),
+            };
+            let (_, scores) = model.eval_scores(&one, policy);
+            assert_eq!(padded[r].to_bits(), scores[0].to_bits(), "row {r}");
+        }
+    }
+
+    fn ctr_request(batch: &CtrBatch, r: usize, dd: usize) -> String {
+        let dense: Vec<String> =
+            batch.dense.data[r * dd..(r + 1) * dd].iter().map(|v| v.to_string()).collect();
+        let cat: Vec<String> = batch.cat.iter().map(|col| col[r].to_string()).collect();
+        format!("dlrm {} | {}", dense.join(" "), cat.join(" "))
+    }
+
+    /// End to end: spawn the server, drive a mixed corpus (valid rows,
+    /// malformed lines, a wrong-app tag) through concurrent clients at
+    /// two batch windows, and require byte-identical replies to the
+    /// single-request tape oracle.
+    #[test]
+    fn serve_replies_match_the_tape_oracle() {
+        let cfg = DlrmConfig { seed: 3, ..Default::default() };
+        let policy = QPolicy::with_backend(cfg.fmt, Backend::Fast);
+        let mut gen = CtrGen::new(&cfg);
+        let batch = gen.next_batch();
+        let mut corpus: Vec<String> =
+            (0..6).map(|r| ctr_request(&batch, r, cfg.dense_dim)).collect();
+        corpus.push("dlrm 1 2 3".to_string()); // no `|` separator
+        corpus.push("gpt 1 2 3".to_string()); // wrong app tag
+        let oracle =
+            tape_oracle_replies(&ServeApp::Dlrm(Box::new(DlrmModel::init(&cfg))), policy, &corpus);
+        assert_eq!(oracle.iter().filter(|l| l.starts_with("ctr ")).count(), 6);
+        assert_eq!(oracle.iter().filter(|l| l.starts_with("err ")).count(), 2);
+        for (window, clients) in [(0u64, 1usize), (2000, 4)] {
+            let serve_cfg = ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                batch_window_us: window,
+                max_batch: 4,
+                backend: Backend::Fast,
+            };
+            let app = ServeApp::Dlrm(Box::new(DlrmModel::init(&cfg)));
+            let handle = spawn_server(app, policy, &serve_cfg).unwrap();
+            let report = run_load(&handle.addr().to_string(), &corpus, clients).unwrap();
+            assert_eq!(report.replies, oracle, "window {window}");
+            assert_eq!(report.digest(), reply_digest(&oracle));
+            assert!(report.percentile_ns(0.99) >= report.percentile_ns(0.5));
+            handle.shutdown().unwrap();
+        }
+    }
+
+    /// Same end-to-end property for gpt-nano: variable-length prompts
+    /// coalesced into padded sequence batches must reply bit-identically
+    /// to the one-sequence tape oracle.
+    #[test]
+    fn gpt_serve_batching_never_changes_bits() {
+        let cfg = GptConfig { seed: 2, ..Default::default() };
+        let policy = QPolicy::with_backend(cfg.fmt, Backend::Fast);
+        let mut gen = MarkovGen::new(&cfg);
+        let batch = gen.next_batch();
+        let t_len = cfg.seq_len;
+        let mut corpus = Vec::new();
+        for s in 0..4 {
+            let len = 1 + (s * 5) % t_len;
+            let toks: Vec<String> =
+                batch.tokens[s * t_len..s * t_len + len].iter().map(|t| t.to_string()).collect();
+            corpus.push(format!("gpt {}", toks.join(" ")));
+        }
+        corpus.push(format!("gpt {}", cfg.vocab)); // out-of-range token
+        let app = ServeApp::Gpt(Box::new(GptModel::init(&cfg)));
+        let oracle = tape_oracle_replies(&app, policy, &corpus);
+        assert_eq!(oracle.iter().filter(|l| l.starts_with("lm ")).count(), 4);
+        assert!(oracle.last().unwrap().starts_with("err "));
+        let serve_cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            batch_window_us: 1500,
+            max_batch: 3,
+            backend: Backend::Fast,
+        };
+        let handle = spawn_server(app, policy, &serve_cfg).unwrap();
+        let report = run_load(&handle.addr().to_string(), &corpus, 2).unwrap();
+        assert_eq!(report.replies, oracle);
+        handle.shutdown().unwrap();
+    }
+}

@@ -13,6 +13,13 @@
 //!   * `Everywhere`     — both (the standard 16-bit-FPU algorithm).
 //!
 //! Plus `WeightUpdateSr` / `WeightUpdateKahan` for the Section-3.2 fixes.
+//!
+//! LSQ runs its scalar SGD loop directly — no tape, no [`Task`]
+//! (`Task::eval`) impl — so the `qsim::infer` compiled-plan eval routing
+//! that serves dlrm / gpt-nano / mlp has nothing to replace here; this is
+//! the one native app outside the serving stack.
+//!
+//! [`Task`]: super::train::Task
 
 use crate::precision::{round_nearest, round_stochastic, Format};
 use crate::util::rng::{DitherKey, Rng};

@@ -115,6 +115,15 @@ impl SpiralGen {
     }
 }
 
+/// Batch-payload and output node ids of one frozen spiral-MLP graph —
+/// what `qsim::infer` rebinds per batch (the input leaf, xent targets)
+/// and reads back (logits, mean loss).
+pub struct MlpFrozenVars {
+    pub x: Var,
+    pub logits: Var,
+    pub loss: Var,
+}
+
 /// The model: 2 → hidden → hidden → classes, composed from `qsim::nn`.
 pub struct MlpModel {
     pub cfg: MlpConfig,
@@ -154,13 +163,23 @@ impl MlpModel {
     /// Forward-only pass from no-grad leaves; returns (mean loss, logits).
     pub fn eval_scores(&self, batch: &SpiralBatch, policy: QPolicy) -> (f32, Tensor) {
         let mut t = Tape::new(policy);
-        let xv = t.input_from(&batch.x);
-        let h = self.body.forward_frozen(&mut t, xv);
+        let v = self.frozen_graph_into(&mut t, batch);
+        let scores = t.value(v.logits).clone();
+        (t.value(v.loss).item(), scores)
+    }
+
+    /// Build the frozen (no-grad) forward graph into a caller-owned tape
+    /// — shared by the per-batch eval path and `qsim::infer` plan
+    /// compilation (which needs the batch-payload node ids to rebind per
+    /// batch).  Op order matches the historical eval body exactly, so
+    /// eval values are bit-identical across the refactor.
+    pub fn frozen_graph_into(&self, t: &mut Tape, batch: &SpiralBatch) -> MlpFrozenVars {
+        let x = t.input_from(&batch.x);
+        let h = self.body.forward_frozen(t, x);
         let hr = t.relu(h);
-        let logits = self.head.forward_frozen(&mut t, hr);
+        let logits = self.head.forward_frozen(t, hr);
         let loss = t.softmax_xent(logits, batch.y.clone());
-        let scores = t.value(logits).clone();
-        (t.value(loss).item(), scores)
+        MlpFrozenVars { x, logits, loss }
     }
 
     /// All parameter tensors, in forward registration order.
@@ -257,12 +276,16 @@ impl Task for MlpConfig {
                 metric_name: "acc",
             };
         }
+        let mut plan: Option<crate::qsim::infer::MlpPlan> = None;
         let mut loss_acc = 0f64;
         let mut correct = 0u64;
         let mut total = 0u64;
         for _ in 0..n {
             let batch = gen.next_batch();
-            let (loss, scores) = model.eval_scores(&batch, policy);
+            let p = plan.get_or_insert_with(|| {
+                crate::qsim::infer::MlpPlan::compile(model, &batch, policy)
+            });
+            let (loss, scores) = p.score(&batch);
             loss_acc += loss as f64;
             for (r, &label) in batch.y.iter().enumerate() {
                 let mut best = 0usize;

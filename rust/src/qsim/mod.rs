@@ -6,6 +6,8 @@
 //! paper's weight-update policies, and the generic training engine
 //! ([`train`]): one `Trainer<T: Task>` supplying the loop, per-tensor
 //! optimizer bank, eval fork and native checkpoint/resume to every app.
+//! Frozen graphs score through the tape-free compiled-plan executor
+//! ([`infer`]) — the engine behind `repro serve` and every `Task::eval`.
 //! Powers the theory experiments (Figure 2 / Theorem 1), the per-layer
 //! cancellation telemetry (Figure 9), the sub-16-bit sweeps (Figure 10),
 //! the native criterion benches and the bit-exact application scenarios —
@@ -16,6 +18,7 @@
 pub mod dlrm;
 pub mod fault;
 pub mod gpt;
+pub mod infer;
 pub mod lsq;
 pub mod mlp;
 pub mod nn;
@@ -91,6 +94,7 @@ impl Backend {
 
 pub use crate::precision::Mode;
 pub use fault::{ChaosConfig, ChaosKind, ChaosPlan};
+pub use infer::{DlrmPlan, GptPlan, InferPlan, MlpPlan, ServeApp, ServeConfig};
 pub use nn::Module;
 pub use optim::{Sgd, SgdState, UpdateStats};
 pub use pool::Pool;

@@ -16,8 +16,21 @@
 //! dither `tensor_id`, so it is part of the reproducibility contract:
 //! reordering registrations changes SR trajectories.
 //!
-//! `forward_frozen` variants build the same graph from no-grad `input`
-//! leaves (inference/eval paths — backward skips them entirely).
+//! ## Training vs. inference split
+//!
+//! Every layer has two forward families with one graph shape:
+//!
+//! * **Training** — `forward`/`forward_relu` register parameters via
+//!   `param_from` (gradients collected, optimizer slots assigned) and are
+//!   the only entry points `Trainer::step` uses.
+//! * **Inference** — `forward_frozen`/`forward_relu_frozen` build the
+//!   *same* ops from no-grad `input` leaves: no gradient buffers, no
+//!   optimizer registration, native-16 weights widened on tape entry.
+//!   These are the graphs `Model::frozen_graph_into` assembles, which
+//!   both the per-batch eval tapes and the `qsim::infer` compiled plans
+//!   (eval routing, `repro serve`) replay.  Frozen and trainable forwards
+//!   are bit-identical op for op, so eval losses, serve logits and
+//!   training-forward values can be compared bit-for-bit.
 
 use crate::precision::{round_nearest, Format};
 use crate::util::rng::Rng;

@@ -60,7 +60,7 @@ impl QPolicy {
     /// original scalar loop for baseline timing, `Simd` routes through the
     /// 8-wide lane kernel.
     #[inline]
-    fn q_slice(&self, xs: &mut [f32]) {
+    pub(crate) fn q_slice(&self, xs: &mut [f32]) {
         if self.fmt.is_fp32() {
             return;
         }
@@ -77,7 +77,7 @@ impl QPolicy {
 
     /// Format to fuse into producing kernels, `None` for fp32 passthrough.
     #[inline]
-    fn fuse_fmt(&self) -> Option<Format> {
+    pub(crate) fn fuse_fmt(&self) -> Option<Format> {
         if self.fmt.is_fp32() {
             None
         } else {
@@ -270,7 +270,13 @@ fn run_row_bands(
 /// Row-wise layer normalisation of the `rows × cols` band `src` into `dst`:
 /// `y = (x - μ) / √(σ² + eps)`, with μ/σ² accumulated in f64 and the output
 /// rounded per the policy.  Entirely row-local.
-fn layernorm_rows(src: &[f32], cols: usize, eps: f32, dst: &mut [f32], policy: QPolicy) {
+pub(crate) fn layernorm_rows(
+    src: &[f32],
+    cols: usize,
+    eps: f32,
+    dst: &mut [f32],
+    policy: QPolicy,
+) {
     debug_assert_eq!(src.len(), dst.len());
     if cols == 0 {
         return;
@@ -308,7 +314,7 @@ fn layernorm_rows(src: &[f32], cols: usize, eps: f32, dst: &mut [f32], policy: Q
 /// Everything is sequence-local, so any sequence partition — including the
 /// pooled one — is bit-identical.
 #[allow(clippy::too_many_arguments)]
-fn attn_forward_seqs(
+pub(crate) fn attn_forward_seqs(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -378,7 +384,7 @@ fn attn_forward_seqs(
 /// Degenerate rows (a ±inf max, i.e. a diverged run) report NaN — the loss
 /// has no finite value and must *look* diverged downstream; masking it
 /// with 0.0 would make a blown-up `standard16` run score as perfect.
-fn xent_row(row: &[f32], target: usize) -> f32 {
+pub(crate) fn xent_row(row: &[f32], target: usize) -> f32 {
     let mut m = f32::NEG_INFINITY;
     for &z in row {
         if z > m {
@@ -1171,6 +1177,16 @@ impl Tape {
             })
             .collect();
         super::verify::Program { nodes }
+    }
+
+    /// Snapshot every node's value tensor, in node order — the companion to
+    /// [`Tape::export_program`] for plan compilation (`qsim::infer`): leaf
+    /// values seed the inference arena (weights widened exactly once, here),
+    /// interior values pre-size its activation buffers.  Tape values are
+    /// always f32 (native-16 tensors widen on `input`/`param` entry), so the
+    /// snapshot is a plain clone.
+    pub fn export_values(&self) -> Vec<Tensor> {
+        self.values.clone()
     }
 
     /// Debug-build structural gate run by [`Tape::backward`]: export the

@@ -256,6 +256,19 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Read the app name out of a native-trainer checkpoint header without
+/// loading it — `repro serve --app auto` dispatches on this.  Validates
+/// magic + CRC (via [`Reader::new`]) and requires the `qsim/<app>` header
+/// tag the native [`Trainer`](crate::qsim::train::Trainer) writes;
+/// coordinator checkpoints (different tag) are rejected by name.
+pub fn peek_app_name(bytes: &[u8]) -> Result<String> {
+    let tag = Reader::new(bytes)?.str().context("reading checkpoint header tag")?;
+    match tag.strip_prefix("qsim/") {
+        Some(app) if !app.is_empty() => Ok(app.to_string()),
+        _ => bail!("checkpoint header {tag:?} is not a native qsim/<app> checkpoint"),
+    }
+}
+
 /// Write `bytes` to `path` atomically: stage into a sibling temp file, then
 /// rename over the destination, so a crash mid-write can never leave a
 /// truncated checkpoint under the real name.
@@ -279,6 +292,28 @@ pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn peeks_app_name_from_header() {
+        let mut w = Writer::new();
+        w.str("qsim/gpt-nano");
+        w.u64(7);
+        let bytes = w.into_bytes();
+        assert_eq!(peek_app_name(&bytes).unwrap(), "gpt-nano");
+
+        let mut other = Writer::new();
+        other.str("coord/dlrm");
+        let err = peek_app_name(&other.into_bytes()).unwrap_err().to_string();
+        assert!(err.contains("coord/dlrm"), "should name the bad tag: {err}");
+
+        // corrupt CRC is rejected before any header parsing
+        let mut bad = Writer::new();
+        bad.str("qsim/dlrm");
+        let mut img = bad.into_bytes();
+        let n = img.len();
+        img[n - 1] ^= 0xff;
+        assert!(peek_app_name(&img).is_err());
+    }
 
     #[test]
     fn round_trips_every_primitive() {

@@ -116,3 +116,76 @@ fn committed_weight_bytes_match_live_measurement() {
     assert_eq!(bf16 * 2.0, fp32, "bf16 weight bytes must be half of fp32");
     assert_eq!(kahan, fp32, "kahan16 = bf16 weights + bf16 compensation = fp32 total");
 }
+
+// ---- BENCH_serve.json (the `repro serve-bench` artifact) ----
+
+fn serve_artifact() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {path}: {e}"));
+    Json::parse(&text).unwrap_or_else(|e| panic!("parsing {path}: {e:?}"))
+}
+
+fn serve_derived(doc: &Json, key: &str) -> f64 {
+    doc.get("derived")
+        .and_then(|d| d.get(key))
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("derived.{key} missing from BENCH_serve.json"))
+}
+
+#[test]
+fn serve_rows_are_measured_not_placeholders() {
+    let doc = serve_artifact();
+    let rows = doc
+        .get("benches")
+        .and_then(Json::as_arr)
+        .expect("benches array missing from BENCH_serve.json");
+    assert!(!rows.is_empty(), "artifact has no bench rows");
+    let mut guarded = 0usize;
+    for row in rows {
+        let name = row.get_str("name").expect("bench row without a name");
+        if !(name.contains("infer-plan") || name.contains("tape-eval") || name.starts_with("serve "))
+        {
+            continue;
+        }
+        let samples = row.get_usize("samples").unwrap_or(0);
+        let median = row.get("median_ns").and_then(Json::as_f64).unwrap_or(0.0);
+        assert!(samples >= 1, "row {name:?} has samples == 0 (placeholder artifact)");
+        assert!(median > 0.0, "row {name:?} has median_ns == 0 (placeholder artifact)");
+        guarded += 1;
+    }
+    assert!(
+        guarded >= 14,
+        "only {guarded} infer-plan/tape-eval/serve rows found; artifact looks truncated"
+    );
+}
+
+#[test]
+fn compiled_plan_beats_the_tape_eval_path() {
+    let doc = serve_artifact();
+    let dlrm = serve_derived(&doc, "speedup_infer_vs_tape_dlrm");
+    assert!(
+        dlrm >= 1.3,
+        "the tape-free plan must beat per-request tape eval on dlrm by >= 1.3x, got {dlrm}x"
+    );
+    let gpt = serve_derived(&doc, "speedup_infer_vs_tape_gpt");
+    assert!(gpt > 1.0, "the tape-free plan must beat tape eval on gpt-nano, got {gpt}x");
+}
+
+#[test]
+fn serve_latency_percentiles_are_consistent() {
+    let doc = serve_artifact();
+    for app in ["dlrm", "gpt-nano"] {
+        for backend in ["fast", "simd"] {
+            for window in [0u64, 200] {
+                let tag = format!("{app}_{backend}_w{window}");
+                let p50 = serve_derived(&doc, &format!("p50_serve_{tag}_ns"));
+                let p99 = serve_derived(&doc, &format!("p99_serve_{tag}_ns"));
+                let qps = serve_derived(&doc, &format!("qps_serve_{tag}"));
+                assert!(p50 > 0.0, "{tag}: p50 must be positive, got {p50}");
+                assert!(p99 >= p50, "{tag}: p99 ({p99}) must be >= p50 ({p50})");
+                assert!(qps > 0.0, "{tag}: qps must be positive, got {qps}");
+            }
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Golden serve-vs-train parity: replies from `repro serve`'s async
+//! batched executor must be bit-identical to per-request tape evals of
+//! the same checkpoint — across Fast/Simd backends and across batch
+//! windows.  Dynamic micro-batching (and the padding it implies) is a
+//! latency knob only; it must never change a scored bit.
+
+use bf16_train::qsim::dlrm::{CtrBatch, CtrGen, DlrmConfig};
+use bf16_train::qsim::gpt::{GptConfig, LmBatch, MarkovGen};
+use bf16_train::qsim::infer::{run_load, spawn_server, tape_oracle_replies};
+use bf16_train::qsim::train::Trainer;
+use bf16_train::qsim::{Backend, Mode, ServeApp, ServeConfig};
+
+fn ctr_request(batch: &CtrBatch, r: usize, dd: usize) -> String {
+    let dense: Vec<String> =
+        batch.dense.data[r * dd..(r + 1) * dd].iter().map(|v| v.to_string()).collect();
+    let cat: Vec<String> = batch.cat.iter().map(|col| col[r].to_string()).collect();
+    format!("dlrm {} | {}", dense.join(" "), cat.join(" "))
+}
+
+fn lm_request(batch: &LmBatch, s: usize, len: usize, t_len: usize) -> String {
+    let toks: Vec<String> =
+        batch.tokens[s * t_len..s * t_len + len].iter().map(|t| t.to_string()).collect();
+    format!("gpt {}", toks.join(" "))
+}
+
+#[test]
+fn dlrm_serve_is_bit_identical_to_tape_eval_across_backends_and_windows() {
+    let base = DlrmConfig { seed: 21, ..Default::default() };
+    let ckpt = {
+        let mut tr = Trainer::new(base.clone(), Mode::Sr16);
+        for _ in 0..5 {
+            tr.step(0.05);
+        }
+        tr.checkpoint_bytes()
+    };
+    let batch = CtrGen::new(&base).next_batch();
+    let corpus: Vec<String> = (0..10).map(|r| ctr_request(&batch, r, base.dense_dim)).collect();
+
+    let mut digests = Vec::new();
+    let mut eval_losses = Vec::new();
+    for backend in [Backend::Fast, Backend::Simd] {
+        let cfg = DlrmConfig { backend, ..base.clone() };
+        let mut tr = Trainer::new(cfg.clone(), Mode::Sr16);
+        tr.load_checkpoint_bytes(&ckpt).unwrap();
+        // Trainer::eval routes through the compiled inference plan; its
+        // metrics must stay bit-identical across backends.
+        let m = tr.eval(4);
+        eval_losses.push((m.loss.to_bits(), m.metric.to_bits()));
+        let policy = tr.policy();
+        let oracle = tape_oracle_replies(&ServeApp::Dlrm(Box::new(tr.model)), policy, &corpus);
+        for window in [0u64, 1000] {
+            let scfg = ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                batch_window_us: window,
+                max_batch: 4,
+                backend,
+            };
+            let mut fresh = Trainer::new(cfg.clone(), Mode::Sr16);
+            fresh.load_checkpoint_bytes(&ckpt).unwrap();
+            let app = ServeApp::Dlrm(Box::new(fresh.model));
+            let handle = spawn_server(app, policy, &scfg).unwrap();
+            let report = run_load(&handle.addr().to_string(), &corpus, 3).unwrap();
+            handle.shutdown().unwrap();
+            assert_eq!(report.replies, oracle, "{backend:?} w{window} diverged from the oracle");
+            digests.push(report.digest());
+        }
+    }
+    assert!(
+        digests.windows(2).all(|w| w[0] == w[1]),
+        "reply digests must match across Fast/Simd x batch windows: {digests:016x?}"
+    );
+    assert!(
+        eval_losses.windows(2).all(|w| w[0] == w[1]),
+        "plan-routed eval metrics must match across backends: {eval_losses:?}"
+    );
+}
+
+#[test]
+fn gpt_serve_is_bit_identical_to_tape_eval_across_backends_and_windows() {
+    let base = GptConfig { seed: 8, ..Default::default() };
+    let ckpt = {
+        let mut tr = Trainer::new(base.clone(), Mode::Sr16);
+        for _ in 0..3 {
+            tr.step(0.1);
+        }
+        tr.checkpoint_bytes()
+    };
+    let batch = MarkovGen::new(&base).next_batch();
+    let t_len = base.seq_len;
+    // variable-length prompts so batching has to pad
+    let corpus: Vec<String> =
+        (0..6).map(|s| lm_request(&batch, s % 4, 1 + (s * 5) % t_len, t_len)).collect();
+
+    let mut digests = Vec::new();
+    for backend in [Backend::Fast, Backend::Simd] {
+        let cfg = GptConfig { backend, ..base.clone() };
+        let mut tr = Trainer::new(cfg.clone(), Mode::Sr16);
+        tr.load_checkpoint_bytes(&ckpt).unwrap();
+        let policy = tr.policy();
+        let oracle = tape_oracle_replies(&ServeApp::Gpt(Box::new(tr.model)), policy, &corpus);
+        for window in [0u64, 800] {
+            let scfg = ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                batch_window_us: window,
+                max_batch: 3,
+                backend,
+            };
+            let mut fresh = Trainer::new(cfg.clone(), Mode::Sr16);
+            fresh.load_checkpoint_bytes(&ckpt).unwrap();
+            let app = ServeApp::Gpt(Box::new(fresh.model));
+            let handle = spawn_server(app, policy, &scfg).unwrap();
+            let report = run_load(&handle.addr().to_string(), &corpus, 2).unwrap();
+            handle.shutdown().unwrap();
+            assert_eq!(report.replies, oracle, "{backend:?} w{window} diverged from the oracle");
+            digests.push(report.digest());
+        }
+    }
+    assert!(
+        digests.windows(2).all(|w| w[0] == w[1]),
+        "reply digests must match across Fast/Simd x batch windows: {digests:016x?}"
+    );
+}
